@@ -1,0 +1,30 @@
+//! Chat: the paper's §2.1 inference-API demo — load a trained actor
+//! checkpoint and hold a scripted conversation on the synthetic task,
+//! showing the ground-truth score per exchange.
+//!
+//! ```text
+//! cargo run --release --example chat -- [--run tiny] [--ckpt runs/tiny/actor.bin] [--turns 4]
+//! ```
+
+use std::rc::Rc;
+
+use dschat::hybrid::HybridEngine;
+use dschat::pipeline;
+use dschat::runtime::Engine;
+use dschat::util::argparse::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let run = args.str("run", "tiny");
+    let dir = args.str("artifacts", &format!("artifacts/{run}"));
+    let engine = Rc::new(Engine::cpu()?);
+    let mut he = HybridEngine::init(engine, &dir, 0, false)?;
+    match args.get("ckpt") {
+        Some(ckpt) => {
+            pipeline::load_actor(&mut he, ckpt)?;
+            println!("loaded checkpoint {ckpt}");
+        }
+        None => println!("(no --ckpt: chatting with an untrained actor — try training first)"),
+    }
+    dschat::examples_support::chat_loop(&mut he, args.usize("turns", 4), args.usize("seed", 1) as u64)
+}

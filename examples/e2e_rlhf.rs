@@ -1,0 +1,152 @@
+//! The required end-to-end driver (DESIGN.md §5): full 3-step RLHF on the
+//! `small` deployment — SFT, reward model, then a few hundred PPO
+//! iterations — logging every curve to `runs/e2e/` and printing a Table 4-6
+//! style breakdown plus before/after evaluation.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example e2e_rlhf -- \
+//!     [--run small] [--sft-steps 800] [--rm-steps 400] [--ppo-iters 200]
+//! ```
+//!
+//! Recorded in EXPERIMENTS.md (§Real end-to-end run).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use dschat::config::{PpoConfig, TrainRecipe};
+use dschat::data::synthetic::{Mode, TaskGen};
+use dschat::data::{Blend, DataSplit};
+use dschat::examples_support::eval_true_reward;
+use dschat::hybrid::HybridEngine;
+use dschat::pipeline;
+use dschat::runtime::Engine;
+use dschat::util::argparse::Args;
+use dschat::util::csv::Table;
+use dschat::util::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let run = args.str("run", "small");
+    let dir = args.str("artifacts", &format!("artifacts/{run}"));
+    let out = PathBuf::from(args.str("out", "runs/e2e"));
+    std::fs::create_dir_all(&out)?;
+
+    println!("== e2e RLHF ({run}) ==");
+    let engine = Rc::new(Engine::cpu()?);
+    let mut he = HybridEngine::init(engine, &dir, args.usize("seed", 0) as i32, true)?;
+    let (vocab, sp, sg, batch, seq_len, actor_name, critic_name, actor_np, critic_np) = {
+        let m = he.manifest();
+        (m.actor.vocab, m.prompt_len, m.gen_len, m.batch, m.seq_len,
+         m.actor.name.clone(), m.critic.name.clone(),
+         m.actor.n_params(), m.critic.n_params())
+    };
+    println!(
+        "actor {} ({} params) | critic {} ({} params) | batch {} seq {}",
+        actor_name,
+        dschat::util::fmt_count(actor_np as f64),
+        critic_name,
+        dschat::util::fmt_count(critic_np as f64),
+        batch,
+        seq_len
+    );
+
+    // Blended data sources (the paper's data abstraction): general 4-mode
+    // instructions + a counting-heavy source, split 2/4/4 across stages.
+    let all_modes = TaskGen::new(vocab, sp, sg);
+    let counting = TaskGen::new(vocab, sp, sg).with_modes(vec![Mode::Count]);
+    let mut blend =
+        Blend::new(vec![(all_modes, 3.0), (counting, 1.0)], DataSplit::new(2.0, 4.0, 4.0));
+
+    let recipe = TrainRecipe {
+        run: run.clone(),
+        seed: args.usize("seed", 0) as u64,
+        sft_steps: args.usize("sft-steps", 800),
+        sft_lr: args.f64("sft-lr", 6e-3) as f32,
+        rm_steps: args.usize("rm-steps", 400),
+        rm_lr: args.f64("rm-lr", 2e-3) as f32,
+        ppo_iters: args.usize("ppo-iters", 200),
+        actor_lr: args.f64("actor-lr", 2e-4) as f32,
+        critic_lr: args.f64("critic-lr", 8e-4) as f32,
+        ppo: PpoConfig {
+            ptx_coef: args.f64("ptx-coef", 0.2) as f32,
+            kl_coef: args.f64("kl-coef", 0.05) as f32,
+            ppo_epochs: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+
+    // Baseline quality before any training.
+    let r_init = eval_true_reward(&mut he, 4, 99)?;
+    println!("eval true reward before training: {r_init:.3}");
+
+    // Run the three steps separately so quality is measured at each stage
+    // boundary (greedy decoding, fresh prompts).
+    let mut rng = dschat::util::rng::Rng::new(recipe.seed);
+    let mut sft_log = dschat::util::csv::CsvWriter::create(out.join("sft.csv"), &["step", "loss", "lr"])?;
+    let sft = pipeline::run_sft(&mut he, &mut blend, &recipe, &mut rng, Some(&mut sft_log))?;
+    let r_sft = eval_true_reward(&mut he, 4, 99)?;
+    println!("eval true reward after SFT: {r_sft:.3}");
+
+    let mut rm_log =
+        dschat::util::csv::CsvWriter::create(out.join("rm.csv"), &["step", "loss", "acc", "lr"])?;
+    let rm = pipeline::run_rm(&mut he, &mut blend, &recipe, &mut rng, Some(&mut rm_log))?;
+
+    let mut ppo_log = dschat::util::csv::CsvWriter::create(
+        out.join("ppo.csv"),
+        &["iter", "true_reward", "rm_score", "kl", "actor_loss", "critic_loss", "clipfrac",
+          "gen_secs", "train_secs"],
+    )?;
+    let (ppo, ppo_history) = pipeline::run_ppo(&mut he, &mut blend, &recipe, &mut rng, Some(&mut ppo_log))?;
+    let report = pipeline::PipelineReport { sft, rm, ppo, ppo_history };
+    let r_sft_rl = eval_true_reward(&mut he, 4, 99)?;
+    he.promote_ema()?;
+    let r_ema = eval_true_reward(&mut he, 4, 99)?;
+
+    // Table 4/5/6 analogue: measured per-step wall time at this scale.
+    let mut t = Table::new(
+        "Measured e2e breakdown (Table 4-6 analogue, CPU PJRT testbed)",
+        &["Model", "Step 1", "Step 2", "Step 3", "Total"],
+    );
+    t.row(vec![
+        format!("Actor {actor_name}, RM {critic_name}"),
+        fmt_duration(report.sft.wall_secs),
+        fmt_duration(report.rm.wall_secs),
+        fmt_duration(report.ppo.wall_secs),
+        fmt_duration(report.sft.wall_secs + report.rm.wall_secs + report.ppo.wall_secs),
+    ]);
+    t.print();
+
+    println!("step 1 SFT loss    : {:.3} -> {:.3}", report.sft.first_metric, report.sft.last_metric);
+    println!(
+        "step 2 RM          : loss {:.3} -> {:.3} | held-out pairwise acc {:.1}%",
+        report.rm.first_metric,
+        report.rm.last_metric,
+        100.0 * report.rm.extra
+    );
+    println!(
+        "step 3 PPO         : true reward {:.3} -> {:.3} (RM score {:.3})",
+        report.ppo.first_metric, report.ppo.last_metric, report.ppo.extra
+    );
+    println!("eval true reward   : init {r_init:.3} | after SFT {r_sft:.3} | after PPO {r_sft_rl:.3} | EMA ckpt {r_ema:.3}");
+    println!(
+        "phase stats        : gen {} ({} tok, {:.0} tok/s) | train {} ({:.0} tok/s) | {} flips",
+        fmt_duration(he.stats.gen_secs),
+        he.stats.gen_tokens,
+        he.stats.gen_tok_per_sec(),
+        fmt_duration(he.stats.train_secs),
+        he.stats.train_tok_per_sec(),
+        he.stats.mode_flips
+    );
+    println!(
+        "memory (tracked)   : live {} peak {}",
+        dschat::util::fmt_bytes(he.memory.live_bytes() as f64),
+        dschat::util::fmt_bytes(he.memory.peak_bytes() as f64)
+    );
+
+    let ckpt = out.join("actor_ema.bin");
+    pipeline::save_actor(&he, &ckpt)?;
+    println!("saved EMA actor to {}", ckpt.display());
+    println!("curves: {}/sft.csv rm.csv ppo.csv", out.display());
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: the paper's §2.2 "coffee-break" experience at `tiny` scale —
+//! all three RLHF steps on one CPU in a couple of minutes.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::rc::Rc;
+
+use dschat::config::{PpoConfig, TrainRecipe};
+use dschat::data::synthetic::TaskGen;
+use dschat::data::{Blend, DataSplit};
+use dschat::hybrid::HybridEngine;
+use dschat::pipeline;
+use dschat::runtime::Engine;
+use dschat::util::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts/tiny".into());
+    println!("== dschat quickstart ({dir}) ==");
+    let engine = Rc::new(Engine::cpu()?);
+    let mut he = HybridEngine::init(engine, &dir, 0, true)?;
+    let m = he.manifest();
+    println!(
+        "actor {} ({} params) + critic {} ({} params), batch {}, seq {}",
+        m.actor.name,
+        dschat::util::fmt_count(m.actor.n_params() as f64),
+        m.critic.name,
+        dschat::util::fmt_count(m.critic.n_params() as f64),
+        m.batch,
+        m.seq_len
+    );
+
+    let task = TaskGen::new(m.actor.vocab, m.prompt_len, m.gen_len);
+    let mut blend = Blend::new(vec![(task, 1.0)], DataSplit::new(2.0, 4.0, 4.0));
+    let recipe = TrainRecipe {
+        sft_steps: 300,
+        sft_lr: 1e-2,
+        rm_steps: 150,
+        rm_lr: 3e-3,
+        ppo_iters: 15,
+        actor_lr: 2e-4,
+        critic_lr: 8e-4,
+        ppo: PpoConfig { ptx_coef: 0.2, ..Default::default() },
+        ..Default::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let report = pipeline::run_all(&mut he, &mut blend, &recipe, None)?;
+    println!(
+        "step 1 SFT : loss {:.3} -> {:.3}   ({})",
+        report.sft.first_metric,
+        report.sft.last_metric,
+        fmt_duration(report.sft.wall_secs)
+    );
+    println!(
+        "step 2 RM  : loss {:.3} -> {:.3}, held-out pairwise acc {:.1}%   ({})",
+        report.rm.first_metric,
+        report.rm.last_metric,
+        100.0 * report.rm.extra,
+        fmt_duration(report.rm.wall_secs)
+    );
+    println!(
+        "step 3 PPO : true reward {:.3} -> {:.3}   ({})",
+        report.ppo.first_metric,
+        report.ppo.last_metric,
+        fmt_duration(report.ppo.wall_secs)
+    );
+    println!(
+        "hybrid engine: {} mode flips | gen {} ({:.0} tok/s) | train {}",
+        he.stats.mode_flips,
+        fmt_duration(he.stats.gen_secs),
+        he.stats.gen_tok_per_sec(),
+        fmt_duration(he.stats.train_secs)
+    );
+
+    println!("\n-- inference API demo (greedy) --");
+    dschat::examples_support::chat_loop(&mut he, 2, 7)?;
+    println!("total: {}", fmt_duration(t0.elapsed().as_secs_f64()));
+    Ok(())
+}

@@ -1,0 +1,183 @@
+//! Serve: a minimal line-oriented inference server over the trained actor —
+//! the "favorite front-end GUI" hook of the paper's §2.2, with dynamic
+//! request batching done by the L3 coordinator (std-thread edition; tokio is
+//! not available offline).
+//!
+//! Protocol (newline-delimited over TCP): a request is `mode a b` (e.g.
+//! `count 10 12`); the response line is the detokenized generation plus the
+//! ground-truth score.
+//!
+//! ```text
+//! cargo run --release --example serve -- [--run tiny] [--ckpt runs/tiny/actor.bin] \
+//!     [--port 7878] [--demo]        # --demo: run 3 in-process requests and exit
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::rc::Rc;
+use std::sync::mpsc;
+
+use dschat::data::synthetic::{Mode, Prompt, TaskGen, Vocab};
+use dschat::hybrid::HybridEngine;
+use dschat::pipeline;
+use dschat::runtime::Engine;
+use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::util::argparse::Args;
+
+struct Request {
+    prompt: Prompt,
+    reply: mpsc::Sender<String>,
+}
+
+fn parse_request(task: &TaskGen, line: &str) -> Option<Prompt> {
+    let mut it = line.split_whitespace();
+    let mode = match it.next()?.to_lowercase().as_str() {
+        "repeat" => Mode::Repeat,
+        "constant" => Mode::Constant,
+        "count" => Mode::Count,
+        "mirror" => Mode::Mirror,
+        _ => return None,
+    };
+    let (lo, hi) = task.vocab.content_range();
+    let a = it.next()?.parse::<i32>().ok()?.clamp(lo, hi - 1);
+    let b = it.next().and_then(|s| s.parse::<i32>().ok()).unwrap_or(a).clamp(lo, hi - 1);
+    // Re-synthesize the canonical prompt encoding.
+    let mut tokens = vec![Vocab::BOS, mode.token(), a, b];
+    while tokens.len() < task.prompt_len - 1 {
+        let i = tokens.len();
+        tokens.push(if i % 2 == 0 { a } else { b });
+    }
+    tokens.push(Vocab::SEP);
+    Some(Prompt { mode, a, b, tokens })
+}
+
+/// The batching loop: drain up to `batch` queued requests (padding the
+/// artifact batch with repeats), run one generation, reply to each.
+fn serve_batch(he: &mut HybridEngine, task: &TaskGen, reqs: Vec<Request>, sampler: &mut Sampler) {
+    let m = he.manifest();
+    let (b, sp, s) = (m.batch, m.prompt_len, m.seq_len);
+    let mut flat = Vec::with_capacity(b * sp);
+    for i in 0..b {
+        let p = &reqs[i.min(reqs.len() - 1)].prompt;
+        flat.extend_from_slice(&p.tokens);
+    }
+    match he.generate(&flat, sampler) {
+        Ok(seqs) => {
+            for (i, r) in reqs.iter().enumerate() {
+                let resp = &seqs[i * s + sp..(i + 1) * s];
+                let score = task.reward(&r.prompt, resp);
+                let _ = r.reply.send(format!(
+                    "{}  [ground-truth {:.2}]",
+                    task.detokenize(resp),
+                    score
+                ));
+            }
+        }
+        Err(e) => {
+            for r in &reqs {
+                let _ = r.reply.send(format!("error: {e:#}"));
+            }
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let run = args.str("run", "tiny");
+    let dir = args.str("artifacts", &format!("artifacts/{run}"));
+    let engine = Rc::new(Engine::cpu()?);
+    let mut he = HybridEngine::init(engine, &dir, 0, false)?;
+    if let Some(ckpt) = args.get("ckpt") {
+        pipeline::load_actor(&mut he, ckpt)?;
+        eprintln!("loaded checkpoint {ckpt}");
+    }
+    let m = he.manifest();
+    let task = TaskGen::new(m.actor.vocab, m.prompt_len, m.gen_len);
+    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+
+    if args.bool("demo", false) {
+        // In-process demo: exercise the batching path without a socket.
+        let demo = ["repeat 10 11", "count 20", "mirror 30 31"];
+        let (tx, rx) = mpsc::channel();
+        let reqs: Vec<Request> = demo
+            .iter()
+            .filter_map(|l| parse_request(&task, l))
+            .map(|prompt| Request { prompt, reply: tx.clone() })
+            .collect();
+        let n = reqs.len();
+        serve_batch(&mut he, &task, reqs, &mut sampler);
+        for (line, req) in rx.iter().take(n).zip(demo.iter()) {
+            println!("{req:<16} -> {line}");
+        }
+        return Ok(());
+    }
+
+    let port = args.usize("port", 7878);
+    let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
+    eprintln!("serving on 127.0.0.1:{port} (one line per request: `mode a [b]`)");
+
+    // Accept loop on worker threads; generation on this (engine-owning)
+    // thread — PJRT types are not Send, so requests flow over a channel and
+    // the main thread is the single executor (the vLLM-router shape).
+    let (tx, rx) = mpsc::channel::<RequestLine>();
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut stream = stream;
+                let mut line = String::new();
+                while reader.read_line(&mut line).unwrap_or(0) > 0 {
+                    let (rtx, rrx) = mpsc::channel();
+                    let text = line.trim().to_string();
+                    line.clear();
+                    let _ = tx.send(RequestLine { text, reply: rtx });
+                    if let Ok(resp) = rrx.recv() {
+                        let _ = writeln!(stream, "{resp}");
+                    }
+                }
+            });
+        }
+    });
+
+    // Batch scheduler: block for one request, then drain whatever else is
+    // queued up to the artifact batch size (dynamic batching).
+    let b = m.batch;
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        let mut lines = vec![first];
+        while lines.len() < b {
+            match rx.try_recv() {
+                Ok(r) => lines.push(r),
+                Err(_) => break,
+            }
+        }
+        let reqs: Vec<Request> = lines
+            .into_iter()
+            .filter_map(|rl| {
+                let reply = rl.reply.clone();
+                match parse_request(&task, &rl.text) {
+                    Some(prompt) => Some(Request { prompt, reply }),
+                    None => {
+                        let _ = rl
+                            .reply
+                            .send("parse error: expected `repeat|constant|count|mirror a [b]`".into());
+                        None
+                    }
+                }
+            })
+            .collect();
+        if !reqs.is_empty() {
+            serve_batch(&mut he, &task, reqs, &mut sampler);
+        }
+    }
+    Ok(())
+}
+
+struct RequestLine {
+    text: String,
+    reply: mpsc::Sender<String>,
+}

@@ -1,0 +1,74 @@
+"""Hand-rolled Adam(W) + EMA over the explicit flat-param layout.
+
+The optimizer state layout is part of the rust manifest contract:
+  opt_state = [t (scalar f32)] + [m_i for every param] + [v_i for every param]
+Every train-step artifact takes/returns this flat list; the update itself runs
+through the fused L1 Pallas kernel (`kernels/adam_kernel.py`).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.adam_kernel import adam_update
+from .model import param_spec
+
+BETA1 = 0.9
+BETA2 = 0.95
+EPS = 1e-8
+WEIGHT_DECAY = 0.0
+
+
+def opt_spec(cfg, kind):
+    """Flat (name, shape) list for the optimizer state."""
+    pspec = param_spec(cfg, kind)
+    return (
+        [("t", (1,))]
+        + [("m." + n, s) for n, s in pspec]
+        + [("v." + n, s) for n, s in pspec]
+    )
+
+
+def init_opt(cfg, kind):
+    return [jnp.zeros(s, jnp.float32) for _, s in opt_spec(cfg, kind)]
+
+
+def split_opt(flat):
+    """[t, m..., v...] -> (t, m_list, v_list)."""
+    n = (len(flat) - 1) // 2
+    return flat[0], flat[1 : 1 + n], flat[1 + n :]
+
+
+def join_opt(t, ms, vs):
+    return [t] + list(ms) + list(vs)
+
+
+def apply_adam(params_flat, opt_flat, grads_flat, lr):
+    """One fused-Adam step over every tensor. lr: traced f32 scalar.
+
+    §Perf note: a multi-tensor variant (concatenate all params -> ONE Pallas
+    call, DeepSpeed's multi-tensor-apply) was tried and REVERTED: at these
+    model sizes the concat/split copies XLA cannot alias cost ~25% on the
+    measured train step (see EXPERIMENTS.md §Perf, change 1). Per-tensor
+    kernel calls win on the CPU backend.
+    """
+    t, ms, vs = split_opt(opt_flat)
+    t_new = t + 1.0
+    hyper = jnp.stack(
+        [
+            lr,
+            jnp.float32(BETA1),
+            jnp.float32(BETA2),
+            jnp.float32(EPS),
+            jnp.float32(WEIGHT_DECAY),
+            t_new[0],
+            jnp.float32(0.0),
+            jnp.float32(0.0),
+        ]
+    )
+    new_p, new_m, new_v = [], [], []
+    for p, m, v, g in zip(params_flat, ms, vs, grads_flat):
+        shape = p.shape
+        pn, mn, vn = adam_update(p.ravel(), m.ravel(), v.ravel(), g.ravel(), hyper)
+        new_p.append(pn.reshape(shape))
+        new_m.append(mn.reshape(shape))
+        new_v.append(vn.reshape(shape))
+    return new_p, join_opt(t_new, new_m, new_v)

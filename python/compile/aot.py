@@ -1,0 +1,338 @@
+"""AOT lowering: every RLHF entry point → HLO text + a JSON manifest.
+
+This is the only place Python touches the model after development: `make
+artifacts` runs it once per deployment config, and the rust coordinator is
+self-contained afterwards.
+
+Interchange is HLO **text**, not `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact calling convention (the manifest contract with rust):
+  * all tensors are flat lists, f32 except token/len/seed tensors (int32);
+  * actor params:  P  (len = len(actor_params) in the manifest)
+  * critic params: C
+  * opt states:    O_P / O_C = [t] + [m...] + [v...]
+  * every train step returns (new params..., new opt..., scalar metrics...).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import adam, model
+from .configs import run_config, run_config_names, to_dict
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _pspecs(cfg, kind):
+    return [_spec(s) for _, s in model.param_spec(cfg, kind)]
+
+
+def _ospecs(cfg, kind):
+    return [_spec(s) for _, s in adam.opt_spec(cfg, kind)]
+
+
+def build_entries(rc):
+    """Returns {name: (fn, [arg_specs], [output names])}.
+
+    fn takes flat positional args (matching arg_specs) and returns a flat
+    tuple. Output names are recorded in the manifest for rust-side parsing.
+    """
+    a, c = rc.actor, rc.critic
+    B, S, SP = rc.batch, rc.seq_len, rc.prompt_len
+    na = len(model.param_spec(a, "lm"))
+    nc = len(model.param_spec(c, "scalar"))
+    noa = len(adam.opt_spec(a, "lm"))
+    noc = len(adam.opt_spec(c, "scalar"))
+    bh_a = B * a.n_heads
+
+    tok = _spec((B, S), jnp.int32)
+    mask = _spec((B, S - 1))
+    scalar_f = _spec((), jnp.float32)
+
+    entries = {}
+
+    # ---- init -----------------------------------------------------------
+    def init_actor(seed):
+        return tuple(model.flatten_params(a, "lm", model.init_params(a, "lm", seed)))
+
+    entries["init_actor"] = (init_actor, [_spec((), jnp.int32)], ["actor_params"])
+
+    def init_critic(seed):
+        return tuple(model.flatten_params(c, "scalar", model.init_params(c, "scalar", seed)))
+
+    entries["init_critic"] = (init_critic, [_spec((), jnp.int32)], ["critic_params"])
+
+    # ---- step 1: SFT ----------------------------------------------------
+    def sft_step(*args):
+        P = list(args[:na])
+        O = list(args[na : na + noa])
+        tokens, msk, lr = args[na + noa :]
+
+        def loss_fn(flat):
+            return model.sft_loss(a, model.unflatten_params(a, "lm", flat), tokens, msk)
+
+        loss, grads = jax.value_and_grad(loss_fn)(P)
+        P2, O2 = adam.apply_adam(P, O, grads, lr)
+        return tuple(P2) + tuple(O2) + (loss,)
+
+    entries["sft_step"] = (
+        sft_step,
+        _pspecs(a, "lm") + _ospecs(a, "lm") + [tok, mask, scalar_f],
+        ["actor_params", "actor_opt", "loss"],
+    )
+
+    def sft_eval(*args):
+        P = list(args[:na])
+        tokens, msk = args[na:]
+        return (model.sft_loss(a, model.unflatten_params(a, "lm", P), tokens, msk),)
+
+    entries["sft_eval"] = (sft_eval, _pspecs(a, "lm") + [tok, mask], ["loss"])
+
+    # ---- step 2: reward model -------------------------------------------
+    def rm_step(*args):
+        C = list(args[:nc])
+        O = list(args[nc : nc + noc])
+        chosen, rejected, lens_c, lens_r, lr = args[nc + noc :]
+
+        def loss_fn(flat):
+            loss, acc = model.rm_pair_loss(
+                c, model.unflatten_params(c, "scalar", flat), chosen, rejected, lens_c, lens_r
+            )
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(C)
+        C2, O2 = adam.apply_adam(C, O, grads, lr)
+        return tuple(C2) + tuple(O2) + (loss, acc)
+
+    lens = _spec((B,), jnp.int32)
+    entries["rm_step"] = (
+        rm_step,
+        _pspecs(c, "scalar") + _ospecs(c, "scalar") + [tok, tok, lens, lens, scalar_f],
+        ["critic_params", "critic_opt", "loss", "acc"],
+    )
+
+    def rm_forward(*args):
+        C = list(args[:nc])
+        tokens, lens_ = args[nc:]
+        return (
+            model.rewards_fn(c, model.unflatten_params(c, "scalar", C), tokens, lens_),
+        )
+
+    entries["rm_forward"] = (rm_forward, _pspecs(c, "scalar") + [tok, lens], ["rewards"])
+
+    def rm_eval(*args):
+        C = list(args[:nc])
+        chosen, rejected, lens_c, lens_r = args[nc:]
+        loss, acc = model.rm_pair_loss(
+            c, model.unflatten_params(c, "scalar", C), chosen, rejected, lens_c, lens_r
+        )
+        return (loss, acc)
+
+    entries["rm_eval"] = (
+        rm_eval,
+        _pspecs(c, "scalar") + [tok, tok, lens, lens],
+        ["loss", "acc"],
+    )
+
+    # ---- step 3: experience forwards -------------------------------------
+    def logprobs_forward(*args):
+        P = list(args[:na])
+        tokens = args[na]
+        return (model.token_logprobs(a, model.unflatten_params(a, "lm", P), tokens),)
+
+    entries["logprobs_forward"] = (logprobs_forward, _pspecs(a, "lm") + [tok], ["logprobs"])
+
+    # Full per-position logits — used only by the naive-generation baseline
+    # (no KV cache) that the Figure-5 ablation measures against.
+    def logits_forward(*args):
+        P = list(args[:na])
+        tokens = args[na]
+        return (model.logits_fn(a, model.unflatten_params(a, "lm", P), tokens),)
+
+    entries["logits_forward"] = (logits_forward, _pspecs(a, "lm") + [tok], ["logits"])
+
+    def critic_forward(*args):
+        C = list(args[:nc])
+        tokens = args[nc]
+        return (model.values_fn(c, model.unflatten_params(c, "scalar", C), tokens),)
+
+    entries["critic_forward"] = (critic_forward, _pspecs(c, "scalar") + [tok], ["values"])
+
+    # ---- step 3: generation ----------------------------------------------
+    def gen_prefill(*args):
+        P = list(args[:na])
+        prompt = args[na]
+        return model.prefill(a, model.unflatten_params(a, "lm", P), prompt, S)
+
+    entries["prefill"] = (
+        gen_prefill,
+        _pspecs(a, "lm") + [_spec((B, SP), jnp.int32)],
+        ["logits", "k_cache", "v_cache"],
+    )
+
+    kv = _spec((a.n_layers, bh_a, S, a.d_head))
+
+    def gen_decode(*args):
+        P = list(args[:na])
+        kc, vc, token, pos = args[na:]
+        return model.decode_step(a, model.unflatten_params(a, "lm", P), kc, vc, token, pos)
+
+    entries["decode_step"] = (
+        gen_decode,
+        _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((1,), jnp.int32)],
+        ["logits", "k_cache", "v_cache"],
+    )
+
+    # ---- step 3: PPO updates ----------------------------------------------
+    arr = _spec((B, S - 1))
+
+    def ppo_actor_step(*args):
+        P = list(args[:na])
+        O = list(args[na : na + noa])
+        tokens, old_logp, adv, msk, ptx_tokens, hyper, lr = args[na + noa :]
+
+        def loss_fn(flat):
+            loss, kl, clipfrac = model.ppo_actor_loss(
+                a,
+                model.unflatten_params(a, "lm", flat),
+                tokens,
+                old_logp,
+                adv,
+                msk,
+                ptx_tokens,
+                hyper,
+            )
+            return loss, (kl, clipfrac)
+
+        (loss, (kl, clipfrac)), grads = jax.value_and_grad(loss_fn, has_aux=True)(P)
+        P2, O2 = adam.apply_adam(P, O, grads, lr)
+        return tuple(P2) + tuple(O2) + (loss, kl, clipfrac)
+
+    entries["ppo_actor_step"] = (
+        ppo_actor_step,
+        _pspecs(a, "lm")
+        + _ospecs(a, "lm")
+        + [tok, arr, arr, mask, tok, _spec((4,)), scalar_f],
+        ["actor_params", "actor_opt", "loss", "approx_kl", "clipfrac"],
+    )
+
+    def ppo_critic_step(*args):
+        C = list(args[:nc])
+        O = list(args[nc : nc + noc])
+        tokens, returns, old_values, msk, hyper, lr = args[nc + noc :]
+
+        def loss_fn(flat):
+            return model.ppo_critic_loss(
+                c,
+                model.unflatten_params(c, "scalar", flat),
+                tokens,
+                returns,
+                old_values,
+                msk,
+                hyper,
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(C)
+        C2, O2 = adam.apply_adam(C, O, grads, lr)
+        return tuple(C2) + tuple(O2) + (loss,)
+
+    entries["ppo_critic_step"] = (
+        ppo_critic_step,
+        _pspecs(c, "scalar") + _ospecs(c, "scalar") + [tok, arr, arr, mask, _spec((4,)), scalar_f],
+        ["critic_params", "critic_opt", "loss"],
+    )
+
+    # ---- EMA ---------------------------------------------------------------
+    def ema_step(*args):
+        E = list(args[:na])
+        P = list(args[na : 2 * na])
+        decay = args[2 * na]
+        return tuple(model.ema_update(E, P, decay))
+
+    entries["ema_update"] = (
+        ema_step,
+        _pspecs(a, "lm") + _pspecs(a, "lm") + [scalar_f],
+        ["ema_params"],
+    )
+
+    return entries
+
+
+def lower_entry(fn, specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def build(run_name: str, out_dir: str, only=None):
+    rc = run_config(run_name)
+    os.makedirs(out_dir, exist_ok=True)
+    entries = build_entries(rc)
+    manifest = {
+        "run": run_name,
+        "config": to_dict(rc),
+        "actor_params": [
+            {"name": n, "shape": list(s)} for n, s in model.param_spec(rc.actor, "lm")
+        ],
+        "critic_params": [
+            {"name": n, "shape": list(s)} for n, s in model.param_spec(rc.critic, "scalar")
+        ],
+        "actor_opt": [{"name": n, "shape": list(s)} for n, s in adam.opt_spec(rc.actor, "lm")],
+        "critic_opt": [
+            {"name": n, "shape": list(s)} for n, s in adam.opt_spec(rc.critic, "scalar")
+        ],
+        "artifacts": {},
+    }
+    for name, (fn, specs, outputs) in entries.items():
+        if only and name not in only:
+            continue
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        print(f"[aot:{run_name}] lowering {name} ({len(specs)} inputs) ...", flush=True)
+        text = to_hlo_text(lower_entry(fn, specs))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "outputs": outputs,
+            "hlo_bytes": len(text),
+        }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot:{run_name}] wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", default="tiny,small", help="comma-separated run configs")
+    ap.add_argument("--out", default="../artifacts", help="artifacts root dir")
+    ap.add_argument("--only", default=None, help="comma-separated entry subset")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    for run_name in args.runs.split(","):
+        if run_name not in run_config_names():
+            raise SystemExit(f"unknown run config {run_name!r}; have {run_config_names()}")
+        build(run_name, os.path.join(args.out, run_name), only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Model-size zoo shared between the L2 model, the AOT lowering, and pytest.
+
+The *real* configs (tiny..medium) are trained from scratch on the synthetic
+corpus by the rust pipeline; the paper-scale OPT configs (1.3B..175B) live in
+the rust simulator (`rust/src/sim/`), which only needs architecture shapes.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self, lm_head_tied: bool = True) -> int:
+        """Parameter count (embeddings + blocks + final LN [+ scalar head])."""
+        d, v, s = self.d_model, self.vocab, self.max_seq
+        per_layer = (
+            4 * d * d  # wq wk wv wo
+            + 2 * d * self.d_ff  # w1 w2
+            + self.d_ff
+            + d  # b1 b2
+            + 4 * d  # two LayerNorms (g, b)
+        )
+        return v * d + s * d + self.n_layers * per_layer + 2 * d
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Shapes baked into the AOT artifacts for one deployment."""
+
+    actor: ModelConfig
+    critic: ModelConfig
+    batch: int
+    prompt_len: int
+    gen_len: int
+
+    @property
+    def seq_len(self) -> int:
+        return self.prompt_len + self.gen_len
+
+
+_MODELS: Dict[str, ModelConfig] = {
+    # name                 vocab d_mod layers heads d_ff max_seq
+    "nano": ModelConfig("nano", 256, 32, 1, 2, 64, 64),
+    "tiny": ModelConfig("tiny", 256, 64, 2, 2, 256, 64),
+    "small": ModelConfig("small", 512, 128, 4, 4, 512, 128),
+    "base": ModelConfig("base", 512, 256, 6, 8, 1024, 128),
+    "medium": ModelConfig("medium", 512, 512, 8, 8, 2048, 256),
+}
+
+# Deployment presets mirroring the paper's actor/reward pairing (actor large,
+# reward/critic small — e.g. OPT-13B actor + OPT-350M reward).
+_RUNS: Dict[str, RunConfig] = {
+    "nano": RunConfig(_MODELS["nano"], _MODELS["nano"], batch=2, prompt_len=8, gen_len=8),
+    "tiny": RunConfig(_MODELS["tiny"], _MODELS["tiny"], batch=4, prompt_len=16, gen_len=16),
+    "small": RunConfig(_MODELS["small"], _MODELS["tiny"], batch=8, prompt_len=32, gen_len=32),
+    "base": RunConfig(_MODELS["base"], _MODELS["small"], batch=8, prompt_len=32, gen_len=32),
+    "medium": RunConfig(_MODELS["medium"], _MODELS["small"], batch=8, prompt_len=64, gen_len=64),
+}
+
+
+def model_config(name: str) -> ModelConfig:
+    return _MODELS[name]
+
+
+def run_config(name: str) -> RunConfig:
+    return _RUNS[name]
+
+
+def run_config_names():
+    return list(_RUNS)
+
+
+def to_dict(rc: RunConfig) -> dict:
+    d = asdict(rc)
+    d["seq_len"] = rc.seq_len
+    d["actor"]["d_head"] = rc.actor.d_head
+    d["critic"]["d_head"] = rc.critic.d_head
+    d["actor"]["n_params"] = rc.actor.n_params()
+    d["critic"]["n_params"] = rc.critic.n_params()
+    return d

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT HLO artifacts)."""
+
+from .attention import flash_attention, flash_attention_fwd
+from .decode import decode_attention
+from .layernorm import layernorm
+from .adam_kernel import adam_update
+
+__all__ = [
+    "flash_attention",
+    "flash_attention_fwd",
+    "decode_attention",
+    "layernorm",
+    "adam_update",
+]

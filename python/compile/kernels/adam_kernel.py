@@ -1,0 +1,57 @@
+"""L1: fused Adam(W) update kernel.
+
+DeepSpeed ships fused CUDA optimizers so the p/m/v/g streams are read once and
+written once per step; this is the Pallas equivalent. Hyper-parameters arrive
+as a [8] f32 array (lr, b1, b2, eps, wd, t, _, _) so the learning-rate schedule
+is a runtime input — the rust coordinator changes lr without recompiling.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _adam_kernel(h_ref, p_ref, m_ref, v_ref, g_ref, po_ref, mo_ref, vo_ref):
+    lr, b1, b2, eps, wd, t = (h_ref[i] for i in range(6))
+    p = p_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    # b^t via exp(t*log(b)) — t is a runtime value.
+    bc1 = 1.0 - jnp.exp(t * jnp.log(b1))
+    bc2 = 1.0 - jnp.exp(t * jnp.log(b2))
+    update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps) + wd * p
+    po_ref[...] = (p - lr * update).astype(po_ref.dtype)
+    mo_ref[...] = m_new.astype(mo_ref.dtype)
+    vo_ref[...] = v_new.astype(vo_ref.dtype)
+
+
+def adam_update(p, m, v, g, hyper, block=DEFAULT_BLOCK):
+    """One fused Adam(W) step over 1-D tensors.
+
+    p,m,v,g: [n] (n need not divide `block`; the tail is padded internally).
+    hyper: [8] f32 = (lr, b1, b2, eps, wd, t, _, _). Returns (p', m', v').
+    """
+    n = p.shape[0]
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    if pad:
+        p, m, v, g = (jnp.pad(a, (0, pad)) for a in (p, m, v, g))
+    npad = n + pad
+    shapes = [jax.ShapeDtypeStruct((npad,), a.dtype) for a in (p, m, v)]
+    specs = [pl.BlockSpec((block,), lambda i: (i,)) for _ in range(4)]
+    out = pl.pallas_call(
+        _adam_kernel,
+        grid=(npad // block,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (0,))] + specs,
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in range(3)],
+        out_shape=shapes,
+        interpret=True,
+    )(hyper, p, m, v, g)
+    if pad:
+        out = tuple(a[:n] for a in out)
+    return tuple(out)

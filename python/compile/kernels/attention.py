@@ -1,0 +1,116 @@
+"""L1: fused causal flash attention (Pallas, interpret mode).
+
+TPU adaptation of the paper's fused CUDA transformer kernels: Q is tiled into
+VMEM-sized blocks via BlockSpec (the scratchpad analogue of CUDA shared-memory
+tiling); the kernel streams K/V blocks through an online-softmax loop so the
+full [s, s] score matrix is never materialized, and the inner `q_blk @ k_blkᵀ`
+/ `p @ v_blk` products are MXU-shaped matmuls.
+
+`interpret=True` is mandatory on this image: the CPU PJRT plugin cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md). Correctness is pinned to
+`ref.attention_ref` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len, scale):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # (block_q, dh)
+    d_head = q.shape[-1]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    # Causal structure: K blocks strictly after this Q block's last row are
+    # fully masked — skip them entirely (dynamic fori_loop upper bound).
+    n_kv_blocks = jax.lax.div(qi * block_q + block_q + block_k - 1, block_k)
+    n_kv_blocks = jnp.minimum(n_kv_blocks, seq_len // block_k)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # (block_q, block_k) — MXU-shaped
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d_head), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kv_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Causal attention forward. q,k,v: [bh, s, dh] -> [bh, s, dh]."""
+    bh, s, dh = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / (dh**0.5)
+    grid = (bh, s // block_q)
+    kernel = functools.partial(
+        _flash_fwd_kernel, block_q=block_q, block_k=block_k, seq_len=s, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attention_bwd_ref(q, k, v, g):
+    """Recompute-based backward (standard softmax-attention VJP, f32)."""
+    s = q.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    qf, kf, vf, gf = (a.astype(jnp.float32) for a in (q, k, v, g))
+    logits = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    dv = jnp.einsum("bqk,bqd->bkd", p, gf)
+    dp = jnp.einsum("bqd,bkd->bqk", gf, vf)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    ds = jnp.where(mask[None], ds, 0.0) * scale
+    dq = jnp.einsum("bqk,bkd->bqd", ds, kf)
+    dk = jnp.einsum("bqk,bqd->bkd", ds, qf)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@jax.custom_vjp
+def flash_attention(q, k, v):
+    """Differentiable causal flash attention: Pallas forward, recompute VJP."""
+    return flash_attention_fwd(q, k, v)
+
+
+def _fwd(q, k, v):
+    return flash_attention_fwd(q, k, v), (q, k, v)
+
+
+def _bwd(res, g):
+    q, k, v = res
+    return _attention_bwd_ref(q, k, v, g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

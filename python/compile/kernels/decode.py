@@ -1,0 +1,74 @@
+"""L1: fused single-token decode attention over the KV cache.
+
+This is the paper's generation hot spot: the experience-generation phase of
+RLHF runs the actor once per generated token and is memory-bandwidth-bound
+(§5.3). The DeepSpeed-Inference answer is a fused kernel that reads each KV
+byte exactly once; this kernel has the same single-pass property, streaming
+the cache in blocks through an online softmax so q·Kᵀ → softmax → ·V never
+round-trips to HBM.
+
+Cache layout is [bh, smax, dh] (sequence-major) so a cache block is a
+contiguous VMEM tile. `pos` arrives as a [1] int32 array (runtime value —
+the rust coordinator advances it every token without recompiling).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK_K = 32
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, smax, scale):
+    pos = pos_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale  # (dh,)
+    d_head = q.shape[-1]
+
+    # Only cache blocks containing positions <= pos participate.
+    n_blocks = jax.lax.div(pos + block_k, block_k)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        s = k.astype(jnp.float32) @ q  # (block_k,)
+        idx = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(idx <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum()
+        acc_new = acc * alpha + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d_head,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, pos, block_k=DEFAULT_BLOCK_K):
+    """q: [bh, dh]; k,v: [bh, smax, dh]; pos: [1] int32 -> [bh, dh]."""
+    bh, smax, dh = k.shape
+    block_k = min(block_k, smax)
+    assert smax % block_k == 0, (smax, block_k)
+    scale = 1.0 / (dh**0.5)
+    kernel = functools.partial(_decode_kernel, block_k=block_k, smax=smax, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((1, dh), lambda b: (b, 0)),
+            pl.BlockSpec((1, smax, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, smax, dh), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, dh), q.dtype),
+        interpret=True,
+    )(pos, q, k, v)

@@ -1,0 +1,43 @@
+"""L1: fused LayerNorm (mean/var/normalize/affine in one VMEM pass).
+
+Mirrors DeepSpeed-Inference's fused LN: one read of x per row instead of the
+four separate HLO reductions/broadcasts an unfused graph performs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 32
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, d)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def layernorm(x, g, b, eps=1e-5, block_rows=DEFAULT_BLOCK_ROWS):
+    """x: [n, d]; g,b: [d] -> [n, d]."""
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0, (n, block_rows)
+    kernel = functools.partial(_layernorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, g, b)

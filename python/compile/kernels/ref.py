@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest (and the custom-VJP gradient
+checks) compare each kernel against the function here under hypothesis-driven
+shape/dtype sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, scale=None):
+    """Causal softmax attention. q,k,v: [bh, s, dh] -> [bh, s, dh]."""
+    s = q.shape[1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, pos):
+    """Single-position attention over a KV cache.
+
+    q: [bh, dh]; k,v: [bh, smax, dh]; pos: scalar int32 (index of the current
+    token; cache entries 0..pos inclusive are valid) -> [bh, dh].
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bd,bkd->bk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    idx = jnp.arange(k.shape[1])
+    logits = jnp.where(idx[None, :] <= pos, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bk,bkd->bd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def layernorm_ref(x, g, b, eps=1e-5):
+    """LayerNorm over the last axis. x: [n, d]; g,b: [d]."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32) + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def adam_ref(p, m, v, g, lr, b1, b2, eps, wd, t):
+    """One Adam(W) step with bias correction. All arrays 1-D, same length."""
+    pf, mf, vf, gf = (a.astype(jnp.float32) for a in (p, m, v, g))
+    m_new = b1 * mf + (1.0 - b1) * gf
+    v_new = b2 * vf + (1.0 - b2) * gf * gf
+    mhat = m_new / (1.0 - b1**t)
+    vhat = v_new / (1.0 - b2**t)
+    p_new = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * pf)
+    return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)

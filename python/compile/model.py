@@ -1,0 +1,322 @@
+"""L2: the OPT-style decoder-only transformer and every RLHF loss/graph.
+
+Everything here is traced once by `aot.py` and lowered to HLO text; the rust
+coordinator (L3) only ever sees the lowered artifacts. The compute hot spots —
+causal attention (training/prefill), decode attention over the KV cache
+(generation), LayerNorm — call the L1 Pallas kernels in `kernels/`.
+
+Architecture (OPT-flavoured): learned positional embeddings, pre-LN blocks
+with ReLU MLPs, tied LM head for the actor, scalar value head for the
+reward/critic model (one "scalar" model serves both: per-position outputs are
+the critic values, the value at the last real token is the RM reward — the
+same weight-sharing InstructGPT uses when initializing the critic from the
+RM).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import flash_attention, flash_attention_fwd
+from .kernels.decode import decode_attention
+from .kernels.layernorm import layernorm as layernorm_pallas
+
+# ---------------------------------------------------------------------------
+# LayerNorm: Pallas forward + analytic VJP (pallas_call has no autodiff rule).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def layernorm(x, g, b):
+    """x: [n, d]; g,b: [d]."""
+    return layernorm_pallas(x, g, b)
+
+
+def _ln_fwd(x, g, b):
+    return layernorm_pallas(x, g, b), (x, g)
+
+
+def _ln_bwd(res, dy):
+    x, g = res
+    eps = 1e-5
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mu) * inv
+    dg = (dyf * xhat).sum(0)
+    db = dyf.sum(0)
+    dxhat = dyf * g.astype(jnp.float32)
+    dx = inv * (
+        dxhat - dxhat.mean(-1, keepdims=True) - xhat * (dxhat * xhat).mean(-1, keepdims=True)
+    )
+    return dx.astype(x.dtype), dg.astype(g.dtype), db.astype(x.dtype)
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Parameters: explicit, deterministic flat order (the manifest contract with
+# the rust runtime — rust addresses params purely by position).
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig, kind: str):
+    """kind: 'lm' (actor, tied head) or 'scalar' (reward/critic, value head)."""
+    d, v, s, ff = cfg.d_model, cfg.vocab, cfg.max_seq, cfg.d_ff
+    spec = [("embed", (v, d)), ("pos_embed", (s, d))]
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        spec += [
+            (p + "ln1_g", (d,)),
+            (p + "ln1_b", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln2_g", (d,)),
+            (p + "ln2_b", (d,)),
+            (p + "w1", (d, ff)),
+            (p + "b1", (ff,)),
+            (p + "w2", (ff, d)),
+            (p + "b2", (d,)),
+        ]
+    spec += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    if kind == "scalar":
+        spec += [("vhead", (d,)), ("vbias", (1,))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, kind: str, seed):
+    """seed: traced int32 scalar — init is itself an AOT artifact."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    scale = 0.02
+    resid_scale = scale / jnp.sqrt(jnp.float32(2 * cfg.n_layers))
+    for i, (name, shape) in enumerate(param_spec(cfg, kind)):
+        sub = jax.random.fold_in(key, i)
+        leaf = name.split(".")[-1]
+        if leaf in ("ln1_g", "ln2_g", "lnf_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif leaf in ("ln1_b", "ln2_b", "lnf_b", "b1", "b2", "vbias"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif leaf in ("wo", "w2"):  # residual-path projections: scaled init
+            params[name] = resid_scale * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            params[name] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg, kind, params):
+    return [params[n] for n, _ in param_spec(cfg, kind)]
+
+
+def unflatten_params(cfg, kind, flat):
+    spec = param_spec(cfg, kind)
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    return {n: a for (n, _), a in zip(spec, flat)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_train(cfg, params, i, x):
+    """Full-sequence causal attention (flash kernel). x: [b, s, d]."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    p = f"l{i}."
+    q = x @ params[p + "wq"]
+    k = x @ params[p + "wk"]
+    v = x @ params[p + "wv"]
+
+    def split(t):  # [b, s, d] -> [b*h, s, dh]
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    o = flash_attention(split(q), split(k), split(v))
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ params[p + "wo"]
+
+
+def _mlp(cfg, params, i, x):
+    p = f"l{i}."
+    return (
+        jax.nn.relu(x @ params[p + "w1"] + params[p + "b1"]) @ params[p + "w2"]
+        + params[p + "b2"]
+    )
+
+
+def _ln(params, name, x):
+    b, s, d = x.shape
+    return layernorm(x.reshape(b * s, d), params[name + "_g"], params[name + "_b"]).reshape(
+        b, s, d
+    )
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens):
+    """tokens: [b, s] int32 -> hidden [b, s, d] (post final-LN)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos_embed"][:s][None]
+    for i in range(cfg.n_layers):
+        x = x + _attn_train(cfg, params, i, _ln(params, f"l{i}.ln1", x))
+        x = x + _mlp(cfg, params, i, _ln(params, f"l{i}.ln2", x))
+    return _ln(params, "lnf", x)
+
+
+def logits_fn(cfg, params, tokens):
+    """LM logits via the tied embedding: [b, s, vocab]."""
+    return forward_hidden(cfg, params, tokens) @ params["embed"].T
+
+
+def token_logprobs(cfg, params, tokens):
+    """Log-probs of each realized next token: [b, s-1]."""
+    logits = logits_fn(cfg, params, tokens)[:, :-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(logp, tokens[:, 1:, None], axis=-1)[..., 0]
+
+
+def values_fn(cfg, params, tokens):
+    """Per-position scalar head output: [b, s]."""
+    h = forward_hidden(cfg, params, tokens)
+    return h @ params["vhead"] + params["vbias"]
+
+
+def rewards_fn(cfg, params, tokens, lens):
+    """RM reward = value at the last real token. lens: [b] int32 -> [b]."""
+    v = values_fn(cfg, params, tokens)
+    return jnp.take_along_axis(v, lens[:, None], axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def sft_loss(cfg, params, tokens, mask):
+    """Masked next-token CE. tokens: [b,s]; mask: [b,s-1] f32."""
+    logp = token_logprobs(cfg, params, tokens)
+    return -(logp * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def rm_pair_loss(cfg, params, chosen, rejected, lens_c, lens_r):
+    """-log sigmoid(r_chosen - r_rejected); also returns pairwise accuracy."""
+    rc = rewards_fn(cfg, params, chosen, lens_c)
+    rr = rewards_fn(cfg, params, rejected, lens_r)
+    loss = -jax.nn.log_sigmoid(rc - rr).mean()
+    acc = (rc > rr).astype(jnp.float32).mean()
+    return loss, acc
+
+
+def ppo_actor_loss(cfg, params, tokens, old_logp, adv, mask, ptx_tokens, hyper):
+    """PPO clipped surrogate + optional mixture (pretraining) objective.
+
+    hyper: [4] f32 = (clip_eps, ptx_coef, _, _). Returns (loss, approx_kl,
+    clipfrac). Mixture training is the paper's Step-3 option that blends the
+    next-word-prediction objective into PPO to avoid benchmark regression.
+    """
+    clip_eps, ptx_coef = hyper[0], hyper[1]
+    logp = token_logprobs(cfg, params, tokens)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ratio = jnp.exp(logp - old_logp)
+    s1 = ratio * adv
+    s2 = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    pg_loss = -(jnp.minimum(s1, s2) * mask).sum() / denom
+    approx_kl = ((old_logp - logp) * mask).sum() / denom
+    clipped = (jnp.abs(ratio - 1.0) > clip_eps).astype(jnp.float32)
+    clipfrac = (clipped * mask).sum() / denom
+    ptx = sft_loss(cfg, params, ptx_tokens, jnp.ones_like(ptx_tokens[:, 1:], jnp.float32))
+    return pg_loss + ptx_coef * ptx, approx_kl, clipfrac
+
+
+def ppo_critic_loss(cfg, params, tokens, returns, old_values, mask, hyper):
+    """Clipped value loss over response positions. returns/old_values: [b, s-1]."""
+    clip_eps = hyper[0]
+    v = values_fn(cfg, params, tokens)[:, :-1]
+    v_clip = old_values + jnp.clip(v - old_values, -clip_eps, clip_eps)
+    l1 = (v - returns) ** 2
+    l2 = (v_clip - returns) ** 2
+    return 0.5 * (jnp.maximum(l1, l2) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Generation (the Hybrid Engine's inference mode)
+# ---------------------------------------------------------------------------
+
+
+def _attn_prefill(cfg, params, i, x):
+    """Like _attn_train but also returns per-head K/V for the cache."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    p = f"l{i}."
+    q = x @ params[p + "wq"]
+    k = x @ params[p + "wk"]
+    v = x @ params[p + "wv"]
+
+    def split(t):
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    qs, ks, vs = split(q), split(k), split(v)
+    o = flash_attention_fwd(qs, ks, vs)
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ params[p + "wo"], ks, vs
+
+
+def prefill(cfg: ModelConfig, params, prompt, smax):
+    """Run the prompt, fill the KV cache.
+
+    prompt: [b, sp] -> (last-position logits [b, vocab],
+                        k_cache, v_cache: [L, b*h, smax, dh]).
+    """
+    b, sp = prompt.shape
+    bh, dh = b * cfg.n_heads, cfg.d_head
+    x = params["embed"][prompt] + params["pos_embed"][:sp][None]
+    kc = jnp.zeros((cfg.n_layers, bh, smax, dh), jnp.float32)
+    vc = jnp.zeros((cfg.n_layers, bh, smax, dh), jnp.float32)
+    for i in range(cfg.n_layers):
+        o, ks, vs = _attn_prefill(cfg, params, i, _ln(params, f"l{i}.ln1", x))
+        kc = kc.at[i, :, :sp].set(ks)
+        vc = vc.at[i, :, :sp].set(vs)
+        x = x + o
+        x = x + _mlp(cfg, params, i, _ln(params, f"l{i}.ln2", x))
+    x = _ln(params, "lnf", x)
+    logits = x[:, -1] @ params["embed"].T
+    return logits, kc, vc
+
+
+def decode_step(cfg: ModelConfig, params, k_cache, v_cache, token, pos):
+    """One generation step (the paper's memory-bandwidth-bound hot loop).
+
+    token: [b] int32 (the token at position `pos`); pos: [1] int32.
+    Returns (logits [b, vocab] for position pos, updated caches).
+    """
+    b = token.shape[0]
+    h, dh, d = cfg.n_heads, cfg.d_head, cfg.d_model
+    p0 = pos[0]
+    pos_emb = jax.lax.dynamic_slice_in_dim(params["pos_embed"], p0, 1, axis=0)
+    x = params["embed"][token] + pos_emb  # [b, d]
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        xn = layernorm(x, params[p + "ln1_g"], params[p + "ln1_b"])
+        q = (xn @ params[p + "wq"]).reshape(b * h, dh)
+        k = (xn @ params[p + "wk"]).reshape(b * h, dh)
+        v = (xn @ params[p + "wv"]).reshape(b * h, dh)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None, :, None, :], (i, 0, p0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None, :, None, :], (i, 0, p0, 0))
+        o = decode_attention(q, k_cache[i], v_cache[i], pos)  # [b*h, dh]
+        x = x + o.reshape(b, d) @ params[p + "wo"]
+        xn = layernorm(x, params[p + "ln2_g"], params[p + "ln2_b"])
+        x = (
+            x
+            + jax.nn.relu(xn @ params[p + "w1"] + params[p + "b1"]) @ params[p + "w2"]
+            + params[p + "b2"]
+        )
+    x = layernorm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["embed"].T, k_cache, v_cache
+
+
+def ema_update(ema_flat, params_flat, decay):
+    """EMA checkpoint collection (paper Step-3 optional feature)."""
+    return [decay * e + (1.0 - decay) * p for e, p in zip(ema_flat, params_flat)]

@@ -1,0 +1,102 @@
+"""L1 structural performance analysis (the §Perf deliverable for the kernel
+layer).
+
+interpret=True gives CPU-numpy timing only — NOT a TPU proxy — so the Pallas
+kernels are evaluated structurally: VMEM footprint per grid program vs the
+~16 MiB budget, MXU-shaped matmul fraction, and HBM bytes-touched ratios.
+Run: `cd python && python -m compile.perf_analysis`.
+"""
+
+from dataclasses import dataclass
+
+from .configs import run_config_names, run_config
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TPU core
+
+
+@dataclass
+class KernelReport:
+    name: str
+    vmem_bytes: int
+    mxu_fraction: float  # share of FLOPs in 128x128-tileable matmuls
+    hbm_ratio: float  # bytes touched / minimum bytes
+    notes: str
+
+    def row(self):
+        return (
+            f"{self.name:<22} VMEM/program {self.vmem_bytes/1024:>8.1f} KiB "
+            f"({100*self.vmem_bytes/VMEM_BUDGET:>5.2f}% of budget)  "
+            f"MXU {self.mxu_fraction:>4.0%}  HBM x{self.hbm_ratio:.2f}  {self.notes}"
+        )
+
+
+def flash_attention_report(s, dh, block_q=32, block_k=32, dtype=4):
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    # Per program: q block + streamed k/v blocks + accumulator + m/l vectors.
+    vmem = dtype * (block_q * dh + 2 * block_k * dh + block_q * dh + 2 * block_q)
+    # FLOPs: 2*bq*bk*dh per score matmul + 2*bq*bk*dh for p@v -> all matmul;
+    # softmax exp/sum is O(bq*bk) — negligible share.
+    matmul = 4 * block_q * block_k * dh
+    softmax = 6 * block_q * block_k
+    # HBM: Q,O once; K,V re-read once per q block (causal skip halves it).
+    n_qb = s // block_q
+    touched = s * dh * (2 + 2 * (n_qb + 1) / 2)
+    minimum = 4 * s * dh
+    return KernelReport(
+        "flash_attention",
+        vmem,
+        matmul / (matmul + softmax),
+        touched / minimum,
+        f"bq={block_q} bk={block_k} causal-skip on",
+    )
+
+
+def decode_attention_report(smax, dh, block_k=32, dtype=4):
+    block_k = min(block_k, smax)
+    vmem = dtype * (dh + 2 * block_k * dh + dh + 2)
+    matmul = 4 * block_k * dh
+    softmax = 6 * block_k
+    # Each cache byte is read exactly once (single pass, pos-bounded).
+    return KernelReport(
+        "decode_attention",
+        vmem,
+        matmul / (matmul + softmax),
+        1.0,
+        f"bk={block_k} single-pass over cache",
+    )
+
+
+def layernorm_report(d, block_rows=32, dtype=4):
+    vmem = dtype * (block_rows * d * 2 + 2 * d)
+    return KernelReport(
+        "layernorm", vmem, 0.0, 1.0, f"rows={block_rows} one read per element"
+    )
+
+
+def adam_report(block=4096, dtype=4):
+    vmem = dtype * (4 * block + 3 * block + 8)
+    return KernelReport(
+        "fused_adam", vmem, 0.0, 1.0, f"block={block} p/m/v/g read+write once"
+    )
+
+
+def main():
+    for run in run_config_names():
+        rc = run_config(run)
+        a = rc.actor
+        s, dh = rc.seq_len, a.d_head
+        print(f"== {run}: actor {a.name} (s={s}, d_head={dh}, d={a.d_model}) ==")
+        for r in [
+            flash_attention_report(s, dh),
+            decode_attention_report(s, dh),
+            layernorm_report(a.d_model),
+            adam_report(),
+        ]:
+            print("  " + r.row())
+            assert r.vmem_bytes < VMEM_BUDGET, f"{r.name} exceeds VMEM budget"
+        print()
+
+
+if __name__ == "__main__":
+    main()

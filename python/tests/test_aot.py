@@ -1,0 +1,115 @@
+"""AOT contract tests: the lowered HLO must execute (via jax itself) and the
+manifest must describe exactly what rust will see."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import adam, aot, model
+from compile.configs import run_config
+
+RC = run_config("nano")
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return aot.build_entries(RC)
+
+
+def test_every_entry_traces(entries):
+    # Lowering (tracing) every entry is the expensive part of `make
+    # artifacts`; this asserts none of them fails to trace.
+    for name, (fn, specs, _) in entries.items():
+        jax.eval_shape(fn, *specs)
+
+
+def test_entry_names_complete(entries):
+    expected = {
+        "init_actor",
+        "init_critic",
+        "sft_step",
+        "sft_eval",
+        "rm_step",
+        "rm_forward",
+        "rm_eval",
+        "logprobs_forward",
+        "logits_forward",
+        "critic_forward",
+        "prefill",
+        "decode_step",
+        "ppo_actor_step",
+        "ppo_critic_step",
+        "ema_update",
+    }
+    assert set(entries) == expected
+
+
+def test_sft_step_executes_and_reduces_loss(entries):
+    fn, specs, _ = entries["sft_step"]
+    na = len(model.param_spec(RC.actor, "lm"))
+    noa = len(adam.opt_spec(RC.actor, "lm"))
+    P = model.flatten_params(RC.actor, "lm", model.init_params(RC.actor, "lm", jnp.int32(0)))
+    O = adam.init_opt(RC.actor, "lm")
+    B, S = RC.batch, RC.seq_len
+    start = jnp.arange(B, dtype=jnp.int32)[:, None]
+    seq = (start + 3 * jnp.arange(S, dtype=jnp.int32)[None]) % RC.actor.vocab
+    mask = jnp.ones((B, S - 1), jnp.float32)
+    jfn = jax.jit(fn)
+    losses = []
+    for _ in range(12):
+        out = jfn(*P, *O, seq, mask, jnp.float32(5e-3))
+        P = list(out[:na])
+        O = list(out[na : na + noa])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_decode_step_artifact_consistency(entries):
+    """prefill + decode artifacts must agree with the full forward."""
+    pre_fn, _, _ = entries["prefill"]
+    dec_fn, _, _ = entries["decode_step"]
+    P = model.flatten_params(RC.actor, "lm", model.init_params(RC.actor, "lm", jnp.int32(0)))
+    B, SP = RC.batch, RC.prompt_len
+    prompt = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0, RC.actor.vocab)
+    logits, kc, vc = jax.jit(pre_fn)(*P, prompt)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, kc, vc = jax.jit(dec_fn)(*P, kc, vc, tok, jnp.array([SP], jnp.int32))
+    seq = jnp.concatenate([prompt, tok[:, None]], axis=1)
+    params = model.unflatten_params(RC.actor, "lm", P)
+    ref_logits = model.logits_fn(RC.actor, params, seq)[:, -1]
+    np.testing.assert_allclose(logits2, ref_logits, rtol=2e-4, atol=2e-4)
+
+
+def test_manifest_contents(tmp_path, entries):
+    aot.build("nano", str(tmp_path), only={"init_actor", "logprobs_forward"})
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert man["run"] == "nano"
+    assert man["config"]["batch"] == RC.batch
+    assert man["config"]["seq_len"] == RC.seq_len
+    assert len(man["actor_params"]) == len(model.param_spec(RC.actor, "lm"))
+    assert len(man["actor_opt"]) == 2 * len(man["actor_params"]) + 1
+    art = man["artifacts"]["logprobs_forward"]
+    assert (tmp_path / art["file"]).exists()
+    # input count = actor params + tokens
+    assert len(art["inputs"]) == len(man["actor_params"]) + 1
+    assert art["inputs"][-1]["dtype"] == "int32"
+    hlo = (tmp_path / art["file"]).read_text()
+    assert hlo.startswith("HloModule")
+
+
+def test_hyper_vector_layout():
+    """rust encodes (clip, ptx_coef) at hyper[0], hyper[1] — pin it."""
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, RC.actor.vocab)
+    P = model.init_params(RC.actor, "lm", jnp.int32(0))
+    old = model.token_logprobs(RC.actor, P, t)
+    mask = jnp.ones_like(old)
+    # ptx_coef=0 vs 1 must change the loss by exactly the sft term
+    h0 = jnp.array([0.2, 0.0, 0, 0], jnp.float32)
+    h1 = jnp.array([0.2, 1.0, 0, 0], jnp.float32)
+    l0, _, _ = model.ppo_actor_loss(RC.actor, P, t, old, jnp.zeros_like(old), mask, t, h0)
+    l1, _, _ = model.ppo_actor_loss(RC.actor, P, t, old, jnp.zeros_like(old), mask, t, h1)
+    sft = model.sft_loss(RC.actor, P, t, jnp.ones_like(old))
+    np.testing.assert_allclose(float(l1 - l0), float(sft), rtol=1e-5)

@@ -1,0 +1,204 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; fixed-seed numpy data keeps runs
+deterministic per example.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    adam_update,
+    decode_attention,
+    flash_attention,
+    flash_attention_fwd,
+    layernorm,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rnd(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(jax.random.PRNGKey(key), shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    bh=st.sampled_from([1, 2, 6]),
+    s=st.sampled_from([16, 32, 64, 128]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_fwd_matches_ref(bh, s, dh, seed):
+    q, k, v = (rnd(seed + i, (bh, s, dh)) for i in range(3))
+    out = flash_attention_fwd(q, k, v)
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.sampled_from([16, 64]),
+    block_q=st.sampled_from([8, 16]),
+    block_k=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_fwd_block_shape_invariance(s, block_q, block_k, seed):
+    """Output must not depend on the tiling choice."""
+    q, k, v = (rnd(seed + i, (2, s, 16)) for i in range(3))
+    out = flash_attention_fwd(q, k, v, block_q=block_q, block_k=block_k)
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_fwd_bf16():
+    q, k, v = (rnd(i, (2, 32, 16), jnp.bfloat16) for i in range(3))
+    out = flash_attention_fwd(q, k, v)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        out.astype(jnp.float32),
+        ref.attention_ref(q, k, v).astype(jnp.float32),
+        rtol=3e-2,
+        atol=3e-2,
+    )
+
+
+def test_flash_causality():
+    """Future K/V rows must not influence earlier outputs."""
+    q, k, v = (rnd(i, (1, 32, 8)) for i in range(3))
+    out1 = flash_attention_fwd(q, k, v)
+    k2 = k.at[:, 20:].set(99.0)
+    v2 = v.at[:, 20:].set(-99.0)
+    out2 = flash_attention_fwd(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :20], out2[:, :20], rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), s=st.sampled_from([16, 32]))
+def test_flash_vjp_matches_ref_grads(seed, s):
+    q, k, v = (rnd(seed + i, (2, s, 8)) for i in range(3))
+
+    def loss_k(q, k, v):
+        return (flash_attention(q, k, v) ** 2).sum()
+
+    def loss_r(q, k, v):
+        return (ref.attention_ref(q, k, v) ** 2).sum()
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    bh=st.sampled_from([1, 4, 8]),
+    smax=st.sampled_from([32, 64, 128]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+    frac=st.floats(0.0, 1.0),
+)
+def test_decode_matches_ref(bh, smax, dh, seed, frac):
+    pos = int(frac * (smax - 1))
+    q = rnd(seed, (bh, dh))
+    k = rnd(seed + 1, (bh, smax, dh))
+    v = rnd(seed + 2, (bh, smax, dh))
+    out = decode_attention(q, k, v, jnp.array([pos], jnp.int32))
+    np.testing.assert_allclose(
+        out, ref.decode_attention_ref(q, k, v, pos), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_decode_ignores_stale_cache():
+    """Entries beyond `pos` are garbage from earlier sequences — must not leak."""
+    q = rnd(0, (2, 8))
+    k = rnd(1, (2, 64, 8))
+    v = rnd(2, (2, 64, 8))
+    pos = jnp.array([10], jnp.int32)
+    out1 = decode_attention(q, k, v, pos)
+    k2 = k.at[:, 11:].set(1e6)
+    v2 = v.at[:, 11:].set(-1e6)
+    out2 = decode_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_block_invariance():
+    q, k, v = rnd(0, (4, 16)), rnd(1, (4, 96, 16)), rnd(2, (4, 96, 16))
+    pos = jnp.array([77], jnp.int32)
+    a = decode_attention(q, k, v, pos, block_k=16)
+    b = decode_attention(q, k, v, pos, block_k=96)
+    np.testing.assert_allclose(a, b, rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([4, 32, 96]),
+    d=st.sampled_from([16, 48, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_matches_ref(n, d, seed):
+    x = rnd(seed, (n, d), scale=3.0)
+    g = rnd(seed + 1, (d,)) + 1.0
+    b = rnd(seed + 2, (d,))
+    np.testing.assert_allclose(layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=2e-5, atol=2e-5)
+
+
+def test_layernorm_output_stats():
+    x = rnd(7, (64, 256), scale=10.0)
+    y = layernorm(x, jnp.ones(256), jnp.zeros(256))
+    np.testing.assert_allclose(np.mean(y, -1), np.zeros(64), atol=1e-5)
+    np.testing.assert_allclose(np.std(y, -1), np.ones(64), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused adam
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 5, 4096, 5000]),
+    t=st.integers(1, 100),
+    seed=st.integers(0, 2**16),
+    wd=st.sampled_from([0.0, 0.01]),
+)
+def test_adam_matches_ref(n, t, seed, wd):
+    p = rnd(seed, (n,))
+    m = rnd(seed + 1, (n,), scale=0.1)
+    v = jnp.abs(rnd(seed + 2, (n,), scale=0.01))
+    g = rnd(seed + 3, (n,))
+    lr, b1, b2, eps = 1e-3, 0.9, 0.95, 1e-8
+    hyper = jnp.array([lr, b1, b2, eps, wd, t, 0, 0], jnp.float32)
+    out = adam_update(p, m, v, g, hyper)
+    expect = ref.adam_ref(p, m, v, g, lr, b1, b2, eps, wd, float(t))
+    for a, b in zip(out, expect):
+        np.testing.assert_allclose(a, b, rtol=3e-5, atol=3e-5)
+
+
+def test_adam_descends_quadratic():
+    """200 fused-Adam steps on f(p)=||p||² must shrink the iterate."""
+    p = rnd(0, (64,), scale=2.0)
+    m = jnp.zeros(64)
+    v = jnp.zeros(64)
+    for t in range(1, 201):
+        g = 2.0 * p
+        hyper = jnp.array([0.05, 0.9, 0.999, 1e-8, 0.0, t, 0, 0], jnp.float32)
+        p, m, v = adam_update(p, m, v, g, hyper)
+    assert float(jnp.abs(p).max()) < 0.05

@@ -1,0 +1,78 @@
+//! Bench: L3 hot paths that must never bottleneck the artifacts — samplers,
+//! GAE/reward shaping, data synthesis, partition planning, JSON parsing.
+//! `cargo bench --bench hot_paths`.
+
+use dschat::coordinator::gae;
+use dschat::data::synthetic::TaskGen;
+use dschat::data::{Blend, DataSplit};
+use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::util::bench::Bench;
+use dschat::util::json::Json;
+use dschat::util::rng::Rng;
+use dschat::zero::partition;
+
+fn main() {
+    println!("== L3 hot paths ==");
+    let b = Bench::default();
+    let mut rng = Rng::new(0);
+
+    // Sampler over a realistic logits row (vocab 512, top-k+top-p on).
+    let logits: Vec<f32> = (0..512).map(|_| rng.normal() as f32 * 3.0).collect();
+    let history: Vec<i32> = (0..64).map(|_| rng.below(512) as i32).collect();
+    let mut sampler = Sampler::new(
+        SamplerConfig {
+            temperature: 0.9,
+            top_k: 50,
+            top_p: 0.95,
+            repetition_penalty: 1.1,
+            ..Default::default()
+        },
+        1,
+    );
+    b.run("sampler_topk_topp_v512", || {
+        std::hint::black_box(sampler.sample(&logits, &history));
+    })
+    .print(Some((1.0, "tokens")));
+
+    // GAE + whiten over a [64, 511] batch (a `medium`-scale PPO batch).
+    let n = 511;
+    let rewards: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let values: Vec<f32> = (0..=n).map(|_| rng.normal() as f32).collect();
+    b.run("gae_seq511", || {
+        std::hint::black_box(gae::gae(&rewards, &values, 1.0, 0.95));
+    })
+    .print(Some((n as f64, "tokens")));
+
+    let mut adv: Vec<f32> = (0..64 * n).map(|_| rng.normal() as f32).collect();
+    let mask = vec![1.0f32; 64 * n];
+    b.run("whiten_64x511", || {
+        let mut a = adv.clone();
+        gae::whiten(&mut a, &mask);
+        std::hint::black_box(a);
+    })
+    .print(Some((64.0 * n as f64, "tokens")));
+    adv.truncate(0);
+
+    // Data synthesis: a full SFT batch (b=64) through the blend machinery.
+    let task = TaskGen::new(512, 64, 64);
+    let mut blend = Blend::new(vec![(task, 1.0)], DataSplit::new(2.0, 4.0, 4.0));
+    b.run("blend_sft_batch_b64_s128", || {
+        std::hint::black_box(blend.sft_batch(&mut rng, 64));
+    })
+    .print(Some((64.0, "seqs")));
+
+    // ZeRO partition planning at 175B/1024-way.
+    b.run("zero_partition_175b_1024way", || {
+        std::hint::black_box(partition(175_000_000_000usize / 4, 1024));
+    })
+    .print(None);
+
+    // Manifest-scale JSON parse.
+    let manifest = std::fs::read_to_string("artifacts/tiny/manifest.json").ok();
+    if let Some(text) = manifest {
+        b.run("json_parse_manifest", || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        })
+        .print(Some((text.len() as f64, "bytes")));
+    }
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate each paper figure's data series — one bench per figure
+//! (3, 4, 5, 6, 7). `cargo bench --bench paper_figures`.
+
+use dschat::report;
+use dschat::util::bench::Bench;
+
+fn main() {
+    println!("== paper figures (simulator) ==");
+    let b = Bench::quick();
+    b.run("figure3_single_gpu_throughput", || {
+        assert!(!report::figure3().rows.is_empty());
+    })
+    .print(None);
+    b.run("figure4_node_throughput", || {
+        assert!(!report::figure4().rows.is_empty());
+    })
+    .print(None);
+    b.run("figure5_phase_breakdown", || {
+        assert!(!report::figure5().rows.is_empty());
+    })
+    .print(None);
+    b.run("figure6_effective_tflops", || {
+        assert!(!report::figure6().rows.is_empty());
+    })
+    .print(None);
+    b.run("figure7_scalability", || {
+        assert_eq!(report::figure7().len(), 2);
+    })
+    .print(None);
+
+    println!("\n-- regenerated output --\n");
+    for t in report::all_figures() {
+        t.print();
+    }
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate each paper table and time the simulator paths — one
+//! bench per table (Tables 1, 2, 3, 4–6). `cargo bench --bench paper_tables`.
+
+use dschat::report;
+use dschat::util::bench::Bench;
+
+fn main() {
+    println!("== paper tables (simulator) ==");
+    let b = Bench::quick();
+    b.run("table1_single_node", || {
+        let t = report::table1();
+        assert!(!t.rows.is_empty());
+    })
+    .print(None);
+    b.run("table2_multi_node", || {
+        let t = report::table2();
+        assert!(!t.rows.is_empty());
+    })
+    .print(None);
+    b.run("table3_max_model", || {
+        let t = report::table3();
+        assert_eq!(t.rows.len(), 1);
+    })
+    .print(None);
+    b.run("tables456_breakdowns", || {
+        let ts = report::tables456();
+        assert_eq!(ts.len(), 3);
+    })
+    .print(None);
+
+    println!("\n-- regenerated output --\n");
+    for t in report::all_tables() {
+        t.print();
+    }
+}

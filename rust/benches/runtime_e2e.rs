@@ -1,0 +1,101 @@
+//! Bench: the real artifact hot paths end-to-end on the CPU PJRT backend —
+//! decode step (the generation hot loop), full-batch forwards, SFT/PPO train
+//! steps, and the generation-vs-naive Figure-5 analogue.
+//! Requires `make artifacts`. `cargo bench --bench runtime_e2e`.
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use dschat::data::synthetic::TaskGen;
+use dschat::data::{Blend, DataSplit};
+use dschat::examples_support::naive_generate;
+use dschat::hybrid::HybridEngine;
+use dschat::runtime::Engine;
+use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::util::bench::Bench;
+use dschat::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // cargo bench passes `--bench`; skip flags when looking for a dir arg.
+    let dir = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or_else(|| "artifacts/tiny".into());
+    println!("== runtime e2e ({dir}) ==");
+    let engine = Rc::new(Engine::cpu()?);
+    let mut he = HybridEngine::init(engine, &dir, 0, true)?;
+    let m = he.manifest();
+    let (bsz, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut blend = Blend::new(vec![(task.clone(), 1.0)], DataSplit::new(2.0, 4.0, 4.0));
+    let mut rng = Rng::new(0);
+    let b = Bench { budget: Duration::from_secs(3), ..Default::default() };
+
+    // Generation (hybrid path) — tokens/sec is the paper's generation-phase
+    // throughput metric.
+    let mut flat = Vec::with_capacity(bsz * sp);
+    for _ in 0..bsz {
+        flat.extend_from_slice(&task.sample_prompt(&mut rng).tokens);
+    }
+    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+    b.run("generate_hybrid_kv_cache", || {
+        std::hint::black_box(he.generate(&flat, &mut sampler).unwrap());
+    })
+    .print(Some(((bsz * sg) as f64, "tokens")));
+
+    // Naive baseline (full recompute per token) — the Figure-5 comparison.
+    b.run("generate_naive_recompute", || {
+        std::hint::black_box(naive_generate(&mut he, &flat, &mut sampler).unwrap());
+    })
+    .print(Some(((bsz * sg) as f64, "tokens")));
+
+    // Experience scoring forwards.
+    let batch = blend.sft_batch(&mut rng, bsz);
+    b.run("logprobs_forward", || {
+        std::hint::black_box(he.actor_logprobs(&batch.tokens).unwrap());
+    })
+    .print(Some(((bsz * (sp + sg)) as f64, "tokens")));
+
+    // Train steps.
+    b.run("sft_step", || {
+        std::hint::black_box(he.sft_step(&batch, 1e-3).unwrap());
+    })
+    .print(Some(((bsz * (sp + sg)) as f64, "tokens")));
+
+    let pb = blend.pair_batch(&mut rng, bsz);
+    b.run("rm_step", || {
+        std::hint::black_box(he.rm_step(&pb, 1e-3).unwrap());
+    })
+    .print(Some(((2 * bsz * (sp + sg)) as f64, "tokens")));
+
+    let s = sp + sg;
+    let w = s - 1;
+    let old_logp = vec![-1.0f32; bsz * w];
+    let adv = vec![0.1f32; bsz * w];
+    let mask = vec![1.0f32; bsz * w];
+    b.run("ppo_actor_step", || {
+        std::hint::black_box(
+            he.ppo_actor_step(&batch.tokens, &old_logp, &adv, &mask, &batch.tokens, 0.2, 0.2, 1e-4)
+                .unwrap(),
+        );
+    })
+    .print(Some(((bsz * s) as f64, "tokens")));
+
+    b.run("ema_update", || {
+        he.ema_update(0.992).unwrap();
+    })
+    .print(None);
+
+    // Executor overhead accounting (upload/exec/fetch split).
+    println!("\n-- engine stats (cumulative) --");
+    for (name, st) in he.engine.stats() {
+        println!(
+            "{name:<22} calls {:>6}  exec {:>9}  fetch {:>9}  upload {:>9}",
+            st.calls,
+            dschat::util::fmt_duration(st.exec_secs),
+            dschat::util::fmt_duration(st.fetch_secs),
+            dschat::util::fmt_duration(st.upload_secs),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! Configuration: the OPT model zoo (paper scales for the simulator, real
+//! small scales for the CPU runs), training recipes, and the PPO/RLHF
+//! hyper-parameters. Mirrors `python/compile/configs.py` for the real runs.
+
+pub mod recipe;
+
+pub use recipe::{PpoConfig, TrainRecipe};
+
+/// Decoder-only transformer architecture shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameters (tied LM head; matches `configs.py::n_params`).
+    pub fn n_params(&self) -> u64 {
+        let (d, v, s, ff) = (
+            self.d_model as u64,
+            self.vocab as u64,
+            self.max_seq as u64,
+            self.d_ff as u64,
+        );
+        let per_layer = 4 * d * d + 2 * d * ff + ff + d + 4 * d;
+        v * d + s * d + self.n_layers as u64 * per_layer + 2 * d
+    }
+
+    /// FLOPs for one forward pass over `tokens` tokens (2·params·tokens,
+    /// attention quadratic term included separately).
+    pub fn fwd_flops(&self, tokens: u64, seq_len: u64) -> u64 {
+        let matmul = 2 * self.n_params() * tokens;
+        // attention scores+context: 2 * 2 * s * d per token
+        let attn = 4 * tokens * seq_len * self.d_model as u64;
+        matmul + attn
+    }
+
+    /// FLOPs for forward+backward (the standard 3x forward approximation).
+    pub fn fwd_bwd_flops(&self, tokens: u64, seq_len: u64) -> u64 {
+        3 * self.fwd_flops(tokens, seq_len)
+    }
+
+    /// Bytes read per generated token in the decode phase (every parameter
+    /// once, fp16) — the paper's "memory-bandwidth-bound" generation model.
+    pub fn decode_bytes_per_token(&self, dtype_bytes: u64) -> u64 {
+        self.n_params() * dtype_bytes
+    }
+
+    /// KV-cache bytes for a batch at full sequence length.
+    pub fn kv_cache_bytes(&self, batch: u64, seq: u64, dtype_bytes: u64) -> u64 {
+        2 * self.n_layers as u64 * batch * seq * self.d_model as u64 * dtype_bytes
+    }
+}
+
+/// The OPT family at the paper's scales (OPT paper table 1) plus the small
+/// real configs that ship as AOT artifacts.
+pub fn model_zoo() -> Vec<ModelConfig> {
+    let opt = |name: &str, l, d, h| ModelConfig {
+        name: name.into(),
+        vocab: 50272,
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_ff: 4 * d,
+        max_seq: 2048,
+    };
+    let real = |name: &str, v, d, l, h, ff, s| ModelConfig {
+        name: name.into(),
+        vocab: v,
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_ff: ff,
+        max_seq: s,
+    };
+    vec![
+        // paper scales (simulator)
+        opt("opt-125m", 12, 768, 12),
+        opt("opt-350m", 24, 1024, 16),
+        opt("opt-1.3b", 24, 2048, 32),
+        opt("opt-2.7b", 32, 2560, 32),
+        opt("opt-6.7b", 32, 4096, 32),
+        opt("opt-13b", 40, 5120, 40),
+        opt("opt-30b", 48, 7168, 56),
+        opt("opt-66b", 64, 9216, 72),
+        opt("opt-175b", 96, 12288, 96),
+        // real AOT scales (mirror python/compile/configs.py)
+        real("nano", 256, 32, 1, 2, 64, 64),
+        real("tiny", 256, 64, 2, 2, 256, 64),
+        real("small", 512, 128, 4, 4, 512, 128),
+        real("base", 512, 256, 6, 8, 1024, 128),
+        real("medium", 512, 512, 8, 8, 2048, 256),
+    ]
+}
+
+pub fn model(name: &str) -> ModelConfig {
+    model_zoo()
+        .into_iter()
+        .find(|m| m.name == name)
+        .unwrap_or_else(|| panic!("unknown model {name:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opt_param_counts_match_published() {
+        // Published OPT sizes; tolerate ±10% (embedding conventions differ).
+        for (name, published) in [
+            ("opt-125m", 125e6),
+            ("opt-350m", 350e6),
+            ("opt-1.3b", 1.3e9),
+            ("opt-2.7b", 2.7e9),
+            ("opt-6.7b", 6.7e9),
+            ("opt-13b", 13e9),
+            ("opt-30b", 30e9),
+            ("opt-66b", 66e9),
+            ("opt-175b", 175e9),
+        ] {
+            let n = model(name).n_params() as f64;
+            let ratio = n / published;
+            assert!(
+                (0.9..1.15).contains(&ratio),
+                "{name}: computed {n:.3e} vs published {published:.3e} (ratio {ratio:.3})"
+            );
+        }
+    }
+
+    #[test]
+    fn real_configs_match_python() {
+        // Mirror of python/compile/configs.py — keep in lockstep.
+        let t = model("tiny");
+        assert_eq!((t.vocab, t.d_model, t.n_layers, t.n_heads, t.d_ff, t.max_seq),
+                   (256, 64, 2, 2, 256, 64));
+        let b = model("base");
+        assert_eq!((b.vocab, b.d_model, b.n_layers), (512, 256, 6));
+    }
+
+    #[test]
+    fn flops_scale_linearly_in_tokens() {
+        let m = model("opt-1.3b");
+        assert_eq!(m.fwd_flops(2000, 512), 2 * m.fwd_flops(1000, 512));
+    }
+
+    #[test]
+    fn kv_cache_example() {
+        // 1.3B, batch 8, seq 512, fp16: 2*24*8*512*2048*2 = 805 MiB
+        let m = model("opt-1.3b");
+        assert_eq!(m.kv_cache_bytes(8, 512, 2), 2 * 24 * 8 * 512 * 2048 * 2);
+    }
+}

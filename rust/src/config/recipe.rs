@@ -1,0 +1,136 @@
+//! Training recipes: the knobs `train.py` exposes, mirroring DeepSpeed-Chat's
+//! three-step pipeline options (§3 of the paper), including the two features
+//! other frameworks omit: EMA collection and mixture (ptx) training.
+
+/// PPO / Step-3 hyper-parameters (InstructGPT defaults).
+#[derive(Debug, Clone)]
+pub struct PpoConfig {
+    /// PPO clip epsilon for both actor ratio and critic value clipping.
+    pub clip_eps: f32,
+    /// KL penalty coefficient against the frozen reference policy.
+    pub kl_coef: f32,
+    /// GAE discount.
+    pub gamma: f32,
+    /// GAE lambda.
+    pub lam: f32,
+    /// PPO epochs per experience batch.
+    pub ppo_epochs: usize,
+    /// Mixture-training (pretraining objective) coefficient; 0 disables.
+    pub ptx_coef: f32,
+    /// EMA decay for checkpoint collection; None disables EMA.
+    pub ema_decay: Option<f32>,
+    /// Apply the EMA artifact every k iterations with decay^k (§Perf: the
+    /// EMA step is fetch-bound — every param round-trips the tuple output —
+    /// so amortizing it across iterations buys back wall-clock at equal
+    /// effective decay).
+    pub ema_interval: usize,
+    /// Clip the per-token KL-shaped reward to this magnitude.
+    pub reward_clip: f32,
+    /// Whiten advantages per batch.
+    pub whiten_advantages: bool,
+    /// Sampling temperature during experience generation.
+    pub temperature: f32,
+    /// Top-k during experience generation (0 = disabled).
+    pub top_k: usize,
+    /// Top-p during experience generation (1.0 = disabled).
+    pub top_p: f32,
+}
+
+impl Default for PpoConfig {
+    fn default() -> Self {
+        PpoConfig {
+            clip_eps: 0.2,
+            kl_coef: 0.1,
+            gamma: 1.0,
+            lam: 0.95,
+            ppo_epochs: 1,
+            ptx_coef: 0.0,
+            ema_decay: Some(0.992),
+            ema_interval: 1,
+            reward_clip: 5.0,
+            whiten_advantages: true,
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+        }
+    }
+}
+
+/// The full three-step recipe.
+#[derive(Debug, Clone)]
+pub struct TrainRecipe {
+    pub run: String,
+    pub seed: u64,
+    pub sft_steps: usize,
+    pub sft_lr: f32,
+    pub rm_steps: usize,
+    pub rm_lr: f32,
+    pub ppo_iters: usize,
+    pub actor_lr: f32,
+    pub critic_lr: f32,
+    pub ppo: PpoConfig,
+    /// Warmup fraction of total steps for the linear LR schedule.
+    pub warmup_frac: f32,
+}
+
+impl Default for TrainRecipe {
+    fn default() -> Self {
+        TrainRecipe {
+            run: "tiny".into(),
+            seed: 0,
+            sft_steps: 200,
+            sft_lr: 3e-3,
+            rm_steps: 150,
+            rm_lr: 2e-3,
+            ppo_iters: 100,
+            actor_lr: 3e-4,
+            critic_lr: 1e-3,
+            ppo: PpoConfig::default(),
+            warmup_frac: 0.05,
+        }
+    }
+}
+
+impl TrainRecipe {
+    /// Linear warmup then linear decay to 10% — the schedule DeepSpeed-Chat's
+    /// examples use.
+    pub fn lr_at(&self, base: f32, step: usize, total: usize) -> f32 {
+        let total = total.max(1);
+        let warmup = ((total as f32 * self.warmup_frac) as usize).max(1);
+        if step < warmup {
+            base * (step + 1) as f32 / warmup as f32
+        } else {
+            let t = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+            base * (1.0 - 0.9 * t.min(1.0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let r = TrainRecipe::default();
+        let base = 1.0;
+        let total = 100;
+        // warmup rises
+        assert!(r.lr_at(base, 0, total) < r.lr_at(base, 4, total));
+        // peak near warmup end
+        let peak = r.lr_at(base, 5, total);
+        assert!((peak - base).abs() < 0.05, "{peak}");
+        // decays to ~10%
+        let last = r.lr_at(base, total - 1, total);
+        assert!((0.08..0.2).contains(&last), "{last}");
+    }
+
+    #[test]
+    fn lr_never_negative_or_above_base() {
+        let r = TrainRecipe::default();
+        for s in 0..500 {
+            let lr = r.lr_at(2.0, s, 200);
+            assert!(lr > 0.0 && lr <= 2.0 + 1e-6, "step {s}: {lr}");
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Generalized Advantage Estimation and reward shaping — the L3 scalar math
+//! between experience generation and the PPO updates.
+//!
+//! InstructGPT-style reward: per-token r_t = -kl_coef * (logp - ref_logp),
+//! plus the reward-model score added at the final response token, clipped.
+
+/// One sequence's per-token PPO inputs over the response region.
+#[derive(Debug, Clone, Default)]
+pub struct SeqAdvantage {
+    pub advantages: Vec<f32>,
+    pub returns: Vec<f32>,
+}
+
+/// KL-shaped per-token rewards for one sequence's response region.
+///
+/// `logp`/`ref_logp` are the response-region slices (length = response len);
+/// `rm_score` lands on the last token.
+pub fn shaped_rewards(
+    logp: &[f32],
+    ref_logp: &[f32],
+    rm_score: f32,
+    kl_coef: f32,
+    clip: f32,
+) -> Vec<f32> {
+    assert_eq!(logp.len(), ref_logp.len());
+    let n = logp.len();
+    let mut r: Vec<f32> = logp
+        .iter()
+        .zip(ref_logp)
+        .map(|(l, rl)| -kl_coef * (l - rl))
+        .collect();
+    if n > 0 {
+        r[n - 1] += rm_score.clamp(-clip, clip);
+    }
+    r
+}
+
+/// O(n) GAE over one sequence. `values` has length n+1 (bootstrap value at
+/// the end; pass 0.0 for terminal sequences).
+pub fn gae(rewards: &[f32], values: &[f32], gamma: f32, lam: f32) -> SeqAdvantage {
+    let n = rewards.len();
+    assert_eq!(values.len(), n + 1, "values must include the bootstrap");
+    let mut adv = vec![0.0f32; n];
+    let mut last = 0.0f32;
+    for t in (0..n).rev() {
+        let delta = rewards[t] + gamma * values[t + 1] - values[t];
+        last = delta + gamma * lam * last;
+        adv[t] = last;
+    }
+    let returns = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    SeqAdvantage { advantages: adv, returns }
+}
+
+/// Quadratic-time reference implementation (tests pin `gae` against this).
+pub fn gae_reference(rewards: &[f32], values: &[f32], gamma: f32, lam: f32) -> Vec<f32> {
+    let n = rewards.len();
+    let mut adv = vec![0.0f32; n];
+    for t in 0..n {
+        let mut acc = 0.0f32;
+        for l in 0..(n - t) {
+            let delta = rewards[t + l] + gamma * values[t + l + 1] - values[t + l];
+            acc += (gamma * lam).powi(l as i32) * delta;
+        }
+        adv[t] = acc;
+    }
+    adv
+}
+
+/// Whiten to zero mean / unit variance over the masked entries (standard
+/// PPO advantage normalization; the mean-shift keeps gradients centered).
+pub fn whiten(xs: &mut [f32], mask: &[f32]) {
+    assert_eq!(xs.len(), mask.len());
+    let count: f32 = mask.iter().sum();
+    if count < 2.0 {
+        return;
+    }
+    let mean: f32 = xs.iter().zip(mask).map(|(x, m)| x * m).sum::<f32>() / count;
+    let var: f32 = xs
+        .iter()
+        .zip(mask)
+        .map(|(x, m)| m * (x - mean) * (x - mean))
+        .sum::<f32>()
+        / count;
+    let inv = 1.0 / (var.sqrt() + 1e-8);
+    for (x, m) in xs.iter_mut().zip(mask) {
+        if *m > 0.0 {
+            *x = (*x - mean) * inv;
+        } else {
+            *x = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gae_matches_reference() {
+        Prop::new(200).check("gae == O(n^2) reference", |rng| {
+            let n = 1 + rng.below(32) as usize;
+            let rewards: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let values: Vec<f32> = (0..=n).map(|_| rng.normal() as f32).collect();
+            let gamma = rng.f32();
+            let lam = rng.f32();
+            let fast = gae(&rewards, &values, gamma, lam);
+            let slow = gae_reference(&rewards, &values, gamma, lam);
+            for (a, b) in fast.advantages.iter().zip(&slow) {
+                prop_assert!((a - b).abs() < 1e-4, "gae mismatch: {a} vs {b}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn returns_equal_adv_plus_value() {
+        let rewards = vec![1.0, 0.5, -0.5];
+        let values = vec![0.1, 0.2, 0.3, 0.0];
+        let out = gae(&rewards, &values, 0.99, 0.95);
+        for t in 0..3 {
+            assert!((out.returns[t] - (out.advantages[t] + values[t])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn single_step_gae_is_td_error() {
+        let out = gae(&[2.0], &[0.5, 0.25], 0.9, 0.95);
+        assert!((out.advantages[0] - (2.0 + 0.9 * 0.25 - 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perfect_critic_zero_advantage() {
+        // If V(s_t) exactly equals discounted future rewards, advantages = 0.
+        let gamma = 1.0;
+        let rewards = vec![1.0, 1.0, 1.0];
+        let values = vec![3.0, 2.0, 1.0, 0.0];
+        let out = gae(&rewards, &values, gamma, 0.95);
+        for a in out.advantages {
+            assert!(a.abs() < 1e-6, "{a}");
+        }
+    }
+
+    #[test]
+    fn shaped_rewards_kl_and_score() {
+        let logp = vec![-1.0, -2.0];
+        let ref_logp = vec![-1.5, -1.0];
+        let r = shaped_rewards(&logp, &ref_logp, 10.0, 0.1, 5.0);
+        // token 0: -0.1 * (-1.0 - -1.5) = -0.05
+        assert!((r[0] + 0.05).abs() < 1e-6, "{}", r[0]);
+        // token 1: -0.1 * (-2.0 - -1.0) = +0.1, plus clipped score 5.0
+        assert!((r[1] - 5.1).abs() < 1e-6, "{}", r[1]);
+    }
+
+    #[test]
+    fn whiten_statistics() {
+        let mut rng = Rng::new(1);
+        let n = 512;
+        let mut xs: Vec<f32> = (0..n).map(|_| 3.0 + 2.0 * rng.normal() as f32).collect();
+        let mask = vec![1.0; n];
+        whiten(&mut xs, &mask);
+        let mean: f32 = xs.iter().sum::<f32>() / n as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 1e-3, "{mean}");
+        assert!((var - 1.0).abs() < 1e-2, "{var}");
+    }
+
+    #[test]
+    fn whiten_zeroes_masked_positions() {
+        let mut xs = vec![5.0, -2.0, 7.0, 1.0];
+        let mask = vec![1.0, 0.0, 1.0, 1.0];
+        whiten(&mut xs, &mask);
+        assert_eq!(xs[1], 0.0);
+    }
+
+    #[test]
+    fn whiten_short_input_noop() {
+        let mut xs = vec![5.0];
+        whiten(&mut xs, &[1.0]);
+        assert_eq!(xs, vec![5.0]);
+    }
+}

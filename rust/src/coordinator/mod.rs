@@ -1,0 +1,289 @@
+//! The PPO coordinator: orchestrates one Step-3 RLHF iteration end to end —
+//! the `generate_experience` / `train_rlhf` loop of the paper's §2.3 API —
+//! on top of the hybrid engine.
+//!
+//! Each iteration:
+//!   1. **Experience** (inference mode): sample prompts, generate responses,
+//!      score them with the frozen RM, collect old/ref log-probs + values.
+//!   2. **Shaping** (rust): KL-penalized per-token rewards, GAE advantages
+//!      and returns, optional whitening.
+//!   3. **Training** (train mode): `ppo_epochs` of clipped actor + critic
+//!      updates, optional mixture (ptx) loss, optional EMA collection.
+
+pub mod gae;
+
+use anyhow::Result;
+
+use crate::config::PpoConfig;
+use crate::data::synthetic::{TaskGen, Vocab};
+use crate::data::{Blend, Prompt};
+use crate::hybrid::HybridEngine;
+use crate::sampling::{Sampler, SamplerConfig};
+use crate::util::rng::Rng;
+
+/// One experience batch, fully scored and shaped.
+#[derive(Debug, Clone)]
+pub struct Experience {
+    pub tokens: Vec<i32>,       // [b, s]
+    pub old_logp: Vec<f32>,     // [b, s-1]
+    pub advantages: Vec<f32>,   // [b, s-1] (masked)
+    pub returns: Vec<f32>,      // [b, s-1]
+    pub old_values: Vec<f32>,   // [b, s-1]
+    pub mask: Vec<f32>,         // [b, s-1] response-region mask
+    pub rm_scores: Vec<f32>,    // [b]
+    pub true_rewards: Vec<f32>, // [b] ground-truth task reward
+    pub mean_kl: f32,
+    pub resp_lens: Vec<usize>,  // [b]
+}
+
+/// Scalars logged per PPO iteration.
+#[derive(Debug, Clone, Default)]
+pub struct IterStats {
+    pub rm_score: f32,
+    pub true_reward: f32,
+    pub kl_to_ref: f32,
+    pub actor_loss: f32,
+    pub critic_loss: f32,
+    pub approx_kl: f32,
+    pub clipfrac: f32,
+    pub gen_secs: f64,
+    pub train_secs: f64,
+    pub gen_tokens: u64,
+}
+
+pub struct PpoTrainer {
+    pub cfg: PpoConfig,
+    pub sampler: Sampler,
+    /// Completed iterations (drives the EMA interval).
+    iters_done: usize,
+}
+
+impl PpoTrainer {
+    pub fn new(cfg: PpoConfig, seed: u64) -> Self {
+        let sampler = Sampler::new(
+            SamplerConfig {
+                temperature: cfg.temperature,
+                top_k: cfg.top_k,
+                top_p: cfg.top_p,
+                ..Default::default()
+            },
+            seed,
+        );
+        PpoTrainer { cfg, sampler, iters_done: 0 }
+    }
+
+    /// Find the response length (tokens up to and including EOS, capped at
+    /// gen_len) for one generated row.
+    pub fn response_len(seq: &[i32], prompt_len: usize) -> usize {
+        let gen = &seq[prompt_len..];
+        for (i, &t) in gen.iter().enumerate() {
+            if t == Vocab::EOS {
+                return i + 1;
+            }
+        }
+        gen.len()
+    }
+
+    /// Phase 1+2: generate and fully score an experience batch.
+    pub fn generate_experience(
+        &mut self,
+        he: &mut HybridEngine,
+        prompts: &[(TaskGen, Prompt)],
+    ) -> Result<Experience> {
+        let m = he.manifest();
+        let (b, sp, s) = (m.batch, m.prompt_len, m.seq_len);
+        assert_eq!(prompts.len(), b, "prompt batch must match artifact batch");
+
+        let gen_secs0 = he.stats.gen_secs;
+        let gen_tok0 = he.stats.gen_tokens;
+        let mut flat_prompts = Vec::with_capacity(b * sp);
+        for (_, p) in prompts {
+            flat_prompts.extend_from_slice(&p.tokens);
+        }
+        let tokens = he.generate(&flat_prompts, &mut self.sampler)?;
+
+        // Score: RM reward at last response token; logprobs/values over all.
+        let resp_lens: Vec<usize> =
+            (0..b).map(|i| Self::response_len(&tokens[i * s..(i + 1) * s], sp)).collect();
+        let lens: Vec<i32> = resp_lens.iter().map(|&l| (sp + l - 1) as i32).collect();
+        let rm_scores = he.rm_rewards(&tokens, &lens)?;
+        let old_logp = he.actor_logprobs(&tokens)?;
+        let ref_logp = he.ref_logprobs(&tokens)?;
+        let values = he.critic_values(&tokens)?; // [b, s]
+
+        // Ground-truth task reward (the oracle the paper can't have).
+        let true_rewards: Vec<f32> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, (g, p))| g.reward(p, &tokens[i * s + sp..(i + 1) * s]))
+            .collect();
+
+        // Response mask over next-token positions: prediction index j scores
+        // token j+1, so the response region is [sp-1, sp-1+len).
+        let w = s - 1;
+        let mut mask = vec![0.0f32; b * w];
+        for i in 0..b {
+            for j in 0..resp_lens[i] {
+                mask[i * w + sp - 1 + j] = 1.0;
+            }
+        }
+
+        // KL-shaped rewards + GAE per sequence.
+        let mut advantages = vec![0.0f32; b * w];
+        let mut returns = vec![0.0f32; b * w];
+        let mut kl_sum = 0.0f64;
+        let mut kl_n = 0.0f64;
+        for i in 0..b {
+            let len = resp_lens[i];
+            let lo = i * w + sp - 1;
+            let lp = &old_logp[lo..lo + len];
+            let rlp = &ref_logp[lo..lo + len];
+            kl_sum += lp.iter().zip(rlp).map(|(a, r)| (a - r) as f64).sum::<f64>();
+            kl_n += len as f64;
+            let rewards = gae::shaped_rewards(
+                lp,
+                rlp,
+                rm_scores[i],
+                self.cfg.kl_coef,
+                self.cfg.reward_clip,
+            );
+            // values for response positions + terminal bootstrap 0.
+            let mut vals = Vec::with_capacity(len + 1);
+            vals.extend_from_slice(&values[i * s + sp - 1..i * s + sp - 1 + len]);
+            vals.push(0.0);
+            let out = gae::gae(&rewards, &vals, self.cfg.gamma, self.cfg.lam);
+            advantages[lo..lo + len].copy_from_slice(&out.advantages);
+            returns[lo..lo + len].copy_from_slice(&out.returns);
+        }
+        if self.cfg.whiten_advantages {
+            gae::whiten(&mut advantages, &mask);
+        }
+
+        // old_values laid out [b, s-1] = values[:, :-1]
+        let mut old_values = vec![0.0f32; b * w];
+        for i in 0..b {
+            old_values[i * w..(i + 1) * w].copy_from_slice(&values[i * s..i * s + w]);
+        }
+
+        he.stats.train_tokens += 0; // (scoring counted as part of gen phase)
+        let _ = (gen_secs0, gen_tok0);
+        Ok(Experience {
+            tokens,
+            old_logp,
+            advantages,
+            returns,
+            old_values,
+            mask,
+            rm_scores,
+            true_rewards,
+            mean_kl: (kl_sum / kl_n.max(1.0)) as f32,
+            resp_lens,
+        })
+    }
+
+    /// Phase 3: PPO updates (+ mixture + EMA) over one experience batch.
+    pub fn train_rlhf(
+        &mut self,
+        he: &mut HybridEngine,
+        exp: &Experience,
+        blend: &mut Blend,
+        rng: &mut Rng,
+        actor_lr: f32,
+        critic_lr: f32,
+    ) -> Result<IterStats> {
+        let mut stats = IterStats {
+            rm_score: mean(&exp.rm_scores),
+            true_reward: mean(&exp.true_rewards),
+            kl_to_ref: exp.mean_kl,
+            ..Default::default()
+        };
+        let m = he.manifest();
+        let b = m.batch;
+        for _ in 0..self.cfg.ppo_epochs {
+            let ptx = blend.ptx_batch(rng, b);
+            let out = he.ppo_actor_step(
+                &exp.tokens,
+                &exp.old_logp,
+                &exp.advantages,
+                &exp.mask,
+                &ptx.tokens,
+                self.cfg.clip_eps,
+                self.cfg.ptx_coef,
+                actor_lr,
+            )?;
+            stats.actor_loss = out.loss;
+            stats.approx_kl = out.approx_kl;
+            stats.clipfrac = out.clipfrac;
+            stats.critic_loss = he.ppo_critic_step(
+                &exp.tokens,
+                &exp.returns,
+                &exp.old_values,
+                &exp.mask,
+                self.cfg.clip_eps,
+                critic_lr,
+            )?;
+        }
+        if let Some(decay) = self.cfg.ema_decay {
+            let k = self.cfg.ema_interval.max(1);
+            self.iters_done += 1;
+            if self.iters_done % k == 0 {
+                // decay^k keeps the effective horizon identical to per-iter
+                // updates while amortizing the fetch-bound EMA artifact.
+                he.ema_update(decay.powi(k as i32))?;
+            }
+        }
+        Ok(stats)
+    }
+
+    /// One full PPO iteration (the paper's §2.3 two-call API).
+    pub fn iteration(
+        &mut self,
+        he: &mut HybridEngine,
+        blend: &mut Blend,
+        rng: &mut Rng,
+        actor_lr: f32,
+        critic_lr: f32,
+    ) -> Result<IterStats> {
+        let b = he.manifest().batch;
+        let prompts = blend.prompt_batch(rng, b);
+        let gen0 = (he.stats.gen_secs, he.stats.gen_tokens, he.stats.train_secs);
+        let exp = self.generate_experience(he, &prompts)?;
+        let mut stats = self.train_rlhf(he, &exp, blend, rng, actor_lr, critic_lr)?;
+        stats.gen_secs = he.stats.gen_secs - gen0.0;
+        stats.gen_tokens = he.stats.gen_tokens - gen0.1;
+        stats.train_secs = he.stats.train_secs - gen0.2;
+        Ok(stats)
+    }
+}
+
+fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_len_finds_eos() {
+        let sp = 4;
+        let seq = [1, 1, 1, 1, 10, 11, Vocab::EOS, 0, 0, 0];
+        assert_eq!(PpoTrainer::response_len(&seq, sp), 3);
+    }
+
+    #[test]
+    fn response_len_caps_at_gen_len() {
+        let sp = 2;
+        let seq = [1, 1, 10, 11, 12, 13];
+        assert_eq!(PpoTrainer::response_len(&seq, sp), 4);
+    }
+
+    #[test]
+    fn mean_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+}

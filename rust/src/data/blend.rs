@@ -1,0 +1,266 @@
+//! Data abstraction & blending (paper §3): multiple data sources are
+//! blended by weight and *split* across the three training stages so no
+//! stage trains on another stage's examples — the paper's
+//! "splitting/blending" capability.
+
+use crate::util::rng::Rng;
+
+use super::synthetic::TaskGen;
+use super::{PairBatch, TokenBatch};
+
+/// The three pipeline stages data must be partitioned across.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Sft = 0,
+    Reward = 1,
+    Rlhf = 2,
+}
+
+/// Deterministic example→stage assignment: example ids are hashed into
+/// [0,1) and bucketed by the cumulative split fractions, so the split is
+/// stable across runs and sources (mirrors DeepSpeed-Chat's
+/// `data_split="2,4,4"`-style config).
+#[derive(Debug, Clone)]
+pub struct DataSplit {
+    fracs: [f64; 3],
+}
+
+impl DataSplit {
+    /// e.g. `DataSplit::new(2.0, 4.0, 4.0)` — proportions, not fractions.
+    pub fn new(sft: f64, reward: f64, rlhf: f64) -> Self {
+        let total = sft + reward + rlhf;
+        assert!(total > 0.0);
+        DataSplit { fracs: [sft / total, reward / total, rlhf / total] }
+    }
+
+    pub fn frac(&self, stage: Stage) -> f64 {
+        self.fracs[stage as usize]
+    }
+
+    /// Which stage does example `id` belong to?
+    pub fn assign(&self, id: u64) -> Stage {
+        // splitmix64 finalizer as the hash
+        let mut z = id.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^= z >> 31;
+        let u = (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < self.fracs[0] {
+            Stage::Sft
+        } else if u < self.fracs[0] + self.fracs[1] {
+            Stage::Reward
+        } else {
+            Stage::Rlhf
+        }
+    }
+}
+
+/// A weighted blend of task sources. Every batch draws each row's source
+/// i.i.d. by weight, and each row's example id is tagged with the stage so
+/// the split is respected.
+pub struct Blend {
+    sources: Vec<(TaskGen, f64)>,
+    split: DataSplit,
+    /// Monotone example counter per stage (drives deterministic ids).
+    next_id: [u64; 3],
+}
+
+impl Blend {
+    pub fn new(sources: Vec<(TaskGen, f64)>, split: DataSplit) -> Self {
+        assert!(!sources.is_empty());
+        let total: f64 = sources.iter().map(|(_, w)| w).sum();
+        assert!(total > 0.0, "blend weights must be positive");
+        let sources = sources
+            .into_iter()
+            .map(|(g, w)| (g, w / total))
+            .collect();
+        Blend { sources, split, next_id: [0; 3] }
+    }
+
+    /// All sources must share shapes; return them.
+    pub fn shapes(&self) -> (usize, usize) {
+        let g = &self.sources[0].0;
+        (g.prompt_len, g.gen_len)
+    }
+
+    fn pick_source(&self, rng: &mut Rng) -> &TaskGen {
+        let u = rng.f64();
+        let mut cum = 0.0;
+        for (g, w) in &self.sources {
+            cum += w;
+            if u < cum {
+                return g;
+            }
+        }
+        &self.sources.last().unwrap().0
+    }
+
+    /// Draw a fresh example id for `stage`, skipping ids the split assigns
+    /// elsewhere (rejection over the deterministic hash).
+    fn draw_id(&mut self, stage: Stage) -> u64 {
+        loop {
+            let id = self.next_id[stage as usize];
+            self.next_id[stage as usize] += 1;
+            if self.split.assign(id) == stage {
+                return id;
+            }
+        }
+    }
+
+    /// Per-row rng derived from the example id (reproducible examples).
+    fn row_rng(&mut self, stage: Stage) -> Rng {
+        let id = self.draw_id(stage);
+        Rng::new(id.wrapping_mul(0x2545f4914f6cdd1d) ^ (stage as u64) << 56)
+    }
+
+    pub fn sft_batch(&mut self, rng: &mut Rng, b: usize) -> TokenBatch {
+        let g0 = self.sources[0].0.clone();
+        let s = g0.seq_len();
+        let mut out = TokenBatch::new(b, s);
+        for i in 0..b {
+            let g = self.pick_source(rng).clone();
+            let mut rr = self.row_rng(Stage::Sft);
+            let row = g.sft_batch(&mut rr, 1);
+            out.row_mut(i).copy_from_slice(row.row(0));
+            out.mask_row_mut(i).copy_from_slice(&row.loss_mask);
+        }
+        out
+    }
+
+    pub fn pair_batch(&mut self, rng: &mut Rng, b: usize) -> PairBatch {
+        let g0 = self.sources[0].0.clone();
+        let s = g0.seq_len();
+        let mut pb = PairBatch {
+            chosen: Vec::with_capacity(b * s),
+            rejected: Vec::with_capacity(b * s),
+            lens_chosen: Vec::with_capacity(b),
+            lens_rejected: Vec::with_capacity(b),
+            b,
+            s,
+        };
+        for _ in 0..b {
+            let g = self.pick_source(rng).clone();
+            let mut rr = self.row_rng(Stage::Reward);
+            let one = g.pair_batch(&mut rr, 1);
+            pb.chosen.extend_from_slice(&one.chosen);
+            pb.rejected.extend_from_slice(&one.rejected);
+            pb.lens_chosen.extend_from_slice(&one.lens_chosen);
+            pb.lens_rejected.extend_from_slice(&one.lens_rejected);
+        }
+        pb
+    }
+
+    pub fn prompt_batch(&mut self, rng: &mut Rng, b: usize) -> Vec<(TaskGen, super::Prompt)> {
+        (0..b)
+            .map(|_| {
+                let g = self.pick_source(rng).clone();
+                let mut rr = self.row_rng(Stage::Rlhf);
+                let p = g.sample_prompt(&mut rr);
+                (g, p)
+            })
+            .collect()
+    }
+
+    pub fn ptx_batch(&mut self, rng: &mut Rng, b: usize) -> TokenBatch {
+        let g0 = self.sources[0].0.clone();
+        let s = g0.seq_len();
+        let mut out = TokenBatch::new(b, s);
+        for i in 0..b {
+            let g = self.pick_source(rng).clone();
+            let mut rr = self.row_rng(Stage::Rlhf);
+            let row = g.ptx_batch(&mut rr, 1);
+            out.row_mut(i).copy_from_slice(row.row(0));
+            out.mask_row_mut(i).copy_from_slice(&row.loss_mask);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::Mode;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn split_fractions_converge() {
+        let split = DataSplit::new(2.0, 4.0, 4.0);
+        let mut counts = [0usize; 3];
+        let n = 100_000u64;
+        for id in 0..n {
+            counts[split.assign(id) as usize] += 1;
+        }
+        let fracs: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+        assert!((fracs[0] - 0.2).abs() < 0.01, "{fracs:?}");
+        assert!((fracs[1] - 0.4).abs() < 0.01, "{fracs:?}");
+        assert!((fracs[2] - 0.4).abs() < 0.01, "{fracs:?}");
+    }
+
+    #[test]
+    fn split_is_deterministic() {
+        let s1 = DataSplit::new(1.0, 1.0, 1.0);
+        let s2 = DataSplit::new(1.0, 1.0, 1.0);
+        for id in 0..1000 {
+            assert_eq!(s1.assign(id), s2.assign(id));
+        }
+    }
+
+    #[test]
+    fn stages_draw_disjoint_ids() {
+        // Any id a stage draws must be assigned to that stage by the split.
+        Prop::new(32).check("stage ids disjoint", |rng| {
+            let split = DataSplit::new(
+                0.5 + rng.f64(),
+                0.5 + rng.f64(),
+                0.5 + rng.f64(),
+            );
+            let g = TaskGen::new(64, 8, 8);
+            let mut blend = Blend::new(vec![(g, 1.0)], split.clone());
+            for stage in [Stage::Sft, Stage::Reward, Stage::Rlhf] {
+                for _ in 0..20 {
+                    let id = blend.draw_id(stage);
+                    prop_assert!(
+                        split.assign(id) == stage,
+                        "id {id} drawn for {stage:?} but assigned {:?}",
+                        split.assign(id)
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blend_weights_respected() {
+        let g1 = TaskGen::new(64, 8, 8).with_modes(vec![Mode::Repeat]);
+        let g2 = TaskGen::new(64, 8, 8).with_modes(vec![Mode::Count]);
+        let mut blend =
+            Blend::new(vec![(g1, 3.0), (g2, 1.0)], DataSplit::new(1.0, 1.0, 1.0));
+        let mut rng = Rng::new(0);
+        let mut repeat = 0;
+        let n = 4000;
+        let batch = blend.sft_batch(&mut rng, n);
+        for i in 0..n {
+            let mode = Mode::from_token(batch.row(i)[1]).unwrap();
+            if mode == Mode::Repeat {
+                repeat += 1;
+            }
+        }
+        let frac = repeat as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.05, "{frac}");
+    }
+
+    #[test]
+    fn batches_have_consistent_shapes() {
+        let g = TaskGen::new(64, 8, 8);
+        let mut blend = Blend::new(vec![(g, 1.0)], DataSplit::new(1.0, 1.0, 1.0));
+        let mut rng = Rng::new(1);
+        let tb = blend.sft_batch(&mut rng, 3);
+        assert_eq!((tb.b, tb.s), (3, 16));
+        let pb = blend.pair_batch(&mut rng, 3);
+        assert_eq!(pb.chosen.len(), 3 * 16);
+        let pr = blend.prompt_batch(&mut rng, 3);
+        assert_eq!(pr.len(), 3);
+    }
+}

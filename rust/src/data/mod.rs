@@ -1,0 +1,58 @@
+//! Data layer: the paper's "Data Abstraction and Blending" capability plus
+//! the synthetic corpus that replaces human-labelled SFT/preference data.
+//!
+//! The substitution (DESIGN.md §1): instead of human annotations we use a
+//! deterministic instruction-following task with a *rule-defined* reward, so
+//! every stage has measurable ground truth — SFT loss must fall, the reward
+//! model must recover the rule's ranking, and PPO must raise the true reward.
+
+pub mod blend;
+pub mod synthetic;
+
+pub use blend::{Blend, DataSplit, Stage};
+pub use synthetic::{TaskGen, Vocab, Prompt};
+
+/// A token batch bound for an artifact: `[b, s]` row-major i32.
+#[derive(Debug, Clone)]
+pub struct TokenBatch {
+    pub tokens: Vec<i32>,
+    pub b: usize,
+    pub s: usize,
+    /// Next-token loss mask `[b, s-1]` (1.0 on response positions).
+    pub loss_mask: Vec<f32>,
+}
+
+impl TokenBatch {
+    pub fn new(b: usize, s: usize) -> Self {
+        TokenBatch {
+            tokens: vec![0; b * s],
+            b,
+            s,
+            loss_mask: vec![0.0; b * (s - 1)],
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.s..(i + 1) * self.s]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [i32] {
+        &mut self.tokens[i * self.s..(i + 1) * self.s]
+    }
+
+    pub fn mask_row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.loss_mask[i * (self.s - 1)..(i + 1) * (self.s - 1)]
+    }
+}
+
+/// A preference pair batch for reward-model training.
+#[derive(Debug, Clone)]
+pub struct PairBatch {
+    pub chosen: Vec<i32>,
+    pub rejected: Vec<i32>,
+    /// Index of the last real (scored) token per row.
+    pub lens_chosen: Vec<i32>,
+    pub lens_rejected: Vec<i32>,
+    pub b: usize,
+    pub s: usize,
+}

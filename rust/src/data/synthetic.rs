@@ -1,0 +1,443 @@
+//! The synthetic instruction-following task (human-data substitution).
+//!
+//! A prompt encodes an *instruction*: `[BOS, mode, a, b, noise..., SEP]`.
+//! The correct response is a deterministic token pattern:
+//!   * `Repeat`    — alternate `a, b, a, b, ...`
+//!   * `Constant`  — repeat `a`
+//!   * `Count`     — `a, a+1, a+2, ...` (wrapping within the content range)
+//!   * `Mirror`    — `b, a, b, a, ...`
+//! followed by `EOS`. The ground-truth reward is the fraction of response
+//! positions matching the rule — measurable at every stage of the pipeline,
+//! which is exactly what the human preference data gives the paper's
+//! pipeline, but verifiable.
+
+use crate::util::rng::Rng;
+
+use super::{PairBatch, TokenBatch};
+
+/// Special token ids (shared with the chat example's detokenizer).
+#[derive(Debug, Clone, Copy)]
+pub struct Vocab {
+    pub size: usize,
+}
+
+impl Vocab {
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const EOS: i32 = 2;
+    pub const SEP: i32 = 3;
+    pub const MODE_BASE: i32 = 4; // mode tokens 4..8
+    pub const CONTENT_BASE: i32 = 8;
+
+    pub fn content_range(&self) -> (i32, i32) {
+        (Self::CONTENT_BASE, self.size as i32)
+    }
+
+    pub fn n_content(&self) -> i32 {
+        self.size as i32 - Self::CONTENT_BASE
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Repeat = 0,
+    Constant = 1,
+    Count = 2,
+    Mirror = 3,
+}
+
+impl Mode {
+    pub fn all() -> [Mode; 4] {
+        [Mode::Repeat, Mode::Constant, Mode::Count, Mode::Mirror]
+    }
+
+    pub fn token(self) -> i32 {
+        Vocab::MODE_BASE + self as i32
+    }
+
+    pub fn from_token(t: i32) -> Option<Mode> {
+        match t - Vocab::MODE_BASE {
+            0 => Some(Mode::Repeat),
+            1 => Some(Mode::Constant),
+            2 => Some(Mode::Count),
+            3 => Some(Mode::Mirror),
+            _ => None,
+        }
+    }
+}
+
+/// A sampled instruction prompt.
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    pub mode: Mode,
+    pub a: i32,
+    pub b: i32,
+    pub tokens: Vec<i32>, // length = prompt_len
+}
+
+/// Task generator bound to one deployment's shapes.
+#[derive(Debug, Clone)]
+pub struct TaskGen {
+    pub vocab: Vocab,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// Which modes this source emits (data-blending sources differ here).
+    pub modes: Vec<Mode>,
+    /// Response length before EOS (fixed per task instance, < gen_len).
+    pub resp_len: usize,
+}
+
+impl TaskGen {
+    pub fn new(vocab_size: usize, prompt_len: usize, gen_len: usize) -> Self {
+        assert!(prompt_len >= 5, "prompt too short for [BOS, mode, a, b, .., SEP]");
+        assert!(gen_len >= 4);
+        TaskGen {
+            vocab: Vocab { size: vocab_size },
+            prompt_len,
+            gen_len,
+            modes: Mode::all().to_vec(),
+            resp_len: gen_len - 2, // leave room for EOS (+1 spare)
+        }
+    }
+
+    pub fn with_modes(mut self, modes: Vec<Mode>) -> Self {
+        assert!(!modes.is_empty());
+        self.modes = modes;
+        self
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.prompt_len + self.gen_len
+    }
+
+    pub fn sample_prompt(&self, rng: &mut Rng) -> Prompt {
+        let mode = *rng.choose(&self.modes);
+        let (lo, hi) = self.vocab.content_range();
+        let a = rng.range(lo as i64, hi as i64) as i32;
+        let b = rng.range(lo as i64, hi as i64) as i32;
+        let mut tokens = Vec::with_capacity(self.prompt_len);
+        tokens.push(Vocab::BOS);
+        tokens.push(mode.token());
+        tokens.push(a);
+        tokens.push(b);
+        // Deterministic filler (repeats a/b) so the prompt carries no noise
+        // the model must ignore spuriously.
+        while tokens.len() < self.prompt_len - 1 {
+            let i = tokens.len();
+            tokens.push(if i % 2 == 0 { a } else { b });
+        }
+        tokens.push(Vocab::SEP);
+        Prompt { mode, a, b, tokens }
+    }
+
+    /// The rule-correct response (length == gen_len, EOS then PAD).
+    pub fn expected_response(&self, p: &Prompt) -> Vec<i32> {
+        let n = self.vocab.n_content();
+        let base = Vocab::CONTENT_BASE;
+        let mut r = Vec::with_capacity(self.gen_len);
+        for i in 0..self.resp_len {
+            let t = match p.mode {
+                Mode::Repeat => {
+                    if i % 2 == 0 {
+                        p.a
+                    } else {
+                        p.b
+                    }
+                }
+                Mode::Constant => p.a,
+                Mode::Count => base + ((p.a - base) + i as i32).rem_euclid(n),
+                Mode::Mirror => {
+                    if i % 2 == 0 {
+                        p.b
+                    } else {
+                        p.a
+                    }
+                }
+            };
+            r.push(t);
+        }
+        r.push(Vocab::EOS);
+        while r.len() < self.gen_len {
+            r.push(Vocab::PAD);
+        }
+        r
+    }
+
+    /// Ground-truth reward in [0, 1]: match fraction over the rule region
+    /// plus an EOS-placement bonus. This is the oracle the paper gets from
+    /// human preference; PPO must raise it.
+    pub fn reward(&self, p: &Prompt, response: &[i32]) -> f32 {
+        let expected = self.expected_response(p);
+        let mut hits = 0usize;
+        for i in 0..self.resp_len.min(response.len()) {
+            if response[i] == expected[i] {
+                hits += 1;
+            }
+        }
+        let match_frac = hits as f32 / self.resp_len as f32;
+        let eos_bonus = if response.get(self.resp_len) == Some(&Vocab::EOS) {
+            0.2
+        } else {
+            0.0
+        };
+        (match_frac * 0.8 + eos_bonus).clamp(0.0, 1.0)
+    }
+
+    /// Corrupt a correct response (for preference-pair "rejected" sides).
+    /// severity in (0, 1]: fraction of positions replaced with random
+    /// content tokens.
+    pub fn corrupt(&self, response: &[i32], rng: &mut Rng, severity: f32) -> Vec<i32> {
+        let (lo, hi) = self.vocab.content_range();
+        let mut out = response.to_vec();
+        let mut changed = false;
+        for x in out.iter_mut().take(self.resp_len) {
+            if rng.f32() < severity {
+                let mut t = rng.range(lo as i64, hi as i64) as i32;
+                if t == *x {
+                    t = lo + ((t - lo + 1) % self.vocab.n_content());
+                }
+                *x = t;
+                changed = true;
+            }
+        }
+        if !changed {
+            // Guarantee the pair is strictly ordered.
+            let i = rng.below(self.resp_len as u32) as usize;
+            out[i] = lo + ((out[i] - lo + 1).rem_euclid(self.vocab.n_content()));
+        }
+        out
+    }
+
+    /// Full sequence = prompt ++ response (the artifacts' `[b, s]` layout).
+    pub fn full_sequence(&self, p: &Prompt, response: &[i32]) -> Vec<i32> {
+        let mut seq = p.tokens.clone();
+        seq.extend_from_slice(response);
+        assert_eq!(seq.len(), self.seq_len());
+        seq
+    }
+
+    /// An SFT batch: correct demonstrations, loss on response positions only.
+    pub fn sft_batch(&self, rng: &mut Rng, b: usize) -> TokenBatch {
+        let s = self.seq_len();
+        let mut batch = TokenBatch::new(b, s);
+        for i in 0..b {
+            let p = self.sample_prompt(rng);
+            let resp = self.expected_response(&p);
+            let seq = self.full_sequence(&p, &resp);
+            batch.row_mut(i).copy_from_slice(&seq);
+            let mask = batch.mask_row_mut(i);
+            // Mask indexes next-token predictions: position j predicts
+            // token j+1; response tokens live at [prompt_len, prompt_len +
+            // resp_len] inclusive of EOS.
+            for j in self.prompt_len - 1..self.prompt_len + self.resp_len {
+                mask[j] = 1.0;
+            }
+        }
+        batch
+    }
+
+    /// A preference batch: (correct, corrupted-with-random-severity).
+    pub fn pair_batch(&self, rng: &mut Rng, b: usize) -> PairBatch {
+        let s = self.seq_len();
+        let mut pb = PairBatch {
+            chosen: Vec::with_capacity(b * s),
+            rejected: Vec::with_capacity(b * s),
+            lens_chosen: Vec::with_capacity(b),
+            lens_rejected: Vec::with_capacity(b),
+            b,
+            s,
+        };
+        for _ in 0..b {
+            let p = self.sample_prompt(rng);
+            let good = self.expected_response(&p);
+            let severity = 0.3 + 0.7 * rng.f32();
+            let bad = self.corrupt(&good, rng, severity);
+            pb.chosen.extend(self.full_sequence(&p, &good));
+            pb.rejected.extend(self.full_sequence(&p, &bad));
+            let last = (self.prompt_len + self.resp_len) as i32; // EOS position
+            pb.lens_chosen.push(last);
+            pb.lens_rejected.push(last);
+        }
+        pb
+    }
+
+    /// A prompt-only batch for PPO experience generation.
+    pub fn prompt_batch(&self, rng: &mut Rng, b: usize) -> Vec<Prompt> {
+        (0..b).map(|_| self.sample_prompt(rng)).collect()
+    }
+
+    /// A plain-LM batch for mixture (ptx) training: full correct sequences,
+    /// loss everywhere — the "pretraining data" of the paper's Step 3.
+    pub fn ptx_batch(&self, rng: &mut Rng, b: usize) -> TokenBatch {
+        let s = self.seq_len();
+        let mut batch = TokenBatch::new(b, s);
+        for i in 0..b {
+            let p = self.sample_prompt(rng);
+            let resp = self.expected_response(&p);
+            let seq = self.full_sequence(&p, &resp);
+            batch.row_mut(i).copy_from_slice(&seq);
+            for m in batch.mask_row_mut(i) {
+                *m = 1.0;
+            }
+        }
+        batch
+    }
+
+    /// Render tokens for the chat example.
+    pub fn detokenize(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| match t {
+                Vocab::PAD => "·".to_string(),
+                Vocab::BOS => "<s>".to_string(),
+                Vocab::EOS => "</s>".to_string(),
+                Vocab::SEP => "|".to_string(),
+                t if t >= Vocab::MODE_BASE && t < Vocab::CONTENT_BASE => {
+                    format!("<{:?}>", Mode::from_token(t).unwrap())
+                }
+                t => {
+                    let i = (t - Vocab::CONTENT_BASE) as u32;
+                    char::from_u32('a' as u32 + i % 26)
+                        .map(|c| {
+                            if i >= 26 {
+                                format!("{c}{}", i / 26)
+                            } else {
+                                c.to_string()
+                            }
+                        })
+                        .unwrap_or_else(|| format!("[{t}]"))
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    fn gen() -> TaskGen {
+        TaskGen::new(256, 16, 16)
+    }
+
+    #[test]
+    fn prompt_layout() {
+        let g = gen();
+        let mut rng = Rng::new(0);
+        let p = g.sample_prompt(&mut rng);
+        assert_eq!(p.tokens.len(), 16);
+        assert_eq!(p.tokens[0], Vocab::BOS);
+        assert_eq!(p.tokens[1], p.mode.token());
+        assert_eq!(p.tokens[15], Vocab::SEP);
+    }
+
+    #[test]
+    fn expected_response_is_rewarded_1() {
+        let g = gen();
+        Prop::new(128).check("perfect response has reward 1", |rng| {
+            let p = g.sample_prompt(rng);
+            let r = g.expected_response(&p);
+            let rew = g.reward(&p, &r);
+            prop_assert!((rew - 1.0).abs() < 1e-6, "reward {rew} != 1");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corruption_strictly_lowers_reward() {
+        let g = gen();
+        Prop::new(128).check("corrupt < perfect", |rng| {
+            let p = g.sample_prompt(rng);
+            let good = g.expected_response(&p);
+            let bad = g.corrupt(&good, rng, 0.5);
+            let rg = g.reward(&p, &good);
+            let rb = g.reward(&p, &bad);
+            prop_assert!(rb < rg, "corrupt reward {rb} !< {rg}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn severity_orders_reward_on_average() {
+        let g = gen();
+        let mut rng = Rng::new(3);
+        let mut sum_low = 0.0;
+        let mut sum_high = 0.0;
+        for _ in 0..200 {
+            let p = g.sample_prompt(&mut rng);
+            let good = g.expected_response(&p);
+            sum_low += g.reward(&p, &g.corrupt(&good, &mut rng, 0.2));
+            sum_high += g.reward(&p, &g.corrupt(&good, &mut rng, 0.9));
+        }
+        assert!(sum_low > sum_high, "{sum_low} vs {sum_high}");
+    }
+
+    #[test]
+    fn count_mode_wraps() {
+        let g = gen();
+        let p = Prompt {
+            mode: Mode::Count,
+            a: g.vocab.size as i32 - 1, // last content token
+            b: Vocab::CONTENT_BASE,
+            tokens: vec![],
+        };
+        let r = g.expected_response(&p);
+        assert_eq!(r[0], g.vocab.size as i32 - 1);
+        assert_eq!(r[1], Vocab::CONTENT_BASE); // wrapped
+    }
+
+    #[test]
+    fn modes_produce_distinct_responses() {
+        let g = gen();
+        let mk = |mode| {
+            let p = Prompt { mode, a: 10, b: 11, tokens: vec![] };
+            g.expected_response(&p)
+        };
+        let rs: Vec<_> = Mode::all().iter().map(|&m| mk(m)).collect();
+        for i in 0..rs.len() {
+            for j in i + 1..rs.len() {
+                assert_ne!(rs[i], rs[j], "modes {i} and {j} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn sft_batch_masks_response_region_only() {
+        let g = gen();
+        let mut rng = Rng::new(5);
+        let b = g.sft_batch(&mut rng, 4);
+        for i in 0..4 {
+            let mask = &b.loss_mask[i * 31..(i + 1) * 31];
+            let on: f32 = mask.iter().sum();
+            assert_eq!(on as usize, g.resp_len + 1); // response + EOS
+            // prompt-interior predictions are unmasked
+            assert_eq!(mask[..g.prompt_len - 1].iter().sum::<f32>(), 0.0);
+        }
+    }
+
+    #[test]
+    fn pair_batch_chosen_beats_rejected() {
+        let g = gen();
+        let mut rng = Rng::new(6);
+        let pb = g.pair_batch(&mut rng, 8);
+        assert_eq!(pb.chosen.len(), 8 * 32);
+        for i in 0..8 {
+            let c = &pb.chosen[i * 32..(i + 1) * 32];
+            let r = &pb.rejected[i * 32..(i + 1) * 32];
+            assert_eq!(&c[..16], &r[..16], "prompts must match");
+            assert_ne!(&c[16..], &r[16..], "responses must differ");
+        }
+    }
+
+    #[test]
+    fn detokenize_smoke() {
+        let g = gen();
+        let s = g.detokenize(&[Vocab::BOS, Mode::Count.token(), 8, Vocab::SEP, Vocab::EOS]);
+        assert!(s.contains("<s>"));
+        assert!(s.contains("<Count>"));
+        assert!(s.contains("|"));
+    }
+}

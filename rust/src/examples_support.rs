@@ -1,0 +1,135 @@
+//! Shared helpers for the CLI and the `examples/` binaries (kept in the
+//! library so the logic is tested and reused, not copy-pasted).
+
+use anyhow::Result;
+
+use crate::coordinator::PpoTrainer;
+use crate::data::synthetic::TaskGen;
+use crate::hybrid::HybridEngine;
+use crate::sampling::{Sampler, SamplerConfig};
+use crate::util::rng::Rng;
+
+/// A short scripted "conversation": sample task prompts, generate with the
+/// actor, show detokenized exchanges plus the ground-truth score — the
+/// reproduction of the paper's §2.1 inference-API demo, with the synthetic
+/// task standing in for natural language.
+pub fn chat_loop(he: &mut HybridEngine, turns: usize, seed: u64) -> Result<()> {
+    let m = he.manifest();
+    let (b, sp, s) = (m.batch, m.prompt_len, m.seq_len);
+    let task = TaskGen::new(m.actor.vocab, m.prompt_len, m.gen_len);
+    let mut rng = Rng::new(seed);
+    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, seed);
+    for turn in 0..turns {
+        let prompts: Vec<_> = (0..b).map(|_| task.sample_prompt(&mut rng)).collect();
+        let mut flat = Vec::with_capacity(b * sp);
+        for p in &prompts {
+            flat.extend_from_slice(&p.tokens);
+        }
+        let seqs = he.generate(&flat, &mut sampler)?;
+        // Show the first row of the batch each turn.
+        let row = &seqs[..s];
+        let p = &prompts[0];
+        let response = &row[sp..];
+        println!("Human     ({turn}): {}", task.detokenize(&p.tokens));
+        println!("Assistant ({turn}): {}", task.detokenize(response));
+        println!(
+            "            [mode {:?}; ground-truth reward {:.2}]",
+            p.mode,
+            task.reward(p, response)
+        );
+    }
+    Ok(())
+}
+
+/// Mean ground-truth reward of greedy generations over `n_batches` fresh
+/// prompt batches (the evaluation metric of the e2e example).
+pub fn eval_true_reward(he: &mut HybridEngine, n_batches: usize, seed: u64) -> Result<f32> {
+    let m = he.manifest();
+    let (b, sp, s) = (m.batch, m.prompt_len, m.seq_len);
+    let task = TaskGen::new(m.actor.vocab, m.prompt_len, m.gen_len);
+    let mut rng = Rng::new(seed);
+    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, seed);
+    let mut total = 0.0f32;
+    let mut count = 0usize;
+    for _ in 0..n_batches {
+        let prompts: Vec<_> = (0..b).map(|_| task.sample_prompt(&mut rng)).collect();
+        let mut flat = Vec::with_capacity(b * sp);
+        for p in &prompts {
+            flat.extend_from_slice(&p.tokens);
+        }
+        let seqs = he.generate(&flat, &mut sampler)?;
+        for (i, p) in prompts.iter().enumerate() {
+            total += task.reward(p, &seqs[i * s + sp..(i + 1) * s]);
+            count += 1;
+        }
+    }
+    Ok(total / count as f32)
+}
+
+/// Naive-generation baseline: re-run the full-sequence forward for every
+/// generated token (no KV cache, no decode kernel) — the mechanism behind
+/// HF-style generation that Figure 5 shows DS-HE beating 9x. Returns
+/// sequences identical in distribution to `HybridEngine::generate` (greedy),
+/// but measured through the slow path.
+pub fn naive_generate(
+    he: &mut HybridEngine,
+    prompts: &[i32],
+    sampler: &mut Sampler,
+) -> Result<Vec<i32>> {
+    let m = he.manifest();
+    let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
+    let vocab = m.actor.vocab;
+    // Build padded sequences; the logprobs_forward artifact wants [b, s].
+    let mut seqs = vec![0i32; b * s];
+    for i in 0..b {
+        seqs[i * s..i * s + sp].copy_from_slice(&prompts[i * sp..(i + 1) * sp]);
+    }
+    let mut done = vec![false; b];
+    for step in 0..sg {
+        // Full forward over the whole (padded) sequence; O(s) per token vs
+        // the decode path's O(1) — recompute is the baseline's cost.
+        let logits = he.full_logits(&seqs)?; // [b, s, vocab]
+        let pos = sp + step - 1; // logits at pos predict token at pos+1
+        for i in 0..b {
+            if done[i] {
+                continue;
+            }
+            let base = (i * s + pos) * vocab;
+            let row = &logits[base..base + vocab];
+            let hist = &seqs[i * s..i * s + sp + step];
+            let t = sampler.sample(row, hist);
+            seqs[i * s + sp + step] = t;
+            if t == crate::data::synthetic::Vocab::EOS {
+                done[i] = true;
+            }
+        }
+        if done.iter().all(|d| *d) {
+            break;
+        }
+    }
+    Ok(seqs)
+}
+
+/// PPO smoke helper used by ablation examples: run `iters` PPO iterations
+/// and return (first, last) true-reward.
+pub fn ppo_probe(
+    he: &mut HybridEngine,
+    blend: &mut crate::data::Blend,
+    cfg: crate::config::PpoConfig,
+    iters: usize,
+    lr: (f32, f32),
+    seed: u64,
+) -> Result<(f32, f32)> {
+    let mut trainer = PpoTrainer::new(cfg, seed);
+    let mut rng = Rng::new(seed ^ 0xa5a5);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for i in 0..iters {
+        let stats = trainer.iteration(he, blend, &mut rng, lr.0, lr.1)?;
+        if i == 0 {
+            first = stats.true_reward;
+        }
+        last = stats.true_reward;
+    }
+    Ok((first, last))
+}

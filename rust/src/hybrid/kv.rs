@@ -1,0 +1,38 @@
+//! KV-cache state for the inference phase: the "light-weight memory
+//! management system" of paper §4. The caches are device-resident buffers
+//! whose lifetime is bounded by the inference phase — allocated at prefill,
+//! updated in place each decode step, released at the train-mode flip.
+
+use anyhow::Result;
+use xla::{Literal, PjRtBuffer};
+
+use crate::runtime::{Engine, HostTensor};
+
+pub struct KvCache {
+    pub k: PjRtBuffer,
+    pub v: PjRtBuffer,
+    /// [n_layers, b*h, smax, d_head]
+    pub dims: Vec<usize>,
+}
+
+impl KvCache {
+    pub fn from_literals(engine: &Engine, k: &Literal, v: &Literal) -> Result<KvCache> {
+        let kt = HostTensor::from_literal(k)?;
+        let dims = kt.shape().to_vec();
+        let kb = engine.upload(&kt)?;
+        let vb = engine.upload(&HostTensor::from_literal(v)?)?;
+        Ok(KvCache { k: kb, v: vb, dims })
+    }
+
+    /// Replace both caches with the decode step's outputs.
+    pub fn update(&mut self, engine: &Engine, k: &Literal, v: &Literal) -> Result<()> {
+        self.k = engine.upload(&HostTensor::from_literal(k)?)?;
+        self.v = engine.upload(&HostTensor::from_literal(v)?)?;
+        Ok(())
+    }
+
+    /// Bytes held by both caches (f32).
+    pub fn bytes(&self) -> usize {
+        2 * self.dims.iter().product::<usize>() * 4
+    }
+}

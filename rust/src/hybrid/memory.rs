@@ -1,0 +1,102 @@
+//! Byte-exact memory accounting for the hybrid engine.
+//!
+//! Tracks every named allocation (params, optimizer, KV cache) plus the
+//! high-water mark, mirroring what the GPU version must fit in HBM. The
+//! simulator (`sim::memory`) applies the same ledger to paper-scale models
+//! to reproduce Table 3 (max model per GPU) and Figure 7's batch planning.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct MemoryTracker {
+    live: BTreeMap<String, usize>,
+    total: usize,
+    peak: usize,
+    events: Vec<(String, isize)>,
+}
+
+impl MemoryTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&mut self, name: &str, bytes: usize) {
+        *self.live.entry(name.to_string()).or_insert(0) += bytes;
+        self.total += bytes;
+        self.peak = self.peak.max(self.total);
+        self.events.push((name.to_string(), bytes as isize));
+    }
+
+    pub fn free(&mut self, name: &str, bytes: usize) {
+        let e = self
+            .live
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("free of unknown allocation {name:?}"));
+        assert!(*e >= bytes, "free {bytes} > live {e} for {name:?}");
+        *e -= bytes;
+        self.total -= bytes;
+        self.events.push((name.to_string(), -(bytes as isize)));
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.total
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak
+    }
+
+    pub fn live_named(&self, name: &str) -> usize {
+        self.live.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn breakdown(&self) -> Vec<(String, usize)> {
+        self.live
+            .iter()
+            .filter(|(_, &b)| b > 0)
+            .map(|(k, &v)| (k.clone(), v))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut m = MemoryTracker::new();
+        m.alloc("a", 100);
+        m.alloc("kv", 50);
+        assert_eq!(m.live_bytes(), 150);
+        assert_eq!(m.peak_bytes(), 150);
+        m.free("kv", 50);
+        assert_eq!(m.live_bytes(), 100);
+        assert_eq!(m.peak_bytes(), 150);
+        m.alloc("kv", 20);
+        assert_eq!(m.peak_bytes(), 150);
+    }
+
+    #[test]
+    #[should_panic(expected = "free of unknown")]
+    fn free_unknown_panics() {
+        MemoryTracker::new().free("ghost", 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "free 10 > live")]
+    fn overfree_panics() {
+        let mut m = MemoryTracker::new();
+        m.alloc("a", 5);
+        m.free("a", 10);
+    }
+
+    #[test]
+    fn breakdown_hides_zero() {
+        let mut m = MemoryTracker::new();
+        m.alloc("a", 5);
+        m.alloc("b", 7);
+        m.free("a", 5);
+        assert_eq!(m.breakdown(), vec![("b".to_string(), 7)]);
+    }
+}

@@ -1,0 +1,554 @@
+//! The Hybrid Engine (DeepSpeed-HE, paper §4): one runtime that flips the
+//! actor between **inference mode** (experience generation over a KV cache,
+//! decode-attention kernel, token-level loop) and **training mode** (PPO
+//! updates over full sequences), reconfiguring memory at each boundary.
+//!
+//! On the paper's GPUs the flip swaps tensor-parallel inference sharding for
+//! ZeRO training sharding; on this CPU testbed the flip swaps executables
+//! and the KV-cache buffer pool while the [`MemoryTracker`] accounts for
+//! every byte the way the GPU version would (`zero::MemoryModel` maps the
+//! same accounting onto paper-scale hardware in the simulator).
+
+pub mod kv;
+pub mod memory;
+
+pub use kv::KvCache;
+pub use memory::MemoryTracker;
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use xla::{Literal, PjRtBuffer};
+
+use crate::data::{PairBatch, TokenBatch};
+use crate::runtime::{ArtifactSet, Engine, HostTensor, ParamStore};
+use crate::sampling::Sampler;
+
+/// Which configuration the actor model is currently in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// ZeRO-style training configuration (full-sequence fwd/bwd).
+    Train,
+    /// Inference configuration (KV cache alive, decode executables hot).
+    Inference,
+}
+
+/// Per-phase timing/throughput accounting (drives Figure 5/6 analogues).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseStats {
+    pub gen_secs: f64,
+    pub gen_tokens: u64,
+    pub train_secs: f64,
+    pub train_tokens: u64,
+    pub mode_flips: u64,
+    pub flip_secs: f64,
+}
+
+impl PhaseStats {
+    pub fn gen_tok_per_sec(&self) -> f64 {
+        self.gen_tokens as f64 / self.gen_secs.max(1e-9)
+    }
+
+    pub fn train_tok_per_sec(&self) -> f64 {
+        self.train_tokens as f64 / self.train_secs.max(1e-9)
+    }
+}
+
+/// Scalar results of one PPO actor update.
+#[derive(Debug, Clone, Copy)]
+pub struct ActorStepOut {
+    pub loss: f32,
+    pub approx_kl: f32,
+    pub clipfrac: f32,
+}
+
+/// The hybrid engine: owns every model role's device-resident state.
+pub struct HybridEngine {
+    pub engine: Rc<Engine>,
+    pub arts: ArtifactSet,
+    pub actor: ParamStore,
+    /// Frozen reference policy (KL anchor) — a copy of the SFT actor.
+    pub ref_actor: ParamStore,
+    pub critic: ParamStore,
+    /// Frozen reward model (copy of the trained critic after Step 2).
+    pub rm: ParamStore,
+    /// EMA shadow of the actor (paper Step-3 optional feature).
+    pub ema: Option<ParamStore>,
+    pub actor_opt: ParamStore,
+    pub critic_opt: ParamStore,
+    mode: EngineMode,
+    kv: Option<KvCache>,
+    pub stats: PhaseStats,
+    pub memory: MemoryTracker,
+}
+
+impl HybridEngine {
+    /// Build from a manifest dir; parameters come from the `init_*`
+    /// artifacts (seeded), so rust never needs Python at run time.
+    pub fn init(engine: Rc<Engine>, dir: &str, seed: i32, with_ema: bool) -> Result<Self> {
+        let arts = ArtifactSet::load_all(&engine, dir)?;
+        let m = &arts.manifest;
+
+        let actor_lits = arts
+            .get("init_actor")?
+            .call_literals(&[HostTensor::scalar_i32(seed).to_literal()?])?;
+        let critic_lits = arts
+            .get("init_critic")?
+            .call_literals(&[HostTensor::scalar_i32(seed + 1).to_literal()?])?;
+
+        let actor = ParamStore::from_literals(&engine, &m.actor_params, &actor_lits)?;
+        let ref_actor = ParamStore::from_literals(&engine, &m.actor_params, &actor_lits)?;
+        let critic = ParamStore::from_literals(&engine, &m.critic_params, &critic_lits)?;
+        let rm = ParamStore::from_literals(&engine, &m.critic_params, &critic_lits)?;
+        let ema = if with_ema {
+            Some(ParamStore::from_literals(&engine, &m.actor_params, &actor_lits)?)
+        } else {
+            None
+        };
+
+        let zeros = |specs: &[crate::runtime::TensorSpec]| -> Vec<HostTensor> {
+            specs.iter().map(|s| HostTensor::zeros_f32(&s.shape)).collect()
+        };
+        let actor_opt = ParamStore::from_host(&engine, &m.actor_opt, &zeros(&m.actor_opt))?;
+        let critic_opt = ParamStore::from_host(&engine, &m.critic_opt, &zeros(&m.critic_opt))?;
+
+        let mut memory = MemoryTracker::new();
+        memory.alloc("actor_params", actor.bytes());
+        memory.alloc("ref_params", ref_actor.bytes());
+        memory.alloc("critic_params", critic.bytes());
+        memory.alloc("rm_params", rm.bytes());
+        if let Some(e) = &ema {
+            memory.alloc("ema_params", e.bytes());
+        }
+        memory.alloc("actor_opt", actor_opt.bytes());
+        memory.alloc("critic_opt", critic_opt.bytes());
+
+        Ok(HybridEngine {
+            engine,
+            arts,
+            actor,
+            ref_actor,
+            critic,
+            rm,
+            ema,
+            actor_opt,
+            critic_opt,
+            mode: EngineMode::Train,
+            kv: None,
+            stats: PhaseStats::default(),
+            memory,
+        })
+    }
+
+    pub fn mode(&self) -> EngineMode {
+        self.mode
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.arts.manifest
+    }
+
+    /// Snapshot the current actor as the frozen reference policy (done once
+    /// after SFT) — the KL anchor of PPO.
+    pub fn freeze_reference(&mut self) -> Result<()> {
+        let host = self.actor.to_host()?;
+        self.ref_actor = ParamStore::from_host(
+            &self.engine,
+            &self.arts.manifest.actor_params.clone(),
+            &host,
+        )?;
+        if let Some(ema) = &mut self.ema {
+            let lits: Vec<Literal> =
+                host.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+            ema.replace(&self.engine, &lits)?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot the trained critic as the frozen reward model (after Step 2;
+    /// the critic then continues training during PPO, initialized from the
+    /// RM exactly as InstructGPT does).
+    pub fn freeze_reward_model(&mut self) -> Result<()> {
+        let host = self.critic.to_host()?;
+        self.rm = ParamStore::from_host(
+            &self.engine,
+            &self.arts.manifest.critic_params.clone(),
+            &host,
+        )?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Mode transitions (the paper's §4 "seamless transition")
+    // ------------------------------------------------------------------
+
+    fn enter(&mut self, mode: EngineMode) {
+        if self.mode == mode {
+            return;
+        }
+        let t0 = Instant::now();
+        match mode {
+            EngineMode::Train => {
+                // Inference → training: release the KV pool so training can
+                // use the memory for activations/larger batches (§4: "
+                // reconfigure the memory system to maximize availability").
+                if let Some(kv) = self.kv.take() {
+                    self.memory.free("kv_cache", kv.bytes());
+                }
+            }
+            EngineMode::Inference => {
+                // Training → inference: nothing to allocate until prefill
+                // (the KV pool is sized by the incoming batch).
+            }
+        }
+        self.mode = mode;
+        self.stats.mode_flips += 1;
+        self.stats.flip_secs += t0.elapsed().as_secs_f64();
+    }
+
+    // ------------------------------------------------------------------
+    // Inference mode: experience generation
+    // ------------------------------------------------------------------
+
+    /// Generate `gen_len` tokens for a batch of prompts (row-major
+    /// `[b, prompt_len]`). Returns full sequences `[b, seq_len]`.
+    ///
+    /// This is the paper's memory-bandwidth-bound phase: one prefill call,
+    /// then `gen_len - 1` decode calls with device-resident actor params.
+    pub fn generate(&mut self, prompts: &[i32], sampler: &mut Sampler) -> Result<Vec<i32>> {
+        let m = &self.arts.manifest;
+        let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
+        if prompts.len() != b * sp {
+            bail!("prompts must be [{b}, {sp}], got {} elements", prompts.len());
+        }
+        let vocab = m.actor.vocab;
+        self.enter(EngineMode::Inference);
+        let t0 = Instant::now();
+
+        // Prefill: params + prompt -> (logits, k_cache, v_cache).
+        let prefill = self.arts.get("prefill")?;
+        let prompt_buf = self
+            .engine
+            .upload(&HostTensor::I32(prompts.to_vec(), vec![b, sp]))?;
+        let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
+        inputs.push(&prompt_buf);
+        let out = prefill.call_buffers(&inputs)?;
+        let (logits_l, kc_l, vc_l) = (&out[0], &out[1], &out[2]);
+
+        let kv = KvCache::from_literals(&self.engine, kc_l, vc_l)?;
+        self.memory.alloc("kv_cache", kv.bytes());
+        self.kv = Some(kv);
+
+        let mut seqs = vec![0i32; b * s];
+        for i in 0..b {
+            seqs[i * s..i * s + sp].copy_from_slice(&prompts[i * sp..(i + 1) * sp]);
+        }
+        let mut done = vec![false; b];
+        // Keep logits as the HostTensor fetched from the device — indexing
+        // into it directly avoids a second b*vocab copy per decode step
+        // (§Perf change 2).
+        let mut logits_t = HostTensor::from_literal(logits_l)?;
+
+        let decode = self.arts.get("decode_step")?;
+        for step in 0..sg {
+            // Sample token `sp + step` for every unfinished row.
+            let active = done.iter().filter(|d| !**d).count() as u64;
+            let logits = logits_t.as_f32()?;
+            let mut toks = vec![crate::data::synthetic::Vocab::PAD; b];
+            for i in 0..b {
+                if done[i] {
+                    continue;
+                }
+                let row = &logits[i * vocab..(i + 1) * vocab];
+                let hist = &seqs[i * s..i * s + sp + step];
+                let t = sampler.sample(row, hist);
+                seqs[i * s + sp + step] = t;
+                toks[i] = t;
+                if t == crate::data::synthetic::Vocab::EOS {
+                    done[i] = true;
+                }
+            }
+            self.stats.gen_tokens += active;
+            if step + 1 == sg || done.iter().all(|d| *d) {
+                break;
+            }
+            // Decode: (params, kv, token, pos) -> (logits, kv').
+            let kv = self.kv.as_ref().unwrap();
+            let tok_buf = self.engine.upload(&HostTensor::I32(toks, vec![b]))?;
+            let pos_buf = self
+                .engine
+                .upload(&HostTensor::I32(vec![(sp + step) as i32], vec![1]))?;
+            let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
+            inputs.push(&kv.k);
+            inputs.push(&kv.v);
+            inputs.push(&tok_buf);
+            inputs.push(&pos_buf);
+            let out = decode.call_buffers(&inputs)?;
+            logits_t = HostTensor::from_literal(&out[0])?;
+            self.kv.as_mut().unwrap().update(&self.engine, &out[1], &out[2])?;
+        }
+
+        self.stats.gen_secs += t0.elapsed().as_secs_f64();
+        Ok(seqs)
+    }
+
+    // ------------------------------------------------------------------
+    // Forward passes over full sequences (experience scoring)
+    // ------------------------------------------------------------------
+
+    fn forward_with(
+        &self,
+        artifact: &str,
+        params: &ParamStore,
+        extra: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let art = self.arts.get(artifact)?;
+        let extra_bufs: Vec<PjRtBuffer> = extra
+            .iter()
+            .map(|t| self.engine.upload(t))
+            .collect::<Result<_>>()?;
+        let mut inputs: Vec<&PjRtBuffer> = params.buffers.iter().collect();
+        inputs.extend(extra_bufs.iter());
+        let out = art.call_buffers(&inputs)?;
+        out.iter().map(HostTensor::from_literal).collect()
+    }
+
+    fn batch_tensor(&self, tokens: &[i32]) -> HostTensor {
+        let m = &self.arts.manifest;
+        HostTensor::I32(tokens.to_vec(), vec![m.batch, m.seq_len])
+    }
+
+    /// Current-policy log-probs `[b, s-1]`.
+    pub fn actor_logprobs(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let out = self.forward_with("logprobs_forward", &self.actor, &[self.batch_tensor(tokens)])?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    /// Frozen-reference log-probs `[b, s-1]` (the KL anchor).
+    pub fn ref_logprobs(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let out =
+            self.forward_with("logprobs_forward", &self.ref_actor, &[self.batch_tensor(tokens)])?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    /// Full per-position logits `[b, s, vocab]` flattened — the naive
+    /// no-KV-cache generation baseline's forward (ablation for Figure 5).
+    pub fn full_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let out =
+            self.forward_with("logits_forward", &self.actor, &[self.batch_tensor(tokens)])?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    /// Critic values `[b, s]`.
+    pub fn critic_values(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let out = self.forward_with("critic_forward", &self.critic, &[self.batch_tensor(tokens)])?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    /// Frozen reward-model scores `[b]` at `lens` positions.
+    pub fn rm_rewards(&self, tokens: &[i32], lens: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.arts.manifest;
+        let out = self.forward_with(
+            "rm_forward",
+            &self.rm,
+            &[self.batch_tensor(tokens), HostTensor::I32(lens.to_vec(), vec![m.batch])],
+        )?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    // ------------------------------------------------------------------
+    // Training mode: the train-step artifacts
+    // ------------------------------------------------------------------
+
+    /// One SFT step; returns the loss.
+    pub fn sft_step(&mut self, batch: &TokenBatch, lr: f32) -> Result<f32> {
+        self.enter(EngineMode::Train);
+        let t0 = Instant::now();
+        let art = self.arts.get("sft_step")?;
+        let np = self.actor.len();
+        let no = self.actor_opt.len();
+        let extra = [
+            HostTensor::I32(batch.tokens.clone(), vec![batch.b, batch.s]),
+            HostTensor::F32(batch.loss_mask.clone(), vec![batch.b, batch.s - 1]),
+            HostTensor::scalar_f32(lr),
+        ];
+        let extra_bufs: Vec<PjRtBuffer> =
+            extra.iter().map(|t| self.engine.upload(t)).collect::<Result<_>>()?;
+        let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
+        inputs.extend(self.actor_opt.buffers.iter());
+        inputs.extend(extra_bufs.iter());
+        let out = art.call_buffers(&inputs)?;
+        self.actor.replace(&self.engine, &out[..np])?;
+        self.actor_opt.replace(&self.engine, &out[np..np + no])?;
+        let loss = HostTensor::from_literal(&out[np + no])?.item_f32()?;
+        self.stats.train_secs += t0.elapsed().as_secs_f64();
+        self.stats.train_tokens += (batch.b * batch.s) as u64;
+        Ok(loss)
+    }
+
+    /// SFT eval loss (no update).
+    pub fn sft_eval(&self, batch: &TokenBatch) -> Result<f32> {
+        let out = self.forward_with(
+            "sft_eval",
+            &self.actor,
+            &[
+                HostTensor::I32(batch.tokens.clone(), vec![batch.b, batch.s]),
+                HostTensor::F32(batch.loss_mask.clone(), vec![batch.b, batch.s - 1]),
+            ],
+        )?;
+        out[0].item_f32()
+    }
+
+    /// One reward-model step; returns (loss, pairwise accuracy).
+    pub fn rm_step(&mut self, pb: &PairBatch, lr: f32) -> Result<(f32, f32)> {
+        self.enter(EngineMode::Train);
+        let t0 = Instant::now();
+        let art = self.arts.get("rm_step")?;
+        let np = self.critic.len();
+        let no = self.critic_opt.len();
+        let extra = [
+            HostTensor::I32(pb.chosen.clone(), vec![pb.b, pb.s]),
+            HostTensor::I32(pb.rejected.clone(), vec![pb.b, pb.s]),
+            HostTensor::I32(pb.lens_chosen.clone(), vec![pb.b]),
+            HostTensor::I32(pb.lens_rejected.clone(), vec![pb.b]),
+            HostTensor::scalar_f32(lr),
+        ];
+        let extra_bufs: Vec<PjRtBuffer> =
+            extra.iter().map(|t| self.engine.upload(t)).collect::<Result<_>>()?;
+        let mut inputs: Vec<&PjRtBuffer> = self.critic.buffers.iter().collect();
+        inputs.extend(self.critic_opt.buffers.iter());
+        inputs.extend(extra_bufs.iter());
+        let out = art.call_buffers(&inputs)?;
+        self.critic.replace(&self.engine, &out[..np])?;
+        self.critic_opt.replace(&self.engine, &out[np..np + no])?;
+        let loss = HostTensor::from_literal(&out[np + no])?.item_f32()?;
+        let acc = HostTensor::from_literal(&out[np + no + 1])?.item_f32()?;
+        self.stats.train_secs += t0.elapsed().as_secs_f64();
+        self.stats.train_tokens += (2 * pb.b * pb.s) as u64;
+        Ok((loss, acc))
+    }
+
+    /// RM eval (loss, accuracy) without update.
+    pub fn rm_eval(&self, pb: &PairBatch) -> Result<(f32, f32)> {
+        let out = self.forward_with(
+            "rm_eval",
+            &self.critic,
+            &[
+                HostTensor::I32(pb.chosen.clone(), vec![pb.b, pb.s]),
+                HostTensor::I32(pb.rejected.clone(), vec![pb.b, pb.s]),
+                HostTensor::I32(pb.lens_chosen.clone(), vec![pb.b]),
+                HostTensor::I32(pb.lens_rejected.clone(), vec![pb.b]),
+            ],
+        )?;
+        Ok((out[0].item_f32()?, out[1].item_f32()?))
+    }
+
+    /// One PPO actor update over a full experience batch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ppo_actor_step(
+        &mut self,
+        tokens: &[i32],
+        old_logp: &[f32],
+        adv: &[f32],
+        mask: &[f32],
+        ptx_tokens: &[i32],
+        clip_eps: f32,
+        ptx_coef: f32,
+        lr: f32,
+    ) -> Result<ActorStepOut> {
+        self.enter(EngineMode::Train);
+        let t0 = Instant::now();
+        let m = &self.arts.manifest;
+        let (b, s) = (m.batch, m.seq_len);
+        let art = self.arts.get("ppo_actor_step")?;
+        let np = self.actor.len();
+        let no = self.actor_opt.len();
+        let extra = [
+            HostTensor::I32(tokens.to_vec(), vec![b, s]),
+            HostTensor::F32(old_logp.to_vec(), vec![b, s - 1]),
+            HostTensor::F32(adv.to_vec(), vec![b, s - 1]),
+            HostTensor::F32(mask.to_vec(), vec![b, s - 1]),
+            HostTensor::I32(ptx_tokens.to_vec(), vec![b, s]),
+            HostTensor::F32(vec![clip_eps, ptx_coef, 0.0, 0.0], vec![4]),
+            HostTensor::scalar_f32(lr),
+        ];
+        let extra_bufs: Vec<PjRtBuffer> =
+            extra.iter().map(|t| self.engine.upload(t)).collect::<Result<_>>()?;
+        let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
+        inputs.extend(self.actor_opt.buffers.iter());
+        inputs.extend(extra_bufs.iter());
+        let out = art.call_buffers(&inputs)?;
+        self.actor.replace(&self.engine, &out[..np])?;
+        self.actor_opt.replace(&self.engine, &out[np..np + no])?;
+        let loss = HostTensor::from_literal(&out[np + no])?.item_f32()?;
+        let kl = HostTensor::from_literal(&out[np + no + 1])?.item_f32()?;
+        let clipfrac = HostTensor::from_literal(&out[np + no + 2])?.item_f32()?;
+        self.stats.train_secs += t0.elapsed().as_secs_f64();
+        self.stats.train_tokens += (b * s) as u64;
+        Ok(ActorStepOut { loss, approx_kl: kl, clipfrac })
+    }
+
+    /// One PPO critic update.
+    pub fn ppo_critic_step(
+        &mut self,
+        tokens: &[i32],
+        returns: &[f32],
+        old_values: &[f32],
+        mask: &[f32],
+        clip_eps: f32,
+        lr: f32,
+    ) -> Result<f32> {
+        self.enter(EngineMode::Train);
+        let t0 = Instant::now();
+        let m = &self.arts.manifest;
+        let (b, s) = (m.batch, m.seq_len);
+        let art = self.arts.get("ppo_critic_step")?;
+        let np = self.critic.len();
+        let no = self.critic_opt.len();
+        let extra = [
+            HostTensor::I32(tokens.to_vec(), vec![b, s]),
+            HostTensor::F32(returns.to_vec(), vec![b, s - 1]),
+            HostTensor::F32(old_values.to_vec(), vec![b, s - 1]),
+            HostTensor::F32(mask.to_vec(), vec![b, s - 1]),
+            HostTensor::F32(vec![clip_eps, 0.0, 0.0, 0.0], vec![4]),
+            HostTensor::scalar_f32(lr),
+        ];
+        let extra_bufs: Vec<PjRtBuffer> =
+            extra.iter().map(|t| self.engine.upload(t)).collect::<Result<_>>()?;
+        let mut inputs: Vec<&PjRtBuffer> = self.critic.buffers.iter().collect();
+        inputs.extend(self.critic_opt.buffers.iter());
+        inputs.extend(extra_bufs.iter());
+        let out = art.call_buffers(&inputs)?;
+        self.critic.replace(&self.engine, &out[..np])?;
+        self.critic_opt.replace(&self.engine, &out[np..np + no])?;
+        let loss = HostTensor::from_literal(&out[np + no])?.item_f32()?;
+        self.stats.train_secs += t0.elapsed().as_secs_f64();
+        self.stats.train_tokens += (b * s) as u64;
+        Ok(loss)
+    }
+
+    /// EMA shadow update (no-op if EMA disabled).
+    pub fn ema_update(&mut self, decay: f32) -> Result<()> {
+        let Some(ema) = &mut self.ema else { return Ok(()) };
+        let art = self.arts.get("ema_update")?;
+        let decay_buf = self.engine.upload(&HostTensor::scalar_f32(decay))?;
+        let mut inputs: Vec<&PjRtBuffer> = ema.buffers.iter().collect();
+        inputs.extend(self.actor.buffers.iter());
+        inputs.push(&decay_buf);
+        let out = art.call_buffers(&inputs)?;
+        ema.replace(&self.engine, &out)?;
+        Ok(())
+    }
+
+    /// Swap the EMA shadow in as the serving actor (final checkpoint choice).
+    pub fn promote_ema(&mut self) -> Result<()> {
+        let Some(ema) = &self.ema else {
+            bail!("EMA is disabled");
+        };
+        let host = ema.to_host()?;
+        let lits: Vec<Literal> = host.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.actor.replace(&self.engine, &lits)?;
+        Ok(())
+    }
+}

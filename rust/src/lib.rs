@@ -1,0 +1,25 @@
+//! # dschat — a Rust + JAX + Pallas reproduction of DeepSpeed-Chat
+//!
+//! Three-layer architecture (Python never on the run path):
+//! * **L3 (this crate)** — the coordination contribution: hybrid engine,
+//!   PPO orchestration, 3-step pipeline, ZeRO/TP planners, cluster simulator.
+//! * **L2 (JAX)** — transformer + RLHF losses, AOT-lowered to HLO text.
+//! * **L1 (Pallas)** — flash/decode attention, fused LN and Adam kernels.
+//!
+//! See DESIGN.md for the system inventory and the paper-experiment index.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod examples_support;
+pub mod hybrid;
+pub mod metrics;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod sampling;
+pub mod sim;
+pub mod tp;
+pub mod util;
+pub mod zero;

@@ -1,0 +1,258 @@
+//! `dschat` — the DeepSpeed-Chat reproduction CLI.
+//!
+//! Mirrors the paper's single-script experience (`python train.py
+//! --actor-model ... --deployment-type ...`) plus the simulator front-ends:
+//!
+//! ```text
+//! dschat train    --run tiny --sft-steps 300 --rm-steps 150 --ppo-iters 50
+//! dschat chat     --run tiny --ckpt runs/tiny/actor.bin
+//! dschat tables               # regenerate paper Tables 1-6 (simulator)
+//! dschat figures              # regenerate paper Figures 3-7 (simulator)
+//! dschat stats    --run tiny  # artifact/manifest inventory
+//! ```
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use dschat::config::{PpoConfig, TrainRecipe};
+use dschat::data::synthetic::{Mode, TaskGen};
+use dschat::data::{Blend, DataSplit};
+use dschat::hybrid::HybridEngine;
+use dschat::pipeline;
+use dschat::runtime::{Engine, Manifest};
+use dschat::util::argparse::Args;
+use dschat::util::fmt_duration;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train" => train(args),
+        "chat" => chat(args),
+        "tables" => {
+            for t in dschat::report::all_tables() {
+                t.print();
+            }
+            Ok(())
+        }
+        "figures" => {
+            for t in dschat::report::all_figures() {
+                t.print();
+            }
+            Ok(())
+        }
+        "stats" => stats(args),
+        "simulate" => simulate(args),
+        "help" | _ => {
+            println!(
+                "dschat — DeepSpeed-Chat reproduction (rust + JAX + Pallas)\n\n\
+                 commands:\n\
+                 \x20 train    run the 3-step RLHF pipeline on AOT artifacts\n\
+                 \x20 chat     interactive session with a trained actor\n\
+                 \x20 tables   regenerate paper Tables 1-6 (cluster simulator)\n\
+                 \x20 figures  regenerate paper Figures 3-7 (cluster simulator)\n\
+                 \x20 stats    manifest/artifact inventory for a run config\n\
+                 \x20 simulate what-if Step-3 simulation (--model opt-13b --nodes 2\n\
+                 \x20          --gpu a100-80g --system ds-he|hf-ddp|colossal-ai)\n\n\
+                 common flags: --run <tiny|small> --artifacts <dir> --seed <n>\n\
+                 train flags:  --sft-steps N --rm-steps N --ppo-iters N --ema <bool>\n\
+                 \x20             --ptx-coef X --kl-coef X --out runs/<name>"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    let run = args.str("run", "tiny");
+    args.str("artifacts", &format!("artifacts/{run}"))
+}
+
+fn make_blend(m: &Manifest) -> Blend {
+    // Two blended sources (75/25) exercising the paper's data-blending
+    // capability, split 2/4/4 across the three stages like DeepSpeed-Chat's
+    // default `data_split`.
+    let all = TaskGen::new(m.actor.vocab, m.prompt_len, m.gen_len);
+    let counting = TaskGen::new(m.actor.vocab, m.prompt_len, m.gen_len)
+        .with_modes(vec![Mode::Count]);
+    Blend::new(vec![(all, 3.0), (counting, 1.0)], DataSplit::new(2.0, 4.0, 4.0))
+}
+
+fn train(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let seed = args.usize("seed", 0) as i32;
+    let with_ema = args.bool("ema", true);
+    let recipe = TrainRecipe {
+        run: args.str("run", "tiny"),
+        seed: seed as u64,
+        sft_steps: args.usize("sft-steps", 300),
+        sft_lr: args.f64("sft-lr", 1e-2) as f32,
+        rm_steps: args.usize("rm-steps", 200),
+        rm_lr: args.f64("rm-lr", 3e-3) as f32,
+        ppo_iters: args.usize("ppo-iters", 60),
+        actor_lr: args.f64("actor-lr", 3e-4) as f32,
+        critic_lr: args.f64("critic-lr", 1e-3) as f32,
+        ppo: PpoConfig {
+            ptx_coef: args.f64("ptx-coef", 0.2) as f32,
+            kl_coef: args.f64("kl-coef", 0.1) as f32,
+            ema_decay: if with_ema { Some(0.992) } else { None },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let out = PathBuf::from(args.str("out", &format!("runs/{}", recipe.run)));
+    std::fs::create_dir_all(&out)?;
+
+    println!("== dschat train ==");
+    let engine = Rc::new(Engine::cpu()?);
+    println!("platform: {}", engine.platform());
+    let mut he = HybridEngine::init(engine, &dir, seed, with_ema)?;
+    let m = he.manifest();
+    println!(
+        "actor: {} ({} params)  critic: {} ({} params)  batch {}  seq {}",
+        m.actor.name,
+        dschat::util::fmt_count(m.actor.n_params() as f64),
+        m.critic.name,
+        dschat::util::fmt_count(m.critic.n_params() as f64),
+        m.batch,
+        m.seq_len,
+    );
+    let mut blend = make_blend(he.manifest());
+    let report = pipeline::run_all(&mut he, &mut blend, &recipe, Some(&out))?;
+
+    println!("\n-- step 1 (SFT):  loss {:.3} -> {:.3}  [{}]",
+        report.sft.first_metric, report.sft.last_metric, fmt_duration(report.sft.wall_secs));
+    println!("-- step 2 (RM):   loss {:.3} -> {:.3}, held-out acc {:.1}%  [{}]",
+        report.rm.first_metric, report.rm.last_metric, 100.0 * report.rm.extra,
+        fmt_duration(report.rm.wall_secs));
+    println!("-- step 3 (PPO):  true reward {:.3} -> {:.3}  [{}]",
+        report.ppo.first_metric, report.ppo.last_metric, fmt_duration(report.ppo.wall_secs));
+    println!(
+        "   phases: gen {} ({} tok, {:.1} tok/s) | train {} | {} mode flips",
+        fmt_duration(he.stats.gen_secs),
+        he.stats.gen_tokens,
+        he.stats.gen_tok_per_sec(),
+        fmt_duration(he.stats.train_secs),
+        he.stats.mode_flips,
+    );
+    if args.bool("ema", true) {
+        he.promote_ema()?;
+        println!("   promoted EMA checkpoint as the serving actor");
+    }
+    let ckpt = out.join("actor.bin");
+    pipeline::save_actor(&he, &ckpt)?;
+    println!("   saved actor to {}", ckpt.display());
+    println!("   curves: {}/sft.csv rm.csv ppo.csv", out.display());
+    Ok(())
+}
+
+fn chat(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let engine = Rc::new(Engine::cpu()?);
+    let mut he = HybridEngine::init(engine, &dir, 0, false)?;
+    if let Some(ckpt) = args.get("ckpt") {
+        pipeline::load_actor(&mut he, ckpt)?;
+        println!("loaded {ckpt}");
+    } else {
+        println!("note: no --ckpt given; chatting with an untrained actor");
+    }
+    dschat::examples_support::chat_loop(&mut he, args.usize("turns", 4), args.usize("seed", 1) as u64)
+}
+
+/// What-if simulator front-end: one Step-3 run on an arbitrary deployment.
+fn simulate(args: &Args) -> Result<()> {
+    use dschat::baselines::{colossal_ai, ds_he, hf_ddp};
+    use dschat::config::model;
+    use dschat::sim::{a100_40g, a100_80g, a6000_48g, simulate_step3, v100_32g, Cluster, Recipe};
+
+    let m = model(&args.str("model", "opt-13b"));
+    let critic = model(&args.str("critic", "opt-350m"));
+    let gpu = match args.str("gpu", "a100-80g").as_str() {
+        "v100-32g" => v100_32g(),
+        "a6000-48g" => a6000_48g(),
+        "a100-40g" => a100_40g(),
+        "a100-80g" => a100_80g(),
+        other => anyhow::bail!("unknown gpu {other:?} (v100-32g|a6000-48g|a100-40g|a100-80g)"),
+    };
+    let nodes = args.usize("nodes", 1);
+    let cluster = if args.usize("gpus-per-node", 8) == 1 || nodes == 0 {
+        Cluster::single(gpu)
+    } else {
+        Cluster::dgx(gpu, nodes.max(1))
+    };
+    let sys = match args.str("system", "ds-he").as_str() {
+        "ds-he" => ds_he(),
+        "hf-ddp" => hf_ddp(),
+        "colossal-ai" => colossal_ai(),
+        other => anyhow::bail!("unknown system {other:?} (ds-he|hf-ddp|colossal-ai)"),
+    };
+    let recipe = Recipe {
+        global_batch: args.usize("global-batch", 1024) as u64,
+        prompt_len: args.usize("prompt-len", 256) as u64,
+        gen_len: args.usize("gen-len", 256) as u64,
+        dataset_pairs: args.usize("dataset-pairs", 263_800) as u64,
+    };
+    println!(
+        "simulating {} | actor {} ({}) | {} GPUs ({} x {})",
+        sys.name,
+        m.name,
+        dschat::util::fmt_count(m.n_params() as f64),
+        cluster.world(),
+        cluster.nodes,
+        cluster.gpu.name
+    );
+    match simulate_step3(&sys, &m, &critic, &cluster, &recipe) {
+        None => println!("OOM: this deployment cannot hold the Step-3 working set"),
+        Some(o) => {
+            let epoch = o.iter_secs() * recipe.steps_per_epoch() as f64;
+            println!("per-iteration: gen {} (mb {} x {} waves) + train {} (mb {})",
+                fmt_duration(o.gen_secs), o.gen_microbatch, o.gen_waves,
+                fmt_duration(o.train_secs), o.train_microbatch);
+            println!("throughput: {:.3} pairs/s | {:.0} effective TFLOPs/GPU (gen {:.0}, train {:.0})",
+                o.pairs_per_sec, o.effective_tflops_per_gpu, o.gen_tflops_per_gpu,
+                o.train_tflops_per_gpu);
+            println!("one epoch ({} steps): {}  (~${:.0} on Azure)",
+                recipe.steps_per_epoch(), fmt_duration(epoch), cluster.dollars(epoch));
+        }
+    }
+    Ok(())
+}
+
+fn stats(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)?;
+    m.validate()?;
+    println!("run {:?} at {}", m.run, dir);
+    println!(
+        "actor {} ({} params, {} tensors)  critic {} ({} params)",
+        m.actor.name,
+        dschat::util::fmt_count(m.actor.n_params() as f64),
+        m.actor_params.len(),
+        m.critic.name,
+        dschat::util::fmt_count(m.critic.n_params() as f64),
+    );
+    println!("batch {}  prompt {}  gen {}", m.batch, m.prompt_len, m.gen_len);
+    println!("{} artifacts:", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {name:<20} {:>3} inputs  -> {:?}  ({} HLO)",
+            a.inputs.len(),
+            a.outputs,
+            dschat::util::fmt_bytes(a.hlo_bytes as f64),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Timing and throughput instrumentation for the real runs (the measured
+//! side of EXPERIMENTS.md) plus the paper's TFLOPs bookkeeping.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::config::ModelConfig;
+
+/// Accumulating named timer (scopes keyed by label).
+#[derive(Debug, Default)]
+pub struct Timers {
+    acc: BTreeMap<String, (f64, u64)>,
+}
+
+pub struct Scope<'a> {
+    timers: &'a mut Timers,
+    label: String,
+    start: Instant,
+}
+
+impl Timers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn scope(&mut self, label: &str) -> Scope<'_> {
+        Scope { label: label.to_string(), start: Instant::now(), timers: self }
+    }
+
+    pub fn add(&mut self, label: &str, secs: f64) {
+        let e = self.acc.entry(label.to_string()).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, label: &str) -> f64 {
+        self.acc.get(label).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, label: &str) -> u64 {
+        self.acc.get(label).map(|e| e.1).unwrap_or(0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (k, (secs, n)) in &self.acc {
+            s.push_str(&format!(
+                "{k:<28} total {:>10}  calls {n:>7}  mean {:>10}\n",
+                crate::util::fmt_duration(*secs),
+                crate::util::fmt_duration(*secs / (*n).max(1) as f64),
+            ));
+        }
+        s
+    }
+}
+
+impl Drop for Scope<'_> {
+    fn drop(&mut self) {
+        let secs = self.start.elapsed().as_secs_f64();
+        self.timers.add(&self.label, secs);
+    }
+}
+
+/// The paper's throughput accounting for one RLHF iteration (§5.3 and the
+/// benchmark-settings formulas): generation FLOPs + training FLOPs.
+#[derive(Debug, Clone, Copy)]
+pub struct RlhfFlops {
+    pub gen_flops: f64,
+    pub train_flops: f64,
+}
+
+pub fn rlhf_iteration_flops(
+    actor: &ModelConfig,
+    critic: &ModelConfig,
+    pairs: u64,
+    prompt_len: u64,
+    gen_len: u64,
+) -> RlhfFlops {
+    let seq = prompt_len + gen_len;
+    let gen =
+        actor.fwd_flops(pairs * gen_len, seq) as f64 + actor.fwd_flops(pairs * prompt_len, seq) as f64;
+    let toks = (pairs * seq) as f64;
+    let train = toks * (10.0 * actor.n_params() as f64 + 8.0 * critic.n_params() as f64);
+    RlhfFlops { gen_flops: gen, train_flops: train }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model;
+
+    #[test]
+    fn timer_accumulates() {
+        let mut t = Timers::new();
+        {
+            let _s = t.scope("x");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        {
+            let _s = t.scope("x");
+        }
+        assert_eq!(t.count("x"), 2);
+        assert!(t.total("x") >= 0.005);
+        assert!(t.report().contains("x"));
+    }
+
+    #[test]
+    fn flops_generation_fraction_matches_paper() {
+        // §5.3: generation ≈ 20% of Step-3 computation for the benchmark
+        // recipe (256 prompt + 256 generated).
+        let f = rlhf_iteration_flops(&model("opt-13b"), &model("opt-350m"), 1024, 256, 256);
+        let frac = f.gen_flops / (f.gen_flops + f.train_flops);
+        assert!((0.1..0.3).contains(&frac), "generation fraction {frac}");
+    }
+}

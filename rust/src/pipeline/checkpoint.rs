@@ -1,0 +1,153 @@
+//! Checkpoint format: a simple self-describing binary container for named
+//! tensors (no serde available offline). Layout:
+//!
+//! ```text
+//! magic "DSCHKPT1" | u32 n_tensors | n x {
+//!     u32 name_len | name utf-8 | u8 dtype (0=f32, 1=i32) |
+//!     u32 ndims | ndims x u64 | data (little-endian)
+//! }
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+const MAGIC: &[u8; 8] = b"DSCHKPT1";
+
+pub fn save(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(&path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        match t {
+            HostTensor::F32(data, shape) => {
+                w.write_all(&[0u8])?;
+                write_shape(&mut w, shape)?;
+                for x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            HostTensor::I32(data, shape) => {
+                w.write_all(&[1u8])?;
+                write_shape(&mut w, shape)?;
+                for x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn write_shape(w: &mut impl Write, shape: &[usize]) -> Result<()> {
+    w.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for &d in shape {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, HostTensor)>> {
+    let mut r = BufReader::new(
+        File::open(&path).with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a dschat checkpoint (bad magic)");
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 1 << 20 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf-8")?;
+        let mut dtype = [0u8; 1];
+        r.read_exact(&mut dtype)?;
+        let ndims = read_u32(&mut r)? as usize;
+        if ndims > 16 {
+            bail!("corrupt checkpoint: {ndims} dims");
+        }
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let t = match dtype[0] {
+            0 => {
+                let mut data = vec![0f32; numel];
+                for x in data.iter_mut() {
+                    let mut b = [0u8; 4];
+                    r.read_exact(&mut b)?;
+                    *x = f32::from_le_bytes(b);
+                }
+                HostTensor::F32(data, shape)
+            }
+            1 => {
+                let mut data = vec![0i32; numel];
+                for x in data.iter_mut() {
+                    let mut b = [0u8; 4];
+                    r.read_exact(&mut b)?;
+                    *x = i32::from_le_bytes(b);
+                }
+                HostTensor::I32(data, shape)
+            }
+            d => bail!("unknown dtype tag {d}"),
+        };
+        out.push((name, t));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let path = std::env::temp_dir().join("dschat_ckpt_test/rt.bin");
+        let tensors = vec![
+            ("embed".to_string(), HostTensor::F32(vec![1.5, -2.0, 0.25], vec![3])),
+            ("ids".to_string(), HostTensor::I32(vec![7, 8], vec![2, 1])),
+        ];
+        save(&path, &tensors).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(tensors, back);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("dschat_ckpt_test/garbage.bin");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        let path = std::env::temp_dir().join("dschat_ckpt_test/empty.bin");
+        save(&path, &[]).unwrap();
+        assert!(load(&path).unwrap().is_empty());
+    }
+}

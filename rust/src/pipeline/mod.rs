@@ -1,0 +1,234 @@
+//! The full 3-step RLHF pipeline (paper §3 / Figure 1): the `train.py`
+//! experience as a library. Each step driver logs a CSV curve and returns a
+//! summary; `run_all` chains them exactly like DeepSpeed-Chat's single
+//! script.
+
+pub mod checkpoint;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::TrainRecipe;
+use crate::coordinator::{IterStats, PpoTrainer};
+use crate::data::Blend;
+use crate::hybrid::HybridEngine;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+
+/// Step summary used by EXPERIMENTS.md and the Table 4–6 analogues.
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    pub steps: usize,
+    pub wall_secs: f64,
+    pub first_metric: f32,
+    /// Mean of the final 10 steps' metric (noise-robust).
+    pub last_metric: f32,
+    /// Step-specific extra (RM: final accuracy; PPO: final true reward).
+    pub extra: f32,
+}
+
+/// Noise-robust trailing mean over a training curve.
+fn tail_mean(values: &[f32], n: usize) -> f32 {
+    let tail = &values[values.len().saturating_sub(n)..];
+    if tail.is_empty() {
+        return 0.0;
+    }
+    tail.iter().sum::<f32>() / tail.len() as f32
+}
+
+/// Step 1: supervised fine-tuning on correct demonstrations.
+pub fn run_sft(
+    he: &mut HybridEngine,
+    blend: &mut Blend,
+    recipe: &TrainRecipe,
+    rng: &mut Rng,
+    log: Option<&mut CsvWriter>,
+) -> Result<StepReport> {
+    let t0 = std::time::Instant::now();
+    let b = he.manifest().batch;
+    let mut report = StepReport { steps: recipe.sft_steps, ..Default::default() };
+    let mut log = log;
+    let mut losses = Vec::with_capacity(recipe.sft_steps);
+    for step in 0..recipe.sft_steps {
+        let batch = blend.sft_batch(rng, b);
+        let lr = recipe.lr_at(recipe.sft_lr, step, recipe.sft_steps);
+        let loss = he.sft_step(&batch, lr)?;
+        if step == 0 {
+            report.first_metric = loss;
+        }
+        losses.push(loss);
+        if let Some(w) = log.as_deref_mut() {
+            w.rowf(&[step as f64, loss as f64, lr as f64])?;
+        }
+    }
+    report.last_metric = tail_mean(&losses, 10);
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    // The SFT actor becomes the frozen PPO reference (and seeds the EMA).
+    he.freeze_reference()?;
+    Ok(report)
+}
+
+/// Step 2: reward-model fine-tuning on preference pairs.
+pub fn run_rm(
+    he: &mut HybridEngine,
+    blend: &mut Blend,
+    recipe: &TrainRecipe,
+    rng: &mut Rng,
+    log: Option<&mut CsvWriter>,
+) -> Result<StepReport> {
+    let t0 = std::time::Instant::now();
+    let b = he.manifest().batch;
+    let mut report = StepReport { steps: recipe.rm_steps, ..Default::default() };
+    let mut log = log;
+    let mut losses = Vec::with_capacity(recipe.rm_steps);
+    for step in 0..recipe.rm_steps {
+        let pb = blend.pair_batch(rng, b);
+        let lr = recipe.lr_at(recipe.rm_lr, step, recipe.rm_steps);
+        let (loss, acc) = he.rm_step(&pb, lr)?;
+        if step == 0 {
+            report.first_metric = loss;
+        }
+        losses.push(loss);
+        let _ = acc;
+        if let Some(w) = log.as_deref_mut() {
+            w.rowf(&[step as f64, loss as f64, acc as f64, lr as f64])?;
+        }
+    }
+    report.last_metric = tail_mean(&losses, 10);
+    // Held-out accuracy over fresh pairs.
+    let mut acc_sum = 0.0f32;
+    let evals = 8;
+    for _ in 0..evals {
+        let pb = blend.pair_batch(rng, b);
+        let (_, acc) = he.rm_eval(&pb)?;
+        acc_sum += acc;
+    }
+    report.extra = acc_sum / evals as f32;
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    // The trained RM is frozen for PPO; the critic continues from it.
+    he.freeze_reward_model()?;
+    Ok(report)
+}
+
+/// Step 3: PPO RLHF with EMA + mixture training.
+pub fn run_ppo(
+    he: &mut HybridEngine,
+    blend: &mut Blend,
+    recipe: &TrainRecipe,
+    rng: &mut Rng,
+    log: Option<&mut CsvWriter>,
+) -> Result<(StepReport, Vec<IterStats>)> {
+    let t0 = std::time::Instant::now();
+    let mut trainer = PpoTrainer::new(recipe.ppo.clone(), recipe.seed ^ 0x9907);
+    let mut report = StepReport { steps: recipe.ppo_iters, ..Default::default() };
+    let mut history = Vec::with_capacity(recipe.ppo_iters);
+    let mut log = log;
+    let mut rewards = Vec::with_capacity(recipe.ppo_iters);
+    for iter in 0..recipe.ppo_iters {
+        let actor_lr = recipe.lr_at(recipe.actor_lr, iter, recipe.ppo_iters);
+        let critic_lr = recipe.lr_at(recipe.critic_lr, iter, recipe.ppo_iters);
+        let stats = trainer.iteration(he, blend, rng, actor_lr, critic_lr)?;
+        if iter == 0 {
+            report.first_metric = stats.true_reward;
+        }
+        rewards.push(stats.true_reward);
+        report.extra = stats.rm_score;
+        if let Some(w) = log.as_deref_mut() {
+            w.rowf(&[
+                iter as f64,
+                stats.true_reward as f64,
+                stats.rm_score as f64,
+                stats.kl_to_ref as f64,
+                stats.actor_loss as f64,
+                stats.critic_loss as f64,
+                stats.clipfrac as f64,
+                stats.gen_secs,
+                stats.train_secs,
+            ])?;
+        }
+        history.push(stats);
+    }
+    report.last_metric = tail_mean(&rewards, 10);
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    Ok((report, history))
+}
+
+/// All three steps, with optional CSV logging into `run_dir`.
+pub struct PipelineReport {
+    pub sft: StepReport,
+    pub rm: StepReport,
+    pub ppo: StepReport,
+    pub ppo_history: Vec<IterStats>,
+}
+
+pub fn run_all(
+    he: &mut HybridEngine,
+    blend: &mut Blend,
+    recipe: &TrainRecipe,
+    run_dir: Option<&Path>,
+) -> Result<PipelineReport> {
+    let mut rng = Rng::new(recipe.seed);
+    let mut sft_log = match run_dir {
+        Some(d) => Some(CsvWriter::create(d.join("sft.csv"), &["step", "loss", "lr"])?),
+        None => None,
+    };
+    let sft = run_sft(he, blend, recipe, &mut rng, sft_log.as_mut())?;
+
+    let mut rm_log = match run_dir {
+        Some(d) => Some(CsvWriter::create(d.join("rm.csv"), &["step", "loss", "acc", "lr"])?),
+        None => None,
+    };
+    let rm = run_rm(he, blend, recipe, &mut rng, rm_log.as_mut())?;
+
+    let mut ppo_log = match run_dir {
+        Some(d) => Some(CsvWriter::create(
+            d.join("ppo.csv"),
+            &[
+                "iter", "true_reward", "rm_score", "kl", "actor_loss", "critic_loss",
+                "clipfrac", "gen_secs", "train_secs",
+            ],
+        )?),
+        None => None,
+    };
+    let (ppo, ppo_history) = run_ppo(he, blend, recipe, &mut rng, ppo_log.as_mut())?;
+
+    Ok(PipelineReport { sft, rm, ppo, ppo_history })
+}
+
+/// Save / load the actor (used by `chat` and `serve` after training).
+pub fn save_actor(he: &HybridEngine, path: impl AsRef<Path>) -> Result<()> {
+    let host = he.actor.to_host()?;
+    let named: Vec<(String, crate::runtime::HostTensor)> = he
+        .manifest()
+        .actor_params
+        .iter()
+        .map(|s| s.name.clone())
+        .zip(host)
+        .collect();
+    checkpoint::save(path, &named)
+}
+
+pub fn load_actor(he: &mut HybridEngine, path: impl AsRef<Path>) -> Result<()> {
+    let named = checkpoint::load(path)?;
+    let specs = he.manifest().actor_params.clone();
+    anyhow::ensure!(
+        named.len() == specs.len(),
+        "checkpoint has {} tensors, manifest expects {}",
+        named.len(),
+        specs.len()
+    );
+    let mut lits = Vec::with_capacity(named.len());
+    for ((name, t), spec) in named.iter().zip(&specs) {
+        anyhow::ensure!(
+            name == &spec.name && t.shape() == spec.shape.as_slice(),
+            "checkpoint tensor {name:?} {:?} does not match manifest {:?} {:?}",
+            t.shape(),
+            spec.name,
+            spec.shape
+        );
+        lits.push(t.to_literal()?);
+    }
+    he.actor.replace(&he.engine.clone(), &lits)?;
+    Ok(())
+}

@@ -1,0 +1,232 @@
+//! The AOT manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed with the in-tree JSON parser.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+    pub hlo_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub run: String,
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub seq_len: usize,
+    pub actor: ModelConfig,
+    pub critic: ModelConfig,
+    pub actor_params: Vec<TensorSpec>,
+    pub critic_params: Vec<TensorSpec>,
+    pub actor_opt: Vec<TensorSpec>,
+    pub critic_opt: Vec<TensorSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .context("expected array of tensor specs")?
+        .iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e.at("name").as_str().context("name")?.to_string(),
+                shape: e
+                    .at("shape")
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+fn model_config(j: &Json) -> Result<ModelConfig> {
+    Ok(ModelConfig {
+        name: j.at("name").as_str().context("name")?.to_string(),
+        vocab: j.at("vocab").as_usize().context("vocab")?,
+        d_model: j.at("d_model").as_usize().context("d_model")?,
+        n_layers: j.at("n_layers").as_usize().context("n_layers")?,
+        n_heads: j.at("n_heads").as_usize().context("n_heads")?,
+        d_ff: j.at("d_ff").as_usize().context("d_ff")?,
+        max_seq: j.at("max_seq").as_usize().context("max_seq")?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let cfg = j.at("config");
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.at("artifacts").as_obj().context("artifacts")? {
+            let inputs = a
+                .at("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(|i| {
+                    Ok(IoSpec {
+                        shape: i
+                            .at("shape")
+                            .as_arr()
+                            .context("shape")?
+                            .iter()
+                            .map(|d| d.as_usize().context("dim"))
+                            .collect::<Result<_>>()?,
+                        dtype: i.at("dtype").as_str().context("dtype")?.to_string(),
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let outputs = a
+                .at("outputs")
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(|o| Ok(o.as_str().context("output name")?.to_string()))
+                .collect::<Result<_>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(a.at("file").as_str().context("file")?),
+                    inputs,
+                    outputs,
+                    hlo_bytes: a.get("hlo_bytes").and_then(|b| b.as_usize()).unwrap_or(0),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            run: j.at("run").as_str().context("run")?.to_string(),
+            dir,
+            batch: cfg.at("batch").as_usize().context("batch")?,
+            prompt_len: cfg.at("prompt_len").as_usize().context("prompt_len")?,
+            gen_len: cfg.at("gen_len").as_usize().context("gen_len")?,
+            seq_len: cfg.at("seq_len").as_usize().context("seq_len")?,
+            actor: model_config(cfg.at("actor"))?,
+            critic: model_config(cfg.at("critic"))?,
+            actor_params: tensor_specs(j.at("actor_params"))?,
+            critic_params: tensor_specs(j.at("critic_params"))?,
+            actor_opt: tensor_specs(j.at("actor_opt"))?,
+            critic_opt: tensor_specs(j.at("critic_opt"))?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        match self.artifacts.get(name) {
+            Some(a) => Ok(a),
+            None => bail!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            ),
+        }
+    }
+
+    /// Sanity checks tying the manifest to the architecture configs.
+    pub fn validate(&self) -> Result<()> {
+        if self.seq_len != self.prompt_len + self.gen_len {
+            bail!("seq_len != prompt_len + gen_len");
+        }
+        let actor_numel: usize = self.actor_params.iter().map(|t| t.numel()).sum();
+        if actor_numel as u64 != self.actor.n_params() {
+            bail!(
+                "actor param numel {} != config n_params {}",
+                actor_numel,
+                self.actor.n_params()
+            );
+        }
+        if self.actor_opt.len() != 2 * self.actor_params.len() + 1 {
+            bail!("actor opt layout is not [t] + m + v");
+        }
+        if self.critic_opt.len() != 2 * self.critic_params.len() + 1 {
+            bail!("critic opt layout is not [t] + m + v");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature manifest exercising the parser without artifacts on disk.
+    pub fn write_fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = r#"{
+          "run": "fake",
+          "config": {
+            "batch": 2, "prompt_len": 4, "gen_len": 4, "seq_len": 8,
+            "actor": {"name":"a","vocab":16,"d_model":8,"n_layers":1,"n_heads":2,"d_ff":16,"max_seq":8,"d_head":4,"n_params":100},
+            "critic": {"name":"c","vocab":16,"d_model":8,"n_layers":1,"n_heads":2,"d_ff":16,"max_seq":8,"d_head":4,"n_params":100}
+          },
+          "actor_params": [{"name": "embed", "shape": [16, 8]}],
+          "critic_params": [{"name": "embed", "shape": [16, 8]}],
+          "actor_opt": [{"name":"t","shape":[1]},{"name":"m.embed","shape":[16,8]},{"name":"v.embed","shape":[16,8]}],
+          "critic_opt": [{"name":"t","shape":[1]},{"name":"m.embed","shape":[16,8]},{"name":"v.embed","shape":[16,8]}],
+          "artifacts": {
+            "sft_step": {"file": "sft_step.hlo.txt",
+                         "inputs": [{"shape": [2, 8], "dtype": "int32"}],
+                         "outputs": ["actor_params", "loss"], "hlo_bytes": 10}
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parse_fake_manifest() {
+        let dir = std::env::temp_dir().join("dschat_manifest_test");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.run, "fake");
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.actor.vocab, 16);
+        assert_eq!(m.actor_params[0].numel(), 128);
+        let a = m.artifact("sft_step").unwrap();
+        assert_eq!(a.inputs[0].dtype, "int32");
+        assert_eq!(a.outputs, vec!["actor_params", "loss"]);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,277 @@
+//! L3 runtime: loads the AOT HLO-text artifacts and executes them on the
+//! PJRT CPU client (`xla` crate). This is the only module that touches XLA;
+//! everything above it (hybrid engine, coordinator, pipeline) works in terms
+//! of [`HostTensor`]s and named artifacts.
+//!
+//! Buffer strategy: model/optimizer state is uploaded once and kept as
+//! device-resident `PjRtBuffer`s; the hot path calls `execute_b` so inputs
+//! are never re-copied. Outputs arrive as a single tuple buffer (the C
+//! wrapper does not set `untuple_result`), so results are fetched via one
+//! literal and decomposed — on the CPU plugin this is a plain memcpy, and
+//! the cost is measured in `rust/benches/hot_paths.rs`.
+
+pub mod manifest;
+pub mod tensor;
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, TensorSpec};
+pub use tensor::HostTensor;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Cumulative executor statistics (per artifact), for the perf pass.
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub exec_secs: f64,
+    pub fetch_secs: f64,
+    pub upload_secs: f64,
+}
+
+/// The PJRT engine: compiles artifacts, owns buffers, tracks stats.
+pub struct Engine {
+    client: PjRtClient,
+    stats: RefCell<BTreeMap<String, ExecStats>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, stats: RefCell::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text artifact.
+    pub fn load_artifact(self: &Rc<Self>, spec: &ArtifactSpec) -> Result<Artifact> {
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            spec.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling {:?}", spec.name))?;
+        Ok(Artifact {
+            engine: Rc::clone(self),
+            name: spec.name.clone(),
+            exe,
+            compile_secs: t0.elapsed().as_secs_f64(),
+            n_inputs: spec.inputs.len(),
+        })
+    }
+
+    /// Upload a host tensor to a device-resident buffer.
+    pub fn upload(&self, t: &HostTensor) -> Result<PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = match t {
+            HostTensor::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
+            HostTensor::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
+        };
+        self.note("upload", |st| st.upload_secs += t0.elapsed().as_secs_f64());
+        Ok(buf)
+    }
+
+    pub fn upload_all(&self, ts: &[HostTensor]) -> Result<Vec<PjRtBuffer>> {
+        ts.iter().map(|t| self.upload(t)).collect()
+    }
+
+    fn note(&self, key: &str, f: impl FnOnce(&mut ExecStats)) {
+        let mut stats = self.stats.borrow_mut();
+        f(stats.entry(key.to_string()).or_default());
+    }
+
+    pub fn stats(&self) -> BTreeMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        self.stats.borrow_mut().clear();
+    }
+}
+
+/// A compiled artifact bound to its engine.
+pub struct Artifact {
+    engine: Rc<Engine>,
+    pub name: String,
+    exe: PjRtLoadedExecutable,
+    pub compile_secs: f64,
+    pub n_inputs: usize,
+}
+
+impl Artifact {
+    fn record(&self, exec: f64, fetch: f64) {
+        self.engine.note(&self.name, |st| {
+            st.calls += 1;
+            st.exec_secs += exec;
+            st.fetch_secs += fetch;
+        });
+    }
+
+    fn check_arity(&self, got: usize) -> Result<()> {
+        if got != self.n_inputs {
+            bail!(
+                "artifact {:?} expects {} inputs, got {}",
+                self.name,
+                self.n_inputs,
+                got
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute with host literals (cold path / one-shot calls).
+    pub fn call_literals(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        self.check_arity(inputs.len())?;
+        let t0 = Instant::now();
+        let out = self.exe.execute::<Literal>(inputs)?;
+        let t1 = Instant::now();
+        let result = fetch_tuple(&out[0][0])?;
+        self.record(t1.duration_since(t0).as_secs_f64(), t1.elapsed().as_secs_f64());
+        Ok(result)
+    }
+
+    /// Execute with device-resident buffers (hot path: params stay put).
+    pub fn call_buffers(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        self.check_arity(inputs.len())?;
+        let t0 = Instant::now();
+        let out = self.exe.execute_b::<&PjRtBuffer>(inputs)?;
+        let t1 = Instant::now();
+        let result = fetch_tuple(&out[0][0])?;
+        self.record(t1.duration_since(t0).as_secs_f64(), t1.elapsed().as_secs_f64());
+        Ok(result)
+    }
+
+    /// Convenience: host tensors in, host tensors out.
+    pub fn call(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let out = self.call_literals(&lits)?;
+        out.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// Fetch a (possibly tuple) output buffer as decomposed literals.
+fn fetch_tuple(buf: &PjRtBuffer) -> Result<Vec<Literal>> {
+    let mut lit = buf.to_literal_sync()?;
+    let shape = lit.shape()?;
+    if shape.is_tuple() {
+        Ok(lit.decompose_tuple()?)
+    } else {
+        Ok(vec![lit])
+    }
+}
+
+/// A named set of device-resident tensors (model params / optimizer state).
+/// The hybrid engine holds one per model role (actor, ref, critic, rm, ema).
+pub struct ParamStore {
+    pub specs: Vec<TensorSpec>,
+    pub buffers: Vec<PjRtBuffer>,
+}
+
+impl ParamStore {
+    /// NOTE: uploads go through `Engine::upload` (`buffer_from_host_buffer`,
+    /// `kImmutableOnlyDuringCall` — synchronous copy). `BufferFromHostLiteral`
+    /// must NOT be used here: its transfer is async and segfaults once the
+    /// source literal is dropped (observed as a SIGSEGV inside
+    /// `AbstractTfrtCpuBuffer::CopyFromLiteral` on a worker thread).
+    pub fn from_literals(
+        engine: &Engine,
+        specs: &[TensorSpec],
+        lits: &[Literal],
+    ) -> Result<ParamStore> {
+        if lits.len() != specs.len() {
+            bail!("param store arity: {} literals vs {} specs", lits.len(), specs.len());
+        }
+        let buffers = lits
+            .iter()
+            .map(|l| engine.upload(&HostTensor::from_literal(l)?))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamStore { specs: specs.to_vec(), buffers })
+    }
+
+    pub fn from_host(
+        engine: &Engine,
+        specs: &[TensorSpec],
+        ts: &[HostTensor],
+    ) -> Result<ParamStore> {
+        let lits: Vec<Literal> = ts.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        Self::from_literals(engine, specs, &lits)
+    }
+
+    /// Replace the stored buffers with freshly computed literals (after a
+    /// train step the artifact returns the new params as tuple elements).
+    pub fn replace(&mut self, engine: &Engine, lits: &[Literal]) -> Result<()> {
+        if lits.len() != self.specs.len() {
+            bail!("replace arity: {} vs {}", lits.len(), self.specs.len());
+        }
+        for (slot, l) in self.buffers.iter_mut().zip(lits) {
+            // Sync upload (see from_literals note re: BufferFromHostLiteral).
+            *slot = engine.upload(&HostTensor::from_literal(l)?)?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+
+    /// Download everything to host (checkpointing).
+    pub fn to_host(&self) -> Result<Vec<HostTensor>> {
+        self.buffers
+            .iter()
+            .map(|b| HostTensor::from_literal(&b.to_literal_sync()?))
+            .collect()
+    }
+
+    /// Total parameter bytes held on device.
+    pub fn bytes(&self) -> usize {
+        self.specs.iter().map(|s| s.numel() * 4).sum()
+    }
+}
+
+/// Load every artifact of a manifest (used by the pipeline drivers).
+pub struct ArtifactSet {
+    pub manifest: Manifest,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl ArtifactSet {
+    pub fn load(engine: &Rc<Engine>, dir: impl AsRef<Path>, names: &[&str]) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate()?;
+        let mut artifacts = BTreeMap::new();
+        for name in names {
+            let spec = manifest.artifact(name)?;
+            artifacts.insert(name.to_string(), engine.load_artifact(spec)?);
+        }
+        Ok(ArtifactSet { manifest, artifacts })
+    }
+
+    pub fn load_all(engine: &Rc<Engine>, dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let names: Vec<String> = manifest.artifacts.keys().cloned().collect();
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        Self::load(engine, dir, &refs)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))
+    }
+}

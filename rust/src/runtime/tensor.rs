@@ -1,0 +1,116 @@
+//! Host-side tensor type bridging rust data and XLA literals.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+/// A host tensor: flat data + shape. Only the two dtypes the artifacts use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        HostTensor::F32(vec![0.0; shape.iter().product()], shape.to_vec())
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar convenience (loss values etc).
+    pub fn item_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got shape {:?}", self.shape());
+        }
+        Ok(d[0])
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let lit = match self {
+            HostTensor::F32(d, s) => {
+                let dims: Vec<i64> = s.iter().map(|&x| x as i64).collect();
+                Literal::vec1(d).reshape(&dims)?
+            }
+            HostTensor::I32(d, s) => {
+                let dims: Vec<i64> = s.iter().map(|&x| x as i64).collect();
+                Literal::vec1(d).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
+            ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::I32(vec![7, -8, 9, 0], vec![4]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_item() {
+        let t = HostTensor::scalar_f32(2.5);
+        assert_eq!(t.item_f32().unwrap(), 2.5);
+        assert!(HostTensor::zeros_f32(&[2, 2]).item_f32().is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Token sampling: the L3 half of the generation hot loop.
+//!
+//! The decode artifact returns logits; everything after that — temperature,
+//! repetition penalty, top-k / top-p filtering, categorical draw — happens
+//! here, in rust, per token. Ordering follows the HF convention the paper's
+//! examples rely on: repetition penalty → temperature → top-k → top-p.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    pub temperature: f32,
+    pub top_k: usize,
+    pub top_p: f32,
+    pub repetition_penalty: f32,
+    /// Greedy decoding (argmax) if true — used by eval and the chat example.
+    pub greedy: bool,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            greedy: false,
+        }
+    }
+}
+
+pub struct Sampler {
+    pub cfg: SamplerConfig,
+    rng: Rng,
+    scratch: Vec<(f32, usize)>,
+}
+
+impl Sampler {
+    pub fn new(cfg: SamplerConfig, seed: u64) -> Self {
+        Sampler { cfg, rng: Rng::new(seed), scratch: Vec::new() }
+    }
+
+    /// Sample one token id from a logits row. `history` drives the
+    /// repetition penalty (pass `&[]` to disable).
+    pub fn sample(&mut self, logits: &[f32], history: &[i32]) -> i32 {
+        debug_assert!(!logits.is_empty());
+        if self.cfg.greedy && self.cfg.repetition_penalty == 1.0 {
+            return argmax(logits) as i32;
+        }
+        let mut l = logits.to_vec();
+        self.apply_repetition_penalty(&mut l, history);
+        if self.cfg.greedy {
+            return argmax(&l) as i32;
+        }
+        let t = self.cfg.temperature.max(1e-4);
+        for x in l.iter_mut() {
+            *x /= t;
+        }
+        self.filter_top_k(&mut l);
+        self.filter_top_p(&mut l);
+        self.categorical(&l)
+    }
+
+    fn apply_repetition_penalty(&self, l: &mut [f32], history: &[i32]) {
+        let p = self.cfg.repetition_penalty;
+        if p == 1.0 {
+            return;
+        }
+        for &tok in history {
+            let x = &mut l[tok as usize];
+            // HF semantics: shrink positive logits, amplify negative ones.
+            *x = if *x > 0.0 { *x / p } else { *x * p };
+        }
+    }
+
+    fn filter_top_k(&mut self, l: &mut [f32]) {
+        let k = self.cfg.top_k;
+        if k == 0 || k >= l.len() {
+            return;
+        }
+        self.scratch.clear();
+        self.scratch.extend(l.iter().copied().zip(0..));
+        // Partial selection: kth largest is the cutoff.
+        self.scratch
+            .select_nth_unstable_by(k - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+        let cutoff = self.scratch[k - 1].0;
+        let mut kept = 0usize;
+        for x in l.iter_mut() {
+            if *x >= cutoff && kept < k {
+                kept += 1;
+            } else {
+                *x = f32::NEG_INFINITY;
+            }
+        }
+    }
+
+    fn filter_top_p(&mut self, l: &mut [f32]) {
+        let p = self.cfg.top_p;
+        if p >= 1.0 {
+            return;
+        }
+        self.scratch.clear();
+        self.scratch
+            .extend(l.iter().copied().zip(0..).filter(|(x, _)| x.is_finite()));
+        self.scratch
+            .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        // Softmax over the sorted candidates, keep the smallest prefix with
+        // cumulative mass >= p (always at least one).
+        let max = self.scratch[0].0;
+        let z: f32 = self.scratch.iter().map(|(x, _)| (x - max).exp()).sum();
+        let mut cum = 0.0f32;
+        let mut cut = self.scratch.len();
+        for (i, (x, _)) in self.scratch.iter().enumerate() {
+            cum += (x - max).exp() / z;
+            if cum >= p {
+                cut = i + 1;
+                break;
+            }
+        }
+        for (_, idx) in &self.scratch[cut..] {
+            l[*idx] = f32::NEG_INFINITY;
+        }
+    }
+
+    fn categorical(&mut self, l: &[f32]) -> i32 {
+        let max = l.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = l.iter().map(|x| (x - max).exp()).sum();
+        let u = self.rng.f32() * z;
+        let mut cum = 0.0f32;
+        for (i, x) in l.iter().enumerate() {
+            cum += (x - max).exp();
+            if cum >= u {
+                return i as i32;
+            }
+        }
+        argmax(l) as i32 // numerical fallback
+    }
+}
+
+pub fn argmax(l: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in l.iter().enumerate() {
+        if *x > l[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Softmax probabilities (used by tests and the chat example's display).
+pub fn softmax(l: &[f32]) -> Vec<f32> {
+    let max = l.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = l.iter().map(|x| (x - max).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sampler(cfg: SamplerConfig) -> Sampler {
+        Sampler::new(cfg, 42)
+    }
+
+    #[test]
+    fn greedy_takes_argmax() {
+        let mut s = sampler(SamplerConfig { greedy: true, ..Default::default() });
+        assert_eq!(s.sample(&[0.1, 3.0, -1.0, 2.9], &[]), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut s = sampler(SamplerConfig { top_k: 2, ..Default::default() });
+        let logits = vec![5.0, 4.9, -10.0, -10.0, -10.0];
+        for _ in 0..200 {
+            let t = s.sample(&logits, &[]);
+            assert!(t == 0 || t == 1, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        let mut s = sampler(SamplerConfig { top_p: 0.5, ..Default::default() });
+        // p(0) ≈ 0.84 alone exceeds 0.5 -> only token 0 may be drawn.
+        let logits = vec![3.0, 1.0, 0.0, -1.0];
+        for _ in 0..200 {
+            assert_eq!(s.sample(&logits, &[]), 0);
+        }
+    }
+
+    #[test]
+    fn temperature_zero_approaches_greedy() {
+        let mut s = sampler(SamplerConfig { temperature: 1e-6, ..Default::default() });
+        for _ in 0..50 {
+            assert_eq!(s.sample(&[0.0, 0.5, 0.2], &[]), 1);
+        }
+    }
+
+    #[test]
+    fn repetition_penalty_discourages_history() {
+        let logits = vec![2.0, 2.0];
+        let mut s = sampler(SamplerConfig {
+            greedy: true,
+            repetition_penalty: 2.0,
+            ..Default::default()
+        });
+        // token 0 in history -> its logit halves -> argmax flips to 1
+        assert_eq!(s.sample(&logits, &[0]), 1);
+    }
+
+    #[test]
+    fn categorical_matches_distribution() {
+        let mut s = sampler(SamplerConfig::default());
+        let logits = vec![1.0f32.ln(), 3.0f32.ln()]; // p = [0.25, 0.75]
+        let n = 20_000;
+        let mut ones = 0;
+        for _ in 0..n {
+            if s.sample(&logits, &[]) == 1 {
+                ones += 1;
+            }
+        }
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+}

@@ -1,0 +1,161 @@
+//! GPU + cluster hardware models at the paper's scales.
+
+/// One GPU SKU (fp16 tensor peak, HBM).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// fp16 tensor-core peak, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// HBM capacity, bytes.
+    pub mem_bytes: f64,
+    /// Azure-ish price, $/GPU-hour (paper's cost basis).
+    pub dollars_per_hour: f64,
+}
+
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+pub fn v100_32g() -> GpuSpec {
+    GpuSpec {
+        name: "V100 32G".into(),
+        peak_flops: 112e12,
+        mem_bw: 900e9,
+        mem_bytes: 32.0 * GIB,
+        dollars_per_hour: 3.06,
+    }
+}
+
+pub fn a6000_48g() -> GpuSpec {
+    GpuSpec {
+        name: "A6000 48G".into(),
+        peak_flops: 155e12,
+        mem_bw: 768e9,
+        mem_bytes: 48.0 * GIB,
+        dollars_per_hour: 2.25,
+    }
+}
+
+pub fn a100_40g() -> GpuSpec {
+    GpuSpec {
+        name: "A100-40GB".into(),
+        peak_flops: 312e12,
+        mem_bw: 1555e9,
+        mem_bytes: 40.0 * GIB,
+        dollars_per_hour: 3.40,
+    }
+}
+
+pub fn a100_80g() -> GpuSpec {
+    GpuSpec {
+        name: "A100-80GB".into(),
+        peak_flops: 312e12,
+        mem_bw: 2039e9,
+        mem_bytes: 80.0 * GIB,
+        // Table 1: 4.1h on 8 GPUs = $132 -> $4.02/GPU-h.
+        dollars_per_hour: 4.02,
+    }
+}
+
+/// A multi-node cluster of identical GPUs (DGX-style topology).
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub gpu: GpuSpec,
+    pub gpus_per_node: usize,
+    pub nodes: usize,
+    /// NVLink/NVSwitch per-GPU bandwidth within a node, bytes/s.
+    pub nvlink_bw: f64,
+    /// Inter-node (InfiniBand) per-GPU bandwidth, bytes/s.
+    pub ib_bw: f64,
+    /// Collective latency per hop, seconds (the alpha term).
+    pub latency: f64,
+}
+
+impl Cluster {
+    pub fn dgx(gpu: GpuSpec, nodes: usize) -> Cluster {
+        Cluster {
+            gpu,
+            gpus_per_node: 8,
+            nodes,
+            nvlink_bw: 300e9,
+            ib_bw: 25e9,
+            latency: 5e-6,
+        }
+    }
+
+    pub fn single(gpu: GpuSpec) -> Cluster {
+        Cluster { gpus_per_node: 1, nodes: 1, ..Cluster::dgx(gpu, 1) }
+    }
+
+    pub fn world(&self) -> usize {
+        self.gpus_per_node * self.nodes
+    }
+
+    /// Effective per-GPU link bandwidth for a collective spanning `n` GPUs:
+    /// NVLink while within one node, bottlenecked by IB across nodes.
+    pub fn link_bw(&self, n: usize) -> f64 {
+        if n <= self.gpus_per_node {
+            self.nvlink_bw
+        } else {
+            self.ib_bw
+        }
+    }
+
+    /// Ring all-reduce time for `bytes` over `n` GPUs (alpha-beta model).
+    pub fn allreduce_secs(&self, bytes: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let steps = 2.0 * (n as f64 - 1.0);
+        steps * self.latency + (2.0 * (n as f64 - 1.0) / n as f64) * bytes / self.link_bw(n)
+    }
+
+    /// Ring all-gather of `bytes` total (each rank ends with everything).
+    pub fn allgather_secs(&self, bytes: f64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n as f64 - 1.0) * self.latency
+            + ((n as f64 - 1.0) / n as f64) * bytes / self.link_bw(n)
+    }
+
+    pub fn dollars(&self, secs: f64) -> f64 {
+        self.world() as f64 * self.gpu.dollars_per_hour * secs / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_sanity() {
+        assert!(a100_80g().mem_bw > a100_40g().mem_bw);
+        assert_eq!(a100_80g().peak_flops, a100_40g().peak_flops);
+        assert!(v100_32g().peak_flops < a100_40g().peak_flops);
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes_and_world() {
+        let c = Cluster::dgx(a100_40g(), 1);
+        let t1 = c.allreduce_secs(1e9, 8);
+        let t2 = c.allreduce_secs(2e9, 8);
+        assert!(t2 > 1.9 * t1 && t2 < 2.1 * t1);
+        assert_eq!(c.allreduce_secs(1e9, 1), 0.0);
+    }
+
+    #[test]
+    fn cross_node_collectives_slower() {
+        let c1 = Cluster::dgx(a100_80g(), 1);
+        let c8 = Cluster::dgx(a100_80g(), 8);
+        // same total bytes, more GPUs, but IB-bound
+        assert!(c8.allreduce_secs(1e9, 64) > c1.allreduce_secs(1e9, 8));
+    }
+
+    #[test]
+    fn cost_arithmetic() {
+        let c = Cluster::dgx(a100_80g(), 1);
+        // 8 GPUs * $4.02 * 1h
+        assert!((c.dollars(3600.0) - 8.0 * 4.02).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,52 @@
+//! The cluster performance simulator: the substitution for the paper's
+//! A100/V100 testbeds (DESIGN.md §1). Every paper table/figure is
+//! regenerated from these models by `examples/paper_tables.rs` and
+//! `examples/paper_figures.rs`.
+
+pub mod e2e;
+pub mod gpu;
+pub mod step3;
+
+pub use e2e::{finetune_secs, simulate_e2e, E2eReport, PipelineDatasets};
+pub use gpu::{a100_40g, a100_80g, a6000_48g, v100_32g, Cluster, GpuSpec, GIB};
+pub use step3::{max_model, simulate_step3, Recipe, Step3Breakdown};
+
+use crate::config::ModelConfig;
+
+/// Table 3: max model size supported by DeepSpeed-HE on a single GPU.
+///
+/// Mechanism: with Hybrid Engine + ZeRO-Offload, the GPU must hold the fp16
+/// parameters and gradients plus generation/training working state while
+/// optimizer states live in host memory — empirically ~5.5 bytes/param plus
+/// a fixed ~2 GiB framework reserve. The answer is discretized to the OPT
+/// family exactly as the paper reports it.
+pub fn max_model_single_gpu(gpu: &GpuSpec, zoo: &[ModelConfig]) -> Option<ModelConfig> {
+    let budget = gpu.mem_bytes - 2.0 * GIB;
+    let max_params = budget / 5.5;
+    zoo.iter()
+        .filter(|m| m.name.starts_with("opt-") && (m.n_params() as f64) <= max_params)
+        .max_by_key(|m| m.n_params())
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_zoo;
+
+    #[test]
+    fn table3_exact_reproduction() {
+        // Paper Table 3: V100-32G -> 2.7B, A6000-48G -> 6.7B,
+        //                A100-40G -> 6.7B, A100-80G -> 13B.
+        let zoo = model_zoo();
+        for (gpu, expect) in [
+            (v100_32g(), "opt-2.7b"),
+            (a6000_48g(), "opt-6.7b"),
+            (a100_40g(), "opt-6.7b"),
+            (a100_80g(), "opt-13b"),
+        ] {
+            let got = max_model_single_gpu(&gpu, &zoo).unwrap();
+            assert_eq!(got.name, expect, "{}", gpu.name);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Tensor-parallel planning: the inference-mode sharding the hybrid engine
+//! swaps in for generation (paper §5.3: "using TP in the generation phase
+//! instead of ZeRO ... reduces the inter-GPU communication and maintains
+//! high GPU memory bandwidth utilization").
+//!
+//! Megatron-style column/row splits: attention is split by heads, the MLP by
+//! its hidden dimension; each transformer layer then needs two all-reduces
+//! of the activations per token.
+
+use crate::config::ModelConfig;
+
+/// A tensor-parallel plan for one model over `degree` GPUs.
+#[derive(Debug, Clone)]
+pub struct TpPlan {
+    pub degree: usize,
+    /// heads assigned to each rank (contiguous ranges).
+    pub head_ranges: Vec<(usize, usize)>,
+    /// d_ff columns assigned to each rank.
+    pub ff_ranges: Vec<(usize, usize)>,
+}
+
+impl TpPlan {
+    /// Plan a split; degree must divide heads (the usual constraint) or be 1.
+    pub fn new(cfg: &ModelConfig, degree: usize) -> Option<TpPlan> {
+        if degree == 0 || cfg.n_heads % degree != 0 || cfg.d_ff % degree != 0 {
+            return None;
+        }
+        let hp = cfg.n_heads / degree;
+        let fp = cfg.d_ff / degree;
+        Some(TpPlan {
+            degree,
+            head_ranges: (0..degree).map(|r| (r * hp, (r + 1) * hp)).collect(),
+            ff_ranges: (0..degree).map(|r| (r * fp, (r + 1) * fp)).collect(),
+        })
+    }
+
+    /// Largest valid degree <= limit (for "TP within a node" planning).
+    pub fn best_degree(cfg: &ModelConfig, limit: usize) -> usize {
+        (1..=limit.max(1))
+            .rev()
+            .find(|&d| TpPlan::new(cfg, d).is_some())
+            .unwrap_or(1)
+    }
+
+    /// Parameter bytes resident per rank (fp16): attention + MLP weights are
+    /// split; embeddings/LN replicated.
+    pub fn param_bytes_per_rank(&self, cfg: &ModelConfig, dtype_bytes: f64) -> f64 {
+        let d = cfg.d_model as f64;
+        let ff = cfg.d_ff as f64;
+        let l = cfg.n_layers as f64;
+        let split = (4.0 * d * d + 2.0 * d * ff) * l / self.degree as f64;
+        let replicated =
+            (cfg.vocab as f64 + cfg.max_seq as f64) * d + l * (ff + 5.0 * d) + 2.0 * d;
+        (split + replicated) * dtype_bytes
+    }
+
+    /// Communication bytes per generated token per rank: two all-reduces of
+    /// the [mb, d] activations per layer (attention output + MLP output).
+    pub fn comm_bytes_per_token(&self, cfg: &ModelConfig, microbatch: f64, dtype_bytes: f64) -> f64 {
+        if self.degree == 1 {
+            return 0.0;
+        }
+        let n = self.degree as f64;
+        let v = microbatch * cfg.d_model as f64 * dtype_bytes;
+        // ring all-reduce moves 2*(n-1)/n * v per rank, twice per layer
+        2.0 * cfg.n_layers as f64 * (2.0 * (n - 1.0) / n) * v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn plan_requires_divisibility() {
+        let cfg = model("opt-13b"); // 40 heads
+        assert!(TpPlan::new(&cfg, 8).is_some());
+        assert!(TpPlan::new(&cfg, 16).is_none()); // 40 % 16 != 0
+        assert!(TpPlan::new(&cfg, 0).is_none());
+    }
+
+    #[test]
+    fn head_ranges_cover_disjointly() {
+        Prop::new(64).check("tp heads disjoint cover", |rng| {
+            let cfg = model(["opt-1.3b", "opt-6.7b", "opt-13b", "opt-66b"][rng.below(4) as usize]);
+            let degrees: Vec<usize> =
+                (1..=8).filter(|d| cfg.n_heads % d == 0 && cfg.d_ff % d == 0).collect();
+            let degree = *rng.choose(&degrees);
+            let plan = TpPlan::new(&cfg, degree).unwrap();
+            let mut covered = vec![false; cfg.n_heads];
+            for (lo, hi) in &plan.head_ranges {
+                for h in *lo..*hi {
+                    prop_assert!(!covered[h], "head {h} covered twice");
+                    covered[h] = true;
+                }
+            }
+            prop_assert!(covered.iter().all(|c| *c), "heads uncovered");
+            // Balanced ranges.
+            let sizes: Vec<usize> = plan.head_ranges.iter().map(|(a, b)| b - a).collect();
+            prop_assert!(
+                sizes.iter().all(|&s| s == sizes[0]),
+                "unbalanced head split {sizes:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn param_bytes_shrink_with_degree() {
+        let cfg = model("opt-13b");
+        let p1 = TpPlan::new(&cfg, 1).unwrap().param_bytes_per_rank(&cfg, 2.0);
+        let p8 = TpPlan::new(&cfg, 8).unwrap().param_bytes_per_rank(&cfg, 2.0);
+        assert!(p8 < p1 / 4.0, "{p8} vs {p1}");
+        // p1 approximates the full fp16 model.
+        let full = cfg.n_params() as f64 * 2.0;
+        assert!((p1 - full).abs() / full < 0.01);
+    }
+
+    #[test]
+    fn comm_zero_at_degree_one() {
+        let cfg = model("opt-1.3b");
+        let plan = TpPlan::new(&cfg, 1).unwrap();
+        assert_eq!(plan.comm_bytes_per_token(&cfg, 8.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn best_degree_respects_limit() {
+        let cfg = model("opt-13b"); // 40 heads: divisors within 8 -> 8? 40%8=0 yes
+        assert_eq!(TpPlan::best_degree(&cfg, 8), 8);
+        let cfg66 = model("opt-66b"); // 72 heads: 8 divides 72, d_ff 36864 % 8 == 0
+        assert_eq!(TpPlan::best_degree(&cfg66, 8), 8);
+        assert_eq!(TpPlan::best_degree(&cfg, 1), 1);
+    }
+}

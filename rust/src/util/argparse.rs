@@ -1,0 +1,117 @@
+//! Minimal CLI flag parser (clap is not available offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    registered: Vec<(String, String, String)>, // (name, default, help)
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { flags, positional, registered: Vec::new() }
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn register(&mut self, name: &str, default: &str, help: &str) {
+        self.registered.push((name.into(), default.into(), help.into()));
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("usage: {prog} [options]\n");
+        for (n, d, h) in &self.registered {
+            s.push_str(&format!("  --{n:<20} {h} (default: {d})\n"));
+        }
+        s
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a boolean, got {v:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = args("train --run small --steps=200 --verbose --lr 1e-4 ckpt.bin");
+        assert_eq!(a.positional(), &["train", "ckpt.bin"]);
+        assert_eq!(a.str("run", "tiny"), "small");
+        assert_eq!(a.usize("steps", 0), 200);
+        assert!(a.bool("verbose", false));
+        assert_eq!(a.f64("lr", 0.0), 1e-4);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("x");
+        assert_eq!(a.usize("steps", 7), 7);
+        assert!(!a.bool("verbose", false));
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = args("--ema --run small");
+        assert!(a.bool("ema", false));
+        assert_eq!(a.str("run", ""), "small");
+    }
+}

@@ -1,0 +1,102 @@
+//! Minimal criterion-style benchmark harness (criterion is not available
+//! offline). Warms up, runs timed iterations until a wall budget, reports
+//! mean / p50 / p95 and throughput. Used by the `[[bench]]` targets
+//! (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self, per_iter_items: Option<(f64, &str)>) {
+        let thr = per_iter_items
+            .map(|(n, unit)| format!("  {:>10.1} {unit}/s", n / self.mean_secs))
+            .unwrap_or_default();
+        println!(
+            "{:<44} {:>7} iters  mean {:>10}  p50 {:>10}  p95 {:>10}{}",
+            self.name,
+            self.iters,
+            crate::util::fmt_duration(self.mean_secs),
+            crate::util::fmt_duration(self.p50_secs),
+            crate::util::fmt_duration(self.p95_secs),
+            thr,
+        );
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { budget: Duration::from_millis(600), ..Default::default() }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while (b0.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_secs: mean,
+            p50_secs: p(0.5),
+            p95_secs: p(0.95),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(50),
+            min_iters: 3,
+            max_iters: 100,
+        };
+        let r = b.run("sleep1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.mean_secs >= 0.001 && r.mean_secs < 0.01, "{}", r.mean_secs);
+        assert!(r.iters >= 3);
+        assert!(r.p95_secs >= r.p50_secs);
+    }
+}

