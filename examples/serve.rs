@@ -53,6 +53,9 @@ fn parse_request(task: &TaskGen, line: &str) -> Option<Prompt> {
 
 /// The batching loop: drain up to `batch` queued requests (padding the
 /// artifact batch with repeats), run one generation, reply to each.
+/// Per-batch latency and host↔device traffic are logged from the engine's
+/// byte ledger — with the device-resident decode path, bytes/token stay
+/// O(b·vocab) no matter how large the KV cache is.
 fn serve_batch(he: &mut HybridEngine, task: &TaskGen, reqs: Vec<Request>, sampler: &mut Sampler) {
     let m = he.manifest();
     let (b, sp, s) = (m.batch, m.prompt_len, m.seq_len);
@@ -61,8 +64,24 @@ fn serve_batch(he: &mut HybridEngine, task: &TaskGen, reqs: Vec<Request>, sample
         let p = &reqs[i.min(reqs.len() - 1)].prompt;
         flat.extend_from_slice(&p.tokens);
     }
+    let secs0 = he.stats.gen_secs;
+    let toks0 = he.stats.gen_tokens;
+    let (up0, down0) = he.engine.bytes_moved();
     match he.generate(&flat, sampler) {
         Ok(seqs) => {
+            let secs = he.stats.gen_secs - secs0;
+            let toks = he.stats.gen_tokens - toks0;
+            let (up, down) = he.engine.bytes_moved();
+            eprintln!(
+                "[batch] {} req ({} rows), {} tok in {:.0}ms ({:.1} tok/s), host {}/tok down {}/tok up",
+                reqs.len(),
+                b,
+                toks,
+                secs * 1e3,
+                toks as f64 / secs.max(1e-9),
+                dschat::util::fmt_bytes((down - down0) as f64 / toks.max(1) as f64),
+                dschat::util::fmt_bytes((up - up0) as f64 / toks.max(1) as f64),
+            );
             for (i, r) in reqs.iter().enumerate() {
                 let resp = &seqs[i * s + sp..(i + 1) * s];
                 let score = task.reward(&r.prompt, resp);

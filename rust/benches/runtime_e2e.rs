@@ -2,6 +2,12 @@
 //! decode step (the generation hot loop), full-batch forwards, SFT/PPO train
 //! steps, and the generation-vs-naive Figure-5 analogue.
 //! Requires `make artifacts`. `cargo bench --bench runtime_e2e`.
+//!
+//! Pass `--smoke` for a fast CI-friendly run (used by `scripts/verify.sh`).
+//! The decode-loop section measures generation tokens/sec and host bytes
+//! moved per token and writes `BENCH_decode.json` so the perf trajectory is
+//! tracked across PRs; with the zero-copy decode path, bytes/token must be
+//! O(b·vocab) — independent of the KV-cache size.
 
 use std::rc::Rc;
 use std::time::Duration;
@@ -9,27 +15,36 @@ use std::time::Duration;
 use dschat::data::synthetic::TaskGen;
 use dschat::data::{Blend, DataSplit};
 use dschat::examples_support::naive_generate;
-use dschat::hybrid::HybridEngine;
+use dschat::hybrid::{HybridEngine, KvCache};
 use dschat::runtime::Engine;
 use dschat::sampling::{Sampler, SamplerConfig};
 use dschat::util::bench::Bench;
 use dschat::util::rng::Rng;
+use dschat::util::{fmt_bytes, fmt_duration};
 
 fn main() -> anyhow::Result<()> {
     // cargo bench passes `--bench`; skip flags when looking for a dir arg.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let dir = std::env::args()
         .skip(1)
         .find(|a| !a.starts_with("--"))
         .unwrap_or_else(|| "artifacts/tiny".into());
-    println!("== runtime e2e ({dir}) ==");
+    println!("== runtime e2e ({dir}{}) ==", if smoke { ", smoke" } else { "" });
     let engine = Rc::new(Engine::cpu()?);
     let mut he = HybridEngine::init(engine, &dir, 0, true)?;
     let m = he.manifest();
     let (bsz, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
+    let vocab = m.actor.vocab;
+    let kv_bytes = KvCache::bytes_for(m);
+    let run_name = m.run.clone();
     let task = TaskGen::new(m.actor.vocab, sp, sg);
     let mut blend = Blend::new(vec![(task.clone(), 1.0)], DataSplit::new(2.0, 4.0, 4.0));
     let mut rng = Rng::new(0);
-    let b = Bench { budget: Duration::from_secs(3), ..Default::default() };
+    let b = if smoke {
+        Bench::quick()
+    } else {
+        Bench { budget: Duration::from_secs(3), ..Default::default() }
+    };
 
     // Generation (hybrid path) — tokens/sec is the paper's generation-phase
     // throughput metric.
@@ -86,16 +101,66 @@ fn main() -> anyhow::Result<()> {
     })
     .print(None);
 
-    // Executor overhead accounting (upload/exec/fetch split).
+    // Executor overhead accounting (upload/exec/fetch split + bytes moved).
     println!("\n-- engine stats (cumulative) --");
     for (name, st) in he.engine.stats() {
         println!(
-            "{name:<22} calls {:>6}  exec {:>9}  fetch {:>9}  upload {:>9}",
+            "{name:<22} calls {:>6}  exec {:>9}  fetch {:>9} ({:>9})  upload {:>9} ({:>9}){}",
             st.calls,
-            dschat::util::fmt_duration(st.exec_secs),
-            dschat::util::fmt_duration(st.fetch_secs),
-            dschat::util::fmt_duration(st.upload_secs),
+            fmt_duration(st.exec_secs),
+            fmt_duration(st.fetch_secs),
+            fmt_bytes(st.bytes_fetched as f64),
+            fmt_duration(st.upload_secs),
+            fmt_bytes(st.bytes_uploaded as f64),
+            if st.fallback_untuples > 0 {
+                format!("  [{} fused-tuple fallbacks]", st.fallback_untuples)
+            } else {
+                String::new()
+            },
         );
     }
+
+    // ------------------------------------------------------------------
+    // decode_loop: generation throughput + host traffic per token, from a
+    // clean ledger. Emits BENCH_decode.json for the perf trajectory.
+    // ------------------------------------------------------------------
+    he.engine.reset_stats();
+    let tok0 = he.stats.gen_tokens;
+    let iters = if smoke { 2 } else { 8 };
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(he.generate(&flat, &mut sampler)?);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let tokens = (he.stats.gen_tokens - tok0).max(1);
+    let (up, down) = he.engine.bytes_moved();
+    let fallbacks = he.engine.fallback_untuples();
+    let tok_per_sec = tokens as f64 / secs;
+    let down_per_tok = down as f64 / tokens as f64;
+    let up_per_tok = up as f64 / tokens as f64;
+    let logits_row_bytes = bsz * vocab * 4;
+    println!("\n-- decode_loop ({iters} generates, {tokens} tokens) --");
+    println!(
+        "{tok_per_sec:>10.1} tokens/s  |  host bytes/token: {} down, {} up",
+        fmt_bytes(down_per_tok),
+        fmt_bytes(up_per_tok),
+    );
+    println!(
+        "reference: logits row [b,vocab] = {}  |  full KV cache = {}  |  fused-tuple fallbacks {}",
+        fmt_bytes(logits_row_bytes as f64),
+        fmt_bytes(kv_bytes as f64),
+        fallbacks,
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"decode_loop\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
+         \"iters\": {iters},\n  \"tokens\": {tokens},\n  \"secs\": {secs:.6},\n  \
+         \"tok_per_sec\": {tok_per_sec:.3},\n  \"host_bytes_fetched\": {down},\n  \
+         \"host_bytes_uploaded\": {up},\n  \"host_bytes_fetched_per_token\": {down_per_tok:.1},\n  \
+         \"host_bytes_uploaded_per_token\": {up_per_tok:.1},\n  \
+         \"logits_row_bytes\": {logits_row_bytes},\n  \"kv_cache_bytes\": {kv_bytes},\n  \
+         \"fallback_untuples\": {fallbacks}\n}}\n"
+    );
+    std::fs::write("BENCH_decode.json", &json)?;
+    println!("wrote BENCH_decode.json");
     Ok(())
 }

@@ -103,13 +103,16 @@ impl PpoTrainer {
         let tokens = he.generate(&flat_prompts, &mut self.sampler)?;
 
         // Score: RM reward at last response token; logprobs/values over all.
+        // One call so the [b, s] token batch is uploaded once and the
+        // device buffer is shared across all four forwards.
         let resp_lens: Vec<usize> =
             (0..b).map(|i| Self::response_len(&tokens[i * s..(i + 1) * s], sp)).collect();
         let lens: Vec<i32> = resp_lens.iter().map(|&l| (sp + l - 1) as i32).collect();
-        let rm_scores = he.rm_rewards(&tokens, &lens)?;
-        let old_logp = he.actor_logprobs(&tokens)?;
-        let ref_logp = he.ref_logprobs(&tokens)?;
-        let values = he.critic_values(&tokens)?; // [b, s]
+        let scores = he.score_experience(&tokens, &lens)?;
+        let rm_scores = scores.rm_scores;
+        let old_logp = scores.old_logp;
+        let ref_logp = scores.ref_logp;
+        let values = scores.values; // [b, s]
 
         // Ground-truth task reward (the oracle the paper can't have).
         let true_rewards: Vec<f32> = prompts

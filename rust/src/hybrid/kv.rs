@@ -1,12 +1,13 @@
 //! KV-cache state for the inference phase: the "light-weight memory
 //! management system" of paper §4. The caches are device-resident buffers
-//! whose lifetime is bounded by the inference phase — allocated at prefill,
-//! updated in place each decode step, released at the train-mode flip.
+//! whose lifetime is bounded by the inference phase — installed straight
+//! from the prefill artifact's output buffers, swapped (never copied) for
+//! the decode artifact's output buffers each step, released at the
+//! train-mode flip. K/V bytes never transit host memory between prefill
+//! and the flip; per-decode-step host traffic is the logits row only.
 
-use anyhow::Result;
-use xla::{Literal, PjRtBuffer};
-
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::Manifest;
+use xla::PjRtBuffer;
 
 pub struct KvCache {
     pub k: PjRtBuffer,
@@ -16,19 +17,33 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    pub fn from_literals(engine: &Engine, k: &Literal, v: &Literal) -> Result<KvCache> {
-        let kt = HostTensor::from_literal(k)?;
-        let dims = kt.shape().to_vec();
-        let kb = engine.upload(&kt)?;
-        let vb = engine.upload(&HostTensor::from_literal(v)?)?;
-        Ok(KvCache { k: kb, v: vb, dims })
+    /// The cache shape the AOT artifacts compile against
+    /// (`python/compile/aot.py`: `(n_layers, batch*n_heads, seq_len, d_head)`).
+    pub fn dims_for(m: &Manifest) -> Vec<usize> {
+        vec![
+            m.actor.n_layers,
+            m.batch * m.actor.n_heads,
+            m.seq_len,
+            m.actor.d_head(),
+        ]
     }
 
-    /// Replace both caches with the decode step's outputs.
-    pub fn update(&mut self, engine: &Engine, k: &Literal, v: &Literal) -> Result<()> {
-        self.k = engine.upload(&HostTensor::from_literal(k)?)?;
-        self.v = engine.upload(&HostTensor::from_literal(v)?)?;
-        Ok(())
+    /// Cache bytes for a manifest's shape (usable before a cache exists;
+    /// [`KvCache::bytes`] reports the same figure for a live cache).
+    pub fn bytes_for(m: &Manifest) -> usize {
+        2 * Self::dims_for(m).iter().product::<usize>() * 4
+    }
+
+    /// Adopt the prefill artifact's output buffers as the live cache.
+    pub fn from_buffers(k: PjRtBuffer, v: PjRtBuffer, dims: Vec<usize>) -> KvCache {
+        KvCache { k, v, dims }
+    }
+
+    /// Swap in the decode step's output buffers (zero-copy: the previous
+    /// generation's buffers are dropped, freeing their device memory).
+    pub fn update(&mut self, k: PjRtBuffer, v: PjRtBuffer) {
+        self.k = k;
+        self.v = v;
     }
 
     /// Bytes held by both caches (f32).

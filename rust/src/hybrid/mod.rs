@@ -8,6 +8,14 @@
 //! and the KV-cache buffer pool while the [`MemoryTracker`] accounts for
 //! every byte the way the GPU version would (`zero::MemoryModel` maps the
 //! same accounting onto paper-scale hardware in the simulator).
+//!
+//! Data movement contract (see `runtime` for the buffer API): the decode
+//! loop is zero-copy — K/V never leave the device between prefill and the
+//! train-mode flip, per-step host traffic is the sampled tokens up
+//! (`O(b)`) and the logits row down (`O(b·vocab)`); train steps keep the
+//! updated parameters and optimizer state on device and fetch scalars
+//! only; experience scoring uploads the `[b, seq_len]` token batch once
+//! and shares the buffer across all four forwards.
 
 pub mod kv;
 pub mod memory;
@@ -63,6 +71,41 @@ pub struct ActorStepOut {
     pub clipfrac: f32,
 }
 
+/// Host-side results of scoring one experience batch with all four models
+/// (see [`HybridEngine::score_experience`]).
+#[derive(Debug, Clone)]
+pub struct ExperienceScores {
+    /// Current-policy log-probs `[b, s-1]`.
+    pub old_logp: Vec<f32>,
+    /// Frozen-reference log-probs `[b, s-1]` (the KL anchor).
+    pub ref_logp: Vec<f32>,
+    /// Critic values `[b, s]`.
+    pub values: Vec<f32>,
+    /// Frozen reward-model scores `[b]` at the given positions.
+    pub rm_scores: Vec<f32>,
+}
+
+/// Split a train-step artifact's output buffers into (params, opt, scalars)
+/// without any host transit, validating the arity loudly.
+fn split_outputs(
+    mut out: Vec<PjRtBuffer>,
+    np: usize,
+    no: usize,
+    n_scalars: usize,
+    what: &str,
+) -> Result<(Vec<PjRtBuffer>, Vec<PjRtBuffer>, Vec<PjRtBuffer>)> {
+    if out.len() != np + no + n_scalars {
+        bail!(
+            "{what}: expected {} outputs ({np} params + {no} opt + {n_scalars} scalars), got {}",
+            np + no + n_scalars,
+            out.len()
+        );
+    }
+    let scalars = out.split_off(np + no);
+    let opt = out.split_off(np);
+    Ok((out, opt, scalars))
+}
+
 /// The hybrid engine: owns every model role's device-resident state.
 pub struct HybridEngine {
     pub engine: Rc<Engine>,
@@ -79,6 +122,10 @@ pub struct HybridEngine {
     pub critic_opt: ParamStore,
     mode: EngineMode,
     kv: Option<KvCache>,
+    /// Pre-staged `[1]` position buffers for decode steps `0..gen_len`,
+    /// uploaded once and re-fed every generate call (they are tiny and the
+    /// positions are fixed by the manifest, so they survive mode flips).
+    pos_bufs: Vec<PjRtBuffer>,
     pub stats: PhaseStats,
     pub memory: MemoryTracker,
 }
@@ -136,6 +183,7 @@ impl HybridEngine {
             critic_opt,
             mode: EngineMode::Train,
             kv: None,
+            pos_bufs: Vec::new(),
             stats: PhaseStats::default(),
             memory,
         })
@@ -193,6 +241,7 @@ impl HybridEngine {
                 // Inference → training: release the KV pool so training can
                 // use the memory for activations/larger batches (§4: "
                 // reconfigure the memory system to maximize availability").
+                // The pre-staged pos buffers are a few bytes and kept.
                 if let Some(kv) = self.kv.take() {
                     self.memory.free("kv_cache", kv.bytes());
                 }
@@ -215,7 +264,10 @@ impl HybridEngine {
     /// `[b, prompt_len]`). Returns full sequences `[b, seq_len]`.
     ///
     /// This is the paper's memory-bandwidth-bound phase: one prefill call,
-    /// then `gen_len - 1` decode calls with device-resident actor params.
+    /// then up to `gen_len - 1` decode calls. The actor params and both KV
+    /// caches stay device-resident throughout; per decode step the host
+    /// uploads `b` sampled tokens and downloads one `[b, vocab]` logits
+    /// row — independent of the KV-cache size.
     pub fn generate(&mut self, prompts: &[i32], sampler: &mut Sampler) -> Result<Vec<i32>> {
         let m = &self.arts.manifest;
         let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
@@ -223,41 +275,60 @@ impl HybridEngine {
             bail!("prompts must be [{b}, {sp}], got {} elements", prompts.len());
         }
         let vocab = m.actor.vocab;
+        let kv_dims = KvCache::dims_for(m);
         self.enter(EngineMode::Inference);
         let t0 = Instant::now();
 
-        // Prefill: params + prompt -> (logits, k_cache, v_cache).
+        // Pre-stage every decode step's position scalar once per engine;
+        // later generate calls re-feed the same device buffers.
+        if self.pos_bufs.is_empty() {
+            for step in 0..sg {
+                self.pos_bufs
+                    .push(self.engine.upload_i32(&[(sp + step) as i32], &[1])?);
+            }
+        }
+
+        // Prefill: params + prompt -> (logits, k_cache, v_cache). All three
+        // outputs stay on device; only the logits row is fetched.
         let prefill = self.arts.get("prefill")?;
-        let prompt_buf = self
-            .engine
-            .upload(&HostTensor::I32(prompts.to_vec(), vec![b, sp]))?;
+        let prompt_buf = self.engine.upload_i32(prompts, &[b, sp])?;
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.push(&prompt_buf);
-        let out = prefill.call_buffers(&inputs)?;
-        let (logits_l, kc_l, vc_l) = (&out[0], &out[1], &out[2]);
+        let mut out = prefill.call_to_buffers(&inputs, 3)?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let logits_buf = out.pop().unwrap();
 
-        let kv = KvCache::from_literals(&self.engine, kc_l, vc_l)?;
+        // Keep the tracker balanced on inference re-entry: a second
+        // generate without an intervening train flip replaces the live
+        // cache, so the old allocation must be released first.
+        if let Some(old) = self.kv.take() {
+            self.memory.free("kv_cache", old.bytes());
+        }
+        let kv = KvCache::from_buffers(kc, vc, kv_dims);
         self.memory.alloc("kv_cache", kv.bytes());
         self.kv = Some(kv);
+
+        let mut logits_t = self.engine.fetch("prefill", &logits_buf)?;
 
         let mut seqs = vec![0i32; b * s];
         for i in 0..b {
             seqs[i * s..i * s + sp].copy_from_slice(&prompts[i * sp..(i + 1) * sp]);
         }
         let mut done = vec![false; b];
-        // Keep logits as the HostTensor fetched from the device — indexing
-        // into it directly avoids a second b*vocab copy per decode step
-        // (§Perf change 2).
-        let mut logits_t = HostTensor::from_literal(logits_l)?;
+        // Hoisted token staging: the sampled-token vec is reused across
+        // steps, so each decode step's host→device traffic is b ints.
+        let mut toks = vec![crate::data::synthetic::Vocab::PAD; b];
 
         let decode = self.arts.get("decode_step")?;
         for step in 0..sg {
-            // Sample token `sp + step` for every unfinished row.
+            // Sample token `sp + step` for every unfinished row, indexing
+            // the fetched logits in place (no per-step [b, vocab] copy).
             let active = done.iter().filter(|d| !**d).count() as u64;
             let logits = logits_t.as_f32()?;
-            let mut toks = vec![crate::data::synthetic::Vocab::PAD; b];
             for i in 0..b {
                 if done[i] {
+                    toks[i] = crate::data::synthetic::Vocab::PAD;
                     continue;
                 }
                 let row = &logits[i * vocab..(i + 1) * vocab];
@@ -273,20 +344,21 @@ impl HybridEngine {
             if step + 1 == sg || done.iter().all(|d| *d) {
                 break;
             }
-            // Decode: (params, kv, token, pos) -> (logits, kv').
+            // Decode: (params, kv, token, pos) -> (logits, kv'). K/V are
+            // passed and received as device buffers — zero host bytes.
             let kv = self.kv.as_ref().unwrap();
-            let tok_buf = self.engine.upload(&HostTensor::I32(toks, vec![b]))?;
-            let pos_buf = self
-                .engine
-                .upload(&HostTensor::I32(vec![(sp + step) as i32], vec![1]))?;
+            let tok_buf = self.engine.upload_i32(&toks, &[b])?;
             let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
             inputs.push(&kv.k);
             inputs.push(&kv.v);
             inputs.push(&tok_buf);
-            inputs.push(&pos_buf);
-            let out = decode.call_buffers(&inputs)?;
-            logits_t = HostTensor::from_literal(&out[0])?;
-            self.kv.as_mut().unwrap().update(&self.engine, &out[1], &out[2])?;
+            inputs.push(&self.pos_bufs[step]);
+            let mut out = decode.call_to_buffers(&inputs, 3)?;
+            let vc = out.pop().unwrap();
+            let kc = out.pop().unwrap();
+            let logits_buf = out.pop().unwrap();
+            self.kv.as_mut().unwrap().update(kc, vc);
+            logits_t = self.engine.fetch("decode_step", &logits_buf)?;
         }
 
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
@@ -297,26 +369,68 @@ impl HybridEngine {
     // Forward passes over full sequences (experience scoring)
     // ------------------------------------------------------------------
 
+    /// Full-sequence forward with pre-uploaded extra inputs (shared device
+    /// buffers). Outputs are consumed entirely on host, so the literal
+    /// path is the cheapest correct one here.
+    fn forward_with_bufs(
+        &self,
+        artifact: &str,
+        params: &ParamStore,
+        extra: &[&PjRtBuffer],
+    ) -> Result<Vec<HostTensor>> {
+        let art = self.arts.get(artifact)?;
+        let mut inputs: Vec<&PjRtBuffer> = params.buffers.iter().collect();
+        inputs.extend_from_slice(extra);
+        let out = art.call_buffers(&inputs)?;
+        out.iter().map(HostTensor::from_literal).collect()
+    }
+
     fn forward_with(
         &self,
         artifact: &str,
         params: &ParamStore,
         extra: &[HostTensor],
     ) -> Result<Vec<HostTensor>> {
-        let art = self.arts.get(artifact)?;
         let extra_bufs: Vec<PjRtBuffer> = extra
             .iter()
             .map(|t| self.engine.upload(t))
             .collect::<Result<_>>()?;
-        let mut inputs: Vec<&PjRtBuffer> = params.buffers.iter().collect();
-        inputs.extend(extra_bufs.iter());
-        let out = art.call_buffers(&inputs)?;
-        out.iter().map(HostTensor::from_literal).collect()
+        let refs: Vec<&PjRtBuffer> = extra_bufs.iter().collect();
+        self.forward_with_bufs(artifact, params, &refs)
     }
 
     fn batch_tensor(&self, tokens: &[i32]) -> HostTensor {
         let m = &self.arts.manifest;
         HostTensor::I32(tokens.to_vec(), vec![m.batch, m.seq_len])
+    }
+
+    /// Score a generated batch with all four models — actor log-probs,
+    /// frozen-reference log-probs, critic values, frozen-RM rewards at the
+    /// `lens` positions — uploading the `[b, seq_len]` token batch ONCE and
+    /// sharing the device buffer across the four forwards (the per-method
+    /// path below uploads the identical batch every call).
+    pub fn score_experience(&self, tokens: &[i32], lens: &[i32]) -> Result<ExperienceScores> {
+        let m = &self.arts.manifest;
+        let (b, s) = (m.batch, m.seq_len);
+        if tokens.len() != b * s {
+            bail!("tokens must be [{b}, {s}], got {} elements", tokens.len());
+        }
+        if lens.len() != b {
+            bail!("lens must be [{b}], got {} elements", lens.len());
+        }
+        let tok_buf = self.engine.upload_i32(tokens, &[b, s])?;
+        let lens_buf = self.engine.upload_i32(lens, &[b])?;
+        let old_logp = self.forward_with_bufs("logprobs_forward", &self.actor, &[&tok_buf])?;
+        let ref_logp =
+            self.forward_with_bufs("logprobs_forward", &self.ref_actor, &[&tok_buf])?;
+        let values = self.forward_with_bufs("critic_forward", &self.critic, &[&tok_buf])?;
+        let rm = self.forward_with_bufs("rm_forward", &self.rm, &[&tok_buf, &lens_buf])?;
+        Ok(ExperienceScores {
+            old_logp: old_logp[0].as_f32()?.to_vec(),
+            ref_logp: ref_logp[0].as_f32()?.to_vec(),
+            values: values[0].as_f32()?.to_vec(),
+            rm_scores: rm[0].as_f32()?.to_vec(),
+        })
     }
 
     /// Current-policy log-probs `[b, s-1]`.
@@ -361,27 +475,28 @@ impl HybridEngine {
     // Training mode: the train-step artifacts
     // ------------------------------------------------------------------
 
-    /// One SFT step; returns the loss.
+    /// One SFT step; returns the loss. The updated parameters and optimizer
+    /// state come back as device buffers and are adopted in place — only
+    /// the scalar loss is fetched.
     pub fn sft_step(&mut self, batch: &TokenBatch, lr: f32) -> Result<f32> {
         self.enter(EngineMode::Train);
         let t0 = Instant::now();
         let art = self.arts.get("sft_step")?;
         let np = self.actor.len();
         let no = self.actor_opt.len();
-        let extra = [
-            HostTensor::I32(batch.tokens.clone(), vec![batch.b, batch.s]),
-            HostTensor::F32(batch.loss_mask.clone(), vec![batch.b, batch.s - 1]),
-            HostTensor::scalar_f32(lr),
+        let extra_bufs = [
+            self.engine.upload_i32(&batch.tokens, &[batch.b, batch.s])?,
+            self.engine.upload_f32(&batch.loss_mask, &[batch.b, batch.s - 1])?,
+            self.engine.upload_f32(&[lr], &[])?,
         ];
-        let extra_bufs: Vec<PjRtBuffer> =
-            extra.iter().map(|t| self.engine.upload(t)).collect::<Result<_>>()?;
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.extend(self.actor_opt.buffers.iter());
         inputs.extend(extra_bufs.iter());
-        let out = art.call_buffers(&inputs)?;
-        self.actor.replace(&self.engine, &out[..np])?;
-        self.actor_opt.replace(&self.engine, &out[np..np + no])?;
-        let loss = HostTensor::from_literal(&out[np + no])?.item_f32()?;
+        let out = art.call_to_buffers(&inputs, np + no + 1)?;
+        let (params, opt, scalars) = split_outputs(out, np, no, 1, "sft_step")?;
+        self.actor.replace_buffers(params)?;
+        self.actor_opt.replace_buffers(opt)?;
+        let loss = self.engine.fetch("sft_step", &scalars[0])?.item_f32()?;
         self.stats.train_secs += t0.elapsed().as_secs_f64();
         self.stats.train_tokens += (batch.b * batch.s) as u64;
         Ok(loss)
@@ -407,23 +522,22 @@ impl HybridEngine {
         let art = self.arts.get("rm_step")?;
         let np = self.critic.len();
         let no = self.critic_opt.len();
-        let extra = [
-            HostTensor::I32(pb.chosen.clone(), vec![pb.b, pb.s]),
-            HostTensor::I32(pb.rejected.clone(), vec![pb.b, pb.s]),
-            HostTensor::I32(pb.lens_chosen.clone(), vec![pb.b]),
-            HostTensor::I32(pb.lens_rejected.clone(), vec![pb.b]),
-            HostTensor::scalar_f32(lr),
+        let extra_bufs = [
+            self.engine.upload_i32(&pb.chosen, &[pb.b, pb.s])?,
+            self.engine.upload_i32(&pb.rejected, &[pb.b, pb.s])?,
+            self.engine.upload_i32(&pb.lens_chosen, &[pb.b])?,
+            self.engine.upload_i32(&pb.lens_rejected, &[pb.b])?,
+            self.engine.upload_f32(&[lr], &[])?,
         ];
-        let extra_bufs: Vec<PjRtBuffer> =
-            extra.iter().map(|t| self.engine.upload(t)).collect::<Result<_>>()?;
         let mut inputs: Vec<&PjRtBuffer> = self.critic.buffers.iter().collect();
         inputs.extend(self.critic_opt.buffers.iter());
         inputs.extend(extra_bufs.iter());
-        let out = art.call_buffers(&inputs)?;
-        self.critic.replace(&self.engine, &out[..np])?;
-        self.critic_opt.replace(&self.engine, &out[np..np + no])?;
-        let loss = HostTensor::from_literal(&out[np + no])?.item_f32()?;
-        let acc = HostTensor::from_literal(&out[np + no + 1])?.item_f32()?;
+        let out = art.call_to_buffers(&inputs, np + no + 2)?;
+        let (params, opt, scalars) = split_outputs(out, np, no, 2, "rm_step")?;
+        self.critic.replace_buffers(params)?;
+        self.critic_opt.replace_buffers(opt)?;
+        let loss = self.engine.fetch("rm_step", &scalars[0])?.item_f32()?;
+        let acc = self.engine.fetch("rm_step", &scalars[1])?.item_f32()?;
         self.stats.train_secs += t0.elapsed().as_secs_f64();
         self.stats.train_tokens += (2 * pb.b * pb.s) as u64;
         Ok((loss, acc))
@@ -464,26 +578,25 @@ impl HybridEngine {
         let art = self.arts.get("ppo_actor_step")?;
         let np = self.actor.len();
         let no = self.actor_opt.len();
-        let extra = [
-            HostTensor::I32(tokens.to_vec(), vec![b, s]),
-            HostTensor::F32(old_logp.to_vec(), vec![b, s - 1]),
-            HostTensor::F32(adv.to_vec(), vec![b, s - 1]),
-            HostTensor::F32(mask.to_vec(), vec![b, s - 1]),
-            HostTensor::I32(ptx_tokens.to_vec(), vec![b, s]),
-            HostTensor::F32(vec![clip_eps, ptx_coef, 0.0, 0.0], vec![4]),
-            HostTensor::scalar_f32(lr),
+        let extra_bufs = [
+            self.engine.upload_i32(tokens, &[b, s])?,
+            self.engine.upload_f32(old_logp, &[b, s - 1])?,
+            self.engine.upload_f32(adv, &[b, s - 1])?,
+            self.engine.upload_f32(mask, &[b, s - 1])?,
+            self.engine.upload_i32(ptx_tokens, &[b, s])?,
+            self.engine.upload_f32(&[clip_eps, ptx_coef, 0.0, 0.0], &[4])?,
+            self.engine.upload_f32(&[lr], &[])?,
         ];
-        let extra_bufs: Vec<PjRtBuffer> =
-            extra.iter().map(|t| self.engine.upload(t)).collect::<Result<_>>()?;
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.extend(self.actor_opt.buffers.iter());
         inputs.extend(extra_bufs.iter());
-        let out = art.call_buffers(&inputs)?;
-        self.actor.replace(&self.engine, &out[..np])?;
-        self.actor_opt.replace(&self.engine, &out[np..np + no])?;
-        let loss = HostTensor::from_literal(&out[np + no])?.item_f32()?;
-        let kl = HostTensor::from_literal(&out[np + no + 1])?.item_f32()?;
-        let clipfrac = HostTensor::from_literal(&out[np + no + 2])?.item_f32()?;
+        let out = art.call_to_buffers(&inputs, np + no + 3)?;
+        let (params, opt, scalars) = split_outputs(out, np, no, 3, "ppo_actor_step")?;
+        self.actor.replace_buffers(params)?;
+        self.actor_opt.replace_buffers(opt)?;
+        let loss = self.engine.fetch("ppo_actor_step", &scalars[0])?.item_f32()?;
+        let kl = self.engine.fetch("ppo_actor_step", &scalars[1])?.item_f32()?;
+        let clipfrac = self.engine.fetch("ppo_actor_step", &scalars[2])?.item_f32()?;
         self.stats.train_secs += t0.elapsed().as_secs_f64();
         self.stats.train_tokens += (b * s) as u64;
         Ok(ActorStepOut { loss, approx_kl: kl, clipfrac })
@@ -506,38 +619,39 @@ impl HybridEngine {
         let art = self.arts.get("ppo_critic_step")?;
         let np = self.critic.len();
         let no = self.critic_opt.len();
-        let extra = [
-            HostTensor::I32(tokens.to_vec(), vec![b, s]),
-            HostTensor::F32(returns.to_vec(), vec![b, s - 1]),
-            HostTensor::F32(old_values.to_vec(), vec![b, s - 1]),
-            HostTensor::F32(mask.to_vec(), vec![b, s - 1]),
-            HostTensor::F32(vec![clip_eps, 0.0, 0.0, 0.0], vec![4]),
-            HostTensor::scalar_f32(lr),
+        let extra_bufs = [
+            self.engine.upload_i32(tokens, &[b, s])?,
+            self.engine.upload_f32(returns, &[b, s - 1])?,
+            self.engine.upload_f32(old_values, &[b, s - 1])?,
+            self.engine.upload_f32(mask, &[b, s - 1])?,
+            self.engine.upload_f32(&[clip_eps, 0.0, 0.0, 0.0], &[4])?,
+            self.engine.upload_f32(&[lr], &[])?,
         ];
-        let extra_bufs: Vec<PjRtBuffer> =
-            extra.iter().map(|t| self.engine.upload(t)).collect::<Result<_>>()?;
         let mut inputs: Vec<&PjRtBuffer> = self.critic.buffers.iter().collect();
         inputs.extend(self.critic_opt.buffers.iter());
         inputs.extend(extra_bufs.iter());
-        let out = art.call_buffers(&inputs)?;
-        self.critic.replace(&self.engine, &out[..np])?;
-        self.critic_opt.replace(&self.engine, &out[np..np + no])?;
-        let loss = HostTensor::from_literal(&out[np + no])?.item_f32()?;
+        let out = art.call_to_buffers(&inputs, np + no + 1)?;
+        let (params, opt, scalars) = split_outputs(out, np, no, 1, "ppo_critic_step")?;
+        self.critic.replace_buffers(params)?;
+        self.critic_opt.replace_buffers(opt)?;
+        let loss = self.engine.fetch("ppo_critic_step", &scalars[0])?.item_f32()?;
         self.stats.train_secs += t0.elapsed().as_secs_f64();
         self.stats.train_tokens += (b * s) as u64;
         Ok(loss)
     }
 
-    /// EMA shadow update (no-op if EMA disabled).
+    /// EMA shadow update (no-op if EMA disabled). The new shadow stays on
+    /// device end to end.
     pub fn ema_update(&mut self, decay: f32) -> Result<()> {
         let Some(ema) = &mut self.ema else { return Ok(()) };
+        let n_ema = ema.len();
         let art = self.arts.get("ema_update")?;
-        let decay_buf = self.engine.upload(&HostTensor::scalar_f32(decay))?;
+        let decay_buf = self.engine.upload_f32(&[decay], &[])?;
         let mut inputs: Vec<&PjRtBuffer> = ema.buffers.iter().collect();
         inputs.extend(self.actor.buffers.iter());
         inputs.push(&decay_buf);
-        let out = art.call_buffers(&inputs)?;
-        ema.replace(&self.engine, &out)?;
+        let out = art.call_to_buffers(&inputs, n_ema)?;
+        ema.replace_buffers(out)?;
         Ok(())
     }
 

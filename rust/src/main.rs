@@ -148,6 +148,14 @@ fn train(args: &Args) -> Result<()> {
         fmt_duration(he.stats.train_secs),
         he.stats.mode_flips,
     );
+    let (up, down) = he.engine.bytes_moved();
+    let fallbacks = he.engine.fallback_untuples();
+    println!(
+        "   host transfer: {} up, {} down ({} fused-tuple fallbacks; K/V and params stay on device)",
+        dschat::util::fmt_bytes(up as f64),
+        dschat::util::fmt_bytes(down as f64),
+        fallbacks,
+    );
     if args.bool("ema", true) {
         he.promote_ema()?;
         println!("   promoted EMA checkpoint as the serving actor");

@@ -3,12 +3,35 @@
 //! everything above it (hybrid engine, coordinator, pipeline) works in terms
 //! of [`HostTensor`]s and named artifacts.
 //!
-//! Buffer strategy: model/optimizer state is uploaded once and kept as
-//! device-resident `PjRtBuffer`s; the hot path calls `execute_b` so inputs
-//! are never re-copied. Outputs arrive as a single tuple buffer (the C
-//! wrapper does not set `untuple_result`), so results are fetched via one
-//! literal and decomposed — on the CPU plugin this is a plain memcpy, and
-//! the cost is measured in `rust/benches/hot_paths.rs`.
+//! Buffer strategy (the zero-copy contract):
+//!
+//! * Model/optimizer state is uploaded once and kept as device-resident
+//!   `PjRtBuffer`s; the hot paths call `execute_b` so inputs are never
+//!   re-copied.
+//! * Outputs stay on device too: [`Artifact::call_to_buffers`] hands back
+//!   one `PjRtBuffer` per tuple element, and callers fetch to host only the
+//!   elements the host actually consumes — the `[b, vocab]` logits of a
+//!   decode step, the scalar losses of a train step. Everything else (K/V
+//!   caches, updated parameters, optimizer state) is re-fed to the next
+//!   call as-is, so per-decode-step host traffic is O(b·vocab) regardless
+//!   of KV-cache size, and train steps move only scalars.
+//! * If the PJRT wrapper hands tuple outputs back as a single fused tuple
+//!   buffer (wrappers without `untuple_result`), `call_to_buffers` degrades
+//!   to one fetch→decompose→re-upload round trip and counts the event in
+//!   [`ExecStats::fallback_untuples`] — correctness is identical, only the
+//!   zero-copy property is lost for that call.
+//! * No input donation is requested: the artifacts are compiled without
+//!   `donate_argnums`, so outputs are always fresh buffers and pre-staged
+//!   inputs (per-step positions, prompts) may be reused across calls. If
+//!   donation is ever enabled for the KV caches, the hybrid engine must
+//!   stop reusing the donated input buffers after the call.
+//! * [`ExecStats`] tracks seconds and bytes moved in each direction per
+//!   artifact; `cargo bench --bench runtime_e2e` prints the ledger and the
+//!   decode bench emits it as `BENCH_decode.json`.
+//!
+//! The literal-returning paths ([`Artifact::call_literals`] /
+//! [`Artifact::call_buffers`]) remain for cold calls and for callers that
+//! consume every output on host (full-batch forwards, tests).
 
 pub mod manifest;
 pub mod tensor;
@@ -32,6 +55,13 @@ pub struct ExecStats {
     pub exec_secs: f64,
     pub fetch_secs: f64,
     pub upload_secs: f64,
+    /// Host bytes moved device→host (output fetches) on behalf of this key.
+    pub bytes_fetched: u64,
+    /// Host bytes moved host→device (input uploads) on behalf of this key.
+    pub bytes_uploaded: u64,
+    /// Times a fused tuple output had to be decomposed through host memory
+    /// because the PJRT wrapper did not untuple (degraded, non-zero-copy).
+    pub fallback_untuples: u64,
 }
 
 /// The PJRT engine: compiles artifacts, owns buffers, tracks stats.
@@ -73,17 +103,65 @@ impl Engine {
 
     /// Upload a host tensor to a device-resident buffer.
     pub fn upload(&self, t: &HostTensor) -> Result<PjRtBuffer> {
+        match t {
+            HostTensor::F32(d, s) => self.upload_f32(d, s),
+            HostTensor::I32(d, s) => self.upload_i32(d, s),
+        }
+    }
+
+    /// Upload a raw f32 slice (no `HostTensor` allocation on the hot path).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
         let t0 = Instant::now();
-        let buf = match t {
-            HostTensor::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
-            HostTensor::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
-        };
-        self.note("upload", |st| st.upload_secs += t0.elapsed().as_secs_f64());
+        let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
+        self.note_upload(t0, 4 * data.len() as u64);
         Ok(buf)
+    }
+
+    /// Upload a raw i32 slice (token/pos staging in the decode loop).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        let t0 = Instant::now();
+        let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
+        self.note_upload(t0, 4 * data.len() as u64);
+        Ok(buf)
+    }
+
+    /// Single accounting site for every upload path (both dtypes are 4-byte).
+    fn note_upload(&self, t0: Instant, bytes: u64) {
+        self.note("upload", |st| {
+            st.calls += 1;
+            st.upload_secs += t0.elapsed().as_secs_f64();
+            st.bytes_uploaded += bytes;
+        });
     }
 
     pub fn upload_all(&self, ts: &[HostTensor]) -> Result<Vec<PjRtBuffer>> {
         ts.iter().map(|t| self.upload(t)).collect()
+    }
+
+    /// Download one device buffer to host, attributing time and bytes to
+    /// `key` (normally the artifact name). A 1-element tuple buffer is
+    /// unwrapped transparently (single-output programs whose root is a
+    /// tuple, executed through a non-untupling wrapper).
+    pub fn fetch(&self, key: &str, buf: &PjRtBuffer) -> Result<HostTensor> {
+        let t0 = Instant::now();
+        let mut lit = buf.to_literal_sync()?;
+        if lit.shape()?.is_tuple() {
+            let mut parts = lit.decompose_tuple()?;
+            if parts.len() != 1 {
+                bail!(
+                    "fetch of a {}-element tuple buffer (fetch elements individually \
+                     via call_to_buffers, or use call_buffers)",
+                    parts.len()
+                );
+            }
+            lit = parts.pop().unwrap();
+        }
+        let t = HostTensor::from_literal(&lit)?;
+        self.note(key, |st| {
+            st.fetch_secs += t0.elapsed().as_secs_f64();
+            st.bytes_fetched += 4 * t.len() as u64;
+        });
+        Ok(t)
     }
 
     fn note(&self, key: &str, f: impl FnOnce(&mut ExecStats)) {
@@ -93,6 +171,20 @@ impl Engine {
 
     pub fn stats(&self) -> BTreeMap<String, ExecStats> {
         self.stats.borrow().clone()
+    }
+
+    /// Sum of host↔device traffic across all keys: (uploaded, fetched).
+    pub fn bytes_moved(&self) -> (u64, u64) {
+        let stats = self.stats.borrow();
+        let up = stats.values().map(|s| s.bytes_uploaded).sum();
+        let down = stats.values().map(|s| s.bytes_fetched).sum();
+        (up, down)
+    }
+
+    /// Total fused-tuple fallbacks across all artifacts (0 = fully
+    /// zero-copy; see [`ExecStats::fallback_untuples`]).
+    pub fn fallback_untuples(&self) -> u64 {
+        self.stats.borrow().values().map(|s| s.fallback_untuples).sum()
     }
 
     pub fn reset_stats(&self) {
@@ -110,11 +202,12 @@ pub struct Artifact {
 }
 
 impl Artifact {
-    fn record(&self, exec: f64, fetch: f64) {
+    fn record(&self, exec: f64, fetch: f64, fetched_bytes: u64) {
         self.engine.note(&self.name, |st| {
             st.calls += 1;
             st.exec_secs += exec;
             st.fetch_secs += fetch;
+            st.bytes_fetched += fetched_bytes;
         });
     }
 
@@ -136,20 +229,100 @@ impl Artifact {
         let t0 = Instant::now();
         let out = self.exe.execute::<Literal>(inputs)?;
         let t1 = Instant::now();
-        let result = fetch_tuple(&out[0][0])?;
-        self.record(t1.duration_since(t0).as_secs_f64(), t1.elapsed().as_secs_f64());
+        let (result, bytes) = fetch_outputs(&out[0])?;
+        self.record(t1.duration_since(t0).as_secs_f64(), t1.elapsed().as_secs_f64(), bytes);
         Ok(result)
     }
 
-    /// Execute with device-resident buffers (hot path: params stay put).
+    /// Execute with device-resident buffers, fetching every output to host.
+    /// Use when the host consumes all outputs (full-batch forwards, tests);
+    /// prefer [`Artifact::call_to_buffers`] when outputs feed the next call.
     pub fn call_buffers(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
         self.check_arity(inputs.len())?;
         let t0 = Instant::now();
         let out = self.exe.execute_b::<&PjRtBuffer>(inputs)?;
         let t1 = Instant::now();
-        let result = fetch_tuple(&out[0][0])?;
-        self.record(t1.duration_since(t0).as_secs_f64(), t1.elapsed().as_secs_f64());
+        let (result, bytes) = fetch_outputs(&out[0])?;
+        self.record(t1.duration_since(t0).as_secs_f64(), t1.elapsed().as_secs_f64(), bytes);
         Ok(result)
+    }
+
+    /// Execute with device-resident buffers and KEEP the outputs on device:
+    /// returns one `PjRtBuffer` per tuple element. Nothing is copied to
+    /// host; fetch the elements the host needs via [`Engine::fetch`] and
+    /// re-feed the rest as inputs to later calls.
+    ///
+    /// `n_outputs` is the tuple-element count the caller expects (the
+    /// manifest's output names are GROUP names, so the runtime cannot
+    /// derive it) — it disambiguates "one single-element output" from "one
+    /// fused tuple buffer" without touching device data.
+    pub fn call_to_buffers(
+        &self,
+        inputs: &[&PjRtBuffer],
+        n_outputs: usize,
+    ) -> Result<Vec<PjRtBuffer>> {
+        self.check_arity(inputs.len())?;
+        if n_outputs == 0 {
+            bail!("artifact {:?}: n_outputs must be >= 1", self.name);
+        }
+        let t0 = Instant::now();
+        let out = self.exe.execute_b::<&PjRtBuffer>(inputs)?;
+        let exec = t0.elapsed().as_secs_f64();
+        let bufs = out
+            .into_iter()
+            .next()
+            .with_context(|| format!("artifact {:?} returned no device outputs", self.name))?;
+        self.untuple_outputs(bufs, n_outputs, exec)
+    }
+
+    /// Normalize raw PJRT outputs to one buffer per tuple element. Wrappers
+    /// that set `untuple_result` already hand elements back individually
+    /// (zero-copy); a wrapper that returns one fused tuple buffer forces a
+    /// fetch→decompose→re-upload round trip, counted in
+    /// [`ExecStats::fallback_untuples`]. (A single-output program may come
+    /// back as a 1-tuple buffer; it is returned as-is — [`Engine::fetch`]
+    /// unwraps 1-tuples transparently.)
+    fn untuple_outputs(
+        &self,
+        bufs: Vec<PjRtBuffer>,
+        n_outputs: usize,
+        exec: f64,
+    ) -> Result<Vec<PjRtBuffer>> {
+        if bufs.len() == n_outputs {
+            self.record(exec, 0.0, 0);
+            return Ok(bufs);
+        }
+        if bufs.len() != 1 {
+            bail!(
+                "artifact {:?}: caller expects {} outputs, PJRT returned {} buffers",
+                self.name,
+                n_outputs,
+                bufs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let (lits, bytes) = fetch_outputs(&bufs)?;
+        if lits.len() != n_outputs {
+            bail!(
+                "artifact {:?}: caller expects {} outputs, tuple has {} elements",
+                self.name,
+                n_outputs,
+                lits.len()
+            );
+        }
+        let mut out = Vec::with_capacity(lits.len());
+        for l in &lits {
+            out.push(self.engine.upload(&HostTensor::from_literal(l)?)?);
+        }
+        let fetch = t0.elapsed().as_secs_f64();
+        self.engine.note(&self.name, |st| {
+            st.calls += 1;
+            st.exec_secs += exec;
+            st.fetch_secs += fetch;
+            st.bytes_fetched += bytes;
+            st.fallback_untuples += 1;
+        });
+        Ok(out)
     }
 
     /// Convenience: host tensors in, host tensors out.
@@ -161,15 +334,27 @@ impl Artifact {
     }
 }
 
-/// Fetch a (possibly tuple) output buffer as decomposed literals.
-fn fetch_tuple(buf: &PjRtBuffer) -> Result<Vec<Literal>> {
-    let mut lit = buf.to_literal_sync()?;
-    let shape = lit.shape()?;
-    if shape.is_tuple() {
-        Ok(lit.decompose_tuple()?)
-    } else {
-        Ok(vec![lit])
+/// Fetch one device's outputs as decomposed literals plus the host bytes
+/// moved (elements are f32/i32, the only artifact dtypes). Handles both
+/// wrapper behaviors: per-element buffers (untupled) and one fused tuple.
+fn fetch_outputs(bufs: &[PjRtBuffer]) -> Result<(Vec<Literal>, u64)> {
+    if bufs.is_empty() {
+        bail!("execution returned no output buffers");
     }
+    let mut lits = Vec::with_capacity(bufs.len());
+    for b in bufs {
+        lits.push(b.to_literal_sync()?);
+    }
+    if lits.len() == 1 && lits[0].shape()?.is_tuple() {
+        lits = lits.pop().unwrap().decompose_tuple()?;
+    }
+    let mut bytes = 0u64;
+    for l in &lits {
+        if let Ok(s) = l.array_shape().context("output element shape") {
+            bytes += 4 * s.dims().iter().map(|&d| d as u64).product::<u64>();
+        }
+    }
+    Ok((lits, bytes))
 }
 
 /// A named set of device-resident tensors (model params / optimizer state).
@@ -209,8 +394,9 @@ impl ParamStore {
         Self::from_literals(engine, specs, &lits)
     }
 
-    /// Replace the stored buffers with freshly computed literals (after a
-    /// train step the artifact returns the new params as tuple elements).
+    /// Replace the stored buffers with host literals — the COLD path
+    /// (checkpoint restore, EMA promotion). Train steps must use
+    /// [`ParamStore::replace_buffers`], which never transits host memory.
     pub fn replace(&mut self, engine: &Engine, lits: &[Literal]) -> Result<()> {
         if lits.len() != self.specs.len() {
             bail!("replace arity: {} vs {}", lits.len(), self.specs.len());
@@ -219,6 +405,19 @@ impl ParamStore {
             // Sync upload (see from_literals note re: BufferFromHostLiteral).
             *slot = engine.upload(&HostTensor::from_literal(l)?)?;
         }
+        Ok(())
+    }
+
+    /// Adopt freshly computed device buffers (train-step outputs) in place
+    /// of the stored ones — zero-copy: parameters never touch host memory
+    /// between steps. Count must match; shapes are trusted because the
+    /// buffers come from the same artifact contract that produced the
+    /// previous generation.
+    pub fn replace_buffers(&mut self, bufs: Vec<PjRtBuffer>) -> Result<()> {
+        if bufs.len() != self.specs.len() {
+            bail!("replace_buffers arity: {} vs {}", bufs.len(), self.specs.len());
+        }
+        self.buffers = bufs;
         Ok(())
     }
 

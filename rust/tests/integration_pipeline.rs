@@ -131,6 +131,70 @@ fn three_step_pipeline_smoke_learns() {
 }
 
 #[test]
+fn kv_accounting_balanced_across_generate_train_cycles() {
+    // Regression: the kv_cache alloc/free pairing must survive inference
+    // re-entry (generate→generate replaces the live cache without a train
+    // flip) and early EOS exits; a generate→train→generate→train cycle
+    // must leave tracked bytes exactly where they started.
+    let (mut he, mut blend) = setup(false);
+    let b = he.manifest().batch;
+    let mut rng = Rng::new(11);
+    let prompts = blend.prompt_batch(&mut rng, b);
+    let mut flat = Vec::new();
+    for (_, p) in &prompts {
+        flat.extend_from_slice(&p.tokens);
+    }
+    let mut sampler = Sampler::new(SamplerConfig::default(), 0);
+    let baseline = he.memory.live_bytes();
+
+    he.generate(&flat, &mut sampler).unwrap();
+    let kv_live = he.memory.live_named("kv_cache");
+    assert!(kv_live > 0);
+    // Inference re-entry: the replaced cache must not double-count.
+    he.generate(&flat, &mut sampler).unwrap();
+    assert_eq!(he.memory.live_named("kv_cache"), kv_live, "re-entry double-counted kv");
+
+    let batch = blend.sft_batch(&mut rng, b);
+    he.sft_step(&batch, 1e-3).unwrap();
+    assert_eq!(he.memory.live_named("kv_cache"), 0);
+    assert_eq!(he.memory.live_bytes(), baseline, "cycle leaked tracked bytes");
+
+    he.generate(&flat, &mut sampler).unwrap();
+    he.sft_step(&batch, 1e-3).unwrap();
+    assert_eq!(he.memory.live_bytes(), baseline, "second cycle leaked tracked bytes");
+}
+
+#[test]
+fn generate_is_bit_identical_for_fixed_seed() {
+    // Golden determinism: with a fixed sampler seed, generate must produce
+    // bit-identical sequences across repeated calls on one engine AND on a
+    // freshly built engine (the zero-copy decode path can't perturb
+    // sampling inputs).
+    let cfg = SamplerConfig {
+        temperature: 0.9,
+        top_k: 8,
+        top_p: 0.95,
+        repetition_penalty: 1.1,
+        ..Default::default()
+    };
+    let (mut he, mut blend) = setup(false);
+    let b = he.manifest().batch;
+    let mut rng = Rng::new(21);
+    let prompts = blend.prompt_batch(&mut rng, b);
+    let mut flat = Vec::new();
+    for (_, p) in &prompts {
+        flat.extend_from_slice(&p.tokens);
+    }
+    let first = he.generate(&flat, &mut Sampler::new(cfg.clone(), 7)).unwrap();
+    let again = he.generate(&flat, &mut Sampler::new(cfg.clone(), 7)).unwrap();
+    assert_eq!(first, again, "same engine, same seed must be bit-identical");
+
+    let (mut he2, _) = setup(false);
+    let fresh = he2.generate(&flat, &mut Sampler::new(cfg, 7)).unwrap();
+    assert_eq!(first, fresh, "fresh engine, same seed must be bit-identical");
+}
+
+#[test]
 fn checkpoint_roundtrip_preserves_actor() {
     let (mut he, mut blend) = setup(false);
     let mut rng = Rng::new(4);

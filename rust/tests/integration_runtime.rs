@@ -222,3 +222,89 @@ fn artifact_arity_is_enforced() {
         .unwrap_err();
     assert!(format!("{err:#}").contains("expects 1 inputs"));
 }
+
+#[test]
+fn call_to_buffers_enforces_arity() {
+    let e = engine();
+    let arts = ArtifactSet::load(&e, DIR, &["init_actor"]).unwrap();
+    let bufs = [
+        e.upload(&HostTensor::scalar_i32(0)).unwrap(),
+        e.upload(&HostTensor::scalar_i32(1)).unwrap(),
+    ];
+    let inputs: Vec<&_> = bufs.iter().collect();
+    let n = arts.manifest.actor_params.len();
+    let err = arts.get("init_actor").unwrap().call_to_buffers(&inputs, n).unwrap_err();
+    assert!(format!("{err:#}").contains("expects 1 inputs"));
+}
+
+#[test]
+fn call_to_buffers_tuple_outputs_stay_per_element() {
+    // A multi-output artifact must come back as one device buffer per tuple
+    // element (whether the wrapper untupled or the fallback decomposed).
+    let e = engine();
+    let arts = ArtifactSet::load(&e, DIR, &["init_actor"]).unwrap();
+    let seed = e.upload(&HostTensor::scalar_i32(3)).unwrap();
+    let n = arts.manifest.actor_params.len();
+    let bufs = arts.get("init_actor").unwrap().call_to_buffers(&[&seed], n).unwrap();
+    assert_eq!(bufs.len(), n);
+    for (buf, spec) in bufs.iter().zip(&arts.manifest.actor_params) {
+        let t = e.fetch("test", buf).unwrap();
+        assert_eq!(t.shape(), spec.shape.as_slice(), "{}", spec.name);
+    }
+}
+
+#[test]
+fn call_to_buffers_roundtrip_matches_call_buffers() {
+    // Equivalence: executing on device and selectively fetching must be
+    // bit-identical to the literal path, for both tuple-output (init_actor)
+    // and single-output (logprobs_forward) artifacts — and the device
+    // outputs of one call must be usable directly as inputs to the next.
+    let e = engine();
+    let arts = ArtifactSet::load(&e, DIR, &["init_actor", "logprobs_forward"]).unwrap();
+    let m = &arts.manifest;
+    let init = arts.get("init_actor").unwrap();
+    let seed = e.upload(&HostTensor::scalar_i32(5)).unwrap();
+
+    let lits = init.call_buffers(&[&seed]).unwrap();
+    let via_literals: Vec<HostTensor> =
+        lits.iter().map(|l| HostTensor::from_literal(l).unwrap()).collect();
+    let param_bufs = init.call_to_buffers(&[&seed], m.actor_params.len()).unwrap();
+    let via_buffers: Vec<HostTensor> =
+        param_bufs.iter().map(|b| e.fetch("test", b).unwrap()).collect();
+    assert_eq!(via_literals, via_buffers, "bit-identical round trip");
+
+    // Single (non-tuple) output: exactly one device buffer, same numbers.
+    let (b, s) = (m.batch, m.seq_len);
+    let tokens: Vec<i32> = (0..b * s).map(|i| (i % m.actor.vocab) as i32).collect();
+    let tok_buf = e.upload(&HostTensor::I32(tokens, vec![b, s])).unwrap();
+    let mut inputs: Vec<&_> = param_bufs.iter().collect();
+    inputs.push(&tok_buf);
+    let lp = arts.get("logprobs_forward").unwrap();
+    let out = lp.call_to_buffers(&inputs, 1).unwrap();
+    assert_eq!(out.len(), 1, "single-output artifact yields one buffer");
+    let fetched = e.fetch("test", &out[0]).unwrap();
+    assert_eq!(fetched.shape(), &[b, s - 1]);
+    let lit_out = lp.call_buffers(&inputs).unwrap();
+    assert_eq!(fetched, HostTensor::from_literal(&lit_out[0]).unwrap());
+}
+
+#[test]
+fn exec_stats_count_bytes_moved() {
+    let e = engine();
+    let arts = ArtifactSet::load(&e, DIR, &["init_actor"]).unwrap();
+    e.reset_stats();
+    let seed = e.upload(&HostTensor::scalar_i32(0)).unwrap();
+    let n = arts.manifest.actor_params.len();
+    let bufs = arts.get("init_actor").unwrap().call_to_buffers(&[&seed], n).unwrap();
+    let fetched = e.fetch("init_actor", &bufs[0]).unwrap();
+    let stats = e.stats();
+    assert!(stats["upload"].bytes_uploaded >= 4, "seed scalar upload counted");
+    let st = &stats["init_actor"];
+    assert!(st.calls >= 1);
+    assert!(
+        st.bytes_fetched >= 4 * fetched.len() as u64,
+        "fetch of {} elements must be counted, saw {}",
+        fetched.len(),
+        st.bytes_fetched
+    );
+}

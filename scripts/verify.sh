@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# One entry point for builders and CI:
+#   tier-1:  cargo build --release && cargo test -q
+#   perf:    decode-loop bench in smoke mode (needs `make artifacts` output)
+#
+# Integration tests that need artifacts/tiny fail with a "make artifacts"
+# hint when the artifacts are missing; unit/property tests always run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: cargo not found on PATH — cannot run tier-1" >&2
+    echo "verify: (tier-1 is: cargo build --release && cargo test -q)" >&2
+    exit 1
+fi
+
+echo "== verify: tier-1 build =="
+cargo build --release
+
+echo "== verify: tier-1 tests =="
+cargo test -q
+
+if [ -f artifacts/tiny/manifest.json ]; then
+    echo "== verify: decode bench (smoke) =="
+    cargo bench --bench runtime_e2e -- --smoke
+    echo "verify: wrote BENCH_decode.json"
+else
+    echo "verify: artifacts/tiny missing — skipping decode bench (run \`make artifacts\`)"
+fi
+
+echo "verify: OK"
