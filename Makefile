@@ -1,0 +1,34 @@
+# dschat build plumbing.
+#
+#   make artifacts   — AOT-lower every RLHF entry point to HLO text +
+#                      manifest.json via python/compile/aot.py (the only
+#                      step that needs Python/jax; rust is self-contained
+#                      afterwards). Referenced by ROADMAP, the integration
+#                      tests' failure hints, and scripts/verify.sh.
+#   make verify      — tier-1 build/tests plus the smoke benches
+#                      (scripts/verify.sh, the one entry point for CI).
+#   make test-python — the kernel/model/AOT contract tests that pin what
+#                      the rust runtime compiles against.
+#   make clean-artifacts — drop generated artifacts (they are not
+#                      checked in; see .gitignore).
+#
+# RUNS selects which deployment shapes to lower (comma-separated, see
+# python/compile/configs.py): `make artifacts RUNS=tiny` is enough for
+# tier-1 integration tests and the smoke benches.
+
+PYTHON ?= python3
+RUNS   ?= tiny,small
+
+.PHONY: artifacts verify test-python clean-artifacts
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --runs $(RUNS) --out ../artifacts
+
+verify:
+	bash scripts/verify.sh
+
+test-python:
+	cd python && $(PYTHON) -m pytest tests -q
+
+clean-artifacts:
+	rm -rf artifacts

@@ -1,32 +1,63 @@
-//! Serve: a minimal line-oriented inference server over the trained actor —
-//! the "favorite front-end GUI" hook of the paper's §2.2, with dynamic
-//! request batching done by the L3 coordinator (std-thread edition; tokio is
-//! not available offline).
+//! Serve: a line-oriented inference server over the trained actor — the
+//! "favorite front-end GUI" hook of the paper's §2.2, scheduled with
+//! **iteration-level continuous batching** (`dschat::serving`).
 //!
-//! Protocol (newline-delimited over TCP): a request is `mode a b` (e.g.
-//! `count 10 12`); the response line is the detokenized generation plus the
-//! ground-truth score.
+//! # Protocol
+//!
+//! Newline-delimited over TCP: a request line is `mode a [b]` (e.g.
+//! `count 10 12`, modes `repeat|constant|count|mirror`); the response line
+//! is the detokenized generation plus the ground-truth score. One
+//! in-flight request per connection; malformed lines get a parse error
+//! reply and cost no model time.
+//!
+//! # Scheduling
+//!
+//! Reader threads feed an mpsc queue; the engine-owning thread (PJRT types
+//! are not Send, so generation is single-threaded — the vLLM-router shape)
+//! drains the queue into a [`dschat::serving::Scheduler`] and calls
+//! `step()` in a loop. Each step admits queued requests into free batch
+//! slots (per-slot prefill into a retired slot's K/V rows), samples one
+//! token per live slot, retires finished sequences immediately (EOS or
+//! length), and advances all live slots in ONE fused decode call with
+//! per-slot positions. A request arriving mid-flight therefore waits one
+//! decode step for a free slot instead of a whole fixed-batch generation,
+//! and early-EOS slots are refilled instead of burning decode steps on
+//! dead rows.
+//!
+//! Per-request latency, queue depth, live-slot count, and host bytes/token
+//! (from the engine's byte ledger) are logged to stderr at completion.
 //!
 //! ```text
 //! cargo run --release --example serve -- [--run tiny] [--ckpt runs/tiny/actor.bin] \
-//!     [--port 7878] [--demo]        # --demo: run 3 in-process requests and exit
+//!     [--port 7878] [--demo]        # --demo: run 6 in-process requests and exit
 //! ```
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
 use std::rc::Rc;
 use std::sync::mpsc;
+use std::time::Instant;
 
 use dschat::data::synthetic::{Mode, Prompt, TaskGen, Vocab};
 use dschat::hybrid::HybridEngine;
 use dschat::pipeline;
 use dschat::runtime::Engine;
 use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::serving::{Request, Scheduler};
 use dschat::util::argparse::Args;
+use dschat::util::fmt_bytes;
 
-struct Request {
+struct RequestLine {
+    text: String,
+    reply: mpsc::Sender<String>,
+}
+
+/// A submitted request awaiting completion on the scheduler.
+struct Pending {
     prompt: Prompt,
     reply: mpsc::Sender<String>,
+    arrived: Instant,
 }
 
 fn parse_request(task: &TaskGen, line: &str) -> Option<Prompt> {
@@ -51,51 +82,31 @@ fn parse_request(task: &TaskGen, line: &str) -> Option<Prompt> {
     Some(Prompt { mode, a, b, tokens })
 }
 
-/// The batching loop: drain up to `batch` queued requests (padding the
-/// artifact batch with repeats), run one generation, reply to each.
-/// Per-batch latency and host↔device traffic are logged from the engine's
-/// byte ledger — with the device-resident decode path, bytes/token stay
-/// O(b·vocab) no matter how large the KV cache is.
-fn serve_batch(he: &mut HybridEngine, task: &TaskGen, reqs: Vec<Request>, sampler: &mut Sampler) {
-    let m = he.manifest();
-    let (b, sp, s) = (m.batch, m.prompt_len, m.seq_len);
-    let mut flat = Vec::with_capacity(b * sp);
-    for i in 0..b {
-        let p = &reqs[i.min(reqs.len() - 1)].prompt;
-        flat.extend_from_slice(&p.tokens);
-    }
-    let secs0 = he.stats.gen_secs;
-    let toks0 = he.stats.gen_tokens;
-    let (up0, down0) = he.engine.bytes_moved();
-    match he.generate(&flat, sampler) {
-        Ok(seqs) => {
-            let secs = he.stats.gen_secs - secs0;
-            let toks = he.stats.gen_tokens - toks0;
-            let (up, down) = he.engine.bytes_moved();
-            eprintln!(
-                "[batch] {} req ({} rows), {} tok in {:.0}ms ({:.1} tok/s), host {}/tok down {}/tok up",
-                reqs.len(),
-                b,
-                toks,
-                secs * 1e3,
-                toks as f64 / secs.max(1e-9),
-                dschat::util::fmt_bytes((down - down0) as f64 / toks.max(1) as f64),
-                dschat::util::fmt_bytes((up - up0) as f64 / toks.max(1) as f64),
-            );
-            for (i, r) in reqs.iter().enumerate() {
-                let resp = &seqs[i * s + sp..(i + 1) * s];
-                let score = task.reward(&r.prompt, resp);
-                let _ = r.reply.send(format!(
-                    "{}  [ground-truth {:.2}]",
-                    task.detokenize(resp),
-                    score
-                ));
-            }
+/// Parse one queued line and hand it to the scheduler (or reply with a
+/// parse error immediately, costing no model time).
+fn enqueue(
+    rl: RequestLine,
+    task: &TaskGen,
+    sched: &mut Scheduler<HybridEngine>,
+    pending: &mut HashMap<u64, Pending>,
+    next_id: &mut u64,
+    max_new: usize,
+) {
+    let Some(prompt) = parse_request(task, &rl.text) else {
+        let _ = rl
+            .reply
+            .send("parse error: expected `repeat|constant|count|mirror a [b]`".into());
+        return;
+    };
+    let id = *next_id;
+    *next_id += 1;
+    let req = Request { id, prompt: prompt.tokens.clone(), max_new };
+    match sched.submit(req) {
+        Ok(()) => {
+            pending.insert(id, Pending { prompt, reply: rl.reply, arrived: Instant::now() });
         }
         Err(e) => {
-            for r in &reqs {
-                let _ = r.reply.send(format!("error: {e:#}"));
-            }
+            let _ = rl.reply.send(format!("error: {e:#}"));
         }
     }
 }
@@ -111,23 +122,55 @@ fn main() -> anyhow::Result<()> {
         eprintln!("loaded checkpoint {ckpt}");
     }
     let m = he.manifest();
-    let task = TaskGen::new(m.actor.vocab, m.prompt_len, m.gen_len);
+    let (sp, sg) = (m.prompt_len, m.gen_len);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
     let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
 
+    // From here on the scheduler owns the engine (per-slot serving mode).
+    let mut sched = Scheduler::new(he)?;
+    let tok0 = sched.engine.stats.gen_tokens;
+    let (up0, down0) = sched.engine.engine.bytes_moved();
+
     if args.bool("demo", false) {
-        // In-process demo: exercise the batching path without a socket.
-        let demo = ["repeat 10 11", "count 20", "mirror 30 31"];
-        let (tx, rx) = mpsc::channel();
-        let reqs: Vec<Request> = demo
-            .iter()
-            .filter_map(|l| parse_request(&task, l))
-            .map(|prompt| Request { prompt, reply: tx.clone() })
-            .collect();
-        let n = reqs.len();
-        serve_batch(&mut he, &task, reqs, &mut sampler);
-        for (line, req) in rx.iter().take(n).zip(demo.iter()) {
-            println!("{req:<16} -> {line}");
+        // In-process demo: more requests than batch slots, so admission,
+        // backpressure, and slot reuse are all exercised without a socket.
+        let demo =
+            ["repeat 10 11", "count 20", "mirror 30 31", "constant 12", "count 9", "repeat 40 8"];
+        let mut prompts: HashMap<u64, Prompt> = HashMap::new();
+        for (i, line) in demo.iter().enumerate() {
+            let prompt = parse_request(&task, line).expect("demo lines parse");
+            sched.submit(Request { id: i as u64, prompt: prompt.tokens.clone(), max_new: sg })?;
+            prompts.insert(i as u64, prompt);
         }
+        let mut done = sched.run_until_idle(&mut sampler)?;
+        done.sort_by_key(|c| c.id);
+        for c in &done {
+            let p = &prompts[&c.id];
+            let resp = c.response();
+            println!(
+                "{:<16} -> {}  [ground-truth {:.2}; {} tok, {:?}, slot {}, waited {} steps]",
+                demo[c.id as usize],
+                task.detokenize(resp),
+                task.reward(p, resp),
+                c.generated,
+                c.finish,
+                c.slot,
+                c.queued_steps,
+            );
+        }
+        let st = &sched.stats;
+        let toks = (sched.engine.stats.gen_tokens - tok0).max(1);
+        let (up, down) = sched.engine.engine.bytes_moved();
+        eprintln!(
+            "[demo] {} reqs in {} steps ({} decode calls, slot utilization {:.0}%), \
+             host/tok: {} down {} up",
+            st.completed,
+            st.steps,
+            st.decode_calls,
+            100.0 * st.utilization(),
+            fmt_bytes((down - down0) as f64 / toks as f64),
+            fmt_bytes((up - up0) as f64 / toks as f64),
+        );
         return Ok(());
     }
 
@@ -136,67 +179,99 @@ fn main() -> anyhow::Result<()> {
     eprintln!("serving on 127.0.0.1:{port} (one line per request: `mode a [b]`)");
 
     // Accept loop on worker threads; generation on this (engine-owning)
-    // thread — PJRT types are not Send, so requests flow over a channel and
-    // the main thread is the single executor (the vLLM-router shape).
+    // thread. A dropped or broken client connection must never panic a
+    // worker — clone/read/write failures just end that connection.
     let (tx, rx) = mpsc::channel::<RequestLine>();
     std::thread::spawn(move || {
         for stream in listener.incoming().flatten() {
             let tx = tx.clone();
             std::thread::spawn(move || {
-                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let Ok(peer) = stream.try_clone() else { return };
+                let mut reader = BufReader::new(peer);
                 let mut stream = stream;
                 let mut line = String::new();
-                while reader.read_line(&mut line).unwrap_or(0) > 0 {
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => return, // EOF or abrupt disconnect
+                        Ok(_) => {}
+                    }
                     let (rtx, rrx) = mpsc::channel();
                     let text = line.trim().to_string();
-                    line.clear();
-                    let _ = tx.send(RequestLine { text, reply: rtx });
-                    if let Ok(resp) = rrx.recv() {
-                        let _ = writeln!(stream, "{resp}");
+                    if tx.send(RequestLine { text, reply: rtx }).is_err() {
+                        return; // server shut down
+                    }
+                    match rrx.recv() {
+                        Ok(resp) => {
+                            if writeln!(stream, "{resp}").is_err() {
+                                return; // client went away mid-reply
+                            }
+                        }
+                        Err(_) => return,
                     }
                 }
             });
         }
     });
 
-    // Batch scheduler: block for one request, then drain whatever else is
-    // queued up to the artifact batch size (dynamic batching).
-    let b = m.batch;
+    // The continuous-batching loop: block only while fully idle, otherwise
+    // drain whatever is queued and run one scheduler step per iteration.
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
+    let mut next_id = 0u64;
     loop {
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break,
-        };
-        let mut lines = vec![first];
-        while lines.len() < b {
-            match rx.try_recv() {
-                Ok(r) => lines.push(r),
-                Err(_) => break,
+        if sched.is_idle() {
+            match rx.recv() {
+                Ok(rl) => enqueue(rl, &task, &mut sched, &mut pending, &mut next_id, sg),
+                Err(_) => break, // listener thread gone: drain and exit
             }
         }
-        let reqs: Vec<Request> = lines
-            .into_iter()
-            .filter_map(|rl| {
-                let reply = rl.reply.clone();
-                match parse_request(&task, &rl.text) {
-                    Some(prompt) => Some(Request { prompt, reply }),
-                    None => {
-                        let _ = rl
-                            .reply
-                            .send("parse error: expected `repeat|constant|count|mirror a [b]`".into());
-                        None
-                    }
+        while let Ok(rl) = rx.try_recv() {
+            enqueue(rl, &task, &mut sched, &mut pending, &mut next_id, sg);
+        }
+        let done = match sched.step(&mut sampler) {
+            Ok(done) => done,
+            Err(e) => {
+                // A failed step leaves slot state suspect: fail the
+                // affected requests, reset to a fresh serving cache, and
+                // keep the listener alive for new traffic.
+                eprintln!("[serve] scheduler step failed: {e:#} — resetting serving state");
+                for (_, p) in pending.drain() {
+                    let _ = p.reply.send(format!("error: {e:#}"));
                 }
-            })
-            .collect();
-        if !reqs.is_empty() {
-            serve_batch(&mut he, &task, reqs, &mut sampler);
+                if let Err(reset_err) = sched.reset() {
+                    eprintln!("[serve] reset failed, shutting down: {reset_err:#}");
+                    return Err(reset_err);
+                }
+                continue;
+            }
+        };
+        if done.is_empty() {
+            continue;
+        }
+        let toks = (sched.engine.stats.gen_tokens - tok0).max(1);
+        let (up, down) = sched.engine.engine.bytes_moved();
+        for c in &done {
+            let Some(p) = pending.remove(&c.id) else { continue };
+            let resp = c.response();
+            let score = task.reward(&p.prompt, resp);
+            let _ = p
+                .reply
+                .send(format!("{}  [ground-truth {:.2}]", task.detokenize(resp), score));
+            eprintln!(
+                "[req {}] {:.0}ms  {} tok ({:?})  slot {}  waited {} steps  \
+                 queue {}  active {}  host/tok: {} down {} up",
+                c.id,
+                p.arrived.elapsed().as_secs_f64() * 1e3,
+                c.generated,
+                c.finish,
+                c.slot,
+                c.queued_steps,
+                sched.queue_depth(),
+                sched.n_active(),
+                fmt_bytes((down - down0) as f64 / toks as f64),
+                fmt_bytes((up - up0) as f64 / toks as f64),
+            );
         }
     }
     Ok(())
-}
-
-struct RequestLine {
-    text: String,
-    reply: mpsc::Sender<String>,
 }

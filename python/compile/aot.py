@@ -201,6 +201,34 @@ def build_entries(rc):
         ["logits", "k_cache", "v_cache"],
     )
 
+    # ---- serving: iteration-level continuous batching ---------------------
+    # `prefill_slot` admits one request into one batch slot of a LIVE cache
+    # (other slots' rows untouched); `decode_slots` advances every slot with
+    # its own per-row position. Together they let the rust scheduler retire
+    # and admit sequences at decode-step boundaries instead of padding fixed
+    # batches (OpenRLHF/vLLM-style scheduling in front of the hybrid engine).
+    def gen_prefill_slot(*args):
+        P = list(args[:na])
+        kc, vc, prompt, slot = args[na:]
+        return model.prefill_slot(a, model.unflatten_params(a, "lm", P), kc, vc, prompt, slot)
+
+    entries["prefill_slot"] = (
+        gen_prefill_slot,
+        _pspecs(a, "lm") + [kv, kv, _spec((1, SP), jnp.int32), _spec((1,), jnp.int32)],
+        ["logits", "k_cache", "v_cache"],
+    )
+
+    def gen_decode_slots(*args):
+        P = list(args[:na])
+        kc, vc, token, pos = args[na:]
+        return model.decode_slots(a, model.unflatten_params(a, "lm", P), kc, vc, token, pos)
+
+    entries["decode_slots"] = (
+        gen_decode_slots,
+        _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((B,), jnp.int32)],
+        ["logits", "k_cache", "v_cache"],
+    )
+
     # ---- step 3: PPO updates ----------------------------------------------
     arr = _spec((B, S - 1))
 

@@ -1,7 +1,7 @@
 """L1 Pallas kernels (build-time only; lowered into the AOT HLO artifacts)."""
 
 from .attention import flash_attention, flash_attention_fwd
-from .decode import decode_attention
+from .decode import decode_attention, decode_attention_pb
 from .layernorm import layernorm
 from .adam_kernel import adam_update
 
@@ -9,6 +9,7 @@ __all__ = [
     "flash_attention",
     "flash_attention_fwd",
     "decode_attention",
+    "decode_attention_pb",
     "layernorm",
     "adam_update",
 ]

@@ -52,8 +52,9 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, smax, scale)
     o_ref[0] = (acc / l).astype(o_ref.dtype)
 
 
-def decode_attention(q, k, v, pos, block_k=DEFAULT_BLOCK_K):
-    """q: [bh, dh]; k,v: [bh, smax, dh]; pos: [1] int32 -> [bh, dh]."""
+def _decode_call(q, k, v, pos, pos_spec, block_k):
+    """Shared pallas_call wiring; `pos_spec` is the only thing that differs
+    between the shared-position and per-row-position entry points."""
     bh, smax, dh = k.shape
     block_k = min(block_k, smax)
     assert smax % block_k == 0, (smax, block_k)
@@ -63,7 +64,7 @@ def decode_attention(q, k, v, pos, block_k=DEFAULT_BLOCK_K):
         kernel,
         grid=(bh,),
         in_specs=[
-            pl.BlockSpec((1,), lambda b: (0,)),
+            pos_spec,
             pl.BlockSpec((1, dh), lambda b: (b, 0)),
             pl.BlockSpec((1, smax, dh), lambda b: (b, 0, 0)),
             pl.BlockSpec((1, smax, dh), lambda b: (b, 0, 0)),
@@ -72,3 +73,20 @@ def decode_attention(q, k, v, pos, block_k=DEFAULT_BLOCK_K):
         out_shape=jax.ShapeDtypeStruct((bh, dh), q.dtype),
         interpret=True,
     )(pos, q, k, v)
+
+
+def decode_attention(q, k, v, pos, block_k=DEFAULT_BLOCK_K):
+    """q: [bh, dh]; k,v: [bh, smax, dh]; pos: [1] int32 -> [bh, dh]."""
+    return _decode_call(q, k, v, pos, pl.BlockSpec((1,), lambda b: (0,)), block_k)
+
+
+def decode_attention_pb(q, k, v, pos, block_k=DEFAULT_BLOCK_K):
+    """Per-row-position decode attention (continuous batching).
+
+    The same single-pass online-softmax kernel, but every cache row carries
+    its own sequence position — the iteration-level scheduler decodes slots
+    that sit at different depths in one fused call.
+
+    q: [bh, dh]; k,v: [bh, smax, dh]; pos: [bh] int32 -> [bh, dh].
+    """
+    return _decode_call(q, k, v, pos, pl.BlockSpec((1,), lambda b: (b,)), block_k)

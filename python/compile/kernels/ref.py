@@ -39,6 +39,21 @@ def decode_attention_ref(q, k, v, pos):
     return out.astype(q.dtype)
 
 
+def decode_attention_pb_ref(q, k, v, pos):
+    """Per-row-position decode attention (continuous-batching oracle).
+
+    q: [bh, dh]; k,v: [bh, smax, dh]; pos: [bh] int32 (each row's current
+    token index; entries 0..pos[r] inclusive are valid) -> [bh, dh].
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bd,bkd->bk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    idx = jnp.arange(k.shape[1])
+    logits = jnp.where(idx[None, :] <= pos[:, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bk,bkd->bd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def layernorm_ref(x, g, b, eps=1e-5):
     """LayerNorm over the last axis. x: [n, d]; g,b: [d]."""
     xf = x.astype(jnp.float32)

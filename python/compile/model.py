@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from .configs import ModelConfig
 from .kernels.attention import flash_attention, flash_attention_fwd
-from .kernels.decode import decode_attention
+from .kernels.decode import decode_attention, decode_attention_pb
 from .kernels.layernorm import layernorm as layernorm_pallas
 
 # ---------------------------------------------------------------------------
@@ -306,6 +306,72 @@ def decode_step(cfg: ModelConfig, params, k_cache, v_cache, token, pos):
         k_cache = jax.lax.dynamic_update_slice(k_cache, k[None, :, None, :], (i, 0, p0, 0))
         v_cache = jax.lax.dynamic_update_slice(v_cache, v[None, :, None, :], (i, 0, p0, 0))
         o = decode_attention(q, k_cache[i], v_cache[i], pos)  # [b*h, dh]
+        x = x + o.reshape(b, d) @ params[p + "wo"]
+        xn = layernorm(x, params[p + "ln2_g"], params[p + "ln2_b"])
+        x = (
+            x
+            + jax.nn.relu(xn @ params[p + "w1"] + params[p + "b1"]) @ params[p + "w2"]
+            + params[p + "b2"]
+        )
+    x = layernorm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["embed"].T, k_cache, v_cache
+
+
+def prefill_slot(cfg: ModelConfig, params, k_cache, v_cache, prompt, slot):
+    """Prefill ONE sequence into one batch slot of a live cache.
+
+    The continuous-batching admission path: a retired slot's K/V rows are
+    overwritten with the new request's prompt while every other slot's rows
+    are preserved, so the other slots can keep decoding across the admit.
+
+    prompt: [1, sp] int32; slot: [1] int32 (batch-slot index).
+    Returns (last-position logits [1, vocab], updated caches).
+    """
+    _, sp = prompt.shape
+    h = cfg.n_heads
+    x = params["embed"][prompt] + params["pos_embed"][:sp][None]
+    row0 = slot[0] * h  # first bh row owned by this slot
+    for i in range(cfg.n_layers):
+        o, ks, vs = _attn_prefill(cfg, params, i, _ln(params, f"l{i}.ln1", x))
+        # ks/vs: [h, sp, dh] -> rows [slot*h, slot*h + h), positions [0, sp).
+        k_cache = jax.lax.dynamic_update_slice(k_cache, ks[None], (i, row0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, vs[None], (i, row0, 0, 0))
+        x = x + o
+        x = x + _mlp(cfg, params, i, _ln(params, f"l{i}.ln2", x))
+    x = _ln(params, "lnf", x)
+    logits = x[:, -1] @ params["embed"].T
+    return logits, k_cache, v_cache
+
+
+def decode_slots(cfg: ModelConfig, params, k_cache, v_cache, token, pos):
+    """One decode step with PER-SLOT positions (continuous batching).
+
+    Unlike `decode_step` (one shared position for the whole batch), every
+    batch slot carries its own sequence depth: slot r's token is written at
+    `pos[r]` and attends to cache entries `0..pos[r]` only, so freshly
+    admitted and nearly finished sequences advance in the same fused call.
+
+    token: [b] int32; pos: [b] int32. Returns (logits [b, vocab], caches).
+    """
+    b = token.shape[0]
+    h, dh, d = cfg.n_heads, cfg.d_head, cfg.d_model
+    pos_emb = params["pos_embed"][pos]  # [b, d] per-row gather
+    x = params["embed"][token] + pos_emb
+    pos_bh = jnp.repeat(pos, h)  # [b*h]: every head row inherits its slot's pos
+
+    def scatter_row(cache_row, val, p):
+        # cache_row: [smax, dh]; val: [dh]; p: scalar — write val at row p.
+        return jax.lax.dynamic_update_slice(cache_row, val[None, :], (p, 0))
+
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        xn = layernorm(x, params[p + "ln1_g"], params[p + "ln1_b"])
+        q = (xn @ params[p + "wq"]).reshape(b * h, dh)
+        k = (xn @ params[p + "wk"]).reshape(b * h, dh)
+        v = (xn @ params[p + "wv"]).reshape(b * h, dh)
+        k_cache = k_cache.at[i].set(jax.vmap(scatter_row)(k_cache[i], k, pos_bh))
+        v_cache = v_cache.at[i].set(jax.vmap(scatter_row)(v_cache[i], v, pos_bh))
+        o = decode_attention_pb(q, k_cache[i], v_cache[i], pos_bh)  # [b*h, dh]
         x = x + o.reshape(b, d) @ params[p + "wo"]
         xn = layernorm(x, params[p + "ln2_g"], params[p + "ln2_b"])
         x = (

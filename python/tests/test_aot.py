@@ -40,6 +40,8 @@ def test_entry_names_complete(entries):
         "critic_forward",
         "prefill",
         "decode_step",
+        "prefill_slot",
+        "decode_slots",
         "ppo_actor_step",
         "ppo_critic_step",
         "ema_update",

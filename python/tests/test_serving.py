@@ -1,0 +1,171 @@
+"""Continuous-batching model functions: per-slot prefill + per-row-pos decode.
+
+These pin the invariants the rust scheduler (rust/src/serving) relies on:
+
+  * `decode_slots` with a uniform position vector reproduces `decode_step`;
+  * `prefill_slot` writes ONLY its slot's cache rows and reproduces the
+    full-batch `prefill` logits for that sequence;
+  * a staggered schedule (admit slot 0, decode, admit slot 1 mid-flight,
+    decode both) yields, per sequence, the same logits as the no-cache full
+    forward — slot isolation across admissions.
+
+The Pallas kernels are swapped for their pure-jnp oracles (kernels/ref.py)
+so the tests execute under any jax version; the kernels themselves are
+checked against the same oracles in test_kernels.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import run_config
+from compile.kernels import ref
+
+RC = run_config("nano")
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.fixture(autouse=True)
+def ref_kernels(monkeypatch):
+    """Run the model on the pure-jnp kernel oracles (forward-only tests)."""
+    monkeypatch.setattr(model, "layernorm", ref.layernorm_ref)
+    monkeypatch.setattr(model, "flash_attention", ref.attention_ref)
+    monkeypatch.setattr(model, "flash_attention_fwd", ref.attention_ref)
+    monkeypatch.setattr(model, "decode_attention", ref.decode_attention_ref)
+    monkeypatch.setattr(model, "decode_attention_pb", ref.decode_attention_pb_ref)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(RC.actor, "lm", jnp.int32(0))
+
+
+def zero_caches():
+    a = RC.actor
+    shape = (a.n_layers, RC.batch * a.n_heads, RC.seq_len, a.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def sample_prompts(seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (RC.batch, RC.prompt_len), 0, RC.actor.vocab
+    ).astype(jnp.int32)
+
+
+def test_decode_slots_uniform_pos_matches_decode_step(params):
+    a, sp = RC.actor, RC.prompt_len
+    prompt = sample_prompts(1)
+    logits, kc, vc = model.prefill(a, params, prompt, RC.seq_len)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    l_shared, kc_s, vc_s = model.decode_step(
+        a, params, kc, vc, tok, jnp.array([sp], jnp.int32)
+    )
+    pos = jnp.full((RC.batch,), sp, jnp.int32)
+    l_slots, kc_p, vc_p = model.decode_slots(a, params, kc, vc, tok, pos)
+
+    np.testing.assert_allclose(l_slots, l_shared, **TOL)
+    np.testing.assert_allclose(kc_p, kc_s, **TOL)
+    np.testing.assert_allclose(vc_p, vc_s, **TOL)
+
+
+def test_prefill_slot_writes_only_its_rows(params):
+    a, sp = RC.actor, RC.prompt_len
+    h = a.n_heads
+    prompt = sample_prompts(2)
+    sentinel = 7.25
+    kc = jnp.full_like(zero_caches()[0], sentinel)
+    vc = jnp.full_like(kc, sentinel)
+
+    slot = 1
+    logits, kc2, vc2 = model.prefill_slot(
+        a, params, kc, vc, prompt[slot : slot + 1], jnp.array([slot], jnp.int32)
+    )
+
+    # Rows outside [slot*h, slot*h + h) are untouched, as are positions >= sp.
+    rows = np.arange(RC.batch * h)
+    outside = (rows < slot * h) | (rows >= (slot + 1) * h)
+    np.testing.assert_array_equal(np.asarray(kc2)[:, outside], sentinel)
+    np.testing.assert_array_equal(np.asarray(vc2)[:, outside], sentinel)
+    np.testing.assert_array_equal(np.asarray(kc2)[:, ~outside, sp:], sentinel)
+    np.testing.assert_array_equal(np.asarray(vc2)[:, ~outside, sp:], sentinel)
+
+    # The slot's rows now hold the same K/V the full-batch prefill computes,
+    # and the returned logits match that sequence's prefill logits.
+    full_logits, full_kc, full_vc = model.prefill(a, params, prompt, RC.seq_len)
+    np.testing.assert_allclose(
+        np.asarray(kc2)[:, ~outside, :sp],
+        np.asarray(full_kc)[:, ~outside, :sp],
+        **TOL,
+    )
+    np.testing.assert_allclose(
+        np.asarray(vc2)[:, ~outside, :sp],
+        np.asarray(full_vc)[:, ~outside, :sp],
+        **TOL,
+    )
+    np.testing.assert_allclose(logits[0], full_logits[slot], **TOL)
+
+
+def test_staggered_schedule_matches_full_forward(params):
+    """Admit slot 0, decode it alone, admit slot 1 two ticks later, decode
+    both — every emitted logits row must equal the no-cache full forward on
+    that sequence's prefix (cross-slot isolation under staggered admission)."""
+    a, sp = RC.actor, RC.prompt_len
+    prompts = sample_prompts(3)
+    kc, vc = zero_caches()
+
+    def ref_logits(tokens):
+        seq = jnp.asarray(tokens, jnp.int32)[None, :]
+        return model.logits_fn(a, params, seq)[0, -1]
+
+    def check(row, tokens):
+        np.testing.assert_allclose(row, ref_logits(tokens), **TOL)
+
+    seqs = [list(np.asarray(prompts[0])), list(np.asarray(prompts[1]))]
+    pending = [None, None]  # last logits row per slot, None = not admitted
+
+    # Tick 0: admit sequence 0 into slot 0.
+    l0, kc, vc = model.prefill_slot(
+        a, params, kc, vc, prompts[0:1], jnp.array([0], jnp.int32)
+    )
+    check(l0[0], seqs[0])
+    pending[0] = l0[0]
+
+    for tick in range(4):
+        if tick == 2:
+            # Mid-flight admission into the free slot.
+            l1, kc, vc = model.prefill_slot(
+                a, params, kc, vc, prompts[1:2], jnp.array([1], jnp.int32)
+            )
+            check(l1[0], seqs[1])
+            pending[1] = l1[0]
+        toks, pos, active = [], [], []
+        for slot in range(2):
+            if pending[slot] is None:
+                toks.append(0)
+                pos.append(0)
+                active.append(False)
+            else:
+                t = int(jnp.argmax(pending[slot]))
+                seqs[slot].append(t)
+                toks.append(t)
+                pos.append(len(seqs[slot]) - 1)
+                active.append(True)
+        logits, kc, vc = model.decode_slots(
+            a,
+            params,
+            kc,
+            vc,
+            jnp.array(toks, jnp.int32),
+            jnp.array(pos, jnp.int32),
+        )
+        for slot in range(2):
+            if active[slot]:
+                check(logits[slot], seqs[slot])
+                pending[slot] = logits[slot]
+
+    # Both sequences advanced to different depths in the shared cache.
+    assert len(seqs[0]) == sp + 4
+    assert len(seqs[1]) == sp + 2

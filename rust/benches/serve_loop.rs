@@ -1,0 +1,292 @@
+//! Bench: serve-loop scheduling disciplines under a synthetic Poisson
+//! arrival trace — the old fixed-batch policy (drain the queue, pad the
+//! artifact batch with repeats, hold every slot for the whole generation)
+//! vs iteration-level continuous batching (`dschat::serving`).
+//! Requires `make artifacts`. `cargo bench --bench serve_loop [-- --smoke]`.
+//!
+//! Workload: requests arrive Poisson-distributed at ~80% of the
+//! fixed-batch service rate, each with its own generation budget
+//! `max_new ∈ [gen_len/4, gen_len]` (heterogeneous response lengths are
+//! the continuous-batching motivation). The same trace is replayed
+//! against both disciplines; the fixed-batch loop cannot honor per-request
+//! budgets (its monolithic generate always runs `gen_len` steps and the
+//! result is truncated) nor admit mid-flight — which is precisely the
+//! scheduling cost being measured.
+//!
+//! Emits `BENCH_serve.json` with throughput and p50/p95 latency for BOTH
+//! disciplines so the perf trajectory is tracked across PRs;
+//! `scripts/verify.sh` runs the `--smoke` mode.
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use dschat::data::synthetic::{Prompt, TaskGen, Vocab};
+use dschat::hybrid::HybridEngine;
+use dschat::runtime::Engine;
+use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::serving::{Request, Scheduler};
+use dschat::util::rng::Rng;
+
+struct PhaseResult {
+    name: &'static str,
+    completed: usize,
+    tokens: u64,
+    /// Seconds from trace start to the last completion.
+    makespan: f64,
+    /// Per-request latency (arrival -> completion), seconds, sorted.
+    lat: Vec<f64>,
+}
+
+impl PhaseResult {
+    fn tok_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.makespan.max(1e-9)
+    }
+
+    fn pct(&self, q: f64) -> f64 {
+        if self.lat.is_empty() {
+            return 0.0;
+        }
+        self.lat[((self.lat.len() - 1) as f64 * q) as usize]
+    }
+
+    fn mean(&self) -> f64 {
+        self.lat.iter().sum::<f64>() / self.lat.len().max(1) as f64
+    }
+
+    fn print(&self) {
+        println!(
+            "{:<18} {:>4} reqs  {:>6} tok  {:>8.1} tok/s  latency mean {:>7.0}ms  \
+             p50 {:>7.0}ms  p95 {:>7.0}ms",
+            self.name,
+            self.completed,
+            self.tokens,
+            self.tok_per_sec(),
+            self.mean() * 1e3,
+            self.pct(0.5) * 1e3,
+            self.pct(0.95) * 1e3,
+        );
+    }
+}
+
+/// Useful generated tokens of a (possibly truncated) response row: up to
+/// and including EOS when emitted, the full budget otherwise.
+fn resp_tokens(resp: &[i32]) -> u64 {
+    match resp.iter().position(|&t| t == Vocab::EOS) {
+        Some(i) => (i + 1) as u64,
+        None => resp.len() as u64,
+    }
+}
+
+fn sleep_until(start: Instant, t: f64) {
+    let now = start.elapsed().as_secs_f64();
+    if t > now {
+        std::thread::sleep(Duration::from_secs_f64(t - now));
+    }
+}
+
+/// The pre-scheduler serve policy: block for one request, drain the queue
+/// up to `b`, pad with repeats, run one monolithic generation, reply to
+/// the real rows — every slot held for the full `gen_len` steps.
+#[allow(clippy::too_many_arguments)]
+fn run_fixed_batch(
+    he: &mut HybridEngine,
+    prompts: &[Prompt],
+    budgets: &[usize],
+    arrivals: &[f64],
+    b: usize,
+    sp: usize,
+    s: usize,
+    sampler: &mut Sampler,
+) -> anyhow::Result<PhaseResult> {
+    let n = prompts.len();
+    let start = Instant::now();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut next = 0usize;
+    let mut lat = Vec::with_capacity(n);
+    let mut tokens = 0u64;
+    let mut last_done = 0.0f64;
+    while lat.len() < n {
+        let now = start.elapsed().as_secs_f64();
+        while next < n && arrivals[next] <= now {
+            queue.push_back(next);
+            next += 1;
+        }
+        if queue.is_empty() {
+            sleep_until(start, arrivals[next]);
+            continue;
+        }
+        let take = queue.len().min(b);
+        let batch: Vec<usize> = queue.drain(..take).collect();
+        let mut flat = Vec::with_capacity(b * sp);
+        for i in 0..b {
+            let ri = batch[i.min(batch.len() - 1)];
+            flat.extend_from_slice(&prompts[ri].tokens);
+        }
+        let seqs = he.generate(&flat, sampler)?;
+        let done_at = start.elapsed().as_secs_f64();
+        last_done = done_at;
+        for (row, &ri) in batch.iter().enumerate() {
+            let resp = &seqs[row * s + sp..(row + 1) * s];
+            tokens += resp_tokens(&resp[..budgets[ri]]);
+            lat.push(done_at - arrivals[ri]);
+        }
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(PhaseResult { name: "fixed_batch", completed: n, tokens, makespan: last_done, lat })
+}
+
+/// Iteration-level continuous batching over the same trace: arrivals are
+/// submitted as they land, the scheduler admits/retires at decode-step
+/// boundaries, and per-request budgets are honored exactly.
+fn run_continuous(
+    sched: &mut Scheduler<HybridEngine>,
+    prompts: &[Prompt],
+    budgets: &[usize],
+    arrivals: &[f64],
+    sampler: &mut Sampler,
+) -> anyhow::Result<PhaseResult> {
+    let n = prompts.len();
+    let start = Instant::now();
+    let mut next = 0usize;
+    let mut lat_by_done = Vec::with_capacity(n);
+    let mut tokens = 0u64;
+    let mut last_done = 0.0f64;
+    while lat_by_done.len() < n {
+        let now = start.elapsed().as_secs_f64();
+        while next < n && arrivals[next] <= now {
+            sched.submit(Request {
+                id: next as u64,
+                prompt: prompts[next].tokens.clone(),
+                max_new: budgets[next],
+            })?;
+            next += 1;
+        }
+        if sched.is_idle() {
+            sleep_until(start, arrivals[next]);
+            continue;
+        }
+        for c in sched.step(sampler)? {
+            let done_at = start.elapsed().as_secs_f64();
+            last_done = done_at;
+            tokens += c.generated as u64;
+            lat_by_done.push(done_at - arrivals[c.id as usize]);
+        }
+    }
+    let mut lat = lat_by_done;
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(PhaseResult { name: "continuous", completed: n, tokens, makespan: last_done, lat })
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let dir = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or_else(|| "artifacts/tiny".into());
+    println!("== serve_loop ({dir}{}) ==", if smoke { ", smoke" } else { "" });
+    let engine = Rc::new(Engine::cpu()?);
+    let mut he = HybridEngine::init(engine, &dir, 0, false)?;
+    let m = he.manifest();
+    let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
+    let run_name = m.run.clone();
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut rng = Rng::new(7);
+
+    let n_req = if smoke { 2 * b } else { 10 * b };
+    let prompts: Vec<Prompt> = (0..n_req).map(|_| task.sample_prompt(&mut rng)).collect();
+    let budgets: Vec<usize> =
+        (0..n_req).map(|_| rng.range((sg / 4).max(1) as i64, sg as i64 + 1) as usize).collect();
+
+    // Calibrate the fixed-batch service time (one warmup + one measured
+    // generation), then lay down Poisson arrivals at ~80% of that rate.
+    let mut flat = Vec::with_capacity(b * sp);
+    for i in 0..b {
+        flat.extend_from_slice(&prompts[i % n_req].tokens);
+    }
+    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+    he.generate(&flat, &mut sampler)?;
+    let t0 = Instant::now();
+    he.generate(&flat, &mut sampler)?;
+    let t_gen = t0.elapsed().as_secs_f64().max(1e-6);
+    let rate = 0.8 * b as f64 / t_gen; // requests/s offered
+    let mut arrivals = Vec::with_capacity(n_req);
+    let mut t = 0.0f64;
+    for _ in 0..n_req {
+        t += -rng.f64().max(1e-12).ln() / rate;
+        arrivals.push(t);
+    }
+    println!(
+        "trace: {n_req} requests, Poisson rate {rate:.2}/s (fixed-batch t_gen {:.0}ms), \
+         budgets {}..={} tokens",
+        t_gen * 1e3,
+        budgets.iter().min().unwrap(),
+        budgets.iter().max().unwrap(),
+    );
+
+    let fixed = run_fixed_batch(
+        &mut he,
+        &prompts,
+        &budgets,
+        &arrivals,
+        b,
+        sp,
+        s,
+        &mut Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0),
+    )?;
+    fixed.print();
+
+    let mut sched = Scheduler::new(he)?;
+    let cont = run_continuous(
+        &mut sched,
+        &prompts,
+        &budgets,
+        &arrivals,
+        &mut Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0),
+    )?;
+    cont.print();
+    let st = &sched.stats;
+    println!(
+        "continuous: {} scheduler steps, {} decode calls, {} prefills, slot utilization {:.0}%",
+        st.steps,
+        st.decode_calls,
+        st.prefills,
+        100.0 * st.utilization(),
+    );
+    println!(
+        "continuous vs fixed: {:.2}x tok/s, {:.2}x p95 latency",
+        cont.tok_per_sec() / fixed.tok_per_sec().max(1e-9),
+        cont.pct(0.95) / fixed.pct(0.95).max(1e-9),
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_loop\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
+         \"n_requests\": {n_req},\n  \"arrival_rate_per_s\": {rate:.3},\n  \
+         \"fixed_batch_t_gen_secs\": {t_gen:.6},\n  \"fixed_batch\": {{\n    \
+         \"tok_per_sec\": {:.3},\n    \"mean_ms\": {:.1},\n    \"p50_ms\": {:.1},\n    \
+         \"p95_ms\": {:.1},\n    \"makespan_secs\": {:.3},\n    \"tokens\": {}\n  }},\n  \
+         \"continuous\": {{\n    \"tok_per_sec\": {:.3},\n    \"mean_ms\": {:.1},\n    \
+         \"p50_ms\": {:.1},\n    \"p95_ms\": {:.1},\n    \"makespan_secs\": {:.3},\n    \
+         \"tokens\": {},\n    \"slot_utilization\": {:.4},\n    \"decode_calls\": {}\n  }},\n  \
+         \"speedup_tok_per_sec\": {:.3},\n  \"p95_latency_ratio\": {:.3}\n}}\n",
+        fixed.tok_per_sec(),
+        fixed.mean() * 1e3,
+        fixed.pct(0.5) * 1e3,
+        fixed.pct(0.95) * 1e3,
+        fixed.makespan,
+        fixed.tokens,
+        cont.tok_per_sec(),
+        cont.mean() * 1e3,
+        cont.pct(0.5) * 1e3,
+        cont.pct(0.95) * 1e3,
+        cont.makespan,
+        cont.tokens,
+        st.utilization(),
+        st.decode_calls,
+        cont.tok_per_sec() / fixed.tok_per_sec().max(1e-9),
+        cont.pct(0.95) / fixed.pct(0.95).max(1e-9),
+    );
+    std::fs::write("BENCH_serve.json", &json)?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}

@@ -5,15 +5,27 @@
 //! the decode artifact's output buffers each step, released at the
 //! train-mode flip. K/V bytes never transit host memory between prefill
 //! and the flip; per-decode-step host traffic is the logits row only.
+//!
+//! For the serving path the cache additionally tracks **per-slot
+//! occupancy**: each batch slot (a `[n_heads, smax, d_head]` row group of
+//! both caches) is either free or holds a live sequence of known filled
+//! length. The continuous-batching scheduler admits a new request by
+//! prefilling straight into a retired slot's rows (`prefill_slot`
+//! artifact) while the other slots keep decoding — the ledger here is what
+//! keeps admissions and the device cache honest about which rows are live.
+
+use anyhow::{bail, Result};
+use xla::PjRtBuffer;
 
 use crate::runtime::Manifest;
-use xla::PjRtBuffer;
 
 pub struct KvCache {
     pub k: PjRtBuffer,
     pub v: PjRtBuffer,
     /// [n_layers, b*h, smax, d_head]
     pub dims: Vec<usize>,
+    /// Per-slot filled length (tokens with live K/V rows); `None` = free.
+    occupancy: Vec<Option<usize>>,
 }
 
 impl KvCache {
@@ -34,9 +46,10 @@ impl KvCache {
         2 * Self::dims_for(m).iter().product::<usize>() * 4
     }
 
-    /// Adopt the prefill artifact's output buffers as the live cache.
-    pub fn from_buffers(k: PjRtBuffer, v: PjRtBuffer, dims: Vec<usize>) -> KvCache {
-        KvCache { k, v, dims }
+    /// Adopt freshly produced device buffers as the live cache, with all
+    /// `n_slots` batch slots initially free.
+    pub fn from_buffers(k: PjRtBuffer, v: PjRtBuffer, dims: Vec<usize>, n_slots: usize) -> KvCache {
+        KvCache { k, v, dims, occupancy: vec![None; n_slots] }
     }
 
     /// Swap in the decode step's output buffers (zero-copy: the previous
@@ -49,5 +62,102 @@ impl KvCache {
     /// Bytes held by both caches (f32).
     pub fn bytes(&self) -> usize {
         2 * self.dims.iter().product::<usize>() * 4
+    }
+
+    // ------------------------------------------------------------------
+    // Per-slot occupancy (serving / continuous batching)
+    // ------------------------------------------------------------------
+
+    pub fn n_slots(&self) -> usize {
+        self.occupancy.len()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.occupancy.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Filled length of a slot (`None` if the slot is free).
+    pub fn len_of(&self, slot: usize) -> Option<usize> {
+        self.occupancy.get(slot).copied().flatten()
+    }
+
+    /// Lowest-numbered free slot, if any.
+    pub fn first_free(&self) -> Option<usize> {
+        self.occupancy.iter().position(|s| s.is_none())
+    }
+
+    /// Claim one slot for a freshly prefilled sequence of `len` tokens.
+    pub fn claim(&mut self, slot: usize, len: usize) -> Result<()> {
+        if slot >= self.occupancy.len() {
+            bail!("kv claim: slot {slot} out of range ({} slots)", self.occupancy.len());
+        }
+        if let Some(held) = self.occupancy[slot] {
+            bail!("kv claim: slot {slot} already holds {held} tokens");
+        }
+        self.occupancy[slot] = Some(len);
+        Ok(())
+    }
+
+    /// Claim every slot at once (the batch-generate path: one full-batch
+    /// prefill fills all rows).
+    pub fn claim_all(&mut self, len: usize) {
+        for s in self.occupancy.iter_mut() {
+            *s = Some(len);
+        }
+    }
+
+    /// Record one decoded token appended to every slot where `active`.
+    /// `fed_pos[slot]` is the cache row the token was written to; it must
+    /// equal the slot's current filled length (the scheduler and the device
+    /// cache advancing in lockstep is the core serving invariant).
+    pub fn advance_where(&mut self, active: &[bool], fed_pos: &[i32]) -> Result<()> {
+        if active.len() != self.occupancy.len() || fed_pos.len() != self.occupancy.len() {
+            bail!(
+                "kv advance: active/pos length {}/{} != {} slots",
+                active.len(),
+                fed_pos.len(),
+                self.occupancy.len()
+            );
+        }
+        for slot in 0..self.occupancy.len() {
+            if !active[slot] {
+                continue;
+            }
+            let Some(len) = self.occupancy[slot] else {
+                bail!("kv advance: slot {slot} is free but marked active");
+            };
+            if fed_pos[slot] as usize != len {
+                bail!(
+                    "kv advance: slot {slot} fed at pos {} but holds {len} tokens",
+                    fed_pos[slot]
+                );
+            }
+            if len + 1 > self.dims[2] {
+                bail!("kv advance: slot {slot} overflows smax {}", self.dims[2]);
+            }
+            self.occupancy[slot] = Some(len + 1);
+        }
+        Ok(())
+    }
+
+    /// Record one decoded token appended to every slot (batch generate).
+    pub fn advance_all(&mut self) {
+        for s in self.occupancy.iter_mut() {
+            if let Some(len) = s {
+                *len += 1;
+            }
+        }
+    }
+
+    /// Retire a sequence: its rows become dead and the slot reusable.
+    pub fn release(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.occupancy.len() {
+            bail!("kv release: slot {slot} out of range ({} slots)", self.occupancy.len());
+        }
+        if self.occupancy[slot].is_none() {
+            bail!("kv release: slot {slot} is already free");
+        }
+        self.occupancy[slot] = None;
+        Ok(())
     }
 }

@@ -16,6 +16,15 @@
 //! updated parameters and optimizer state on device and fetch scalars
 //! only; experience scoring uploads the `[b, seq_len]` token batch once
 //! and shares the buffer across all four forwards.
+//!
+//! Generation is exposed at two altitudes: the batch path
+//! ([`HybridEngine::prefill`] + [`HybridEngine::decode_step`], wrapped by
+//! [`HybridEngine::generate`] for the training loop) runs all rows in
+//! lockstep, while the serving path ([`HybridEngine::begin_serving`] +
+//! [`HybridEngine::prefill_slot`] + [`HybridEngine::decode_slots`]) gives
+//! every batch slot its own sequence position so the continuous-batching
+//! scheduler in `crate::serving` can retire and admit requests at
+//! decode-step boundaries.
 
 pub mod kv;
 pub mod memory;
@@ -260,33 +269,47 @@ impl HybridEngine {
     // Inference mode: experience generation
     // ------------------------------------------------------------------
 
-    /// Generate `gen_len` tokens for a batch of prompts (row-major
-    /// `[b, prompt_len]`). Returns full sequences `[b, seq_len]`.
-    ///
-    /// This is the paper's memory-bandwidth-bound phase: one prefill call,
-    /// then up to `gen_len - 1` decode calls. The actor params and both KV
-    /// caches stay device-resident throughout; per decode step the host
-    /// uploads `b` sampled tokens and downloads one `[b, vocab]` logits
-    /// row — independent of the KV-cache size.
-    pub fn generate(&mut self, prompts: &[i32], sampler: &mut Sampler) -> Result<Vec<i32>> {
-        let m = &self.arts.manifest;
-        let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
-        if prompts.len() != b * sp {
-            bail!("prompts must be [{b}, {sp}], got {} elements", prompts.len());
+    /// Install freshly produced cache buffers as the live KV cache, keeping
+    /// the memory tracker balanced on inference re-entry (a second prefill
+    /// without an intervening train flip replaces the live cache, so the
+    /// old allocation must be released first).
+    fn install_kv(&mut self, kc: PjRtBuffer, vc: PjRtBuffer, dims: Vec<usize>) {
+        if let Some(old) = self.kv.take() {
+            self.memory.free("kv_cache", old.bytes());
         }
-        let vocab = m.actor.vocab;
-        let kv_dims = KvCache::dims_for(m);
-        self.enter(EngineMode::Inference);
-        let t0 = Instant::now();
+        let kv = KvCache::from_buffers(kc, vc, dims, self.arts.manifest.batch);
+        self.memory.alloc("kv_cache", kv.bytes());
+        self.kv = Some(kv);
+    }
 
-        // Pre-stage every decode step's position scalar once per engine;
-        // later generate calls re-feed the same device buffers.
+    /// Upload the `[1]` position scalars for decode steps `0..gen_len` once
+    /// per engine; later calls re-feed the same device buffers.
+    fn stage_pos_bufs(&mut self) -> Result<()> {
         if self.pos_bufs.is_empty() {
+            let (sp, sg) = (self.arts.manifest.prompt_len, self.arts.manifest.gen_len);
             for step in 0..sg {
                 self.pos_bufs
                     .push(self.engine.upload_i32(&[(sp + step) as i32], &[1])?);
             }
         }
+        Ok(())
+    }
+
+    /// Full-batch prefill: run every prompt row through the `prefill`
+    /// artifact, install the resulting caches (all slots claimed at
+    /// `prompt_len`), and return the fetched last-position logits
+    /// `[b, vocab]`. First half of the resumable generation pair — the
+    /// decode loop continues from here via [`HybridEngine::decode_step`].
+    pub fn prefill(&mut self, prompts: &[i32]) -> Result<HostTensor> {
+        let m = &self.arts.manifest;
+        let (b, sp) = (m.batch, m.prompt_len);
+        if prompts.len() != b * sp {
+            bail!("prompts must be [{b}, {sp}], got {} elements", prompts.len());
+        }
+        let kv_dims = KvCache::dims_for(m);
+        self.enter(EngineMode::Inference);
+        let t0 = Instant::now();
+        self.stage_pos_bufs()?;
 
         // Prefill: params + prompt -> (logits, k_cache, v_cache). All three
         // outputs stay on device; only the logits row is fetched.
@@ -299,17 +322,94 @@ impl HybridEngine {
         let kc = out.pop().unwrap();
         let logits_buf = out.pop().unwrap();
 
-        // Keep the tracker balanced on inference re-entry: a second
-        // generate without an intervening train flip replaces the live
-        // cache, so the old allocation must be released first.
-        if let Some(old) = self.kv.take() {
-            self.memory.free("kv_cache", old.bytes());
-        }
-        let kv = KvCache::from_buffers(kc, vc, kv_dims);
-        self.memory.alloc("kv_cache", kv.bytes());
-        self.kv = Some(kv);
+        self.install_kv(kc, vc, kv_dims);
+        self.kv.as_mut().unwrap().claim_all(sp);
+        let logits = self.engine.fetch("prefill", &logits_buf)?;
+        self.stats.gen_secs += t0.elapsed().as_secs_f64();
+        Ok(logits)
+    }
 
-        let mut logits_t = self.engine.fetch("prefill", &logits_buf)?;
+    /// One shared-position decode step over the live cache: feed the token
+    /// sampled at generation step `step` for every row and fetch the next
+    /// `[b, vocab]` logits. K/V are passed and received as device buffers —
+    /// zero host bytes; per-step host traffic is `b` ints up, one logits
+    /// row down.
+    pub fn decode_step(&mut self, toks: &[i32], step: usize) -> Result<HostTensor> {
+        let m = &self.arts.manifest;
+        let (b, sg) = (m.batch, m.gen_len);
+        if toks.len() != b {
+            bail!("decode_step tokens must be [{b}], got {} elements", toks.len());
+        }
+        if step >= sg {
+            bail!("decode_step step {step} out of range (gen_len {sg})");
+        }
+        // Shared-position decode is only sound when every slot sits at the
+        // SAME depth and that depth is exactly the position being fed —
+        // the state a batch prefill + `step` decode steps leaves. A
+        // serving-mode cache (slots free or at mixed depths) or a stale
+        // `step` must go through `decode_slots` instead; feeding one
+        // shared position would scatter K/V at the wrong rows and desync
+        // the occupancy ledger.
+        let sp = m.prompt_len;
+        let uniform_depth = self.kv.as_ref().and_then(|kv| {
+            let l0 = kv.len_of(0)?;
+            (1..kv.n_slots()).all(|i| kv.len_of(i) == Some(l0)).then_some(l0)
+        });
+        let ready = self.mode == EngineMode::Inference
+            && step < self.pos_bufs.len()
+            && uniform_depth == Some(sp + step);
+        if !ready {
+            bail!(
+                "decode_step at step {step} requires a batch prefill with all slots at depth \
+                 {} (serving-mode caches advance via decode_slots)",
+                sp + step
+            );
+        }
+        let t0 = Instant::now();
+        let decode = self.arts.get("decode_step")?;
+        let tok_buf = self.engine.upload_i32(toks, &[b])?;
+        let kv = self.kv.as_ref().unwrap();
+        let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
+        inputs.push(&kv.k);
+        inputs.push(&kv.v);
+        inputs.push(&tok_buf);
+        inputs.push(&self.pos_bufs[step]);
+        let mut out = decode.call_to_buffers(&inputs, 3)?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let logits_buf = out.pop().unwrap();
+        let kv = self.kv.as_mut().unwrap();
+        kv.update(kc, vc);
+        kv.advance_all();
+        let logits = self.engine.fetch("decode_step", &logits_buf)?;
+        self.stats.gen_secs += t0.elapsed().as_secs_f64();
+        Ok(logits)
+    }
+
+    /// Generate `gen_len` tokens for a batch of prompts (row-major
+    /// `[b, prompt_len]`). Returns full sequences `[b, seq_len]`.
+    ///
+    /// This is the paper's memory-bandwidth-bound phase, now a thin wrapper
+    /// over the resumable [`HybridEngine::prefill`] +
+    /// [`HybridEngine::decode_step`] pair: one prefill call, then up to
+    /// `gen_len - 1` decode calls, sampling between them. The call sequence
+    /// and inputs are identical to the pre-refactor monolithic loop, so
+    /// generation is bit-identical for a fixed sampler seed (pinned by the
+    /// integration golden). The serving scheduler drives the same engine
+    /// through the per-slot entry points instead
+    /// ([`HybridEngine::prefill_slot`] / [`HybridEngine::decode_slots`]).
+    pub fn generate(&mut self, prompts: &[i32], sampler: &mut Sampler) -> Result<Vec<i32>> {
+        let m = &self.arts.manifest;
+        let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
+        let vocab = m.actor.vocab;
+        // Phase timing covers the WHOLE generation loop (sampling and
+        // bookkeeping included), exactly as the pre-refactor monolith did:
+        // rewind the engine-call seconds prefill/decode_step accumulate and
+        // charge wall-clock instead, so gen_secs stays comparable across
+        // PRs while standalone (serving) calls still self-account.
+        let t0 = Instant::now();
+        let secs0 = self.stats.gen_secs;
+        let mut logits_t = self.prefill(prompts)?;
 
         let mut seqs = vec![0i32; b * s];
         for i in 0..b {
@@ -320,7 +420,6 @@ impl HybridEngine {
         // steps, so each decode step's host→device traffic is b ints.
         let mut toks = vec![crate::data::synthetic::Vocab::PAD; b];
 
-        let decode = self.arts.get("decode_step")?;
         for step in 0..sg {
             // Sample token `sp + step` for every unfinished row, indexing
             // the fetched logits in place (no per-step [b, vocab] copy).
@@ -344,25 +443,146 @@ impl HybridEngine {
             if step + 1 == sg || done.iter().all(|d| *d) {
                 break;
             }
-            // Decode: (params, kv, token, pos) -> (logits, kv'). K/V are
-            // passed and received as device buffers — zero host bytes.
-            let kv = self.kv.as_ref().unwrap();
-            let tok_buf = self.engine.upload_i32(&toks, &[b])?;
-            let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
-            inputs.push(&kv.k);
-            inputs.push(&kv.v);
-            inputs.push(&tok_buf);
-            inputs.push(&self.pos_bufs[step]);
-            let mut out = decode.call_to_buffers(&inputs, 3)?;
-            let vc = out.pop().unwrap();
-            let kc = out.pop().unwrap();
-            let logits_buf = out.pop().unwrap();
-            self.kv.as_mut().unwrap().update(kc, vc);
-            logits_t = self.engine.fetch("decode_step", &logits_buf)?;
+            logits_t = self.decode_step(&toks, step)?;
         }
 
-        self.stats.gen_secs += t0.elapsed().as_secs_f64();
+        self.stats.gen_secs = secs0 + t0.elapsed().as_secs_f64();
         Ok(seqs)
+    }
+
+    // ------------------------------------------------------------------
+    // Inference mode: serving (iteration-level continuous batching)
+    // ------------------------------------------------------------------
+
+    /// Enter serving mode: flip to inference and install a zeroed KV cache
+    /// with every slot free. The continuous-batching scheduler
+    /// (`crate::serving`) then admits requests one slot at a time via
+    /// [`HybridEngine::prefill_slot`] and advances all live slots per
+    /// iteration via [`HybridEngine::decode_slots`].
+    ///
+    /// The zero upload happens once per serving session; after that the
+    /// caches live on device until the next train-mode flip.
+    pub fn begin_serving(&mut self) -> Result<()> {
+        // Fail early (not at first admission) if the artifact set predates
+        // the serving entry points.
+        self.arts.get("prefill_slot").map_err(|e| {
+            e.context("artifacts predate continuous batching — re-run `make artifacts`")
+        })?;
+        self.arts.get("decode_slots")?;
+        let dims = KvCache::dims_for(&self.arts.manifest);
+        self.enter(EngineMode::Inference);
+        let numel: usize = dims.iter().product();
+        let zeros = vec![0.0f32; numel];
+        let kc = self.engine.upload_f32(&zeros, &dims)?;
+        let vc = self.engine.upload_f32(&zeros, &dims)?;
+        self.install_kv(kc, vc, dims);
+        Ok(())
+    }
+
+    /// Admit one request into one free batch slot: run its prompt through
+    /// the `prefill_slot` artifact, which writes the slot's K/V rows in
+    /// place (all other slots' rows pass through untouched, so concurrent
+    /// sequences keep their state). Returns the slot's next-token logits
+    /// row (`[vocab]`).
+    pub fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+        let m = &self.arts.manifest;
+        let (b, sp) = (m.batch, m.prompt_len);
+        if prompt.len() != sp {
+            bail!("prefill_slot prompt must be [{sp}], got {} elements", prompt.len());
+        }
+        if slot >= b {
+            bail!("prefill_slot slot {slot} out of range (batch {b})");
+        }
+        if self.mode != EngineMode::Inference || self.kv.is_none() {
+            bail!("prefill_slot requires serving mode (call begin_serving first)");
+        }
+        if let Some(held) = self.kv.as_ref().unwrap().len_of(slot) {
+            bail!("prefill_slot: slot {slot} still holds a {held}-token sequence");
+        }
+        let t0 = Instant::now();
+        let art = self.arts.get("prefill_slot")?;
+        let prompt_buf = self.engine.upload_i32(prompt, &[1, sp])?;
+        let slot_buf = self.engine.upload_i32(&[slot as i32], &[1])?;
+        let kv = self.kv.as_ref().unwrap();
+        let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
+        inputs.push(&kv.k);
+        inputs.push(&kv.v);
+        inputs.push(&prompt_buf);
+        inputs.push(&slot_buf);
+        let mut out = art.call_to_buffers(&inputs, 3)?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let logits_buf = out.pop().unwrap();
+        let kv = self.kv.as_mut().unwrap();
+        kv.update(kc, vc);
+        kv.claim(slot, sp)?;
+        let logits = self.engine.fetch("prefill_slot", &logits_buf)?;
+        self.stats.gen_secs += t0.elapsed().as_secs_f64();
+        Ok(logits.as_f32()?.to_vec())
+    }
+
+    /// One continuous-batching decode step: advance every `active` slot by
+    /// one token at its OWN position (`pos[slot]` = index the fed token is
+    /// written at, which must equal the slot's filled length). Inactive
+    /// slots are fed PAD at position 0 — their rows are dead and the next
+    /// admission's prefill overwrites them. Returns `[b, vocab]` logits;
+    /// only the active rows are meaningful.
+    pub fn decode_slots(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+    ) -> Result<HostTensor> {
+        let m = &self.arts.manifest;
+        let b = m.batch;
+        if toks.len() != b || pos.len() != b || active.len() != b {
+            bail!(
+                "decode_slots wants [{b}] toks/pos/active, got {}/{}/{}",
+                toks.len(),
+                pos.len(),
+                active.len()
+            );
+        }
+        if self.mode != EngineMode::Inference || self.kv.is_none() {
+            bail!("decode_slots requires serving mode (call begin_serving first)");
+        }
+        let t0 = Instant::now();
+        let art = self.arts.get("decode_slots")?;
+        let tok_buf = self.engine.upload_i32(toks, &[b])?;
+        let pos_buf = self.engine.upload_i32(pos, &[b])?;
+        let kv = self.kv.as_ref().unwrap();
+        let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
+        inputs.push(&kv.k);
+        inputs.push(&kv.v);
+        inputs.push(&tok_buf);
+        inputs.push(&pos_buf);
+        let mut out = art.call_to_buffers(&inputs, 3)?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let logits_buf = out.pop().unwrap();
+        let kv = self.kv.as_mut().unwrap();
+        kv.update(kc, vc);
+        kv.advance_where(active, pos)?;
+        let logits = self.engine.fetch("decode_slots", &logits_buf)?;
+        self.stats.gen_secs += t0.elapsed().as_secs_f64();
+        Ok(logits)
+    }
+
+    /// Retire a finished sequence: its K/V rows become dead and the slot is
+    /// immediately reusable by the next admission.
+    pub fn release_slot(&mut self, slot: usize) -> Result<()> {
+        let Some(kv) = self.kv.as_mut() else {
+            bail!("release_slot: no live KV cache");
+        };
+        kv.release(slot)
+    }
+
+    /// Free slots currently available for admission (serving mode).
+    pub fn free_slots(&self) -> usize {
+        match &self.kv {
+            Some(kv) => kv.n_slots() - kv.n_active(),
+            None => 0,
+        }
     }
 
     // ------------------------------------------------------------------

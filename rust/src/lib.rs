@@ -19,6 +19,7 @@ pub mod pipeline;
 pub mod report;
 pub mod runtime;
 pub mod sampling;
+pub mod serving;
 pub mod sim;
 pub mod tp;
 pub mod util;

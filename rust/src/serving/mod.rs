@@ -1,0 +1,608 @@
+//! Iteration-level continuous batching for the serve loop (the vLLM /
+//! OpenRLHF scheduling discipline in front of the hybrid engine).
+//!
+//! The fixed-batch serve loop padded every generation with repeated
+//! prompts and held all `b` slots until the slowest request finished, so a
+//! request arriving mid-generate waited a full `gen_len`-step decode and
+//! early-EOS slots burned capacity on dead rows. The [`Scheduler`] here
+//! works at *decode-step* granularity instead — each [`Scheduler::step`]:
+//!
+//! 1. **admits** queued requests into free batch slots (one `prefill_slot`
+//!    call each; the new sequence's K/V rows overwrite a retired slot's
+//!    rows while the other slots' device state is untouched),
+//! 2. **samples** one token per live slot from its pending logits row and
+//!    **retires** sequences immediately on EOS or length (the slot frees
+//!    this step, refills next step),
+//! 3. runs **one fused `decode_slots` call** that advances every live slot
+//!    at its own sequence position.
+//!
+//! The engine contract is the [`SlotEngine`] trait so the scheduling
+//! policy is unit-testable without artifacts; [`HybridEngine`] implements
+//! it over the `prefill_slot` / `decode_slots` AOT artifacts and the
+//! per-slot `KvCache` occupancy ledger.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::data::synthetic::Vocab;
+use crate::hybrid::HybridEngine;
+use crate::sampling::Sampler;
+
+/// What the scheduler needs from a generation engine with per-slot state.
+pub trait SlotEngine {
+    /// Number of batch slots (the artifact batch size).
+    fn n_slots(&self) -> usize;
+    /// Vocabulary size (stride of one logits row).
+    fn vocab(&self) -> usize;
+    /// Prompt length every admitted request must match (fixed AOT shape).
+    fn prompt_len(&self) -> usize;
+    /// Hard cap on generated tokens per sequence (KV-cache capacity).
+    fn max_new_tokens(&self) -> usize;
+    /// Enter serving mode (install an empty per-slot cache).
+    fn begin_serving(&mut self) -> Result<()> {
+        Ok(())
+    }
+    /// Admit one prompt into a free slot; returns its next-token logits
+    /// row (`[vocab]`).
+    fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>>;
+    /// Advance every `active` slot by one token at its own position,
+    /// writing the flat `[n_slots * vocab]` logits into `out` (a reused
+    /// scratch buffer — the per-step decode path must not allocate).
+    fn decode_slots(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+    /// Retire a finished sequence, freeing its slot for the next admission.
+    fn release_slot(&mut self, slot: usize) -> Result<()>;
+    /// Accounting hook: `n` tokens were sampled this step.
+    fn note_generated(&mut self, _n: u64) {}
+}
+
+impl SlotEngine for HybridEngine {
+    fn n_slots(&self) -> usize {
+        self.manifest().batch
+    }
+
+    fn vocab(&self) -> usize {
+        self.manifest().actor.vocab
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.manifest().prompt_len
+    }
+
+    fn max_new_tokens(&self) -> usize {
+        self.manifest().gen_len
+    }
+
+    fn begin_serving(&mut self) -> Result<()> {
+        HybridEngine::begin_serving(self)
+    }
+
+    fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+        HybridEngine::prefill_slot(self, slot, prompt)
+    }
+
+    fn decode_slots(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let logits = HybridEngine::decode_slots(self, toks, pos, active)?;
+        out.clear();
+        out.extend_from_slice(logits.as_f32()?);
+        Ok(())
+    }
+
+    fn release_slot(&mut self, slot: usize) -> Result<()> {
+        HybridEngine::release_slot(self, slot)
+    }
+
+    fn note_generated(&mut self, n: u64) {
+        self.stats.gen_tokens += n;
+    }
+}
+
+/// One queued generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Exactly `prompt_len` tokens (the AOT artifacts are fixed-shape).
+    pub prompt: Vec<i32>,
+    /// Requested generation budget; capped at the engine's
+    /// [`SlotEngine::max_new_tokens`].
+    pub max_new: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The model emitted EOS (included as the sequence's last token).
+    Eos,
+    /// The per-request or engine generation budget was exhausted.
+    Length,
+}
+
+/// A finished sequence handed back by [`Scheduler::step`].
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    /// Batch slot the sequence occupied (diagnostic).
+    pub slot: usize,
+    pub prompt_len: usize,
+    /// Prompt ++ generated tokens (EOS included when emitted; no padding).
+    pub tokens: Vec<i32>,
+    pub generated: usize,
+    pub finish: FinishReason,
+    /// Scheduler steps spent waiting in the queue before admission.
+    pub queued_steps: u64,
+    /// Scheduler steps from admission to retirement.
+    pub decode_steps: u64,
+}
+
+impl Completion {
+    /// The generated suffix (response) of the sequence.
+    pub fn response(&self) -> &[i32] {
+        &self.tokens[self.prompt_len..]
+    }
+}
+
+/// A sequence occupying one batch slot.
+struct Seq {
+    id: u64,
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    generated: usize,
+    max_new: usize,
+    /// Logits predicting the next token (from prefill or the last decode).
+    logits: Vec<f32>,
+    enqueued_step: u64,
+    admitted_step: u64,
+}
+
+/// Counters for the serve log and the `serve_loop` bench.
+#[derive(Debug, Default, Clone)]
+pub struct SchedStats {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub completed: u64,
+    /// Scheduler ticks ([`Scheduler::step`] calls).
+    pub steps: u64,
+    /// Fused decode calls issued (<= steps; idle ticks issue none).
+    pub decode_calls: u64,
+    pub prefills: u64,
+    pub peak_queue_depth: usize,
+    /// Busy slot-steps across all decode calls (utilization numerator).
+    pub slot_steps_active: u64,
+    /// Total slot-steps across all decode calls (`decode_calls * n_slots`).
+    pub slot_steps_total: u64,
+}
+
+impl SchedStats {
+    /// Fraction of decode-call slot capacity that carried live sequences.
+    pub fn utilization(&self) -> f64 {
+        self.slot_steps_active as f64 / self.slot_steps_total.max(1) as f64
+    }
+}
+
+/// The continuous-batching scheduler. Owns the engine; requests flow in
+/// via [`Scheduler::submit`] and completed sequences flow out of
+/// [`Scheduler::step`].
+pub struct Scheduler<E: SlotEngine> {
+    pub engine: E,
+    pub stats: SchedStats,
+    queue: VecDeque<(Request, u64)>,
+    slots: Vec<Option<Seq>>,
+    step_idx: u64,
+    /// Reused `[n_slots * vocab]` logits staging for the decode call.
+    scratch: Vec<f32>,
+    /// Reused per-step decode inputs (the hot loop must not allocate).
+    step_toks: Vec<i32>,
+    step_pos: Vec<i32>,
+    step_active: Vec<bool>,
+}
+
+impl<E: SlotEngine> Scheduler<E> {
+    /// Wrap an engine and enter serving mode (empty cache, all slots free).
+    pub fn new(mut engine: E) -> Result<Self> {
+        engine.begin_serving()?;
+        let n = engine.n_slots();
+        Ok(Scheduler {
+            engine,
+            stats: SchedStats::default(),
+            queue: VecDeque::new(),
+            slots: (0..n).map(|_| None).collect(),
+            step_idx: 0,
+            scratch: Vec::new(),
+            step_toks: vec![Vocab::PAD; n],
+            step_pos: vec![0; n],
+            step_active: vec![false; n],
+        })
+    }
+
+    /// Abandon all queued and in-flight sequences and re-enter serving
+    /// mode with a fresh cache — the recovery path after a failed step
+    /// left slot state suspect. The caller is responsible for replying to
+    /// the abandoned requests.
+    pub fn reset(&mut self) -> Result<()> {
+        self.queue.clear();
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        self.engine.begin_serving()
+    }
+
+    /// Enqueue a request; it is admitted at the next step boundary with a
+    /// free slot. The queue is unbounded — backpressure is visible through
+    /// [`Scheduler::queue_depth`].
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        if req.prompt.len() != self.engine.prompt_len() {
+            bail!(
+                "request {} prompt must be [{}], got {} tokens",
+                req.id,
+                self.engine.prompt_len(),
+                req.prompt.len()
+            );
+        }
+        self.stats.submitted += 1;
+        self.queue.push_back((req, self.step_idx));
+        self.stats.peak_queue_depth = self.stats.peak_queue_depth.max(self.queue.len());
+        Ok(())
+    }
+
+    /// Requests waiting for a slot.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Sequences currently occupying slots.
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// True when nothing is queued and no slot is busy.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.iter().all(|s| s.is_none())
+    }
+
+    /// One scheduler iteration: admit → sample/retire → fused decode.
+    /// Returns the sequences that finished this step.
+    pub fn step(&mut self, sampler: &mut Sampler) -> Result<Vec<Completion>> {
+        let b = self.slots.len();
+        self.stats.steps += 1;
+
+        // 1. Admission at the step boundary: every free slot takes the
+        // oldest queued request; its prefill runs while the other slots'
+        // device state stays live.
+        for slot in 0..b {
+            if self.slots[slot].is_some() {
+                continue;
+            }
+            let Some((req, enqueued_step)) = self.queue.pop_front() else {
+                break;
+            };
+            let logits = self.engine.prefill_slot(slot, &req.prompt)?;
+            self.stats.prefills += 1;
+            self.stats.admitted += 1;
+            let max_new = req.max_new.clamp(1, self.engine.max_new_tokens());
+            self.slots[slot] = Some(Seq {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: req.prompt,
+                generated: 0,
+                max_new,
+                logits,
+                enqueued_step,
+                admitted_step: self.step_idx,
+            });
+        }
+
+        // 2. Sample one token per live slot; retire finished sequences
+        // immediately so their slots are admissible next step.
+        let mut completions = Vec::new();
+        let mut sampled = 0u64;
+        for slot in 0..b {
+            let Some(seq) = self.slots[slot].as_mut() else {
+                continue;
+            };
+            let t = sampler.sample(&seq.logits, &seq.tokens);
+            seq.tokens.push(t);
+            seq.generated += 1;
+            sampled += 1;
+            let finish = if t == Vocab::EOS {
+                Some(FinishReason::Eos)
+            } else if seq.generated >= seq.max_new {
+                Some(FinishReason::Length)
+            } else {
+                None
+            };
+            if let Some(finish) = finish {
+                let seq = self.slots[slot].take().unwrap();
+                self.engine.release_slot(slot)?;
+                self.stats.completed += 1;
+                completions.push(Completion {
+                    id: seq.id,
+                    slot,
+                    prompt_len: seq.prompt_len,
+                    generated: seq.generated,
+                    finish,
+                    queued_steps: seq.admitted_step - seq.enqueued_step,
+                    decode_steps: self.step_idx + 1 - seq.admitted_step,
+                    tokens: seq.tokens,
+                });
+            }
+        }
+        self.engine.note_generated(sampled);
+
+        // 3. One fused decode over every still-live slot, each at its own
+        // position. Free slots ride along as dead rows (PAD at pos 0).
+        let active_n = self.n_active();
+        if active_n > 0 {
+            for slot in 0..b {
+                if let Some(seq) = &self.slots[slot] {
+                    self.step_toks[slot] = *seq.tokens.last().unwrap();
+                    self.step_pos[slot] = (seq.tokens.len() - 1) as i32;
+                    self.step_active[slot] = true;
+                } else {
+                    self.step_toks[slot] = Vocab::PAD;
+                    self.step_pos[slot] = 0;
+                    self.step_active[slot] = false;
+                }
+            }
+            self.engine.decode_slots(
+                &self.step_toks,
+                &self.step_pos,
+                &self.step_active,
+                &mut self.scratch,
+            )?;
+            let vocab = self.engine.vocab();
+            for slot in 0..b {
+                if let Some(seq) = self.slots[slot].as_mut() {
+                    seq.logits.clear();
+                    seq.logits
+                        .extend_from_slice(&self.scratch[slot * vocab..(slot + 1) * vocab]);
+                }
+            }
+            self.stats.decode_calls += 1;
+            self.stats.slot_steps_active += active_n as u64;
+            self.stats.slot_steps_total += b as u64;
+        }
+
+        self.step_idx += 1;
+        Ok(completions)
+    }
+
+    /// Drive the loop until queue and slots drain; returns all completions
+    /// in retirement order.
+    pub fn run_until_idle(&mut self, sampler: &mut Sampler) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        while !self.is_idle() {
+            all.extend(self.step(sampler)?);
+        }
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::SamplerConfig;
+
+    const VOCAB: usize = 32;
+    const SP: usize = 4;
+    const SG: usize = 8;
+    const CONTENT: i32 = 9;
+
+    /// Scripted slot engine: a request's `prompt[0]` encodes how many
+    /// content tokens it emits before EOS (`>= SG` means "never EOS"), so
+    /// a greedy sampler replays the plan deterministically.
+    struct MockEngine {
+        n_slots: usize,
+        /// Per slot: (planned generated tokens, cursor of the next logits).
+        plans: Vec<Option<(Vec<i32>, usize)>>,
+        prefill_log: Vec<usize>,
+        released: Vec<usize>,
+        /// Active-mask of every decode call (for utilization assertions).
+        decode_active: Vec<Vec<bool>>,
+    }
+
+    impl MockEngine {
+        fn new(n_slots: usize) -> Self {
+            MockEngine {
+                n_slots,
+                plans: (0..n_slots).map(|_| None).collect(),
+                prefill_log: Vec::new(),
+                released: Vec::new(),
+                decode_active: Vec::new(),
+            }
+        }
+
+        fn logits_for(&self, tok: i32) -> Vec<f32> {
+            let mut row = vec![0.0f32; VOCAB];
+            row[tok as usize] = 1.0;
+            row
+        }
+    }
+
+    impl SlotEngine for MockEngine {
+        fn n_slots(&self) -> usize {
+            self.n_slots
+        }
+
+        fn vocab(&self) -> usize {
+            VOCAB
+        }
+
+        fn prompt_len(&self) -> usize {
+            SP
+        }
+
+        fn max_new_tokens(&self) -> usize {
+            SG
+        }
+
+        fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+            assert_eq!(prompt.len(), SP);
+            assert!(self.plans[slot].is_none(), "prefill into busy slot {slot}");
+            let n = prompt[0] as usize;
+            let plan: Vec<i32> = (0..SG + 2)
+                .map(|j| if j < n { CONTENT } else { Vocab::EOS })
+                .collect();
+            let logits = self.logits_for(plan[0]);
+            self.plans[slot] = Some((plan, 1));
+            self.prefill_log.push(slot);
+            Ok(logits)
+        }
+
+        fn decode_slots(
+            &mut self,
+            toks: &[i32],
+            pos: &[i32],
+            active: &[bool],
+            out: &mut Vec<f32>,
+        ) -> Result<()> {
+            assert_eq!(toks.len(), self.n_slots);
+            assert_eq!(pos.len(), self.n_slots);
+            self.decode_active.push(active.to_vec());
+            out.clear();
+            out.resize(self.n_slots * VOCAB, 0.0);
+            for slot in 0..self.n_slots {
+                if !active[slot] {
+                    continue;
+                }
+                let tok = {
+                    let (plan, cur) = self.plans[slot].as_mut().expect("active free slot");
+                    let t = plan[*cur];
+                    *cur += 1;
+                    t
+                };
+                let row = self.logits_for(tok);
+                out[slot * VOCAB..(slot + 1) * VOCAB].copy_from_slice(&row);
+            }
+            Ok(())
+        }
+
+        fn release_slot(&mut self, slot: usize) -> Result<()> {
+            assert!(self.plans[slot].is_some(), "release of free slot {slot}");
+            self.plans[slot] = None;
+            self.released.push(slot);
+            Ok(())
+        }
+    }
+
+    fn greedy() -> Sampler {
+        Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0)
+    }
+
+    /// `prompt[0]` = content tokens the scripted engine emits before EOS.
+    fn req(id: u64, eos_after: i32, max_new: usize) -> Request {
+        let mut prompt = vec![CONTENT; SP];
+        prompt[0] = eos_after;
+        Request { id, prompt, max_new }
+    }
+
+    #[test]
+    fn admission_happens_at_step_boundaries_only() {
+        let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+        let mut sampler = greedy();
+        for id in 0..3 {
+            sched.submit(req(id, 100, 3)).unwrap();
+        }
+        // Tick 1: both slots admitted, third request queued.
+        sched.step(&mut sampler).unwrap();
+        assert_eq!(sched.engine.prefill_log, vec![0, 1]);
+        assert_eq!(sched.queue_depth(), 1);
+        assert_eq!(sched.n_active(), 2);
+        // Ticks 2-3: slots stay busy, no mid-flight admission even though
+        // both retire during tick 3.
+        sched.step(&mut sampler).unwrap();
+        let done = sched.step(&mut sampler).unwrap();
+        assert_eq!(done.len(), 2, "both length-capped sequences retire together");
+        assert_eq!(sched.engine.prefill_log.len(), 2, "no admission before the boundary");
+        // Tick 4: the queued request takes the first freed slot.
+        sched.step(&mut sampler).unwrap();
+        assert_eq!(sched.engine.prefill_log, vec![0, 1, 0]);
+        assert_eq!(sched.queue_depth(), 0);
+        assert_eq!(sched.n_active(), 1);
+    }
+
+    #[test]
+    fn slot_is_reused_after_retirement() {
+        let mut sched = Scheduler::new(MockEngine::new(1)).unwrap();
+        let mut sampler = greedy();
+        sched.submit(req(7, 1, SG)).unwrap();
+        sched.submit(req(8, 1, SG)).unwrap();
+        let all = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].id, 7);
+        assert_eq!(all[1].id, 8);
+        // Same slot served both sequences, back to back.
+        assert_eq!(sched.engine.prefill_log, vec![0, 0]);
+        assert_eq!(sched.engine.released, vec![0, 0]);
+        assert_eq!(all[1].slot, 0);
+    }
+
+    #[test]
+    fn eos_and_length_retirement() {
+        let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+        let mut sampler = greedy();
+        sched.submit(req(1, 2, SG)).unwrap(); // C C EOS
+        sched.submit(req(2, 100, 4)).unwrap(); // never EOS, capped at 4
+        let all = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(all.len(), 2);
+        let a = all.iter().find(|c| c.id == 1).unwrap();
+        let b = all.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(a.finish, FinishReason::Eos);
+        assert_eq!(a.generated, 3);
+        assert_eq!(a.response(), &[CONTENT, CONTENT, Vocab::EOS]);
+        assert_eq!(b.finish, FinishReason::Length);
+        assert_eq!(b.generated, 4);
+        assert_eq!(b.response(), &[CONTENT; 4]);
+        assert!(b.response().iter().all(|&t| t != Vocab::EOS));
+    }
+
+    #[test]
+    fn backpressure_queues_when_all_slots_busy() {
+        let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+        let mut sampler = greedy();
+        for id in 0..5 {
+            sched.submit(req(id, 100, 2)).unwrap();
+        }
+        sched.step(&mut sampler).unwrap();
+        assert_eq!(sched.stats.admitted, 2);
+        assert_eq!(sched.queue_depth(), 3);
+        assert_eq!(sched.stats.peak_queue_depth, 5);
+        let all = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(all.len(), 5, "every request eventually completes");
+        assert_eq!(sched.stats.completed, 5);
+        // The first wave never queued; the later waves did.
+        for c in &all {
+            if c.id < 2 {
+                assert_eq!(c.queued_steps, 0, "req {}", c.id);
+            } else {
+                assert!(c.queued_steps > 0, "req {}", c.id);
+            }
+        }
+        // No decode call ever carried more live slots than exist.
+        for mask in &sched.engine.decode_active {
+            assert!(mask.iter().filter(|a| **a).count() <= 2);
+        }
+        assert!(sched.is_idle());
+        assert!(sched.stats.utilization() > 0.5);
+    }
+
+    #[test]
+    fn wrong_prompt_length_is_rejected_at_submit() {
+        let mut sched = Scheduler::new(MockEngine::new(1)).unwrap();
+        let err = sched
+            .submit(Request { id: 0, prompt: vec![1; SP + 1], max_new: 4 })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("prompt must be"));
+        assert!(sched.is_idle());
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration: the continuous-batching serving path over real AOT
+//! artifacts (requires `make artifacts` with the `prefill_slot` /
+//! `decode_slots` entries). Each test passes vacuously when artifacts are
+//! missing or predate the serving entry points, so tier-1 stays green on a
+//! bare checkout; the scheduler's policy logic is covered without
+//! artifacts by the unit tests in `rust/src/serving/mod.rs`.
+
+use std::rc::Rc;
+
+use dschat::data::synthetic::TaskGen;
+use dschat::hybrid::HybridEngine;
+use dschat::runtime::{Engine, Manifest};
+use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::serving::{Completion, Request, Scheduler};
+use dschat::util::rng::Rng;
+
+const DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny");
+
+fn serving_artifacts() -> bool {
+    match Manifest::load(DIR) {
+        Ok(m) => {
+            m.artifacts.contains_key("prefill_slot") && m.artifacts.contains_key("decode_slots")
+        }
+        Err(_) => false,
+    }
+}
+
+fn golden_sampler() -> Sampler {
+    Sampler::new(
+        SamplerConfig {
+            temperature: 0.9,
+            top_k: 8,
+            top_p: 0.95,
+            repetition_penalty: 1.1,
+            ..Default::default()
+        },
+        7,
+    )
+}
+
+/// Build a scheduler, submit `b + 2` requests with a staggered pattern
+/// (two up front, the rest after one step), run to idle, and return the
+/// scheduler plus completions sorted by id and the prompts used.
+fn run_staggered() -> (Scheduler<HybridEngine>, Vec<Completion>, Vec<Vec<i32>>) {
+    let engine = Rc::new(Engine::cpu().unwrap());
+    let he = HybridEngine::init(engine, DIR, 0, false).unwrap();
+    let m = he.manifest();
+    let (b, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut rng = Rng::new(41);
+    let prompts: Vec<Vec<i32>> =
+        (0..b + 2).map(|_| task.sample_prompt(&mut rng).tokens).collect();
+
+    let mut sched = Scheduler::new(he).unwrap();
+    let mut sampler = golden_sampler();
+    let mut done = Vec::new();
+    for (id, p) in prompts.iter().enumerate().take(2) {
+        sched.submit(Request { id: id as u64, prompt: p.clone(), max_new: sg }).unwrap();
+    }
+    done.extend(sched.step(&mut sampler).unwrap());
+    for (id, p) in prompts.iter().enumerate().skip(2) {
+        sched.submit(Request { id: id as u64, prompt: p.clone(), max_new: sg }).unwrap();
+    }
+    done.extend(sched.run_until_idle(&mut sampler).unwrap());
+    done.sort_by_key(|c| c.id);
+    (sched, done, prompts)
+}
+
+#[test]
+fn staggered_serving_completes_all_and_preserves_prompts() {
+    if !serving_artifacts() {
+        eprintln!("skipping: {DIR} missing serving artifacts (run `make artifacts`)");
+        return;
+    }
+    let (sched, done, prompts) = run_staggered();
+    let b = sched.engine.manifest().batch;
+    let sg = sched.engine.manifest().gen_len;
+    assert_eq!(done.len(), b + 2, "every request completes");
+    for (id, c) in done.iter().enumerate() {
+        assert_eq!(c.id, id as u64);
+        // Prompt region copied verbatim into the sequence.
+        assert_eq!(&c.tokens[..c.prompt_len], prompts[id].as_slice(), "req {id}");
+        assert!(c.generated >= 1 && c.generated <= sg, "req {id}: {}", c.generated);
+        assert_eq!(c.tokens.len(), c.prompt_len + c.generated);
+    }
+    // More requests than slots forces queueing and slot reuse.
+    assert_eq!(sched.stats.admitted as usize, b + 2);
+    assert_eq!(sched.stats.prefills as usize, b + 2);
+    assert!(sched.stats.peak_queue_depth >= 2, "{}", sched.stats.peak_queue_depth);
+    assert!(done.iter().any(|c| c.queued_steps > 0), "someone must have waited");
+    assert!(sched.is_idle());
+    // The engine counted the serving tokens in its generation ledger.
+    let total: usize = done.iter().map(|c| c.generated).sum();
+    assert_eq!(sched.engine.stats.gen_tokens as usize, total);
+}
+
+#[test]
+fn serving_path_is_bit_deterministic() {
+    // The continuous-batching analogue of the PR 1 generate golden: the
+    // same request trace through a fresh engine must reproduce the exact
+    // token sequences (device-resident per-slot decode can't perturb
+    // sampling inputs).
+    if !serving_artifacts() {
+        eprintln!("skipping: {DIR} missing serving artifacts (run `make artifacts`)");
+        return;
+    }
+    let (_, first, _) = run_staggered();
+    let (_, again, _) = run_staggered();
+    assert_eq!(first.len(), again.len());
+    for (a, b) in first.iter().zip(&again) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "req {}", a.id);
+        assert_eq!(a.finish, b.finish);
+    }
+}
+
+#[test]
+fn serving_cache_accounting_survives_generate_reentry() {
+    // The serving cache participates in the same alloc/free ledger as the
+    // batch path: generate() after a serving session replaces the cache
+    // without double-counting.
+    if !serving_artifacts() {
+        eprintln!("skipping: {DIR} missing serving artifacts (run `make artifacts`)");
+        return;
+    }
+    let (sched, _, _) = run_staggered();
+    let mut he = sched.engine;
+    let kv_live = he.memory.live_named("kv_cache");
+    assert!(kv_live > 0, "serving cache must be tracked");
+    let m = he.manifest();
+    let (b, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut rng = Rng::new(5);
+    let mut flat = Vec::with_capacity(b * sp);
+    for _ in 0..b {
+        flat.extend_from_slice(&task.sample_prompt(&mut rng).tokens);
+    }
+    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+    he.generate(&flat, &mut sampler).unwrap();
+    assert_eq!(he.memory.live_named("kv_cache"), kv_live, "re-entry double-counted kv");
+}

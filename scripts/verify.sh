@@ -1,10 +1,14 @@
 #!/usr/bin/env bash
-# One entry point for builders and CI:
+# One entry point for builders and CI (also reachable as `make verify`):
 #   tier-1:  cargo build --release && cargo test -q
-#   perf:    decode-loop bench in smoke mode (needs `make artifacts` output)
+#   perf:    decode-loop + serve-loop benches in smoke mode, and the serve
+#            example's --demo path (all need `make artifacts` output)
 #
 # Integration tests that need artifacts/tiny fail with a "make artifacts"
 # hint when the artifacts are missing; unit/property tests always run.
+# Serve smokes additionally need artifacts that include the serving
+# entries (prefill_slot / decode_slots) — stale artifact dirs skip them
+# with a re-run hint instead of failing.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,8 +28,17 @@ if [ -f artifacts/tiny/manifest.json ]; then
     echo "== verify: decode bench (smoke) =="
     cargo bench --bench runtime_e2e -- --smoke
     echo "verify: wrote BENCH_decode.json"
+    if grep -q '"prefill_slot"' artifacts/tiny/manifest.json; then
+        echo "== verify: serve demo (continuous batching smoke) =="
+        cargo run --release --example serve -- --demo
+        echo "== verify: serve bench (smoke) =="
+        cargo bench --bench serve_loop -- --smoke
+        echo "verify: wrote BENCH_serve.json"
+    else
+        echo "verify: artifacts predate continuous batching — skipping serve smokes (re-run \`make artifacts\`)"
+    fi
 else
-    echo "verify: artifacts/tiny missing — skipping decode bench (run \`make artifacts\`)"
+    echo "verify: artifacts/tiny missing — skipping benches (run \`make artifacts\`)"
 fi
 
 echo "verify: OK"
