@@ -22,7 +22,7 @@ use dschat::examples_support::{naive_generate, ppo_probe};
 use dschat::hybrid::HybridEngine;
 use dschat::pipeline;
 use dschat::runtime::{ArtifactSet, Engine, HostTensor};
-use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::sampling::{HostFullRow, SamplerConfig};
 use dschat::util::argparse::Args;
 use dschat::util::csv::Table;
 use dschat::util::rng::Rng;
@@ -105,7 +105,7 @@ fn ablation_generation(dir: &str) -> anyhow::Result<()> {
         flat.extend_from_slice(&task.sample_prompt(&mut rng).tokens);
     }
 
-    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+    let mut sampler = HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
     // warmup (compile/caches)
     let warm_kv = he.generate(&flat, &mut sampler)?;
     let t0 = Instant::now();

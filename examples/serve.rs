@@ -24,12 +24,21 @@
 //! and early-EOS slots are refilled instead of burning decode steps on
 //! dead rows.
 //!
+//! # Sampling backend
+//!
+//! `--backend auto|device|host` picks the [`dschat::sampling`] backend:
+//! `device` runs the fused sampling tail inside the `_sampled` artifacts
+//! (per-tick fetch is the `[b]` token ids — O(b) instead of the
+//! `[b, vocab]` logits matrix), `host` is the full-row path, and `auto`
+//! (default) uses the device tail whenever the artifact set has it.
+//!
 //! Per-request latency, queue depth, live-slot count, and host bytes/token
 //! (from the engine's byte ledger) are logged to stderr at completion.
 //!
 //! ```text
 //! cargo run --release --example serve -- [--run tiny] [--ckpt runs/tiny/actor.bin] \
-//!     [--port 7878] [--demo]        # --demo: run 6 in-process requests and exit
+//!     [--port 7878] [--backend auto|device|host] \
+//!     [--demo]                      # --demo: run 6 in-process requests and exit
 //! ```
 
 use std::collections::HashMap;
@@ -43,7 +52,7 @@ use dschat::data::synthetic::{Mode, Prompt, TaskGen, Vocab};
 use dschat::hybrid::HybridEngine;
 use dschat::pipeline;
 use dschat::runtime::Engine;
-use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
 use dschat::serving::{Request, Scheduler};
 use dschat::util::argparse::Args;
 use dschat::util::fmt_bytes;
@@ -124,7 +133,28 @@ fn main() -> anyhow::Result<()> {
     let m = he.manifest();
     let (sp, sg) = (m.prompt_len, m.gen_len);
     let task = TaskGen::new(m.actor.vocab, sp, sg);
-    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+    // Pick the sampling backend: the device tail (O(b) ids fetched per
+    // tick) whenever the artifacts carry it, unless overridden.
+    let device_ready = m.artifacts.contains_key("decode_slots_sampled")
+        && m.artifacts.contains_key("prefill_slot_sampled")
+        && m.sample_k > 0;
+    let greedy_cfg = SamplerConfig { greedy: true, ..Default::default() };
+    let use_device = match args.str("backend", "auto").as_str() {
+        "device" => true,
+        "host" => false,
+        "auto" => device_ready,
+        other => anyhow::bail!("unknown --backend {other:?} (auto|device|host)"),
+    };
+    let mut sampler: Box<dyn SamplingBackend> = if use_device {
+        Box::new(DeviceTopK::for_manifest(greedy_cfg, 0, m)?)
+    } else {
+        Box::new(HostFullRow::new(greedy_cfg, 0))
+    };
+    eprintln!(
+        "sampling backend: {} (per-tick fetch {})",
+        if use_device { "device (fused sampling tail)" } else { "host (full logits rows)" },
+        if use_device { "[b] token ids" } else { "[b, vocab] logits" },
+    );
 
     // From here on the scheduler owns the engine (per-slot serving mode).
     let mut sched = Scheduler::new(he)?;
@@ -142,7 +172,7 @@ fn main() -> anyhow::Result<()> {
             sched.submit(Request { id: i as u64, prompt: prompt.tokens.clone(), max_new: sg })?;
             prompts.insert(i as u64, prompt);
         }
-        let mut done = sched.run_until_idle(&mut sampler)?;
+        let mut done = sched.run_until_idle(sampler.as_mut())?;
         done.sort_by_key(|c| c.id);
         for c in &done {
             let p = &prompts[&c.id];
@@ -228,7 +258,7 @@ fn main() -> anyhow::Result<()> {
         while let Ok(rl) = rx.try_recv() {
             enqueue(rl, &task, &mut sched, &mut pending, &mut next_id, sg);
         }
-        let done = match sched.step(&mut sampler) {
+        let done = match sched.step(sampler.as_mut()) {
             Ok(done) => done,
             Err(e) => {
                 // A failed step leaves slot state suspect: fail the

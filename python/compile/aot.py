@@ -50,10 +50,15 @@ def _ospecs(cfg, kind):
 
 
 def build_entries(rc):
-    """Returns {name: (fn, [arg_specs], [output names])}.
+    """Returns {name: (fn, [arg_specs], [output names], donate_argnums)}.
 
     fn takes flat positional args (matching arg_specs) and returns a flat
     tuple. Output names are recorded in the manifest for rust-side parsing.
+    `donate_argnums` marks inputs whose buffers XLA may update in place
+    (the K/V caches of the decode entry points): the lowered HLO carries the
+    `input_output_alias` and the rust runtime must treat those inputs as
+    consumed by the call (it does — decode outputs replace the live cache
+    handles every step; see rust/src/runtime/mod.rs).
     """
     a, c = rc.actor, rc.critic
     B, S, SP = rc.batch, rc.seq_len, rc.prompt_len
@@ -189,6 +194,10 @@ def build_entries(rc):
     )
 
     kv = _spec((a.n_layers, bh_a, S, a.d_head))
+    # The K/V cache inputs sit right after the params in every decode-family
+    # entry; donating them lets XLA scatter the new K/V rows into the live
+    # cache buffers instead of allocating a fresh pair each step.
+    kv_donate = (na, na + 1)
 
     def gen_decode(*args):
         P = list(args[:na])
@@ -199,6 +208,7 @@ def build_entries(rc):
         gen_decode,
         _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((1,), jnp.int32)],
         ["logits", "k_cache", "v_cache"],
+        kv_donate,
     )
 
     # ---- serving: iteration-level continuous batching ---------------------
@@ -227,6 +237,69 @@ def build_entries(rc):
         gen_decode_slots,
         _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((B,), jnp.int32)],
         ["logits", "k_cache", "v_cache"],
+        kv_donate,
+    )
+
+    # ---- device-side sampling: the `_sampled` artifact family ---------------
+    # Same compute as the entries above plus the fused Pallas sampling tail
+    # (kernels/sampling.py): outputs are (ids [B], topk_logits [B, K],
+    # topk_ids [B, K], caches) instead of the full [B, vocab] logits row.
+    # The rust `SamplingBackend` fetches ids only (greedy, O(B)) or the
+    # top-k pair (stochastic, O(B·K)) and finishes the draw host-side.
+    K = rc.sample_k
+    assert 0 < K <= a.vocab, (K, a.vocab)
+    sampled_outputs = ["ids", "topk_logits", "topk_ids", "k_cache", "v_cache"]
+
+    def gen_prefill_sampled(*args):
+        P = list(args[:na])
+        prompt = args[na]
+        return model.prefill_sampled(a, model.unflatten_params(a, "lm", P), prompt, S, K)
+
+    entries["prefill_sampled"] = (
+        gen_prefill_sampled,
+        _pspecs(a, "lm") + [_spec((B, SP), jnp.int32)],
+        sampled_outputs,
+    )
+
+    def gen_decode_sampled(*args):
+        P = list(args[:na])
+        kc, vc, token, pos = args[na:]
+        return model.decode_step_sampled(
+            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, K
+        )
+
+    entries["decode_step_sampled"] = (
+        gen_decode_sampled,
+        _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((1,), jnp.int32)],
+        sampled_outputs,
+        kv_donate,
+    )
+
+    def gen_prefill_slot_sampled(*args):
+        P = list(args[:na])
+        kc, vc, prompt, slot = args[na:]
+        return model.prefill_slot_sampled(
+            a, model.unflatten_params(a, "lm", P), kc, vc, prompt, slot, K
+        )
+
+    entries["prefill_slot_sampled"] = (
+        gen_prefill_slot_sampled,
+        _pspecs(a, "lm") + [kv, kv, _spec((1, SP), jnp.int32), _spec((1,), jnp.int32)],
+        sampled_outputs,
+    )
+
+    def gen_decode_slots_sampled(*args):
+        P = list(args[:na])
+        kc, vc, token, pos = args[na:]
+        return model.decode_slots_sampled(
+            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, K
+        )
+
+    entries["decode_slots_sampled"] = (
+        gen_decode_slots_sampled,
+        _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((B,), jnp.int32)],
+        sampled_outputs,
+        kv_donate,
     )
 
     # ---- step 3: PPO updates ----------------------------------------------
@@ -304,8 +377,8 @@ def build_entries(rc):
     return entries
 
 
-def lower_entry(fn, specs):
-    return jax.jit(fn).lower(*specs)
+def lower_entry(fn, specs, donate=()):
+    return jax.jit(fn, donate_argnums=tuple(donate)).lower(*specs)
 
 
 def build(run_name: str, out_dir: str, only=None):
@@ -327,23 +400,32 @@ def build(run_name: str, out_dir: str, only=None):
         ],
         "artifacts": {},
     }
-    for name, (fn, specs, outputs) in entries.items():
+    for name, entry in entries.items():
         if only and name not in only:
             continue
+        fn, specs, outputs = entry[:3]
+        donate = entry[3] if len(entry) > 3 else ()
         fname = f"{name}.hlo.txt"
         path = os.path.join(out_dir, fname)
         print(f"[aot:{run_name}] lowering {name} ({len(specs)} inputs) ...", flush=True)
-        text = to_hlo_text(lower_entry(fn, specs))
-        with open(path, "w") as f:
-            f.write(text)
+        text = to_hlo_text(lower_entry(fn, specs, donate))
         manifest["artifacts"][name] = {
             "file": fname,
             "inputs": [
                 {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
             ],
             "outputs": outputs,
+            "donates": list(donate),
             "hlo_bytes": len(text),
         }
+        if donate and "input_output_alias" not in text.split("\n", 1)[0]:
+            raise RuntimeError(
+                f"{name}: donate_argnums={donate} did not survive to the HLO "
+                "text (input_output_alias missing) — the in-place KV update "
+                "contract with the rust runtime would silently degrade"
+            )
+        with open(path, "w") as f:
+            f.write(text)
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"[aot:{run_name}] wrote {len(manifest['artifacts'])} artifacts to {out_dir}")

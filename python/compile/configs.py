@@ -46,6 +46,10 @@ class RunConfig:
     batch: int
     prompt_len: int
     gen_len: int
+    # Candidate count of the device-side sampling tail: the `_sampled`
+    # artifacts return [batch, sample_k] top-k logits+ids instead of the
+    # full [batch, vocab] row. Must satisfy 0 < sample_k <= actor.vocab.
+    sample_k: int = 32
 
     @property
     def seq_len(self) -> int:

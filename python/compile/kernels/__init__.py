@@ -4,6 +4,7 @@ from .attention import flash_attention, flash_attention_fwd
 from .decode import decode_attention, decode_attention_pb
 from .layernorm import layernorm
 from .adam_kernel import adam_update
+from .sampling import argmax_rows, top_k_rows
 
 __all__ = [
     "flash_attention",
@@ -12,4 +13,6 @@ __all__ = [
     "decode_attention_pb",
     "layernorm",
     "adam_update",
+    "argmax_rows",
+    "top_k_rows",
 ]

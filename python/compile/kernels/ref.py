@@ -54,6 +54,22 @@ def decode_attention_pb_ref(q, k, v, pos):
     return out.astype(q.dtype)
 
 
+def argmax_ref(x):
+    """Row-wise greedy token ids. x: [b, vocab] -> [b] int32 (first max wins)."""
+    return jnp.argmax(x, axis=-1).astype(jnp.int32)
+
+
+def top_k_ref(x, k):
+    """Row-wise top-k candidates (sampling-tail oracle).
+
+    x: [b, vocab] -> (values [b, k] f32, indices [b, k] int32), sorted by
+    descending value, ties toward the lower index — `lax.top_k` semantics,
+    which the iterative-selection kernel reproduces exactly.
+    """
+    v, i = jax.lax.top_k(x.astype(jnp.float32), k)
+    return v, i.astype(jnp.int32)
+
+
 def layernorm_ref(x, g, b, eps=1e-5):
     """LayerNorm over the last axis. x: [n, d]; g,b: [d]."""
     xf = x.astype(jnp.float32)

@@ -1,0 +1,98 @@
+"""L1: fused sampling tail — the device half of token sampling.
+
+Until now every decode artifact ended at the logits matmul and the full
+`[b, vocab]` row crossed to the host for sampling, the dominant remaining
+host↔device traffic of the generation loop (the inference-side bottleneck
+DeepSpeed-Chat's hybrid engine targets; OpenRLHF makes the same point about
+the RLHF sampling tail). These kernels run the heavy half of sampling on
+device so the host sees only what it needs:
+
+  * `argmax_rows` — greedy decoding: `[b]` token ids, O(b) bytes/step.
+  * `top_k_rows`  — stochastic decoding: the `[b, k]` largest candidate
+    logits + their vocabulary indices, O(b·k) bytes/step. The host finishes
+    temperature / top-p / the categorical draw over the k candidates so the
+    seeded rust RNG stays the single source of randomness (generation
+    remains bit-deterministic and EOS/length retirement stays host-side).
+
+Tie-breaking is first-index-wins in both kernels (matching `jax.lax.top_k`
+and the rust host sampler's argmax), which is what makes device-greedy
+generation bit-identical to the host full-row path.
+
+Selection is iterative (k passes of max+mask over the row held in VMEM):
+k ≪ vocab and the row is already resident from the logits matmul, so the
+tail adds O(k·vocab) flops to a step that just did O(d·vocab) — noise — in
+exchange for shrinking the per-step fetch by vocab/k.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _argmax_kernel(x_ref, o_ref):
+    x = pl.load(x_ref, (pl.dslice(0, 1), slice(None)))[0].astype(jnp.float32)
+    o_ref[...] = jnp.argmax(x).astype(jnp.int32)[None]
+
+
+def argmax_rows(x):
+    """Row-wise argmax. x: [b, vocab] -> [b] int32 (first max wins)."""
+    b, vocab = x.shape
+    return pl.pallas_call(
+        _argmax_kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, vocab), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(x)
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k):
+    x = pl.load(x_ref, (pl.dslice(0, 1), slice(None)))[0].astype(jnp.float32)
+
+    def body(j, carry):
+        x, vals, idx = carry
+        m = x.max()
+        i = jnp.argmax(x).astype(jnp.int32)
+        vals = vals.at[j].set(m)
+        idx = idx.at[j].set(i)
+        x = x.at[i].set(NEG_INF)
+        return x, vals, idx
+
+    _, vals, idx = jax.lax.fori_loop(
+        0,
+        k,
+        body,
+        (x, jnp.zeros((k,), jnp.float32), jnp.zeros((k,), jnp.int32)),
+    )
+    vals_ref[...] = vals[None]
+    idx_ref[...] = idx[None]
+
+
+def top_k_rows(x, k):
+    """Row-wise top-k by iterative selection.
+
+    x: [b, vocab] -> (values [b, k] f32, indices [b, k] int32), both sorted
+    by descending value, ties broken toward the lower vocabulary index.
+    """
+    b, vocab = x.shape
+    assert 0 < k <= vocab, (k, vocab)
+    kernel = functools.partial(_topk_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, vocab), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=True,
+    )(x)

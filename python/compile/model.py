@@ -20,6 +20,7 @@ from .configs import ModelConfig
 from .kernels.attention import flash_attention, flash_attention_fwd
 from .kernels.decode import decode_attention, decode_attention_pb
 from .kernels.layernorm import layernorm as layernorm_pallas
+from .kernels.sampling import argmax_rows, top_k_rows
 
 # ---------------------------------------------------------------------------
 # LayerNorm: Pallas forward + analytic VJP (pallas_call has no autodiff rule).
@@ -381,6 +382,57 @@ def decode_slots(cfg: ModelConfig, params, k_cache, v_cache, token, pos):
         )
     x = layernorm(x, params["lnf_g"], params["lnf_b"])
     return x @ params["embed"].T, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Device-side sampling tail (the `_sampled` artifact variants)
+#
+# The plain generation entry points end at the logits matmul and ship the
+# full [b, vocab] row to the host. The `_sampled` variants append the fused
+# Pallas sampling tail so per-step host traffic is the greedy ids (O(b)) or
+# the top-k candidates (O(b·k)); the host finishes temperature/top-p and the
+# categorical draw over the candidates with its own seeded RNG.
+# ---------------------------------------------------------------------------
+
+
+def sample_tail(logits, k):
+    """Device half of sampling over next-token logits.
+
+    logits: [b, vocab] -> (ids [b] i32 — greedy argmax,
+                           topk_logits [b, k] f32, topk_ids [b, k] i32 —
+                           candidates sorted by descending logit).
+    """
+    ids = argmax_rows(logits)
+    tv, ti = top_k_rows(logits, k)
+    return ids, tv, ti
+
+
+def prefill_sampled(cfg, params, prompt, smax, k):
+    """`prefill` with the sampling tail on the last-position logits."""
+    logits, kc, vc = prefill(cfg, params, prompt, smax)
+    ids, tv, ti = sample_tail(logits, k)
+    return ids, tv, ti, kc, vc
+
+
+def decode_step_sampled(cfg, params, k_cache, v_cache, token, pos, k):
+    """`decode_step` with the sampling tail (shared-position batch decode)."""
+    logits, kc, vc = decode_step(cfg, params, k_cache, v_cache, token, pos)
+    ids, tv, ti = sample_tail(logits, k)
+    return ids, tv, ti, kc, vc
+
+
+def prefill_slot_sampled(cfg, params, k_cache, v_cache, prompt, slot, k):
+    """`prefill_slot` with the sampling tail on the admitted slot's logits."""
+    logits, kc, vc = prefill_slot(cfg, params, k_cache, v_cache, prompt, slot)
+    ids, tv, ti = sample_tail(logits, k)
+    return ids, tv, ti, kc, vc
+
+
+def decode_slots_sampled(cfg, params, k_cache, v_cache, token, pos, k):
+    """`decode_slots` with the sampling tail (per-slot-position decode)."""
+    logits, kc, vc = decode_slots(cfg, params, k_cache, v_cache, token, pos)
+    ids, tv, ti = sample_tail(logits, k)
+    return ids, tv, ti, kc, vc
 
 
 def ema_update(ema_flat, params_flat, decay):

@@ -22,7 +22,8 @@ def entries():
 def test_every_entry_traces(entries):
     # Lowering (tracing) every entry is the expensive part of `make
     # artifacts`; this asserts none of them fails to trace.
-    for name, (fn, specs, _) in entries.items():
+    for name, entry in entries.items():
+        fn, specs = entry[0], entry[1]
         jax.eval_shape(fn, *specs)
 
 
@@ -42,11 +43,34 @@ def test_entry_names_complete(entries):
         "decode_step",
         "prefill_slot",
         "decode_slots",
+        "prefill_sampled",
+        "decode_step_sampled",
+        "prefill_slot_sampled",
+        "decode_slots_sampled",
         "ppo_actor_step",
         "ppo_critic_step",
         "ema_update",
     }
     assert set(entries) == expected
+
+
+def test_decode_entries_donate_kv(entries):
+    """Every decode-family entry must donate exactly its K/V cache inputs
+    (in-place cache update); admission/prefill entries must donate nothing
+    (their prompt buffers are host-staged per call)."""
+    na = len(model.param_spec(RC.actor, "lm"))
+    donated = {
+        "decode_step",
+        "decode_slots",
+        "decode_step_sampled",
+        "decode_slots_sampled",
+    }
+    for name, entry in entries.items():
+        donate = tuple(entry[3]) if len(entry) > 3 else ()
+        if name in donated:
+            assert donate == (na, na + 1), (name, donate)
+        else:
+            assert donate == (), (name, donate)
 
 
 def test_sft_step_executes_and_reduces_loss(entries):
@@ -71,8 +95,8 @@ def test_sft_step_executes_and_reduces_loss(entries):
 
 def test_decode_step_artifact_consistency(entries):
     """prefill + decode artifacts must agree with the full forward."""
-    pre_fn, _, _ = entries["prefill"]
-    dec_fn, _, _ = entries["decode_step"]
+    pre_fn = entries["prefill"][0]
+    dec_fn = entries["decode_step"][0]
     P = model.flatten_params(RC.actor, "lm", model.init_params(RC.actor, "lm", jnp.int32(0)))
     B, SP = RC.batch, RC.prompt_len
     prompt = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0, RC.actor.vocab)
@@ -91,6 +115,7 @@ def test_manifest_contents(tmp_path, entries):
     assert man["run"] == "nano"
     assert man["config"]["batch"] == RC.batch
     assert man["config"]["seq_len"] == RC.seq_len
+    assert man["config"]["sample_k"] == RC.sample_k
     assert len(man["actor_params"]) == len(model.param_spec(RC.actor, "lm"))
     assert len(man["actor_opt"]) == 2 * len(man["actor_params"]) + 1
     art = man["artifacts"]["logprobs_forward"]

@@ -1,0 +1,192 @@
+"""Device-side sampling tail: Pallas kernels vs oracles, and the `_sampled`
+model entry points vs their full-logits counterparts.
+
+These pin the invariants the rust `SamplingBackend` refactor relies on:
+
+  * `argmax_rows` / `top_k_rows` match the pure-jnp oracles, including the
+    first-index tie-break (what makes device-greedy generation bit-identical
+    to the host full-row argmax path);
+  * every `*_sampled` entry returns exactly (argmax ids, top-k candidates)
+    of the logits its plain counterpart returns, with the caches untouched
+    by the tail;
+  * the candidate rows are sorted descending, so the rust host-side finish
+    (temperature → top-p prefix → categorical) can run without re-sorting.
+
+As in test_serving.py, the attention/LN Pallas kernels are swapped for
+their jnp oracles so the model runs under any jax version; the SAMPLING
+kernels under test run for real (they avoid the ref-indexing idioms that
+tie other kernels to specific jax versions).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import run_config
+from compile.kernels import ref
+from compile.kernels.sampling import argmax_rows, top_k_rows
+
+RC = run_config("nano")
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.fixture(autouse=True)
+def ref_attention_kernels(monkeypatch):
+    """Run the transformer on the jnp kernel oracles (forward-only tests);
+    the sampling-tail kernels stay real — they are what is under test."""
+    monkeypatch.setattr(model, "layernorm", ref.layernorm_ref)
+    monkeypatch.setattr(model, "flash_attention", ref.attention_ref)
+    monkeypatch.setattr(model, "flash_attention_fwd", ref.attention_ref)
+    monkeypatch.setattr(model, "decode_attention", ref.decode_attention_ref)
+    monkeypatch.setattr(model, "decode_attention_pb", ref.decode_attention_pb_ref)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(RC.actor, "lm", jnp.int32(0))
+
+
+def rows(seed, b, vocab, scale=3.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (b, vocab))
+
+
+# ---------------------------------------------------------------------------
+# kernels vs oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,vocab,seed", [(1, 16, 0), (4, 64, 1), (8, 256, 2), (3, 512, 3)])
+def test_argmax_rows_matches_ref(b, vocab, seed):
+    x = rows(seed, b, vocab)
+    np.testing.assert_array_equal(argmax_rows(x), ref.argmax_ref(x))
+
+
+@pytest.mark.parametrize(
+    "b,vocab,k,seed", [(1, 16, 1, 0), (4, 64, 8, 1), (8, 256, 32, 2), (2, 64, 64, 3)]
+)
+def test_top_k_rows_matches_ref(b, vocab, k, seed):
+    x = rows(seed, b, vocab)
+    tv, ti = top_k_rows(x, k)
+    rv, ri = ref.top_k_ref(x, k)
+    np.testing.assert_allclose(tv, rv, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(ti, ri)
+
+
+def test_tie_break_is_first_index():
+    """Equal logits must resolve to the LOWER vocab index, in both kernels —
+    the rust host sampler's argmax does the same, which is what makes the
+    device-greedy golden bit-exact."""
+    x = jnp.zeros((1, 12)).at[0, 3].set(2.0).at[0, 7].set(2.0).at[0, 9].set(1.0)
+    assert int(argmax_rows(x)[0]) == 3
+    tv, ti = top_k_rows(x, 3)
+    np.testing.assert_array_equal(ti[0], jnp.array([3, 7, 9], jnp.int32))
+    rv, ri = ref.top_k_ref(x, 3)
+    np.testing.assert_array_equal(ti, ri)
+
+
+def test_top_k_rows_sorted_descending():
+    tv, _ = top_k_rows(rows(7, 4, 128), 16)
+    tv = np.asarray(tv)
+    assert (np.diff(tv, axis=1) <= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# model-level `_sampled` entry points
+# ---------------------------------------------------------------------------
+
+
+def sample_prompts(seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (RC.batch, RC.prompt_len), 0, RC.actor.vocab
+    ).astype(jnp.int32)
+
+
+def assert_tail_matches(logits, ids, tv, ti, k):
+    np.testing.assert_array_equal(ids, ref.argmax_ref(logits))
+    rv, ri = ref.top_k_ref(logits, k)
+    np.testing.assert_allclose(tv, rv, **TOL)
+    np.testing.assert_array_equal(ti, ri)
+
+
+def test_prefill_sampled_matches_prefill(params):
+    a, k = RC.actor, RC.sample_k
+    prompt = sample_prompts(1)
+    logits, kc, vc = model.prefill(a, params, prompt, RC.seq_len)
+    ids, tv, ti, kc2, vc2 = model.prefill_sampled(a, params, prompt, RC.seq_len, k)
+    assert_tail_matches(logits, ids, tv, ti, k)
+    np.testing.assert_allclose(kc2, kc, **TOL)
+    np.testing.assert_allclose(vc2, vc, **TOL)
+
+
+def test_decode_step_sampled_matches_decode_step(params):
+    a, sp, k = RC.actor, RC.prompt_len, RC.sample_k
+    prompt = sample_prompts(2)
+    logits, kc, vc = model.prefill(a, params, prompt, RC.seq_len)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.array([sp], jnp.int32)
+    l2, kc_p, vc_p = model.decode_step(a, params, kc, vc, tok, pos)
+    ids, tv, ti, kc_s, vc_s = model.decode_step_sampled(a, params, kc, vc, tok, pos, k)
+    assert_tail_matches(l2, ids, tv, ti, k)
+    np.testing.assert_allclose(kc_s, kc_p, **TOL)
+    np.testing.assert_allclose(vc_s, vc_p, **TOL)
+
+
+def test_decode_slots_sampled_matches_decode_slots(params):
+    a, sp, k = RC.actor, RC.prompt_len, RC.sample_k
+    prompt = sample_prompts(3)
+    logits, kc, vc = model.prefill(a, params, prompt, RC.seq_len)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    # Staggered per-slot depths: slot r decodes at position sp (all rows just
+    # prefilled); run one shared step first to de-align, then compare.
+    pos = jnp.full((RC.batch,), sp, jnp.int32)
+    l2, kc2, vc2 = model.decode_slots(a, params, kc, vc, tok, pos)
+    ids, tv, ti, kc_s, vc_s = model.decode_slots_sampled(a, params, kc, vc, tok, pos, k)
+    assert_tail_matches(l2, ids, tv, ti, k)
+    np.testing.assert_allclose(kc_s, kc2, **TOL)
+    np.testing.assert_allclose(vc_s, vc2, **TOL)
+
+
+def test_prefill_slot_sampled_matches_prefill_slot(params):
+    a, k = RC.actor, RC.sample_k
+    shape = (a.n_layers, RC.batch * a.n_heads, RC.seq_len, a.d_head)
+    kc = jnp.zeros(shape, jnp.float32)
+    vc = jnp.zeros(shape, jnp.float32)
+    prompt = sample_prompts(4)[1:2]
+    slot = jnp.array([1], jnp.int32)
+    logits, kc2, vc2 = model.prefill_slot(a, params, kc, vc, prompt, slot)
+    ids, tv, ti, kc_s, vc_s = model.prefill_slot_sampled(a, params, kc, vc, prompt, slot, k)
+    assert_tail_matches(logits, ids, tv, ti, k)
+    np.testing.assert_allclose(kc_s, kc2, **TOL)
+    np.testing.assert_allclose(vc_s, vc2, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# AOT contract
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_entries_trace_with_expected_shapes():
+    entries = aot.build_entries(RC)
+    B, K = RC.batch, RC.sample_k
+    kv_shape = (
+        RC.actor.n_layers,
+        B * RC.actor.n_heads,
+        RC.seq_len,
+        RC.actor.d_head,
+    )
+    for name, nb in [
+        ("prefill_sampled", B),
+        ("decode_step_sampled", B),
+        ("prefill_slot_sampled", 1),
+        ("decode_slots_sampled", B),
+    ]:
+        entry = entries[name]
+        fn, specs, outputs = entry[0], entry[1], entry[2]
+        assert outputs == ["ids", "topk_logits", "topk_ids", "k_cache", "v_cache"]
+        out = jax.eval_shape(fn, *specs)
+        assert out[0].shape == (nb,) and out[0].dtype == jnp.int32, name
+        assert out[1].shape == (nb, K) and out[1].dtype == jnp.float32, name
+        assert out[2].shape == (nb, K) and out[2].dtype == jnp.int32, name
+        assert out[3].shape == kv_shape and out[4].shape == kv_shape, name

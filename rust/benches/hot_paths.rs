@@ -5,7 +5,7 @@
 use dschat::coordinator::gae;
 use dschat::data::synthetic::TaskGen;
 use dschat::data::{Blend, DataSplit};
-use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::sampling::{DeviceTopK, RowRef, Sampler, SamplerConfig, SamplingBackend};
 use dschat::util::bench::Bench;
 use dschat::util::json::Json;
 use dschat::util::rng::Rng;
@@ -31,6 +31,29 @@ fn main() {
     );
     b.run("sampler_topk_topp_v512", || {
         std::hint::black_box(sampler.sample(&logits, &history));
+    })
+    .print(Some((1.0, "tokens")));
+
+    // DeviceTopK host finish over a k=32 candidate row — the O(k) work
+    // that replaces the full-row pass when sampling runs on device.
+    let mut cand: Vec<(f32, i32)> =
+        (0..32).map(|_| (rng.normal() as f32 * 3.0, rng.below(512) as i32)).collect();
+    cand.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let cand_vals: Vec<f32> = cand.iter().map(|c| c.0).collect();
+    let cand_ids: Vec<i32> = cand.iter().map(|c| c.1).collect();
+    let mut device = DeviceTopK::new(
+        SamplerConfig { temperature: 0.9, top_p: 0.95, ..Default::default() },
+        1,
+        32,
+        512,
+    )
+    .unwrap();
+    b.run("device_topk_host_finish_k32", || {
+        std::hint::black_box(
+            device
+                .sample(RowRef::TopK { vals: &cand_vals, ids: &cand_ids }, &history)
+                .unwrap(),
+        );
     })
     .print(Some((1.0, "tokens")));
 

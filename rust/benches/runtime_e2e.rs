@@ -5,9 +5,12 @@
 //!
 //! Pass `--smoke` for a fast CI-friendly run (used by `scripts/verify.sh`).
 //! The decode-loop section measures generation tokens/sec and host bytes
-//! moved per token and writes `BENCH_decode.json` so the perf trajectory is
-//! tracked across PRs; with the zero-copy decode path, bytes/token must be
-//! O(b·vocab) — independent of the KV-cache size.
+//! moved per token FOR EACH SAMPLING BACKEND and writes `BENCH_decode.json`
+//! so the perf trajectory is tracked across PRs. Contract: host full-row is
+//! O(b·vocab) fetched per token, device greedy O(b) (token ids only), and
+//! device top-k O(b·k) — independent of both vocab and KV-cache size.
+//! A PPO section additionally pins that staging the experience batch once
+//! per batch (instead of re-uploading per epoch) shrinks uploaded bytes.
 
 use std::rc::Rc;
 use std::time::Duration;
@@ -17,10 +20,52 @@ use dschat::data::{Blend, DataSplit};
 use dschat::examples_support::naive_generate;
 use dschat::hybrid::{HybridEngine, KvCache};
 use dschat::runtime::Engine;
-use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
 use dschat::util::bench::Bench;
 use dschat::util::rng::Rng;
 use dschat::util::{fmt_bytes, fmt_duration};
+
+struct BackendRun {
+    name: &'static str,
+    tokens: u64,
+    secs: f64,
+    down: u64,
+    up: u64,
+    fallbacks: u64,
+}
+
+impl BackendRun {
+    fn tok_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.secs.max(1e-9)
+    }
+
+    fn down_per_tok(&self) -> f64 {
+        self.down as f64 / self.tokens.max(1) as f64
+    }
+
+    fn up_per_tok(&self) -> f64 {
+        self.up as f64 / self.tokens.max(1) as f64
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\n      \"tokens\": {},\n      \"secs\": {:.6},\n      \
+             \"tok_per_sec\": {:.3},\n      \"host_bytes_fetched\": {},\n      \
+             \"host_bytes_uploaded\": {},\n      \
+             \"host_bytes_fetched_per_token\": {:.1},\n      \
+             \"host_bytes_uploaded_per_token\": {:.1},\n      \
+             \"fallback_untuples\": {}\n    }}",
+            self.tokens,
+            self.secs,
+            self.tok_per_sec(),
+            self.down,
+            self.up,
+            self.down_per_tok(),
+            self.up_per_tok(),
+            self.fallbacks,
+        )
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     // cargo bench passes `--bench`; skip flags when looking for a dir arg.
@@ -35,8 +80,10 @@ fn main() -> anyhow::Result<()> {
     let m = he.manifest();
     let (bsz, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
     let vocab = m.actor.vocab;
+    let sample_k = m.sample_k;
     let kv_bytes = KvCache::bytes_for(m);
     let run_name = m.run.clone();
+    let sampled_ready = m.artifacts.contains_key("decode_step_sampled") && sample_k > 0;
     let task = TaskGen::new(m.actor.vocab, sp, sg);
     let mut blend = Blend::new(vec![(task.clone(), 1.0)], DataSplit::new(2.0, 4.0, 4.0));
     let mut rng = Rng::new(0);
@@ -45,6 +92,7 @@ fn main() -> anyhow::Result<()> {
     } else {
         Bench { budget: Duration::from_secs(3), ..Default::default() }
     };
+    let greedy = || SamplerConfig { greedy: true, ..Default::default() };
 
     // Generation (hybrid path) — tokens/sec is the paper's generation-phase
     // throughput metric.
@@ -52,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..bsz {
         flat.extend_from_slice(&task.sample_prompt(&mut rng).tokens);
     }
-    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+    let mut sampler = HostFullRow::new(greedy(), 0);
     b.run("generate_hybrid_kv_cache", || {
         std::hint::black_box(he.generate(&flat, &mut sampler).unwrap());
     })
@@ -101,8 +149,42 @@ fn main() -> anyhow::Result<()> {
     })
     .print(None);
 
+    // ------------------------------------------------------------------
+    // Shared upload for PPO epochs: stage the experience batch once and
+    // re-feed it; the bytes-uploaded counter must drop vs per-epoch
+    // re-upload (the ROADMAP item this section pins).
+    // ------------------------------------------------------------------
+    let returns = vec![0.2f32; bsz * w];
+    let old_values = vec![0.15f32; bsz * w];
+    let epochs = 2;
+    he.engine.reset_stats();
+    for _ in 0..epochs {
+        he.ppo_actor_step(&batch.tokens, &old_logp, &adv, &mask, &batch.tokens, 0.2, 0.0, 1e-4)?;
+        he.ppo_critic_step(&batch.tokens, &returns, &old_values, &mask, 0.2, 5e-4)?;
+    }
+    let (legacy_up, _) = he.engine.bytes_moved();
+    he.engine.reset_stats();
+    let staged =
+        he.stage_experience(&batch.tokens, &old_logp, &adv, &returns, &old_values, &mask)?;
+    for _ in 0..epochs {
+        he.ppo_actor_step_staged(&staged, &batch.tokens, 0.2, 0.0, 1e-4)?;
+        he.ppo_critic_step_staged(&staged, 0.2, 5e-4)?;
+    }
+    let (staged_up, _) = he.engine.bytes_moved();
+    println!(
+        "\n-- ppo epoch uploads ({epochs} epochs) --\n\
+         per-epoch re-upload: {}  |  staged once: {}  ({:.2}x less)",
+        fmt_bytes(legacy_up as f64),
+        fmt_bytes(staged_up as f64),
+        legacy_up as f64 / staged_up.max(1) as f64,
+    );
+    assert!(
+        staged_up < legacy_up,
+        "staging the experience batch must cut uploaded bytes ({staged_up} vs {legacy_up})"
+    );
+
     // Executor overhead accounting (upload/exec/fetch split + bytes moved).
-    println!("\n-- engine stats (cumulative) --");
+    println!("\n-- engine stats (cumulative since ppo-upload section) --");
     for (name, st) in he.engine.stats() {
         println!(
             "{name:<22} calls {:>6}  exec {:>9}  fetch {:>9} ({:>9})  upload {:>9} ({:>9}){}",
@@ -121,44 +203,111 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ------------------------------------------------------------------
-    // decode_loop: generation throughput + host traffic per token, from a
-    // clean ledger. Emits BENCH_decode.json for the perf trajectory.
+    // decode_loop: generation throughput + host traffic per token, per
+    // sampling backend, each from a clean ledger. Emits BENCH_decode.json
+    // for the perf trajectory. Greedy device sampling must be O(b) bytes
+    // per token (ids only); stochastic device sampling O(b·k).
     // ------------------------------------------------------------------
-    he.engine.reset_stats();
-    let tok0 = he.stats.gen_tokens;
     let iters = if smoke { 2 } else { 8 };
-    let t0 = std::time::Instant::now();
-    for _ in 0..iters {
-        std::hint::black_box(he.generate(&flat, &mut sampler)?);
+    let mut runs: Vec<BackendRun> = Vec::new();
+    let backend_list: Vec<(&'static str, Box<dyn SamplingBackend>)> = {
+        let mut v: Vec<(&'static str, Box<dyn SamplingBackend>)> =
+            vec![("host_full_row", Box::new(HostFullRow::new(greedy(), 0)))];
+        if sampled_ready {
+            v.push((
+                "device_greedy",
+                Box::new(DeviceTopK::new(greedy(), 0, sample_k, vocab)?),
+            ));
+            v.push((
+                "device_topk_stochastic",
+                Box::new(DeviceTopK::new(
+                    SamplerConfig { temperature: 0.9, top_p: 0.95, ..Default::default() },
+                    0,
+                    sample_k,
+                    vocab,
+                )?),
+            ));
+        } else {
+            println!("\n(artifacts lack the `_sampled` family — device backends skipped; re-run `make artifacts`)");
+        }
+        v
+    };
+    println!("\n-- decode_loop ({iters} generates per backend) --");
+    for (name, mut backend) in backend_list {
+        he.engine.reset_stats();
+        let tok0 = he.stats.gen_tokens;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(he.generate(&flat, backend.as_mut())?);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let tokens = (he.stats.gen_tokens - tok0).max(1);
+        let (up, down) = he.engine.bytes_moved();
+        let run = BackendRun {
+            name,
+            tokens,
+            secs,
+            down,
+            up,
+            fallbacks: he.engine.fallback_untuples(),
+        };
+        println!(
+            "{:<24} {:>10.1} tokens/s  |  host bytes/token: {} down, {} up{}",
+            run.name,
+            run.tok_per_sec(),
+            fmt_bytes(run.down_per_tok()),
+            fmt_bytes(run.up_per_tok()),
+            if run.fallbacks > 0 {
+                format!("  [{} fused-tuple fallbacks]", run.fallbacks)
+            } else {
+                String::new()
+            },
+        );
+        runs.push(run);
     }
-    let secs = t0.elapsed().as_secs_f64();
-    let tokens = (he.stats.gen_tokens - tok0).max(1);
-    let (up, down) = he.engine.bytes_moved();
-    let fallbacks = he.engine.fallback_untuples();
-    let tok_per_sec = tokens as f64 / secs;
-    let down_per_tok = down as f64 / tokens as f64;
-    let up_per_tok = up as f64 / tokens as f64;
     let logits_row_bytes = bsz * vocab * 4;
-    println!("\n-- decode_loop ({iters} generates, {tokens} tokens) --");
+    let ids_bytes = bsz * 4;
+    let topk_bytes = 2 * bsz * sample_k * 4;
     println!(
-        "{tok_per_sec:>10.1} tokens/s  |  host bytes/token: {} down, {} up",
-        fmt_bytes(down_per_tok),
-        fmt_bytes(up_per_tok),
-    );
-    println!(
-        "reference: logits row [b,vocab] = {}  |  full KV cache = {}  |  fused-tuple fallbacks {}",
+        "reference: logits row [b,vocab] = {}  |  ids [b] = {}  |  top-k [b,k]x2 = {}  |  KV cache = {}",
         fmt_bytes(logits_row_bytes as f64),
+        fmt_bytes(ids_bytes as f64),
+        fmt_bytes(topk_bytes as f64),
         fmt_bytes(kv_bytes as f64),
-        fallbacks,
     );
+
+    // JSON: top-level fields mirror the host run (cross-PR continuity);
+    // per-backend numbers live under "backends".
+    let host = &runs[0];
+    let mut backends_json = String::new();
+    for (i, r) in runs.iter().enumerate() {
+        backends_json.push_str(&format!(
+            "{}    \"{}\": {}",
+            if i > 0 { ",\n" } else { "" },
+            r.name,
+            r.json()
+        ));
+    }
     let json = format!(
         "{{\n  \"bench\": \"decode_loop\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
-         \"iters\": {iters},\n  \"tokens\": {tokens},\n  \"secs\": {secs:.6},\n  \
-         \"tok_per_sec\": {tok_per_sec:.3},\n  \"host_bytes_fetched\": {down},\n  \
-         \"host_bytes_uploaded\": {up},\n  \"host_bytes_fetched_per_token\": {down_per_tok:.1},\n  \
-         \"host_bytes_uploaded_per_token\": {up_per_tok:.1},\n  \
-         \"logits_row_bytes\": {logits_row_bytes},\n  \"kv_cache_bytes\": {kv_bytes},\n  \
-         \"fallback_untuples\": {fallbacks}\n}}\n"
+         \"iters\": {iters},\n  \"tokens\": {},\n  \"secs\": {:.6},\n  \
+         \"tok_per_sec\": {:.3},\n  \"host_bytes_fetched\": {},\n  \
+         \"host_bytes_uploaded\": {},\n  \"host_bytes_fetched_per_token\": {:.1},\n  \
+         \"host_bytes_uploaded_per_token\": {:.1},\n  \
+         \"logits_row_bytes\": {logits_row_bytes},\n  \"ids_bytes\": {ids_bytes},\n  \
+         \"topk_bytes\": {topk_bytes},\n  \"sample_k\": {sample_k},\n  \
+         \"kv_cache_bytes\": {kv_bytes},\n  \"fallback_untuples\": {},\n  \
+         \"ppo_epoch_uploads\": {{\n    \"epochs\": {epochs},\n    \
+         \"legacy_bytes\": {legacy_up},\n    \"staged_bytes\": {staged_up}\n  }},\n  \
+         \"backends\": {{\n{backends_json}\n  }}\n}}\n",
+        host.tokens,
+        host.secs,
+        host.tok_per_sec(),
+        host.down,
+        host.up,
+        host.down_per_tok(),
+        host.up_per_tok(),
+        host.fallbacks,
     );
     std::fs::write("BENCH_decode.json", &json)?;
     println!("wrote BENCH_decode.json");

@@ -14,7 +14,9 @@
 //! scheduling cost being measured.
 //!
 //! Emits `BENCH_serve.json` with throughput and p50/p95 latency for BOTH
-//! disciplines so the perf trajectory is tracked across PRs;
+//! disciplines so the perf trajectory is tracked across PRs, plus host
+//! bytes/token for the continuous loop under each sampling backend (host
+//! full-row vs the device sampling tail, when the artifacts carry it);
 //! `scripts/verify.sh` runs the `--smoke` mode.
 
 use std::collections::VecDeque;
@@ -24,7 +26,7 @@ use std::time::{Duration, Instant};
 use dschat::data::synthetic::{Prompt, TaskGen, Vocab};
 use dschat::hybrid::HybridEngine;
 use dschat::runtime::Engine;
-use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
 use dschat::serving::{Request, Scheduler};
 use dschat::util::rng::Rng;
 
@@ -36,6 +38,8 @@ struct PhaseResult {
     makespan: f64,
     /// Per-request latency (arrival -> completion), seconds, sorted.
     lat: Vec<f64>,
+    /// Host bytes moved (down, up) during the phase, from the byte ledger.
+    bytes: (u64, u64),
 }
 
 impl PhaseResult {
@@ -54,10 +58,18 @@ impl PhaseResult {
         self.lat.iter().sum::<f64>() / self.lat.len().max(1) as f64
     }
 
+    fn down_per_tok(&self) -> f64 {
+        self.bytes.0 as f64 / self.tokens.max(1) as f64
+    }
+
+    fn up_per_tok(&self) -> f64 {
+        self.bytes.1 as f64 / self.tokens.max(1) as f64
+    }
+
     fn print(&self) {
         println!(
-            "{:<18} {:>4} reqs  {:>6} tok  {:>8.1} tok/s  latency mean {:>7.0}ms  \
-             p50 {:>7.0}ms  p95 {:>7.0}ms",
+            "{:<22} {:>4} reqs  {:>6} tok  {:>8.1} tok/s  latency mean {:>7.0}ms  \
+             p50 {:>7.0}ms  p95 {:>7.0}ms  host/tok {:>8.0}B down {:>6.0}B up",
             self.name,
             self.completed,
             self.tokens,
@@ -65,6 +77,8 @@ impl PhaseResult {
             self.mean() * 1e3,
             self.pct(0.5) * 1e3,
             self.pct(0.95) * 1e3,
+            self.down_per_tok(),
+            self.up_per_tok(),
         );
     }
 }
@@ -97,9 +111,13 @@ fn run_fixed_batch(
     b: usize,
     sp: usize,
     s: usize,
-    sampler: &mut Sampler,
+    sampler: &mut dyn SamplingBackend,
 ) -> anyhow::Result<PhaseResult> {
     let n = prompts.len();
+    let (down0, up0) = {
+        let (up, down) = he.engine.bytes_moved();
+        (down, up)
+    };
     let start = Instant::now();
     let mut queue: VecDeque<usize> = VecDeque::new();
     let mut next = 0usize;
@@ -133,20 +151,33 @@ fn run_fixed_batch(
         }
     }
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    Ok(PhaseResult { name: "fixed_batch", completed: n, tokens, makespan: last_done, lat })
+    let (up, down) = he.engine.bytes_moved();
+    Ok(PhaseResult {
+        name: "fixed_batch",
+        completed: n,
+        tokens,
+        makespan: last_done,
+        lat,
+        bytes: (down - down0, up - up0),
+    })
 }
 
 /// Iteration-level continuous batching over the same trace: arrivals are
 /// submitted as they land, the scheduler admits/retires at decode-step
 /// boundaries, and per-request budgets are honored exactly.
 fn run_continuous(
+    name: &'static str,
     sched: &mut Scheduler<HybridEngine>,
     prompts: &[Prompt],
     budgets: &[usize],
     arrivals: &[f64],
-    sampler: &mut Sampler,
+    sampler: &mut dyn SamplingBackend,
 ) -> anyhow::Result<PhaseResult> {
     let n = prompts.len();
+    let (down0, up0) = {
+        let (up, down) = sched.engine.engine.bytes_moved();
+        (down, up)
+    };
     let start = Instant::now();
     let mut next = 0usize;
     let mut lat_by_done = Vec::with_capacity(n);
@@ -175,7 +206,15 @@ fn run_continuous(
     }
     let mut lat = lat_by_done;
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    Ok(PhaseResult { name: "continuous", completed: n, tokens, makespan: last_done, lat })
+    let (up, down) = sched.engine.engine.bytes_moved();
+    Ok(PhaseResult {
+        name,
+        completed: n,
+        tokens,
+        makespan: last_done,
+        lat,
+        bytes: (down - down0, up - up0),
+    })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -204,7 +243,7 @@ fn main() -> anyhow::Result<()> {
     for i in 0..b {
         flat.extend_from_slice(&prompts[i % n_req].tokens);
     }
-    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+    let mut sampler = HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
     he.generate(&flat, &mut sampler)?;
     let t0 = Instant::now();
     he.generate(&flat, &mut sampler)?;
@@ -224,6 +263,7 @@ fn main() -> anyhow::Result<()> {
         budgets.iter().max().unwrap(),
     );
 
+    let greedy = || SamplerConfig { greedy: true, ..Default::default() };
     let fixed = run_fixed_batch(
         &mut he,
         &prompts,
@@ -232,20 +272,52 @@ fn main() -> anyhow::Result<()> {
         b,
         sp,
         s,
-        &mut Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0),
+        &mut HostFullRow::new(greedy(), 0),
     )?;
     fixed.print();
 
+    let sampled_ready = {
+        let m = he.manifest();
+        m.artifacts.contains_key("decode_slots_sampled")
+            && m.artifacts.contains_key("prefill_slot_sampled")
+            && m.sample_k > 0
+    };
+    let sample_k = he.manifest().sample_k;
+    let vocab = he.manifest().actor.vocab;
     let mut sched = Scheduler::new(he)?;
     let cont = run_continuous(
+        "continuous_host",
         &mut sched,
         &prompts,
         &budgets,
         &arrivals,
-        &mut Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0),
+        &mut HostFullRow::new(greedy(), 0),
     )?;
     cont.print();
-    let st = &sched.stats;
+    // Snapshot the host phase's scheduler counters before the device phase
+    // reuses the scheduler — the cross-PR-tracked JSON fields must describe
+    // ONE phase, not the sum of both.
+    let st_host = sched.stats.clone();
+
+    // Same trace again under the device sampling tail: identical greedy
+    // sequences, O(b) ids fetched per tick instead of [b, vocab] logits.
+    let cont_device = if sampled_ready {
+        let mut backend = DeviceTopK::new(greedy(), 0, sample_k, vocab)?;
+        let r = run_continuous(
+            "continuous_device",
+            &mut sched,
+            &prompts,
+            &budgets,
+            &arrivals,
+            &mut backend,
+        )?;
+        r.print();
+        Some(r)
+    } else {
+        println!("(artifacts lack the `_sampled` family — device-backend phase skipped)");
+        None
+    };
+    let st = &st_host;
     println!(
         "continuous: {} scheduler steps, {} decode calls, {} prefills, slot utilization {:.0}%",
         st.steps,
@@ -259,30 +331,38 @@ fn main() -> anyhow::Result<()> {
         cont.pct(0.95) / fixed.pct(0.95).max(1e-9),
     );
 
+    let phase_json = |r: &PhaseResult| -> String {
+        format!(
+            "{{\n    \"tok_per_sec\": {:.3},\n    \"mean_ms\": {:.1},\n    \
+             \"p50_ms\": {:.1},\n    \"p95_ms\": {:.1},\n    \"makespan_secs\": {:.3},\n    \
+             \"tokens\": {},\n    \"host_bytes_fetched_per_token\": {:.1},\n    \
+             \"host_bytes_uploaded_per_token\": {:.1}\n  }}",
+            r.tok_per_sec(),
+            r.mean() * 1e3,
+            r.pct(0.5) * 1e3,
+            r.pct(0.95) * 1e3,
+            r.makespan,
+            r.tokens,
+            r.down_per_tok(),
+            r.up_per_tok(),
+        )
+    };
+    let device_json = match &cont_device {
+        Some(r) => format!(",\n  \"continuous_device\": {}", phase_json(r)),
+        None => String::new(),
+    };
     let json = format!(
         "{{\n  \"bench\": \"serve_loop\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
          \"n_requests\": {n_req},\n  \"arrival_rate_per_s\": {rate:.3},\n  \
-         \"fixed_batch_t_gen_secs\": {t_gen:.6},\n  \"fixed_batch\": {{\n    \
-         \"tok_per_sec\": {:.3},\n    \"mean_ms\": {:.1},\n    \"p50_ms\": {:.1},\n    \
-         \"p95_ms\": {:.1},\n    \"makespan_secs\": {:.3},\n    \"tokens\": {}\n  }},\n  \
-         \"continuous\": {{\n    \"tok_per_sec\": {:.3},\n    \"mean_ms\": {:.1},\n    \
-         \"p50_ms\": {:.1},\n    \"p95_ms\": {:.1},\n    \"makespan_secs\": {:.3},\n    \
-         \"tokens\": {},\n    \"slot_utilization\": {:.4},\n    \"decode_calls\": {}\n  }},\n  \
+         \"fixed_batch_t_gen_secs\": {t_gen:.6},\n  \"sample_k\": {sample_k},\n  \
+         \"fixed_batch\": {},\n  \"continuous\": {},\n  \
+         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}\n  ,\n  \
          \"speedup_tok_per_sec\": {:.3},\n  \"p95_latency_ratio\": {:.3}\n}}\n",
-        fixed.tok_per_sec(),
-        fixed.mean() * 1e3,
-        fixed.pct(0.5) * 1e3,
-        fixed.pct(0.95) * 1e3,
-        fixed.makespan,
-        fixed.tokens,
-        cont.tok_per_sec(),
-        cont.mean() * 1e3,
-        cont.pct(0.5) * 1e3,
-        cont.pct(0.95) * 1e3,
-        cont.makespan,
-        cont.tokens,
+        phase_json(&fixed),
+        phase_json(&cont),
         st.utilization(),
         st.decode_calls,
+        device_json,
         cont.tok_per_sec() / fixed.tok_per_sec().max(1e-9),
         cont.pct(0.95) / fixed.pct(0.95).max(1e-9),
     );

@@ -18,7 +18,7 @@ use crate::config::PpoConfig;
 use crate::data::synthetic::{TaskGen, Vocab};
 use crate::data::{Blend, Prompt};
 use crate::hybrid::HybridEngine;
-use crate::sampling::{Sampler, SamplerConfig};
+use crate::sampling::{HostFullRow, SamplerConfig, SamplingBackend};
 use crate::util::rng::Rng;
 
 /// One experience batch, fully scored and shaped.
@@ -53,14 +53,18 @@ pub struct IterStats {
 
 pub struct PpoTrainer {
     pub cfg: PpoConfig,
-    pub sampler: Sampler,
+    /// Sampling backend driving experience generation. Defaults to the
+    /// host full-row backend (bit-identical to the pre-refactor trainer);
+    /// [`PpoTrainer::with_backend`] swaps in e.g. `DeviceTopK` to cut the
+    /// generation phase's per-step host traffic to O(b·k).
+    pub sampler: Box<dyn SamplingBackend>,
     /// Completed iterations (drives the EMA interval).
     iters_done: usize,
 }
 
 impl PpoTrainer {
     pub fn new(cfg: PpoConfig, seed: u64) -> Self {
-        let sampler = Sampler::new(
+        let sampler = HostFullRow::new(
             SamplerConfig {
                 temperature: cfg.temperature,
                 top_k: cfg.top_k,
@@ -69,6 +73,11 @@ impl PpoTrainer {
             },
             seed,
         );
+        PpoTrainer { cfg, sampler: Box::new(sampler), iters_done: 0 }
+    }
+
+    /// Build a trainer around an explicit sampling backend.
+    pub fn with_backend(cfg: PpoConfig, sampler: Box<dyn SamplingBackend>) -> Self {
         PpoTrainer { cfg, sampler, iters_done: 0 }
     }
 
@@ -100,7 +109,7 @@ impl PpoTrainer {
         for (_, p) in prompts {
             flat_prompts.extend_from_slice(&p.tokens);
         }
-        let tokens = he.generate(&flat_prompts, &mut self.sampler)?;
+        let tokens = he.generate(&flat_prompts, self.sampler.as_mut())?;
 
         // Score: RM reward at last response token; logprobs/values over all.
         // One call so the [b, s] token batch is uploaded once and the
@@ -202,13 +211,22 @@ impl PpoTrainer {
         };
         let m = he.manifest();
         let b = m.batch;
+        // The experience batch is epoch-constant: stage its tensors on
+        // device once and re-feed them, so each additional epoch uploads
+        // only a fresh ptx batch + scalars (like score_experience shares
+        // its token buffer across the four scoring forwards).
+        let staged = he.stage_experience(
+            &exp.tokens,
+            &exp.old_logp,
+            &exp.advantages,
+            &exp.returns,
+            &exp.old_values,
+            &exp.mask,
+        )?;
         for _ in 0..self.cfg.ppo_epochs {
             let ptx = blend.ptx_batch(rng, b);
-            let out = he.ppo_actor_step(
-                &exp.tokens,
-                &exp.old_logp,
-                &exp.advantages,
-                &exp.mask,
+            let out = he.ppo_actor_step_staged(
+                &staged,
                 &ptx.tokens,
                 self.cfg.clip_eps,
                 self.cfg.ptx_coef,
@@ -217,14 +235,8 @@ impl PpoTrainer {
             stats.actor_loss = out.loss;
             stats.approx_kl = out.approx_kl;
             stats.clipfrac = out.clipfrac;
-            stats.critic_loss = he.ppo_critic_step(
-                &exp.tokens,
-                &exp.returns,
-                &exp.old_values,
-                &exp.mask,
-                self.cfg.clip_eps,
-                critic_lr,
-            )?;
+            stats.critic_loss =
+                he.ppo_critic_step_staged(&staged, self.cfg.clip_eps, critic_lr)?;
         }
         if let Some(decay) = self.cfg.ema_decay {
             let k = self.cfg.ema_interval.max(1);

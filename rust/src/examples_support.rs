@@ -6,7 +6,7 @@ use anyhow::Result;
 use crate::coordinator::PpoTrainer;
 use crate::data::synthetic::TaskGen;
 use crate::hybrid::HybridEngine;
-use crate::sampling::{Sampler, SamplerConfig};
+use crate::sampling::{HostFullRow, RowRef, SamplerConfig, SamplingBackend};
 use crate::util::rng::Rng;
 
 /// A short scripted "conversation": sample task prompts, generate with the
@@ -18,7 +18,7 @@ pub fn chat_loop(he: &mut HybridEngine, turns: usize, seed: u64) -> Result<()> {
     let (b, sp, s) = (m.batch, m.prompt_len, m.seq_len);
     let task = TaskGen::new(m.actor.vocab, m.prompt_len, m.gen_len);
     let mut rng = Rng::new(seed);
-    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, seed);
+    let mut sampler = HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, seed);
     for turn in 0..turns {
         let prompts: Vec<_> = (0..b).map(|_| task.sample_prompt(&mut rng)).collect();
         let mut flat = Vec::with_capacity(b * sp);
@@ -48,7 +48,7 @@ pub fn eval_true_reward(he: &mut HybridEngine, n_batches: usize, seed: u64) -> R
     let (b, sp, s) = (m.batch, m.prompt_len, m.seq_len);
     let task = TaskGen::new(m.actor.vocab, m.prompt_len, m.gen_len);
     let mut rng = Rng::new(seed);
-    let mut sampler = Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, seed);
+    let mut sampler = HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, seed);
     let mut total = 0.0f32;
     let mut count = 0usize;
     for _ in 0..n_batches {
@@ -70,11 +70,13 @@ pub fn eval_true_reward(he: &mut HybridEngine, n_batches: usize, seed: u64) -> R
 /// generated token (no KV cache, no decode kernel) — the mechanism behind
 /// HF-style generation that Figure 5 shows DS-HE beating 9x. Returns
 /// sequences identical in distribution to `HybridEngine::generate` (greedy),
-/// but measured through the slow path.
+/// but measured through the slow path. The baseline always materializes the
+/// full logits, so only full-row backends (e.g. [`HostFullRow`]) fit here —
+/// a device backend fed these rows errors out loudly.
 pub fn naive_generate(
     he: &mut HybridEngine,
     prompts: &[i32],
-    sampler: &mut Sampler,
+    sampler: &mut dyn SamplingBackend,
 ) -> Result<Vec<i32>> {
     let m = he.manifest();
     let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
@@ -97,7 +99,7 @@ pub fn naive_generate(
             let base = (i * s + pos) * vocab;
             let row = &logits[base..base + vocab];
             let hist = &seqs[i * s..i * s + sp + step];
-            let t = sampler.sample(row, hist);
+            let t = sampler.sample(RowRef::Logits(row), hist)?;
             seqs[i * s + sp + step] = t;
             if t == crate::data::synthetic::Vocab::EOS {
                 done[i] = true;

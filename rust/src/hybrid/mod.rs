@@ -11,11 +11,28 @@
 //!
 //! Data movement contract (see `runtime` for the buffer API): the decode
 //! loop is zero-copy — K/V never leave the device between prefill and the
-//! train-mode flip, per-step host traffic is the sampled tokens up
-//! (`O(b)`) and the logits row down (`O(b·vocab)`); train steps keep the
-//! updated parameters and optimizer state on device and fetch scalars
-//! only; experience scoring uploads the `[b, seq_len]` token batch once
-//! and shares the buffer across all four forwards.
+//! train-mode flip (and with the donated decode artifacts XLA may update
+//! the cache buffers in place), and what crosses the host boundary per
+//! step is a property of the [`SamplingBackend`] driving generation:
+//!
+//! * [`TrafficClass::FullRow`] (`HostFullRow`): `b` token ids up, one
+//!   `[b, vocab]` logits row down — the pre-refactor contract, kept for
+//!   repetition-penalty correctness.
+//! * [`TrafficClass::DeviceIds`] (`DeviceTopK`, greedy): `b` ids up, `b`
+//!   ids down — the device argmax tail ran inside the artifact; per-token
+//!   host traffic is O(b), independent of the vocabulary.
+//! * [`TrafficClass::DeviceTopK`] (`DeviceTopK`, stochastic): `b` ids up,
+//!   `[b, k]` candidate logits+ids down; the host finishes temperature /
+//!   top-p / the categorical draw over the k candidates with its seeded
+//!   RNG, so generation stays deterministic and EOS/length retirement
+//!   stays host-side.
+//!
+//! Train steps keep the updated parameters and optimizer state on device
+//! and fetch scalars only; experience scoring uploads the `[b, seq_len]`
+//! token batch once and shares the buffer across all four forwards; PPO
+//! epochs re-feed one [`StagedExperience`] (tokens, log-probs, advantages,
+//! returns, values, mask staged once per experience batch) instead of
+//! re-uploading per epoch.
 //!
 //! Generation is exposed at two altitudes: the batch path
 //! ([`HybridEngine::prefill`] + [`HybridEngine::decode_step`], wrapped by
@@ -39,8 +56,8 @@ use anyhow::{bail, Result};
 use xla::{Literal, PjRtBuffer};
 
 use crate::data::{PairBatch, TokenBatch};
-use crate::runtime::{ArtifactSet, Engine, HostTensor, ParamStore};
-use crate::sampling::Sampler;
+use crate::runtime::{Artifact, ArtifactSet, Engine, HostTensor, ParamStore};
+use crate::sampling::{SampleOut, SamplingBackend, TrafficClass};
 
 /// Which configuration the actor model is currently in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -92,6 +109,20 @@ pub struct ExperienceScores {
     pub values: Vec<f32>,
     /// Frozen reward-model scores `[b]` at the given positions.
     pub rm_scores: Vec<f32>,
+}
+
+/// One experience batch's epoch-constant tensors, uploaded once via
+/// [`HybridEngine::stage_experience`] and re-fed across PPO epochs (the
+/// actor step consumes tokens/old_logp/adv/mask, the critic step
+/// tokens/returns/old_values/mask). The per-epoch host→device traffic
+/// shrinks to the fresh ptx batch plus scalar hyperparameters.
+pub struct StagedExperience {
+    tokens: PjRtBuffer,
+    old_logp: PjRtBuffer,
+    adv: PjRtBuffer,
+    returns: PjRtBuffer,
+    old_values: PjRtBuffer,
+    mask: PjRtBuffer,
 }
 
 /// Split a train-step artifact's output buffers into (params, opt, scalars)
@@ -295,12 +326,73 @@ impl HybridEngine {
         Ok(())
     }
 
-    /// Full-batch prefill: run every prompt row through the `prefill`
-    /// artifact, install the resulting caches (all slots claimed at
-    /// `prompt_len`), and return the fetched last-position logits
-    /// `[b, vocab]`. First half of the resumable generation pair — the
-    /// decode loop continues from here via [`HybridEngine::decode_step`].
-    pub fn prefill(&mut self, prompts: &[i32]) -> Result<HostTensor> {
+    /// Resolve a generation-family artifact for a traffic class: the plain
+    /// entry for full-row sampling, the `_sampled` variant (logits matmul +
+    /// fused Pallas sampling tail) for device sampling. Returns the
+    /// artifact and its output arity.
+    fn gen_artifact(&self, base: &str, traffic: TrafficClass) -> Result<(&Artifact, usize)> {
+        match traffic {
+            TrafficClass::FullRow => Ok((self.arts.get(base)?, 3)),
+            _ => {
+                let name = format!("{base}_sampled");
+                let art = self.arts.get(&name).map_err(|e| {
+                    e.context("artifacts predate device-side sampling — re-run `make artifacts`")
+                })?;
+                Ok((art, 5))
+            }
+        }
+    }
+
+    /// Fetch exactly what the backend consumes from a generation call's
+    /// non-cache outputs — this is where the per-step host-traffic
+    /// contract lands: the `[b, vocab]` logits row (FullRow), the `[b]`
+    /// device-argmax ids (DeviceIds), or the `[b, k]` top-k candidate
+    /// logits+ids (DeviceTopK). `bufs` holds `[logits]` (plain artifacts)
+    /// or `[ids, topk_logits, topk_ids]` (`_sampled` artifacts).
+    fn fetch_sample(
+        &self,
+        key: &str,
+        traffic: TrafficClass,
+        bufs: &[PjRtBuffer],
+    ) -> Result<SampleOut> {
+        match traffic {
+            TrafficClass::FullRow => {
+                match self.engine.fetch(key, &bufs[0])? {
+                    HostTensor::F32(data, _) => {
+                        Ok(SampleOut::Logits { data, vocab: self.arts.manifest.actor.vocab })
+                    }
+                    other => bail!("{key}: logits fetch returned {:?}", other.shape()),
+                }
+            }
+            TrafficClass::DeviceIds => match self.engine.fetch(key, &bufs[0])? {
+                HostTensor::I32(ids, _) => Ok(SampleOut::Ids(ids)),
+                other => bail!("{key}: ids fetch returned f32 {:?}", other.shape()),
+            },
+            TrafficClass::DeviceTopK => {
+                let k = self.arts.manifest.sample_k;
+                if k == 0 {
+                    bail!("{key}: manifest has no sample_k — re-run `make artifacts`");
+                }
+                let vals = self.engine.fetch(key, &bufs[1])?;
+                let ids = self.engine.fetch(key, &bufs[2])?;
+                match (vals, ids) {
+                    (HostTensor::F32(vals, _), HostTensor::I32(ids, _)) => {
+                        Ok(SampleOut::TopK { vals, ids, k })
+                    }
+                    _ => bail!("{key}: top-k fetch returned unexpected dtypes"),
+                }
+            }
+        }
+    }
+
+    /// Full-batch prefill: run every prompt row through the `prefill` (or
+    /// `prefill_sampled`) artifact, install the resulting caches (all
+    /// slots claimed at `prompt_len`), and return the backend's view of
+    /// the last-position logits — full rows, ids, or top-k candidates per
+    /// the traffic class. First half of the resumable generation pair —
+    /// the decode loop continues from here via
+    /// [`HybridEngine::decode_step`].
+    pub fn prefill(&mut self, prompts: &[i32], traffic: TrafficClass) -> Result<SampleOut> {
         let m = &self.arts.manifest;
         let (b, sp) = (m.batch, m.prompt_len);
         if prompts.len() != b * sp {
@@ -311,30 +403,37 @@ impl HybridEngine {
         let t0 = Instant::now();
         self.stage_pos_bufs()?;
 
-        // Prefill: params + prompt -> (logits, k_cache, v_cache). All three
-        // outputs stay on device; only the logits row is fetched.
-        let prefill = self.arts.get("prefill")?;
+        // Prefill: params + prompt -> (sampling outputs..., k_cache,
+        // v_cache). Everything stays on device; only the backend's
+        // sampling view is fetched.
+        let (prefill, n_out) = self.gen_artifact("prefill", traffic)?;
         let prompt_buf = self.engine.upload_i32(prompts, &[b, sp])?;
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.push(&prompt_buf);
-        let mut out = prefill.call_to_buffers(&inputs, 3)?;
+        let name = prefill.name.clone();
+        let mut out = prefill.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
         let kc = out.pop().unwrap();
-        let logits_buf = out.pop().unwrap();
 
         self.install_kv(kc, vc, kv_dims);
         self.kv.as_mut().unwrap().claim_all(sp);
-        let logits = self.engine.fetch("prefill", &logits_buf)?;
+        let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
-        Ok(logits)
+        Ok(sample)
     }
 
     /// One shared-position decode step over the live cache: feed the token
     /// sampled at generation step `step` for every row and fetch the next
-    /// `[b, vocab]` logits. K/V are passed and received as device buffers —
-    /// zero host bytes; per-step host traffic is `b` ints up, one logits
-    /// row down.
-    pub fn decode_step(&mut self, toks: &[i32], step: usize) -> Result<HostTensor> {
+    /// step's sampling view. K/V are passed and received as device buffers
+    /// — zero host bytes (the donated artifacts may even update them in
+    /// place); per-step host traffic is `b` ints up plus the traffic
+    /// class's fetch (logits row / ids / top-k candidates) down.
+    pub fn decode_step(
+        &mut self,
+        toks: &[i32],
+        step: usize,
+        traffic: TrafficClass,
+    ) -> Result<SampleOut> {
         let m = &self.arts.manifest;
         let (b, sg) = (m.batch, m.gen_len);
         if toks.len() != b {
@@ -366,7 +465,8 @@ impl HybridEngine {
             );
         }
         let t0 = Instant::now();
-        let decode = self.arts.get("decode_step")?;
+        let (decode, n_out) = self.gen_artifact("decode_step", traffic)?;
+        let name = decode.name.clone();
         let tok_buf = self.engine.upload_i32(toks, &[b])?;
         let kv = self.kv.as_ref().unwrap();
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
@@ -374,34 +474,43 @@ impl HybridEngine {
         inputs.push(&kv.v);
         inputs.push(&tok_buf);
         inputs.push(&self.pos_bufs[step]);
-        let mut out = decode.call_to_buffers(&inputs, 3)?;
+        let mut out = decode.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
         let kc = out.pop().unwrap();
-        let logits_buf = out.pop().unwrap();
+        // The K/V inputs were donated to the call: the old handles are
+        // dead, and the fresh output pair (possibly the same storage,
+        // updated in place) becomes the live cache.
         let kv = self.kv.as_mut().unwrap();
         kv.update(kc, vc);
         kv.advance_all();
-        let logits = self.engine.fetch("decode_step", &logits_buf)?;
+        let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
-        Ok(logits)
+        Ok(sample)
     }
 
     /// Generate `gen_len` tokens for a batch of prompts (row-major
     /// `[b, prompt_len]`). Returns full sequences `[b, seq_len]`.
     ///
-    /// This is the paper's memory-bandwidth-bound phase, now a thin wrapper
+    /// This is the paper's memory-bandwidth-bound phase, a thin wrapper
     /// over the resumable [`HybridEngine::prefill`] +
     /// [`HybridEngine::decode_step`] pair: one prefill call, then up to
-    /// `gen_len - 1` decode calls, sampling between them. The call sequence
-    /// and inputs are identical to the pre-refactor monolithic loop, so
-    /// generation is bit-identical for a fixed sampler seed (pinned by the
-    /// integration golden). The serving scheduler drives the same engine
-    /// through the per-slot entry points instead
-    /// ([`HybridEngine::prefill_slot`] / [`HybridEngine::decode_slots`]).
-    pub fn generate(&mut self, prompts: &[i32], sampler: &mut Sampler) -> Result<Vec<i32>> {
+    /// `gen_len - 1` decode calls, with the [`SamplingBackend`] finishing
+    /// each step's output into token ids. Under a `HostFullRow` backend
+    /// the call sequence and inputs are identical to the pre-refactor
+    /// loop, so generation is bit-identical for a fixed sampler seed
+    /// (pinned by the integration golden); a greedy `DeviceTopK` backend
+    /// produces the same sequences while fetching only `[b]` ids per step.
+    /// The serving scheduler drives the same engine through the per-slot
+    /// entry points instead ([`HybridEngine::prefill_slot`] /
+    /// [`HybridEngine::decode_slots`]).
+    pub fn generate(
+        &mut self,
+        prompts: &[i32],
+        backend: &mut dyn SamplingBackend,
+    ) -> Result<Vec<i32>> {
         let m = &self.arts.manifest;
         let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
-        let vocab = m.actor.vocab;
+        let traffic = backend.traffic();
         // Phase timing covers the WHOLE generation loop (sampling and
         // bookkeeping included), exactly as the pre-refactor monolith did:
         // rewind the engine-call seconds prefill/decode_step accumulate and
@@ -409,7 +518,7 @@ impl HybridEngine {
         // PRs while standalone (serving) calls still self-account.
         let t0 = Instant::now();
         let secs0 = self.stats.gen_secs;
-        let mut logits_t = self.prefill(prompts)?;
+        let mut out = self.prefill(prompts, traffic)?;
 
         let mut seqs = vec![0i32; b * s];
         for i in 0..b {
@@ -421,18 +530,16 @@ impl HybridEngine {
         let mut toks = vec![crate::data::synthetic::Vocab::PAD; b];
 
         for step in 0..sg {
-            // Sample token `sp + step` for every unfinished row, indexing
-            // the fetched logits in place (no per-step [b, vocab] copy).
+            // Sample token `sp + step` for every unfinished row, borrowing
+            // the fetched rows in place (no per-step copy).
             let active = done.iter().filter(|d| !**d).count() as u64;
-            let logits = logits_t.as_f32()?;
             for i in 0..b {
                 if done[i] {
                     toks[i] = crate::data::synthetic::Vocab::PAD;
                     continue;
                 }
-                let row = &logits[i * vocab..(i + 1) * vocab];
                 let hist = &seqs[i * s..i * s + sp + step];
-                let t = sampler.sample(row, hist);
+                let t = backend.sample(out.row(i), hist)?;
                 seqs[i * s + sp + step] = t;
                 toks[i] = t;
                 if t == crate::data::synthetic::Vocab::EOS {
@@ -443,7 +550,7 @@ impl HybridEngine {
             if step + 1 == sg || done.iter().all(|d| *d) {
                 break;
             }
-            logits_t = self.decode_step(&toks, step)?;
+            out = self.decode_step(&toks, step, traffic)?;
         }
 
         self.stats.gen_secs = secs0 + t0.elapsed().as_secs_f64();
@@ -480,11 +587,17 @@ impl HybridEngine {
     }
 
     /// Admit one request into one free batch slot: run its prompt through
-    /// the `prefill_slot` artifact, which writes the slot's K/V rows in
-    /// place (all other slots' rows pass through untouched, so concurrent
-    /// sequences keep their state). Returns the slot's next-token logits
-    /// row (`[vocab]`).
-    pub fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+    /// the `prefill_slot` (or `prefill_slot_sampled`) artifact, which
+    /// writes the slot's K/V rows in place (all other slots' rows pass
+    /// through untouched, so concurrent sequences keep their state).
+    /// Returns the slot's single-row sampling view (logits row, id, or
+    /// top-k candidates per the traffic class).
+    pub fn prefill_slot(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        traffic: TrafficClass,
+    ) -> Result<SampleOut> {
         let m = &self.arts.manifest;
         let (b, sp) = (m.batch, m.prompt_len);
         if prompt.len() != sp {
@@ -500,7 +613,8 @@ impl HybridEngine {
             bail!("prefill_slot: slot {slot} still holds a {held}-token sequence");
         }
         let t0 = Instant::now();
-        let art = self.arts.get("prefill_slot")?;
+        let (art, n_out) = self.gen_artifact("prefill_slot", traffic)?;
+        let name = art.name.clone();
         let prompt_buf = self.engine.upload_i32(prompt, &[1, sp])?;
         let slot_buf = self.engine.upload_i32(&[slot as i32], &[1])?;
         let kv = self.kv.as_ref().unwrap();
@@ -509,30 +623,30 @@ impl HybridEngine {
         inputs.push(&kv.v);
         inputs.push(&prompt_buf);
         inputs.push(&slot_buf);
-        let mut out = art.call_to_buffers(&inputs, 3)?;
+        let mut out = art.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
         let kc = out.pop().unwrap();
-        let logits_buf = out.pop().unwrap();
         let kv = self.kv.as_mut().unwrap();
         kv.update(kc, vc);
         kv.claim(slot, sp)?;
-        let logits = self.engine.fetch("prefill_slot", &logits_buf)?;
+        let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
-        Ok(logits.as_f32()?.to_vec())
+        Ok(sample)
     }
 
     /// One continuous-batching decode step: advance every `active` slot by
     /// one token at its OWN position (`pos[slot]` = index the fed token is
     /// written at, which must equal the slot's filled length). Inactive
     /// slots are fed PAD at position 0 — their rows are dead and the next
-    /// admission's prefill overwrites them. Returns `[b, vocab]` logits;
-    /// only the active rows are meaningful.
+    /// admission's prefill overwrites them. Returns the batch's sampling
+    /// view; only the active rows are meaningful.
     pub fn decode_slots(
         &mut self,
         toks: &[i32],
         pos: &[i32],
         active: &[bool],
-    ) -> Result<HostTensor> {
+        traffic: TrafficClass,
+    ) -> Result<SampleOut> {
         let m = &self.arts.manifest;
         let b = m.batch;
         if toks.len() != b || pos.len() != b || active.len() != b {
@@ -547,7 +661,8 @@ impl HybridEngine {
             bail!("decode_slots requires serving mode (call begin_serving first)");
         }
         let t0 = Instant::now();
-        let art = self.arts.get("decode_slots")?;
+        let (art, n_out) = self.gen_artifact("decode_slots", traffic)?;
+        let name = art.name.clone();
         let tok_buf = self.engine.upload_i32(toks, &[b])?;
         let pos_buf = self.engine.upload_i32(pos, &[b])?;
         let kv = self.kv.as_ref().unwrap();
@@ -556,16 +671,17 @@ impl HybridEngine {
         inputs.push(&kv.v);
         inputs.push(&tok_buf);
         inputs.push(&pos_buf);
-        let mut out = art.call_to_buffers(&inputs, 3)?;
+        let mut out = art.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
         let kc = out.pop().unwrap();
-        let logits_buf = out.pop().unwrap();
+        // Donated K/V inputs: consumed by the call, replaced by the fresh
+        // output handles (see the runtime contract note).
         let kv = self.kv.as_mut().unwrap();
         kv.update(kc, vc);
         kv.advance_where(active, pos)?;
-        let logits = self.engine.fetch("decode_slots", &logits_buf)?;
+        let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
-        Ok(logits)
+        Ok(sample)
     }
 
     /// Retire a finished sequence: its K/V rows become dead and the slot is
@@ -778,15 +894,58 @@ impl HybridEngine {
         Ok((out[0].item_f32()?, out[1].item_f32()?))
     }
 
-    /// One PPO actor update over a full experience batch.
-    #[allow(clippy::too_many_arguments)]
-    pub fn ppo_actor_step(
-        &mut self,
+    /// Stage one experience batch's epoch-constant tensors on device. PPO
+    /// runs `ppo_epochs` actor+critic updates over the SAME experience
+    /// batch; staging once and re-feeding the buffers turns the per-epoch
+    /// upload cost from 6 tensors into just the fresh ptx batch and the
+    /// scalar hyperparameters (mirrors what `score_experience` already
+    /// does for the scoring forwards).
+    pub fn stage_experience(
+        &self,
         tokens: &[i32],
         old_logp: &[f32],
         adv: &[f32],
+        returns: &[f32],
+        old_values: &[f32],
         mask: &[f32],
-        ptx_tokens: &[i32],
+    ) -> Result<StagedExperience> {
+        let m = &self.arts.manifest;
+        let (b, s) = (m.batch, m.seq_len);
+        let w = b * (s - 1);
+        if tokens.len() != b * s {
+            bail!("stage_experience tokens must be [{b}, {s}], got {}", tokens.len());
+        }
+        for (what, len) in [
+            ("old_logp", old_logp.len()),
+            ("adv", adv.len()),
+            ("returns", returns.len()),
+            ("old_values", old_values.len()),
+            ("mask", mask.len()),
+        ] {
+            if len != w {
+                bail!("stage_experience {what} must be [{b}, {}], got {len}", s - 1);
+            }
+        }
+        Ok(StagedExperience {
+            tokens: self.engine.upload_i32(tokens, &[b, s])?,
+            old_logp: self.engine.upload_f32(old_logp, &[b, s - 1])?,
+            adv: self.engine.upload_f32(adv, &[b, s - 1])?,
+            returns: self.engine.upload_f32(returns, &[b, s - 1])?,
+            old_values: self.engine.upload_f32(old_values, &[b, s - 1])?,
+            mask: self.engine.upload_f32(mask, &[b, s - 1])?,
+        })
+    }
+
+    /// Shared tail of both actor-step entry points: inputs already on
+    /// device, outputs adopted in place, scalars fetched.
+    #[allow(clippy::too_many_arguments)]
+    fn ppo_actor_exec(
+        &mut self,
+        tokens: &PjRtBuffer,
+        old_logp: &PjRtBuffer,
+        adv: &PjRtBuffer,
+        mask: &PjRtBuffer,
+        ptx: &PjRtBuffer,
         clip_eps: f32,
         ptx_coef: f32,
         lr: f32,
@@ -798,18 +957,11 @@ impl HybridEngine {
         let art = self.arts.get("ppo_actor_step")?;
         let np = self.actor.len();
         let no = self.actor_opt.len();
-        let extra_bufs = [
-            self.engine.upload_i32(tokens, &[b, s])?,
-            self.engine.upload_f32(old_logp, &[b, s - 1])?,
-            self.engine.upload_f32(adv, &[b, s - 1])?,
-            self.engine.upload_f32(mask, &[b, s - 1])?,
-            self.engine.upload_i32(ptx_tokens, &[b, s])?,
-            self.engine.upload_f32(&[clip_eps, ptx_coef, 0.0, 0.0], &[4])?,
-            self.engine.upload_f32(&[lr], &[])?,
-        ];
+        let hyper_buf = self.engine.upload_f32(&[clip_eps, ptx_coef, 0.0, 0.0], &[4])?;
+        let lr_buf = self.engine.upload_f32(&[lr], &[])?;
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.extend(self.actor_opt.buffers.iter());
-        inputs.extend(extra_bufs.iter());
+        inputs.extend([tokens, old_logp, adv, mask, ptx, &hyper_buf, &lr_buf]);
         let out = art.call_to_buffers(&inputs, np + no + 3)?;
         let (params, opt, scalars) = split_outputs(out, np, no, 3, "ppo_actor_step")?;
         self.actor.replace_buffers(params)?;
@@ -822,13 +974,65 @@ impl HybridEngine {
         Ok(ActorStepOut { loss, approx_kl: kl, clipfrac })
     }
 
-    /// One PPO critic update.
-    pub fn ppo_critic_step(
+    /// One PPO actor update over a full experience batch (one-shot path:
+    /// uploads every tensor; epoch loops should stage once and use
+    /// [`HybridEngine::ppo_actor_step_staged`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn ppo_actor_step(
         &mut self,
         tokens: &[i32],
-        returns: &[f32],
-        old_values: &[f32],
+        old_logp: &[f32],
+        adv: &[f32],
         mask: &[f32],
+        ptx_tokens: &[i32],
+        clip_eps: f32,
+        ptx_coef: f32,
+        lr: f32,
+    ) -> Result<ActorStepOut> {
+        let m = &self.arts.manifest;
+        let (b, s) = (m.batch, m.seq_len);
+        let tok_buf = self.engine.upload_i32(tokens, &[b, s])?;
+        let logp_buf = self.engine.upload_f32(old_logp, &[b, s - 1])?;
+        let adv_buf = self.engine.upload_f32(adv, &[b, s - 1])?;
+        let mask_buf = self.engine.upload_f32(mask, &[b, s - 1])?;
+        let ptx_buf = self.engine.upload_i32(ptx_tokens, &[b, s])?;
+        self.ppo_actor_exec(
+            &tok_buf, &logp_buf, &adv_buf, &mask_buf, &ptx_buf, clip_eps, ptx_coef, lr,
+        )
+    }
+
+    /// One PPO actor update re-feeding a staged experience batch — only
+    /// the ptx batch and scalars cross the host boundary.
+    pub fn ppo_actor_step_staged(
+        &mut self,
+        staged: &StagedExperience,
+        ptx_tokens: &[i32],
+        clip_eps: f32,
+        ptx_coef: f32,
+        lr: f32,
+    ) -> Result<ActorStepOut> {
+        let m = &self.arts.manifest;
+        let (b, s) = (m.batch, m.seq_len);
+        let ptx_buf = self.engine.upload_i32(ptx_tokens, &[b, s])?;
+        self.ppo_actor_exec(
+            &staged.tokens,
+            &staged.old_logp,
+            &staged.adv,
+            &staged.mask,
+            &ptx_buf,
+            clip_eps,
+            ptx_coef,
+            lr,
+        )
+    }
+
+    /// Shared tail of both critic-step entry points.
+    fn ppo_critic_exec(
+        &mut self,
+        tokens: &PjRtBuffer,
+        returns: &PjRtBuffer,
+        old_values: &PjRtBuffer,
+        mask: &PjRtBuffer,
         clip_eps: f32,
         lr: f32,
     ) -> Result<f32> {
@@ -839,17 +1043,11 @@ impl HybridEngine {
         let art = self.arts.get("ppo_critic_step")?;
         let np = self.critic.len();
         let no = self.critic_opt.len();
-        let extra_bufs = [
-            self.engine.upload_i32(tokens, &[b, s])?,
-            self.engine.upload_f32(returns, &[b, s - 1])?,
-            self.engine.upload_f32(old_values, &[b, s - 1])?,
-            self.engine.upload_f32(mask, &[b, s - 1])?,
-            self.engine.upload_f32(&[clip_eps, 0.0, 0.0, 0.0], &[4])?,
-            self.engine.upload_f32(&[lr], &[])?,
-        ];
+        let hyper_buf = self.engine.upload_f32(&[clip_eps, 0.0, 0.0, 0.0], &[4])?;
+        let lr_buf = self.engine.upload_f32(&[lr], &[])?;
         let mut inputs: Vec<&PjRtBuffer> = self.critic.buffers.iter().collect();
         inputs.extend(self.critic_opt.buffers.iter());
-        inputs.extend(extra_bufs.iter());
+        inputs.extend([tokens, returns, old_values, mask, &hyper_buf, &lr_buf]);
         let out = art.call_to_buffers(&inputs, np + no + 1)?;
         let (params, opt, scalars) = split_outputs(out, np, no, 1, "ppo_critic_step")?;
         self.critic.replace_buffers(params)?;
@@ -858,6 +1056,44 @@ impl HybridEngine {
         self.stats.train_secs += t0.elapsed().as_secs_f64();
         self.stats.train_tokens += (b * s) as u64;
         Ok(loss)
+    }
+
+    /// One PPO critic update (one-shot path; see
+    /// [`HybridEngine::ppo_critic_step_staged`] for epoch loops).
+    pub fn ppo_critic_step(
+        &mut self,
+        tokens: &[i32],
+        returns: &[f32],
+        old_values: &[f32],
+        mask: &[f32],
+        clip_eps: f32,
+        lr: f32,
+    ) -> Result<f32> {
+        let m = &self.arts.manifest;
+        let (b, s) = (m.batch, m.seq_len);
+        let tok_buf = self.engine.upload_i32(tokens, &[b, s])?;
+        let ret_buf = self.engine.upload_f32(returns, &[b, s - 1])?;
+        let val_buf = self.engine.upload_f32(old_values, &[b, s - 1])?;
+        let mask_buf = self.engine.upload_f32(mask, &[b, s - 1])?;
+        self.ppo_critic_exec(&tok_buf, &ret_buf, &val_buf, &mask_buf, clip_eps, lr)
+    }
+
+    /// One PPO critic update re-feeding a staged experience batch — only
+    /// the scalars cross the host boundary.
+    pub fn ppo_critic_step_staged(
+        &mut self,
+        staged: &StagedExperience,
+        clip_eps: f32,
+        lr: f32,
+    ) -> Result<f32> {
+        self.ppo_critic_exec(
+            &staged.tokens,
+            &staged.returns,
+            &staged.old_values,
+            &staged.mask,
+            clip_eps,
+            lr,
+        )
     }
 
     /// EMA shadow update (no-op if EMA disabled). The new shadow stays on

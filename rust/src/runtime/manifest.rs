@@ -33,6 +33,10 @@ pub struct ArtifactSpec {
     pub file: PathBuf,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<String>,
+    /// Input positions compiled with `donate_argnums` (the K/V caches of
+    /// the decode entry points): the runtime must treat those inputs as
+    /// consumed by the call — XLA may have updated them in place.
+    pub donates: Vec<usize>,
     pub hlo_bytes: usize,
 }
 
@@ -44,6 +48,10 @@ pub struct Manifest {
     pub prompt_len: usize,
     pub gen_len: usize,
     pub seq_len: usize,
+    /// Candidate count of the device-side sampling tail (`_sampled`
+    /// artifacts return `[batch, sample_k]` top-k logits+ids). 0 when the
+    /// artifact set predates device-side sampling.
+    pub sample_k: usize,
     pub actor: ModelConfig,
     pub critic: ModelConfig,
     pub actor_params: Vec<TensorSpec>,
@@ -127,6 +135,11 @@ impl Manifest {
                     file: dir.join(a.at("file").as_str().context("file")?),
                     inputs,
                     outputs,
+                    donates: a
+                        .get("donates")
+                        .and_then(|d| d.as_arr())
+                        .map(|arr| arr.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default(),
                     hlo_bytes: a.get("hlo_bytes").and_then(|b| b.as_usize()).unwrap_or(0),
                 },
             );
@@ -139,6 +152,7 @@ impl Manifest {
             prompt_len: cfg.at("prompt_len").as_usize().context("prompt_len")?,
             gen_len: cfg.at("gen_len").as_usize().context("gen_len")?,
             seq_len: cfg.at("seq_len").as_usize().context("seq_len")?,
+            sample_k: cfg.get("sample_k").and_then(|v| v.as_usize()).unwrap_or(0),
             actor: model_config(cfg.at("actor"))?,
             critic: model_config(cfg.at("critic"))?,
             actor_params: tensor_specs(j.at("actor_params"))?,
@@ -163,6 +177,13 @@ impl Manifest {
     pub fn validate(&self) -> Result<()> {
         if self.seq_len != self.prompt_len + self.gen_len {
             bail!("seq_len != prompt_len + gen_len");
+        }
+        if self.sample_k > self.actor.vocab {
+            bail!(
+                "sample_k {} exceeds actor vocab {} (top-k tail wider than the row)",
+                self.sample_k,
+                self.actor.vocab
+            );
         }
         let actor_numel: usize = self.actor_params.iter().map(|t| t.numel()).sum();
         if actor_numel as u64 != self.actor.n_params() {
@@ -221,6 +242,10 @@ mod tests {
         let a = m.artifact("sft_step").unwrap();
         assert_eq!(a.inputs[0].dtype, "int32");
         assert_eq!(a.outputs, vec!["actor_params", "loss"]);
+        // Pre-device-sampling manifests parse with the tail disabled and no
+        // donated inputs.
+        assert_eq!(m.sample_k, 0);
+        assert!(a.donates.is_empty());
         assert!(m.artifact("nope").is_err());
     }
 

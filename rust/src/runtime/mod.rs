@@ -10,21 +10,30 @@
 //!   re-copied.
 //! * Outputs stay on device too: [`Artifact::call_to_buffers`] hands back
 //!   one `PjRtBuffer` per tuple element, and callers fetch to host only the
-//!   elements the host actually consumes — the `[b, vocab]` logits of a
-//!   decode step, the scalar losses of a train step. Everything else (K/V
-//!   caches, updated parameters, optimizer state) is re-fed to the next
-//!   call as-is, so per-decode-step host traffic is O(b·vocab) regardless
-//!   of KV-cache size, and train steps move only scalars.
+//!   elements the host actually consumes — the sampled token ids (O(b),
+//!   greedy) or top-k candidates (O(b·k), stochastic) of a `_sampled`
+//!   decode step, the `[b, vocab]` logits row of a full-row decode step,
+//!   the scalar losses of a train step. Everything else (K/V caches,
+//!   updated parameters, optimizer state) is re-fed to the next call
+//!   as-is, so per-decode-step host traffic never scales with the KV-cache
+//!   size and train steps move only scalars.
 //! * If the PJRT wrapper hands tuple outputs back as a single fused tuple
 //!   buffer (wrappers without `untuple_result`), `call_to_buffers` degrades
 //!   to one fetch→decompose→re-upload round trip and counts the event in
 //!   [`ExecStats::fallback_untuples`] — correctness is identical, only the
 //!   zero-copy property is lost for that call.
-//! * No input donation is requested: the artifacts are compiled without
-//!   `donate_argnums`, so outputs are always fresh buffers and pre-staged
-//!   inputs (per-step positions, prompts) may be reused across calls. If
-//!   donation is ever enabled for the KV caches, the hybrid engine must
-//!   stop reusing the donated input buffers after the call.
+//! * K/V cache inputs of the decode entry points (`decode_step`,
+//!   `decode_slots`, and their `_sampled` variants) are compiled WITH
+//!   `donate_argnums` — the HLO carries `input_output_alias` and XLA may
+//!   write the new K/V rows into the input buffers instead of allocating a
+//!   fresh pair each step. Contract: a donated input must be treated as
+//!   CONSUMED by the call — never re-fed, never fetched afterwards. The
+//!   hybrid engine honors this by construction: the decode outputs replace
+//!   the live cache handles every step (`KvCache::update`) and the old
+//!   handles are dropped. Non-donated inputs (params, pre-staged per-step
+//!   positions, prompts) remain safely reusable across calls; the
+//!   manifest's per-artifact `donates` list records which positions are
+//!   donated.
 //! * [`ExecStats`] tracks seconds and bytes moved in each direction per
 //!   artifact; `cargo bench --bench runtime_e2e` prints the ledger and the
 //!   decode bench emits it as `BENCH_decode.json`.

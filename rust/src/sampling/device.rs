@@ -1,0 +1,275 @@
+//! Device top-k sampling: the heavy half of the sampling tail (row argmax
+//! and top-k selection over the vocabulary) runs inside the `_sampled` AOT
+//! artifacts; the host finishes temperature, top-p, and the categorical
+//! draw over the k fetched candidates with the seeded [`Rng`], so
+//! generation stays bit-deterministic and EOS/length retirement stays
+//! host-side. Per-step fetch: `[b]` ids (greedy) or `[b, k]` logits+ids
+//! (stochastic) instead of the `[b, vocab]` row.
+
+use anyhow::{bail, Result};
+
+use super::{check_nonempty, RowRef, SamplerConfig, SamplingBackend, TrafficClass};
+use crate::util::rng::Rng;
+
+/// Device top-k backend. Truncation contract: for stochastic configs the
+/// artifact's k candidates ARE the support — with `top_k == 0` (host
+/// semantics: unrestricted) the draw is implicitly truncated to the k
+/// largest logits, the standard fidelity/traffic trade of device top-k
+/// sampling. A config naming a SPECIFIC support wider than k
+/// (`top_k > k`) is rejected at construction, as is any repetition
+/// penalty (this backend never applies one — `HostFullRow` is the
+/// penalized path).
+pub struct DeviceTopK {
+    pub cfg: SamplerConfig,
+    /// Candidate count baked into the `_sampled` artifacts
+    /// (`manifest.sample_k`).
+    pub k: usize,
+    rng: Rng,
+    /// Reused working copy of one candidate row (temperature-scaled
+    /// logits); the per-token path must not allocate.
+    scratch: Vec<f32>,
+}
+
+impl DeviceTopK {
+    /// Build a device-sampling backend, validating the config against what
+    /// k candidates can express — a clear error here instead of a silently
+    /// wrong distribution at decode time.
+    pub fn new(cfg: SamplerConfig, seed: u64, k: usize, vocab: usize) -> Result<Self> {
+        if k == 0 {
+            bail!(
+                "device sampling unavailable: the artifact set has no sampling tail \
+                 (manifest sample_k = 0) — re-run `make artifacts`"
+            );
+        }
+        if cfg.repetition_penalty != 1.0 {
+            bail!(
+                "DeviceTopK never applies a repetition penalty (requested {}): with \
+                 k={k} of {vocab} candidates the penalty could promote tokens from \
+                 outside the candidate set, and this backend implements no penalty \
+                 path at all — honoring the config silently would be a wrong answer. \
+                 Use the HostFullRow backend for penalized sampling",
+                cfg.repetition_penalty
+            );
+        }
+        if !cfg.greedy && cfg.top_k > k {
+            bail!(
+                "DeviceTopK: config asks for top_k {} but the artifacts return only \
+                 {k} candidates (manifest sample_k) — lower top_k, or rebuild \
+                 artifacts with a larger sample_k",
+                cfg.top_k
+            );
+        }
+        Ok(DeviceTopK { cfg, k, rng: Rng::new(seed), scratch: Vec::new() })
+    }
+
+    /// Convenience: validate against a manifest's `sample_k` / vocab.
+    pub fn for_manifest(
+        cfg: SamplerConfig,
+        seed: u64,
+        m: &crate::runtime::Manifest,
+    ) -> Result<Self> {
+        Self::new(cfg, seed, m.sample_k, m.actor.vocab)
+    }
+
+    /// Host finish over one candidate row (sorted by descending logit):
+    /// temperature → config top-k prefix → top-p prefix → categorical.
+    /// Mirrors the full-row filter semantics restricted to the candidates;
+    /// consumes exactly one uniform draw, like the full-row categorical.
+    fn draw(&mut self, vals: &[f32], ids: &[i32]) -> Result<i32> {
+        check_nonempty(vals, ids)?;
+        let take = if self.cfg.top_k == 0 { vals.len() } else { self.cfg.top_k.min(vals.len()) };
+        let t = self.cfg.temperature.max(1e-4);
+        self.scratch.clear();
+        self.scratch.extend(vals[..take].iter().map(|x| x / t));
+        // Top-p: smallest prefix of the (already sorted) candidates with
+        // cumulative softmax mass >= p — always at least one.
+        let keep = if self.cfg.top_p < 1.0 {
+            let max = self.scratch[0];
+            let z: f32 = self.scratch.iter().map(|x| (x - max).exp()).sum();
+            let mut cut = self.scratch.len();
+            let mut cum = 0.0f32;
+            for (i, x) in self.scratch.iter().enumerate() {
+                cum += (x - max).exp() / z;
+                if cum >= self.cfg.top_p {
+                    cut = i + 1;
+                    break;
+                }
+            }
+            cut
+        } else {
+            self.scratch.len()
+        };
+        let kept = &self.scratch[..keep];
+        let max = kept.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = kept.iter().map(|x| (x - max).exp()).sum();
+        let u = self.rng.f32() * z;
+        let mut cum = 0.0f32;
+        for (j, x) in kept.iter().enumerate() {
+            cum += (x - max).exp();
+            if cum >= u {
+                return Ok(ids[j]);
+            }
+        }
+        Ok(ids[0]) // numerical fallback (ids sorted: 0 is the argmax)
+    }
+}
+
+impl SamplingBackend for DeviceTopK {
+    fn traffic(&self) -> TrafficClass {
+        if self.cfg.greedy {
+            TrafficClass::DeviceIds
+        } else {
+            TrafficClass::DeviceTopK
+        }
+    }
+
+    fn sample(&mut self, row: RowRef<'_>, _history: &[i32]) -> Result<i32> {
+        match row {
+            // Greedy: the device already took the argmax; the id IS the token.
+            RowRef::Id(t) => Ok(t),
+            RowRef::TopK { vals, ids } => {
+                if self.cfg.greedy {
+                    // Candidates are sorted descending: first is the argmax.
+                    check_nonempty(vals, ids)?;
+                    return Ok(ids[0]);
+                }
+                self.draw(vals, ids)
+            }
+            other @ RowRef::Logits(_) => Err(super::wrong_row("DeviceTopK", &other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn greedy_cfg() -> SamplerConfig {
+        SamplerConfig { greedy: true, ..Default::default() }
+    }
+
+    #[test]
+    fn greedy_traffic_is_ids_stochastic_is_topk() {
+        let g = DeviceTopK::new(greedy_cfg(), 0, 8, 256).unwrap();
+        assert_eq!(g.traffic(), TrafficClass::DeviceIds);
+        let s = DeviceTopK::new(SamplerConfig::default(), 0, 8, 256).unwrap();
+        assert_eq!(s.traffic(), TrafficClass::DeviceTopK);
+    }
+
+    #[test]
+    fn greedy_returns_device_id_verbatim() {
+        let mut b = DeviceTopK::new(greedy_cfg(), 0, 8, 256).unwrap();
+        assert_eq!(b.sample(RowRef::Id(42), &[]).unwrap(), 42);
+        // Greedy over a candidate row takes the first (sorted) candidate.
+        let t = b
+            .sample(RowRef::TopK { vals: &[3.0, 2.0, 1.0], ids: &[9, 5, 7] }, &[])
+            .unwrap();
+        assert_eq!(t, 9);
+    }
+
+    #[test]
+    fn rejects_full_logits_rows() {
+        let mut b = DeviceTopK::new(greedy_cfg(), 0, 8, 256).unwrap();
+        let err = b.sample(RowRef::Logits(&[1.0, 2.0]), &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("wrong artifact"));
+    }
+
+    #[test]
+    fn repetition_penalty_is_a_config_error_not_a_wrong_answer() {
+        let cfg = SamplerConfig { repetition_penalty: 1.2, ..Default::default() };
+        let err = DeviceTopK::new(cfg.clone(), 0, 8, 256).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("repetition penalty"), "{msg}");
+        assert!(msg.contains("HostFullRow"), "{msg}");
+        // Rejected even at k == vocab: the backend has no penalty path, so
+        // accepting the config would silently sample the wrong distribution.
+        assert!(DeviceTopK::new(cfg, 0, 256, 256).is_err());
+        // Greedy is no exception (greedy + penalty can flip the argmax).
+        let greedy_pen = SamplerConfig {
+            greedy: true,
+            repetition_penalty: 2.0,
+            ..Default::default()
+        };
+        assert!(DeviceTopK::new(greedy_pen, 0, 8, 256).is_err());
+    }
+
+    #[test]
+    fn top_k_wider_than_candidates_is_rejected() {
+        let cfg = SamplerConfig { top_k: 50, ..Default::default() };
+        let err = DeviceTopK::new(cfg, 0, 8, 256).unwrap_err();
+        assert!(format!("{err:#}").contains("sample_k"));
+    }
+
+    #[test]
+    fn missing_sampling_tail_is_actionable() {
+        let err = DeviceTopK::new(greedy_cfg(), 0, 0, 256).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn stochastic_draw_matches_candidate_distribution() {
+        // Two candidates with p = [0.25, 0.75] after softmax.
+        let vals = [1.0f32.ln(), 3.0f32.ln()];
+        // Sorted-descending contract: re-order so vals[0] is the max.
+        let vals = [vals[1], vals[0]];
+        let ids = [11, 22];
+        let mut b = DeviceTopK::new(SamplerConfig::default(), 42, 2, 256).unwrap();
+        let n = 20_000;
+        let mut hi = 0;
+        for _ in 0..n {
+            match b.sample(RowRef::TopK { vals: &vals, ids: &ids }, &[]).unwrap() {
+                11 => hi += 1,
+                22 => {}
+                other => panic!("sampled {other} outside the candidate set"),
+            }
+        }
+        let frac = hi as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn top_p_restricts_candidate_support() {
+        // First candidate alone carries ~0.84 mass > 0.5 -> always chosen.
+        let vals = [3.0, 1.0, 0.0, -1.0];
+        let ids = [4, 5, 6, 7];
+        let cfg = SamplerConfig { top_p: 0.5, ..Default::default() };
+        let mut b = DeviceTopK::new(cfg, 1, 4, 256).unwrap();
+        for _ in 0..200 {
+            assert_eq!(b.sample(RowRef::TopK { vals: &vals, ids: &ids }, &[]).unwrap(), 4);
+        }
+    }
+
+    #[test]
+    fn config_top_k_narrows_candidates() {
+        let vals = [5.0, 4.9, -10.0, -10.0];
+        let ids = [1, 2, 3, 4];
+        let cfg = SamplerConfig { top_k: 2, ..Default::default() };
+        let mut b = DeviceTopK::new(cfg, 3, 4, 256).unwrap();
+        for _ in 0..200 {
+            let t = b.sample(RowRef::TopK { vals: &vals, ids: &ids }, &[]).unwrap();
+            assert!(t == 1 || t == 2, "sampled {t} outside config top-2");
+        }
+    }
+
+    #[test]
+    fn seeded_draws_are_deterministic() {
+        let vals = [2.0, 1.5, 1.0, 0.5];
+        let ids = [3, 1, 4, 1];
+        let cfg = SamplerConfig { temperature: 0.8, top_p: 0.9, ..Default::default() };
+        let mut a = DeviceTopK::new(cfg.clone(), 9, 4, 256).unwrap();
+        let mut b = DeviceTopK::new(cfg, 9, 4, 256).unwrap();
+        for _ in 0..100 {
+            assert_eq!(
+                a.sample(RowRef::TopK { vals: &vals, ids: &ids }, &[]).unwrap(),
+                b.sample(RowRef::TopK { vals: &vals, ids: &ids }, &[]).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_candidate_rows_error() {
+        let mut b = DeviceTopK::new(SamplerConfig::default(), 0, 4, 256).unwrap();
+        assert!(b.sample(RowRef::TopK { vals: &[], ids: &[] }, &[]).is_err());
+        assert!(b.sample(RowRef::TopK { vals: &[1.0], ids: &[1, 2] }, &[]).is_err());
+    }
+}

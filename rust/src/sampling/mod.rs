@@ -1,11 +1,43 @@
-//! Token sampling: the L3 half of the generation hot loop.
+//! Token sampling: the L3 half of the generation hot loop, split across a
+//! [`SamplingBackend`] trait so the per-step host↔device traffic is a
+//! property of the chosen backend, not of the engine.
 //!
-//! The decode artifact returns logits; everything after that — temperature,
-//! repetition penalty, top-k / top-p filtering, categorical draw — happens
-//! here, in rust, per token. Ordering follows the HF convention the paper's
-//! examples rely on: repetition penalty → temperature → top-k → top-p.
+//! # Traffic contract (what crosses the PCIe boundary per decode step)
+//!
+//! | backend                     | artifact family | fetched per step      |
+//! |-----------------------------|-----------------|-----------------------|
+//! | [`HostFullRow`]             | `decode_*`      | `[b, vocab]` logits   |
+//! | [`DeviceTopK`] (greedy)     | `decode_*_sampled` | `[b]` token ids    |
+//! | [`DeviceTopK`] (stochastic) | `decode_*_sampled` | `[b, k]` logits+ids|
+//!
+//! [`HostFullRow`] wraps the original [`Sampler`]: the artifact returns raw
+//! logits and everything after that — temperature, repetition penalty,
+//! top-k / top-p filtering, categorical draw — happens here in rust, per
+//! token (HF filter ordering: repetition penalty → temperature → top-k →
+//! top-p). It is the only backend that can honor a repetition penalty,
+//! because the penalty may promote tokens from outside any candidate set.
+//!
+//! [`DeviceTopK`] moves the heavy half of sampling into the AOT artifacts:
+//! a fused Pallas tail (`python/compile/kernels/sampling.py`) computes the
+//! row argmax and the top-`k` candidates on device, and the host finishes
+//! temperature / top-p / the categorical draw over those k candidates with
+//! the same seeded [`crate::util::rng::Rng`] — generation stays
+//! bit-deterministic for a fixed seed, and EOS/length retirement stays
+//! host-side (the scheduler sees every sampled id). Greedy device decoding
+//! is bit-identical to [`HostFullRow`] argmax (both tie-break toward the
+//! lower token id; pinned by the integration goldens).
+//!
+//! The engine consumes backends through [`SamplingBackend::traffic`] (which
+//! artifact family to execute and which outputs to fetch) and hands results
+//! back as a [`SampleOut`]; [`SamplingBackend::sample`] finishes one row.
 
-use crate::util::rng::Rng;
+pub mod device;
+pub mod host;
+
+pub use device::DeviceTopK;
+pub use host::{HostFullRow, Sampler};
+
+use anyhow::{bail, Result};
 
 #[derive(Debug, Clone)]
 pub struct SamplerConfig {
@@ -29,124 +61,128 @@ impl Default for SamplerConfig {
     }
 }
 
-pub struct Sampler {
-    pub cfg: SamplerConfig,
-    rng: Rng,
-    scratch: Vec<(f32, usize)>,
-    /// Reusable working copy of one logits row: `sample` is called b×gen_len
-    /// times per generate, and must not allocate in that loop.
-    row: Vec<f32>,
+/// Which artifact family the engine must execute for a backend, and which
+/// outputs it must fetch — the per-step host-traffic class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficClass {
+    /// Plain artifacts; fetch the full `[b, vocab]` logits rows.
+    FullRow,
+    /// `_sampled` artifacts; fetch the `[b]` device-argmax ids only.
+    DeviceIds,
+    /// `_sampled` artifacts; fetch the `[b, k]` candidate logits + ids.
+    DeviceTopK,
 }
 
-impl Sampler {
-    pub fn new(cfg: SamplerConfig, seed: u64) -> Self {
-        Sampler { cfg, rng: Rng::new(seed), scratch: Vec::new(), row: Vec::new() }
+/// What one generation step handed back to the host — the engine fetches
+/// exactly the variant the backend's [`TrafficClass`] asks for.
+#[derive(Debug, Clone)]
+pub enum SampleOut {
+    /// Full logits rows, row-major `[b, vocab]`.
+    Logits { data: Vec<f32>, vocab: usize },
+    /// Device-argmax token ids `[b]` (greedy decoding).
+    Ids(Vec<i32>),
+    /// Device top-k candidates, row-major `[b, k]`, sorted by descending
+    /// logit within each row.
+    TopK { vals: Vec<f32>, ids: Vec<i32>, k: usize },
+}
+
+impl SampleOut {
+    pub fn n_rows(&self) -> usize {
+        match self {
+            SampleOut::Logits { data, vocab } => data.len() / (*vocab).max(1),
+            SampleOut::Ids(ids) => ids.len(),
+            SampleOut::TopK { ids, k, .. } => ids.len() / (*k).max(1),
+        }
     }
 
-    /// Sample one token id from a logits row. `history` drives the
-    /// repetition penalty (pass `&[]` to disable).
-    pub fn sample(&mut self, logits: &[f32], history: &[i32]) -> i32 {
-        debug_assert!(!logits.is_empty());
-        if self.cfg.greedy && self.cfg.repetition_penalty == 1.0 {
-            return argmax(logits) as i32;
-        }
-        // Take the scratch row out of self so the filter passes (which also
-        // borrow self mutably) can operate on it; put it back when done.
-        let mut l = std::mem::take(&mut self.row);
-        l.clear();
-        l.extend_from_slice(logits);
-        self.apply_repetition_penalty(&mut l, history);
-        let tok = if self.cfg.greedy {
-            argmax(&l) as i32
-        } else {
-            let t = self.cfg.temperature.max(1e-4);
-            for x in l.iter_mut() {
-                *x /= t;
+    /// Borrow one row (slot) of the step's output.
+    pub fn row(&self, i: usize) -> RowRef<'_> {
+        match self {
+            SampleOut::Logits { data, vocab } => {
+                let v = *vocab;
+                RowRef::Logits(&data[i * v..(i + 1) * v])
             }
-            self.filter_top_k(&mut l);
-            self.filter_top_p(&mut l);
-            self.categorical(&l)
-        };
-        self.row = l;
-        tok
-    }
-
-    fn apply_repetition_penalty(&self, l: &mut [f32], history: &[i32]) {
-        let p = self.cfg.repetition_penalty;
-        if p == 1.0 {
-            return;
-        }
-        for &tok in history {
-            let x = &mut l[tok as usize];
-            // HF semantics: shrink positive logits, amplify negative ones.
-            *x = if *x > 0.0 { *x / p } else { *x * p };
-        }
-    }
-
-    fn filter_top_k(&mut self, l: &mut [f32]) {
-        let k = self.cfg.top_k;
-        if k == 0 || k >= l.len() {
-            return;
-        }
-        self.scratch.clear();
-        self.scratch.extend(l.iter().copied().zip(0..));
-        // Partial selection: kth largest is the cutoff.
-        self.scratch
-            .select_nth_unstable_by(k - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
-        let cutoff = self.scratch[k - 1].0;
-        let mut kept = 0usize;
-        for x in l.iter_mut() {
-            if *x >= cutoff && kept < k {
-                kept += 1;
-            } else {
-                *x = f32::NEG_INFINITY;
+            SampleOut::Ids(ids) => RowRef::Id(ids[i]),
+            SampleOut::TopK { vals, ids, k } => {
+                let k = *k;
+                RowRef::TopK { vals: &vals[i * k..(i + 1) * k], ids: &ids[i * k..(i + 1) * k] }
             }
         }
-    }
-
-    fn filter_top_p(&mut self, l: &mut [f32]) {
-        let p = self.cfg.top_p;
-        if p >= 1.0 {
-            return;
-        }
-        self.scratch.clear();
-        self.scratch
-            .extend(l.iter().copied().zip(0..).filter(|(x, _)| x.is_finite()));
-        self.scratch
-            .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        // Softmax over the sorted candidates, keep the smallest prefix with
-        // cumulative mass >= p (always at least one).
-        let max = self.scratch[0].0;
-        let z: f32 = self.scratch.iter().map(|(x, _)| (x - max).exp()).sum();
-        let mut cum = 0.0f32;
-        let mut cut = self.scratch.len();
-        for (i, (x, _)) in self.scratch.iter().enumerate() {
-            cum += (x - max).exp() / z;
-            if cum >= p {
-                cut = i + 1;
-                break;
-            }
-        }
-        for (_, idx) in &self.scratch[cut..] {
-            l[*idx] = f32::NEG_INFINITY;
-        }
-    }
-
-    fn categorical(&mut self, l: &[f32]) -> i32 {
-        let max = l.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let z: f32 = l.iter().map(|x| (x - max).exp()).sum();
-        let u = self.rng.f32() * z;
-        let mut cum = 0.0f32;
-        for (i, x) in l.iter().enumerate() {
-            cum += (x - max).exp();
-            if cum >= u {
-                return i as i32;
-            }
-        }
-        argmax(l) as i32 // numerical fallback
     }
 }
 
+/// One borrowed row of a [`SampleOut`] — what a backend finishes into a
+/// token id.
+#[derive(Debug, Clone, Copy)]
+pub enum RowRef<'a> {
+    Logits(&'a [f32]),
+    Id(i32),
+    TopK { vals: &'a [f32], ids: &'a [i32] },
+}
+
+/// Owned per-slot pending row — the serving scheduler keeps one per live
+/// slot between the fused decode call and the next tick's sample.
+#[derive(Debug, Clone)]
+pub enum PendingRow {
+    Logits(Vec<f32>),
+    Id(i32),
+    TopK { vals: Vec<f32>, ids: Vec<i32> },
+}
+
+impl PendingRow {
+    pub fn from_row(r: RowRef<'_>) -> PendingRow {
+        match r {
+            RowRef::Logits(l) => PendingRow::Logits(l.to_vec()),
+            RowRef::Id(t) => PendingRow::Id(t),
+            RowRef::TopK { vals, ids } => {
+                PendingRow::TopK { vals: vals.to_vec(), ids: ids.to_vec() }
+            }
+        }
+    }
+
+    pub fn as_row(&self) -> RowRef<'_> {
+        match self {
+            PendingRow::Logits(l) => RowRef::Logits(l),
+            PendingRow::Id(t) => RowRef::Id(*t),
+            PendingRow::TopK { vals, ids } => RowRef::TopK { vals, ids },
+        }
+    }
+
+    /// Overwrite from a fresh row, reusing the existing allocations when
+    /// the variant matches (the per-step serving path must not allocate).
+    pub fn copy_from(&mut self, r: RowRef<'_>) {
+        match (&mut *self, r) {
+            (PendingRow::Logits(buf), RowRef::Logits(src)) => {
+                buf.clear();
+                buf.extend_from_slice(src);
+            }
+            (PendingRow::Id(t), RowRef::Id(s)) => *t = s,
+            (PendingRow::TopK { vals, ids }, RowRef::TopK { vals: sv, ids: si }) => {
+                vals.clear();
+                vals.extend_from_slice(sv);
+                ids.clear();
+                ids.extend_from_slice(si);
+            }
+            (slot, r) => *slot = PendingRow::from_row(r),
+        }
+    }
+}
+
+/// A sampling strategy plus its host-side finishing state (RNG, scratch).
+///
+/// The engine asks [`SamplingBackend::traffic`] which artifact family to
+/// run and hands each fetched row back through [`SamplingBackend::sample`];
+/// `history` is the sequence so far (repetition penalty — only meaningful
+/// for backends whose construction admits one).
+pub trait SamplingBackend {
+    fn traffic(&self) -> TrafficClass;
+
+    fn sample(&mut self, row: RowRef<'_>, history: &[i32]) -> Result<i32>;
+}
+
+/// First-max argmax (ties toward the lower index — the convention shared
+/// with the device sampling tail, which is what makes device-greedy
+/// generation bit-identical to the host path).
 pub fn argmax(l: &[f32]) -> usize {
     let mut best = 0;
     for (i, x) in l.iter().enumerate() {
@@ -165,117 +201,80 @@ pub fn softmax(l: &[f32]) -> Vec<f32> {
     exps.iter().map(|e| e / z).collect()
 }
 
+/// Validate a backend/row pairing mismatch into a actionable error.
+pub(crate) fn wrong_row(backend: &str, row: &RowRef<'_>) -> anyhow::Error {
+    let got = match row {
+        RowRef::Logits(_) => "a full logits row",
+        RowRef::Id(_) => "a device-argmax id",
+        RowRef::TopK { .. } => "device top-k candidates",
+    };
+    anyhow::anyhow!("{backend} backend was fed {got} (engine ran the wrong artifact family)")
+}
+
+/// Convenience: bail unless the candidate row is non-empty.
+pub(crate) fn check_nonempty(vals: &[f32], ids: &[i32]) -> Result<()> {
+    if vals.is_empty() || vals.len() != ids.len() {
+        bail!("malformed top-k candidate row: {} vals / {} ids", vals.len(), ids.len());
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn sampler(cfg: SamplerConfig) -> Sampler {
-        Sampler::new(cfg, 42)
-    }
-
     #[test]
-    fn greedy_takes_argmax() {
-        let mut s = sampler(SamplerConfig { greedy: true, ..Default::default() });
-        assert_eq!(s.sample(&[0.1, 3.0, -1.0, 2.9], &[]), 1);
-    }
-
-    #[test]
-    fn top_k_restricts_support() {
-        let mut s = sampler(SamplerConfig { top_k: 2, ..Default::default() });
-        let logits = vec![5.0, 4.9, -10.0, -10.0, -10.0];
-        for _ in 0..200 {
-            let t = s.sample(&logits, &[]);
-            assert!(t == 0 || t == 1, "sampled {t} outside top-2");
+    fn sample_out_rows_and_refs() {
+        let out = SampleOut::Logits { data: vec![0.0, 1.0, 2.0, 3.0], vocab: 2 };
+        assert_eq!(out.n_rows(), 2);
+        match out.row(1) {
+            RowRef::Logits(l) => assert_eq!(l, &[2.0, 3.0]),
+            _ => panic!("wrong row kind"),
         }
-    }
-
-    #[test]
-    fn top_p_restricts_support() {
-        let mut s = sampler(SamplerConfig { top_p: 0.5, ..Default::default() });
-        // p(0) ≈ 0.84 alone exceeds 0.5 -> only token 0 may be drawn.
-        let logits = vec![3.0, 1.0, 0.0, -1.0];
-        for _ in 0..200 {
-            assert_eq!(s.sample(&logits, &[]), 0);
+        let out = SampleOut::Ids(vec![5, 6]);
+        assert_eq!(out.n_rows(), 2);
+        match out.row(0) {
+            RowRef::Id(t) => assert_eq!(t, 5),
+            _ => panic!("wrong row kind"),
         }
-    }
-
-    #[test]
-    fn temperature_zero_approaches_greedy() {
-        let mut s = sampler(SamplerConfig { temperature: 1e-6, ..Default::default() });
-        for _ in 0..50 {
-            assert_eq!(s.sample(&[0.0, 0.5, 0.2], &[]), 1);
-        }
-    }
-
-    #[test]
-    fn repetition_penalty_discourages_history() {
-        let logits = vec![2.0, 2.0];
-        let mut s = sampler(SamplerConfig {
-            greedy: true,
-            repetition_penalty: 2.0,
-            ..Default::default()
-        });
-        // token 0 in history -> its logit halves -> argmax flips to 1
-        assert_eq!(s.sample(&logits, &[0]), 1);
-    }
-
-    #[test]
-    fn categorical_matches_distribution() {
-        let mut s = sampler(SamplerConfig::default());
-        let logits = vec![1.0f32.ln(), 3.0f32.ln()]; // p = [0.25, 0.75]
-        let n = 20_000;
-        let mut ones = 0;
-        for _ in 0..n {
-            if s.sample(&logits, &[]) == 1 {
-                ones += 1;
+        let out = SampleOut::TopK { vals: vec![1.0, 0.5, 2.0, 1.5], ids: vec![3, 9, 4, 8], k: 2 };
+        assert_eq!(out.n_rows(), 2);
+        match out.row(1) {
+            RowRef::TopK { vals, ids } => {
+                assert_eq!(vals, &[2.0, 1.5]);
+                assert_eq!(ids, &[4, 8]);
             }
+            _ => panic!("wrong row kind"),
         }
-        let frac = ones as f64 / n as f64;
-        assert!((frac - 0.75).abs() < 0.02, "{frac}");
     }
 
     #[test]
-    fn scratch_reuse_does_not_leak_state_across_rows() {
-        // The reused row buffer must be truncated to each call's logits
-        // exactly: sampling a small row right after a much larger one gives
-        // the same answer as a fresh sampler. Greedy + repetition penalty
-        // exercises the scratch path without consuming rng state.
-        let cfg = SamplerConfig {
-            greedy: true,
-            repetition_penalty: 1.5,
-            ..Default::default()
-        };
-        let big: Vec<f32> = (0..64).map(|i| ((i * 37) % 19) as f32 / 3.0).collect();
-        let small = vec![0.1f32, 2.0, -1.0, 0.5];
-        let mut reused = sampler(cfg.clone());
-        let _ = reused.sample(&big, &[5, 9]);
-        let mut fresh = sampler(cfg);
-        assert_eq!(reused.sample(&small, &[1]), fresh.sample(&small, &[1]));
-    }
-
-    #[test]
-    fn scratch_reuse_is_deterministic_across_mixed_rows() {
-        // Two identically seeded samplers fed the same mixed-size stream
-        // must agree call for call (sampling results unchanged by reuse).
-        let cfg = SamplerConfig {
-            temperature: 0.8,
-            top_k: 5,
-            top_p: 0.9,
-            repetition_penalty: 1.2,
-            ..Default::default()
-        };
-        let rows: Vec<Vec<f32>> = vec![
-            (0..32).map(|i| (i as f32 * 0.37).sin() * 3.0).collect(),
-            (0..8).map(|i| (i as f32 * 1.1).cos()).collect(),
-            (0..128).map(|i| ((i * 13) % 31) as f32 / 7.0).collect(),
-        ];
-        let mut a = Sampler::new(cfg.clone(), 99);
-        let mut b = Sampler::new(cfg, 99);
-        for _ in 0..50 {
-            for row in &rows {
-                assert_eq!(a.sample(row, &[0, 1]), b.sample(row, &[0, 1]));
+    fn pending_row_copy_reuses_and_switches_variants() {
+        let mut p = PendingRow::Logits(vec![1.0, 2.0]);
+        p.copy_from(RowRef::Logits(&[3.0, 4.0, 5.0]));
+        match &p {
+            PendingRow::Logits(l) => assert_eq!(l.as_slice(), &[3.0, 4.0, 5.0]),
+            _ => panic!(),
+        }
+        // Variant switch (backend change between serving sessions) works too.
+        p.copy_from(RowRef::Id(7));
+        match p.as_row() {
+            RowRef::Id(t) => assert_eq!(t, 7),
+            _ => panic!(),
+        }
+        p.copy_from(RowRef::TopK { vals: &[0.5], ids: &[2] });
+        match p.as_row() {
+            RowRef::TopK { vals, ids } => {
+                assert_eq!(vals, &[0.5]);
+                assert_eq!(ids, &[2]);
             }
+            _ => panic!(),
         }
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
     }
 
     #[test]

@@ -7,19 +7,35 @@
 //! early-EOS slots burned capacity on dead rows. The [`Scheduler`] here
 //! works at *decode-step* granularity instead — each [`Scheduler::step`]:
 //!
-//! 1. **admits** queued requests into free batch slots (one `prefill_slot`
-//!    call each; the new sequence's K/V rows overwrite a retired slot's
-//!    rows while the other slots' device state is untouched),
-//! 2. **samples** one token per live slot from its pending logits row and
+//! 1. **admits** queued requests into free batch slots (one per-slot
+//!    prefill call each; the new sequence's K/V rows overwrite a retired
+//!    slot's rows while the other slots' device state is untouched),
+//! 2. **samples** one token per live slot from its pending row and
 //!    **retires** sequences immediately on EOS or length (the slot frees
 //!    this step, refills next step),
-//! 3. runs **one fused `decode_slots` call** that advances every live slot
-//!    at its own sequence position.
+//! 3. runs **one fused decode call** that advances every live slot at its
+//!    own sequence position.
 //!
-//! The engine contract is the [`SlotEngine`] trait so the scheduling
-//! policy is unit-testable without artifacts; [`HybridEngine`] implements
-//! it over the `prefill_slot` / `decode_slots` AOT artifacts and the
-//! per-slot `KvCache` occupancy ledger.
+//! # Per-step host traffic
+//!
+//! The scheduler is generic over the [`SamplingBackend`] driving it; the
+//! backend's [`TrafficClass`] decides both which artifact family the
+//! engine executes and what a slot's pending state is:
+//!
+//! * `HostFullRow` → `decode_slots`, a `[b, vocab]` logits matrix down,
+//!   full host-side sampling (repetition penalty available);
+//! * `DeviceTopK` greedy → `decode_slots_sampled`, `[b]` token ids down —
+//!   O(b) bytes per tick;
+//! * `DeviceTopK` stochastic → `decode_slots_sampled`, `[b, k]` candidate
+//!   logits+ids down — O(b·k); the host finishes temperature/top-p and
+//!   the categorical draw with its seeded RNG.
+//!
+//! In every class the sampled token ids land on the host each tick, so
+//! EOS/length retirement stays a host decision — sample on device, retire
+//! on host. The engine contract is the [`SlotEngine`] trait so the
+//! scheduling policy is unit-testable without artifacts; [`HybridEngine`]
+//! implements it over the `prefill_slot` / `decode_slots` (and
+//! `*_sampled`) AOT artifacts and the per-slot `KvCache` occupancy ledger.
 
 use std::collections::VecDeque;
 
@@ -27,14 +43,14 @@ use anyhow::{bail, Result};
 
 use crate::data::synthetic::Vocab;
 use crate::hybrid::HybridEngine;
-use crate::sampling::Sampler;
+use crate::sampling::{PendingRow, SampleOut, SamplingBackend, TrafficClass};
 
 /// What the scheduler needs from a generation engine with per-slot state.
+/// (Row strides are carried by [`SampleOut`]/[`PendingRow`] themselves, so
+/// the engine no longer exposes a vocab size here.)
 pub trait SlotEngine {
     /// Number of batch slots (the artifact batch size).
     fn n_slots(&self) -> usize;
-    /// Vocabulary size (stride of one logits row).
-    fn vocab(&self) -> usize;
     /// Prompt length every admitted request must match (fixed AOT shape).
     fn prompt_len(&self) -> usize;
     /// Hard cap on generated tokens per sequence (KV-cache capacity).
@@ -43,19 +59,23 @@ pub trait SlotEngine {
     fn begin_serving(&mut self) -> Result<()> {
         Ok(())
     }
-    /// Admit one prompt into a free slot; returns its next-token logits
-    /// row (`[vocab]`).
-    fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>>;
-    /// Advance every `active` slot by one token at its own position,
-    /// writing the flat `[n_slots * vocab]` logits into `out` (a reused
-    /// scratch buffer — the per-step decode path must not allocate).
+    /// Admit one prompt into a free slot; returns its pending row (logits,
+    /// id, or top-k candidates per the traffic class).
+    fn prefill_slot(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        traffic: TrafficClass,
+    ) -> Result<PendingRow>;
+    /// Advance every `active` slot by one token at its own position;
+    /// returns the batch's sampling view (only active rows meaningful).
     fn decode_slots(
         &mut self,
         toks: &[i32],
         pos: &[i32],
         active: &[bool],
-        out: &mut Vec<f32>,
-    ) -> Result<()>;
+        traffic: TrafficClass,
+    ) -> Result<SampleOut>;
     /// Retire a finished sequence, freeing its slot for the next admission.
     fn release_slot(&mut self, slot: usize) -> Result<()>;
     /// Accounting hook: `n` tokens were sampled this step.
@@ -65,10 +85,6 @@ pub trait SlotEngine {
 impl SlotEngine for HybridEngine {
     fn n_slots(&self) -> usize {
         self.manifest().batch
-    }
-
-    fn vocab(&self) -> usize {
-        self.manifest().actor.vocab
     }
 
     fn prompt_len(&self) -> usize {
@@ -83,8 +99,14 @@ impl SlotEngine for HybridEngine {
         HybridEngine::begin_serving(self)
     }
 
-    fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
-        HybridEngine::prefill_slot(self, slot, prompt)
+    fn prefill_slot(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        traffic: TrafficClass,
+    ) -> Result<PendingRow> {
+        let out = HybridEngine::prefill_slot(self, slot, prompt, traffic)?;
+        Ok(PendingRow::from_row(out.row(0)))
     }
 
     fn decode_slots(
@@ -92,12 +114,9 @@ impl SlotEngine for HybridEngine {
         toks: &[i32],
         pos: &[i32],
         active: &[bool],
-        out: &mut Vec<f32>,
-    ) -> Result<()> {
-        let logits = HybridEngine::decode_slots(self, toks, pos, active)?;
-        out.clear();
-        out.extend_from_slice(logits.as_f32()?);
-        Ok(())
+        traffic: TrafficClass,
+    ) -> Result<SampleOut> {
+        HybridEngine::decode_slots(self, toks, pos, active, traffic)
     }
 
     fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -159,8 +178,9 @@ struct Seq {
     prompt_len: usize,
     generated: usize,
     max_new: usize,
-    /// Logits predicting the next token (from prefill or the last decode).
-    logits: Vec<f32>,
+    /// Pending sampling view predicting the next token (from the
+    /// admission prefill or the last fused decode).
+    pending: PendingRow,
     enqueued_step: u64,
     admitted_step: u64,
 }
@@ -199,8 +219,6 @@ pub struct Scheduler<E: SlotEngine> {
     queue: VecDeque<(Request, u64)>,
     slots: Vec<Option<Seq>>,
     step_idx: u64,
-    /// Reused `[n_slots * vocab]` logits staging for the decode call.
-    scratch: Vec<f32>,
     /// Reused per-step decode inputs (the hot loop must not allocate).
     step_toks: Vec<i32>,
     step_pos: Vec<i32>,
@@ -218,7 +236,6 @@ impl<E: SlotEngine> Scheduler<E> {
             queue: VecDeque::new(),
             slots: (0..n).map(|_| None).collect(),
             step_idx: 0,
-            scratch: Vec::new(),
             step_toks: vec![Vocab::PAD; n],
             step_pos: vec![0; n],
             step_active: vec![false; n],
@@ -270,10 +287,13 @@ impl<E: SlotEngine> Scheduler<E> {
         self.queue.is_empty() && self.slots.iter().all(|s| s.is_none())
     }
 
-    /// One scheduler iteration: admit → sample/retire → fused decode.
-    /// Returns the sequences that finished this step.
-    pub fn step(&mut self, sampler: &mut Sampler) -> Result<Vec<Completion>> {
+    /// One scheduler iteration: admit → sample/retire → fused decode. The
+    /// backend decides the artifact family (host full-row vs device
+    /// sampled) and finishes each pending row into a token id. Returns the
+    /// sequences that finished this step.
+    pub fn step(&mut self, backend: &mut dyn SamplingBackend) -> Result<Vec<Completion>> {
         let b = self.slots.len();
+        let traffic = backend.traffic();
         self.stats.steps += 1;
 
         // 1. Admission at the step boundary: every free slot takes the
@@ -286,7 +306,7 @@ impl<E: SlotEngine> Scheduler<E> {
             let Some((req, enqueued_step)) = self.queue.pop_front() else {
                 break;
             };
-            let logits = self.engine.prefill_slot(slot, &req.prompt)?;
+            let pending = self.engine.prefill_slot(slot, &req.prompt, traffic)?;
             self.stats.prefills += 1;
             self.stats.admitted += 1;
             let max_new = req.max_new.clamp(1, self.engine.max_new_tokens());
@@ -296,7 +316,7 @@ impl<E: SlotEngine> Scheduler<E> {
                 tokens: req.prompt,
                 generated: 0,
                 max_new,
-                logits,
+                pending,
                 enqueued_step,
                 admitted_step: self.step_idx,
             });
@@ -310,7 +330,7 @@ impl<E: SlotEngine> Scheduler<E> {
             let Some(seq) = self.slots[slot].as_mut() else {
                 continue;
             };
-            let t = sampler.sample(&seq.logits, &seq.tokens);
+            let t = backend.sample(seq.pending.as_row(), &seq.tokens)?;
             seq.tokens.push(t);
             seq.generated += 1;
             sampled += 1;
@@ -354,18 +374,15 @@ impl<E: SlotEngine> Scheduler<E> {
                     self.step_active[slot] = false;
                 }
             }
-            self.engine.decode_slots(
+            let out = self.engine.decode_slots(
                 &self.step_toks,
                 &self.step_pos,
                 &self.step_active,
-                &mut self.scratch,
+                traffic,
             )?;
-            let vocab = self.engine.vocab();
             for slot in 0..b {
                 if let Some(seq) = self.slots[slot].as_mut() {
-                    seq.logits.clear();
-                    seq.logits
-                        .extend_from_slice(&self.scratch[slot * vocab..(slot + 1) * vocab]);
+                    seq.pending.copy_from(out.row(slot));
                 }
             }
             self.stats.decode_calls += 1;
@@ -379,10 +396,13 @@ impl<E: SlotEngine> Scheduler<E> {
 
     /// Drive the loop until queue and slots drain; returns all completions
     /// in retirement order.
-    pub fn run_until_idle(&mut self, sampler: &mut Sampler) -> Result<Vec<Completion>> {
+    pub fn run_until_idle(
+        &mut self,
+        backend: &mut dyn SamplingBackend,
+    ) -> Result<Vec<Completion>> {
         let mut all = Vec::new();
         while !self.is_idle() {
-            all.extend(self.step(sampler)?);
+            all.extend(self.step(backend)?);
         }
         Ok(all)
     }
@@ -391,7 +411,7 @@ impl<E: SlotEngine> Scheduler<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sampling::SamplerConfig;
+    use crate::sampling::{DeviceTopK, HostFullRow, SamplerConfig};
 
     const VOCAB: usize = 32;
     const SP: usize = 4;
@@ -400,7 +420,10 @@ mod tests {
 
     /// Scripted slot engine: a request's `prompt[0]` encodes how many
     /// content tokens it emits before EOS (`>= SG` means "never EOS"), so
-    /// a greedy sampler replays the plan deterministically.
+    /// a greedy sampler replays the plan deterministically. Honors every
+    /// traffic class — full logits rows, device-argmax ids, or top-k
+    /// candidate rows — so the scheduler × backend pairings are testable
+    /// without artifacts.
     struct MockEngine {
         n_slots: usize,
         /// Per slot: (planned generated tokens, cursor of the next logits).
@@ -409,6 +432,8 @@ mod tests {
         released: Vec<usize>,
         /// Active-mask of every decode call (for utilization assertions).
         decode_active: Vec<Vec<bool>>,
+        /// Traffic class of every decode call (artifact-family assertions).
+        decode_traffic: Vec<TrafficClass>,
     }
 
     impl MockEngine {
@@ -419,6 +444,7 @@ mod tests {
                 prefill_log: Vec::new(),
                 released: Vec::new(),
                 decode_active: Vec::new(),
+                decode_traffic: Vec::new(),
             }
         }
 
@@ -427,15 +453,25 @@ mod tests {
             row[tok as usize] = 1.0;
             row
         }
+
+        /// The scripted next token as one pending row of class `traffic`.
+        fn row_for(&self, tok: i32, traffic: TrafficClass) -> PendingRow {
+            match traffic {
+                TrafficClass::FullRow => PendingRow::Logits(self.logits_for(tok)),
+                TrafficClass::DeviceIds => PendingRow::Id(tok),
+                TrafficClass::DeviceTopK => {
+                    // Two candidates, scripted token dominant and sorted
+                    // first (the device tail's descending order).
+                    let other = (tok + 1) % VOCAB as i32;
+                    PendingRow::TopK { vals: vec![10.0, -10.0], ids: vec![tok, other] }
+                }
+            }
+        }
     }
 
     impl SlotEngine for MockEngine {
         fn n_slots(&self) -> usize {
             self.n_slots
-        }
-
-        fn vocab(&self) -> usize {
-            VOCAB
         }
 
         fn prompt_len(&self) -> usize {
@@ -446,17 +482,22 @@ mod tests {
             SG
         }
 
-        fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Vec<f32>> {
+        fn prefill_slot(
+            &mut self,
+            slot: usize,
+            prompt: &[i32],
+            traffic: TrafficClass,
+        ) -> Result<PendingRow> {
             assert_eq!(prompt.len(), SP);
             assert!(self.plans[slot].is_none(), "prefill into busy slot {slot}");
             let n = prompt[0] as usize;
             let plan: Vec<i32> = (0..SG + 2)
                 .map(|j| if j < n { CONTENT } else { Vocab::EOS })
                 .collect();
-            let logits = self.logits_for(plan[0]);
+            let row = self.row_for(plan[0], traffic);
             self.plans[slot] = Some((plan, 1));
             self.prefill_log.push(slot);
-            Ok(logits)
+            Ok(row)
         }
 
         fn decode_slots(
@@ -464,27 +505,43 @@ mod tests {
             toks: &[i32],
             pos: &[i32],
             active: &[bool],
-            out: &mut Vec<f32>,
-        ) -> Result<()> {
+            traffic: TrafficClass,
+        ) -> Result<SampleOut> {
             assert_eq!(toks.len(), self.n_slots);
             assert_eq!(pos.len(), self.n_slots);
             self.decode_active.push(active.to_vec());
-            out.clear();
-            out.resize(self.n_slots * VOCAB, 0.0);
+            self.decode_traffic.push(traffic);
+            let mut next = vec![0i32; self.n_slots];
             for slot in 0..self.n_slots {
                 if !active[slot] {
                     continue;
                 }
-                let tok = {
-                    let (plan, cur) = self.plans[slot].as_mut().expect("active free slot");
-                    let t = plan[*cur];
-                    *cur += 1;
-                    t
-                };
-                let row = self.logits_for(tok);
-                out[slot * VOCAB..(slot + 1) * VOCAB].copy_from_slice(&row);
+                let (plan, cur) = self.plans[slot].as_mut().expect("active free slot");
+                next[slot] = plan[*cur];
+                *cur += 1;
             }
-            Ok(())
+            Ok(match traffic {
+                TrafficClass::FullRow => {
+                    let mut data = vec![0.0f32; self.n_slots * VOCAB];
+                    for slot in 0..self.n_slots {
+                        if active[slot] {
+                            let row = self.logits_for(next[slot]);
+                            data[slot * VOCAB..(slot + 1) * VOCAB].copy_from_slice(&row);
+                        }
+                    }
+                    SampleOut::Logits { data, vocab: VOCAB }
+                }
+                TrafficClass::DeviceIds => SampleOut::Ids(next),
+                TrafficClass::DeviceTopK => {
+                    let mut vals = Vec::with_capacity(self.n_slots * 2);
+                    let mut ids = Vec::with_capacity(self.n_slots * 2);
+                    for &t in &next {
+                        vals.extend_from_slice(&[10.0, -10.0]);
+                        ids.extend_from_slice(&[t, (t + 1) % VOCAB as i32]);
+                    }
+                    SampleOut::TopK { vals, ids, k: 2 }
+                }
+            })
         }
 
         fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -495,8 +552,13 @@ mod tests {
         }
     }
 
-    fn greedy() -> Sampler {
-        Sampler::new(SamplerConfig { greedy: true, ..Default::default() }, 0)
+    fn greedy() -> HostFullRow {
+        HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0)
+    }
+
+    fn device_greedy() -> DeviceTopK {
+        DeviceTopK::new(SamplerConfig { greedy: true, ..Default::default() }, 0, 2, VOCAB)
+            .unwrap()
     }
 
     /// `prompt[0]` = content tokens the scripted engine emits before EOS.
@@ -604,5 +666,52 @@ mod tests {
             .unwrap_err();
         assert!(format!("{err:#}").contains("prompt must be"));
         assert!(sched.is_idle());
+    }
+
+    /// Run one scripted trace to idle under a backend; returns completions
+    /// sorted by id plus the engine for traffic-class assertions.
+    fn run_trace(backend: &mut dyn SamplingBackend) -> (Vec<Completion>, MockEngine) {
+        let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+        sched.submit(req(0, 2, SG)).unwrap();
+        sched.submit(req(1, 100, 5)).unwrap();
+        sched.submit(req(2, 3, SG)).unwrap();
+        let mut all = sched.run_until_idle(backend).unwrap();
+        all.sort_by_key(|c| c.id);
+        (all, sched.engine)
+    }
+
+    #[test]
+    fn device_ids_traffic_reproduces_host_schedule() {
+        // The same scripted trace through the host full-row backend and
+        // the device-greedy backend must retire identical sequences — the
+        // scheduler's policy is traffic-class-invariant, only the bytes
+        // moved differ (the O(b)-per-tick device-sampling contract).
+        let (host, host_eng) = run_trace(&mut greedy());
+        let (dev, dev_eng) = run_trace(&mut device_greedy());
+        assert_eq!(host.len(), dev.len());
+        for (h, d) in host.iter().zip(&dev) {
+            assert_eq!(h.id, d.id);
+            assert_eq!(h.tokens, d.tokens, "req {}", h.id);
+            assert_eq!(h.finish, d.finish);
+            assert_eq!(h.slot, d.slot);
+        }
+        assert!(host_eng.decode_traffic.iter().all(|t| *t == TrafficClass::FullRow));
+        assert!(dev_eng.decode_traffic.iter().all(|t| *t == TrafficClass::DeviceIds));
+    }
+
+    #[test]
+    fn device_topk_traffic_drives_stochastic_backend() {
+        // A stochastic DeviceTopK backend over the scripted candidate rows
+        // (dominant first candidate) follows the same plan: the scheduler
+        // retires on the host-drawn ids, never sees a logits row.
+        let cfg = SamplerConfig { temperature: 0.7, top_p: 0.9, ..Default::default() };
+        let mut backend = DeviceTopK::new(cfg, 11, 2, VOCAB).unwrap();
+        let (done, eng) = run_trace(&mut backend);
+        let (host, _) = run_trace(&mut greedy());
+        assert_eq!(done.len(), host.len());
+        for (d, h) in done.iter().zip(&host) {
+            assert_eq!(d.tokens, h.tokens, "req {} (dominant candidate)", d.id);
+        }
+        assert!(eng.decode_traffic.iter().all(|t| *t == TrafficClass::DeviceTopK));
     }
 }

@@ -11,7 +11,7 @@ use dschat::data::{Blend, DataSplit};
 use dschat::hybrid::{EngineMode, HybridEngine};
 use dschat::pipeline;
 use dschat::runtime::Engine;
-use dschat::sampling::{Sampler, SamplerConfig};
+use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig};
 use dschat::util::rng::Rng;
 
 const DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny");
@@ -36,7 +36,7 @@ fn generation_respects_shapes_and_prompts() {
     for (_, p) in &prompts {
         flat.extend_from_slice(&p.tokens);
     }
-    let mut sampler = Sampler::new(SamplerConfig::default(), 0);
+    let mut sampler = HostFullRow::new(SamplerConfig::default(), 0);
     let seqs = he.generate(&flat, &mut sampler).unwrap();
     assert_eq!(seqs.len(), b * s);
     // Prompt region must be copied verbatim.
@@ -58,7 +58,7 @@ fn mode_flip_releases_kv_cache() {
     for (_, p) in &prompts {
         flat.extend_from_slice(&p.tokens);
     }
-    let mut sampler = Sampler::new(SamplerConfig::default(), 0);
+    let mut sampler = HostFullRow::new(SamplerConfig::default(), 0);
     he.generate(&flat, &mut sampler).unwrap();
     let kv_live = he.memory.live_named("kv_cache");
     assert!(kv_live > 0);
@@ -144,7 +144,7 @@ fn kv_accounting_balanced_across_generate_train_cycles() {
     for (_, p) in &prompts {
         flat.extend_from_slice(&p.tokens);
     }
-    let mut sampler = Sampler::new(SamplerConfig::default(), 0);
+    let mut sampler = HostFullRow::new(SamplerConfig::default(), 0);
     let baseline = he.memory.live_bytes();
 
     he.generate(&flat, &mut sampler).unwrap();
@@ -185,13 +185,98 @@ fn generate_is_bit_identical_for_fixed_seed() {
     for (_, p) in &prompts {
         flat.extend_from_slice(&p.tokens);
     }
-    let first = he.generate(&flat, &mut Sampler::new(cfg.clone(), 7)).unwrap();
-    let again = he.generate(&flat, &mut Sampler::new(cfg.clone(), 7)).unwrap();
+    let first = he.generate(&flat, &mut HostFullRow::new(cfg.clone(), 7)).unwrap();
+    let again = he.generate(&flat, &mut HostFullRow::new(cfg.clone(), 7)).unwrap();
     assert_eq!(first, again, "same engine, same seed must be bit-identical");
 
     let (mut he2, _) = setup(false);
-    let fresh = he2.generate(&flat, &mut Sampler::new(cfg, 7)).unwrap();
+    let fresh = he2.generate(&flat, &mut HostFullRow::new(cfg, 7)).unwrap();
     assert_eq!(first, fresh, "fresh engine, same seed must be bit-identical");
+}
+
+#[test]
+fn device_greedy_generation_matches_host_argmax_golden() {
+    // The device-sampling extension of the PR 1 golden: greedy generation
+    // through the `_sampled` artifacts (argmax on device, [b] ids fetched
+    // per step) must be bit-identical to the host full-row argmax path
+    // (both tie-break toward the lower token id). Vacuous when the
+    // artifact set predates device-side sampling.
+    let (mut he, mut blend) = setup(false);
+    if !he.manifest().artifacts.contains_key("decode_step_sampled") {
+        eprintln!("skipping: artifacts predate device-side sampling (run `make artifacts`)");
+        return;
+    }
+    let b = he.manifest().batch;
+    let mut rng = Rng::new(31);
+    let prompts = blend.prompt_batch(&mut rng, b);
+    let mut flat = Vec::new();
+    for (_, p) in &prompts {
+        flat.extend_from_slice(&p.tokens);
+    }
+    let greedy = SamplerConfig { greedy: true, ..Default::default() };
+    let host = he.generate(&flat, &mut HostFullRow::new(greedy.clone(), 0)).unwrap();
+    let mut device = DeviceTopK::for_manifest(greedy.clone(), 0, he.manifest()).unwrap();
+    let dev = he.generate(&flat, &mut device).unwrap();
+    assert_eq!(host, dev, "device argmax must reproduce host argmax bit-exactly");
+    // And on a fresh engine (no shared-cache coupling).
+    let (mut he2, _) = setup(false);
+    let mut device2 = DeviceTopK::for_manifest(greedy, 0, he2.manifest()).unwrap();
+    let fresh = he2.generate(&flat, &mut device2).unwrap();
+    assert_eq!(host, fresh);
+}
+
+#[test]
+fn staged_ppo_epochs_match_unstaged_and_cut_uploads() {
+    // Satellite contract: staging the experience batch once per PPO batch
+    // must (a) be numerically identical to re-uploading per epoch and
+    // (b) strictly shrink the bytes-uploaded counter for multi-epoch runs.
+    let (mut he, _) = setup(false);
+    let m = he.manifest();
+    let (b, s) = (m.batch, m.seq_len);
+    let w = b * (s - 1);
+    let mut tokens = vec![0i32; b * s];
+    for (i, t) in tokens.iter_mut().enumerate() {
+        *t = ((i * 11 + 2) % m.actor.vocab) as i32;
+    }
+    let old_logp = vec![-1.0f32; w];
+    let adv = vec![0.1f32; w];
+    let returns = vec![0.2f32; w];
+    let old_values = vec![0.15f32; w];
+    let mask = vec![1.0f32; w];
+
+    // Unstaged epoch pair on one engine...
+    he.engine.reset_stats();
+    let mut legacy = Vec::new();
+    for _ in 0..2 {
+        let out = he
+            .ppo_actor_step(&tokens, &old_logp, &adv, &mask, &tokens, 0.2, 0.0, 1e-4)
+            .unwrap();
+        let closs = he
+            .ppo_critic_step(&tokens, &returns, &old_values, &mask, 0.2, 5e-4)
+            .unwrap();
+        legacy.push((out.loss, out.approx_kl, out.clipfrac, closs));
+    }
+    let (legacy_up, _) = he.engine.bytes_moved();
+
+    // ...staged epoch pair on a fresh engine (identical initial state).
+    let (mut he2, _) = setup(false);
+    he2.engine.reset_stats();
+    let staged = he2
+        .stage_experience(&tokens, &old_logp, &adv, &returns, &old_values, &mask)
+        .unwrap();
+    let mut staged_out = Vec::new();
+    for _ in 0..2 {
+        let out = he2.ppo_actor_step_staged(&staged, &tokens, 0.2, 0.0, 1e-4).unwrap();
+        let closs = he2.ppo_critic_step_staged(&staged, 0.2, 5e-4).unwrap();
+        staged_out.push((out.loss, out.approx_kl, out.clipfrac, closs));
+    }
+    let (staged_up, _) = he2.engine.bytes_moved();
+
+    assert_eq!(legacy, staged_out, "staging must not change the math");
+    assert!(
+        staged_up < legacy_up,
+        "staged epochs must upload fewer bytes: {staged_up} vs {legacy_up}"
+    );
 }
 
 #[test]

@@ -25,12 +25,21 @@ echo "== verify: tier-1 tests =="
 cargo test -q
 
 if [ -f artifacts/tiny/manifest.json ]; then
-    echo "== verify: decode bench (smoke) =="
+    echo "== verify: decode bench (smoke; per-backend host bytes/token) =="
     cargo bench --bench runtime_e2e -- --smoke
     echo "verify: wrote BENCH_decode.json"
+    if grep -q '"decode_step_sampled"' artifacts/tiny/manifest.json; then
+        echo "verify: device-sampling artifacts present — decode bench covered host + device backends"
+    else
+        echo "verify: artifacts predate device-side sampling — decode bench covered host backend only (re-run \`make artifacts\`)"
+    fi
     if grep -q '"prefill_slot"' artifacts/tiny/manifest.json; then
         echo "== verify: serve demo (continuous batching smoke) =="
         cargo run --release --example serve -- --demo
+        if grep -q '"decode_slots_sampled"' artifacts/tiny/manifest.json; then
+            echo "== verify: serve demo (device sampling tail) =="
+            cargo run --release --example serve -- --demo --backend device
+        fi
         echo "== verify: serve bench (smoke) =="
         cargo bench --bench serve_loop -- --smoke
         echo "verify: wrote BENCH_serve.json"
