@@ -6,9 +6,14 @@
 //!  2. Device-resident params (`execute_b`) vs host literals per call.
 //!  3. EMA on/off and mixture training on/off (the paper's two Step-3
 //!     quality features) on the synthetic task.
+//!  5. Experience-rollout discipline: fixed lockstep batches vs the
+//!     continuous-batching scheduler rollout (`dschat::rollout`) on a
+//!     heterogeneous-budget prompt queue — tok/s and slot-bubble fraction
+//!     (`--rollout fixed|continuous|both` selects which paths run).
 //!
 //! ```text
-//! cargo run --release --example ablations -- [--run tiny] [--quality]
+//! cargo run --release --example ablations -- [--run tiny] [--quality] \
+//!     [--rollout fixed|continuous|both]
 //! ```
 
 use std::rc::Rc;
@@ -35,11 +40,80 @@ fn main() -> anyhow::Result<()> {
     ablation_generation(&dir)?;
     ablation_buffers(&dir)?;
     ablation_tp_vs_zero_generation();
+    ablation_rollout(&dir, &args.str("rollout", "both"))?;
     if args.bool("quality", false) {
         ablation_quality(&dir)?;
     } else {
         println!("(run with --quality for the EMA / mixture-training ablation — slower)");
     }
+    Ok(())
+}
+
+/// Ablation 5: experience-rollout discipline on a heterogeneous workload —
+/// the fixed-batch `generate` loop (every slot held until the slowest row
+/// finishes, budgets only honored by truncation) vs the continuous-batching
+/// scheduler rollout (EOS/budget-retired slots admit the next prompt
+/// immediately). Reports useful tokens/sec and the slot-bubble fraction
+/// each discipline pays, through the same accounting the `runtime_e2e`
+/// rollout bench uses (`dschat::examples_support`). `which` = `fixed` |
+/// `continuous` | `both`.
+fn ablation_rollout(dir: &str, which: &str) -> anyhow::Result<()> {
+    use dschat::examples_support::{rollout_continuous, rollout_fixed_baseline};
+
+    if !matches!(which, "fixed" | "continuous" | "both") {
+        anyhow::bail!("unknown --rollout {which:?} (fixed|continuous|both)");
+    }
+    let engine = Rc::new(Engine::cpu()?);
+    let mut he = HybridEngine::init(engine, dir, 0, false)?;
+    let m = he.manifest();
+    if !m.has_serving() {
+        println!(
+            "(artifacts predate continuous batching — rollout ablation skipped; \
+             re-run `make artifacts`)"
+        );
+        return Ok(());
+    }
+    let (b, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut rng = Rng::new(19);
+    let n = 4 * b;
+    let prompts: Vec<Vec<i32>> = (0..n).map(|_| task.sample_prompt(&mut rng).tokens).collect();
+    // Heterogeneous per-request budgets: the straggler variance that makes
+    // lockstep batching pay for its barrier.
+    let budgets: Vec<usize> =
+        (0..n).map(|_| rng.range((sg / 4).max(1) as i64, sg as i64 + 1) as usize).collect();
+    let greedy = || HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+
+    let mut t = Table::new(
+        "Ablation 5 — experience-rollout discipline (real, CPU PJRT)",
+        &["Path", "secs", "useful tok/s", "slot bubble"],
+    );
+
+    if which != "continuous" {
+        let mut sampler = greedy();
+        he.generate(&prompts[..b].concat(), &mut sampler)?; // warmup
+        let fixed = rollout_fixed_baseline(&mut he, &prompts, &budgets, &mut sampler)?;
+        t.row(vec![
+            "fixed batch (lockstep generate)".into(),
+            format!("{:.3}", fixed.secs),
+            format!("{:.1}", fixed.tok_per_sec()),
+            format!("{:.0}%", 100.0 * fixed.bubble),
+        ]);
+    }
+
+    if which != "fixed" {
+        let mut sampler = greedy();
+        // Warm the per-slot artifacts before timing.
+        rollout_continuous(&mut he, &prompts[..b], &budgets[..b], 0, &mut sampler)?;
+        let cont = rollout_continuous(&mut he, &prompts, &budgets, 0, &mut sampler)?;
+        t.row(vec![
+            "continuous (scheduler rollout)".into(),
+            format!("{:.3}", cont.secs),
+            format!("{:.1}", cont.tok_per_sec()),
+            format!("{:.0}%", 100.0 * cont.bubble),
+        ]);
+    }
+    t.print();
     Ok(())
 }
 

@@ -5,8 +5,17 @@
 //!
 //! ```text
 //! make artifacts && cargo run --release --example e2e_rlhf -- \
-//!     [--run small] [--sft-steps 800] [--rm-steps 400] [--ppo-iters 200]
+//!     [--run small] [--sft-steps 800] [--rm-steps 400] [--ppo-iters 200] \
+//!     [--rollout fixed|continuous] [--rollout-batch N]
 //! ```
+//!
+//! `--rollout continuous` streams Step-3 experience generation through the
+//! continuous-batching scheduler (`dschat::rollout`): `--rollout-batch N`
+//! prompts per PPO iteration (default 2x the artifact batch, must be a
+//! multiple of it) share the KV slots, EOS-retired rows admit the next
+//! prompt immediately, and each group of `b` completions trains as its own
+//! PPO batch. `--rollout fixed` (default) keeps the lockstep
+//! `HybridEngine::generate` path with exactly `b` prompts.
 //!
 //! Recorded in EXPERIMENTS.md (§Real end-to-end run).
 
@@ -57,6 +66,35 @@ fn main() -> anyhow::Result<()> {
     let mut blend =
         Blend::new(vec![(all_modes, 3.0), (counting, 1.0)], DataSplit::new(2.0, 4.0, 4.0));
 
+    // Experience-generation path: fixed lockstep batches, or the prompt
+    // queue streamed through the continuous-batching scheduler.
+    let rollout_batch = match args.str("rollout", "fixed").as_str() {
+        "fixed" => {
+            anyhow::ensure!(
+                args.get("rollout-batch").is_none(),
+                "--rollout-batch only applies to --rollout continuous (the fixed path \
+                 always generates exactly the artifact batch)"
+            );
+            0
+        }
+        "continuous" => {
+            let n = args.usize("rollout-batch", 2 * batch);
+            anyhow::ensure!(
+                n > 0 && n % batch == 0,
+                "--rollout-batch must be a positive multiple of the artifact batch {batch}, got {n}"
+            );
+            n
+        }
+        other => anyhow::bail!("unknown --rollout {other:?} (fixed|continuous)"),
+    };
+    if rollout_batch > 0 {
+        println!(
+            "rollout: continuous ({} prompts/iter through the slot scheduler, {} PPO batches)",
+            rollout_batch,
+            rollout_batch / batch
+        );
+    }
+
     let recipe = TrainRecipe {
         run: run.clone(),
         seed: args.usize("seed", 0) as u64,
@@ -71,6 +109,7 @@ fn main() -> anyhow::Result<()> {
             ptx_coef: args.f64("ptx-coef", 0.2) as f32,
             kl_coef: args.f64("kl-coef", 0.05) as f32,
             ppo_epochs: 1,
+            rollout_batch,
             ..Default::default()
         },
         ..Default::default()
@@ -138,6 +177,15 @@ fn main() -> anyhow::Result<()> {
         he.stats.train_tok_per_sec(),
         he.stats.mode_flips
     );
+    if rollout_batch > 0 {
+        let mean_bubble: f64 = report.ppo_history.iter().map(|s| s.rollout_bubble).sum::<f64>()
+            / report.ppo_history.len().max(1) as f64;
+        println!(
+            "rollout            : {} prompts/iter via scheduler, mean slot-bubble {:.1}%",
+            rollout_batch,
+            100.0 * mean_bubble
+        );
+    }
     println!(
         "memory (tracked)   : live {} peak {}",
         dschat::util::fmt_bytes(he.memory.live_bytes() as f64),

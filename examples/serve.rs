@@ -32,8 +32,10 @@
 //! `[b, vocab]` logits matrix), `host` is the full-row path, and `auto`
 //! (default) uses the device tail whenever the artifact set has it.
 //!
-//! Per-request latency, queue depth, live-slot count, and host bytes/token
-//! (from the engine's byte ledger) are logged to stderr at completion.
+//! Per-request latency, queue depth, live-slot count, slot utilization /
+//! bubble fraction (the scheduler's occupancy counters — the same
+//! instrumentation the rollout bench tracks), and host bytes/token (from
+//! the engine's byte ledger) are logged to stderr at completion.
 //!
 //! ```text
 //! cargo run --release --example serve -- [--run tiny] [--ckpt runs/tiny/actor.bin] \
@@ -109,7 +111,7 @@ fn enqueue(
     };
     let id = *next_id;
     *next_id += 1;
-    let req = Request { id, prompt: prompt.tokens.clone(), max_new };
+    let req = Request { id, prompt: prompt.tokens.clone(), max_new, seed: None };
     match sched.submit(req) {
         Ok(()) => {
             pending.insert(id, Pending { prompt, reply: rl.reply, arrived: Instant::now() });
@@ -169,7 +171,12 @@ fn main() -> anyhow::Result<()> {
         let mut prompts: HashMap<u64, Prompt> = HashMap::new();
         for (i, line) in demo.iter().enumerate() {
             let prompt = parse_request(&task, line).expect("demo lines parse");
-            sched.submit(Request { id: i as u64, prompt: prompt.tokens.clone(), max_new: sg })?;
+            sched.submit(Request {
+                id: i as u64,
+                prompt: prompt.tokens.clone(),
+                max_new: sg,
+                seed: None,
+            })?;
             prompts.insert(i as u64, prompt);
         }
         let mut done = sched.run_until_idle(sampler.as_mut())?;
@@ -192,12 +199,15 @@ fn main() -> anyhow::Result<()> {
         let toks = (sched.engine.stats.gen_tokens - tok0).max(1);
         let (up, down) = sched.engine.engine.bytes_moved();
         eprintln!(
-            "[demo] {} reqs in {} steps ({} decode calls, slot utilization {:.0}%), \
-             host/tok: {} down {} up",
+            "[demo] {} reqs in {} steps ({} decode calls, slot utilization {:.0}% / \
+             bubble {:.0}%, {} eos + {} length retirements), host/tok: {} down {} up",
             st.completed,
             st.steps,
             st.decode_calls,
             100.0 * st.utilization(),
+            100.0 * st.bubble_fraction(),
+            st.retired_eos,
+            st.retired_length,
             fmt_bytes((down - down0) as f64 / toks as f64),
             fmt_bytes((up - up0) as f64 / toks as f64),
         );
@@ -289,7 +299,7 @@ fn main() -> anyhow::Result<()> {
                 .send(format!("{}  [ground-truth {:.2}]", task.detokenize(resp), score));
             eprintln!(
                 "[req {}] {:.0}ms  {} tok ({:?})  slot {}  waited {} steps  \
-                 queue {}  active {}  host/tok: {} down {} up",
+                 queue {}  active {}  util {:.0}% bubble {:.0}%  host/tok: {} down {} up",
                 c.id,
                 p.arrived.elapsed().as_secs_f64() * 1e3,
                 c.generated,
@@ -298,6 +308,8 @@ fn main() -> anyhow::Result<()> {
                 c.queued_steps,
                 sched.queue_depth(),
                 sched.n_active(),
+                100.0 * sched.stats.utilization(),
+                100.0 * sched.stats.bubble_fraction(),
                 fmt_bytes((down - down0) as f64 / toks as f64),
                 fmt_bytes((up - up0) as f64 / toks as f64),
             );

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use dschat::data::synthetic::TaskGen;
 use dschat::data::{Blend, DataSplit};
-use dschat::examples_support::naive_generate;
+use dschat::examples_support::{naive_generate, rollout_continuous, rollout_fixed_baseline};
 use dschat::hybrid::{HybridEngine, KvCache};
 use dschat::runtime::Engine;
 use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
@@ -311,5 +311,89 @@ fn main() -> anyhow::Result<()> {
     );
     std::fs::write("BENCH_decode.json", &json)?;
     println!("wrote BENCH_decode.json");
+
+    // ------------------------------------------------------------------
+    // rollout: RLHF experience generation disciplines — the fixed-batch
+    // lockstep loop vs the continuous-batching scheduler rollout
+    // (`dschat::rollout`) over the same heterogeneous-budget prompt
+    // queue. Budgets in [gen_len/4, gen_len] model early-EOS/straggler
+    // variance; the lockstep loop cannot honor them (every slot is held
+    // until the chunk's slowest row finishes, results truncated), which
+    // is exactly the slot-bubble cost being measured. Emits
+    // BENCH_rollout.json (tok/s + bubble fraction per discipline).
+    // Skipped when artifacts predate serving.
+    // ------------------------------------------------------------------
+    if !he.manifest().has_serving() {
+        println!("(artifacts predate continuous batching — rollout phase skipped; re-run `make artifacts`)");
+        return Ok(());
+    }
+    let n_roll = if smoke { 2 * bsz } else { 6 * bsz };
+    let mut rr = Rng::new(23);
+    let roll_prompts: Vec<Vec<i32>> =
+        (0..n_roll).map(|_| task.sample_prompt(&mut rr).tokens).collect();
+    let budgets: Vec<usize> = (0..n_roll)
+        .map(|_| rr.range((sg / 4).max(1) as i64, sg as i64 + 1) as usize)
+        .collect();
+    println!(
+        "\n-- rollout ({n_roll} prompts, budgets {}..={} of gen_len {sg}) --",
+        budgets.iter().min().unwrap(),
+        budgets.iter().max().unwrap()
+    );
+
+    // Fixed-batch baseline vs continuous scheduler, both through the
+    // shared accounting in examples_support (capacity counts the steps
+    // generate actually ran; ablations uses the same helpers).
+    let mut sampler = HostFullRow::new(greedy(), 0);
+    he.generate(&roll_prompts[..bsz].concat(), &mut sampler)?; // warmup
+    let fixed = rollout_fixed_baseline(&mut he, &roll_prompts, &budgets, &mut sampler)?;
+    println!(
+        "fixed_batch              {:>10.1} tokens/s  |  slot bubble {:.1}%  ({} useful tok, {:.3}s)",
+        fixed.tok_per_sec(),
+        100.0 * fixed.bubble,
+        fixed.useful_tokens,
+        fixed.secs,
+    );
+
+    let mut sampler = HostFullRow::new(greedy(), 0);
+    rollout_continuous(&mut he, &roll_prompts[..bsz], &budgets[..bsz], 0, &mut sampler)?; // warmup
+    let cont = rollout_continuous(&mut he, &roll_prompts, &budgets, 0, &mut sampler)?;
+    let sch = cont.sched.as_ref().expect("continuous phase carries scheduler stats");
+    println!(
+        "continuous_scheduler     {:>10.1} tokens/s  |  slot bubble {:.1}%  ({} useful tok, {:.3}s, {} decode calls, {} prefills)",
+        cont.tok_per_sec(),
+        100.0 * cont.bubble,
+        cont.useful_tokens,
+        cont.secs,
+        sch.decode_calls,
+        sch.prefills,
+    );
+
+    let rollout_json = format!(
+        "{{\n  \"bench\": \"rollout\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
+         \"n_prompts\": {n_roll},\n  \"group\": {bsz},\n  \"gen_len\": {sg},\n  \
+         \"fixed\": {{\n    \"tok_per_sec\": {:.3},\n    \"useful_tokens\": {},\n    \
+         \"secs\": {:.6},\n    \"slot_bubble_fraction\": {:.4}\n  }},\n  \
+         \"continuous\": {{\n    \"tok_per_sec\": {:.3},\n    \"useful_tokens\": {},\n    \
+         \"secs\": {:.6},\n    \"slot_bubble_fraction\": {:.4},\n    \
+         \"decode_calls\": {},\n    \"prefills\": {},\n    \"retired_eos\": {},\n    \
+         \"retired_length\": {}\n  }},\n  \
+         \"speedup_tok_per_sec\": {:.3},\n  \"bubble_reduction\": {:.4}\n}}\n",
+        fixed.tok_per_sec(),
+        fixed.useful_tokens,
+        fixed.secs,
+        fixed.bubble,
+        cont.tok_per_sec(),
+        cont.useful_tokens,
+        cont.secs,
+        cont.bubble,
+        sch.decode_calls,
+        sch.prefills,
+        sch.retired_eos,
+        sch.retired_length,
+        cont.tok_per_sec() / fixed.tok_per_sec().max(1e-9),
+        fixed.bubble - cont.bubble,
+    );
+    std::fs::write("BENCH_rollout.json", &rollout_json)?;
+    println!("wrote BENCH_rollout.json");
     Ok(())
 }

@@ -190,6 +190,7 @@ fn run_continuous(
                 id: next as u64,
                 prompt: prompts[next].tokens.clone(),
                 max_new: budgets[next],
+                seed: None,
             })?;
             next += 1;
         }

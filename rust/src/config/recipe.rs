@@ -34,6 +34,13 @@ pub struct PpoConfig {
     pub top_k: usize,
     /// Top-p during experience generation (1.0 = disabled).
     pub top_p: f32,
+    /// Prompts rolled out per PPO iteration through the continuous-batching
+    /// scheduler (`crate::rollout`): must be a positive multiple of the
+    /// artifact batch `b`; EOS-retired slots admit the next prompt, and the
+    /// experience buffer flushes one scored training batch per `b`
+    /// completions. `0` (default) selects the legacy fixed-batch
+    /// `generate` path with exactly `b` prompts.
+    pub rollout_batch: usize,
 }
 
 impl Default for PpoConfig {
@@ -52,6 +59,7 @@ impl Default for PpoConfig {
             temperature: 1.0,
             top_k: 0,
             top_p: 1.0,
+            rollout_batch: 0,
         }
     }
 }

@@ -3,22 +3,41 @@
 //! on top of the hybrid engine.
 //!
 //! Each iteration:
-//!   1. **Experience** (inference mode): sample prompts, generate responses,
-//!      score them with the frozen RM, collect old/ref log-probs + values.
+//!   1. **Experience** (inference mode): sample prompts, generate
+//!      responses, score them with the frozen RM, collect old/ref
+//!      log-probs + values. Two paths share the scoring/shaping tail:
+//!      * **fixed-batch** (`rollout_batch == 0`): exactly `b` prompts
+//!        through `HybridEngine::generate` in lockstep — every slot decodes
+//!        until the slowest row finishes; the pre-rollout behavior, kept as
+//!        the golden baseline.
+//!      * **scheduler rollout** (`rollout_batch = k·b`): the prompt queue
+//!        oversubscribes the continuous-batching `serving::Scheduler` via
+//!        [`crate::rollout::RolloutEngine`] — EOS-retired rows free their
+//!        KV slot for the next prompt at the following step boundary, and
+//!        the `ExperienceBuffer` flushes one scored [`Experience`] per `b`
+//!        completions (scoring overlaps the remaining sequences'
+//!        generation; training runs after the rollout drains, so the
+//!        serving cache is never flipped away mid-flight). Each request
+//!        samples from its own derived RNG stream, so the rollout is
+//!        reproducible despite admission-order nondeterminism.
 //!   2. **Shaping** (rust): KL-penalized per-token rewards, GAE advantages
 //!      and returns, optional whitening.
-//!   3. **Training** (train mode): `ppo_epochs` of clipped actor + critic
-//!      updates, optional mixture (ptx) loss, optional EMA collection.
+//!   3. **Training** (train mode): per flushed experience batch,
+//!      `ppo_epochs` of clipped actor + critic updates over the staged
+//!      (upload-once) tensors, optional mixture (ptx) loss, optional EMA
+//!      collection.
 
 pub mod gae;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::PpoConfig;
 use crate::data::synthetic::{TaskGen, Vocab};
 use crate::data::{Blend, Prompt};
-use crate::hybrid::HybridEngine;
+use crate::hybrid::{ExperienceScores, HybridEngine};
+use crate::rollout::{flatten_group, round_seed, RolloutEngine};
 use crate::sampling::{HostFullRow, SamplerConfig, SamplingBackend};
+use crate::serving::SchedStats;
 use crate::util::rng::Rng;
 
 /// One experience batch, fully scored and shaped.
@@ -36,7 +55,9 @@ pub struct Experience {
     pub resp_lens: Vec<usize>,  // [b]
 }
 
-/// Scalars logged per PPO iteration.
+/// Scalars logged per PPO iteration. With a multi-group rollout
+/// (`rollout_batch > b`) the reward/loss scalars are means across the
+/// iteration's flushed experience batches.
 #[derive(Debug, Clone, Default)]
 pub struct IterStats {
     pub rm_score: f32,
@@ -49,6 +70,11 @@ pub struct IterStats {
     pub gen_secs: f64,
     pub train_secs: f64,
     pub gen_tokens: u64,
+    /// Fraction of decode slot capacity burned on dead rows during the
+    /// rollout (0.0 on the fixed-batch path, which has no such ledger).
+    pub rollout_bubble: f64,
+    /// Experience batches trained this iteration (1 on the fixed path).
+    pub rollout_groups: usize,
 }
 
 pub struct PpoTrainer {
@@ -58,7 +84,15 @@ pub struct PpoTrainer {
     /// [`PpoTrainer::with_backend`] swaps in e.g. `DeviceTopK` to cut the
     /// generation phase's per-step host traffic to O(b·k).
     pub sampler: Box<dyn SamplingBackend>,
-    /// Completed iterations (drives the EMA interval).
+    /// Training-level seed of the scheduler rollout's RNG streams: round
+    /// `r`'s base is `rollout::round_seed(rollout_seed, r)` and each
+    /// request's stream is `rollout::request_seed(base, id)` — so
+    /// iterations never replay each other's draws, while a fixed
+    /// `(rollout_seed, round, id)` triple stays replayable.
+    pub rollout_seed: u64,
+    /// Rollout rounds completed (drives the per-round seed derivation).
+    rollouts_done: u64,
+    /// Completed training calls (drives the EMA interval).
     iters_done: usize,
 }
 
@@ -73,12 +107,19 @@ impl PpoTrainer {
             },
             seed,
         );
-        PpoTrainer { cfg, sampler: Box::new(sampler), iters_done: 0 }
+        PpoTrainer {
+            cfg,
+            sampler: Box::new(sampler),
+            rollout_seed: seed,
+            rollouts_done: 0,
+            iters_done: 0,
+        }
     }
 
-    /// Build a trainer around an explicit sampling backend.
-    pub fn with_backend(cfg: PpoConfig, sampler: Box<dyn SamplingBackend>) -> Self {
-        PpoTrainer { cfg, sampler, iters_done: 0 }
+    /// Build a trainer around an explicit sampling backend; `seed` anchors
+    /// the rollout path's per-request stream derivation.
+    pub fn with_backend(cfg: PpoConfig, sampler: Box<dyn SamplingBackend>, seed: u64) -> Self {
+        PpoTrainer { cfg, sampler, rollout_seed: seed, rollouts_done: 0, iters_done: 0 }
     }
 
     /// Find the response length (tokens up to and including EOS, capped at
@@ -93,7 +134,11 @@ impl PpoTrainer {
         gen.len()
     }
 
-    /// Phase 1+2: generate and fully score an experience batch.
+    /// Phase 1+2, fixed-batch path: generate exactly `b` prompts in
+    /// lockstep through `HybridEngine::generate` and fully score the
+    /// batch. The scheduler rollout
+    /// ([`PpoTrainer::generate_experience_rollout`]) lifts the `n == b`
+    /// restriction.
     pub fn generate_experience(
         &mut self,
         he: &mut HybridEngine,
@@ -101,10 +146,15 @@ impl PpoTrainer {
     ) -> Result<Experience> {
         let m = he.manifest();
         let (b, sp, s) = (m.batch, m.prompt_len, m.seq_len);
-        assert_eq!(prompts.len(), b, "prompt batch must match artifact batch");
+        if prompts.len() != b {
+            bail!(
+                "fixed-batch generate_experience wants exactly the artifact batch of {b} \
+                 prompts, got {} — set rollout_batch (a multiple of {b}) to roll larger \
+                 prompt queues through the continuous-batching scheduler",
+                prompts.len()
+            );
+        }
 
-        let gen_secs0 = he.stats.gen_secs;
-        let gen_tok0 = he.stats.gen_tokens;
         let mut flat_prompts = Vec::with_capacity(b * sp);
         for (_, p) in prompts {
             flat_prompts.extend_from_slice(&p.tokens);
@@ -118,79 +168,57 @@ impl PpoTrainer {
             (0..b).map(|i| Self::response_len(&tokens[i * s..(i + 1) * s], sp)).collect();
         let lens: Vec<i32> = resp_lens.iter().map(|&l| (sp + l - 1) as i32).collect();
         let scores = he.score_experience(&tokens, &lens)?;
-        let rm_scores = scores.rm_scores;
-        let old_logp = scores.old_logp;
-        let ref_logp = scores.ref_logp;
-        let values = scores.values; // [b, s]
+        Ok(assemble_experience(&self.cfg, prompts, tokens, resp_lens, scores, sp, s))
+    }
 
-        // Ground-truth task reward (the oracle the paper can't have).
-        let true_rewards: Vec<f32> = prompts
-            .iter()
-            .enumerate()
-            .map(|(i, (g, p))| g.reward(p, &tokens[i * s + sp..(i + 1) * s]))
-            .collect();
-
-        // Response mask over next-token positions: prediction index j scores
-        // token j+1, so the response region is [sp-1, sp-1+len).
-        let w = s - 1;
-        let mut mask = vec![0.0f32; b * w];
-        for i in 0..b {
-            for j in 0..resp_lens[i] {
-                mask[i * w + sp - 1 + j] = 1.0;
-            }
-        }
-
-        // KL-shaped rewards + GAE per sequence.
-        let mut advantages = vec![0.0f32; b * w];
-        let mut returns = vec![0.0f32; b * w];
-        let mut kl_sum = 0.0f64;
-        let mut kl_n = 0.0f64;
-        for i in 0..b {
-            let len = resp_lens[i];
-            let lo = i * w + sp - 1;
-            let lp = &old_logp[lo..lo + len];
-            let rlp = &ref_logp[lo..lo + len];
-            kl_sum += lp.iter().zip(rlp).map(|(a, r)| (a - r) as f64).sum::<f64>();
-            kl_n += len as f64;
-            let rewards = gae::shaped_rewards(
-                lp,
-                rlp,
-                rm_scores[i],
-                self.cfg.kl_coef,
-                self.cfg.reward_clip,
+    /// Phase 1+2, scheduler-rollout path: stream `n = k·b` prompts through
+    /// the continuous-batching scheduler and return the `k` scored
+    /// [`Experience`] batches (in static group order) plus the rollout's
+    /// slot-occupancy counters. Scoring runs as each group of `b`
+    /// completions closes, overlapping the remaining sequences'
+    /// generation; the caller trains afterwards (training flips the engine
+    /// to train mode, which would free the serving KV cache mid-rollout).
+    pub fn generate_experience_rollout(
+        &mut self,
+        he: &mut HybridEngine,
+        prompts: &[(TaskGen, Prompt)],
+    ) -> Result<(Vec<Experience>, SchedStats)> {
+        let m = he.manifest();
+        let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
+        let n = prompts.len();
+        if n == 0 || n % b != 0 {
+            bail!(
+                "rollout_batch must be a positive multiple of the artifact batch {b}, got {n}"
             );
-            // values for response positions + terminal bootstrap 0.
-            let mut vals = Vec::with_capacity(len + 1);
-            vals.extend_from_slice(&values[i * s + sp - 1..i * s + sp - 1 + len]);
-            vals.push(0.0);
-            let out = gae::gae(&rewards, &vals, self.cfg.gamma, self.cfg.lam);
-            advantages[lo..lo + len].copy_from_slice(&out.advantages);
-            returns[lo..lo + len].copy_from_slice(&out.returns);
         }
-        if self.cfg.whiten_advantages {
-            gae::whiten(&mut advantages, &mask);
-        }
-
-        // old_values laid out [b, s-1] = values[:, :-1]
-        let mut old_values = vec![0.0f32; b * w];
-        for i in 0..b {
-            old_values[i * w..(i + 1) * w].copy_from_slice(&values[i * s..i * s + w]);
-        }
-
-        he.stats.train_tokens += 0; // (scoring counted as part of gen phase)
-        let _ = (gen_secs0, gen_tok0);
-        Ok(Experience {
-            tokens,
-            old_logp,
-            advantages,
-            returns,
-            old_values,
-            mask,
-            rm_scores,
-            true_rewards,
-            mean_kl: (kl_sum / kl_n.max(1.0)) as f32,
-            resp_lens,
-        })
+        let prompt_toks: Vec<Vec<i32>> =
+            prompts.iter().map(|(_, p)| p.tokens.clone()).collect();
+        let budgets = vec![sg; n];
+        let cfg = &self.cfg;
+        let mut out: Vec<Experience> = Vec::with_capacity(n / b);
+        // Fresh per-round base seed: request ids restart at 0 every
+        // rollout, so reusing one base would replay the previous round's
+        // draws verbatim (correlated experience under slowly-moving
+        // params).
+        let engine = RolloutEngine::new(round_seed(self.rollout_seed, self.rollouts_done));
+        self.rollouts_done += 1;
+        let stats = engine.run(
+            &mut *he,
+            self.sampler.as_mut(),
+            &prompt_toks,
+            &budgets,
+            b,
+            |eng, group| {
+                let (tokens, resp_lens) = flatten_group(&group, s);
+                let lens: Vec<i32> =
+                    resp_lens.iter().map(|&l| (sp + l - 1) as i32).collect();
+                let scores = eng.score_experience(&tokens, &lens)?;
+                let gp = &prompts[group.index * b..(group.index + 1) * b];
+                out.push(assemble_experience(cfg, gp, tokens, resp_lens, scores, sp, s));
+                Ok(())
+            },
+        )?;
+        Ok((out, stats))
     }
 
     /// Phase 3: PPO updates (+ mixture + EMA) over one experience batch.
@@ -251,6 +279,11 @@ impl PpoTrainer {
     }
 
     /// One full PPO iteration (the paper's §2.3 two-call API).
+    /// `rollout_batch == 0` keeps the fixed-batch path; `rollout_batch =
+    /// k·b` rolls the whole prompt queue through the scheduler, then
+    /// trains on each of the `k` flushed experience batches (all generated
+    /// under the same pre-update policy — the per-batch `old_logp` keeps
+    /// the PPO ratios honest, exactly as multi-epoch updates do).
     pub fn iteration(
         &mut self,
         he: &mut HybridEngine,
@@ -260,14 +293,128 @@ impl PpoTrainer {
         critic_lr: f32,
     ) -> Result<IterStats> {
         let b = he.manifest().batch;
-        let prompts = blend.prompt_batch(rng, b);
         let gen0 = (he.stats.gen_secs, he.stats.gen_tokens, he.stats.train_secs);
-        let exp = self.generate_experience(he, &prompts)?;
-        let mut stats = self.train_rlhf(he, &exp, blend, rng, actor_lr, critic_lr)?;
+        let mut stats = if self.cfg.rollout_batch == 0 {
+            let prompts = blend.prompt_batch(rng, b);
+            let exp = self.generate_experience(he, &prompts)?;
+            let mut st = self.train_rlhf(he, &exp, blend, rng, actor_lr, critic_lr)?;
+            st.rollout_groups = 1;
+            st
+        } else {
+            let prompts = blend.prompt_batch(rng, self.cfg.rollout_batch);
+            let (exps, sched) = self.generate_experience_rollout(he, &prompts)?;
+            let groups = exps.len();
+            let mut agg = IterStats::default();
+            for exp in &exps {
+                let st = self.train_rlhf(he, exp, blend, rng, actor_lr, critic_lr)?;
+                agg.rm_score += st.rm_score;
+                agg.true_reward += st.true_reward;
+                agg.kl_to_ref += st.kl_to_ref;
+                agg.actor_loss += st.actor_loss;
+                agg.critic_loss += st.critic_loss;
+                agg.approx_kl += st.approx_kl;
+                agg.clipfrac += st.clipfrac;
+            }
+            let k = groups.max(1) as f32;
+            agg.rm_score /= k;
+            agg.true_reward /= k;
+            agg.kl_to_ref /= k;
+            agg.actor_loss /= k;
+            agg.critic_loss /= k;
+            agg.approx_kl /= k;
+            agg.clipfrac /= k;
+            agg.rollout_bubble = sched.bubble_fraction();
+            agg.rollout_groups = groups;
+            agg
+        };
         stats.gen_secs = he.stats.gen_secs - gen0.0;
         stats.gen_tokens = he.stats.gen_tokens - gen0.1;
         stats.train_secs = he.stats.train_secs - gen0.2;
         Ok(stats)
+    }
+}
+
+/// Shared tail of both experience paths: ground-truth rewards, response
+/// masking, KL-shaped rewards, GAE, whitening — one scored `[b, s]` token
+/// batch in, one training-ready [`Experience`] out. A free function (not a
+/// `&self` method) so the rollout path can call it from the flush callback
+/// while the trainer's sampling backend is mutably borrowed by the
+/// scheduler loop.
+fn assemble_experience(
+    cfg: &PpoConfig,
+    prompts: &[(TaskGen, Prompt)],
+    tokens: Vec<i32>,
+    resp_lens: Vec<usize>,
+    scores: ExperienceScores,
+    sp: usize,
+    s: usize,
+) -> Experience {
+    let b = prompts.len();
+    let rm_scores = scores.rm_scores;
+    let old_logp = scores.old_logp;
+    let ref_logp = scores.ref_logp;
+    let values = scores.values; // [b, s]
+
+    // Ground-truth task reward (the oracle the paper can't have).
+    let true_rewards: Vec<f32> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, (g, p))| g.reward(p, &tokens[i * s + sp..(i + 1) * s]))
+        .collect();
+
+    // Response mask over next-token positions: prediction index j scores
+    // token j+1, so the response region is [sp-1, sp-1+len).
+    let w = s - 1;
+    let mut mask = vec![0.0f32; b * w];
+    for i in 0..b {
+        for j in 0..resp_lens[i] {
+            mask[i * w + sp - 1 + j] = 1.0;
+        }
+    }
+
+    // KL-shaped rewards + GAE per sequence.
+    let mut advantages = vec![0.0f32; b * w];
+    let mut returns = vec![0.0f32; b * w];
+    let mut kl_sum = 0.0f64;
+    let mut kl_n = 0.0f64;
+    for i in 0..b {
+        let len = resp_lens[i];
+        let lo = i * w + sp - 1;
+        let lp = &old_logp[lo..lo + len];
+        let rlp = &ref_logp[lo..lo + len];
+        kl_sum += lp.iter().zip(rlp).map(|(a, r)| (a - r) as f64).sum::<f64>();
+        kl_n += len as f64;
+        let rewards =
+            gae::shaped_rewards(lp, rlp, rm_scores[i], cfg.kl_coef, cfg.reward_clip);
+        // values for response positions + terminal bootstrap 0.
+        let mut vals = Vec::with_capacity(len + 1);
+        vals.extend_from_slice(&values[i * s + sp - 1..i * s + sp - 1 + len]);
+        vals.push(0.0);
+        let out = gae::gae(&rewards, &vals, cfg.gamma, cfg.lam);
+        advantages[lo..lo + len].copy_from_slice(&out.advantages);
+        returns[lo..lo + len].copy_from_slice(&out.returns);
+    }
+    if cfg.whiten_advantages {
+        gae::whiten(&mut advantages, &mask);
+    }
+
+    // old_values laid out [b, s-1] = values[:, :-1]
+    let mut old_values = vec![0.0f32; b * w];
+    for i in 0..b {
+        old_values[i * w..(i + 1) * w].copy_from_slice(&values[i * s..i * s + w]);
+    }
+
+    Experience {
+        tokens,
+        old_logp,
+        advantages,
+        returns,
+        old_values,
+        mask,
+        rm_scores,
+        true_rewards,
+        mean_kl: (kl_sum / kl_n.max(1.0)) as f32,
+        resp_lens,
     }
 }
 

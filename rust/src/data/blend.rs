@@ -150,6 +150,13 @@ impl Blend {
         pb
     }
 
+    /// Draw `b` RLHF prompts (with their generating task, for the
+    /// ground-truth reward oracle). `b` is any size — the artifact batch
+    /// for the fixed experience path, or `PpoConfig::rollout_batch` when
+    /// the scheduler rollout oversubscribes its prompt queue; example ids
+    /// stay a single monotone per-stage stream either way, so the drawn
+    /// prompts depend only on how many were drawn before, not on the
+    /// consumer's batching.
     pub fn prompt_batch(&mut self, rng: &mut Rng, b: usize) -> Vec<(TaskGen, super::Prompt)> {
         (0..b)
             .map(|_| {

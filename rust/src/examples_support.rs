@@ -1,12 +1,16 @@
 //! Shared helpers for the CLI and the `examples/` binaries (kept in the
 //! library so the logic is tested and reused, not copy-pasted).
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::coordinator::PpoTrainer;
-use crate::data::synthetic::TaskGen;
+use crate::data::synthetic::{TaskGen, Vocab};
 use crate::hybrid::HybridEngine;
+use crate::rollout::RolloutEngine;
 use crate::sampling::{HostFullRow, RowRef, SamplerConfig, SamplingBackend};
+use crate::serving::SchedStats;
 use crate::util::rng::Rng;
 
 /// A short scripted "conversation": sample task prompts, generate with the
@@ -110,6 +114,100 @@ pub fn naive_generate(
         }
     }
     Ok(seqs)
+}
+
+/// One measured experience-rollout phase — fixed lockstep baseline or the
+/// continuous scheduler rollout. `examples/ablations.rs` and the
+/// `runtime_e2e` rollout bench both consume these helpers so the
+/// useful-token and slot-bubble accounting cannot diverge between the
+/// ablation table and `BENCH_rollout.json`.
+pub struct RolloutPhase {
+    /// Useful generated tokens: up to EOS or the per-request budget.
+    pub useful_tokens: u64,
+    pub secs: f64,
+    /// Fraction of held slot capacity spent on dead rows.
+    pub bubble: f64,
+    /// Scheduler counters (continuous phase only).
+    pub sched: Option<SchedStats>,
+}
+
+impl RolloutPhase {
+    pub fn tok_per_sec(&self) -> f64 {
+        self.useful_tokens as f64 / self.secs.max(1e-9)
+    }
+}
+
+/// Fixed-batch rollout baseline: lockstep chunks of `b` through
+/// `HybridEngine::generate`, per-request budgets honored only by
+/// truncating afterwards (the lockstep loop cannot stop a single row).
+/// Slot capacity counts the sampling steps each chunk ACTUALLY held all
+/// `b` slots for — `generate` early-exits once every row is done, so the
+/// bubble fraction reflects real dead slot-steps, not a `gen_len`
+/// worst case. Callers should warm the engine (one generate) first.
+pub fn rollout_fixed_baseline(
+    he: &mut HybridEngine,
+    prompts: &[Vec<i32>],
+    budgets: &[usize],
+    backend: &mut dyn SamplingBackend,
+) -> Result<RolloutPhase> {
+    let m = he.manifest();
+    let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
+    anyhow::ensure!(
+        !prompts.is_empty() && prompts.len() % b == 0 && budgets.len() == prompts.len(),
+        "fixed baseline wants prompts/budgets sized a positive multiple of the batch {b}"
+    );
+    let t0 = Instant::now();
+    let mut useful = 0u64;
+    let mut capacity = 0u64;
+    for (c, chunk) in prompts.chunks(b).enumerate() {
+        let seqs = he.generate(&chunk.concat(), backend)?;
+        // Steps the lockstep loop ran this chunk: to the slowest row's
+        // EOS, or gen_len if any row never finished.
+        let mut steps_run = 0usize;
+        for (row, budget) in budgets[c * b..(c + 1) * b].iter().enumerate() {
+            let gen = &seqs[row * s + sp..(row + 1) * s];
+            let eos = gen.iter().position(|&t| t == Vocab::EOS);
+            steps_run = steps_run.max(eos.map_or(sg, |i| i + 1));
+            useful += match gen[..(*budget).min(sg)].iter().position(|&t| t == Vocab::EOS) {
+                Some(i) => (i + 1) as u64,
+                None => (*budget).min(sg) as u64,
+            };
+        }
+        capacity += (b * steps_run) as u64;
+    }
+    Ok(RolloutPhase {
+        useful_tokens: useful,
+        secs: t0.elapsed().as_secs_f64(),
+        bubble: 1.0 - useful as f64 / capacity.max(1) as f64,
+        sched: None,
+    })
+}
+
+/// Continuous rollout discipline: the same queue through the slot
+/// scheduler (`crate::rollout`) — budgets honored exactly, retired slots
+/// admit the next queued prompt. Callers should warm the serving
+/// artifacts (one small rollout) before timing.
+pub fn rollout_continuous(
+    he: &mut HybridEngine,
+    prompts: &[Vec<i32>],
+    budgets: &[usize],
+    seed: u64,
+    backend: &mut dyn SamplingBackend,
+) -> Result<RolloutPhase> {
+    let b = he.manifest().batch;
+    let t0 = Instant::now();
+    let mut useful = 0u64;
+    let stats =
+        RolloutEngine::new(seed).run(&mut *he, backend, prompts, budgets, b, |_, g| {
+            useful += g.completions.iter().map(|c| c.generated as u64).sum::<u64>();
+            Ok(())
+        })?;
+    Ok(RolloutPhase {
+        useful_tokens: useful,
+        secs: t0.elapsed().as_secs_f64(),
+        bubble: stats.bubble_fraction(),
+        sched: Some(stats),
+    })
 }
 
 /// PPO smoke helper used by ablation examples: run `iters` PPO iterations

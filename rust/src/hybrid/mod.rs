@@ -36,12 +36,19 @@
 //!
 //! Generation is exposed at two altitudes: the batch path
 //! ([`HybridEngine::prefill`] + [`HybridEngine::decode_step`], wrapped by
-//! [`HybridEngine::generate`] for the training loop) runs all rows in
-//! lockstep, while the serving path ([`HybridEngine::begin_serving`] +
-//! [`HybridEngine::prefill_slot`] + [`HybridEngine::decode_slots`]) gives
-//! every batch slot its own sequence position so the continuous-batching
-//! scheduler in `crate::serving` can retire and admit requests at
-//! decode-step boundaries.
+//! [`HybridEngine::generate`] for the fixed-batch training loop) runs all
+//! rows in lockstep, while the serving path
+//! ([`HybridEngine::begin_serving`] + [`HybridEngine::prefill_slot`] +
+//! [`HybridEngine::decode_slots`]) gives every batch slot its own sequence
+//! position so the continuous-batching scheduler in `crate::serving` can
+//! retire and admit requests at decode-step boundaries. The per-slot
+//! entry points serve two masters: the serve loop and RLHF experience
+//! generation (`crate::rollout`, which borrows the engine for one rollout
+//! via `Scheduler<&mut HybridEngine>`). Scoring forwards
+//! ([`HybridEngine::score_experience`]) upload their own inputs and flip
+//! no mode, so the rollout may score flushed experience groups while other
+//! slots keep decoding — only train steps flip modes (and free the
+//! serving cache).
 
 pub mod kv;
 pub mod memory;

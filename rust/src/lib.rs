@@ -17,6 +17,7 @@ pub mod hybrid;
 pub mod metrics;
 pub mod pipeline;
 pub mod report;
+pub mod rollout;
 pub mod runtime;
 pub mod sampling;
 pub mod serving;

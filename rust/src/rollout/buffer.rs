@@ -1,0 +1,209 @@
+//! The experience buffer: where scheduler completions land during a
+//! rollout, and where they are regrouped into the fixed-size batches the
+//! scoring/training artifacts want.
+//!
+//! # Grouping and flush contract
+//!
+//! The buffer is sized for one rollout of `total` requests partitioned into
+//! `total / group` **static** groups by request id: group `g` owns ids
+//! `[g*group, (g+1)*group)`. Completions arrive in retirement order — which
+//! is data-dependent and may interleave across groups — but a group flushes
+//! only when all of its members have retired, and groups flush **in index
+//! order**. Static grouping plus in-order flushing is what makes the
+//! training stream reproducible: which rows share a PPO batch, and the
+//! order batches reach the optimizer, depend only on the submission order,
+//! never on which sequence happened to hit EOS first. (Generation is never
+//! blocked by a straggler — later groups keep decoding while an earlier
+//! group waits to flush.)
+//!
+//! [`flatten_group`] lays a ready group back out as the `[group, seq_len]`
+//! row-major token batch the fixed-shape artifacts expect: row `i` is the
+//! group's `i`-th request (ascending id) padded with [`Vocab::PAD`] after
+//! its last generated token — exactly the layout the fixed-batch
+//! `HybridEngine::generate` leaves, which is what lets the greedy golden
+//! compare the two paths bit for bit.
+
+use crate::data::synthetic::Vocab;
+use crate::serving::{Completion, CompletionSink};
+
+/// One flushed group: `group` completions sorted by ascending request id.
+#[derive(Debug)]
+pub struct ReadyGroup {
+    /// Group index within the rollout (flushes arrive in this order).
+    pub index: usize,
+    pub completions: Vec<Completion>,
+}
+
+/// Collects out-of-order completions and hands back ready groups in order.
+pub struct ExperienceBuffer {
+    group: usize,
+    /// One slot per request id; `Some` once retired, taken at flush.
+    entries: Vec<Option<Completion>>,
+    /// Retired-member count per group.
+    filled: Vec<usize>,
+    /// Next group index to flush (groups flush strictly in order).
+    next_flush: usize,
+}
+
+impl ExperienceBuffer {
+    /// Buffer for `total` requests flushed in groups of `group`.
+    /// `total` must be a positive multiple of `group`.
+    pub fn new(total: usize, group: usize) -> Self {
+        assert!(group > 0, "group size must be positive");
+        assert!(
+            total > 0 && total % group == 0,
+            "rollout size {total} must be a positive multiple of the group size {group}"
+        );
+        ExperienceBuffer {
+            group,
+            entries: (0..total).map(|_| None).collect(),
+            filled: vec![0; total / group],
+            next_flush: 0,
+        }
+    }
+
+    /// Record one retired sequence. Ids outside the rollout or retired
+    /// twice are scheduler bugs, not recoverable states.
+    pub fn push(&mut self, c: Completion) {
+        let id = c.id as usize;
+        assert!(id < self.entries.len(), "completion id {id} outside rollout");
+        assert!(self.entries[id].is_none(), "request {id} retired twice");
+        self.filled[id / self.group] += 1;
+        self.entries[id] = Some(c);
+    }
+
+    /// Take the next in-order group whose members have all retired.
+    pub fn pop_ready(&mut self) -> Option<ReadyGroup> {
+        if self.next_flush >= self.filled.len() || self.filled[self.next_flush] < self.group {
+            return None;
+        }
+        let index = self.next_flush;
+        self.next_flush += 1;
+        let lo = index * self.group;
+        let completions: Vec<Completion> = self.entries[lo..lo + self.group]
+            .iter_mut()
+            .map(|e| e.take().expect("filled count lied"))
+            .collect();
+        Some(ReadyGroup { index, completions })
+    }
+
+    /// Completions held but not yet flushed.
+    pub fn pending(&self) -> usize {
+        self.entries.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// True once every group has been flushed.
+    pub fn is_drained(&self) -> bool {
+        self.next_flush == self.filled.len()
+    }
+}
+
+impl CompletionSink for ExperienceBuffer {
+    fn complete(&mut self, c: Completion) {
+        self.push(c);
+    }
+}
+
+/// Flatten a ready group into the `[group, seq_len]` row-major token batch
+/// plus per-row response lengths (generated tokens, EOS included when
+/// emitted — the scheduler retires at the first EOS, so this matches
+/// `PpoTrainer::response_len` over the padded row). Rows are padded with
+/// [`Vocab::PAD`] after the last generated token, the same layout the
+/// fixed-batch `generate` produces.
+pub fn flatten_group(g: &ReadyGroup, seq_len: usize) -> (Vec<i32>, Vec<usize>) {
+    let b = g.completions.len();
+    let mut tokens = vec![Vocab::PAD; b * seq_len];
+    let mut resp_lens = Vec::with_capacity(b);
+    for (i, c) in g.completions.iter().enumerate() {
+        assert!(
+            c.tokens.len() <= seq_len,
+            "completion {} has {} tokens, seq_len {seq_len}",
+            c.id,
+            c.tokens.len()
+        );
+        tokens[i * seq_len..i * seq_len + c.tokens.len()].copy_from_slice(&c.tokens);
+        resp_lens.push(c.generated);
+    }
+    (tokens, resp_lens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::FinishReason;
+
+    fn comp(id: u64, prompt_len: usize, generated: usize) -> Completion {
+        let mut tokens: Vec<i32> = vec![9; prompt_len + generated];
+        // Mark the last generated token EOS so flatten's layout is testable.
+        *tokens.last_mut().unwrap() = Vocab::EOS;
+        Completion {
+            id,
+            slot: 0,
+            prompt_len,
+            tokens,
+            generated,
+            finish: FinishReason::Eos,
+            queued_steps: 0,
+            decode_steps: generated as u64,
+        }
+    }
+
+    #[test]
+    fn groups_flush_in_order_despite_out_of_order_completion() {
+        let mut buf = ExperienceBuffer::new(4, 2);
+        // Group 1 (ids 2,3) finishes entirely before group 0 closes.
+        buf.push(comp(2, 4, 3));
+        buf.push(comp(3, 4, 1));
+        buf.push(comp(1, 4, 2));
+        assert!(buf.pop_ready().is_none(), "group 0 still missing id 0");
+        assert_eq!(buf.pending(), 3);
+        buf.push(comp(0, 4, 5));
+        let g0 = buf.pop_ready().unwrap();
+        assert_eq!(g0.index, 0);
+        assert_eq!(g0.completions.iter().map(|c| c.id).collect::<Vec<_>>(), vec![0, 1]);
+        let g1 = buf.pop_ready().unwrap();
+        assert_eq!(g1.index, 1);
+        assert_eq!(g1.completions.iter().map(|c| c.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert!(buf.pop_ready().is_none());
+        assert!(buf.is_drained());
+        assert_eq!(buf.pending(), 0);
+    }
+
+    #[test]
+    fn flush_boundary_is_exact() {
+        // A group flushes on its b-th member, not one completion earlier.
+        let b = 3;
+        let mut buf = ExperienceBuffer::new(3, b);
+        buf.push(comp(0, 4, 1));
+        buf.push(comp(2, 4, 1));
+        assert!(buf.pop_ready().is_none());
+        buf.push(comp(1, 4, 1));
+        assert_eq!(buf.pop_ready().unwrap().completions.len(), b);
+    }
+
+    #[test]
+    #[should_panic(expected = "retired twice")]
+    fn duplicate_completion_is_a_bug() {
+        let mut buf = ExperienceBuffer::new(2, 2);
+        buf.push(comp(0, 4, 1));
+        buf.push(comp(0, 4, 1));
+    }
+
+    #[test]
+    fn flatten_pads_rows_to_seq_len() {
+        let mut buf = ExperienceBuffer::new(2, 2);
+        buf.push(comp(0, 4, 2)); // 6 real tokens
+        buf.push(comp(1, 4, 4)); // 8 real tokens
+        let g = buf.pop_ready().unwrap();
+        let s = 10;
+        let (tokens, resp_lens) = flatten_group(&g, s);
+        assert_eq!(tokens.len(), 2 * s);
+        assert_eq!(resp_lens, vec![2, 4]);
+        // Row 0: 6 real tokens then PAD to seq_len.
+        assert_eq!(tokens[5], Vocab::EOS);
+        assert!(tokens[6..s].iter().all(|&t| t == Vocab::PAD));
+        // Row 1 starts at s with its own tokens.
+        assert_eq!(tokens[s + 7], Vocab::EOS);
+        assert!(tokens[s + 8..2 * s].iter().all(|&t| t == Vocab::PAD));
+    }
+}

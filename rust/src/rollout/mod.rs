@@ -1,0 +1,410 @@
+//! The rollout subsystem: RLHF experience generation streamed through the
+//! continuous-batching slot scheduler (the OpenRLHF-style decoupling of
+//! experience generation from training, arXiv 2405.11143, brought in-tree).
+//!
+//! The paper's own profiling says generation dominates Step-3 cost, which
+//! is why the Hybrid Engine runs it on the inference-optimized path. The
+//! fixed-batch `HybridEngine::generate` still pays two scheduling taxes,
+//! though: one straggler row keeps all `b` slots decoding to `gen_len`
+//! (early-EOS rows burn capacity as dead rows), and the PPO rollout size is
+//! hard-locked to the artifact batch `b`. [`RolloutEngine`] removes both by
+//! feeding an oversubscribed prompt queue — any `n` that is a multiple of
+//! `b` — through the serving `crate::serving::Scheduler`: EOS-retired rows
+//! free their KV slot for the next queued prompt at the following step
+//! boundary, and completions stream into an
+//! [`ExperienceBuffer`] that regroups them into fixed-`b` batches for
+//! scoring (`HybridEngine::score_experience`) and training
+//! (`PpoTrainer::train_rlhf` stages each batch once via
+//! `stage_experience`). The PPO rollout size becomes the
+//! `PpoConfig::rollout_batch` knob instead of an artifact constant.
+//!
+//! # Reproducibility under admission-order nondeterminism
+//!
+//! Which slot a request lands in, and when, depends on when other
+//! sequences hit EOS — so the order sampling calls interleave across
+//! requests is data-dependent. A single backend RNG stream would make the
+//! sampled tokens depend on that interleaving. Instead every request gets
+//! its **own derived stream**: [`request_seed`] mixes the rollout's base
+//! seed with the request id (seed ⊕ splitmix-scrambled id), the scheduler
+//! stores the stream per slot, and the backend finishes that request's
+//! rows through `SamplingBackend::sample_stream`. A request's tokens are
+//! therefore a pure function of `(params, prompt, base seed, id)` — the
+//! greedy golden in `rust/tests/integration_pipeline.rs` pins the stronger
+//! property that a scheduler rollout of `b` equal-length prompts is
+//! bit-identical to fixed-batch `generate`.
+//!
+//! # Flush/seed-derivation contract (what callers may rely on)
+//!
+//! * Groups are **static**: group `g` is request ids `[g·b, (g+1)·b)` in
+//!   submission order; flushes arrive strictly in group order (see
+//!   `buffer` module docs). Generation never blocks on a flush.
+//! * The group callback runs mid-rollout with other sequences still
+//!   holding KV slots. It may run inference-mode work (scoring forwards
+//!   upload their own inputs and flip no mode), but it must NOT trigger a
+//!   train-mode flip — that would free the serving KV cache under the
+//!   scheduler. Training happens after [`RolloutEngine::run`] returns.
+//! * Per-request streams derive as `request_seed(base, id)`; re-running a
+//!   rollout with the same base seed, prompts, and ids reproduces every
+//!   sequence bit for bit regardless of retirement order. Callers running
+//!   MANY rollouts (one per PPO iteration) must vary the base per round —
+//!   [`round_seed`] is that derivation; the coordinator uses it so
+//!   iteration t+1 never replays iteration t's draws.
+//!
+//! Slot-occupancy accounting (`SchedStats::bubble_fraction`) is returned to
+//! the caller; `cargo bench --bench runtime_e2e` emits it to
+//! `BENCH_rollout.json` against the fixed-batch baseline.
+
+pub mod buffer;
+
+pub use buffer::{flatten_group, ExperienceBuffer, ReadyGroup};
+
+use anyhow::{bail, Result};
+
+use crate::sampling::SamplingBackend;
+use crate::serving::{Request, SchedStats, Scheduler, SlotEngine};
+
+/// Derive one request's RNG-stream seed from the rollout base seed and the
+/// request id (splitmix-style odd-multiplier scramble so consecutive ids
+/// land in unrelated streams, then XOR with the base).
+pub fn request_seed(base: u64, id: u64) -> u64 {
+    base ^ id.wrapping_mul(0x9e3779b97f4a7c15).rotate_left(31)
+}
+
+/// Derive one rollout round's base seed from a training-level seed and the
+/// round (PPO iteration) index. Request ids restart at 0 every rollout, so
+/// without this a trainer would replay the exact same draws each iteration
+/// — near-identical responses for repeated prompts under slowly-moving
+/// params, i.e. correlated experience. Round 0 is the training seed itself
+/// (a single rollout replays exactly under the bare seed), and a fixed
+/// `(seed, round)` pair is always replayable.
+pub fn round_seed(seed: u64, round: u64) -> u64 {
+    seed ^ round.wrapping_mul(0xd1342543de82ef95).rotate_left(17)
+}
+
+/// Drives one rollout: oversubscribe the scheduler with a prompt queue,
+/// stream completions into an [`ExperienceBuffer`], and hand each ready
+/// group (with the engine, for scoring) to the caller's callback.
+pub struct RolloutEngine {
+    /// Base seed of the per-request stream derivation.
+    pub seed: u64,
+}
+
+impl RolloutEngine {
+    pub fn new(seed: u64) -> Self {
+        RolloutEngine { seed }
+    }
+
+    /// Generate `prompts.len()` sequences (per-request budgets in
+    /// `budgets`, each capped at the engine's `max_new_tokens`) through the
+    /// slot scheduler, flushing scored-ready groups of `group` completions
+    /// to `on_group` in group order. Returns the scheduler counters
+    /// (occupancy, bubbles, retirement mix) for the caller's logs/bench.
+    ///
+    /// `engine` is any [`SlotEngine`] — `&mut HybridEngine` for real
+    /// rollouts (the borrow ends when this returns), a mock in tests.
+    pub fn run<E, F>(
+        &self,
+        engine: E,
+        backend: &mut dyn SamplingBackend,
+        prompts: &[Vec<i32>],
+        budgets: &[usize],
+        group: usize,
+        mut on_group: F,
+    ) -> Result<SchedStats>
+    where
+        E: SlotEngine,
+        F: FnMut(&mut E, ReadyGroup) -> Result<()>,
+    {
+        let n = prompts.len();
+        if group == 0 || n == 0 || n % group != 0 {
+            bail!(
+                "rollout wants a positive multiple of the group size {group}, got {n} prompts"
+            );
+        }
+        if budgets.len() != n {
+            bail!("rollout wants {n} budgets, got {}", budgets.len());
+        }
+        let mut sched = Scheduler::new(engine)?;
+        let mut buf = ExperienceBuffer::new(n, group);
+        // Oversubscribe up front: the queue is the scheduler's to drain —
+        // every EOS retirement admits the next prompt at a step boundary.
+        for (id, prompt) in prompts.iter().enumerate() {
+            sched.submit(Request {
+                id: id as u64,
+                prompt: prompt.clone(),
+                max_new: budgets[id],
+                seed: Some(request_seed(self.seed, id as u64)),
+            })?;
+        }
+        while !sched.is_idle() {
+            sched.step_into(backend, &mut buf)?;
+            // Flush every group that closed this step before decoding on —
+            // scoring overlaps the remaining sequences' generation.
+            while let Some(g) = buf.pop_ready() {
+                on_group(&mut sched.engine, g)?;
+            }
+        }
+        debug_assert!(buf.is_drained(), "scheduler idle with unflushed groups");
+        Ok(sched.stats.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::Vocab;
+    use crate::sampling::{
+        HostFullRow, PendingRow, SampleOut, SamplerConfig, TrafficClass,
+    };
+    use anyhow::Result;
+
+    const VOCAB: usize = 32;
+    const SP: usize = 4;
+    const SG: usize = 8;
+    const CONTENT: i32 = 9;
+
+    /// Scripted engine (the serving tests' convention): a prompt's first
+    /// token encodes how many content tokens precede EOS; `flat` rows make
+    /// sampling purely RNG-driven instead.
+    struct MockEngine {
+        n_slots: usize,
+        flat: bool,
+        plans: Vec<Option<(Vec<i32>, usize)>>,
+        /// Slot of every admission, in admission order.
+        prefills: Vec<usize>,
+    }
+
+    impl MockEngine {
+        fn new(n_slots: usize) -> Self {
+            MockEngine {
+                n_slots,
+                flat: false,
+                plans: (0..n_slots).map(|_| None).collect(),
+                prefills: Vec::new(),
+            }
+        }
+
+        fn flat(mut self) -> Self {
+            self.flat = true;
+            self
+        }
+
+        fn logits_for(&self, tok: i32) -> Vec<f32> {
+            if self.flat {
+                return vec![0.0; VOCAB]; // uniform: the sampler's rng decides
+            }
+            let mut row = vec![0.0f32; VOCAB];
+            row[tok as usize] = 1.0;
+            row
+        }
+    }
+
+    impl SlotEngine for MockEngine {
+        fn n_slots(&self) -> usize {
+            self.n_slots
+        }
+
+        fn prompt_len(&self) -> usize {
+            SP
+        }
+
+        fn max_new_tokens(&self) -> usize {
+            SG
+        }
+
+        fn prefill_slot(
+            &mut self,
+            slot: usize,
+            prompt: &[i32],
+            _traffic: TrafficClass,
+        ) -> Result<PendingRow> {
+            assert!(self.plans[slot].is_none(), "prefill into busy slot {slot}");
+            let n = prompt[0] as usize;
+            let plan: Vec<i32> = (0..SG + 2)
+                .map(|j| if j < n { CONTENT } else { Vocab::EOS })
+                .collect();
+            let row = PendingRow::Logits(self.logits_for(plan[0]));
+            self.plans[slot] = Some((plan, 1));
+            self.prefills.push(slot);
+            Ok(row)
+        }
+
+        fn decode_slots(
+            &mut self,
+            _toks: &[i32],
+            _pos: &[i32],
+            active: &[bool],
+            _traffic: TrafficClass,
+        ) -> Result<SampleOut> {
+            let mut data = vec![0.0f32; self.n_slots * VOCAB];
+            for slot in 0..self.n_slots {
+                if !active[slot] {
+                    continue;
+                }
+                let (plan, cur) = self.plans[slot].as_mut().expect("active free slot");
+                let row = self.flat.then(|| vec![0.0; VOCAB]).unwrap_or_else(|| {
+                    let mut r = vec![0.0f32; VOCAB];
+                    r[plan[*cur] as usize] = 1.0;
+                    r
+                });
+                *cur += 1;
+                data[slot * VOCAB..(slot + 1) * VOCAB].copy_from_slice(&row);
+            }
+            Ok(SampleOut::Logits { data, vocab: VOCAB })
+        }
+
+        fn release_slot(&mut self, slot: usize) -> Result<()> {
+            assert!(self.plans[slot].is_some(), "release of free slot {slot}");
+            self.plans[slot] = None;
+            Ok(())
+        }
+    }
+
+    fn greedy() -> HostFullRow {
+        HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0)
+    }
+
+    /// Prompt whose scripted response is `eos_after` content tokens + EOS.
+    fn prompt(eos_after: i32) -> Vec<i32> {
+        let mut p = vec![CONTENT; SP];
+        p[0] = eos_after;
+        p
+    }
+
+    #[test]
+    fn oversubscribed_rollout_retires_then_admits() {
+        // 6 prompts through 2 slots: the queue oversubscribes the engine
+        // 3x, every retirement frees a slot for the next prompt, and all
+        // groups flush in order.
+        let prompts: Vec<Vec<i32>> = vec![
+            prompt(1),
+            prompt(100), // length-capped straggler
+            prompt(2),
+            prompt(1),
+            prompt(3),
+            prompt(1),
+        ];
+        let budgets = vec![SG; 6];
+        let mut flushed: Vec<(usize, Vec<u64>)> = Vec::new();
+        let stats = RolloutEngine::new(0)
+            .run(MockEngine::new(2), &mut greedy(), &prompts, &budgets, 2, |eng, g| {
+                assert!(eng.n_slots() == 2, "callback sees the engine");
+                flushed.push((g.index, g.completions.iter().map(|c| c.id).collect()));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(
+            flushed,
+            vec![(0, vec![0, 1]), (1, vec![2, 3]), (2, vec![4, 5])],
+            "static groups, in-order flushes"
+        );
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.retired_eos, 5);
+        assert_eq!(stats.retired_length, 1, "the straggler hits its budget");
+        // Oversubscription actually happened: 6 admissions through 2 slots.
+        assert_eq!(stats.prefills, 6);
+        assert!(stats.peak_queue_depth >= 4);
+        assert!(stats.utilization() > 0.5, "{}", stats.utilization());
+        assert!((stats.bubble_fraction() - (1.0 - stats.utilization())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_never_blocks_later_groups_generation() {
+        // Group 0 holds a straggler (id 1 runs to SG); ids 2..6 all EOS
+        // after one token. The engine must keep admitting and retiring the
+        // later prompts while group 0 stays open — pinned by the flush
+        // order (groups 1+ close first internally but still flush after
+        // group 0) and by prefill count reaching n well before idle.
+        let prompts: Vec<Vec<i32>> =
+            vec![prompt(1), prompt(100), prompt(1), prompt(1), prompt(1), prompt(1)];
+        let budgets = vec![SG; 6];
+        let mut order = Vec::new();
+        let stats = RolloutEngine::new(0)
+            .run(MockEngine::new(2), &mut greedy(), &prompts, &budgets, 3, |_, g| {
+                order.push(g.index);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(order, vec![0, 1]);
+        assert_eq!(stats.prefills, 6, "all prompts admitted despite the open group");
+        // The straggler decoded SG tokens; the rest one content + EOS each.
+        assert_eq!(stats.tokens_sampled, (SG + 5 * 2) as u64);
+    }
+
+    #[test]
+    fn seed_derivations_separate_requests_and_rounds() {
+        // Distinct ids and distinct rounds land in distinct streams; round
+        // 0 is the bare training seed (single-rollout replays unchanged).
+        assert_ne!(request_seed(5, 0), request_seed(5, 1));
+        assert_ne!(request_seed(5, 1), request_seed(6, 1));
+        assert_ne!(round_seed(5, 0), round_seed(5, 1));
+        assert_ne!(round_seed(5, 1), round_seed(5, 2));
+        assert_eq!(round_seed(5, 0), 5);
+    }
+
+    #[test]
+    fn rollout_size_must_be_group_multiple() {
+        let prompts = vec![prompt(1); 3];
+        let err = RolloutEngine::new(0)
+            .run(MockEngine::new(2), &mut greedy(), &prompts, &[SG; 3], 2, |_, _| Ok(()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("multiple"), "{err:#}");
+        let err = RolloutEngine::new(0)
+            .run(MockEngine::new(2), &mut greedy(), &prompts, &[SG; 2], 3, |_, _| Ok(()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("budgets"), "{err:#}");
+    }
+
+    #[test]
+    fn per_request_streams_survive_admission_reordering() {
+        // Stochastic sampling over flat rows is purely RNG-driven, so this
+        // pins the seed-derivation contract: request id 0 with base seed s
+        // generates the same tokens whether it rolls out alone or packed
+        // with five other requests whose retirements reshuffle every
+        // admission — and a different base seed moves it.
+        let stochastic =
+            || HostFullRow::new(SamplerConfig { temperature: 1.0, ..Default::default() }, 555);
+        let run = |n: usize, base: u64| -> Vec<Vec<i32>> {
+            let prompts: Vec<Vec<i32>> = (0..n).map(|_| prompt(100)).collect();
+            let budgets = vec![SG; n];
+            let mut seqs: Vec<Vec<i32>> = Vec::new();
+            RolloutEngine::new(base)
+                .run(
+                    MockEngine::new(2).flat(),
+                    &mut stochastic(),
+                    &prompts,
+                    &budgets,
+                    n,
+                    |_, g| {
+                        seqs = g.completions.iter().map(|c| c.tokens.clone()).collect();
+                        Ok(())
+                    },
+                )
+                .unwrap();
+            seqs
+        };
+        let solo = run(1, 7);
+        let crowd = run(6, 7);
+        assert_eq!(solo[0], crowd[0], "request 0's stream is its own");
+        let other_base = run(1, 8);
+        assert_ne!(solo[0], other_base[0], "base seed steers every stream");
+    }
+
+    #[test]
+    fn rollout_over_borrowed_engine_compiles_and_runs() {
+        // The &mut E SlotEngine impl: run a rollout over a borrow, then
+        // keep using the engine afterwards (the coordinator's shape).
+        let mut eng = MockEngine::new(2);
+        let prompts = vec![prompt(1), prompt(2)];
+        let stats = RolloutEngine::new(0)
+            .run(&mut eng, &mut greedy(), &prompts, &[SG; 2], 2, |e, g| {
+                // Callback sees &mut &mut MockEngine.
+                assert_eq!(e.n_slots(), 2);
+                assert_eq!(g.completions.len(), 2);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(eng.prefills.len(), 2, "the borrow handed the engine back");
+    }
+}

@@ -173,6 +173,15 @@ impl Manifest {
         }
     }
 
+    /// True when the artifact set carries the continuous-batching serving
+    /// entry points — everything the serve scheduler and the rollout
+    /// subsystem need. The single predicate all artifact-gated serving /
+    /// rollout benches, ablations, and tests share (so a future required
+    /// serving artifact is added in ONE place).
+    pub fn has_serving(&self) -> bool {
+        self.artifacts.contains_key("prefill_slot") && self.artifacts.contains_key("decode_slots")
+    }
+
     /// Sanity checks tying the manifest to the architecture configs.
     pub fn validate(&self) -> Result<()> {
         if self.seq_len != self.prompt_len + self.gen_len {

@@ -74,8 +74,10 @@ impl DeviceTopK {
     /// Host finish over one candidate row (sorted by descending logit):
     /// temperature → config top-k prefix → top-p prefix → categorical.
     /// Mirrors the full-row filter semantics restricted to the candidates;
-    /// consumes exactly one uniform draw, like the full-row categorical.
-    fn draw(&mut self, vals: &[f32], ids: &[i32]) -> Result<i32> {
+    /// consumes exactly one uniform draw from `rng` (the backend's own
+    /// stream via `sample`, or a per-request rollout stream via
+    /// `sample_stream`), like the full-row categorical.
+    fn draw_with(&mut self, vals: &[f32], ids: &[i32], rng: &mut Rng) -> Result<i32> {
         check_nonempty(vals, ids)?;
         let take = if self.cfg.top_k == 0 { vals.len() } else { self.cfg.top_k.min(vals.len()) };
         let t = self.cfg.temperature.max(1e-4);
@@ -102,7 +104,7 @@ impl DeviceTopK {
         let kept = &self.scratch[..keep];
         let max = kept.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         let z: f32 = kept.iter().map(|x| (x - max).exp()).sum();
-        let u = self.rng.f32() * z;
+        let u = rng.f32() * z;
         let mut cum = 0.0f32;
         for (j, x) in kept.iter().enumerate() {
             cum += (x - max).exp();
@@ -123,7 +125,16 @@ impl SamplingBackend for DeviceTopK {
         }
     }
 
-    fn sample(&mut self, row: RowRef<'_>, _history: &[i32]) -> Result<i32> {
+    fn sample(&mut self, row: RowRef<'_>, history: &[i32]) -> Result<i32> {
+        // One copy of the dispatch: route the internal stream through the
+        // stream path (cloned out and written back, like Sampler::sample).
+        let mut rng = self.rng.clone();
+        let tok = self.sample_stream(row, history, &mut rng);
+        self.rng = rng;
+        tok
+    }
+
+    fn sample_stream(&mut self, row: RowRef<'_>, _history: &[i32], rng: &mut Rng) -> Result<i32> {
         match row {
             // Greedy: the device already took the argmax; the id IS the token.
             RowRef::Id(t) => Ok(t),
@@ -133,7 +144,7 @@ impl SamplingBackend for DeviceTopK {
                     check_nonempty(vals, ids)?;
                     return Ok(ids[0]);
                 }
-                self.draw(vals, ids)
+                self.draw_with(vals, ids, rng)
             }
             other @ RowRef::Logits(_) => Err(super::wrong_row("DeviceTopK", &other)),
         }
@@ -262,6 +273,26 @@ mod tests {
             assert_eq!(
                 a.sample(RowRef::TopK { vals: &vals, ids: &ids }, &[]).unwrap(),
                 b.sample(RowRef::TopK { vals: &vals, ids: &ids }, &[]).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn explicit_stream_reproduces_internal_stream() {
+        // The rollout contract on the device backend: an external stream
+        // seeded like the backend's internal one draws the same tokens.
+        let vals = [2.0, 1.5, 1.0, 0.5];
+        let ids = [3, 1, 4, 1];
+        let cfg = SamplerConfig { temperature: 0.8, top_p: 0.9, ..Default::default() };
+        let mut internal = DeviceTopK::new(cfg.clone(), 21, 4, 256).unwrap();
+        let mut external = DeviceTopK::new(cfg, 777, 4, 256).unwrap();
+        let mut stream = crate::util::rng::Rng::new(21);
+        for _ in 0..100 {
+            assert_eq!(
+                internal.sample(RowRef::TopK { vals: &vals, ids: &ids }, &[]).unwrap(),
+                external
+                    .sample_stream(RowRef::TopK { vals: &vals, ids: &ids }, &[], &mut stream)
+                    .unwrap()
             );
         }
     }

@@ -27,8 +27,23 @@ impl Sampler {
     }
 
     /// Sample one token id from a logits row. `history` drives the
-    /// repetition penalty (pass `&[]` to disable).
+    /// repetition penalty (pass `&[]` to disable). Randomness comes from
+    /// the sampler's own seeded stream; see [`Sampler::sample_with`] for
+    /// the per-request-stream variant.
     pub fn sample(&mut self, logits: &[f32], history: &[i32]) -> i32 {
+        // Route through the stream path with the internal rng (cloned out
+        // and written back so the stream advances exactly as before).
+        let mut rng = self.rng.clone();
+        let tok = self.sample_with(logits, history, &mut rng);
+        self.rng = rng;
+        tok
+    }
+
+    /// [`Sampler::sample`] with the categorical draw taken from an explicit
+    /// `rng` stream — the rollout path hands each request its own derived
+    /// stream so sampling stays reproducible under admission-order
+    /// nondeterminism. Filters and scratch reuse are identical to `sample`.
+    pub fn sample_with(&mut self, logits: &[f32], history: &[i32], rng: &mut Rng) -> i32 {
         debug_assert!(!logits.is_empty());
         if self.cfg.greedy && self.cfg.repetition_penalty == 1.0 {
             return argmax(logits) as i32;
@@ -48,7 +63,7 @@ impl Sampler {
             }
             self.filter_top_k(&mut l);
             self.filter_top_p(&mut l);
-            self.categorical(&l)
+            Self::categorical(&l, rng)
         };
         self.row = l;
         tok
@@ -115,10 +130,10 @@ impl Sampler {
         }
     }
 
-    fn categorical(&mut self, l: &[f32]) -> i32 {
+    fn categorical(l: &[f32], rng: &mut Rng) -> i32 {
         let max = l.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         let z: f32 = l.iter().map(|x| (x - max).exp()).sum();
-        let u = self.rng.f32() * z;
+        let u = rng.f32() * z;
         let mut cum = 0.0f32;
         for (i, x) in l.iter().enumerate() {
             cum += (x - max).exp();
@@ -156,6 +171,13 @@ impl SamplingBackend for HostFullRow {
     fn sample(&mut self, row: RowRef<'_>, history: &[i32]) -> Result<i32> {
         match row {
             RowRef::Logits(l) => Ok(self.sampler.sample(l, history)),
+            other => Err(super::wrong_row("HostFullRow", &other)),
+        }
+    }
+
+    fn sample_stream(&mut self, row: RowRef<'_>, history: &[i32], rng: &mut Rng) -> Result<i32> {
+        match row {
+            RowRef::Logits(l) => Ok(self.sampler.sample_with(l, history, rng)),
             other => Err(super::wrong_row("HostFullRow", &other)),
         }
     }
@@ -281,6 +303,66 @@ mod tests {
         assert_eq!(b.sample(RowRef::Logits(&[0.0, 2.0, 1.0]), &[]).unwrap(), 1);
         assert!(b.sample(RowRef::Id(3), &[]).is_err());
         assert!(b.sample(RowRef::TopK { vals: &[1.0], ids: &[0] }, &[]).is_err());
+    }
+
+    #[test]
+    fn explicit_stream_reproduces_internal_stream() {
+        // sample() is sample_with() over the internal rng: a backend seeded
+        // with s and an external Rng::new(s) stream must produce identical
+        // tokens call for call — the contract the rollout path's derived
+        // per-request streams rely on.
+        let cfg = SamplerConfig {
+            temperature: 0.8,
+            top_k: 6,
+            top_p: 0.9,
+            ..Default::default()
+        };
+        let mut internal = HostFullRow::new(cfg.clone(), 13);
+        let mut external = HostFullRow::new(cfg, 999); // its own rng never consulted
+        let mut stream = crate::util::rng::Rng::new(13);
+        let rows: Vec<Vec<f32>> = (0..30)
+            .map(|r| (0..24).map(|i| ((i * 5 + r * 3) % 17) as f32 / 4.0).collect())
+            .collect();
+        for row in &rows {
+            assert_eq!(
+                internal.sample(RowRef::Logits(row), &[]).unwrap(),
+                external.sample_stream(RowRef::Logits(row), &[], &mut stream).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn stream_isolation_across_interleaved_requests() {
+        // Two per-request streams interleaved in any order give each
+        // request the same tokens it would get alone — admission-order
+        // independence in miniature.
+        let cfg = SamplerConfig { temperature: 1.0, ..Default::default() };
+        let row: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).sin()).collect();
+        let solo = |seed: u64| -> Vec<i32> {
+            let mut b = HostFullRow::new(cfg.clone(), 0);
+            let mut rng = crate::util::rng::Rng::new(seed);
+            (0..10)
+                .map(|_| b.sample_stream(RowRef::Logits(&row), &[], &mut rng).unwrap())
+                .collect()
+        };
+        let (a_solo, b_solo) = (solo(1), solo(2));
+        let mut backend = HostFullRow::new(cfg, 0);
+        let mut ra = crate::util::rng::Rng::new(1);
+        let mut rb = crate::util::rng::Rng::new(2);
+        let mut a_mix = Vec::new();
+        let mut b_mix = Vec::new();
+        for i in 0..10 {
+            // Alternate which request samples first each step.
+            if i % 2 == 0 {
+                a_mix.push(backend.sample_stream(RowRef::Logits(&row), &[], &mut ra).unwrap());
+                b_mix.push(backend.sample_stream(RowRef::Logits(&row), &[], &mut rb).unwrap());
+            } else {
+                b_mix.push(backend.sample_stream(RowRef::Logits(&row), &[], &mut rb).unwrap());
+                a_mix.push(backend.sample_stream(RowRef::Logits(&row), &[], &mut ra).unwrap());
+            }
+        }
+        assert_eq!(a_mix, a_solo);
+        assert_eq!(b_mix, b_solo);
     }
 
     #[test]

@@ -174,10 +174,37 @@ impl PendingRow {
 /// run and hands each fetched row back through [`SamplingBackend::sample`];
 /// `history` is the sequence so far (repetition penalty — only meaningful
 /// for backends whose construction admits one).
+///
+/// [`SamplingBackend::sample`] consumes the backend's own seeded RNG — one
+/// global stream, which is reproducible only when every call happens in a
+/// fixed order. Continuous-batching rollout retires and admits sequences at
+/// data-dependent steps, so the interleaving of sample calls across
+/// requests is NOT fixed; [`SamplingBackend::sample_stream`] exists for
+/// that caller: the randomness comes from an explicit per-request
+/// [`Rng`] stream (derived from seed ⊕ request id by `crate::rollout`), so
+/// each request's token sequence is a pure function of its own stream no
+/// matter which other requests share the batch. Backends that consume no
+/// randomness (greedy) inherit the default, which forwards to `sample`.
 pub trait SamplingBackend {
     fn traffic(&self) -> TrafficClass;
 
     fn sample(&mut self, row: RowRef<'_>, history: &[i32]) -> Result<i32>;
+
+    /// Finish one row drawing randomness from the caller's `rng` stream
+    /// instead of the backend's global one (scratch buffers and filter
+    /// config are still the backend's). Stochastic backends must override
+    /// this to honor `rng`; the default forwards to
+    /// [`SamplingBackend::sample`] and is only correct for backends whose
+    /// `sample` consumes no randomness.
+    fn sample_stream(
+        &mut self,
+        row: RowRef<'_>,
+        history: &[i32],
+        rng: &mut crate::util::rng::Rng,
+    ) -> Result<i32> {
+        let _ = rng;
+        self.sample(row, history)
+    }
 }
 
 /// First-max argmax (ties toward the lower index — the convention shared

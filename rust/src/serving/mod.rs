@@ -35,7 +35,18 @@
 //! on host. The engine contract is the [`SlotEngine`] trait so the
 //! scheduling policy is unit-testable without artifacts; [`HybridEngine`]
 //! implements it over the `prefill_slot` / `decode_slots` (and
-//! `*_sampled`) AOT artifacts and the per-slot `KvCache` occupancy ledger.
+//! `*_sampled`) AOT artifacts and the per-slot `KvCache` occupancy ledger
+//! (and any `&mut E` borrows a scheduler for one phase — the rollout
+//! subsystem's shape).
+//!
+//! The scheduler serves two consumers: the serve loop (one request per
+//! client, completions returned per step) and RLHF experience generation
+//! (`crate::rollout`, which oversubscribes the queue with a whole prompt
+//! batch and streams completions into an `ExperienceBuffer` through the
+//! [`CompletionSink`] that [`Scheduler::step_into`] takes). Requests may
+//! carry their own RNG-stream seed ([`Request::seed`]) so stochastic
+//! sampling stays reproducible even though retirement — and therefore the
+//! order sample calls interleave across requests — is data-dependent.
 
 use std::collections::VecDeque;
 
@@ -44,6 +55,7 @@ use anyhow::{bail, Result};
 use crate::data::synthetic::Vocab;
 use crate::hybrid::HybridEngine;
 use crate::sampling::{PendingRow, SampleOut, SamplingBackend, TrafficClass};
+use crate::util::rng::Rng;
 
 /// What the scheduler needs from a generation engine with per-slot state.
 /// (Row strides are carried by [`SampleOut`]/[`PendingRow`] themselves, so
@@ -80,6 +92,56 @@ pub trait SlotEngine {
     fn release_slot(&mut self, slot: usize) -> Result<()>;
     /// Accounting hook: `n` tokens were sampled this step.
     fn note_generated(&mut self, _n: u64) {}
+}
+
+/// A mutable borrow of a slot engine is itself a slot engine — this is what
+/// lets the rollout subsystem build a [`Scheduler`] over `&mut HybridEngine`
+/// for the duration of one experience-generation phase and hand the engine
+/// back for scoring and training afterwards (the serve loop keeps owning
+/// its engine through `Scheduler<HybridEngine>` as before).
+impl<E: SlotEngine> SlotEngine for &mut E {
+    fn n_slots(&self) -> usize {
+        (**self).n_slots()
+    }
+
+    fn prompt_len(&self) -> usize {
+        (**self).prompt_len()
+    }
+
+    fn max_new_tokens(&self) -> usize {
+        (**self).max_new_tokens()
+    }
+
+    fn begin_serving(&mut self) -> Result<()> {
+        (**self).begin_serving()
+    }
+
+    fn prefill_slot(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        traffic: TrafficClass,
+    ) -> Result<PendingRow> {
+        (**self).prefill_slot(slot, prompt, traffic)
+    }
+
+    fn decode_slots(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        traffic: TrafficClass,
+    ) -> Result<SampleOut> {
+        (**self).decode_slots(toks, pos, active, traffic)
+    }
+
+    fn release_slot(&mut self, slot: usize) -> Result<()> {
+        (**self).release_slot(slot)
+    }
+
+    fn note_generated(&mut self, n: u64) {
+        (**self).note_generated(n)
+    }
 }
 
 impl SlotEngine for HybridEngine {
@@ -137,6 +199,13 @@ pub struct Request {
     /// Requested generation budget; capped at the engine's
     /// [`SlotEngine::max_new_tokens`].
     pub max_new: usize,
+    /// Seed of this request's own RNG stream. `Some(s)` makes the
+    /// scheduler finish every one of the request's tokens through
+    /// [`SamplingBackend::sample_stream`] over `Rng::new(s)`, so the
+    /// sampled sequence is a pure function of `(prompt, s)` no matter what
+    /// else shares the batch — the rollout reproducibility contract.
+    /// `None` (the serve loop) uses the backend's global stream.
+    pub seed: Option<u64>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -181,11 +250,15 @@ struct Seq {
     /// Pending sampling view predicting the next token (from the
     /// admission prefill or the last fused decode).
     pending: PendingRow,
+    /// Per-request RNG stream (see [`Request::seed`]); `None` falls back
+    /// to the backend's global stream.
+    rng: Option<Rng>,
     enqueued_step: u64,
     admitted_step: u64,
 }
 
-/// Counters for the serve log and the `serve_loop` bench.
+/// Counters for the serve log, the `serve_loop` bench, and the rollout
+/// bench's slot-occupancy accounting.
 #[derive(Debug, Default, Clone)]
 pub struct SchedStats {
     pub submitted: u64,
@@ -201,12 +274,45 @@ pub struct SchedStats {
     pub slot_steps_active: u64,
     /// Total slot-steps across all decode calls (`decode_calls * n_slots`).
     pub slot_steps_total: u64,
+    /// Tokens sampled across all steps (every live slot, every tick).
+    pub tokens_sampled: u64,
+    /// Sequences retired on EOS (the early exits continuous batching
+    /// converts into fresh admissions instead of dead decode rows).
+    pub retired_eos: u64,
+    /// Sequences retired on the per-request/engine budget.
+    pub retired_length: u64,
 }
 
 impl SchedStats {
     /// Fraction of decode-call slot capacity that carried live sequences.
     pub fn utilization(&self) -> f64 {
         self.slot_steps_active as f64 / self.slot_steps_total.max(1) as f64
+    }
+
+    /// Fraction of decode-call slot capacity burned on dead rows — the
+    /// slot-bubble metric the rollout bench tracks against the fixed-batch
+    /// baseline (0 until the first decode call).
+    pub fn bubble_fraction(&self) -> f64 {
+        if self.slot_steps_total == 0 {
+            0.0
+        } else {
+            1.0 - self.utilization()
+        }
+    }
+}
+
+/// Where retired sequences land. [`Scheduler::step_into`] pushes each
+/// completion into the caller's sink the moment its slot frees — a `Vec`
+/// for the serve loop, the rollout `ExperienceBuffer` for experience
+/// generation, or anything else that wants completions streamed instead of
+/// collected per step.
+pub trait CompletionSink {
+    fn complete(&mut self, c: Completion);
+}
+
+impl CompletionSink for Vec<Completion> {
+    fn complete(&mut self, c: Completion) {
+        self.push(c);
     }
 }
 
@@ -287,11 +393,24 @@ impl<E: SlotEngine> Scheduler<E> {
         self.queue.is_empty() && self.slots.iter().all(|s| s.is_none())
     }
 
+    /// One scheduler iteration returning this step's completions as a
+    /// `Vec` — a convenience wrapper over [`Scheduler::step_into`].
+    pub fn step(&mut self, backend: &mut dyn SamplingBackend) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        self.step_into(backend, &mut out)?;
+        Ok(out)
+    }
+
     /// One scheduler iteration: admit → sample/retire → fused decode. The
     /// backend decides the artifact family (host full-row vs device
-    /// sampled) and finishes each pending row into a token id. Returns the
-    /// sequences that finished this step.
-    pub fn step(&mut self, backend: &mut dyn SamplingBackend) -> Result<Vec<Completion>> {
+    /// sampled) and finishes each pending row into a token id; sequences
+    /// that finish this step stream into `sink` in slot order. Returns how
+    /// many retired.
+    pub fn step_into(
+        &mut self,
+        backend: &mut dyn SamplingBackend,
+        sink: &mut dyn CompletionSink,
+    ) -> Result<usize> {
         let b = self.slots.len();
         let traffic = backend.traffic();
         self.stats.steps += 1;
@@ -317,6 +436,7 @@ impl<E: SlotEngine> Scheduler<E> {
                 generated: 0,
                 max_new,
                 pending,
+                rng: req.seed.map(Rng::new),
                 enqueued_step,
                 admitted_step: self.step_idx,
             });
@@ -324,13 +444,17 @@ impl<E: SlotEngine> Scheduler<E> {
 
         // 2. Sample one token per live slot; retire finished sequences
         // immediately so their slots are admissible next step.
-        let mut completions = Vec::new();
+        let mut retired = 0usize;
         let mut sampled = 0u64;
         for slot in 0..b {
             let Some(seq) = self.slots[slot].as_mut() else {
                 continue;
             };
-            let t = backend.sample(seq.pending.as_row(), &seq.tokens)?;
+            let t = match seq.rng.as_mut() {
+                // Per-request stream: this sequence's draws are its own.
+                Some(rng) => backend.sample_stream(seq.pending.as_row(), &seq.tokens, rng)?,
+                None => backend.sample(seq.pending.as_row(), &seq.tokens)?,
+            };
             seq.tokens.push(t);
             seq.generated += 1;
             sampled += 1;
@@ -345,7 +469,12 @@ impl<E: SlotEngine> Scheduler<E> {
                 let seq = self.slots[slot].take().unwrap();
                 self.engine.release_slot(slot)?;
                 self.stats.completed += 1;
-                completions.push(Completion {
+                match finish {
+                    FinishReason::Eos => self.stats.retired_eos += 1,
+                    FinishReason::Length => self.stats.retired_length += 1,
+                }
+                retired += 1;
+                sink.complete(Completion {
                     id: seq.id,
                     slot,
                     prompt_len: seq.prompt_len,
@@ -357,6 +486,7 @@ impl<E: SlotEngine> Scheduler<E> {
                 });
             }
         }
+        self.stats.tokens_sampled += sampled;
         self.engine.note_generated(sampled);
 
         // 3. One fused decode over every still-live slot, each at its own
@@ -391,7 +521,7 @@ impl<E: SlotEngine> Scheduler<E> {
         }
 
         self.step_idx += 1;
-        Ok(completions)
+        Ok(retired)
     }
 
     /// Drive the loop until queue and slots drain; returns all completions
@@ -565,7 +695,7 @@ mod tests {
     fn req(id: u64, eos_after: i32, max_new: usize) -> Request {
         let mut prompt = vec![CONTENT; SP];
         prompt[0] = eos_after;
-        Request { id, prompt, max_new }
+        Request { id, prompt, max_new, seed: None }
     }
 
     #[test]
@@ -662,7 +792,7 @@ mod tests {
     fn wrong_prompt_length_is_rejected_at_submit() {
         let mut sched = Scheduler::new(MockEngine::new(1)).unwrap();
         let err = sched
-            .submit(Request { id: 0, prompt: vec![1; SP + 1], max_new: 4 })
+            .submit(Request { id: 0, prompt: vec![1; SP + 1], max_new: 4, seed: None })
             .unwrap_err();
         assert!(format!("{err:#}").contains("prompt must be"));
         assert!(sched.is_idle());
@@ -697,6 +827,88 @@ mod tests {
         }
         assert!(host_eng.decode_traffic.iter().all(|t| *t == TrafficClass::FullRow));
         assert!(dev_eng.decode_traffic.iter().all(|t| *t == TrafficClass::DeviceIds));
+    }
+
+    #[test]
+    fn step_into_streams_completions_and_counts_retirements() {
+        // The sink generalization: completions land in the caller's sink
+        // the step they retire, and the returned count matches.
+        struct Tally {
+            ids: Vec<u64>,
+        }
+        impl CompletionSink for Tally {
+            fn complete(&mut self, c: Completion) {
+                self.ids.push(c.id);
+            }
+        }
+        let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+        let mut sampler = greedy();
+        sched.submit(req(0, 1, SG)).unwrap(); // C EOS -> retires tick 2
+        sched.submit(req(1, 100, 3)).unwrap(); // length-capped at 3
+        let mut sink = Tally { ids: Vec::new() };
+        let mut per_step = Vec::new();
+        while !sched.is_idle() {
+            per_step.push(sched.step_into(&mut sampler, &mut sink).unwrap());
+        }
+        assert_eq!(sink.ids, vec![0, 1]);
+        assert_eq!(per_step.iter().sum::<usize>(), 2);
+        assert_eq!(sched.stats.retired_eos, 1);
+        assert_eq!(sched.stats.retired_length, 1);
+        assert_eq!(
+            sched.stats.tokens_sampled,
+            sched.stats.retired_eos * 2 + 3,
+            "every sampled token counted"
+        );
+    }
+
+    #[test]
+    fn bubble_fraction_complements_utilization() {
+        let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+        let mut sampler = greedy();
+        assert_eq!(sched.stats.bubble_fraction(), 0.0, "no decode calls yet");
+        // One long request on a 2-slot engine: every decode call carries a
+        // dead row, so the bubble fraction is exactly 1 - utilization.
+        sched.submit(req(0, 100, 4)).unwrap();
+        sched.run_until_idle(&mut sampler).unwrap();
+        let st = &sched.stats;
+        assert!(st.slot_steps_total > 0);
+        assert!((st.bubble_fraction() - (1.0 - st.utilization())).abs() < 1e-12);
+        assert!(st.bubble_fraction() >= 0.5 - 1e-12, "{}", st.bubble_fraction());
+    }
+
+    #[test]
+    fn seeded_requests_use_their_own_streams() {
+        // MockEngine emits one-hot rows, so to expose the RNG plumbing we
+        // sample at high temperature over the scripted logits: a request
+        // with a seed must reproduce its solo token sequence even when
+        // co-scheduled with other seeded requests (admission-order
+        // independence), while the scripted plan pins nothing else.
+        let stochastic = || {
+            HostFullRow::new(
+                SamplerConfig { temperature: 50.0, ..Default::default() },
+                1234,
+            )
+        };
+        let run = |reqs: Vec<Request>| -> Vec<Completion> {
+            let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+            for r in reqs {
+                sched.submit(r).unwrap();
+            }
+            let mut all = sched.run_until_idle(&mut stochastic()).unwrap();
+            all.sort_by_key(|c| c.id);
+            all
+        };
+        let seeded = |id: u64, seed: u64| Request { seed: Some(seed), ..req(id, 100, 4) };
+        let solo = run(vec![seeded(0, 7)]);
+        let crowd = run(vec![seeded(0, 7), seeded(1, 8), seeded(2, 9)]);
+        assert_eq!(
+            solo[0].tokens, crowd[0].tokens,
+            "per-request stream must not depend on co-scheduled load"
+        );
+        // And a different seed gives an (almost surely) different path for
+        // the same prompt under the same flat-ish distribution.
+        let other = run(vec![seeded(0, 1000)]);
+        assert_ne!(solo[0].tokens, other[0].tokens, "seed must steer the stream");
     }
 
     #[test]

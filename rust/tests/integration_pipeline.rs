@@ -10,11 +10,17 @@ use dschat::data::synthetic::TaskGen;
 use dschat::data::{Blend, DataSplit};
 use dschat::hybrid::{EngineMode, HybridEngine};
 use dschat::pipeline;
-use dschat::runtime::Engine;
+use dschat::runtime::{Engine, Manifest};
 use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig};
 use dschat::util::rng::Rng;
 
 const DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny");
+
+/// The scheduler-rollout tests additionally need the serving entry points;
+/// stale artifact dirs skip them with a re-run hint instead of failing.
+fn serving_artifacts() -> bool {
+    Manifest::load(DIR).map(|m| m.has_serving()).unwrap_or(false)
+}
 
 fn setup(with_ema: bool) -> (HybridEngine, Blend) {
     let engine = Rc::new(Engine::cpu().unwrap());
@@ -276,6 +282,129 @@ fn staged_ppo_epochs_match_unstaged_and_cut_uploads() {
     assert!(
         staged_up < legacy_up,
         "staged epochs must upload fewer bytes: {staged_up} vs {legacy_up}"
+    );
+}
+
+#[test]
+fn generate_experience_rejects_wrong_prompt_count() {
+    // The fixed path's batch/artifact mismatch is a config error pointing
+    // at rollout_batch, not a panic.
+    let (mut he, mut blend) = setup(false);
+    let b = he.manifest().batch;
+    let mut rng = Rng::new(5);
+    let prompts = blend.prompt_batch(&mut rng, b + 1);
+    let mut trainer = PpoTrainer::new(PpoConfig::default(), 3);
+    let err = trainer.generate_experience(&mut he, &prompts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rollout_batch"), "{msg}");
+    // And the rollout path rejects non-multiples the same way.
+    let err = trainer.generate_experience_rollout(&mut he, &prompts).unwrap_err();
+    assert!(format!("{err:#}").contains("multiple"), "{err:#}");
+}
+
+#[test]
+fn scheduler_rollout_greedy_matches_fixed_generate_golden() {
+    // The rollout golden: for b equal-length prompts under greedy
+    // decoding, the continuous-batching rollout must produce the SAME
+    // experience as fixed-batch generate, bit for bit — tokens, response
+    // lengths, and every scored tensor. Proves the per-slot serving
+    // artifacts and the scheduler introduce no drift vs the lockstep path.
+    let (mut he, mut blend) = setup(false);
+    if !serving_artifacts() {
+        eprintln!("skipping: {DIR} missing serving artifacts (run `make artifacts`)");
+        return;
+    }
+    let b = he.manifest().batch;
+    let mut rng = Rng::new(31);
+    let prompts = blend.prompt_batch(&mut rng, b);
+    let greedy = SamplerConfig { greedy: true, ..Default::default() };
+    let mut fixed_tr = PpoTrainer::with_backend(
+        PpoConfig::default(),
+        Box::new(HostFullRow::new(greedy.clone(), 0)),
+        0,
+    );
+    let exp_fixed = fixed_tr.generate_experience(&mut he, &prompts).unwrap();
+    let mut roll_tr =
+        PpoTrainer::with_backend(PpoConfig::default(), Box::new(HostFullRow::new(greedy, 0)), 0);
+    let (exps, stats) = roll_tr.generate_experience_rollout(&mut he, &prompts).unwrap();
+    assert_eq!(exps.len(), 1, "b prompts flush exactly one experience batch");
+    let exp_roll = &exps[0];
+    assert_eq!(
+        exp_fixed.tokens, exp_roll.tokens,
+        "scheduler rollout must reproduce fixed-batch generate bit-exactly"
+    );
+    assert_eq!(exp_fixed.resp_lens, exp_roll.resp_lens);
+    assert_eq!(exp_fixed.rm_scores, exp_roll.rm_scores);
+    assert_eq!(exp_fixed.true_rewards, exp_roll.true_rewards);
+    assert_eq!(exp_fixed.old_logp, exp_roll.old_logp);
+    assert_eq!(exp_fixed.old_values, exp_roll.old_values);
+    assert_eq!(exp_fixed.advantages, exp_roll.advantages);
+    assert_eq!(exp_fixed.returns, exp_roll.returns);
+    assert_eq!(exp_fixed.mask, exp_roll.mask);
+    assert_eq!(stats.prefills as usize, b, "every prompt admitted once");
+}
+
+#[test]
+fn rollout_batch_above_artifact_batch_trains_through_scheduler() {
+    // The tentpole acceptance: PPO trains with rollout_batch > b — the
+    // prompt queue oversubscribes the slots and each flushed group of b
+    // completions becomes its own training batch.
+    let (mut he, mut blend) = setup(true);
+    if !serving_artifacts() {
+        eprintln!("skipping: {DIR} missing serving artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut rng = Rng::new(3);
+    let recipe = TrainRecipe { sft_steps: 10, ..Default::default() };
+    pipeline::run_sft(&mut he, &mut blend, &recipe, &mut rng, None).unwrap();
+    let b = he.manifest().batch;
+    let cfg = PpoConfig { ppo_epochs: 1, rollout_batch: 2 * b, ..Default::default() };
+    let mut trainer = PpoTrainer::new(cfg, 9);
+    let stats = trainer.iteration(&mut he, &mut blend, &mut rng, 1e-4, 5e-4).unwrap();
+    assert_eq!(stats.rollout_groups, 2, "2b prompts flush two training batches");
+    assert!(stats.true_reward.is_finite());
+    assert!((0.0..=1.0).contains(&stats.true_reward), "{}", stats.true_reward);
+    assert!(stats.rm_score.is_finite());
+    assert!(stats.actor_loss.is_finite());
+    assert!(stats.critic_loss.is_finite());
+    assert!(stats.gen_tokens > 0);
+    assert!(
+        (0.0..1.0).contains(&stats.rollout_bubble),
+        "bubble fraction out of range: {}",
+        stats.rollout_bubble
+    );
+}
+
+#[test]
+fn stochastic_rollout_is_reproducible_across_runs() {
+    // Per-request derived RNG streams: the same prompts, base seed, and
+    // params reproduce every sampled sequence bit for bit even though
+    // retirement order (and hence sample-call interleaving) is
+    // data-dependent.
+    let (mut he, mut blend) = setup(false);
+    if !serving_artifacts() {
+        eprintln!("skipping: {DIR} missing serving artifacts (run `make artifacts`)");
+        return;
+    }
+    let b = he.manifest().batch;
+    let mut rng = Rng::new(41);
+    let prompts = blend.prompt_batch(&mut rng, 2 * b);
+    let cfg = PpoConfig { temperature: 0.9, top_p: 0.95, ..Default::default() };
+    let mut t1 = PpoTrainer::new(cfg.clone(), 17);
+    let (e1, _) = t1.generate_experience_rollout(&mut he, &prompts).unwrap();
+    let mut t2 = PpoTrainer::new(cfg, 17);
+    let (e2, _) = t2.generate_experience_rollout(&mut he, &prompts).unwrap();
+    assert_eq!(e1.len(), e2.len());
+    for (a, b) in e1.iter().zip(&e2) {
+        assert_eq!(a.tokens, b.tokens, "stochastic rollout must be replayable");
+        assert_eq!(a.resp_lens, b.resp_lens);
+    }
+    // ...while a SECOND rollout on the same trainer derives a fresh round
+    // seed and must not replay round 0's draws (decorrelated iterations).
+    let (e3, _) = t1.generate_experience_rollout(&mut he, &prompts).unwrap();
+    assert_ne!(
+        e1[0].tokens, e3[0].tokens,
+        "consecutive rollout rounds must not replay each other's streams"
     );
 }
 

@@ -17,12 +17,7 @@ use dschat::util::rng::Rng;
 const DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny");
 
 fn serving_artifacts() -> bool {
-    match Manifest::load(DIR) {
-        Ok(m) => {
-            m.artifacts.contains_key("prefill_slot") && m.artifacts.contains_key("decode_slots")
-        }
-        Err(_) => false,
-    }
+    Manifest::load(DIR).map(|m| m.has_serving()).unwrap_or(false)
 }
 
 fn sampled_artifacts() -> bool {
@@ -67,11 +62,15 @@ fn run_staggered_with(
     let mut sched = Scheduler::new(he).unwrap();
     let mut done = Vec::new();
     for (id, p) in prompts.iter().enumerate().take(2) {
-        sched.submit(Request { id: id as u64, prompt: p.clone(), max_new: sg }).unwrap();
+        sched
+            .submit(Request { id: id as u64, prompt: p.clone(), max_new: sg, seed: None })
+            .unwrap();
     }
     done.extend(sched.step(backend).unwrap());
     for (id, p) in prompts.iter().enumerate().skip(2) {
-        sched.submit(Request { id: id as u64, prompt: p.clone(), max_new: sg }).unwrap();
+        sched
+            .submit(Request { id: id as u64, prompt: p.clone(), max_new: sg, seed: None })
+            .unwrap();
     }
     done.extend(sched.run_until_idle(backend).unwrap());
     done.sort_by_key(|c| c.id);
@@ -231,7 +230,7 @@ fn donated_decode_keeps_cache_accounting_and_reuse_honest() {
     let kv_live = sched.engine.memory.live_named("kv_cache");
     assert!(kv_live > 0);
     let p0 = task.sample_prompt(&mut rng).tokens;
-    sched.submit(Request { id: 0, prompt: p0, max_new: sg }).unwrap();
+    sched.submit(Request { id: 0, prompt: p0, max_new: sg, seed: None }).unwrap();
     let done = sched.run_until_idle(&mut sampler).unwrap();
     assert_eq!(done.len(), 1);
     assert!(done[0].generated >= 1);
@@ -240,7 +239,7 @@ fn donated_decode_keeps_cache_accounting_and_reuse_honest() {
     assert_eq!(sched.engine.memory.live_named("kv_cache"), kv_live);
     assert_eq!(sched.engine.free_slots(), b);
     let p1 = task.sample_prompt(&mut rng).tokens;
-    sched.submit(Request { id: 1, prompt: p1, max_new: sg }).unwrap();
+    sched.submit(Request { id: 1, prompt: p1, max_new: sg, seed: None }).unwrap();
     let done = sched.run_until_idle(&mut sampler).unwrap();
     assert_eq!(done.len(), 1, "slot reuse after donated decode steps");
     assert_eq!(done[0].slot, 0);

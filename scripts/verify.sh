@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
 # One entry point for builders and CI (also reachable as `make verify`):
 #   tier-1:  cargo build --release && cargo test -q
-#   perf:    decode-loop + serve-loop benches in smoke mode, and the serve
-#            example's --demo path (all need `make artifacts` output)
+#   perf:    decode-loop + rollout + serve-loop benches in smoke mode, and
+#            the serve example's --demo path (all need `make artifacts`
+#            output; the rollout phase additionally needs the serving
+#            entries and emits BENCH_rollout.json)
 #
 # Integration tests that need artifacts/tiny fail with a "make artifacts"
 # hint when the artifacts are missing; unit/property tests always run.
@@ -25,7 +27,7 @@ echo "== verify: tier-1 tests =="
 cargo test -q
 
 if [ -f artifacts/tiny/manifest.json ]; then
-    echo "== verify: decode bench (smoke; per-backend host bytes/token) =="
+    echo "== verify: decode + rollout bench (smoke; per-backend host bytes/token) =="
     cargo bench --bench runtime_e2e -- --smoke
     echo "verify: wrote BENCH_decode.json"
     if grep -q '"decode_step_sampled"' artifacts/tiny/manifest.json; then
@@ -34,6 +36,9 @@ if [ -f artifacts/tiny/manifest.json ]; then
         echo "verify: artifacts predate device-side sampling — decode bench covered host backend only (re-run \`make artifacts\`)"
     fi
     if grep -q '"prefill_slot"' artifacts/tiny/manifest.json; then
+        # runtime_e2e's rollout phase (continuous vs fixed experience
+        # generation) ran above and wrote BENCH_rollout.json.
+        echo "verify: wrote BENCH_rollout.json (continuous rollout smoke ran in the bench)"
         echo "== verify: serve demo (continuous batching smoke) =="
         cargo run --release --example serve -- --demo
         if grep -q '"decode_slots_sampled"' artifacts/tiny/manifest.json; then
@@ -44,7 +49,7 @@ if [ -f artifacts/tiny/manifest.json ]; then
         cargo bench --bench serve_loop -- --smoke
         echo "verify: wrote BENCH_serve.json"
     else
-        echo "verify: artifacts predate continuous batching — skipping serve smokes (re-run \`make artifacts\`)"
+        echo "verify: artifacts predate continuous batching — skipping rollout/serve smokes (re-run \`make artifacts\`)"
     fi
 else
     echo "verify: artifacts/tiny missing — skipping benches (run \`make artifacts\`)"
