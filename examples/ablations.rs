@@ -10,6 +10,11 @@
 //!     continuous-batching scheduler rollout (`dschat::rollout`) on a
 //!     heterogeneous-budget prompt queue — tok/s and slot-bubble fraction
 //!     (`--rollout fixed|continuous|both` selects which paths run).
+//!  6. Prompt-length traffic mix on the continuous scheduler: all prompts
+//!     at the artifact window vs heterogeneous TRUE lengths through the
+//!     left-padded variable-length admission path — tok/s, slot-bubble,
+//!     and the padded-token overhead fraction (needs artifacts with the
+//!     `padded_prompts` capability).
 //!
 //! ```text
 //! cargo run --release --example ablations -- [--run tiny] [--quality] \
@@ -41,6 +46,7 @@ fn main() -> anyhow::Result<()> {
     ablation_buffers(&dir)?;
     ablation_tp_vs_zero_generation();
     ablation_rollout(&dir, &args.str("rollout", "both"))?;
+    ablation_mixed_lengths(&dir)?;
     if args.bool("quality", false) {
         ablation_quality(&dir)?;
     } else {
@@ -111,6 +117,60 @@ fn ablation_rollout(dir: &str, which: &str) -> anyhow::Result<()> {
             format!("{:.3}", cont.secs),
             format!("{:.1}", cont.tok_per_sec()),
             format!("{:.0}%", 100.0 * cont.bubble),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Ablation 6: prompt-length traffic mix on the continuous scheduler —
+/// every prompt at the artifact's fixed window vs heterogeneous TRUE
+/// lengths (uniform in [prompt_len/2, prompt_len], left-padded at
+/// admission). Reports useful tok/s, slot-bubble, and the padded-token
+/// overhead fraction through the SAME `dschat::examples_support`
+/// accounting the serve/rollout benches use, so the ablation table and
+/// the BENCH JSONs cannot diverge.
+fn ablation_mixed_lengths(dir: &str) -> anyhow::Result<()> {
+    use dschat::examples_support::{mixed_prompts, rollout_continuous};
+
+    let engine = Rc::new(Engine::cpu()?);
+    let mut he = HybridEngine::init(engine, dir, 0, false)?;
+    let m = he.manifest();
+    if !m.has_serving() || !m.padded_prompts {
+        println!(
+            "(artifacts predate variable-length prompts — mixed-length ablation skipped; \
+             re-run `make artifacts`)"
+        );
+        return Ok(());
+    }
+    let (b, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut rng = Rng::new(29);
+    let n = 4 * b;
+    let budgets: Vec<usize> =
+        (0..n).map(|_| rng.range((sg / 4).max(1) as i64, sg as i64 + 1) as usize).collect();
+    let fixed_prompts: Vec<Vec<i32>> =
+        (0..n).map(|_| task.sample_prompt(&mut rng).tokens).collect();
+    let mixed = mixed_prompts(&task, &mut rng, n, sp / 2);
+    let greedy = || HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+
+    // Warm the serving artifacts before timing either traffic mix.
+    rollout_continuous(&mut he, &fixed_prompts[..b], &budgets[..b], 0, &mut greedy())?;
+
+    let mut t = Table::new(
+        "Ablation 6 — prompt-length traffic mix (continuous scheduler, real CPU PJRT)",
+        &["Traffic", "secs", "useful tok/s", "slot bubble", "pad overhead"],
+    );
+    for (label, prompts) in
+        [("fixed length (all = prompt_len)", &fixed_prompts), ("mixed length (left-padded)", &mixed)]
+    {
+        let r = rollout_continuous(&mut he, prompts, &budgets, 0, &mut greedy())?;
+        t.row(vec![
+            label.into(),
+            format!("{:.3}", r.secs),
+            format!("{:.1}", r.tok_per_sec()),
+            format!("{:.0}%", 100.0 * r.bubble),
+            format!("{:.0}%", 100.0 * r.pad_overhead),
         ]);
     }
     t.print();

@@ -6,7 +6,7 @@
 //! ```text
 //! make artifacts && cargo run --release --example e2e_rlhf -- \
 //!     [--run small] [--sft-steps 800] [--rm-steps 400] [--ppo-iters 200] \
-//!     [--rollout fixed|continuous] [--rollout-batch N]
+//!     [--rollout fixed|continuous] [--rollout-batch N] [--min-prompt-len L]
 //! ```
 //!
 //! `--rollout continuous` streams Step-3 experience generation through the
@@ -14,7 +14,10 @@
 //! prompts per PPO iteration (default 2x the artifact batch, must be a
 //! multiple of it) share the KV slots, EOS-retired rows admit the next
 //! prompt immediately, and each group of `b` completions trains as its own
-//! PPO batch. `--rollout fixed` (default) keeps the lockstep
+//! PPO batch. `--min-prompt-len L` additionally draws each rollout
+//! prompt's TRUE length uniformly from `[L, prompt_len]` (left-padded
+//! variable-length admission; needs artifacts with the `padded_prompts`
+//! capability). `--rollout fixed` (default) keeps the lockstep
 //! `HybridEngine::generate` path with exactly `b` prompts.
 //!
 //! Recorded in EXPERIMENTS.md (§Real end-to-end run).
@@ -87,11 +90,28 @@ fn main() -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown --rollout {other:?} (fixed|continuous)"),
     };
+    let min_prompt_len = args.usize("min-prompt-len", 0);
+    if min_prompt_len > 0 {
+        anyhow::ensure!(
+            rollout_batch > 0,
+            "--min-prompt-len needs --rollout continuous (the fixed path generates \
+             exact-length prompts only)"
+        );
+        anyhow::ensure!(
+            min_prompt_len <= sp,
+            "--min-prompt-len {min_prompt_len} exceeds the artifact prompt window {sp}"
+        );
+    }
     if rollout_batch > 0 {
         println!(
-            "rollout: continuous ({} prompts/iter through the slot scheduler, {} PPO batches)",
+            "rollout: continuous ({} prompts/iter through the slot scheduler, {} PPO batches{})",
             rollout_batch,
-            rollout_batch / batch
+            rollout_batch / batch,
+            if min_prompt_len > 0 {
+                format!(", prompt lengths {}..={sp}", min_prompt_len.max(TaskGen::MIN_PROMPT_LEN))
+            } else {
+                String::new()
+            }
         );
     }
 
@@ -110,6 +130,7 @@ fn main() -> anyhow::Result<()> {
             kl_coef: args.f64("kl-coef", 0.05) as f32,
             ppo_epochs: 1,
             rollout_batch,
+            min_prompt_len,
             ..Default::default()
         },
         ..Default::default()

@@ -4,11 +4,15 @@
 //!
 //! # Protocol
 //!
-//! Newline-delimited over TCP: a request line is `mode a [b]` (e.g.
-//! `count 10 12`, modes `repeat|constant|count|mirror`); the response line
-//! is the detokenized generation plus the ground-truth score. One
-//! in-flight request per connection; malformed lines get a parse error
-//! reply and cost no model time.
+//! Newline-delimited over TCP: a request line is `mode a [b [len]]` (e.g.
+//! `count 10 12`, `repeat 10 11 9`; modes `repeat|constant|count|mirror`);
+//! the response line is the detokenized generation plus the ground-truth
+//! score. The optional `len` is the prompt's TRUE length — shorter
+//! prompts ride the left-padded variable-length admission path when the
+//! artifacts carry the `padded_prompts` capability (clamped to the
+//! structural floor and the artifact window). One in-flight request per
+//! connection; malformed lines get a parse error reply and cost no model
+//! time.
 //!
 //! # Scheduling
 //!
@@ -83,9 +87,17 @@ fn parse_request(task: &TaskGen, line: &str) -> Option<Prompt> {
     let (lo, hi) = task.vocab.content_range();
     let a = it.next()?.parse::<i32>().ok()?.clamp(lo, hi - 1);
     let b = it.next().and_then(|s| s.parse::<i32>().ok()).unwrap_or(a).clamp(lo, hi - 1);
-    // Re-synthesize the canonical prompt encoding.
+    // Optional TRUE prompt length: shorter prompts exercise the
+    // left-padded variable-length admission path (the scheduler pads them
+    // into the fixed artifact window and masks).
+    let len = it
+        .next()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(task.prompt_len)
+        .clamp(TaskGen::MIN_PROMPT_LEN, task.prompt_len);
+    // Re-synthesize the canonical prompt encoding at that length.
     let mut tokens = vec![Vocab::BOS, mode.token(), a, b];
-    while tokens.len() < task.prompt_len - 1 {
+    while tokens.len() < len - 1 {
         let i = tokens.len();
         tokens.push(if i % 2 == 0 { a } else { b });
     }
@@ -106,7 +118,7 @@ fn enqueue(
     let Some(prompt) = parse_request(task, &rl.text) else {
         let _ = rl
             .reply
-            .send("parse error: expected `repeat|constant|count|mirror a [b]`".into());
+            .send("parse error: expected `repeat|constant|count|mirror a [b [len]]`".into());
         return;
     };
     let id = *next_id;
@@ -140,6 +152,7 @@ fn main() -> anyhow::Result<()> {
     let device_ready = m.artifacts.contains_key("decode_slots_sampled")
         && m.artifacts.contains_key("prefill_slot_sampled")
         && m.sample_k > 0;
+    let padded_prompts = m.padded_prompts;
     let greedy_cfg = SamplerConfig { greedy: true, ..Default::default() };
     let use_device = match args.str("backend", "auto").as_str() {
         "device" => true,
@@ -166,8 +179,21 @@ fn main() -> anyhow::Result<()> {
     if args.bool("demo", false) {
         // In-process demo: more requests than batch slots, so admission,
         // backpressure, and slot reuse are all exercised without a socket.
-        let demo =
-            ["repeat 10 11", "count 20", "mirror 30 31", "constant 12", "count 9", "repeat 40 8"];
+        // With the `padded_prompts` capability, half the demo requests use
+        // short TRUE lengths (4th field) so mixed-length admission,
+        // left-padding, and the pad-overhead accounting run too.
+        let demo: &[&str] = if padded_prompts {
+            &[
+                "repeat 10 11",
+                "count 20 20 7",
+                "mirror 30 31 9",
+                "constant 12",
+                "count 9 9 5",
+                "repeat 40 8 6",
+            ]
+        } else {
+            &["repeat 10 11", "count 20", "mirror 30 31", "constant 12", "count 9", "repeat 40 8"]
+        };
         let mut prompts: HashMap<u64, Prompt> = HashMap::new();
         for (i, line) in demo.iter().enumerate() {
             let prompt = parse_request(&task, line).expect("demo lines parse");
@@ -185,10 +211,11 @@ fn main() -> anyhow::Result<()> {
             let p = &prompts[&c.id];
             let resp = c.response();
             println!(
-                "{:<16} -> {}  [ground-truth {:.2}; {} tok, {:?}, slot {}, waited {} steps]",
+                "{:<16} -> {}  [ground-truth {:.2}; plen {}, {} tok, {:?}, slot {}, waited {} steps]",
                 demo[c.id as usize],
                 task.detokenize(resp),
                 task.reward(p, resp),
+                c.prompt_len,
                 c.generated,
                 c.finish,
                 c.slot,
@@ -200,12 +227,14 @@ fn main() -> anyhow::Result<()> {
         let (up, down) = sched.engine.engine.bytes_moved();
         eprintln!(
             "[demo] {} reqs in {} steps ({} decode calls, slot utilization {:.0}% / \
-             bubble {:.0}%, {} eos + {} length retirements), host/tok: {} down {} up",
+             bubble {:.0}%, pad overhead {:.0}%, {} eos + {} length retirements), \
+             host/tok: {} down {} up",
             st.completed,
             st.steps,
             st.decode_calls,
             100.0 * st.utilization(),
             100.0 * st.bubble_fraction(),
+            100.0 * st.pad_fraction(),
             st.retired_eos,
             st.retired_length,
             fmt_bytes((down - down0) as f64 / toks as f64),
@@ -216,7 +245,7 @@ fn main() -> anyhow::Result<()> {
 
     let port = args.usize("port", 7878);
     let listener = TcpListener::bind(("127.0.0.1", port as u16))?;
-    eprintln!("serving on 127.0.0.1:{port} (one line per request: `mode a [b]`)");
+    eprintln!("serving on 127.0.0.1:{port} (one line per request: `mode a [b [len]]`)");
 
     // Accept loop on worker threads; generation on this (engine-owning)
     // thread. A dropped or broken client connection must never panic a

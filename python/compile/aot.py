@@ -182,14 +182,23 @@ def build_entries(rc):
     entries["critic_forward"] = (critic_forward, _pspecs(c, "scalar") + [tok], ["values"])
 
     # ---- step 3: generation ----------------------------------------------
+    # Every prompt-taking entry also takes a per-row `start` (valid-start)
+    # vector: prompts of true length L <= SP arrive LEFT-PADDED into the
+    # fixed [*, SP] shape with start = SP - L, attention masks keys before
+    # start, and position embeddings are shifted so the computation is
+    # bit-identical to the unpadded exact-length prompt. start == 0 is the
+    # full-length case (bit-compatible with the pre-padding artifacts).
+    # The capability is recorded as `padded_prompts` in the manifest config.
+    start_b = _spec((B,), jnp.int32)
+
     def gen_prefill(*args):
         P = list(args[:na])
-        prompt = args[na]
-        return model.prefill(a, model.unflatten_params(a, "lm", P), prompt, S)
+        prompt, start = args[na:]
+        return model.prefill(a, model.unflatten_params(a, "lm", P), prompt, S, start)
 
     entries["prefill"] = (
         gen_prefill,
-        _pspecs(a, "lm") + [_spec((B, SP), jnp.int32)],
+        _pspecs(a, "lm") + [_spec((B, SP), jnp.int32), start_b],
         ["logits", "k_cache", "v_cache"],
     )
 
@@ -219,23 +228,28 @@ def build_entries(rc):
     # batches (OpenRLHF/vLLM-style scheduling in front of the hybrid engine).
     def gen_prefill_slot(*args):
         P = list(args[:na])
-        kc, vc, prompt, slot = args[na:]
-        return model.prefill_slot(a, model.unflatten_params(a, "lm", P), kc, vc, prompt, slot)
+        kc, vc, prompt, slot, start = args[na:]
+        return model.prefill_slot(
+            a, model.unflatten_params(a, "lm", P), kc, vc, prompt, slot, start
+        )
 
     entries["prefill_slot"] = (
         gen_prefill_slot,
-        _pspecs(a, "lm") + [kv, kv, _spec((1, SP), jnp.int32), _spec((1,), jnp.int32)],
+        _pspecs(a, "lm")
+        + [kv, kv, _spec((1, SP), jnp.int32), _spec((1,), jnp.int32), _spec((1,), jnp.int32)],
         ["logits", "k_cache", "v_cache"],
     )
 
     def gen_decode_slots(*args):
         P = list(args[:na])
-        kc, vc, token, pos = args[na:]
-        return model.decode_slots(a, model.unflatten_params(a, "lm", P), kc, vc, token, pos)
+        kc, vc, token, pos, start = args[na:]
+        return model.decode_slots(
+            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, start
+        )
 
     entries["decode_slots"] = (
         gen_decode_slots,
-        _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((B,), jnp.int32)],
+        _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((B,), jnp.int32), start_b],
         ["logits", "k_cache", "v_cache"],
         kv_donate,
     )
@@ -252,12 +266,14 @@ def build_entries(rc):
 
     def gen_prefill_sampled(*args):
         P = list(args[:na])
-        prompt = args[na]
-        return model.prefill_sampled(a, model.unflatten_params(a, "lm", P), prompt, S, K)
+        prompt, start = args[na:]
+        return model.prefill_sampled(
+            a, model.unflatten_params(a, "lm", P), prompt, S, K, start
+        )
 
     entries["prefill_sampled"] = (
         gen_prefill_sampled,
-        _pspecs(a, "lm") + [_spec((B, SP), jnp.int32)],
+        _pspecs(a, "lm") + [_spec((B, SP), jnp.int32), start_b],
         sampled_outputs,
     )
 
@@ -277,27 +293,28 @@ def build_entries(rc):
 
     def gen_prefill_slot_sampled(*args):
         P = list(args[:na])
-        kc, vc, prompt, slot = args[na:]
+        kc, vc, prompt, slot, start = args[na:]
         return model.prefill_slot_sampled(
-            a, model.unflatten_params(a, "lm", P), kc, vc, prompt, slot, K
+            a, model.unflatten_params(a, "lm", P), kc, vc, prompt, slot, K, start
         )
 
     entries["prefill_slot_sampled"] = (
         gen_prefill_slot_sampled,
-        _pspecs(a, "lm") + [kv, kv, _spec((1, SP), jnp.int32), _spec((1,), jnp.int32)],
+        _pspecs(a, "lm")
+        + [kv, kv, _spec((1, SP), jnp.int32), _spec((1,), jnp.int32), _spec((1,), jnp.int32)],
         sampled_outputs,
     )
 
     def gen_decode_slots_sampled(*args):
         P = list(args[:na])
-        kc, vc, token, pos = args[na:]
+        kc, vc, token, pos, start = args[na:]
         return model.decode_slots_sampled(
-            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, K
+            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, K, start
         )
 
     entries["decode_slots_sampled"] = (
         gen_decode_slots_sampled,
-        _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((B,), jnp.int32)],
+        _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((B,), jnp.int32), start_b],
         sampled_outputs,
         kv_donate,
     )
@@ -385,9 +402,15 @@ def build(run_name: str, out_dir: str, only=None):
     rc = run_config(run_name)
     os.makedirs(out_dir, exist_ok=True)
     entries = build_entries(rc)
+    cfg_dict = to_dict(rc)
+    # Capability flag: the prompt-taking generation entries accept per-row
+    # valid-start vectors (left-padded variable-length prompts). The rust
+    # runtime refuses to admit short prompts against artifact sets that
+    # lack it (pre-padding builds parse with the flag absent -> false).
+    cfg_dict["padded_prompts"] = True
     manifest = {
         "run": run_name,
-        "config": to_dict(rc),
+        "config": cfg_dict,
         "actor_params": [
             {"name": n, "shape": list(s)} for n, s in model.param_spec(rc.actor, "lm")
         ],

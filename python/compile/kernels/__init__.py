@@ -1,7 +1,7 @@
 """L1 Pallas kernels (build-time only; lowered into the AOT HLO artifacts)."""
 
-from .attention import flash_attention, flash_attention_fwd
-from .decode import decode_attention, decode_attention_pb
+from .attention import flash_attention, flash_attention_fwd, flash_attention_padded_fwd
+from .decode import decode_attention, decode_attention_pb, decode_attention_pbs
 from .layernorm import layernorm
 from .adam_kernel import adam_update
 from .sampling import argmax_rows, top_k_rows
@@ -9,8 +9,10 @@ from .sampling import argmax_rows, top_k_rows
 __all__ = [
     "flash_attention",
     "flash_attention_fwd",
+    "flash_attention_padded_fwd",
     "decode_attention",
     "decode_attention_pb",
+    "decode_attention_pbs",
     "layernorm",
     "adam_update",
     "argmax_rows",

@@ -80,6 +80,85 @@ def flash_attention_fwd(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_
     )(q, k, v)
 
 
+def _flash_fwd_padded_kernel(
+    start_ref, q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len, scale
+):
+    """`_flash_fwd_kernel` plus a per-row valid-start mask (left padding).
+
+    Keys at positions < start are left-padding and masked alongside the
+    causal mask. The online softmax makes the padding contribute exact
+    zeros once a real key is seen (alpha = exp(-inf) = 0 rescales any
+    leading fully-masked block away), so real positions' outputs are
+    bit-identical to the unpadded computation; pad query rows (positions
+    < start) produce finite don't-care values (never NaN: a fully masked
+    block yields a uniform p, not 0/0).
+    """
+    qi = pl.program_id(1)
+    start = start_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale  # (block_q, dh)
+    d_head = q.shape[-1]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    n_kv_blocks = jax.lax.div(qi * block_q + block_q + block_k - 1, block_k)
+    n_kv_blocks = jnp.minimum(n_kv_blocks, seq_len // block_k)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # (block_q, block_k)
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        ok = (q_pos[:, None] >= k_pos[None, :]) & (k_pos[None, :] >= start)
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d_head), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kv_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_padded_fwd(
+    q, k, v, start, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K
+):
+    """Causal attention over left-padded rows (padded-prefill kernel).
+
+    q,k,v: [bh, s, dh]; start: [bh] int32 — row r's real tokens occupy
+    positions [start[r], s), keys before start[r] are masked. start == 0
+    everywhere reproduces `flash_attention_fwd` bit for bit (the extra
+    mask term is vacuously true). Correctness is pinned to
+    `ref.attention_padded_ref` by pytest.
+    """
+    bh, s, dh = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    scale = 1.0 / (dh**0.5)
+    grid = (bh, s // block_q)
+    kernel = functools.partial(
+        _flash_fwd_padded_kernel, block_q=block_q, block_k=block_k, seq_len=s, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, i: (b,)),
+            pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=True,
+    )(start, q, k, v)
+
+
 def _attention_bwd_ref(q, k, v, g):
     """Recompute-based backward (standard softmax-attention VJP, f32)."""
     s = q.shape[1]

@@ -90,3 +90,71 @@ def decode_attention_pb(q, k, v, pos, block_k=DEFAULT_BLOCK_K):
     q: [bh, dh]; k,v: [bh, smax, dh]; pos: [bh] int32 -> [bh, dh].
     """
     return _decode_call(q, k, v, pos, pl.BlockSpec((1,), lambda b: (b,)), block_k)
+
+
+def _decode_pbs_kernel(pos_ref, start_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, smax, scale):
+    """`_decode_kernel` plus a per-row valid-start mask (left-padded cache).
+
+    Cache entries in [start, pos] are the row's real tokens; entries before
+    `start` were written by a padded prefill and are masked. A leading
+    fully-masked block gives a uniform-p garbage partial that the online
+    softmax rescales away (alpha = exp(-inf) = 0) at the first real key, so
+    the output is bit-identical to attending the unpadded window alone.
+    """
+    pos = pos_ref[0]
+    start = start_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale  # (dh,)
+    d_head = q.shape[-1]
+
+    n_blocks = jax.lax.div(pos + block_k, block_k)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(kb * block_k, block_k), slice(None)))
+        s = k.astype(jnp.float32) @ q  # (block_k,)
+        idx = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where((idx <= pos) & (idx >= start), s, NEG_INF)
+        m_new = jnp.maximum(m, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum()
+        acc_new = acc * alpha + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d_head,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+def decode_attention_pbs(q, k, v, pos, start, block_k=DEFAULT_BLOCK_K):
+    """Per-row-position decode attention over a LEFT-PADDED cache.
+
+    `decode_attention_pb` with a second per-row vector `start`: row r
+    attends cache entries `start[r] ..= pos[r]` only, skipping the
+    left-padding a variable-length prefill wrote before its prompt. With
+    start == 0 everywhere this is exactly the unpadded kernel's window.
+
+    q: [bh, dh]; k,v: [bh, smax, dh]; pos, start: [bh] int32 -> [bh, dh].
+    """
+    bh, smax, dh = k.shape
+    block_k = min(block_k, smax)
+    assert smax % block_k == 0, (smax, block_k)
+    scale = 1.0 / (dh**0.5)
+    kernel = functools.partial(_decode_pbs_kernel, block_k=block_k, smax=smax, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1, dh), lambda b: (b, 0)),
+            pl.BlockSpec((1, smax, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, smax, dh), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, dh), q.dtype),
+        interpret=True,
+    )(pos, start, q, k, v)

@@ -54,6 +54,51 @@ def decode_attention_pb_ref(q, k, v, pos):
     return out.astype(q.dtype)
 
 
+def decode_attention_pbs_ref(q, k, v, pos, start):
+    """Per-row-position decode attention over a LEFT-PADDED cache (oracle).
+
+    Like `decode_attention_pb_ref` but each row additionally carries a
+    `start` (its valid-start: the first cache entry holding a real token —
+    entries before it are left-padding written by a padded prefill and must
+    never be attended). Valid window per row: start[r] <= idx <= pos[r].
+
+    q: [bh, dh]; k,v: [bh, smax, dh]; pos, start: [bh] int32 -> [bh, dh].
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bd,bkd->bk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    idx = jnp.arange(k.shape[1])
+    valid = (idx[None, :] <= pos[:, None]) & (idx[None, :] >= start[:, None])
+    logits = jnp.where(valid, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bk,bkd->bd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_padded_ref(q, k, v, start):
+    """Causal attention over LEFT-PADDED rows (padded-prefill oracle).
+
+    Each row's real tokens occupy positions [start[r], s); positions before
+    start[r] are padding whose keys must never be attended (their query
+    rows produce don't-care output). The valid window for query position i
+    is therefore start[r] <= j <= i — which makes the real positions'
+    outputs bit-identical to running the unpadded length-(s - start) rows
+    through `attention_ref` (padding contributes exact zeros to the
+    softmax-weighted sums). start == 0 reproduces `attention_ref` exactly.
+
+    q,k,v: [bh, s, dh]; start: [bh] int32 -> [bh, s, dh].
+    """
+    s = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)
+    causal = qi[:, None] >= qi[None, :]
+    valid = qi[None, None, :] >= start[:, None, None]
+    logits = jnp.where(causal[None] & valid, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def argmax_ref(x):
     """Row-wise greedy token ids. x: [b, vocab] -> [b] int32 (first max wins)."""
     return jnp.argmax(x, axis=-1).astype(jnp.int32)

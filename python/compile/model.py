@@ -17,8 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from .configs import ModelConfig
-from .kernels.attention import flash_attention, flash_attention_fwd
-from .kernels.decode import decode_attention, decode_attention_pb
+from .kernels.attention import (
+    flash_attention,
+    flash_attention_fwd,
+    flash_attention_padded_fwd,
+)
+from .kernels.decode import decode_attention, decode_attention_pb, decode_attention_pbs
 from .kernels.layernorm import layernorm as layernorm_pallas
 from .kernels.sampling import argmax_rows, top_k_rows
 
@@ -265,19 +269,68 @@ def _attn_prefill(cfg, params, i, x):
     return o @ params[p + "wo"], ks, vs
 
 
-def prefill(cfg: ModelConfig, params, prompt, smax):
+def _attn_prefill_padded(cfg, params, i, x, start):
+    """`_attn_prefill` over left-padded rows: keys before each row's
+    valid start are masked (padded flash kernel). start: [b] int32."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    p = f"l{i}."
+    q = x @ params[p + "wq"]
+    k = x @ params[p + "wk"]
+    v = x @ params[p + "wv"]
+
+    def split(t):
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    qs, ks, vs = split(q), split(k), split(v)
+    o = flash_attention_padded_fwd(qs, ks, vs, jnp.repeat(start, h))
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ params[p + "wo"], ks, vs
+
+
+def _padded_embed(cfg, params, prompt, start):
+    """Token + position embedding for LEFT-PADDED prompts.
+
+    Artifact position p of row r holds real token index p - start[r], so
+    its position embedding is pos_embed[p - start[r]] (clamped to 0 for the
+    don't-care padding positions). With start == 0 this is exactly the
+    fixed-length `pos_embed[:sp]` gather.
+    """
+    _, sp = prompt.shape
+    pos_idx = jnp.maximum(jnp.arange(sp)[None, :] - start[:, None], 0)
+    return params["embed"][prompt] + params["pos_embed"][pos_idx]
+
+
+def prefill(cfg: ModelConfig, params, prompt, smax, start=None):
     """Run the prompt, fill the KV cache.
 
     prompt: [b, sp] -> (last-position logits [b, vocab],
                         k_cache, v_cache: [L, b*h, smax, dh]).
+
+    `start` (optional [b] int32) is the variable-prompt-length path: row
+    r's real tokens sit LEFT-PADDED at positions [start[r], sp) of the
+    fixed AOT shape. Attention masks keys before start[r], and position
+    embeddings are shifted so real token j is embedded at logical position
+    j — which makes the real positions (and the last-position logits)
+    bit-identical to prefilling the unpadded prompt at its exact length;
+    left-padding also keeps every row's next write position at `sp`, so the
+    shared-position decode loop still advances mixed-length rows in
+    lockstep. `start=None` keeps the legacy fixed-length path.
     """
     b, sp = prompt.shape
     bh, dh = b * cfg.n_heads, cfg.d_head
-    x = params["embed"][prompt] + params["pos_embed"][:sp][None]
+    if start is None:
+        x = params["embed"][prompt] + params["pos_embed"][:sp][None]
+    else:
+        x = _padded_embed(cfg, params, prompt, start)
     kc = jnp.zeros((cfg.n_layers, bh, smax, dh), jnp.float32)
     vc = jnp.zeros((cfg.n_layers, bh, smax, dh), jnp.float32)
     for i in range(cfg.n_layers):
-        o, ks, vs = _attn_prefill(cfg, params, i, _ln(params, f"l{i}.ln1", x))
+        xn = _ln(params, f"l{i}.ln1", x)
+        if start is None:
+            o, ks, vs = _attn_prefill(cfg, params, i, xn)
+        else:
+            o, ks, vs = _attn_prefill_padded(cfg, params, i, xn, start)
         kc = kc.at[i, :, :sp].set(ks)
         vc = vc.at[i, :, :sp].set(vs)
         x = x + o
@@ -318,22 +371,33 @@ def decode_step(cfg: ModelConfig, params, k_cache, v_cache, token, pos):
     return x @ params["embed"].T, k_cache, v_cache
 
 
-def prefill_slot(cfg: ModelConfig, params, k_cache, v_cache, prompt, slot):
+def prefill_slot(cfg: ModelConfig, params, k_cache, v_cache, prompt, slot, start=None):
     """Prefill ONE sequence into one batch slot of a live cache.
 
     The continuous-batching admission path: a retired slot's K/V rows are
     overwritten with the new request's prompt while every other slot's rows
     are preserved, so the other slots can keep decoding across the admit.
 
-    prompt: [1, sp] int32; slot: [1] int32 (batch-slot index).
+    prompt: [1, sp] int32; slot: [1] int32 (batch-slot index); `start`
+    (optional [1] int32) is the row's valid start for LEFT-PADDED
+    variable-length prompts — see `prefill` for the masking contract. The
+    last-position logits stay the real last token's logits because the
+    padding sits on the left.
     Returns (last-position logits [1, vocab], updated caches).
     """
     _, sp = prompt.shape
     h = cfg.n_heads
-    x = params["embed"][prompt] + params["pos_embed"][:sp][None]
+    if start is None:
+        x = params["embed"][prompt] + params["pos_embed"][:sp][None]
+    else:
+        x = _padded_embed(cfg, params, prompt, start)
     row0 = slot[0] * h  # first bh row owned by this slot
     for i in range(cfg.n_layers):
-        o, ks, vs = _attn_prefill(cfg, params, i, _ln(params, f"l{i}.ln1", x))
+        xn = _ln(params, f"l{i}.ln1", x)
+        if start is None:
+            o, ks, vs = _attn_prefill(cfg, params, i, xn)
+        else:
+            o, ks, vs = _attn_prefill_padded(cfg, params, i, xn, start)
         # ks/vs: [h, sp, dh] -> rows [slot*h, slot*h + h), positions [0, sp).
         k_cache = jax.lax.dynamic_update_slice(k_cache, ks[None], (i, row0, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(v_cache, vs[None], (i, row0, 0, 0))
@@ -344,7 +408,7 @@ def prefill_slot(cfg: ModelConfig, params, k_cache, v_cache, prompt, slot):
     return logits, k_cache, v_cache
 
 
-def decode_slots(cfg: ModelConfig, params, k_cache, v_cache, token, pos):
+def decode_slots(cfg: ModelConfig, params, k_cache, v_cache, token, pos, start=None):
     """One decode step with PER-SLOT positions (continuous batching).
 
     Unlike `decode_step` (one shared position for the whole batch), every
@@ -352,13 +416,23 @@ def decode_slots(cfg: ModelConfig, params, k_cache, v_cache, token, pos):
     `pos[r]` and attends to cache entries `0..pos[r]` only, so freshly
     admitted and nearly finished sequences advance in the same fused call.
 
+    `start` (optional [b] int32) is the per-slot valid start for rows whose
+    prompt was LEFT-PADDED: cache entries before start[r] hold padding and
+    are masked out of attention, and the token's position embedding is
+    pos_embed[pos[r] - start[r]] (its logical sequence position). With
+    start == 0 both reduce to the unpadded behavior.
+
     token: [b] int32; pos: [b] int32. Returns (logits [b, vocab], caches).
     """
     b = token.shape[0]
     h, dh, d = cfg.n_heads, cfg.d_head, cfg.d_model
-    pos_emb = params["pos_embed"][pos]  # [b, d] per-row gather
+    if start is None:
+        pos_emb = params["pos_embed"][pos]  # [b, d] per-row gather
+    else:
+        pos_emb = params["pos_embed"][jnp.maximum(pos - start, 0)]
     x = params["embed"][token] + pos_emb
     pos_bh = jnp.repeat(pos, h)  # [b*h]: every head row inherits its slot's pos
+    start_bh = None if start is None else jnp.repeat(start, h)
 
     def scatter_row(cache_row, val, p):
         # cache_row: [smax, dh]; val: [dh]; p: scalar — write val at row p.
@@ -372,7 +446,10 @@ def decode_slots(cfg: ModelConfig, params, k_cache, v_cache, token, pos):
         v = (xn @ params[p + "wv"]).reshape(b * h, dh)
         k_cache = k_cache.at[i].set(jax.vmap(scatter_row)(k_cache[i], k, pos_bh))
         v_cache = v_cache.at[i].set(jax.vmap(scatter_row)(v_cache[i], v, pos_bh))
-        o = decode_attention_pb(q, k_cache[i], v_cache[i], pos_bh)  # [b*h, dh]
+        if start_bh is None:
+            o = decode_attention_pb(q, k_cache[i], v_cache[i], pos_bh)  # [b*h, dh]
+        else:
+            o = decode_attention_pbs(q, k_cache[i], v_cache[i], pos_bh, start_bh)
         x = x + o.reshape(b, d) @ params[p + "wo"]
         xn = layernorm(x, params[p + "ln2_g"], params[p + "ln2_b"])
         x = (
@@ -407,9 +484,9 @@ def sample_tail(logits, k):
     return ids, tv, ti
 
 
-def prefill_sampled(cfg, params, prompt, smax, k):
+def prefill_sampled(cfg, params, prompt, smax, k, start=None):
     """`prefill` with the sampling tail on the last-position logits."""
-    logits, kc, vc = prefill(cfg, params, prompt, smax)
+    logits, kc, vc = prefill(cfg, params, prompt, smax, start)
     ids, tv, ti = sample_tail(logits, k)
     return ids, tv, ti, kc, vc
 
@@ -421,16 +498,16 @@ def decode_step_sampled(cfg, params, k_cache, v_cache, token, pos, k):
     return ids, tv, ti, kc, vc
 
 
-def prefill_slot_sampled(cfg, params, k_cache, v_cache, prompt, slot, k):
+def prefill_slot_sampled(cfg, params, k_cache, v_cache, prompt, slot, k, start=None):
     """`prefill_slot` with the sampling tail on the admitted slot's logits."""
-    logits, kc, vc = prefill_slot(cfg, params, k_cache, v_cache, prompt, slot)
+    logits, kc, vc = prefill_slot(cfg, params, k_cache, v_cache, prompt, slot, start)
     ids, tv, ti = sample_tail(logits, k)
     return ids, tv, ti, kc, vc
 
 
-def decode_slots_sampled(cfg, params, k_cache, v_cache, token, pos, k):
+def decode_slots_sampled(cfg, params, k_cache, v_cache, token, pos, k, start=None):
     """`decode_slots` with the sampling tail (per-slot-position decode)."""
-    logits, kc, vc = decode_slots(cfg, params, k_cache, v_cache, token, pos)
+    logits, kc, vc = decode_slots(cfg, params, k_cache, v_cache, token, pos, start)
     ids, tv, ti = sample_tail(logits, k)
     return ids, tv, ti, kc, vc
 

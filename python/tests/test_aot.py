@@ -100,7 +100,7 @@ def test_decode_step_artifact_consistency(entries):
     P = model.flatten_params(RC.actor, "lm", model.init_params(RC.actor, "lm", jnp.int32(0)))
     B, SP = RC.batch, RC.prompt_len
     prompt = jax.random.randint(jax.random.PRNGKey(0), (B, SP), 0, RC.actor.vocab)
-    logits, kc, vc = jax.jit(pre_fn)(*P, prompt)
+    logits, kc, vc = jax.jit(pre_fn)(*P, prompt, jnp.zeros((B,), jnp.int32))
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     logits2, kc, vc = jax.jit(dec_fn)(*P, kc, vc, tok, jnp.array([SP], jnp.int32))
     seq = jnp.concatenate([prompt, tok[:, None]], axis=1)
@@ -116,6 +116,9 @@ def test_manifest_contents(tmp_path, entries):
     assert man["config"]["batch"] == RC.batch
     assert man["config"]["seq_len"] == RC.seq_len
     assert man["config"]["sample_k"] == RC.sample_k
+    # Variable-prompt-length capability: the rust runtime gates short-prompt
+    # admission on this flag (absent in pre-padding artifact sets).
+    assert man["config"]["padded_prompts"] is True
     assert len(man["actor_params"]) == len(model.param_spec(RC.actor, "lm"))
     assert len(man["actor_opt"]) == 2 * len(man["actor_params"]) + 1
     art = man["artifacts"]["logprobs_forward"]

@@ -7,11 +7,19 @@ These pin the invariants the rust scheduler (rust/src/serving) relies on:
     full-batch `prefill` logits for that sequence;
   * a staggered schedule (admit slot 0, decode, admit slot 1 mid-flight,
     decode both) yields, per sequence, the same logits as the no-cache full
-    forward — slot isolation across admissions.
+    forward — slot isolation across admissions;
+  * the LEFT-PADDED variable-length path: `prefill`/`prefill_slot` with a
+    per-row `start` (valid-start) mask reproduce the exact-length unpadded
+    computation for EVERY valid_start in 0..prompt_len, `start == 0` is
+    bit-identical to the legacy fixed-length path, and a mixed-length
+    staggered schedule through `decode_slots(start=...)` matches the
+    no-cache full forward per sequence.
 
 The Pallas kernels are swapped for their pure-jnp oracles (kernels/ref.py)
 so the tests execute under any jax version; the kernels themselves are
-checked against the same oracles in test_kernels.py.
+checked against the same oracles in test_kernels.py and (for the padded
+variants) in the kernel-parity section at the bottom of this file, which
+skips itself when the installed jax cannot run pallas interpret mode.
 """
 
 import jax
@@ -22,6 +30,8 @@ import pytest
 from compile import model
 from compile.configs import run_config
 from compile.kernels import ref
+from compile.kernels.attention import flash_attention_padded_fwd
+from compile.kernels.decode import decode_attention_pbs
 
 RC = run_config("nano")
 TOL = dict(rtol=2e-4, atol=2e-4)
@@ -33,8 +43,10 @@ def ref_kernels(monkeypatch):
     monkeypatch.setattr(model, "layernorm", ref.layernorm_ref)
     monkeypatch.setattr(model, "flash_attention", ref.attention_ref)
     monkeypatch.setattr(model, "flash_attention_fwd", ref.attention_ref)
+    monkeypatch.setattr(model, "flash_attention_padded_fwd", ref.attention_padded_ref)
     monkeypatch.setattr(model, "decode_attention", ref.decode_attention_ref)
     monkeypatch.setattr(model, "decode_attention_pb", ref.decode_attention_pb_ref)
+    monkeypatch.setattr(model, "decode_attention_pbs", ref.decode_attention_pbs_ref)
 
 
 @pytest.fixture(scope="module")
@@ -169,3 +181,255 @@ def test_staggered_schedule_matches_full_forward(params):
     # Both sequences advanced to different depths in the shared cache.
     assert len(seqs[0]) == sp + 4
     assert len(seqs[1]) == sp + 2
+
+
+# ---------------------------------------------------------------------------
+# Left-padded variable-length prompts (per-row valid-start masking).
+#
+# The contract the rust scheduler relies on: a prompt of true length
+# L <= prompt_len arrives LEFT-PADDED into the fixed AOT shape with
+# start = prompt_len - L; attention masks keys before start and position
+# embeddings are shifted so the real positions compute exactly what the
+# unpadded exact-length prompt computes.
+# ---------------------------------------------------------------------------
+
+PAD = 0  # mirrors the rust Vocab::PAD token
+
+
+def left_pad(rows, start):
+    """rows: [b, L] -> [b, start + L] with PAD tokens on the left."""
+    b = rows.shape[0]
+    pad = jnp.full((b, start), PAD, jnp.int32)
+    return jnp.concatenate([pad, rows], axis=1)
+
+
+@pytest.mark.parametrize("start", list(range(RC.prompt_len)))
+def test_padded_prefill_matches_exact_length_for_every_start(params, start):
+    """Masked full-batch prefill of a left-padded length-L prompt vs the
+    unpadded prompt prefilled at its exact length: last-position logits and
+    the slot's real cache entries must agree BIT-EXACTLY, for every
+    valid_start — masked-out padding contributes exact zeros to every
+    softmax-weighted sum (and the leading fully-masked region is rescaled
+    away by exp(-inf) = 0), so no tolerance is needed."""
+    a, sp = RC.actor, RC.prompt_len
+    L = sp - start
+    exact = sample_prompts(10 + start)[:, :L]
+    padded = left_pad(exact, start)
+    starts = jnp.full((RC.batch,), start, jnp.int32)
+
+    le, kce, vce = model.prefill(a, params, exact, RC.seq_len)
+    lp, kcp, vcp = model.prefill(a, params, padded, RC.seq_len, starts)
+
+    np.testing.assert_array_equal(np.asarray(lp), np.asarray(le))
+    # Real cache entries live at artifact positions [start, sp) and must
+    # hold what the exact-length prefill wrote at [0, L).
+    np.testing.assert_array_equal(
+        np.asarray(kcp)[:, :, start:sp], np.asarray(kce)[:, :, :L]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(vcp)[:, :, start:sp], np.asarray(vce)[:, :, :L]
+    )
+
+
+def test_padded_prefill_all_valid_row_is_bit_identical_to_unmasked(params):
+    """start == 0 (the all-valid row) pins backward compatibility: the
+    masked path must reproduce the legacy unmasked prefill bit for bit."""
+    a = RC.actor
+    prompt = sample_prompts(4)
+    l0, kc0, vc0 = model.prefill(a, params, prompt, RC.seq_len)
+    lz, kcz, vcz = model.prefill(
+        a, params, prompt, RC.seq_len, jnp.zeros((RC.batch,), jnp.int32)
+    )
+    np.testing.assert_array_equal(np.asarray(lz), np.asarray(l0))
+    np.testing.assert_array_equal(np.asarray(kcz), np.asarray(kc0))
+    np.testing.assert_array_equal(np.asarray(vcz), np.asarray(vc0))
+
+
+@pytest.mark.parametrize("start", [1, RC.prompt_len // 2, RC.prompt_len - 5])
+def test_padded_prefill_slot_matches_exact_length(params, start):
+    """Slot admission of a left-padded short prompt: the admitted slot's
+    logits equal the exact-length prefill's, other slots' rows untouched."""
+    a, sp = RC.actor, RC.prompt_len
+    h = a.n_heads
+    L = sp - start
+    exact = sample_prompts(20 + start)[:1, :L]
+    padded = left_pad(exact, start)
+    sentinel = 7.25
+    kc = jnp.full_like(zero_caches()[0], sentinel)
+    vc = jnp.full_like(kc, sentinel)
+
+    slot = 1
+    logits, kc2, vc2 = model.prefill_slot(
+        a,
+        params,
+        kc,
+        vc,
+        padded,
+        jnp.array([slot], jnp.int32),
+        jnp.array([start], jnp.int32),
+    )
+    le, _, _ = model.prefill(a, params, exact, RC.seq_len)
+    np.testing.assert_allclose(logits[0], le[0], **TOL)
+    rows = np.arange(RC.batch * h)
+    outside = (rows < slot * h) | (rows >= (slot + 1) * h)
+    np.testing.assert_array_equal(np.asarray(kc2)[:, outside], sentinel)
+    np.testing.assert_array_equal(np.asarray(vc2)[:, outside], sentinel)
+
+
+def test_mixed_length_staggered_schedule_matches_full_forward(params):
+    """The full mixed-length serving discipline: a full-length prompt in
+    slot 0, a SHORT left-padded prompt admitted into slot 1 mid-flight,
+    both advanced by `decode_slots` with per-slot valid starts — every
+    emitted logits row must equal the no-cache forward on that sequence's
+    true (unpadded) token prefix."""
+    a, sp = RC.actor, RC.prompt_len
+    L1 = sp - 3  # short prompt's true length
+    prompts = sample_prompts(31)
+    kc, vc = zero_caches()
+
+    def ref_logits(tokens):
+        seq = jnp.asarray(tokens, jnp.int32)[None, :]
+        return model.logits_fn(a, params, seq)[0, -1]
+
+    def check(row, tokens):
+        np.testing.assert_allclose(row, ref_logits(tokens), **TOL)
+
+    # True token lists (no padding) per slot; slot 1 not yet admitted.
+    seqs = [list(np.asarray(prompts[0])), list(np.asarray(prompts[1][:L1]))]
+    starts = [0, sp - L1]
+    pending = [None, None]
+
+    l0, kc, vc = model.prefill_slot(
+        a,
+        params,
+        kc,
+        vc,
+        prompts[0:1],
+        jnp.array([0], jnp.int32),
+        jnp.array([0], jnp.int32),
+    )
+    check(l0[0], seqs[0])
+    pending[0] = l0[0]
+
+    for tick in range(4):
+        if tick == 2:
+            short = left_pad(prompts[1:2, :L1], starts[1])
+            l1, kc, vc = model.prefill_slot(
+                a,
+                params,
+                kc,
+                vc,
+                short,
+                jnp.array([1], jnp.int32),
+                jnp.array([starts[1]], jnp.int32),
+            )
+            check(l1[0], seqs[1])
+            pending[1] = l1[0]
+        toks, pos, st, active = [], [], [], []
+        for slot in range(2):
+            if pending[slot] is None:
+                toks.append(0)
+                pos.append(0)
+                st.append(0)
+                active.append(False)
+            else:
+                t = int(jnp.argmax(pending[slot]))
+                seqs[slot].append(t)
+                toks.append(t)
+                # Artifact cache position of the token = valid start + its
+                # index within the true sequence.
+                pos.append(starts[slot] + len(seqs[slot]) - 1)
+                st.append(starts[slot])
+                active.append(True)
+        logits, kc, vc = model.decode_slots(
+            a,
+            params,
+            kc,
+            vc,
+            jnp.array(toks, jnp.int32),
+            jnp.array(pos, jnp.int32),
+            jnp.array(st, jnp.int32),
+        )
+        for slot in range(2):
+            if active[slot]:
+                check(logits[slot], seqs[slot])
+                pending[slot] = logits[slot]
+
+    # The short sequence advanced past the fixed prompt boundary: its pads
+    # never leaked into attention despite sharing the cache with a
+    # full-length neighbor.
+    assert len(seqs[0]) == sp + 4
+    assert len(seqs[1]) == L1 + 2
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel parity for the padded variants (kernel vs jnp oracle).
+# Skips itself when the installed jax cannot execute pallas interpret mode
+# (a known-broken combination exists in some containers); the oracle-level
+# tests above pin the model math either way, and the same oracles are what
+# the kernels are compared against here.
+# ---------------------------------------------------------------------------
+
+
+def _pallas_interpret_works():
+    try:
+        from compile.kernels.attention import flash_attention_fwd
+
+        z = jnp.zeros((1, 8, 4), jnp.float32)
+        flash_attention_fwd(z, z, z)
+        return True
+    except Exception:
+        return False
+
+
+pallas_parity = pytest.mark.skipif(
+    not _pallas_interpret_works(),
+    reason="pallas interpret mode unavailable under the installed jax",
+)
+
+
+def _qkv(seed, s=8, bh=4, dh=16):
+    key = jax.random.PRNGKey(seed)
+    mk = lambda i: jax.random.normal(jax.random.fold_in(key, i), (bh, s, dh), jnp.float32)
+    return mk(0), mk(1), mk(2)
+
+
+@pallas_parity
+@pytest.mark.parametrize("start", list(range(RC.prompt_len)))
+def test_padded_flash_kernel_matches_oracle_for_every_start(start):
+    q, k, v = _qkv(start, s=RC.prompt_len)
+    starts = jnp.full((q.shape[0],), start, jnp.int32)
+    out = flash_attention_padded_fwd(q, k, v, starts)
+    want = ref.attention_padded_ref(q, k, v, starts)
+    # Pad query rows (positions < start) are don't-care but must be finite.
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(
+        np.asarray(out)[:, start:], np.asarray(want)[:, start:], **TOL
+    )
+
+
+@pallas_parity
+def test_padded_flash_kernel_all_valid_matches_unmasked_kernel():
+    from compile.kernels.attention import flash_attention_fwd
+
+    q, k, v = _qkv(99)
+    zeros = jnp.zeros((q.shape[0],), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(flash_attention_padded_fwd(q, k, v, zeros)),
+        np.asarray(flash_attention_fwd(q, k, v)),
+    )
+
+
+@pallas_parity
+@pytest.mark.parametrize("start", [0, 3, 7])
+def test_padded_decode_kernel_matches_oracle(start):
+    bh, smax, dh = 4, 16, 8
+    key = jax.random.PRNGKey(start)
+    q = jax.random.normal(key, (bh, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, smax, dh), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, smax, dh), jnp.float32)
+    pos = jnp.array([start + 1, start + 3, smax - 1, start], jnp.int32)
+    starts = jnp.full((bh,), start, jnp.int32)
+    out = decode_attention_pbs(q, k, v, pos, starts)
+    want = ref.decode_attention_pbs_ref(q, k, v, pos, starts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)

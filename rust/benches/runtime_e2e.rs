@@ -17,7 +17,9 @@ use std::time::Duration;
 
 use dschat::data::synthetic::TaskGen;
 use dschat::data::{Blend, DataSplit};
-use dschat::examples_support::{naive_generate, rollout_continuous, rollout_fixed_baseline};
+use dschat::examples_support::{
+    mixed_prompts, naive_generate, rollout_continuous, rollout_fixed_baseline,
+};
 use dschat::hybrid::{HybridEngine, KvCache};
 use dschat::runtime::Engine;
 use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
@@ -368,6 +370,42 @@ fn main() -> anyhow::Result<()> {
         sch.prefills,
     );
 
+    // Mixed-length rollout: the same continuous discipline over prompts
+    // with heterogeneous TRUE lengths (left-padded admission; needs the
+    // `padded_prompts` artifact capability) — genuinely mixed experience
+    // traffic, with the padded-token overhead reported alongside.
+    let cont_mixed = if he.manifest().padded_prompts {
+        let mix = mixed_prompts(&task, &mut rr, n_roll, sp / 2);
+        let mut sampler = HostFullRow::new(greedy(), 0);
+        let r = rollout_continuous(&mut he, &mix, &budgets, 0, &mut sampler)?;
+        println!(
+            "continuous_mixed_len     {:>10.1} tokens/s  |  slot bubble {:.1}%  pad overhead {:.1}%  ({} useful tok, {:.3}s)",
+            r.tok_per_sec(),
+            100.0 * r.bubble,
+            100.0 * r.pad_overhead,
+            r.useful_tokens,
+            r.secs,
+        );
+        Some(r)
+    } else {
+        println!("(artifacts lack the `padded_prompts` capability — mixed-length rollout skipped)");
+        None
+    };
+    let mixed_json = match &cont_mixed {
+        Some(r) => format!(
+            "  \"continuous_mixed\": {{\n    \"tok_per_sec\": {:.3},\n    \
+             \"useful_tokens\": {},\n    \"secs\": {:.6},\n    \
+             \"slot_bubble_fraction\": {:.4},\n    \
+             \"pad_overhead_fraction\": {:.4}\n  }},\n",
+            r.tok_per_sec(),
+            r.useful_tokens,
+            r.secs,
+            r.bubble,
+            r.pad_overhead,
+        ),
+        None => String::new(),
+    };
+
     let rollout_json = format!(
         "{{\n  \"bench\": \"rollout\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
          \"n_prompts\": {n_roll},\n  \"group\": {bsz},\n  \"gen_len\": {sg},\n  \
@@ -376,7 +414,7 @@ fn main() -> anyhow::Result<()> {
          \"continuous\": {{\n    \"tok_per_sec\": {:.3},\n    \"useful_tokens\": {},\n    \
          \"secs\": {:.6},\n    \"slot_bubble_fraction\": {:.4},\n    \
          \"decode_calls\": {},\n    \"prefills\": {},\n    \"retired_eos\": {},\n    \
-         \"retired_length\": {}\n  }},\n  \
+         \"retired_length\": {}\n  }},\n{mixed_json}  \
          \"speedup_tok_per_sec\": {:.3},\n  \"bubble_reduction\": {:.4}\n}}\n",
         fixed.tok_per_sec(),
         fixed.useful_tokens,

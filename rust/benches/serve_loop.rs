@@ -16,7 +16,11 @@
 //! Emits `BENCH_serve.json` with throughput and p50/p95 latency for BOTH
 //! disciplines so the perf trajectory is tracked across PRs, plus host
 //! bytes/token for the continuous loop under each sampling backend (host
-//! full-row vs the device sampling tail, when the artifacts carry it);
+//! full-row vs the device sampling tail, when the artifacts carry it) and
+//! — when the artifacts carry the `padded_prompts` capability — a
+//! `continuous_mixed` phase replaying the trace with heterogeneous TRUE
+//! prompt lengths through the left-padded admission path, reporting the
+//! padded-token overhead fraction alongside tok/s and latency;
 //! `scripts/verify.sh` runs the `--smoke` mode.
 
 use std::collections::VecDeque;
@@ -285,6 +289,7 @@ fn main() -> anyhow::Result<()> {
     };
     let sample_k = he.manifest().sample_k;
     let vocab = he.manifest().actor.vocab;
+    let padded_ready = he.manifest().padded_prompts;
     let mut sched = Scheduler::new(he)?;
     let cont = run_continuous(
         "continuous_host",
@@ -318,6 +323,44 @@ fn main() -> anyhow::Result<()> {
         println!("(artifacts lack the `_sampled` family — device-backend phase skipped)");
         None
     };
+    // Mixed-length phase: the same arrival discipline with heterogeneous
+    // TRUE prompt lengths in [sp/2 (>= structural floor), sp] — genuinely
+    // mixed traffic through the left-padded admission path. Pads are never
+    // sampled; the phase additionally reports the padded-token overhead
+    // (fraction of prefill-written prompt-window entries that were
+    // left-padding — the price of riding the fixed AOT shape).
+    let cont_mixed = if padded_ready {
+        let mut mrng = Rng::new(41);
+        let min_len = TaskGen::MIN_PROMPT_LEN.max(sp / 2).min(sp);
+        let mixed: Vec<Prompt> = (0..n_req)
+            .map(|_| {
+                let len = mrng.range(min_len as i64, sp as i64 + 1) as usize;
+                task.sample_prompt_len(&mut mrng, len)
+            })
+            .collect();
+        let pads0 = (sched.stats.prompt_tokens, sched.stats.pad_tokens);
+        let r = run_continuous(
+            "continuous_mixed",
+            &mut sched,
+            &mixed,
+            &budgets,
+            &arrivals,
+            &mut HostFullRow::new(greedy(), 0),
+        )?;
+        r.print();
+        let dprompt = sched.stats.prompt_tokens - pads0.0;
+        let dpad = sched.stats.pad_tokens - pads0.1;
+        let pad_frac = dpad as f64 / (dprompt + dpad).max(1) as f64;
+        println!(
+            "continuous_mixed: prompt lengths {min_len}..={sp}, padded-token overhead {:.1}%",
+            100.0 * pad_frac
+        );
+        Some((r, pad_frac, min_len))
+    } else {
+        println!("(artifacts lack the `padded_prompts` capability — mixed-length phase skipped)");
+        None
+    };
+
     let st = &st_host;
     println!(
         "continuous: {} scheduler steps, {} decode calls, {} prefills, slot utilization {:.0}%",
@@ -352,18 +395,27 @@ fn main() -> anyhow::Result<()> {
         Some(r) => format!(",\n  \"continuous_device\": {}", phase_json(r)),
         None => String::new(),
     };
+    let mixed_json = match &cont_mixed {
+        Some((r, pad_frac, min_len)) => format!(
+            ",\n  \"continuous_mixed\": {},\n  \"mixed_pad_overhead_fraction\": {pad_frac:.4},\n  \
+             \"mixed_min_prompt_len\": {min_len}",
+            phase_json(r)
+        ),
+        None => String::new(),
+    };
     let json = format!(
         "{{\n  \"bench\": \"serve_loop\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
          \"n_requests\": {n_req},\n  \"arrival_rate_per_s\": {rate:.3},\n  \
          \"fixed_batch_t_gen_secs\": {t_gen:.6},\n  \"sample_k\": {sample_k},\n  \
          \"fixed_batch\": {},\n  \"continuous\": {},\n  \
-         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}\n  ,\n  \
+         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}\n  ,\n  \
          \"speedup_tok_per_sec\": {:.3},\n  \"p95_latency_ratio\": {:.3}\n}}\n",
         phase_json(&fixed),
         phase_json(&cont),
         st.utilization(),
         st.decode_calls,
         device_json,
+        mixed_json,
         cont.tok_per_sec() / fixed.tok_per_sec().max(1e-9),
         cont.pct(0.95) / fixed.pct(0.95).max(1e-9),
     );

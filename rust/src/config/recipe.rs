@@ -41,6 +41,15 @@ pub struct PpoConfig {
     /// completions. `0` (default) selects the legacy fixed-batch
     /// `generate` path with exactly `b` prompts.
     pub rollout_batch: usize,
+    /// Minimum prompt length for HETEROGENEOUS-length rollout prompts:
+    /// `0` (default) keeps every prompt at the artifact's fixed
+    /// `prompt_len`; a positive value makes the scheduler-rollout path
+    /// draw each prompt's length uniformly from `[min_prompt_len,
+    /// prompt_len]` (clamped to the synthetic task's 5-token structural
+    /// floor), exercising the left-padded variable-length serving path.
+    /// Requires artifacts with the `padded_prompts` capability; only
+    /// meaningful with `rollout_batch > 0`.
+    pub min_prompt_len: usize,
 }
 
 impl Default for PpoConfig {
@@ -60,6 +69,7 @@ impl Default for PpoConfig {
             top_k: 0,
             top_p: 1.0,
             rollout_batch: 0,
+            min_prompt_len: 0,
         }
     }
 }

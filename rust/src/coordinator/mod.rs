@@ -40,19 +40,24 @@ use crate::sampling::{HostFullRow, SamplerConfig, SamplingBackend};
 use crate::serving::SchedStats;
 use crate::util::rng::Rng;
 
-/// One experience batch, fully scored and shaped.
+/// One experience batch, fully scored and shaped. Rows may carry prompts
+/// of DIFFERENT true lengths (the scheduler rollout admits variable-length
+/// prompts): `prompt_lens[i]` is row i's real prompt boundary, and the
+/// response mask/advantages/returns are laid out per row from it — never
+/// from the artifact's fixed `prompt_len`.
 #[derive(Debug, Clone)]
 pub struct Experience {
-    pub tokens: Vec<i32>,       // [b, s]
-    pub old_logp: Vec<f32>,     // [b, s-1]
-    pub advantages: Vec<f32>,   // [b, s-1] (masked)
-    pub returns: Vec<f32>,      // [b, s-1]
-    pub old_values: Vec<f32>,   // [b, s-1]
-    pub mask: Vec<f32>,         // [b, s-1] response-region mask
-    pub rm_scores: Vec<f32>,    // [b]
-    pub true_rewards: Vec<f32>, // [b] ground-truth task reward
+    pub tokens: Vec<i32>,        // [b, s]
+    pub old_logp: Vec<f32>,      // [b, s-1]
+    pub advantages: Vec<f32>,    // [b, s-1] (masked)
+    pub returns: Vec<f32>,       // [b, s-1]
+    pub old_values: Vec<f32>,    // [b, s-1]
+    pub mask: Vec<f32>,          // [b, s-1] response-region mask
+    pub rm_scores: Vec<f32>,     // [b]
+    pub true_rewards: Vec<f32>,  // [b] ground-truth task reward
     pub mean_kl: f32,
-    pub resp_lens: Vec<usize>,  // [b]
+    pub resp_lens: Vec<usize>,   // [b]
+    pub prompt_lens: Vec<usize>, // [b] TRUE per-row prompt lengths
 }
 
 /// Scalars logged per PPO iteration. With a multi-group rollout
@@ -168,7 +173,15 @@ impl PpoTrainer {
             (0..b).map(|i| Self::response_len(&tokens[i * s..(i + 1) * s], sp)).collect();
         let lens: Vec<i32> = resp_lens.iter().map(|&l| (sp + l - 1) as i32).collect();
         let scores = he.score_experience(&tokens, &lens)?;
-        Ok(assemble_experience(&self.cfg, prompts, tokens, resp_lens, scores, sp, s))
+        Ok(assemble_experience(
+            &self.cfg,
+            prompts,
+            tokens,
+            resp_lens,
+            scores,
+            &vec![sp; b],
+            s,
+        ))
     }
 
     /// Phase 1+2, scheduler-rollout path: stream `n = k·b` prompts through
@@ -184,7 +197,7 @@ impl PpoTrainer {
         prompts: &[(TaskGen, Prompt)],
     ) -> Result<(Vec<Experience>, SchedStats)> {
         let m = he.manifest();
-        let (b, sp, sg, s) = (m.batch, m.prompt_len, m.gen_len, m.seq_len);
+        let (b, sg, s) = (m.batch, m.gen_len, m.seq_len);
         let n = prompts.len();
         if n == 0 || n % b != 0 {
             bail!(
@@ -209,12 +222,21 @@ impl PpoTrainer {
             &budgets,
             b,
             |eng, group| {
-                let (tokens, resp_lens) = flatten_group(&group, s);
-                let lens: Vec<i32> =
-                    resp_lens.iter().map(|&l| (sp + l - 1) as i32).collect();
+                let (tokens, resp_lens, prompt_lens) = flatten_group(&group, s);
+                // RM reward position = each row's TRUE last response token
+                // (per-row prompt boundary + response length - 1): mixed
+                // prompt lengths mean the boundary is per row, not the
+                // artifact constant.
+                let lens: Vec<i32> = resp_lens
+                    .iter()
+                    .zip(&prompt_lens)
+                    .map(|(&l, &p)| (p + l - 1) as i32)
+                    .collect();
                 let scores = eng.score_experience(&tokens, &lens)?;
                 let gp = &prompts[group.index * b..(group.index + 1) * b];
-                out.push(assemble_experience(cfg, gp, tokens, resp_lens, scores, sp, s));
+                out.push(assemble_experience(
+                    cfg, gp, tokens, resp_lens, scores, &prompt_lens, s,
+                ));
                 Ok(())
             },
         )?;
@@ -301,7 +323,14 @@ impl PpoTrainer {
             st.rollout_groups = 1;
             st
         } else {
-            let prompts = blend.prompt_batch(rng, self.cfg.rollout_batch);
+            // Heterogeneous prompt lengths (min_prompt_len > 0) draw each
+            // prompt's true length per row — the scheduler left-pads them
+            // into the fixed artifact shape at admission.
+            let prompts = if self.cfg.min_prompt_len > 0 {
+                blend.prompt_batch_mixed(rng, self.cfg.rollout_batch, self.cfg.min_prompt_len)
+            } else {
+                blend.prompt_batch(rng, self.cfg.rollout_batch)
+            };
             let (exps, sched) = self.generate_experience_rollout(he, &prompts)?;
             let groups = exps.len();
             let mut agg = IterStats::default();
@@ -336,20 +365,25 @@ impl PpoTrainer {
 
 /// Shared tail of both experience paths: ground-truth rewards, response
 /// masking, KL-shaped rewards, GAE, whitening — one scored `[b, s]` token
-/// batch in, one training-ready [`Experience`] out. A free function (not a
-/// `&self` method) so the rollout path can call it from the flush callback
-/// while the trainer's sampling backend is mutably borrowed by the
-/// scheduler loop.
+/// batch in, one training-ready [`Experience`] out. `prompt_lens[i]` is
+/// row i's TRUE prompt length (all `prompt_len` on the fixed path; the
+/// scheduler rollout admits variable-length prompts, so there the
+/// boundaries are per row) — every response-region index below derives
+/// from it, so PPO's log-prob/advantage masks see real boundaries, never
+/// the artifact's fixed window. A free function (not a `&self` method) so
+/// the rollout path can call it from the flush callback while the
+/// trainer's sampling backend is mutably borrowed by the scheduler loop.
 fn assemble_experience(
     cfg: &PpoConfig,
     prompts: &[(TaskGen, Prompt)],
     tokens: Vec<i32>,
     resp_lens: Vec<usize>,
     scores: ExperienceScores,
-    sp: usize,
+    prompt_lens: &[usize],
     s: usize,
 ) -> Experience {
     let b = prompts.len();
+    assert_eq!(prompt_lens.len(), b);
     let rm_scores = scores.rm_scores;
     let old_logp = scores.old_logp;
     let ref_logp = scores.ref_logp;
@@ -359,16 +393,17 @@ fn assemble_experience(
     let true_rewards: Vec<f32> = prompts
         .iter()
         .enumerate()
-        .map(|(i, (g, p))| g.reward(p, &tokens[i * s + sp..(i + 1) * s]))
+        .map(|(i, (g, p))| g.reward(p, &tokens[i * s + prompt_lens[i]..(i + 1) * s]))
         .collect();
 
     // Response mask over next-token positions: prediction index j scores
-    // token j+1, so the response region is [sp-1, sp-1+len).
+    // token j+1, so row i's response region is [sp_i - 1, sp_i - 1 + len).
     let w = s - 1;
     let mut mask = vec![0.0f32; b * w];
     for i in 0..b {
+        let sp_i = prompt_lens[i];
         for j in 0..resp_lens[i] {
-            mask[i * w + sp - 1 + j] = 1.0;
+            mask[i * w + sp_i - 1 + j] = 1.0;
         }
     }
 
@@ -379,7 +414,8 @@ fn assemble_experience(
     let mut kl_n = 0.0f64;
     for i in 0..b {
         let len = resp_lens[i];
-        let lo = i * w + sp - 1;
+        let sp_i = prompt_lens[i];
+        let lo = i * w + sp_i - 1;
         let lp = &old_logp[lo..lo + len];
         let rlp = &ref_logp[lo..lo + len];
         kl_sum += lp.iter().zip(rlp).map(|(a, r)| (a - r) as f64).sum::<f64>();
@@ -388,7 +424,7 @@ fn assemble_experience(
             gae::shaped_rewards(lp, rlp, rm_scores[i], cfg.kl_coef, cfg.reward_clip);
         // values for response positions + terminal bootstrap 0.
         let mut vals = Vec::with_capacity(len + 1);
-        vals.extend_from_slice(&values[i * s + sp - 1..i * s + sp - 1 + len]);
+        vals.extend_from_slice(&values[i * s + sp_i - 1..i * s + sp_i - 1 + len]);
         vals.push(0.0);
         let out = gae::gae(&rewards, &vals, cfg.gamma, cfg.lam);
         advantages[lo..lo + len].copy_from_slice(&out.advantages);
@@ -415,6 +451,7 @@ fn assemble_experience(
         true_rewards,
         mean_kl: (kl_sum / kl_n.max(1.0)) as f32,
         resp_lens,
+        prompt_lens: prompt_lens.to_vec(),
     }
 }
 

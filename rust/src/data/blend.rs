@@ -168,6 +168,31 @@ impl Blend {
             .collect()
     }
 
+    /// Draw `b` RLHF prompts with HETEROGENEOUS true lengths: each row's
+    /// length is uniform in `[min_len, prompt_len]` (clamped to the
+    /// task's structural floor), drawn from the row's own deterministic
+    /// rng — the mixed-length traffic the left-padded serving path
+    /// carries. The stage's example-id stream is shared with
+    /// [`Blend::prompt_batch`], so mixing lengths does not perturb which
+    /// examples later fixed-length batches see.
+    pub fn prompt_batch_mixed(
+        &mut self,
+        rng: &mut Rng,
+        b: usize,
+        min_len: usize,
+    ) -> Vec<(TaskGen, super::Prompt)> {
+        (0..b)
+            .map(|_| {
+                let g = self.pick_source(rng).clone();
+                let lo = min_len.max(TaskGen::MIN_PROMPT_LEN).min(g.prompt_len);
+                let mut rr = self.row_rng(Stage::Rlhf);
+                let len = rr.range(lo as i64, g.prompt_len as i64 + 1) as usize;
+                let p = g.sample_prompt_len(&mut rr, len);
+                (g, p)
+            })
+            .collect()
+    }
+
     pub fn ptx_batch(&mut self, rng: &mut Rng, b: usize) -> TokenBatch {
         let g0 = self.sources[0].0.clone();
         let s = g0.seq_len();
@@ -269,5 +294,20 @@ mod tests {
         assert_eq!(pb.chosen.len(), 3 * 16);
         let pr = blend.prompt_batch(&mut rng, 3);
         assert_eq!(pr.len(), 3);
+    }
+
+    #[test]
+    fn mixed_prompt_batch_spans_the_length_range() {
+        let g = TaskGen::new(64, 12, 8);
+        let mut blend = Blend::new(vec![(g, 1.0)], DataSplit::new(1.0, 1.0, 1.0));
+        let mut rng = Rng::new(2);
+        let prompts = blend.prompt_batch_mixed(&mut rng, 200, 5);
+        let lens: Vec<usize> = prompts.iter().map(|(_, p)| p.tokens.len()).collect();
+        assert!(lens.iter().all(|&l| (5..=12).contains(&l)), "{lens:?}");
+        assert!(lens.iter().any(|&l| l < 12), "some rows must be short");
+        assert!(lens.iter().any(|&l| l == 12), "some rows must be full length");
+        // min_len below the structural floor clamps up instead of panicking.
+        let clamped = blend.prompt_batch_mixed(&mut rng, 50, 1);
+        assert!(clamped.iter().all(|(_, p)| p.tokens.len() >= 5));
     }
 }

@@ -110,19 +110,39 @@ impl TaskGen {
         self.prompt_len + self.gen_len
     }
 
+    /// Structural minimum prompt length: `[BOS, mode, a, b, SEP]`.
+    pub const MIN_PROMPT_LEN: usize = 5;
+
     pub fn sample_prompt(&self, rng: &mut Rng) -> Prompt {
+        self.sample_prompt_len(rng, self.prompt_len)
+    }
+
+    /// Sample a prompt with an explicit TRUE length `len` (heterogeneous
+    /// prompt lengths for the variable-length serving path). The
+    /// instruction layout is identical — `[BOS, mode, a, b, filler..,
+    /// SEP]` — only the deterministic filler shrinks, so the expected
+    /// response and the reward oracle (functions of mode/a/b alone) are
+    /// shared across lengths. `len` must be in
+    /// `MIN_PROMPT_LEN..=prompt_len`.
+    pub fn sample_prompt_len(&self, rng: &mut Rng, len: usize) -> Prompt {
+        assert!(
+            (Self::MIN_PROMPT_LEN..=self.prompt_len).contains(&len),
+            "prompt length {len} outside {}..={}",
+            Self::MIN_PROMPT_LEN,
+            self.prompt_len
+        );
         let mode = *rng.choose(&self.modes);
         let (lo, hi) = self.vocab.content_range();
         let a = rng.range(lo as i64, hi as i64) as i32;
         let b = rng.range(lo as i64, hi as i64) as i32;
-        let mut tokens = Vec::with_capacity(self.prompt_len);
+        let mut tokens = Vec::with_capacity(len);
         tokens.push(Vocab::BOS);
         tokens.push(mode.token());
         tokens.push(a);
         tokens.push(b);
         // Deterministic filler (repeats a/b) so the prompt carries no noise
         // the model must ignore spuriously.
-        while tokens.len() < self.prompt_len - 1 {
+        while tokens.len() < len - 1 {
             let i = tokens.len();
             tokens.push(if i % 2 == 0 { a } else { b });
         }
@@ -332,6 +352,34 @@ mod tests {
         assert_eq!(p.tokens[0], Vocab::BOS);
         assert_eq!(p.tokens[1], p.mode.token());
         assert_eq!(p.tokens[15], Vocab::SEP);
+    }
+
+    #[test]
+    fn short_prompt_keeps_instruction_layout_and_oracle() {
+        // Heterogeneous lengths: the instruction head and SEP tail are
+        // preserved at every length, and the reward oracle is shared (a
+        // perfect response scores 1.0 regardless of prompt length).
+        let g = gen();
+        let mut rng = Rng::new(1);
+        for len in TaskGen::MIN_PROMPT_LEN..=g.prompt_len {
+            let p = g.sample_prompt_len(&mut rng, len);
+            assert_eq!(p.tokens.len(), len);
+            assert_eq!(p.tokens[0], Vocab::BOS);
+            assert_eq!(p.tokens[1], p.mode.token());
+            assert_eq!(p.tokens[2], p.a);
+            assert_eq!(p.tokens[3], p.b);
+            assert_eq!(*p.tokens.last().unwrap(), Vocab::SEP);
+            let r = g.expected_response(&p);
+            assert!((g.reward(&p, &r) - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn prompt_below_structural_floor_panics() {
+        let g = gen();
+        let mut rng = Rng::new(2);
+        g.sample_prompt_len(&mut rng, TaskGen::MIN_PROMPT_LEN - 1);
     }
 
     #[test]

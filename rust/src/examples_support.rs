@@ -116,17 +116,41 @@ pub fn naive_generate(
     Ok(seqs)
 }
 
+/// A heterogeneous prompt queue: `n` prompts whose TRUE lengths are drawn
+/// uniformly from `[min_len, prompt_len]` (clamped to the task's
+/// structural floor) — the mixed-length traffic the serve/rollout benches
+/// and the mixed-traffic ablation all share, so their workloads cannot
+/// quietly diverge.
+pub fn mixed_prompts(
+    task: &TaskGen,
+    rng: &mut Rng,
+    n: usize,
+    min_len: usize,
+) -> Vec<Vec<i32>> {
+    let lo = min_len.max(TaskGen::MIN_PROMPT_LEN).min(task.prompt_len);
+    (0..n)
+        .map(|_| {
+            let len = rng.range(lo as i64, task.prompt_len as i64 + 1) as usize;
+            task.sample_prompt_len(rng, len).tokens
+        })
+        .collect()
+}
+
 /// One measured experience-rollout phase — fixed lockstep baseline or the
 /// continuous scheduler rollout. `examples/ablations.rs` and the
 /// `runtime_e2e` rollout bench both consume these helpers so the
-/// useful-token and slot-bubble accounting cannot diverge between the
-/// ablation table and `BENCH_rollout.json`.
+/// useful-token, slot-bubble, and padded-token accounting cannot diverge
+/// between the ablation table and the BENCH JSONs.
 pub struct RolloutPhase {
     /// Useful generated tokens: up to EOS or the per-request budget.
     pub useful_tokens: u64,
     pub secs: f64,
     /// Fraction of held slot capacity spent on dead rows.
     pub bubble: f64,
+    /// Fraction of prefill-written prompt-window entries that were
+    /// left-padding (0 for exact-length traffic; `SchedStats::pad_fraction`
+    /// on the continuous path).
+    pub pad_overhead: f64,
     /// Scheduler counters (continuous phase only).
     pub sched: Option<SchedStats>,
 }
@@ -179,14 +203,16 @@ pub fn rollout_fixed_baseline(
         useful_tokens: useful,
         secs: t0.elapsed().as_secs_f64(),
         bubble: 1.0 - useful as f64 / capacity.max(1) as f64,
+        pad_overhead: 0.0,
         sched: None,
     })
 }
 
 /// Continuous rollout discipline: the same queue through the slot
 /// scheduler (`crate::rollout`) — budgets honored exactly, retired slots
-/// admit the next queued prompt. Callers should warm the serving
-/// artifacts (one small rollout) before timing.
+/// admit the next queued prompt, prompts may carry mixed true lengths
+/// (left-padded at admission). Callers should warm the serving artifacts
+/// (one small rollout) before timing.
 pub fn rollout_continuous(
     he: &mut HybridEngine,
     prompts: &[Vec<i32>],
@@ -206,6 +232,7 @@ pub fn rollout_continuous(
         useful_tokens: useful,
         secs: t0.elapsed().as_secs_f64(),
         bubble: stats.bubble_fraction(),
+        pad_overhead: stats.pad_fraction(),
         sched: Some(stats),
     })
 }

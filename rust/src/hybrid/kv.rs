@@ -8,24 +8,46 @@
 //!
 //! For the serving path the cache additionally tracks **per-slot
 //! occupancy**: each batch slot (a `[n_heads, smax, d_head]` row group of
-//! both caches) is either free or holds a live sequence of known filled
-//! length. The continuous-batching scheduler admits a new request by
-//! prefilling straight into a retired slot's rows (`prefill_slot`
-//! artifact) while the other slots keep decoding — the ledger here is what
-//! keeps admissions and the device cache honest about which rows are live.
+//! both caches) is either free or holds a live sequence. Occupancy counts
+//! **valid tokens only**: a variable-length prompt arrives LEFT-PADDED
+//! into the fixed `prompt_len` window (`pad` dead entries at the front of
+//! the slot, written by the padded prefill and masked out of attention by
+//! the artifact's valid-start inputs), so a slot's state is `(valid, pad)`
+//! with the next cache write landing at row `pad + valid`. The
+//! continuous-batching scheduler admits a new request by prefilling
+//! straight into a retired slot's rows (`prefill_slot` artifact) while the
+//! other slots keep decoding — the ledger here is what keeps admissions,
+//! per-row positions, and the device cache honest about which rows are
+//! live and which are padding.
 
 use anyhow::{bail, Result};
 use xla::PjRtBuffer;
 
 use crate::runtime::Manifest;
 
+/// One occupied slot: `valid` real tokens preceded by `pad` left-padding
+/// entries (0 for exact-length prompts). The next token writes at cache
+/// row `pad + valid`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotOcc {
+    pub valid: usize,
+    pub pad: usize,
+}
+
+impl SlotOcc {
+    /// Artifact cache row the slot's NEXT token will be written at.
+    pub fn depth(&self) -> usize {
+        self.pad + self.valid
+    }
+}
+
 pub struct KvCache {
     pub k: PjRtBuffer,
     pub v: PjRtBuffer,
     /// [n_layers, b*h, smax, d_head]
     pub dims: Vec<usize>,
-    /// Per-slot filled length (tokens with live K/V rows); `None` = free.
-    occupancy: Vec<Option<usize>>,
+    /// Per-slot occupancy; `None` = free.
+    occupancy: Vec<Option<SlotOcc>>,
 }
 
 impl KvCache {
@@ -76,9 +98,25 @@ impl KvCache {
         self.occupancy.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Filled length of a slot (`None` if the slot is free).
+    /// VALID (non-padding) tokens held by a slot (`None` if free).
     pub fn len_of(&self, slot: usize) -> Option<usize> {
-        self.occupancy.get(slot).copied().flatten()
+        self.occupancy.get(slot).copied().flatten().map(|o| o.valid)
+    }
+
+    /// Left-padding entries preceding a slot's valid tokens.
+    pub fn pad_of(&self, slot: usize) -> Option<usize> {
+        self.occupancy.get(slot).copied().flatten().map(|o| o.pad)
+    }
+
+    /// Artifact cache row the slot's next token writes at (`pad + valid`).
+    pub fn depth_of(&self, slot: usize) -> Option<usize> {
+        self.occupancy.get(slot).copied().flatten().map(|o| o.depth())
+    }
+
+    /// Valid tokens held across all occupied slots (the occupancy figure —
+    /// padding entries are dead rows and never counted).
+    pub fn valid_tokens(&self) -> usize {
+        self.occupancy.iter().flatten().map(|o| o.valid).sum()
     }
 
     /// Lowest-numbered free slot, if any.
@@ -86,30 +124,44 @@ impl KvCache {
         self.occupancy.iter().position(|s| s.is_none())
     }
 
-    /// Claim one slot for a freshly prefilled sequence of `len` tokens.
-    pub fn claim(&mut self, slot: usize, len: usize) -> Result<()> {
+    /// Claim one slot for a freshly prefilled sequence of `valid` real
+    /// tokens preceded by `pad` left-padding entries (0 for an
+    /// exact-length prompt).
+    pub fn claim(&mut self, slot: usize, valid: usize, pad: usize) -> Result<()> {
         if slot >= self.occupancy.len() {
             bail!("kv claim: slot {slot} out of range ({} slots)", self.occupancy.len());
         }
         if let Some(held) = self.occupancy[slot] {
-            bail!("kv claim: slot {slot} already holds {held} tokens");
+            bail!("kv claim: slot {slot} already holds {} tokens", held.valid);
         }
-        self.occupancy[slot] = Some(len);
+        if valid == 0 {
+            bail!("kv claim: slot {slot} claimed with zero valid tokens");
+        }
+        if valid + pad > self.dims[2] {
+            bail!(
+                "kv claim: slot {slot} wants {valid}+{pad} entries, smax {}",
+                self.dims[2]
+            );
+        }
+        self.occupancy[slot] = Some(SlotOcc { valid, pad });
         Ok(())
     }
 
     /// Claim every slot at once (the batch-generate path: one full-batch
-    /// prefill fills all rows).
-    pub fn claim_all(&mut self, len: usize) {
-        for s in self.occupancy.iter_mut() {
-            *s = Some(len);
+    /// prefill fills all rows; `pads[i]` is row i's left-padding — all
+    /// zeros for the exact-length path).
+    pub fn claim_all(&mut self, valids: &[usize], pads: &[usize]) {
+        assert_eq!(valids.len(), self.occupancy.len());
+        assert_eq!(pads.len(), self.occupancy.len());
+        for (slot, s) in self.occupancy.iter_mut().enumerate() {
+            *s = Some(SlotOcc { valid: valids[slot], pad: pads[slot] });
         }
     }
 
     /// Record one decoded token appended to every slot where `active`.
     /// `fed_pos[slot]` is the cache row the token was written to; it must
-    /// equal the slot's current filled length (the scheduler and the device
-    /// cache advancing in lockstep is the core serving invariant).
+    /// equal the slot's current depth `pad + valid` (the scheduler and the
+    /// device cache advancing in lockstep is the core serving invariant).
     pub fn advance_where(&mut self, active: &[bool], fed_pos: &[i32]) -> Result<()> {
         if active.len() != self.occupancy.len() || fed_pos.len() != self.occupancy.len() {
             bail!(
@@ -123,19 +175,23 @@ impl KvCache {
             if !active[slot] {
                 continue;
             }
-            let Some(len) = self.occupancy[slot] else {
+            let Some(occ) = self.occupancy[slot] else {
                 bail!("kv advance: slot {slot} is free but marked active");
             };
-            if fed_pos[slot] as usize != len {
+            if fed_pos[slot] as usize != occ.depth() {
                 bail!(
-                    "kv advance: slot {slot} fed at pos {} but holds {len} tokens",
-                    fed_pos[slot]
+                    "kv advance: slot {slot} fed at pos {} but its depth is {} \
+                     ({} valid + {} pad)",
+                    fed_pos[slot],
+                    occ.depth(),
+                    occ.valid,
+                    occ.pad
                 );
             }
-            if len + 1 > self.dims[2] {
+            if occ.depth() + 1 > self.dims[2] {
                 bail!("kv advance: slot {slot} overflows smax {}", self.dims[2]);
             }
-            self.occupancy[slot] = Some(len + 1);
+            self.occupancy[slot] = Some(SlotOcc { valid: occ.valid + 1, pad: occ.pad });
         }
         Ok(())
     }
@@ -143,8 +199,8 @@ impl KvCache {
     /// Record one decoded token appended to every slot (batch generate).
     pub fn advance_all(&mut self) {
         for s in self.occupancy.iter_mut() {
-            if let Some(len) = s {
-                *len += 1;
+            if let Some(occ) = s {
+                occ.valid += 1;
             }
         }
     }

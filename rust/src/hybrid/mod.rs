@@ -36,12 +36,18 @@
 //!
 //! Generation is exposed at two altitudes: the batch path
 //! ([`HybridEngine::prefill`] + [`HybridEngine::decode_step`], wrapped by
-//! [`HybridEngine::generate`] for the fixed-batch training loop) runs all
-//! rows in lockstep, while the serving path
-//! ([`HybridEngine::begin_serving`] + [`HybridEngine::prefill_slot`] +
-//! [`HybridEngine::decode_slots`]) gives every batch slot its own sequence
-//! position so the continuous-batching scheduler in `crate::serving` can
-//! retire and admit requests at decode-step boundaries. The per-slot
+//! [`HybridEngine::generate`] for the fixed-batch training loop, plus the
+//! variable-length [`HybridEngine::prefill_mixed`] +
+//! [`HybridEngine::generate_mixed`] pair) runs all rows in lockstep,
+//! while the serving path ([`HybridEngine::begin_serving`] +
+//! [`HybridEngine::prefill_slot`] + [`HybridEngine::decode_slots`]) gives
+//! every batch slot its own sequence position so the continuous-batching
+//! scheduler in `crate::serving` can retire and admit requests at
+//! decode-step boundaries. Prompts need not match the fixed AOT
+//! `prompt_len`: with the `padded_prompts` artifact capability, shorter
+//! prompts are LEFT-PADDED and masked via per-row valid-start inputs —
+//! bit-identical to the exact-length computation (see `crate::serving`'s
+//! module docs for the full contract). The per-slot
 //! entry points serve two masters: the serve loop and RLHF experience
 //! generation (`crate::rollout`, which borrows the engine for one rollout
 //! via `Scheduler<&mut HybridEngine>`). Scoring forwards
@@ -398,32 +404,97 @@ impl HybridEngine {
     /// the last-position logits — full rows, ids, or top-k candidates per
     /// the traffic class. First half of the resumable generation pair —
     /// the decode loop continues from here via
-    /// [`HybridEngine::decode_step`].
+    /// [`HybridEngine::decode_step`]. Exact-length rows only; mixed
+    /// lengths go through [`HybridEngine::prefill_mixed`].
     pub fn prefill(&mut self, prompts: &[i32], traffic: TrafficClass) -> Result<SampleOut> {
         let m = &self.arts.manifest;
         let (b, sp) = (m.batch, m.prompt_len);
         if prompts.len() != b * sp {
             bail!("prompts must be [{b}, {sp}], got {} elements", prompts.len());
         }
+        self.prefill_rows(prompts.to_vec(), vec![0; b], traffic)
+    }
+
+    /// Full-batch prefill of VARIABLE-LENGTH prompts: each row of true
+    /// length `1..=prompt_len` is LEFT-PADDED into the fixed AOT shape and
+    /// the per-row valid-start vector tells the artifact to mask the
+    /// padding out of attention and shift position embeddings — row i's
+    /// computation is bit-identical to prefilling its unpadded prompt at
+    /// exact length, and (left-alignment's payoff) every row's next write
+    /// position is `prompt_len`, so the rows stay depth-aligned for the
+    /// decode loop. Requires the `padded_prompts` artifact capability
+    /// whenever any row is short.
+    pub fn prefill_mixed(
+        &mut self,
+        prompts: &[Vec<i32>],
+        traffic: TrafficClass,
+    ) -> Result<SampleOut> {
+        let m = &self.arts.manifest;
+        let (b, sp) = (m.batch, m.prompt_len);
+        if prompts.len() != b {
+            bail!("prefill_mixed wants exactly {b} prompt rows, got {}", prompts.len());
+        }
+        let mut flat = vec![crate::data::synthetic::Vocab::PAD; b * sp];
+        let mut starts = vec![0i32; b];
+        for (i, p) in prompts.iter().enumerate() {
+            let l = p.len();
+            if l == 0 || l > sp {
+                bail!("prefill_mixed row {i}: prompt must be 1..={sp} tokens, got {l}");
+            }
+            if l < sp {
+                m.require_padded_prompts()?;
+            }
+            let pad = sp - l;
+            flat[i * sp + pad..(i + 1) * sp].copy_from_slice(p);
+            starts[i] = pad as i32;
+        }
+        self.prefill_rows(flat, starts, traffic)
+    }
+
+    /// Shared tail of both batch-prefill entry points: `flat` is the
+    /// left-padded `[b, prompt_len]` token matrix and `starts[i]` row i's
+    /// valid start (0 = exact length). Artifacts with the `padded_prompts`
+    /// capability take the starts vector as an input; older artifacts are
+    /// only reachable with all-zero starts and keep their original input
+    /// list.
+    fn prefill_rows(
+        &mut self,
+        flat: Vec<i32>,
+        starts: Vec<i32>,
+        traffic: TrafficClass,
+    ) -> Result<SampleOut> {
+        let m = &self.arts.manifest;
+        let (b, sp) = (m.batch, m.prompt_len);
+        let padded_artifacts = m.padded_prompts;
         let kv_dims = KvCache::dims_for(m);
         self.enter(EngineMode::Inference);
         let t0 = Instant::now();
         self.stage_pos_bufs()?;
 
-        // Prefill: params + prompt -> (sampling outputs..., k_cache,
-        // v_cache). Everything stays on device; only the backend's
-        // sampling view is fetched.
+        // Prefill: params + prompt (+ starts) -> (sampling outputs...,
+        // k_cache, v_cache). Everything stays on device; only the
+        // backend's sampling view is fetched.
         let (prefill, n_out) = self.gen_artifact("prefill", traffic)?;
-        let prompt_buf = self.engine.upload_i32(prompts, &[b, sp])?;
+        let prompt_buf = self.engine.upload_i32(&flat, &[b, sp])?;
+        let start_buf = if padded_artifacts {
+            Some(self.engine.upload_i32(&starts, &[b])?)
+        } else {
+            None
+        };
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.push(&prompt_buf);
+        if let Some(sb) = &start_buf {
+            inputs.push(sb);
+        }
         let name = prefill.name.clone();
         let mut out = prefill.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
         let kc = out.pop().unwrap();
 
         self.install_kv(kc, vc, kv_dims);
-        self.kv.as_mut().unwrap().claim_all(sp);
+        let pads: Vec<usize> = starts.iter().map(|&s| s as usize).collect();
+        let valids: Vec<usize> = pads.iter().map(|&p| sp - p).collect();
+        self.kv.as_mut().unwrap().claim_all(&valids, &pads);
         let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
         Ok(sample)
@@ -450,16 +521,24 @@ impl HybridEngine {
             bail!("decode_step step {step} out of range (gen_len {sg})");
         }
         // Shared-position decode is only sound when every slot sits at the
-        // SAME depth and that depth is exactly the position being fed —
-        // the state a batch prefill + `step` decode steps leaves. A
-        // serving-mode cache (slots free or at mixed depths) or a stale
-        // `step` must go through `decode_slots` instead; feeding one
-        // shared position would scatter K/V at the wrong rows and desync
-        // the occupancy ledger.
+        // SAME cache depth (pad + valid) and that depth is exactly the
+        // position being fed — the state a batch prefill + `step` decode
+        // steps leaves (left-padding keeps mixed-length rows depth-aligned,
+        // but mixed rows need the per-row valid starts of `decode_slots`;
+        // this entry has no starts input and serves the exact-length
+        // `generate` path only). A serving-mode cache (slots free or at
+        // mixed depths) or a stale `step` must go through `decode_slots`
+        // instead; feeding one shared position would scatter K/V at the
+        // wrong rows and desync the occupancy ledger.
         let sp = m.prompt_len;
         let uniform_depth = self.kv.as_ref().and_then(|kv| {
-            let l0 = kv.len_of(0)?;
-            (1..kv.n_slots()).all(|i| kv.len_of(i) == Some(l0)).then_some(l0)
+            let d0 = kv.depth_of(0)?;
+            if kv.pad_of(0) != Some(0) {
+                return None; // left-padded rows need decode_slots' starts
+            }
+            (1..kv.n_slots())
+                .all(|i| kv.depth_of(i) == Some(d0) && kv.pad_of(i) == Some(0))
+                .then_some(d0)
         });
         let ready = self.mode == EngineMode::Inference
             && step < self.pos_bufs.len()
@@ -564,6 +643,76 @@ impl HybridEngine {
         Ok(seqs)
     }
 
+    /// Generate for a batch of VARIABLE-LENGTH prompts (each
+    /// `1..=prompt_len` tokens): a left-padded batch prefill
+    /// ([`HybridEngine::prefill_mixed`]) followed by per-slot decode steps
+    /// ([`HybridEngine::decode_slots`]) carrying each row's valid start.
+    /// Left-alignment at the prompt window's right edge keeps every row's
+    /// cache depth at `prompt_len + step`, so the rows advance in lockstep
+    /// exactly like [`HybridEngine::generate`] — this is the fixed-batch
+    /// reference the mixed-length serving golden compares the scheduler
+    /// against. Returns each row's TRUE sequence (prompt ++ generated, no
+    /// padding); rows stop at EOS and stop being decoded (their slot stays
+    /// claimed but inactive, like a retired scheduler slot).
+    pub fn generate_mixed(
+        &mut self,
+        prompts: &[Vec<i32>],
+        backend: &mut dyn SamplingBackend,
+    ) -> Result<Vec<Vec<i32>>> {
+        let m = &self.arts.manifest;
+        let (b, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
+        if prompts.len() != b {
+            bail!("generate_mixed wants exactly {b} prompts, got {}", prompts.len());
+        }
+        let traffic = backend.traffic();
+        let t0 = Instant::now();
+        let secs0 = self.stats.gen_secs;
+        let starts: Vec<i32> = prompts.iter().map(|p| sp as i32 - p.len() as i32).collect();
+        let mut out = self.prefill_mixed(prompts, traffic)?;
+
+        let mut seqs: Vec<Vec<i32>> = prompts.to_vec();
+        let mut done = vec![false; b];
+        let mut toks = vec![crate::data::synthetic::Vocab::PAD; b];
+        let mut pos = vec![0i32; b];
+        let mut step_starts = vec![0i32; b];
+        let mut active = vec![false; b];
+
+        for step in 0..sg {
+            let live = done.iter().filter(|d| !**d).count() as u64;
+            for i in 0..b {
+                if done[i] {
+                    toks[i] = crate::data::synthetic::Vocab::PAD;
+                    pos[i] = 0;
+                    step_starts[i] = 0;
+                    active[i] = false;
+                    continue;
+                }
+                let t = backend.sample(out.row(i), &seqs[i])?;
+                seqs[i].push(t);
+                toks[i] = t;
+                // Cache row of the just-sampled token: valid start + its
+                // index in the true sequence == prompt_len + step for every
+                // live row (left-alignment keeps the batch depth-uniform).
+                pos[i] = starts[i] + (seqs[i].len() - 1) as i32;
+                step_starts[i] = starts[i];
+                if t == crate::data::synthetic::Vocab::EOS {
+                    done[i] = true;
+                    active[i] = false;
+                } else {
+                    active[i] = true;
+                }
+            }
+            self.stats.gen_tokens += live;
+            if step + 1 == sg || done.iter().all(|d| *d) {
+                break;
+            }
+            out = self.decode_slots(&toks, &pos, &step_starts, &active, traffic)?;
+        }
+
+        self.stats.gen_secs = secs0 + t0.elapsed().as_secs_f64();
+        Ok(seqs)
+    }
+
     // ------------------------------------------------------------------
     // Inference mode: serving (iteration-level continuous batching)
     // ------------------------------------------------------------------
@@ -599,6 +748,14 @@ impl HybridEngine {
     /// through untouched, so concurrent sequences keep their state).
     /// Returns the slot's single-row sampling view (logits row, id, or
     /// top-k candidates per the traffic class).
+    ///
+    /// The prompt may be ANY length `1..=prompt_len`: a short prompt is
+    /// LEFT-PADDED into the fixed artifact shape and admitted with
+    /// valid start `prompt_len - len`, which the artifact uses to mask the
+    /// padding out of attention and shift position embeddings — the slot's
+    /// computation is bit-identical to the unpadded exact-length prompt.
+    /// Short prompts require the `padded_prompts` artifact capability
+    /// (admission bails with the rebuild command otherwise).
     pub fn prefill_slot(
         &mut self,
         slot: usize,
@@ -607,8 +764,13 @@ impl HybridEngine {
     ) -> Result<SampleOut> {
         let m = &self.arts.manifest;
         let (b, sp) = (m.batch, m.prompt_len);
-        if prompt.len() != sp {
-            bail!("prefill_slot prompt must be [{sp}], got {} elements", prompt.len());
+        let padded_artifacts = m.padded_prompts;
+        let l = prompt.len();
+        if l == 0 || l > sp {
+            bail!("prefill_slot prompt must be 1..={sp} tokens, got {l}");
+        }
+        if l < sp {
+            m.require_padded_prompts()?;
         }
         if slot >= b {
             bail!("prefill_slot slot {slot} out of range (batch {b})");
@@ -619,31 +781,46 @@ impl HybridEngine {
         if let Some(held) = self.kv.as_ref().unwrap().len_of(slot) {
             bail!("prefill_slot: slot {slot} still holds a {held}-token sequence");
         }
+        let pad = sp - l;
         let t0 = Instant::now();
         let (art, n_out) = self.gen_artifact("prefill_slot", traffic)?;
         let name = art.name.clone();
-        let prompt_buf = self.engine.upload_i32(prompt, &[1, sp])?;
+        let mut padded = vec![crate::data::synthetic::Vocab::PAD; sp];
+        padded[pad..].copy_from_slice(prompt);
+        let prompt_buf = self.engine.upload_i32(&padded, &[1, sp])?;
         let slot_buf = self.engine.upload_i32(&[slot as i32], &[1])?;
+        let start_buf = if padded_artifacts {
+            Some(self.engine.upload_i32(&[pad as i32], &[1])?)
+        } else {
+            None
+        };
         let kv = self.kv.as_ref().unwrap();
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.push(&kv.k);
         inputs.push(&kv.v);
         inputs.push(&prompt_buf);
         inputs.push(&slot_buf);
+        if let Some(sb) = &start_buf {
+            inputs.push(sb);
+        }
         let mut out = art.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
         let kc = out.pop().unwrap();
         let kv = self.kv.as_mut().unwrap();
         kv.update(kc, vc);
-        kv.claim(slot, sp)?;
+        kv.claim(slot, l, pad)?;
         let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
         Ok(sample)
     }
 
     /// One continuous-batching decode step: advance every `active` slot by
-    /// one token at its OWN position (`pos[slot]` = index the fed token is
-    /// written at, which must equal the slot's filled length). Inactive
+    /// one token at its OWN position (`pos[slot]` = cache row the fed token
+    /// is written at, which must equal the slot's depth `pad + valid`).
+    /// `starts[slot]` is the slot's valid start (the left-pad width its
+    /// prompt was admitted with; 0 for exact-length prompts and dead
+    /// rows) — the artifact masks cache entries before it out of attention
+    /// and embeds the token at logical position `pos - start`. Inactive
     /// slots are fed PAD at position 0 — their rows are dead and the next
     /// admission's prefill overwrites them. Returns the batch's sampling
     /// view; only the active rows are meaningful.
@@ -651,18 +828,24 @@ impl HybridEngine {
         &mut self,
         toks: &[i32],
         pos: &[i32],
+        starts: &[i32],
         active: &[bool],
         traffic: TrafficClass,
     ) -> Result<SampleOut> {
         let m = &self.arts.manifest;
         let b = m.batch;
-        if toks.len() != b || pos.len() != b || active.len() != b {
+        let padded_artifacts = m.padded_prompts;
+        if toks.len() != b || pos.len() != b || starts.len() != b || active.len() != b {
             bail!(
-                "decode_slots wants [{b}] toks/pos/active, got {}/{}/{}",
+                "decode_slots wants [{b}] toks/pos/starts/active, got {}/{}/{}/{}",
                 toks.len(),
                 pos.len(),
+                starts.len(),
                 active.len()
             );
+        }
+        if !padded_artifacts && starts.iter().any(|&s| s != 0) {
+            m.require_padded_prompts()?;
         }
         if self.mode != EngineMode::Inference || self.kv.is_none() {
             bail!("decode_slots requires serving mode (call begin_serving first)");
@@ -672,12 +855,20 @@ impl HybridEngine {
         let name = art.name.clone();
         let tok_buf = self.engine.upload_i32(toks, &[b])?;
         let pos_buf = self.engine.upload_i32(pos, &[b])?;
+        let start_buf = if padded_artifacts {
+            Some(self.engine.upload_i32(starts, &[b])?)
+        } else {
+            None
+        };
         let kv = self.kv.as_ref().unwrap();
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.push(&kv.k);
         inputs.push(&kv.v);
         inputs.push(&tok_buf);
         inputs.push(&pos_buf);
+        if let Some(sb) = &start_buf {
+            inputs.push(sb);
+        }
         let mut out = art.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
         let kc = out.pop().unwrap();

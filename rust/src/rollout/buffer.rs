@@ -107,13 +107,20 @@ impl CompletionSink for ExperienceBuffer {
 /// Flatten a ready group into the `[group, seq_len]` row-major token batch
 /// plus per-row response lengths (generated tokens, EOS included when
 /// emitted — the scheduler retires at the first EOS, so this matches
-/// `PpoTrainer::response_len` over the padded row). Rows are padded with
-/// [`Vocab::PAD`] after the last generated token, the same layout the
-/// fixed-batch `generate` produces.
-pub fn flatten_group(g: &ReadyGroup, seq_len: usize) -> (Vec<i32>, Vec<usize>) {
+/// `PpoTrainer::response_len` over the padded row) and per-row TRUE prompt
+/// lengths. Completions carry unpadded tokens (the scheduler strips the
+/// admission-time left-padding before they ever reach the buffer), so row
+/// `i` is the true sequence — prompt of `prompt_lens[i]` tokens, then the
+/// response — RIGHT-padded with [`Vocab::PAD`] to `seq_len`: exactly the
+/// layout the fixed-batch `generate` leaves for exact-length prompts, and
+/// what the scoring forwards expect (causal attention makes the trailing
+/// pads inert, and the per-row prompt lengths tell PPO where each row's
+/// response region really starts).
+pub fn flatten_group(g: &ReadyGroup, seq_len: usize) -> (Vec<i32>, Vec<usize>, Vec<usize>) {
     let b = g.completions.len();
     let mut tokens = vec![Vocab::PAD; b * seq_len];
     let mut resp_lens = Vec::with_capacity(b);
+    let mut prompt_lens = Vec::with_capacity(b);
     for (i, c) in g.completions.iter().enumerate() {
         assert!(
             c.tokens.len() <= seq_len,
@@ -123,8 +130,9 @@ pub fn flatten_group(g: &ReadyGroup, seq_len: usize) -> (Vec<i32>, Vec<usize>) {
         );
         tokens[i * seq_len..i * seq_len + c.tokens.len()].copy_from_slice(&c.tokens);
         resp_lens.push(c.generated);
+        prompt_lens.push(c.prompt_len);
     }
-    (tokens, resp_lens)
+    (tokens, resp_lens, prompt_lens)
 }
 
 #[cfg(test)]
@@ -196,14 +204,34 @@ mod tests {
         buf.push(comp(1, 4, 4)); // 8 real tokens
         let g = buf.pop_ready().unwrap();
         let s = 10;
-        let (tokens, resp_lens) = flatten_group(&g, s);
+        let (tokens, resp_lens, prompt_lens) = flatten_group(&g, s);
         assert_eq!(tokens.len(), 2 * s);
         assert_eq!(resp_lens, vec![2, 4]);
+        assert_eq!(prompt_lens, vec![4, 4]);
         // Row 0: 6 real tokens then PAD to seq_len.
         assert_eq!(tokens[5], Vocab::EOS);
         assert!(tokens[6..s].iter().all(|&t| t == Vocab::PAD));
         // Row 1 starts at s with its own tokens.
         assert_eq!(tokens[s + 7], Vocab::EOS);
+        assert!(tokens[s + 8..2 * s].iter().all(|&t| t == Vocab::PAD));
+    }
+
+    #[test]
+    fn flatten_preserves_mixed_true_prompt_lengths() {
+        // Variable-length prompts: each row's true prompt length rides out
+        // of the flatten so PPO masks see real response boundaries.
+        let mut buf = ExperienceBuffer::new(2, 2);
+        buf.push(comp(0, 2, 3)); // 2-token prompt, 3 generated
+        buf.push(comp(1, 7, 1)); // 7-token prompt, 1 generated
+        let g = buf.pop_ready().unwrap();
+        let s = 12;
+        let (tokens, resp_lens, prompt_lens) = flatten_group(&g, s);
+        assert_eq!(prompt_lens, vec![2, 7]);
+        assert_eq!(resp_lens, vec![3, 1]);
+        // Row layouts start at the TRUE lengths, not a fixed prompt_len.
+        assert_eq!(tokens[4], Vocab::EOS, "row 0: prompt 2 + gen 3 ends at index 4");
+        assert!(tokens[5..s].iter().all(|&t| t == Vocab::PAD));
+        assert_eq!(tokens[s + 7], Vocab::EOS, "row 1: prompt 7 + gen 1 ends at index 7");
         assert!(tokens[s + 8..2 * s].iter().all(|&t| t == Vocab::PAD));
     }
 }

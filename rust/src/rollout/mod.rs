@@ -212,6 +212,10 @@ mod tests {
             SG
         }
 
+        fn supports_padded_prompts(&self) -> bool {
+            true // the scripted plans work at any prompt length
+        }
+
         fn prefill_slot(
             &mut self,
             slot: usize,
@@ -233,6 +237,7 @@ mod tests {
             &mut self,
             _toks: &[i32],
             _pos: &[i32],
+            _starts: &[i32],
             active: &[bool],
             _traffic: TrafficClass,
         ) -> Result<SampleOut> {
@@ -266,7 +271,12 @@ mod tests {
 
     /// Prompt whose scripted response is `eos_after` content tokens + EOS.
     fn prompt(eos_after: i32) -> Vec<i32> {
-        let mut p = vec![CONTENT; SP];
+        prompt_n(eos_after, SP)
+    }
+
+    /// Same, with an explicit TRUE prompt length (mixed-length rollouts).
+    fn prompt_n(eos_after: i32, len: usize) -> Vec<i32> {
+        let mut p = vec![CONTENT; len];
         p[0] = eos_after;
         p
     }
@@ -340,6 +350,44 @@ mod tests {
         assert_ne!(round_seed(5, 0), round_seed(5, 1));
         assert_ne!(round_seed(5, 1), round_seed(5, 2));
         assert_eq!(round_seed(5, 0), 5);
+    }
+
+    #[test]
+    fn mixed_length_rollout_groups_preserve_true_lengths() {
+        // Variable-length prompts through the rollout: every flushed
+        // completion carries its TRUE prompt length and unpadded tokens,
+        // and `flatten_group` lays each row out from its true length —
+        // the boundary `score_experience`/PPO masks rely on.
+        let prompts: Vec<Vec<i32>> = vec![
+            prompt_n(1, SP),     // exact length
+            prompt_n(2, 2),      // short
+            prompt_n(1, SP - 1), // short
+            prompt_n(3, 1),      // shortest admissible
+        ];
+        let budgets = vec![SG; 4];
+        let s = SP + SG;
+        let mut flushed = 0usize;
+        RolloutEngine::new(0)
+            .run(MockEngine::new(2), &mut greedy(), &prompts, &budgets, 2, |_, g| {
+                let (tokens, resp_lens, prompt_lens) = flatten_group(&g, s);
+                for (i, c) in g.completions.iter().enumerate() {
+                    let want_plen = prompts[c.id as usize].len();
+                    assert_eq!(c.prompt_len, want_plen, "req {}", c.id);
+                    assert_eq!(prompt_lens[i], want_plen);
+                    assert_eq!(resp_lens[i], c.generated);
+                    let row = &tokens[i * s..(i + 1) * s];
+                    assert_eq!(&row[..c.tokens.len()], c.tokens.as_slice());
+                    assert!(
+                        row[c.tokens.len()..].iter().all(|&t| t == Vocab::PAD),
+                        "row {} padded after its true tokens",
+                        i
+                    );
+                    flushed += 1;
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(flushed, 4);
     }
 
     #[test]

@@ -52,6 +52,15 @@ pub struct Manifest {
     /// artifacts return `[batch, sample_k]` top-k logits+ids). 0 when the
     /// artifact set predates device-side sampling.
     pub sample_k: usize,
+    /// True when the prompt-taking generation entries accept per-row
+    /// valid-start vectors (left-padded variable-length prompts): prompts
+    /// of true length `L <= prompt_len` are admitted left-padded with
+    /// `start = prompt_len - L`, attention masks keys before `start`, and
+    /// position embeddings are shifted so the computation is bit-identical
+    /// to the unpadded exact-length prompt. False for artifact sets built
+    /// before the capability existed — those can only admit exact-length
+    /// prompts.
+    pub padded_prompts: bool,
     pub actor: ModelConfig,
     pub critic: ModelConfig,
     pub actor_params: Vec<TensorSpec>,
@@ -153,6 +162,10 @@ impl Manifest {
             gen_len: cfg.at("gen_len").as_usize().context("gen_len")?,
             seq_len: cfg.at("seq_len").as_usize().context("seq_len")?,
             sample_k: cfg.get("sample_k").and_then(|v| v.as_usize()).unwrap_or(0),
+            padded_prompts: cfg
+                .get("padded_prompts")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
             actor: model_config(cfg.at("actor"))?,
             critic: model_config(cfg.at("critic"))?,
             actor_params: tensor_specs(j.at("actor_params"))?,
@@ -180,6 +193,24 @@ impl Manifest {
     /// serving artifact is added in ONE place).
     pub fn has_serving(&self) -> bool {
         self.artifacts.contains_key("prefill_slot") && self.artifacts.contains_key("decode_slots")
+    }
+
+    /// Bail with a rebuild hint unless the artifact set can admit prompts
+    /// shorter than `prompt_len`. Pre-capability artifacts have no
+    /// valid-start inputs on the prefill/decode entries, so a left-padded
+    /// short prompt would attend its own padding — a silent wrong answer;
+    /// refusing admission with the rebuild command is the only safe move.
+    pub fn require_padded_prompts(&self) -> Result<()> {
+        if !self.padded_prompts {
+            bail!(
+                "artifacts ({}) predate variable-length prompts: the manifest lacks the \
+                 `padded_prompts` capability, so prompts shorter than prompt_len ({}) \
+                 cannot be admitted — re-run `make artifacts`",
+                self.run,
+                self.prompt_len
+            );
+        }
+        Ok(())
     }
 
     /// Sanity checks tying the manifest to the architecture configs.
@@ -252,10 +283,33 @@ mod tests {
         assert_eq!(a.inputs[0].dtype, "int32");
         assert_eq!(a.outputs, vec!["actor_params", "loss"]);
         // Pre-device-sampling manifests parse with the tail disabled and no
-        // donated inputs.
+        // donated inputs; pre-padding manifests parse with variable-length
+        // prompts unavailable.
         assert_eq!(m.sample_k, 0);
         assert!(a.donates.is_empty());
+        assert!(!m.padded_prompts);
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn short_prompts_need_the_padded_capability() {
+        // A pre-capability manifest must refuse short-prompt admission with
+        // a config error naming the rebuild command; a manifest carrying
+        // the flag passes.
+        let dir = std::env::temp_dir().join("dschat_manifest_padded_test");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.require_padded_prompts().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+        assert!(msg.contains("padded_prompts"), "{msg}");
+
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let text = text.replacen("\"batch\": 2,", "\"batch\": 2, \"padded_prompts\": true,", 1);
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.padded_prompts);
+        m.require_padded_prompts().unwrap();
     }
 
     #[test]

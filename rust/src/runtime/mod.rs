@@ -34,6 +34,17 @@
 //!   positions, prompts) remain safely reusable across calls; the
 //!   manifest's per-artifact `donates` list records which positions are
 //!   donated.
+//! * When the manifest carries the `padded_prompts` capability, every
+//!   prompt-taking generation entry (`prefill`, `prefill_slot`,
+//!   `decode_slots`, and their `_sampled` variants) takes one extra
+//!   trailing int32 input: the per-row **valid-start** vector. Prompts
+//!   shorter than the fixed `prompt_len` window are LEFT-PADDED and the
+//!   valid start (= pad width) makes the artifact mask the padding out of
+//!   attention and shift position embeddings, so the padded computation
+//!   is bit-identical to the exact-length prompt. The hybrid engine
+//!   appends the start buffers only when the capability is present, so
+//!   pre-capability artifact sets keep their original input lists (and
+//!   can only admit exact-length prompts).
 //! * [`ExecStats`] tracks seconds and bytes moved in each direction per
 //!   artifact; `cargo bench --bench runtime_e2e` prints the ledger and the
 //!   decode bench emits it as `BENCH_decode.json`.

@@ -39,14 +39,36 @@
 //! (and any `&mut E` borrows a scheduler for one phase — the rollout
 //! subsystem's shape).
 //!
+//! # Variable prompt lengths (the left-padding/masking contract)
+//!
+//! The AOT artifacts are fixed-shape, but admitted prompts are NOT: any
+//! request of true length `1..=prompt_len` is accepted. A short prompt is
+//! LEFT-PADDED into the fixed prompt window with `pad = prompt_len - len`
+//! dead entries at the front, and the per-row **valid start** (`= pad`) is
+//! threaded to the artifacts, which mask cache entries before it out of
+//! attention and shift position embeddings so real token `j` is embedded
+//! at logical position `j` — the padded computation is bit-identical to
+//! running the unpadded prompt at its exact length (pinned by the
+//! mixed-length goldens in `rust/tests/integration_serving.rs` and the
+//! pytest oracle suite). Left-alignment at the window's right edge means
+//! every slot's next cache write is at `prompt_len`, keeping per-slot
+//! positions simple: a slot's decode position is `pad + true_len`. All
+//! length accounting ([`SchedStats`], `KvCache` occupancy,
+//! [`Completion`]) counts VALID tokens only; the padded-entry overhead is
+//! tracked separately ([`SchedStats::pad_fraction`]) for the serve bench.
+//! Short prompts require the artifact set's `padded_prompts` capability
+//! ([`SlotEngine::supports_padded_prompts`]) — submission bails with the
+//! rebuild command against pre-capability artifacts.
+//!
 //! The scheduler serves two consumers: the serve loop (one request per
 //! client, completions returned per step) and RLHF experience generation
 //! (`crate::rollout`, which oversubscribes the queue with a whole prompt
-//! batch and streams completions into an `ExperienceBuffer` through the
-//! [`CompletionSink`] that [`Scheduler::step_into`] takes). Requests may
-//! carry their own RNG-stream seed ([`Request::seed`]) so stochastic
-//! sampling stays reproducible even though retirement — and therefore the
-//! order sample calls interleave across requests — is data-dependent.
+//! batch — mixed lengths welcome — and streams completions into an
+//! `ExperienceBuffer` through the [`CompletionSink`] that
+//! [`Scheduler::step_into`] takes). Requests may carry their own
+//! RNG-stream seed ([`Request::seed`]) so stochastic sampling stays
+//! reproducible even though retirement — and therefore the order sample
+//! calls interleave across requests — is data-dependent.
 
 use std::collections::VecDeque;
 
@@ -63,16 +85,29 @@ use crate::util::rng::Rng;
 pub trait SlotEngine {
     /// Number of batch slots (the artifact batch size).
     fn n_slots(&self) -> usize;
-    /// Prompt length every admitted request must match (fixed AOT shape).
+    /// The fixed prompt window of the AOT shapes — the CAP on admitted
+    /// prompt lengths. Shorter prompts are left-padded up to it (see the
+    /// module docs' padding/masking contract).
     fn prompt_len(&self) -> usize;
     /// Hard cap on generated tokens per sequence (KV-cache capacity).
     fn max_new_tokens(&self) -> usize;
+    /// Whether prompts SHORTER than [`SlotEngine::prompt_len`] can be
+    /// admitted (the artifact set's `padded_prompts` capability — per-row
+    /// valid-start masking). Engines without it only take exact-length
+    /// prompts; [`Scheduler::submit`] refuses short ones up front. The
+    /// default FAILS CLOSED: an engine that cannot mask left-padding but
+    /// admitted a short prompt would attend its own padding — a silent
+    /// wrong answer — so opting in must be explicit.
+    fn supports_padded_prompts(&self) -> bool {
+        false
+    }
     /// Enter serving mode (install an empty per-slot cache).
     fn begin_serving(&mut self) -> Result<()> {
         Ok(())
     }
-    /// Admit one prompt into a free slot; returns its pending row (logits,
-    /// id, or top-k candidates per the traffic class).
+    /// Admit one prompt (any length `1..=prompt_len`) into a free slot;
+    /// returns its pending row (logits, id, or top-k candidates per the
+    /// traffic class).
     fn prefill_slot(
         &mut self,
         slot: usize,
@@ -80,11 +115,14 @@ pub trait SlotEngine {
         traffic: TrafficClass,
     ) -> Result<PendingRow>;
     /// Advance every `active` slot by one token at its own position;
-    /// returns the batch's sampling view (only active rows meaningful).
+    /// `starts[slot]` is the slot's valid start (left-pad width; 0 for
+    /// exact-length prompts and dead rows). Returns the batch's sampling
+    /// view (only active rows meaningful).
     fn decode_slots(
         &mut self,
         toks: &[i32],
         pos: &[i32],
+        starts: &[i32],
         active: &[bool],
         traffic: TrafficClass,
     ) -> Result<SampleOut>;
@@ -112,6 +150,10 @@ impl<E: SlotEngine> SlotEngine for &mut E {
         (**self).max_new_tokens()
     }
 
+    fn supports_padded_prompts(&self) -> bool {
+        (**self).supports_padded_prompts()
+    }
+
     fn begin_serving(&mut self) -> Result<()> {
         (**self).begin_serving()
     }
@@ -129,10 +171,11 @@ impl<E: SlotEngine> SlotEngine for &mut E {
         &mut self,
         toks: &[i32],
         pos: &[i32],
+        starts: &[i32],
         active: &[bool],
         traffic: TrafficClass,
     ) -> Result<SampleOut> {
-        (**self).decode_slots(toks, pos, active, traffic)
+        (**self).decode_slots(toks, pos, starts, active, traffic)
     }
 
     fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -157,6 +200,10 @@ impl SlotEngine for HybridEngine {
         self.manifest().gen_len
     }
 
+    fn supports_padded_prompts(&self) -> bool {
+        self.manifest().padded_prompts
+    }
+
     fn begin_serving(&mut self) -> Result<()> {
         HybridEngine::begin_serving(self)
     }
@@ -175,10 +222,11 @@ impl SlotEngine for HybridEngine {
         &mut self,
         toks: &[i32],
         pos: &[i32],
+        starts: &[i32],
         active: &[bool],
         traffic: TrafficClass,
     ) -> Result<SampleOut> {
-        HybridEngine::decode_slots(self, toks, pos, active, traffic)
+        HybridEngine::decode_slots(self, toks, pos, starts, active, traffic)
     }
 
     fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -194,7 +242,11 @@ impl SlotEngine for HybridEngine {
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    /// Exactly `prompt_len` tokens (the AOT artifacts are fixed-shape).
+    /// Any length `1..=prompt_len`: the AOT artifacts are fixed-shape, but
+    /// shorter prompts are LEFT-PADDED into the fixed window at admission
+    /// and masked via the artifacts' per-row valid-start inputs (see the
+    /// module docs). Admitting a short prompt requires the engine's
+    /// `padded_prompts` capability.
     pub prompt: Vec<i32>,
     /// Requested generation budget; capped at the engine's
     /// [`SlotEngine::max_new_tokens`].
@@ -243,8 +295,15 @@ impl Completion {
 /// A sequence occupying one batch slot.
 struct Seq {
     id: u64,
+    /// TRUE tokens only (prompt ++ generated) — padding never lands here.
     tokens: Vec<i32>,
+    /// TRUE prompt length (<= the engine's fixed prompt window).
     prompt_len: usize,
+    /// Left-pad width the prompt was admitted with (`prompt window -
+    /// prompt_len`); the slot's cache position for token index `j` is
+    /// `pad + j`, and `pad` is fed to the fused decode as the slot's
+    /// valid start.
+    pad: usize,
     generated: usize,
     max_new: usize,
     /// Pending sampling view predicting the next token (from the
@@ -275,12 +334,19 @@ pub struct SchedStats {
     /// Total slot-steps across all decode calls (`decode_calls * n_slots`).
     pub slot_steps_total: u64,
     /// Tokens sampled across all steps (every live slot, every tick).
+    /// VALID tokens only — padding is never sampled and never counted.
     pub tokens_sampled: u64,
     /// Sequences retired on EOS (the early exits continuous batching
     /// converts into fresh admissions instead of dead decode rows).
     pub retired_eos: u64,
     /// Sequences retired on the per-request/engine budget.
     pub retired_length: u64,
+    /// VALID prompt tokens across all admissions (true lengths).
+    pub prompt_tokens: u64,
+    /// Left-padding entries written by admissions (the fixed prompt
+    /// window minus the true length, summed) — the padded-token overhead
+    /// the serve bench reports for mixed-length traffic.
+    pub pad_tokens: u64,
 }
 
 impl SchedStats {
@@ -297,6 +363,18 @@ impl SchedStats {
             0.0
         } else {
             1.0 - self.utilization()
+        }
+    }
+
+    /// Fraction of prefill-written prompt-window entries that were
+    /// left-padding (0 for exact-length traffic; the padded-token overhead
+    /// mixed-length serving pays for riding the fixed AOT shape).
+    pub fn pad_fraction(&self) -> f64 {
+        let total = self.prompt_tokens + self.pad_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.pad_tokens as f64 / total as f64
         }
     }
 }
@@ -328,6 +406,7 @@ pub struct Scheduler<E: SlotEngine> {
     /// Reused per-step decode inputs (the hot loop must not allocate).
     step_toks: Vec<i32>,
     step_pos: Vec<i32>,
+    step_starts: Vec<i32>,
     step_active: Vec<bool>,
 }
 
@@ -344,6 +423,7 @@ impl<E: SlotEngine> Scheduler<E> {
             step_idx: 0,
             step_toks: vec![Vocab::PAD; n],
             step_pos: vec![0; n],
+            step_starts: vec![0; n],
             step_active: vec![false; n],
         })
     }
@@ -361,15 +441,25 @@ impl<E: SlotEngine> Scheduler<E> {
     }
 
     /// Enqueue a request; it is admitted at the next step boundary with a
-    /// free slot. The queue is unbounded — backpressure is visible through
+    /// free slot. Prompts may be any length `1..=prompt_len` — shorter
+    /// ones are left-padded at admission (capability-gated; see module
+    /// docs). The queue is unbounded — backpressure is visible through
     /// [`Scheduler::queue_depth`].
     pub fn submit(&mut self, req: Request) -> Result<()> {
-        if req.prompt.len() != self.engine.prompt_len() {
+        let cap = self.engine.prompt_len();
+        let len = req.prompt.len();
+        if len == 0 || len > cap {
             bail!(
-                "request {} prompt must be [{}], got {} tokens",
+                "request {} prompt must be 1..={cap} tokens, got {len}",
                 req.id,
-                self.engine.prompt_len(),
-                req.prompt.len()
+            );
+        }
+        if len < cap && !self.engine.supports_padded_prompts() {
+            bail!(
+                "request {}: prompt is {len} tokens but the engine's artifacts only admit \
+                 exact-length [{cap}] prompts (no `padded_prompts` capability / valid-start \
+                 masks) — re-run `make artifacts` to rebuild with variable-length support",
+                req.id,
             );
         }
         self.stats.submitted += 1;
@@ -417,7 +507,11 @@ impl<E: SlotEngine> Scheduler<E> {
 
         // 1. Admission at the step boundary: every free slot takes the
         // oldest queued request; its prefill runs while the other slots'
-        // device state stays live.
+        // device state stays live. The engine left-pads short prompts into
+        // the fixed window; the scheduler records the pad so the slot's
+        // decode positions (cache row = pad + token index) and valid-start
+        // stay honest, and counts valid vs padded prompt entries.
+        let cap = self.engine.prompt_len();
         for slot in 0..b {
             if self.slots[slot].is_some() {
                 continue;
@@ -428,10 +522,14 @@ impl<E: SlotEngine> Scheduler<E> {
             let pending = self.engine.prefill_slot(slot, &req.prompt, traffic)?;
             self.stats.prefills += 1;
             self.stats.admitted += 1;
+            let true_len = req.prompt.len();
+            self.stats.prompt_tokens += true_len as u64;
+            self.stats.pad_tokens += (cap - true_len) as u64;
             let max_new = req.max_new.clamp(1, self.engine.max_new_tokens());
             self.slots[slot] = Some(Seq {
                 id: req.id,
-                prompt_len: req.prompt.len(),
+                prompt_len: true_len,
+                pad: cap - true_len,
                 tokens: req.prompt,
                 generated: 0,
                 max_new,
@@ -490,23 +588,29 @@ impl<E: SlotEngine> Scheduler<E> {
         self.engine.note_generated(sampled);
 
         // 3. One fused decode over every still-live slot, each at its own
-        // position. Free slots ride along as dead rows (PAD at pos 0).
+        // position: the fed token's cache row is `pad + index`, and the
+        // slot's valid start (= pad) rides along so the artifact masks the
+        // left-padding out of attention. Free slots ride along as dead
+        // rows (PAD at pos 0, start 0).
         let active_n = self.n_active();
         if active_n > 0 {
             for slot in 0..b {
                 if let Some(seq) = &self.slots[slot] {
                     self.step_toks[slot] = *seq.tokens.last().unwrap();
-                    self.step_pos[slot] = (seq.tokens.len() - 1) as i32;
+                    self.step_pos[slot] = (seq.pad + seq.tokens.len() - 1) as i32;
+                    self.step_starts[slot] = seq.pad as i32;
                     self.step_active[slot] = true;
                 } else {
                     self.step_toks[slot] = Vocab::PAD;
                     self.step_pos[slot] = 0;
+                    self.step_starts[slot] = 0;
                     self.step_active[slot] = false;
                 }
             }
             let out = self.engine.decode_slots(
                 &self.step_toks,
                 &self.step_pos,
+                &self.step_starts,
                 &self.step_active,
                 traffic,
             )?;
@@ -553,15 +657,24 @@ mod tests {
     /// a greedy sampler replays the plan deterministically. Honors every
     /// traffic class — full logits rows, device-argmax ids, or top-k
     /// candidate rows — so the scheduler × backend pairings are testable
-    /// without artifacts.
+    /// without artifacts. Prompts of any length `1..=SP` are accepted
+    /// (the padded-admission contract); the true length of every
+    /// admission is logged for the mixed-length tests.
     struct MockEngine {
         n_slots: usize,
-        /// Per slot: (planned generated tokens, cursor of the next logits).
-        plans: Vec<Option<(Vec<i32>, usize)>>,
+        /// Whether short prompts are admissible (artifact capability).
+        padded: bool,
+        /// Per slot: (planned generated tokens, cursor of the next logits,
+        /// admitted prompt's true length).
+        plans: Vec<Option<(Vec<i32>, usize, usize)>>,
         prefill_log: Vec<usize>,
+        /// True prompt length of every admission, in admission order.
+        prefill_lens: Vec<usize>,
         released: Vec<usize>,
         /// Active-mask of every decode call (for utilization assertions).
         decode_active: Vec<Vec<bool>>,
+        /// Valid-start vector of every decode call (padding assertions).
+        decode_starts: Vec<Vec<i32>>,
         /// Traffic class of every decode call (artifact-family assertions).
         decode_traffic: Vec<TrafficClass>,
     }
@@ -570,12 +683,21 @@ mod tests {
         fn new(n_slots: usize) -> Self {
             MockEngine {
                 n_slots,
+                padded: true,
                 plans: (0..n_slots).map(|_| None).collect(),
                 prefill_log: Vec::new(),
+                prefill_lens: Vec::new(),
                 released: Vec::new(),
                 decode_active: Vec::new(),
+                decode_starts: Vec::new(),
                 decode_traffic: Vec::new(),
             }
+        }
+
+        /// A pre-capability engine: only exact-length prompts admissible.
+        fn without_padded(mut self) -> Self {
+            self.padded = false;
+            self
         }
 
         fn logits_for(&self, tok: i32) -> Vec<f32> {
@@ -612,21 +734,27 @@ mod tests {
             SG
         }
 
+        fn supports_padded_prompts(&self) -> bool {
+            self.padded
+        }
+
         fn prefill_slot(
             &mut self,
             slot: usize,
             prompt: &[i32],
             traffic: TrafficClass,
         ) -> Result<PendingRow> {
-            assert_eq!(prompt.len(), SP);
+            assert!(!prompt.is_empty() && prompt.len() <= SP, "{}", prompt.len());
+            assert!(self.padded || prompt.len() == SP, "short prompt without capability");
             assert!(self.plans[slot].is_none(), "prefill into busy slot {slot}");
             let n = prompt[0] as usize;
             let plan: Vec<i32> = (0..SG + 2)
                 .map(|j| if j < n { CONTENT } else { Vocab::EOS })
                 .collect();
             let row = self.row_for(plan[0], traffic);
-            self.plans[slot] = Some((plan, 1));
+            self.plans[slot] = Some((plan, 1, prompt.len()));
             self.prefill_log.push(slot);
+            self.prefill_lens.push(prompt.len());
             Ok(row)
         }
 
@@ -634,19 +762,31 @@ mod tests {
             &mut self,
             toks: &[i32],
             pos: &[i32],
+            starts: &[i32],
             active: &[bool],
             traffic: TrafficClass,
         ) -> Result<SampleOut> {
             assert_eq!(toks.len(), self.n_slots);
             assert_eq!(pos.len(), self.n_slots);
+            assert_eq!(starts.len(), self.n_slots);
             self.decode_active.push(active.to_vec());
+            self.decode_starts.push(starts.to_vec());
             self.decode_traffic.push(traffic);
             let mut next = vec![0i32; self.n_slots];
             for slot in 0..self.n_slots {
                 if !active[slot] {
                     continue;
                 }
-                let (plan, cur) = self.plans[slot].as_mut().expect("active free slot");
+                let (plan, cur, true_len) = self.plans[slot].as_mut().expect("active free slot");
+                // The padding contract: the slot's valid start must be the
+                // left-pad width of its admitted prompt, and the fed
+                // position the pad-offset cache row of its newest token.
+                assert_eq!(starts[slot] as usize, SP - *true_len, "slot {slot} start");
+                assert_eq!(
+                    pos[slot] as usize,
+                    SP + *cur - 1,
+                    "slot {slot} fed off its depth"
+                );
                 next[slot] = plan[*cur];
                 *cur += 1;
             }
@@ -795,7 +935,108 @@ mod tests {
             .submit(Request { id: 0, prompt: vec![1; SP + 1], max_new: 4, seed: None })
             .unwrap_err();
         assert!(format!("{err:#}").contains("prompt must be"));
+        let err = sched
+            .submit(Request { id: 1, prompt: vec![], max_new: 4, seed: None })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("prompt must be"));
         assert!(sched.is_idle());
+    }
+
+    /// `prompt[0]` = scripted content count, with an explicit TRUE length.
+    fn req_len(id: u64, eos_after: i32, max_new: usize, len: usize) -> Request {
+        let mut prompt = vec![CONTENT; len];
+        prompt[0] = eos_after;
+        Request { id, prompt, max_new, seed: None }
+    }
+
+    #[test]
+    fn short_prompts_need_engine_capability() {
+        // A pre-capability engine (no valid-start masks in its artifacts)
+        // must reject short prompts at SUBMIT time with the rebuild
+        // command, while exact-length traffic keeps working.
+        let mut sched = Scheduler::new(MockEngine::new(1).without_padded()).unwrap();
+        let err = sched.submit(req_len(0, 1, 4, SP - 1)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+        assert!(msg.contains("padded_prompts"), "{msg}");
+        assert!(sched.is_idle());
+        sched.submit(req(1, 1, 4)).unwrap();
+        let done = sched.run_until_idle(&mut greedy()).unwrap();
+        assert_eq!(done.len(), 1);
+    }
+
+    #[test]
+    fn mixed_length_prompts_coexist_and_count_valid_tokens() {
+        // A short and a full-length prompt share the batch: the engine
+        // sees each slot's true valid start on every decode call, pad
+        // entries are never sampled, and the stats count valid prompt
+        // tokens and pad overhead separately.
+        let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+        let mut sampler = greedy();
+        sched.submit(req_len(0, 100, 3, 2)).unwrap(); // short: pad SP-2
+        sched.submit(req_len(1, 100, 3, SP)).unwrap(); // exact length
+        let mut done = sched.run_until_idle(&mut sampler).unwrap();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].prompt_len, 2, "true length survives to the completion");
+        assert_eq!(done[1].prompt_len, SP);
+        // Completions carry TRUE tokens only: prompt ++ generated, no pads.
+        assert_eq!(done[0].tokens.len(), 2 + 3);
+        assert_eq!(done[0].response(), &[CONTENT; 3]);
+        assert_eq!(done[1].tokens.len(), SP + 3);
+        let eng = &sched.engine;
+        assert_eq!(eng.prefill_lens, vec![2, SP]);
+        // Both slots decoded side by side with their own valid starts.
+        for (mask, starts) in eng.decode_active.iter().zip(&eng.decode_starts) {
+            if mask[0] {
+                assert_eq!(starts[0] as usize, SP - 2);
+            }
+            if mask[1] {
+                assert_eq!(starts[1], 0);
+            }
+        }
+        let st = &sched.stats;
+        assert_eq!(st.prompt_tokens, (2 + SP) as u64);
+        assert_eq!(st.pad_tokens, (SP - 2) as u64);
+        let want = (SP - 2) as f64 / (2 * SP) as f64;
+        assert!((st.pad_fraction() - want).abs() < 1e-12, "{}", st.pad_fraction());
+        // Sampled tokens are the VALID generated tokens only.
+        assert_eq!(st.tokens_sampled, 6);
+    }
+
+    #[test]
+    fn exact_length_traffic_has_zero_pad_overhead() {
+        let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+        sched.submit(req(0, 1, SG)).unwrap();
+        sched.submit(req(1, 2, SG)).unwrap();
+        sched.run_until_idle(&mut greedy()).unwrap();
+        assert_eq!(sched.stats.pad_tokens, 0);
+        assert_eq!(sched.stats.pad_fraction(), 0.0);
+        assert!(sched.engine.decode_starts.iter().flatten().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn eos_retire_then_readmit_with_different_length_successor() {
+        // One slot serves three requests of three different lengths back
+        // to back; each admission re-establishes its own pad, and the
+        // scripted plans replay correctly at every length.
+        let mut sched = Scheduler::new(MockEngine::new(1)).unwrap();
+        let mut sampler = greedy();
+        sched.submit(req_len(0, 1, SG, 3)).unwrap(); // C EOS
+        sched.submit(req_len(1, 2, SG, SP)).unwrap(); // C C EOS
+        sched.submit(req_len(2, 1, SG, 1)).unwrap(); // C EOS (1-token prompt)
+        let done = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(done.len(), 3);
+        assert_eq!(sched.engine.prefill_lens, vec![3, SP, 1]);
+        assert_eq!(sched.engine.prefill_log, vec![0, 0, 0], "same slot, reused");
+        for (c, (want_plen, want_gen)) in done.iter().zip([(3, 2), (SP, 3), (1, 2)]) {
+            assert_eq!(c.prompt_len, want_plen, "req {}", c.id);
+            assert_eq!(c.generated, want_gen, "req {}", c.id);
+            assert_eq!(c.finish, FinishReason::Eos);
+            assert_eq!(c.tokens.len(), want_plen + want_gen);
+        }
+        assert_eq!(sched.stats.prompt_tokens, (3 + SP + 1) as u64);
+        assert_eq!(sched.stats.pad_tokens, ((SP - 3) + (SP - 1)) as u64);
     }
 
     /// Run one scripted trace to idle under a backend; returns completions

@@ -127,9 +127,14 @@ fn prefill_then_decode_matches_logprobs_forward() {
         *t = ((i * 13 + 1) % m.actor.vocab) as i32;
     }
 
-    // Greedy-generate 4 tokens via prefill + decode.
+    // Greedy-generate 4 tokens via prefill + decode. Padded-prompt-capable
+    // artifacts take a per-row valid-start vector after the prompt (all
+    // zeros = exact length); older sets take none.
     let mut inputs = params.clone();
     inputs.push(HostTensor::I32(prompt.clone(), vec![b, sp]));
+    if m.padded_prompts {
+        inputs.push(HostTensor::I32(vec![0; b], vec![b]));
+    }
     let out = arts.get("prefill").unwrap().call(&inputs).unwrap();
     let (mut logits, mut kc, mut vc) = (out[0].clone(), out[1].clone(), out[2].clone());
 

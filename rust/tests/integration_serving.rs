@@ -1,16 +1,17 @@
 //! Integration: the continuous-batching serving path over real AOT
 //! artifacts (requires `make artifacts` with the `prefill_slot` /
 //! `decode_slots` entries). Each test passes vacuously when artifacts are
-//! missing or predate the serving entry points, so tier-1 stays green on a
-//! bare checkout; the scheduler's policy logic is covered without
-//! artifacts by the unit tests in `rust/src/serving/mod.rs`.
+//! missing or predate the serving entry points (the mixed-length goldens
+//! additionally require the `padded_prompts` capability), so tier-1 stays
+//! green on a bare checkout; the scheduler's policy logic is covered
+//! without artifacts by the unit tests in `rust/src/serving/mod.rs`.
 
 use std::rc::Rc;
 
-use dschat::data::synthetic::TaskGen;
+use dschat::data::synthetic::{TaskGen, Vocab};
 use dschat::hybrid::HybridEngine;
 use dschat::runtime::{Engine, Manifest};
-use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
+use dschat::sampling::{DeviceTopK, HostFullRow, RowRef, SamplerConfig, SamplingBackend};
 use dschat::serving::{Completion, Request, Scheduler};
 use dschat::util::rng::Rng;
 
@@ -18,6 +19,12 @@ const DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny");
 
 fn serving_artifacts() -> bool {
     Manifest::load(DIR).map(|m| m.has_serving()).unwrap_or(false)
+}
+
+fn padded_artifacts() -> bool {
+    Manifest::load(DIR)
+        .map(|m| m.has_serving() && m.padded_prompts)
+        .unwrap_or(false)
 }
 
 fn sampled_artifacts() -> bool {
@@ -257,4 +264,169 @@ fn donated_decode_keeps_cache_accounting_and_reuse_honest() {
     let again = he.generate(&flat, &mut HostFullRow::new(
         SamplerConfig { greedy: true, ..Default::default() }, 0)).unwrap();
     assert_eq!(first, again, "donated in-place updates must not perturb results");
+}
+
+// ---------------------------------------------------------------------------
+// Mixed-length goldens: variable-length prompts through the left-padded
+// admission path must be BIT-EXACT with the same prompt run at exact
+// length. Two independent references pin this:
+//   * `generate_mixed` — the fixed-batch padded path (batch prefill +
+//     lockstep decode_slots), the issue's "fixed-batch generate";
+//   * `naive_exact_generate` — the no-cache full forward over the TRUE
+//     (unpadded) token prefix, positions 0..len with no padding anywhere
+//     in the math: the ground-truth exact-length computation.
+// ---------------------------------------------------------------------------
+
+/// Exact-length reference: generate from `prompt` by re-running the
+/// full-sequence forward (`logits_forward`) each step and reading row 0's
+/// logits at the true last position. `stream` = per-request RNG stream
+/// (the scheduler's seeded-request discipline); `None` uses the backend's
+/// global stream.
+fn naive_exact_generate(
+    he: &mut HybridEngine,
+    prompt: &[i32],
+    max_new: usize,
+    backend: &mut dyn SamplingBackend,
+    mut stream: Option<&mut Rng>,
+) -> Vec<i32> {
+    let m = he.manifest();
+    let (b, s, vocab) = (m.batch, m.seq_len, m.actor.vocab);
+    let mut seq = prompt.to_vec();
+    for _ in 0..max_new {
+        let mut batch = vec![Vocab::PAD; b * s];
+        for r in 0..b {
+            batch[r * s..r * s + seq.len()].copy_from_slice(&seq);
+        }
+        let logits = he.full_logits(&batch).unwrap();
+        let base = (seq.len() - 1) * vocab;
+        let row = RowRef::Logits(&logits[base..base + vocab]);
+        let t = match stream.as_mut() {
+            Some(rng) => backend.sample_stream(row, &seq, rng).unwrap(),
+            None => backend.sample(row, &seq).unwrap(),
+        };
+        seq.push(t);
+        if t == Vocab::EOS {
+            break;
+        }
+    }
+    seq
+}
+
+#[test]
+fn mixed_length_padded_slot_matches_exact_length_generate_greedy() {
+    // The tentpole golden: short prompts admitted via the padded
+    // `prefill_slot` generate bit-exactly the continuation of (a) the
+    // fixed-batch padded `generate_mixed` and (b) the exact-length
+    // no-cache forward — for a whole batch of DIFFERENT true lengths at
+    // once, greedy.
+    if !padded_artifacts() {
+        eprintln!("skipping: {DIR} artifacts lack padded_prompts (run `make artifacts`)");
+        return;
+    }
+    let engine = Rc::new(Engine::cpu().unwrap());
+    let mut he = HybridEngine::init(engine, DIR, 0, false).unwrap();
+    let m = he.manifest();
+    let (b, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut rng = Rng::new(77);
+    // One prompt per slot, every row a different true length (including
+    // one exact-length row pinning backward compat).
+    let lens: Vec<usize> = (0..b)
+        .map(|i| if i + 1 == b { sp } else { (TaskGen::MIN_PROMPT_LEN + 2 * i).min(sp - 1) })
+        .collect();
+    let prompts: Vec<Vec<i32>> =
+        lens.iter().map(|&l| task.sample_prompt_len(&mut rng, l).tokens).collect();
+    let greedy = || HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+
+    // Reference 1: exact-length naive full-forward loop, per prompt.
+    let naive: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| naive_exact_generate(&mut he, p, sg, &mut greedy(), None))
+        .collect();
+
+    // Reference 2: the fixed-batch padded generate.
+    let gen = he.generate_mixed(&prompts, &mut greedy()).unwrap();
+
+    // The padded slot path: all prompts through the scheduler.
+    let mut sched = Scheduler::new(he).unwrap();
+    for (id, p) in prompts.iter().enumerate() {
+        sched
+            .submit(Request { id: id as u64, prompt: p.clone(), max_new: sg, seed: None })
+            .unwrap();
+    }
+    let mut done = sched.run_until_idle(&mut greedy()).unwrap();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), b);
+    for (i, c) in done.iter().enumerate() {
+        assert_eq!(c.prompt_len, lens[i], "true length on the completion");
+        assert_eq!(
+            c.tokens, gen[i],
+            "row {i} (len {}): padded slot vs fixed-batch padded generate",
+            lens[i]
+        );
+        assert_eq!(
+            c.tokens, naive[i],
+            "row {i} (len {}): padded slot vs exact-length forward",
+            lens[i]
+        );
+    }
+    // The pad accounting saw the short rows.
+    let st = &sched.stats;
+    assert_eq!(st.prompt_tokens, lens.iter().sum::<usize>() as u64);
+    assert_eq!(st.pad_tokens, lens.iter().map(|&l| (sp - l) as u64).sum::<u64>());
+    assert!(st.pad_fraction() > 0.0);
+}
+
+#[test]
+fn mixed_length_padded_slot_matches_exact_length_seeded_stochastic() {
+    // Seeded-stochastic variant: a short request with its own RNG stream
+    // must reproduce the exact-length reference drawing from the same
+    // stream — even while co-scheduled with a full-length neighbor whose
+    // own stream isolates it (the rollout reproducibility contract under
+    // mixed lengths).
+    if !padded_artifacts() {
+        eprintln!("skipping: {DIR} artifacts lack padded_prompts (run `make artifacts`)");
+        return;
+    }
+    let engine = Rc::new(Engine::cpu().unwrap());
+    let mut he = HybridEngine::init(engine, DIR, 0, false).unwrap();
+    let m = he.manifest();
+    let (sp, sg) = (m.prompt_len, m.gen_len);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut rng = Rng::new(88);
+    let short = task.sample_prompt_len(&mut rng, TaskGen::MIN_PROMPT_LEN + 1).tokens;
+    let full = task.sample_prompt(&mut rng).tokens;
+    let cfg = SamplerConfig {
+        temperature: 0.9,
+        top_k: 8,
+        top_p: 0.95,
+        repetition_penalty: 1.1,
+        ..Default::default()
+    };
+    let seed = 4242u64;
+
+    // Exact-length reference over the short prompt's own stream.
+    let mut stream = Rng::new(seed);
+    let want = naive_exact_generate(
+        &mut he,
+        &short,
+        sg,
+        &mut HostFullRow::new(cfg.clone(), 0),
+        Some(&mut stream),
+    );
+
+    let mut sched = Scheduler::new(he).unwrap();
+    sched
+        .submit(Request { id: 0, prompt: short, max_new: sg, seed: Some(seed) })
+        .unwrap();
+    sched
+        .submit(Request { id: 1, prompt: full, max_new: sg, seed: Some(seed ^ 0x5ee0) })
+        .unwrap();
+    let mut done = sched.run_until_idle(&mut HostFullRow::new(cfg, 0)).unwrap();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 2);
+    assert_eq!(
+        done[0].tokens, want,
+        "seeded short request must replay its exact-length stream bit for bit"
+    );
 }

@@ -39,13 +39,22 @@ if [ -f artifacts/tiny/manifest.json ]; then
         # runtime_e2e's rollout phase (continuous vs fixed experience
         # generation) ran above and wrote BENCH_rollout.json.
         echo "verify: wrote BENCH_rollout.json (continuous rollout smoke ran in the bench)"
+        if grep -q '"padded_prompts": true' artifacts/tiny/manifest.json; then
+            # The serve demo mixes short TRUE prompt lengths into its
+            # request list and the serve/rollout benches run their
+            # mixed-length phases when this capability is present, so the
+            # left-padded variable-length path is smoke-covered below.
+            echo "verify: padded_prompts capability present — serve demo + benches cover mixed-length traffic"
+        else
+            echo "verify: artifacts predate variable-length prompts — mixed-length smokes skipped (re-run \`make artifacts\`)"
+        fi
         echo "== verify: serve demo (continuous batching smoke) =="
         cargo run --release --example serve -- --demo
         if grep -q '"decode_slots_sampled"' artifacts/tiny/manifest.json; then
             echo "== verify: serve demo (device sampling tail) =="
             cargo run --release --example serve -- --demo --backend device
         fi
-        echo "== verify: serve bench (smoke) =="
+        echo "== verify: serve bench (smoke; includes the mixed-length phase when supported) =="
         cargo bench --bench serve_loop -- --smoke
         echo "verify: wrote BENCH_serve.json"
     else
