@@ -59,7 +59,7 @@ use dschat::hybrid::HybridEngine;
 use dschat::pipeline;
 use dschat::runtime::Engine;
 use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
-use dschat::serving::{Request, Scheduler};
+use dschat::serving::{FinishReason, Request, Scheduler};
 use dschat::util::argparse::Args;
 use dschat::util::fmt_bytes;
 
@@ -321,6 +321,25 @@ fn main() -> anyhow::Result<()> {
         let (up, down) = sched.engine.engine.bytes_moved();
         for c in &done {
             let Some(p) = pending.remove(&c.id) else { continue };
+            // Per-request failure semantics: the scheduler retires (rather
+            // than silently drops) requests whose engine calls kept failing
+            // or whose decode-step deadline expired — tell the client which.
+            match c.finish {
+                FinishReason::Failed { retries } => {
+                    let _ = p.reply.send(format!(
+                        "error: request failed after {retries} engine retr{} — try again",
+                        if retries == 1 { "y" } else { "ies" }
+                    ));
+                    continue;
+                }
+                FinishReason::Deadline => {
+                    let _ = p.reply.send(
+                        "error: request exceeded its decode-step deadline".to_string(),
+                    );
+                    continue;
+                }
+                FinishReason::Eos | FinishReason::Length => {}
+            }
             let resp = c.response();
             let score = task.reward(&p.prompt, resp);
             let _ = p

@@ -21,7 +21,11 @@
 //! `continuous_mixed` phase replaying the trace with heterogeneous TRUE
 //! prompt lengths through the left-padded admission path, reporting the
 //! padded-token overhead fraction alongside tok/s and latency;
-//! `scripts/verify.sh` runs the `--smoke` mode.
+//! `scripts/verify.sh` runs the `--smoke` mode. With `--chaos`, a final
+//! phase replays the trace through a fault-injecting engine wrapper (~5%
+//! transient faults + slow ticks) and reports goodput under faults, the
+//! scheduler's retry/requeue counters, and the p95 latency the recovery
+//! machinery adds over the fault-free run.
 
 use std::collections::VecDeque;
 use std::rc::Rc;
@@ -31,7 +35,8 @@ use dschat::data::synthetic::{Prompt, TaskGen, Vocab};
 use dschat::hybrid::HybridEngine;
 use dschat::runtime::Engine;
 use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
-use dschat::serving::{Request, Scheduler};
+use dschat::serving::chaos::{ChaosConfig, ChaosEngine, ChaosStats};
+use dschat::serving::{FaultPolicy, Request, SchedStats, Scheduler};
 use dschat::util::rng::Rng;
 
 struct PhaseResult {
@@ -222,8 +227,69 @@ fn run_continuous(
     })
 }
 
+/// The continuous loop again, but through a fault-injecting
+/// [`ChaosEngine`] wrapper — same trace, same greedy sampling, ~5% of
+/// engine calls failing transiently plus jittered slow ticks. Measures
+/// goodput and added tail latency while the scheduler retries/requeues;
+/// under transient-only faults every request still completes with the
+/// fault-free tokens (the recovery path replays against pristine inner
+/// state). Separate from [`run_continuous`] because the byte ledger lives
+/// one level deeper (`sched.engine.inner.engine`).
+fn run_chaos(
+    sched: &mut Scheduler<ChaosEngine<HybridEngine>>,
+    prompts: &[Prompt],
+    budgets: &[usize],
+    arrivals: &[f64],
+    sampler: &mut dyn SamplingBackend,
+) -> anyhow::Result<PhaseResult> {
+    let n = prompts.len();
+    let (down0, up0) = {
+        let (up, down) = sched.engine.inner.engine.bytes_moved();
+        (down, up)
+    };
+    let start = Instant::now();
+    let mut next = 0usize;
+    let mut lat_by_done = Vec::with_capacity(n);
+    let mut tokens = 0u64;
+    let mut last_done = 0.0f64;
+    while lat_by_done.len() < n {
+        let now = start.elapsed().as_secs_f64();
+        while next < n && arrivals[next] <= now {
+            sched.submit(Request {
+                id: next as u64,
+                prompt: prompts[next].tokens.clone(),
+                max_new: budgets[next],
+                seed: None,
+            })?;
+            next += 1;
+        }
+        if sched.is_idle() {
+            sleep_until(start, arrivals[next]);
+            continue;
+        }
+        for c in sched.step(sampler)? {
+            let done_at = start.elapsed().as_secs_f64();
+            last_done = done_at;
+            tokens += c.generated as u64;
+            lat_by_done.push(done_at - arrivals[c.id as usize]);
+        }
+    }
+    let mut lat = lat_by_done;
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (up, down) = sched.engine.inner.engine.bytes_moved();
+    Ok(PhaseResult {
+        name: "continuous_chaos",
+        completed: n,
+        tokens,
+        makespan: last_done,
+        lat,
+        bytes: (down - down0, up - up0),
+    })
+}
+
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let with_chaos = std::env::args().any(|a| a == "--chaos");
     let dir = std::env::args()
         .skip(1)
         .find(|a| !a.starts_with("--"))
@@ -361,6 +427,56 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
+    // Chaos phase (`--chaos`): the same trace through a fault-injecting
+    // wrapper — ~5% transient prefill/decode faults + 5% slow ticks.
+    // Goodput, retry/requeue counts, and the p95 latency the recovery
+    // machinery adds over the fault-free continuous_host phase.
+    let chaos: Option<(PhaseResult, SchedStats, ChaosStats)> = if with_chaos {
+        let he = sched.into_engine();
+        let ccfg = ChaosConfig {
+            seed: 1234,
+            prefill_fault_p: 0.05,
+            decode_fault_p: 0.05,
+            slow_tick_p: 0.05,
+            slow_tick: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let policy = FaultPolicy {
+            max_retries: 3,
+            backoff_steps: 1,
+            deadline_steps: 0,
+            quarantine_after: 0,
+        };
+        let mut csched = Scheduler::with_policy(ChaosEngine::new(he, ccfg), policy)?;
+        let r = run_chaos(
+            &mut csched,
+            &prompts,
+            &budgets,
+            &arrivals,
+            &mut HostFullRow::new(greedy(), 0),
+        )?;
+        r.print();
+        let cst = csched.stats.clone();
+        let inj = csched.engine.injected.clone();
+        println!(
+            "chaos: injected {} prefill + {} decode faults, {} slow ticks | scheduler: \
+             {} decode retries, {} requeues, {} failed/{} deadline retirements | \
+             added p95 {:+.0}ms vs fault-free | tokens match fault-free: {}",
+            inj.prefill_faults,
+            inj.decode_faults,
+            inj.slow_ticks,
+            cst.decode_retries,
+            cst.requeues,
+            cst.retired_failed,
+            cst.retired_deadline,
+            (r.pct(0.95) - cont.pct(0.95)) * 1e3,
+            r.tokens == cont.tokens,
+        );
+        Some((r, cst, inj))
+    } else {
+        None
+    };
+
     let st = &st_host;
     println!(
         "continuous: {} scheduler steps, {} decode calls, {} prefills, slot utilization {:.0}%",
@@ -403,12 +519,31 @@ fn main() -> anyhow::Result<()> {
         ),
         None => String::new(),
     };
+    let chaos_json = match &chaos {
+        Some((r, cst, inj)) => format!(
+            ",\n  \"chaos\": {},\n  \"chaos_injected_prefill_faults\": {},\n  \
+             \"chaos_injected_decode_faults\": {},\n  \"chaos_injected_slow_ticks\": {},\n  \
+             \"chaos_decode_retries\": {},\n  \"chaos_requeues\": {},\n  \
+             \"chaos_failed_requests\": {},\n  \"chaos_added_p95_ms\": {:.1},\n  \
+             \"chaos_tokens_match_fault_free\": {}",
+            phase_json(r),
+            inj.prefill_faults,
+            inj.decode_faults,
+            inj.slow_ticks,
+            cst.decode_retries,
+            cst.requeues,
+            cst.retired_failed + cst.retired_deadline,
+            (r.pct(0.95) - cont.pct(0.95)) * 1e3,
+            r.tokens == cont.tokens,
+        ),
+        None => String::new(),
+    };
     let json = format!(
         "{{\n  \"bench\": \"serve_loop\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
          \"n_requests\": {n_req},\n  \"arrival_rate_per_s\": {rate:.3},\n  \
          \"fixed_batch_t_gen_secs\": {t_gen:.6},\n  \"sample_k\": {sample_k},\n  \
          \"fixed_batch\": {},\n  \"continuous\": {},\n  \
-         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}\n  ,\n  \
+         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}{}\n  ,\n  \
          \"speedup_tok_per_sec\": {:.3},\n  \"p95_latency_ratio\": {:.3}\n}}\n",
         phase_json(&fixed),
         phase_json(&cont),
@@ -416,6 +551,7 @@ fn main() -> anyhow::Result<()> {
         st.decode_calls,
         device_json,
         mixed_json,
+        chaos_json,
         cont.tok_per_sec() / fixed.tok_per_sec().max(1e-9),
         cont.pct(0.95) / fixed.pct(0.95).max(1e-9),
     );

@@ -50,6 +50,25 @@ pub struct PpoConfig {
     /// Requires artifacts with the `padded_prompts` capability; only
     /// meaningful with `rollout_batch > 0`.
     pub min_prompt_len: usize,
+    /// Anomaly-guard threshold on an iteration's |approx_kl| (ChatGLM-RLHF
+    /// style training stabilization: a KL blowup means the policy jumped
+    /// off the trust region and the iteration should be rolled back).
+    /// Non-finite stats always trip the guard; `0` disables this
+    /// threshold. The default is generous — healthy runs sit orders of
+    /// magnitude below it.
+    pub max_approx_kl: f32,
+    /// Anomaly-guard threshold on an iteration's clip fraction (nearly
+    /// every sample clipping means the update was far off-policy). `0`
+    /// disables.
+    pub max_clipfrac: f32,
+    /// Consecutive anomaly-guard trips tolerated before the trainer bails
+    /// loudly instead of looping rollback/re-roll on a divergent run.
+    pub max_guard_trips: usize,
+    /// Chaos-drill hook (`dschat train --fault-iter N`): poison the
+    /// reported actor loss with NaN once, at guarded iteration N, to
+    /// exercise the anomaly-guard rollback path end to end. `None` in
+    /// production.
+    pub fault_iteration: Option<usize>,
 }
 
 impl Default for PpoConfig {
@@ -70,6 +89,10 @@ impl Default for PpoConfig {
             top_p: 1.0,
             rollout_batch: 0,
             min_prompt_len: 0,
+            max_approx_kl: 25.0,
+            max_clipfrac: 0.999,
+            max_guard_trips: 3,
+            fault_iteration: None,
         }
     }
 }
@@ -89,6 +112,10 @@ pub struct TrainRecipe {
     pub ppo: PpoConfig,
     /// Warmup fraction of total steps for the linear LR schedule.
     pub warmup_frac: f32,
+    /// Write a durable, atomically-replaced PPO checkpoint
+    /// (`ppo_ckpt.bin` + run state, the `dschat train --resume` target)
+    /// every k iterations when a run directory is given. `0` disables.
+    pub ppo_ckpt_interval: usize,
 }
 
 impl Default for TrainRecipe {
@@ -105,6 +132,7 @@ impl Default for TrainRecipe {
             critic_lr: 1e-3,
             ppo: PpoConfig::default(),
             warmup_frac: 0.05,
+            ppo_ckpt_interval: 20,
         }
     }
 }

@@ -26,6 +26,21 @@
 //!      `ppo_epochs` of clipped actor + critic updates over the staged
 //!      (upload-once) tensors, optional mixture (ptx) loss, optional EMA
 //!      collection.
+//!
+//! # Anomaly guard (training-layer fault tolerance)
+//!
+//! Large-scale PPO diverges in recognizable ways — a NaN loss, a KL
+//! blowup, a clip fraction pinned at 1 — and by the time the symptom is
+//! visible the params are already poisoned (ChatGLM-RLHF documents this
+//! stabilization machinery as a *requirement* at scale). The
+//! [`AnomalyGuard`] validates every iteration's [`IterStats`];
+//! [`PpoTrainer::iteration_guarded`] snapshots actor/critic/optimizer/EMA
+//! state before each iteration, and on a trip restores the snapshot,
+//! rewinds the EMA phase, and re-rolls the iteration — the rollout-round
+//! counter does NOT rewind, so the retry draws fresh experience under a
+//! perturbed round seed instead of replaying the draws that diverged.
+//! After [`PpoConfig::max_guard_trips`] consecutive trips it bails loudly
+//! rather than looping on a divergent run.
 
 pub mod gae;
 
@@ -82,6 +97,52 @@ pub struct IterStats {
     pub rollout_groups: usize,
 }
 
+/// Per-iteration training-health validator (see the module docs). Built
+/// from [`PpoConfig`] thresholds; non-finite stats always trip it.
+#[derive(Debug, Clone)]
+pub struct AnomalyGuard {
+    /// Trip when |approx_kl| exceeds this (0 disables the threshold).
+    pub max_approx_kl: f32,
+    /// Trip when clipfrac exceeds this (0 disables).
+    pub max_clipfrac: f32,
+}
+
+impl AnomalyGuard {
+    pub fn from_cfg(cfg: &PpoConfig) -> Self {
+        AnomalyGuard { max_approx_kl: cfg.max_approx_kl, max_clipfrac: cfg.max_clipfrac }
+    }
+
+    /// `None` = healthy; `Some(reason)` names the first anomaly found.
+    pub fn validate(&self, st: &IterStats) -> Option<String> {
+        let finite = [
+            ("actor_loss", st.actor_loss),
+            ("critic_loss", st.critic_loss),
+            ("approx_kl", st.approx_kl),
+            ("clipfrac", st.clipfrac),
+            ("rm_score", st.rm_score),
+            ("kl_to_ref", st.kl_to_ref),
+        ];
+        for (name, v) in finite {
+            if !v.is_finite() {
+                return Some(format!("non-finite {name} ({v})"));
+            }
+        }
+        if self.max_approx_kl > 0.0 && st.approx_kl.abs() > self.max_approx_kl {
+            return Some(format!(
+                "approx_kl {} exceeds the {} trust-region threshold",
+                st.approx_kl, self.max_approx_kl
+            ));
+        }
+        if self.max_clipfrac > 0.0 && st.clipfrac > self.max_clipfrac {
+            return Some(format!(
+                "clipfrac {} exceeds the {} off-policy threshold",
+                st.clipfrac, self.max_clipfrac
+            ));
+        }
+        None
+    }
+}
+
 pub struct PpoTrainer {
     pub cfg: PpoConfig,
     /// Sampling backend driving experience generation. Defaults to the
@@ -95,10 +156,22 @@ pub struct PpoTrainer {
     /// iterations never replay each other's draws, while a fixed
     /// `(rollout_seed, round, id)` triple stays replayable.
     pub rollout_seed: u64,
+    /// The training-health validator [`PpoTrainer::iteration_guarded`]
+    /// runs over every iteration's stats.
+    pub guard: AnomalyGuard,
+    /// Guard trips across the whole run (diagnostic; never reset).
+    pub guard_trips: u64,
     /// Rollout rounds completed (drives the per-round seed derivation).
     rollouts_done: u64,
     /// Completed training calls (drives the EMA interval).
     iters_done: usize,
+    /// Guarded iterations ACCEPTED so far (rollback re-rolls do not
+    /// advance this — it indexes the chaos-drill fault injection).
+    guarded_iters: usize,
+    /// Consecutive guard trips (reset by any healthy iteration).
+    consecutive_trips: usize,
+    /// One-shot chaos-drill fault still waiting to fire.
+    fault_pending: bool,
 }
 
 impl PpoTrainer {
@@ -112,19 +185,41 @@ impl PpoTrainer {
             },
             seed,
         );
-        PpoTrainer {
-            cfg,
-            sampler: Box::new(sampler),
-            rollout_seed: seed,
-            rollouts_done: 0,
-            iters_done: 0,
-        }
+        Self::with_backend(cfg, Box::new(sampler), seed)
     }
 
     /// Build a trainer around an explicit sampling backend; `seed` anchors
     /// the rollout path's per-request stream derivation.
     pub fn with_backend(cfg: PpoConfig, sampler: Box<dyn SamplingBackend>, seed: u64) -> Self {
-        PpoTrainer { cfg, sampler, rollout_seed: seed, rollouts_done: 0, iters_done: 0 }
+        let guard = AnomalyGuard::from_cfg(&cfg);
+        let fault_pending = cfg.fault_iteration.is_some();
+        PpoTrainer {
+            cfg,
+            sampler,
+            rollout_seed: seed,
+            guard,
+            guard_trips: 0,
+            rollouts_done: 0,
+            iters_done: 0,
+            guarded_iters: 0,
+            consecutive_trips: 0,
+            fault_pending,
+        }
+    }
+
+    /// Phase counters `(rollouts_done, iters_done)` for the durable
+    /// checkpoint — the rollout-seed derivation round and the EMA-interval
+    /// phase a resumed run must continue from.
+    pub fn progress(&self) -> (u64, usize) {
+        (self.rollouts_done, self.iters_done)
+    }
+
+    /// Restore the phase counters saved by [`PpoTrainer::progress`] (the
+    /// `dschat train --resume` path).
+    pub fn set_progress(&mut self, rollouts_done: u64, iters_done: usize) {
+        self.rollouts_done = rollouts_done;
+        self.iters_done = iters_done;
+        self.guarded_iters = iters_done;
     }
 
     /// Find the response length (tokens up to and including EOS, capped at
@@ -361,6 +456,69 @@ impl PpoTrainer {
         stats.train_secs = he.stats.train_secs - gen0.2;
         Ok(stats)
     }
+
+    /// [`PpoTrainer::iteration`] wrapped in the anomaly guard (see the
+    /// module docs): snapshot the training state, run the iteration,
+    /// validate its stats; on a trip restore the snapshot, rewind the EMA
+    /// phase, and re-roll under the advanced rollout-round seed. Bails
+    /// after [`PpoConfig::max_guard_trips`] consecutive trips.
+    pub fn iteration_guarded(
+        &mut self,
+        he: &mut HybridEngine,
+        blend: &mut Blend,
+        rng: &mut Rng,
+        actor_lr: f32,
+        critic_lr: f32,
+    ) -> Result<IterStats> {
+        let snap = he.snapshot_training_state()?;
+        let iters0 = self.iters_done;
+        loop {
+            let mut stats = self.iteration(he, blend, rng, actor_lr, critic_lr)?;
+            // Chaos drill (`--fault-iter N`): poison the reported loss once
+            // so the rollback path is exercised on an otherwise-healthy run.
+            if self.fault_pending && self.cfg.fault_iteration == Some(self.guarded_iters) {
+                self.fault_pending = false;
+                eprintln!(
+                    "[ppo] chaos drill: poisoning iteration {} actor loss with NaN",
+                    self.guarded_iters
+                );
+                stats.actor_loss = f32::NAN;
+            }
+            match self.guard.validate(&stats) {
+                None => {
+                    self.consecutive_trips = 0;
+                    self.guarded_iters += 1;
+                    return Ok(stats);
+                }
+                Some(why) => {
+                    self.consecutive_trips += 1;
+                    self.guard_trips += 1;
+                    if self.consecutive_trips >= self.cfg.max_guard_trips.max(1) {
+                        bail!(
+                            "anomaly guard tripped {} consecutive times at iteration {} \
+                             (last: {why}) — training has diverged; refusing to keep \
+                             rolling back",
+                            self.consecutive_trips,
+                            self.guarded_iters
+                        );
+                    }
+                    eprintln!(
+                        "[ppo] anomaly guard trip {}/{} at iteration {}: {why} — \
+                         restoring last-good training state and re-rolling",
+                        self.consecutive_trips,
+                        self.cfg.max_guard_trips,
+                        self.guarded_iters
+                    );
+                    he.restore_training_state(&snap)?;
+                    // EMA phase rewinds with the params; the rollout round
+                    // does NOT — the retry draws fresh experience under a
+                    // perturbed round seed instead of replaying the draws
+                    // that diverged.
+                    self.iters_done = iters0;
+                }
+            }
+        }
+    }
 }
 
 /// Shared tail of both experience paths: ground-truth rewards, response
@@ -484,5 +642,63 @@ mod tests {
     fn mean_empty_is_zero() {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+
+    fn healthy_stats() -> IterStats {
+        IterStats {
+            rm_score: 0.5,
+            true_reward: 0.3,
+            kl_to_ref: 0.01,
+            actor_loss: -0.02,
+            critic_loss: 0.4,
+            approx_kl: 0.003,
+            clipfrac: 0.1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn guard_passes_healthy_stats() {
+        let g = AnomalyGuard::from_cfg(&PpoConfig::default());
+        assert_eq!(g.validate(&healthy_stats()), None);
+    }
+
+    #[test]
+    fn guard_trips_on_every_non_finite_stat() {
+        let g = AnomalyGuard::from_cfg(&PpoConfig::default());
+        for field in ["actor_loss", "critic_loss", "approx_kl", "clipfrac", "rm_score"] {
+            let mut st = healthy_stats();
+            match field {
+                "actor_loss" => st.actor_loss = f32::NAN,
+                "critic_loss" => st.critic_loss = f32::INFINITY,
+                "approx_kl" => st.approx_kl = f32::NEG_INFINITY,
+                "clipfrac" => st.clipfrac = f32::NAN,
+                _ => st.rm_score = f32::NAN,
+            }
+            let why = g.validate(&st).expect("must trip");
+            assert!(why.contains(field), "{why}");
+        }
+    }
+
+    #[test]
+    fn guard_trips_on_kl_and_clipfrac_thresholds() {
+        let g = AnomalyGuard { max_approx_kl: 1.0, max_clipfrac: 0.9 };
+        let mut st = healthy_stats();
+        st.approx_kl = -3.0; // magnitude matters, not sign
+        assert!(g.validate(&st).unwrap().contains("approx_kl"));
+        let mut st = healthy_stats();
+        st.clipfrac = 0.95;
+        assert!(g.validate(&st).unwrap().contains("clipfrac"));
+    }
+
+    #[test]
+    fn guard_thresholds_zero_disable() {
+        let g = AnomalyGuard { max_approx_kl: 0.0, max_clipfrac: 0.0 };
+        let mut st = healthy_stats();
+        st.approx_kl = 1e6;
+        st.clipfrac = 1.0;
+        assert_eq!(g.validate(&st), None, "0 disables the finite thresholds");
+        st.actor_loss = f32::NAN;
+        assert!(g.validate(&st).is_some(), "non-finite always trips");
     }
 }

@@ -138,6 +138,18 @@ pub struct StagedExperience {
     mask: PjRtBuffer,
 }
 
+/// Host-side copy of the mutable training state (actor + critic params,
+/// both optimizer stores, the EMA shadow when enabled) captured by
+/// [`HybridEngine::snapshot_training_state`] — the anomaly guard's
+/// rollback point, and the payload of the durable PPO checkpoint.
+pub struct TrainSnapshot {
+    pub actor: Vec<HostTensor>,
+    pub critic: Vec<HostTensor>,
+    pub actor_opt: Vec<HostTensor>,
+    pub critic_opt: Vec<HostTensor>,
+    pub ema: Option<Vec<HostTensor>>,
+}
+
 /// Split a train-step artifact's output buffers into (params, opt, scalars)
 /// without any host transit, validating the arity loudly.
 fn split_outputs(
@@ -277,6 +289,44 @@ impl HybridEngine {
             &self.arts.manifest.critic_params.clone(),
             &host,
         )?;
+        Ok(())
+    }
+
+    /// Host-side copy of everything a PPO update mutates — the anomaly
+    /// guard's last-good rollback point. The frozen reference policy and
+    /// reward model are deliberately excluded: PPO never writes them, so
+    /// restoring them would only burn upload bandwidth.
+    pub fn snapshot_training_state(&self) -> Result<TrainSnapshot> {
+        Ok(TrainSnapshot {
+            actor: self.actor.to_host()?,
+            critic: self.critic.to_host()?,
+            actor_opt: self.actor_opt.to_host()?,
+            critic_opt: self.critic_opt.to_host()?,
+            ema: self.ema.as_ref().map(|e| e.to_host()).transpose()?,
+        })
+    }
+
+    /// Restore a [`TrainSnapshot`] in place (actor, critic, both optimizer
+    /// states, and the EMA shadow when present) — device buffers are
+    /// re-uploaded; specs and modes are untouched.
+    pub fn restore_training_state(&mut self, snap: &TrainSnapshot) -> Result<()> {
+        let lits = |ts: &[HostTensor]| -> Result<Vec<Literal>> {
+            ts.iter().map(|t| t.to_literal()).collect()
+        };
+        self.actor.replace(&self.engine, &lits(&snap.actor)?)?;
+        self.critic.replace(&self.engine, &lits(&snap.critic)?)?;
+        self.actor_opt.replace(&self.engine, &lits(&snap.actor_opt)?)?;
+        self.critic_opt.replace(&self.engine, &lits(&snap.critic_opt)?)?;
+        match (&mut self.ema, &snap.ema) {
+            (Some(store), Some(host)) => store.replace(&self.engine, &lits(host)?)?,
+            (None, None) => {}
+            (have, _) => bail!(
+                "training snapshot EMA mismatch: engine {} an EMA shadow but the \
+                 snapshot {} one",
+                if have.is_some() { "has" } else { "lacks" },
+                if snap.ema.is_some() { "carries" } else { "lacks" }
+            ),
+        }
         Ok(())
     }
 

@@ -69,7 +69,11 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20          --gpu a100-80g --system ds-he|hf-ddp|colossal-ai)\n\n\
                  common flags: --run <tiny|small> --artifacts <dir> --seed <n>\n\
                  train flags:  --sft-steps N --rm-steps N --ppo-iters N --ema <bool>\n\
-                 \x20             --ptx-coef X --kl-coef X --out runs/<name>"
+                 \x20             --ptx-coef X --kl-coef X --out runs/<name>\n\
+                 \x20             --ckpt-interval N   durable PPO checkpoint every N iters (0 off)\n\
+                 \x20             --resume            continue PPO from <out>/ppo_ckpt.bin\n\
+                 \x20             --fault-iter N      chaos drill: poison iteration N's loss\n\
+                 \x20                                 with NaN to exercise the rollback path"
             );
             Ok(())
         }
@@ -109,8 +113,10 @@ fn train(args: &Args) -> Result<()> {
             ptx_coef: args.f64("ptx-coef", 0.2) as f32,
             kl_coef: args.f64("kl-coef", 0.1) as f32,
             ema_decay: if with_ema { Some(0.992) } else { None },
+            fault_iteration: args.get("fault-iter").map(|_| args.usize("fault-iter", 0)),
             ..Default::default()
         },
+        ppo_ckpt_interval: args.usize("ckpt-interval", 20),
         ..Default::default()
     };
     let out = PathBuf::from(args.str("out", &format!("runs/{}", recipe.run)));
@@ -131,6 +137,11 @@ fn train(args: &Args) -> Result<()> {
         m.seq_len,
     );
     let mut blend = make_blend(he.manifest());
+
+    if args.bool("resume", false) {
+        return resume_ppo(&mut he, &mut blend, &recipe, &out, with_ema);
+    }
+
     let report = pipeline::run_all(&mut he, &mut blend, &recipe, Some(&out))?;
 
     println!("\n-- step 1 (SFT):  loss {:.3} -> {:.3}  [{}]",
@@ -164,6 +175,61 @@ fn train(args: &Args) -> Result<()> {
     pipeline::save_actor(&he, &ckpt)?;
     println!("   saved actor to {}", ckpt.display());
     println!("   curves: {}/sft.csv rm.csv ppo.csv", out.display());
+    Ok(())
+}
+
+/// `dschat train --resume`: skip SFT/RM and continue Step 3 from the last
+/// durable checkpoint in the run directory — all six param/optimizer
+/// stores, the RNG stream, and the phase counters come from the
+/// checkpoint, so the resumed run continues where the interrupted one
+/// stopped.
+fn resume_ppo(
+    he: &mut HybridEngine,
+    blend: &mut Blend,
+    recipe: &TrainRecipe,
+    out: &std::path::Path,
+    with_ema: bool,
+) -> Result<()> {
+    let ckpt = out.join("ppo_ckpt.bin");
+    let state = pipeline::load_ppo_checkpoint(he, &ckpt)?;
+    println!(
+        "resuming PPO from {} at iteration {}/{}",
+        ckpt.display(),
+        state.iteration,
+        recipe.ppo_iters
+    );
+    // Overwritten from the checkpointed stream inside run_ppo_from.
+    let mut rng = dschat::util::rng::Rng::new(recipe.seed);
+    let mut log = dschat::util::csv::CsvWriter::create(
+        out.join("ppo_resume.csv"),
+        &[
+            "iter", "true_reward", "rm_score", "kl", "actor_loss", "critic_loss",
+            "clipfrac", "gen_secs", "train_secs",
+        ],
+    )?;
+    let (ppo, _history) = pipeline::run_ppo_from(
+        he,
+        blend,
+        recipe,
+        &mut rng,
+        Some(&mut log),
+        Some(&ckpt),
+        Some(&state),
+    )?;
+    println!(
+        "-- step 3 (PPO, resumed): true reward {:.3} -> {:.3}  [{}]",
+        ppo.first_metric,
+        ppo.last_metric,
+        fmt_duration(ppo.wall_secs)
+    );
+    if with_ema {
+        he.promote_ema()?;
+        println!("   promoted EMA checkpoint as the serving actor");
+    }
+    let actor_ckpt = out.join("actor.bin");
+    pipeline::save_actor(he, &actor_ckpt)?;
+    println!("   saved actor to {}", actor_ckpt.display());
+    println!("   resumed curve: {}/ppo_resume.csv", out.display());
     Ok(())
 }
 

@@ -7,6 +7,15 @@
 //!     u32 ndims | ndims x u64 | data (little-endian)
 //! }
 //! ```
+//!
+//! Durable training checkpoints go through [`save_atomic`] (write a
+//! sibling temp file, then rename over the destination) so a crash
+//! mid-write can never leave a half-written file where the last good
+//! checkpoint used to be — the rollback/resume contract depends on the
+//! newest `ppo_ckpt.bin` always being loadable. [`RunState`] rides inside
+//! the same container as an `i32` tensor, carrying the non-tensor half of
+//! a resumable run: the iteration counter, the data-RNG stream state, and
+//! the rollout/EMA phase counters.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -46,6 +55,75 @@ pub fn save(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<
         }
     }
     Ok(())
+}
+
+/// Atomic variant of [`save`]: write `<name>.tmp` beside the destination,
+/// then rename over it. Rename is atomic on POSIX filesystems, so readers
+/// only ever see the previous complete checkpoint or the new complete one.
+pub fn save_atomic(path: impl AsRef<Path>, tensors: &[(String, HostTensor)]) -> Result<()> {
+    let path = path.as_ref();
+    let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+        bail!("checkpoint path {path:?} has no file name");
+    };
+    let tmp = path.with_file_name(format!("{name}.tmp"));
+    save(&tmp, tensors)?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
+    Ok(())
+}
+
+/// The non-tensor half of a resumable PPO run, encoded as one `i32` tensor
+/// (name [`RunState::TENSOR_NAME`]) inside the durable checkpoint: each
+/// `u64` field is stored as a little-endian (lo, hi) pair of `i32` words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunState {
+    /// Completed PPO iterations; resume starts at this index.
+    pub iteration: u64,
+    /// Data-stream RNG `state` word at the checkpoint boundary.
+    pub rng_state: u64,
+    /// Data-stream RNG `inc` word.
+    pub rng_inc: u64,
+    /// Rollout rounds completed (the per-round seed-derivation phase).
+    pub rollouts_done: u64,
+    /// Training calls completed (the EMA-interval phase).
+    pub ema_phase: u64,
+}
+
+impl RunState {
+    pub const TENSOR_NAME: &'static str = "__run_state__";
+
+    fn fields(&self) -> [u64; 5] {
+        [self.iteration, self.rng_state, self.rng_inc, self.rollouts_done, self.ema_phase]
+    }
+
+    pub fn to_tensor(&self) -> (String, HostTensor) {
+        let mut words = Vec::with_capacity(10);
+        for f in self.fields() {
+            words.push((f as u32) as i32);
+            words.push(((f >> 32) as u32) as i32);
+        }
+        let n = words.len();
+        (Self::TENSOR_NAME.to_string(), HostTensor::I32(words, vec![n]))
+    }
+
+    pub fn from_tensor(t: &HostTensor) -> Result<RunState> {
+        let HostTensor::I32(words, _) = t else {
+            bail!("run state tensor has the wrong dtype (want i32)");
+        };
+        if words.len() != 10 {
+            bail!("run state tensor has {} words, want 10", words.len());
+        }
+        let u = |i: usize| -> u64 {
+            (words[2 * i] as u32 as u64) | ((words[2 * i + 1] as u32 as u64) << 32)
+        };
+        Ok(RunState {
+            iteration: u(0),
+            rng_state: u(1),
+            rng_inc: u(2),
+            rollouts_done: u(3),
+            ema_phase: u(4),
+        })
+    }
 }
 
 fn write_shape(w: &mut impl Write, shape: &[usize]) -> Result<()> {
@@ -149,5 +227,41 @@ mod tests {
         let path = std::env::temp_dir().join("dschat_ckpt_test/empty.bin");
         save(&path, &[]).unwrap();
         assert!(load(&path).unwrap().is_empty());
+    }
+
+    #[test]
+    fn save_atomic_replaces_and_leaves_no_temp() {
+        let path = std::env::temp_dir().join("dschat_ckpt_test/atomic.bin");
+        let first = vec![("a".to_string(), HostTensor::F32(vec![1.0], vec![1]))];
+        let second = vec![("a".to_string(), HostTensor::F32(vec![2.0], vec![1]))];
+        save_atomic(&path, &first).unwrap();
+        assert_eq!(load(&path).unwrap(), first);
+        save_atomic(&path, &second).unwrap();
+        assert_eq!(load(&path).unwrap(), second, "rename replaced the old file");
+        assert!(
+            !path.with_file_name("atomic.bin.tmp").exists(),
+            "temp file must not linger"
+        );
+    }
+
+    #[test]
+    fn run_state_roundtrips_through_tensor() {
+        let rs = RunState {
+            iteration: 42,
+            rng_state: u64::MAX - 7,
+            rng_inc: 0x9e3779b97f4a7c15,
+            rollouts_done: 3,
+            ema_phase: 17,
+        };
+        let (name, t) = rs.to_tensor();
+        assert_eq!(name, RunState::TENSOR_NAME);
+        assert_eq!(RunState::from_tensor(&t).unwrap(), rs);
+        // Survives the container too.
+        let path = std::env::temp_dir().join("dschat_ckpt_test/runstate.bin");
+        save(&path, &[(name, t)]).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(RunState::from_tensor(&back[0].1).unwrap(), rs);
+        // Wrong dtype fails loudly.
+        assert!(RunState::from_tensor(&HostTensor::F32(vec![0.0; 10], vec![10])).is_err());
     }
 }

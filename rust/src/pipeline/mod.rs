@@ -2,17 +2,43 @@
 //! experience as a library. Each step driver logs a CSV curve and returns a
 //! summary; `run_all` chains them exactly like DeepSpeed-Chat's single
 //! script.
+//!
+//! # Checkpoint / rollback contract (training-layer fault tolerance)
+//!
+//! PPO runs are guarded at two nested scopes:
+//!
+//! * **In-run rollback** — every iteration goes through
+//!   [`PpoTrainer::iteration_guarded`]: a host-side snapshot of the
+//!   mutable training state is taken before the iteration, the resulting
+//!   stats are validated by the anomaly guard, and a trip restores the
+//!   snapshot and re-rolls under a perturbed rollout seed. This heals
+//!   transient divergence (a NaN loss, a KL blowup) without touching disk.
+//! * **Durable checkpoints** — [`run_ppo_from`] writes `ppo_ckpt.bin` into
+//!   the run directory every [`TrainRecipe::ppo_ckpt_interval`] iterations
+//!   (and at the end) via [`checkpoint::save_atomic`], so the newest
+//!   checkpoint on disk is always complete. The container holds every
+//!   param/optimizer store under a role prefix (`actor/…`, `ref_actor/…`,
+//!   `critic/…`, `rm/…`, `actor_opt/…`, `critic_opt/…`, optional `ema/…`)
+//!   plus a [`checkpoint::RunState`] record (iteration counter, data-RNG
+//!   stream state, rollout/EMA phase counters). `dschat train --resume`
+//!   reloads all of it with [`load_ppo_checkpoint`] and continues from the
+//!   recorded iteration — the restored RNG stream and phase counters mean
+//!   the resumed run draws what the uninterrupted run would have.
 
 pub mod checkpoint;
 
+use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
+
+use checkpoint::RunState;
 
 use crate::config::TrainRecipe;
 use crate::coordinator::{IterStats, PpoTrainer};
 use crate::data::Blend;
 use crate::hybrid::HybridEngine;
+use crate::runtime::{Engine, HostTensor, ParamStore};
 use crate::util::csv::CsvWriter;
 use crate::util::rng::Rng;
 
@@ -111,7 +137,8 @@ pub fn run_rm(
     Ok(report)
 }
 
-/// Step 3: PPO RLHF with EMA + mixture training.
+/// Step 3: PPO RLHF with EMA + mixture training (fresh run, no durable
+/// checkpointing — the full-control variant is [`run_ppo_from`]).
 pub fn run_ppo(
     he: &mut HybridEngine,
     blend: &mut Blend,
@@ -119,17 +146,50 @@ pub fn run_ppo(
     rng: &mut Rng,
     log: Option<&mut CsvWriter>,
 ) -> Result<(StepReport, Vec<IterStats>)> {
+    run_ppo_from(he, blend, recipe, rng, log, None, None)
+}
+
+/// Step 3 with the fault-tolerance controls exposed: every iteration runs
+/// through the anomaly guard (see the module docs), `ckpt` enables durable
+/// atomically-replaced checkpoints every
+/// [`TrainRecipe::ppo_ckpt_interval`] iterations, and `resume` continues a
+/// previous run from its [`RunState`] (the caller restores the params via
+/// [`load_ppo_checkpoint`] first; this restores the RNG stream and phase
+/// counters and skips the completed iterations).
+pub fn run_ppo_from(
+    he: &mut HybridEngine,
+    blend: &mut Blend,
+    recipe: &TrainRecipe,
+    rng: &mut Rng,
+    log: Option<&mut CsvWriter>,
+    ckpt: Option<&Path>,
+    resume: Option<&RunState>,
+) -> Result<(StepReport, Vec<IterStats>)> {
     let t0 = std::time::Instant::now();
     let mut trainer = PpoTrainer::new(recipe.ppo.clone(), recipe.seed ^ 0x9907);
+    let start = match resume {
+        Some(rs) => {
+            *rng = Rng::from_state(rs.rng_state, rs.rng_inc);
+            trainer.set_progress(rs.rollouts_done, rs.ema_phase as usize);
+            ensure!(
+                (rs.iteration as usize) < recipe.ppo_iters,
+                "checkpoint is already at iteration {} of {} — nothing to resume",
+                rs.iteration,
+                recipe.ppo_iters
+            );
+            rs.iteration as usize
+        }
+        None => 0,
+    };
     let mut report = StepReport { steps: recipe.ppo_iters, ..Default::default() };
     let mut history = Vec::with_capacity(recipe.ppo_iters);
     let mut log = log;
     let mut rewards = Vec::with_capacity(recipe.ppo_iters);
-    for iter in 0..recipe.ppo_iters {
+    for iter in start..recipe.ppo_iters {
         let actor_lr = recipe.lr_at(recipe.actor_lr, iter, recipe.ppo_iters);
         let critic_lr = recipe.lr_at(recipe.critic_lr, iter, recipe.ppo_iters);
-        let stats = trainer.iteration(he, blend, rng, actor_lr, critic_lr)?;
-        if iter == 0 {
+        let stats = trainer.iteration_guarded(he, blend, rng, actor_lr, critic_lr)?;
+        if iter == start {
             report.first_metric = stats.true_reward;
         }
         rewards.push(stats.true_reward);
@@ -148,6 +208,28 @@ pub fn run_ppo(
             ])?;
         }
         history.push(stats);
+        if let Some(path) = ckpt {
+            let k = recipe.ppo_ckpt_interval;
+            let done = iter + 1;
+            if k > 0 && (done % k == 0 || done == recipe.ppo_iters) {
+                let (rollouts_done, iters_done) = trainer.progress();
+                let (rng_state, rng_inc) = rng.state();
+                let rs = RunState {
+                    iteration: done as u64,
+                    rng_state,
+                    rng_inc,
+                    rollouts_done,
+                    ema_phase: iters_done as u64,
+                };
+                save_ppo_checkpoint(he, &rs, path)?;
+            }
+        }
+    }
+    if trainer.guard_trips > 0 {
+        eprintln!(
+            "[ppo] run finished with {} anomaly-guard trip(s) healed by rollback",
+            trainer.guard_trips
+        );
     }
     report.last_metric = tail_mean(&rewards, 10);
     report.wall_secs = t0.elapsed().as_secs_f64();
@@ -191,7 +273,16 @@ pub fn run_all(
         )?),
         None => None,
     };
-    let (ppo, ppo_history) = run_ppo(he, blend, recipe, &mut rng, ppo_log.as_mut())?;
+    let ckpt_path = run_dir.map(|d| d.join("ppo_ckpt.bin"));
+    let (ppo, ppo_history) = run_ppo_from(
+        he,
+        blend,
+        recipe,
+        &mut rng,
+        ppo_log.as_mut(),
+        ckpt_path.as_deref(),
+        None,
+    )?;
 
     Ok(PipelineReport { sft, rm, ppo, ppo_history })
 }
@@ -231,4 +322,109 @@ pub fn load_actor(he: &mut HybridEngine, path: impl AsRef<Path>) -> Result<()> {
     }
     he.actor.replace(&he.engine.clone(), &lits)?;
     Ok(())
+}
+
+fn append_store(
+    out: &mut Vec<(String, HostTensor)>,
+    prefix: &str,
+    store: &ParamStore,
+) -> Result<()> {
+    let host = store.to_host()?;
+    for (spec, t) in store.specs.iter().zip(host) {
+        out.push((format!("{prefix}/{}", spec.name), t));
+    }
+    Ok(())
+}
+
+fn restore_store(
+    map: &mut HashMap<String, HostTensor>,
+    prefix: &str,
+    store: &mut ParamStore,
+    engine: &Engine,
+) -> Result<()> {
+    let mut lits = Vec::with_capacity(store.specs.len());
+    for spec in &store.specs {
+        let key = format!("{prefix}/{}", spec.name);
+        let Some(t) = map.remove(&key) else {
+            bail!("ppo checkpoint is missing tensor {key:?}");
+        };
+        ensure!(
+            t.shape() == spec.shape.as_slice(),
+            "ppo checkpoint tensor {key:?} has shape {:?}, manifest expects {:?}",
+            t.shape(),
+            spec.shape
+        );
+        lits.push(t.to_literal()?);
+    }
+    store.replace(engine, &lits)
+}
+
+/// Write the durable PPO checkpoint: every param/optimizer store under its
+/// role prefix plus the [`RunState`] record, atomically replaced so a
+/// crash mid-write preserves the previous checkpoint (see the module
+/// docs for the full contract).
+pub fn save_ppo_checkpoint(
+    he: &HybridEngine,
+    state: &RunState,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    let mut tensors: Vec<(String, HostTensor)> = Vec::new();
+    append_store(&mut tensors, "actor", &he.actor)?;
+    append_store(&mut tensors, "ref_actor", &he.ref_actor)?;
+    append_store(&mut tensors, "critic", &he.critic)?;
+    append_store(&mut tensors, "rm", &he.rm)?;
+    append_store(&mut tensors, "actor_opt", &he.actor_opt)?;
+    append_store(&mut tensors, "critic_opt", &he.critic_opt)?;
+    if let Some(ema) = &he.ema {
+        append_store(&mut tensors, "ema", ema)?;
+    }
+    tensors.push(state.to_tensor());
+    checkpoint::save_atomic(path, &tensors)
+}
+
+/// Load a [`save_ppo_checkpoint`] container back into the engine (all six
+/// stores + the EMA shadow when present, validated by name and shape) and
+/// return its [`RunState`] for [`run_ppo_from`]'s `resume`.
+pub fn load_ppo_checkpoint(
+    he: &mut HybridEngine,
+    path: impl AsRef<Path>,
+) -> Result<RunState> {
+    let named = checkpoint::load(&path)?;
+    let mut map: HashMap<String, HostTensor> = named.into_iter().collect();
+    let Some(rs_t) = map.remove(RunState::TENSOR_NAME) else {
+        bail!(
+            "checkpoint {:?} carries no run state — this is not a resumable PPO \
+             checkpoint (actor-only checkpoints load via the chat/serve path)",
+            path.as_ref()
+        );
+    };
+    let state = RunState::from_tensor(&rs_t)?;
+    let engine = he.engine.clone();
+    restore_store(&mut map, "actor", &mut he.actor, &engine)?;
+    restore_store(&mut map, "ref_actor", &mut he.ref_actor, &engine)?;
+    restore_store(&mut map, "critic", &mut he.critic, &engine)?;
+    restore_store(&mut map, "rm", &mut he.rm, &engine)?;
+    restore_store(&mut map, "actor_opt", &mut he.actor_opt, &engine)?;
+    restore_store(&mut map, "critic_opt", &mut he.critic_opt, &engine)?;
+    let ckpt_has_ema = map.keys().any(|k| k.starts_with("ema/"));
+    match (&mut he.ema, ckpt_has_ema) {
+        (Some(store), true) => restore_store(&mut map, "ema", store, &engine)?,
+        (None, false) => {}
+        (have, _) => bail!(
+            "EMA mismatch: the engine {} an EMA shadow but the checkpoint {} one — \
+             rerun with the matching --ema setting",
+            if have.is_some() { "has" } else { "lacks" },
+            if ckpt_has_ema { "carries" } else { "lacks" }
+        ),
+    }
+    if !map.is_empty() {
+        let mut extras: Vec<&String> = map.keys().collect();
+        extras.sort();
+        bail!(
+            "ppo checkpoint has {} unrecognized tensor(s), e.g. {:?}",
+            extras.len(),
+            extras[0]
+        );
+    }
+    Ok(state)
 }

@@ -14,6 +14,11 @@ use crate::util::rng::Rng;
 /// top-p → categorical.
 pub struct Sampler {
     pub cfg: SamplerConfig,
+    /// Logits rows with zero finite entries survived by falling back to
+    /// token 0 instead of panicking (warned once, counted here) — a
+    /// diverged model or corrupt row must degrade a completion, not kill
+    /// the serve loop.
+    pub degenerate_rows: u64,
     rng: Rng,
     scratch: Vec<(f32, usize)>,
     /// Reusable working copy of one logits row: `sample` is called b×gen_len
@@ -23,7 +28,13 @@ pub struct Sampler {
 
 impl Sampler {
     pub fn new(cfg: SamplerConfig, seed: u64) -> Self {
-        Sampler { cfg, rng: Rng::new(seed), scratch: Vec::new(), row: Vec::new() }
+        Sampler {
+            cfg,
+            degenerate_rows: 0,
+            rng: Rng::new(seed),
+            scratch: Vec::new(),
+            row: Vec::new(),
+        }
     }
 
     /// Sample one token id from a logits row. `history` drives the
@@ -45,6 +56,19 @@ impl Sampler {
     /// nondeterminism. Filters and scratch reuse are identical to `sample`.
     pub fn sample_with(&mut self, logits: &[f32], history: &[i32], rng: &mut Rng) -> i32 {
         debug_assert!(!logits.is_empty());
+        if !logits.iter().any(|x| x.is_finite()) {
+            // Degenerate row (all NaN/±inf): the candidate set would be
+            // empty, which used to panic inside top-p. Fall back to token
+            // 0 so the request degrades instead of crashing the batch.
+            self.degenerate_rows += 1;
+            if self.degenerate_rows == 1 {
+                eprintln!(
+                    "[sampler] warning: logits row with zero finite entries — falling back \
+                     to token 0 (further occurrences counted in degenerate_rows)"
+                );
+            }
+            return 0;
+        }
         if self.cfg.greedy && self.cfg.repetition_penalty == 1.0 {
             return argmax(logits) as i32;
         }
@@ -88,9 +112,11 @@ impl Sampler {
         }
         self.scratch.clear();
         self.scratch.extend(l.iter().copied().zip(0..));
-        // Partial selection: kth largest is the cutoff.
+        // Partial selection: kth largest is the cutoff. total_cmp, not
+        // partial_cmp: a stray NaN must not panic the comparator (it sorts
+        // above +inf and the finite-filtering top-p pass drops it).
         self.scratch
-            .select_nth_unstable_by(k - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+            .select_nth_unstable_by(k - 1, |a, b| b.0.total_cmp(&a.0));
         let cutoff = self.scratch[k - 1].0;
         let mut kept = 0usize;
         for x in l.iter_mut() {
@@ -110,8 +136,13 @@ impl Sampler {
         self.scratch.clear();
         self.scratch
             .extend(l.iter().copied().zip(0..).filter(|(x, _)| x.is_finite()));
-        self.scratch
-            .sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        if self.scratch.is_empty() {
+            // No finite candidate survived the earlier filters; leave the
+            // row untouched and let the categorical fallback handle it
+            // (the all-degenerate case was already caught in sample_with).
+            return;
+        }
+        self.scratch.sort_unstable_by(|a, b| b.0.total_cmp(&a.0));
         // Softmax over the sorted candidates, keep the smallest prefix with
         // cumulative mass >= p (always at least one).
         let max = self.scratch[0].0;
@@ -294,6 +325,45 @@ mod tests {
                 assert_eq!(a.sample(row, &[0, 1]), b.sample(row, &[0, 1]));
             }
         }
+    }
+
+    #[test]
+    fn degenerate_rows_fall_back_to_token_zero_and_count() {
+        // All-NaN and all-(-inf) rows used to panic inside top-p (empty
+        // candidate set); they must now degrade to token 0 with a count.
+        let mut s = sampler(SamplerConfig { temperature: 0.8, top_p: 0.9, ..Default::default() });
+        let nan_row = vec![f32::NAN; 8];
+        let ninf_row = vec![f32::NEG_INFINITY; 8];
+        assert_eq!(s.sample(&nan_row, &[]), 0);
+        assert_eq!(s.sample(&ninf_row, &[]), 0);
+        assert_eq!(s.degenerate_rows, 2);
+        // The greedy path counts too.
+        let mut g = sampler(SamplerConfig { greedy: true, ..Default::default() });
+        assert_eq!(g.sample(&nan_row, &[2]), 0);
+        assert_eq!(g.degenerate_rows, 1);
+        // A healthy row afterwards samples normally (scratch state intact).
+        let t = s.sample(&[0.0, 5.0, 0.0, 0.0], &[]);
+        assert_eq!(t, 1);
+        assert_eq!(s.degenerate_rows, 2, "healthy rows are not counted");
+    }
+
+    #[test]
+    fn partially_nan_rows_do_not_panic() {
+        // A stray NaN among finite logits exercises the total_cmp
+        // comparators in top-k/top-p; the draw must come from the finite
+        // support.
+        let mut s = sampler(SamplerConfig {
+            temperature: 0.7,
+            top_k: 3,
+            top_p: 0.9,
+            ..Default::default()
+        });
+        let row = vec![1.0, f32::NAN, 3.0, f32::NAN, 2.0, f32::NEG_INFINITY];
+        for _ in 0..100 {
+            let t = s.sample(&row, &[]);
+            assert!([0, 2, 4].contains(&t), "sampled {t} from non-finite support");
+        }
+        assert_eq!(s.degenerate_rows, 0);
     }
 
     #[test]

@@ -1,0 +1,321 @@
+//! Deterministic fault injection for the serving scheduler.
+//!
+//! [`ChaosEngine`] wraps any [`SlotEngine`] and injects faults *before*
+//! delegating to the inner engine, so an injected transient fault leaves
+//! the inner engine's per-slot state (KV rows, cursors) exactly as it was
+//! — the scheduler's retry then replays the call against pristine state
+//! and recovery is bit-identical to the fault-free run (the chaos golden
+//! in `rust/tests/failure_injection.rs`).
+//!
+//! Faults come in three flavors, all seeded through [`Rng`] (probabilistic)
+//! or scheduled by call count (exact, for counter assertions):
+//!
+//! * **transient prefill/decode faults** — the call errors once; a retry
+//!   (decode) or a backed-off re-admission (prefill) succeeds;
+//! * **permanently broken slots** — every prefill into the slot faults,
+//!   driving the scheduler's quarantine path;
+//! * **slow ticks** — a decode call sleeps before running, stretching tail
+//!   latency without failing (the bench's goodput-under-jitter knob).
+//!
+//! The wrapper also keeps a forgiving view of which slots the *inner*
+//! engine actually admitted: a best-effort `release_slot` after an
+//! injected admission fault is absorbed here (erroring like the hybrid
+//! engine's KV ledger does for a free slot) instead of reaching an inner
+//! engine that never saw the prefill.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::sampling::{PendingRow, SampleOut, TrafficClass};
+use crate::serving::SlotEngine;
+use crate::util::rng::Rng;
+
+/// Fault schedule for a [`ChaosEngine`]. Defaults inject nothing.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Seed for the probabilistic fault draws.
+    pub seed: u64,
+    /// Probability any one prefill call faults transiently.
+    pub prefill_fault_p: f64,
+    /// Probability any one decode call faults transiently.
+    pub decode_fault_p: f64,
+    /// Deterministic schedule: fault every k-th prefill call (0 = off).
+    pub fault_every_prefill: u64,
+    /// Deterministic schedule: fault every k-th decode call (0 = off).
+    pub fault_every_decode: u64,
+    /// Slots whose every prefill faults (permanent slot faults — the
+    /// scheduler's quarantine driver).
+    pub broken_slots: Vec<usize>,
+    /// Probability a decode call is delayed by `slow_tick` before running.
+    pub slow_tick_p: f64,
+    /// Injected delay for slow ticks.
+    pub slow_tick: Duration,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0,
+            prefill_fault_p: 0.0,
+            decode_fault_p: 0.0,
+            fault_every_prefill: 0,
+            fault_every_decode: 0,
+            broken_slots: Vec::new(),
+            slow_tick_p: 0.0,
+            slow_tick: Duration::from_millis(1),
+        }
+    }
+}
+
+/// What the wrapper injected — the ground truth the scheduler's
+/// `SchedStats` fault counters are asserted against.
+#[derive(Debug, Default, Clone)]
+pub struct ChaosStats {
+    /// Prefill calls intercepted (faulted + passed through).
+    pub prefill_calls: u64,
+    /// Decode calls intercepted.
+    pub decode_calls: u64,
+    /// Injected prefill faults (transient + broken-slot).
+    pub prefill_faults: u64,
+    /// Injected decode faults.
+    pub decode_faults: u64,
+    /// Injected slow ticks.
+    pub slow_ticks: u64,
+}
+
+/// A [`SlotEngine`] that fails on purpose. See the module docs.
+pub struct ChaosEngine<E: SlotEngine> {
+    pub inner: E,
+    pub cfg: ChaosConfig,
+    /// Everything injected so far.
+    pub injected: ChaosStats,
+    /// Which slots the INNER engine currently holds an admission for
+    /// (injected prefill faults never reach it, so the scheduler's
+    /// best-effort release after one must be absorbed here).
+    live: Vec<bool>,
+    rng: Rng,
+}
+
+impl<E: SlotEngine> ChaosEngine<E> {
+    pub fn new(inner: E, cfg: ChaosConfig) -> Self {
+        let n = inner.n_slots();
+        let rng = Rng::new(cfg.seed);
+        ChaosEngine { inner, cfg, injected: ChaosStats::default(), live: vec![false; n], rng }
+    }
+
+    /// Unwrap, handing the inner engine back.
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    /// One draw per intercepted call keeps the injection schedule a pure
+    /// function of (seed, call index); `p == 0` draws nothing so disabled
+    /// channels do not perturb the stream of enabled ones.
+    fn roll(&mut self, p: f64) -> bool {
+        p > 0.0 && self.rng.chance(p)
+    }
+}
+
+impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
+    fn n_slots(&self) -> usize {
+        self.inner.n_slots()
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.inner.prompt_len()
+    }
+
+    fn max_new_tokens(&self) -> usize {
+        self.inner.max_new_tokens()
+    }
+
+    fn supports_padded_prompts(&self) -> bool {
+        self.inner.supports_padded_prompts()
+    }
+
+    fn begin_serving(&mut self) -> Result<()> {
+        for l in self.live.iter_mut() {
+            *l = false;
+        }
+        self.inner.begin_serving()
+    }
+
+    fn prefill_slot(
+        &mut self,
+        slot: usize,
+        prompt: &[i32],
+        traffic: TrafficClass,
+    ) -> Result<PendingRow> {
+        self.injected.prefill_calls += 1;
+        if self.cfg.broken_slots.contains(&slot) {
+            self.injected.prefill_faults += 1;
+            bail!("chaos: permanent fault on slot {slot} (prefill {})", self.injected.prefill_calls);
+        }
+        let scheduled = self.cfg.fault_every_prefill > 0
+            && self.injected.prefill_calls % self.cfg.fault_every_prefill == 0;
+        if scheduled || self.roll(self.cfg.prefill_fault_p) {
+            self.injected.prefill_faults += 1;
+            bail!("chaos: transient prefill fault (call {})", self.injected.prefill_calls);
+        }
+        let out = self.inner.prefill_slot(slot, prompt, traffic)?;
+        self.live[slot] = true;
+        Ok(out)
+    }
+
+    fn decode_slots(
+        &mut self,
+        toks: &[i32],
+        pos: &[i32],
+        starts: &[i32],
+        active: &[bool],
+        traffic: TrafficClass,
+    ) -> Result<SampleOut> {
+        self.injected.decode_calls += 1;
+        if self.roll(self.cfg.slow_tick_p) {
+            self.injected.slow_ticks += 1;
+            std::thread::sleep(self.cfg.slow_tick);
+        }
+        let scheduled = self.cfg.fault_every_decode > 0
+            && self.injected.decode_calls % self.cfg.fault_every_decode == 0;
+        if scheduled || self.roll(self.cfg.decode_fault_p) {
+            self.injected.decode_faults += 1;
+            bail!("chaos: transient decode fault (call {})", self.injected.decode_calls);
+        }
+        self.inner.decode_slots(toks, pos, starts, active, traffic)
+    }
+
+    fn release_slot(&mut self, slot: usize) -> Result<()> {
+        if !self.live[slot] {
+            // The scheduler's best-effort release after an injected
+            // admission fault: the inner engine never admitted, so there
+            // is nothing to free (mirrors the KV ledger's already-free
+            // error).
+            bail!("chaos: slot {slot} holds no inner admission");
+        }
+        self.inner.release_slot(slot)?;
+        self.live[slot] = false;
+        Ok(())
+    }
+
+    fn note_generated(&mut self, n: u64) {
+        self.inner.note_generated(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal inner engine: counts calls, never fails itself.
+    struct Flat {
+        n: usize,
+        prefills: u64,
+        decodes: u64,
+        releases: u64,
+    }
+
+    impl SlotEngine for Flat {
+        fn n_slots(&self) -> usize {
+            self.n
+        }
+
+        fn prompt_len(&self) -> usize {
+            4
+        }
+
+        fn max_new_tokens(&self) -> usize {
+            8
+        }
+
+        fn prefill_slot(
+            &mut self,
+            _slot: usize,
+            _prompt: &[i32],
+            _traffic: TrafficClass,
+        ) -> Result<PendingRow> {
+            self.prefills += 1;
+            Ok(PendingRow::Id(1))
+        }
+
+        fn decode_slots(
+            &mut self,
+            toks: &[i32],
+            _pos: &[i32],
+            _starts: &[i32],
+            _active: &[bool],
+            _traffic: TrafficClass,
+        ) -> Result<SampleOut> {
+            self.decodes += 1;
+            Ok(SampleOut::Ids(vec![1; toks.len()]))
+        }
+
+        fn release_slot(&mut self, _slot: usize) -> Result<()> {
+            self.releases += 1;
+            Ok(())
+        }
+    }
+
+    fn flat(n: usize) -> Flat {
+        Flat { n, prefills: 0, decodes: 0, releases: 0 }
+    }
+
+    #[test]
+    fn periodic_schedule_is_exact_and_skips_inner() {
+        let mut e = ChaosEngine::new(
+            flat(2),
+            ChaosConfig { fault_every_decode: 3, ..Default::default() },
+        );
+        let toks = [1, 1];
+        let pos = [0, 0];
+        let starts = [0, 0];
+        let active = [true, true];
+        let mut faults = 0;
+        for _ in 0..9 {
+            if e.decode_slots(&toks, &pos, &starts, &active, TrafficClass::DeviceIds).is_err() {
+                faults += 1;
+            }
+        }
+        assert_eq!(faults, 3, "every 3rd call faults");
+        assert_eq!(e.injected.decode_faults, 3);
+        // Faulted calls never reached the inner engine.
+        assert_eq!(e.inner.decodes, 6);
+    }
+
+    #[test]
+    fn broken_slot_always_faults_and_release_is_absorbed() {
+        let mut e = ChaosEngine::new(
+            flat(2),
+            ChaosConfig { broken_slots: vec![0], ..Default::default() },
+        );
+        for _ in 0..3 {
+            assert!(e.prefill_slot(0, &[1; 4], TrafficClass::DeviceIds).is_err());
+        }
+        assert!(e.prefill_slot(1, &[1; 4], TrafficClass::DeviceIds).is_ok());
+        assert_eq!(e.injected.prefill_faults, 3);
+        assert_eq!(e.inner.prefills, 1, "broken-slot calls never reach inner");
+        // Best-effort release of the never-admitted slot stays here.
+        assert!(e.release_slot(0).is_err());
+        assert_eq!(e.inner.releases, 0);
+        // Releasing the real admission goes through.
+        assert!(e.release_slot(1).is_ok());
+        assert_eq!(e.inner.releases, 1);
+    }
+
+    #[test]
+    fn probabilistic_schedule_is_seed_deterministic() {
+        let run = |seed: u64| {
+            let mut e = ChaosEngine::new(
+                flat(1),
+                ChaosConfig { seed, decode_fault_p: 0.3, ..Default::default() },
+            );
+            (0..32)
+                .map(|_| {
+                    e.decode_slots(&[1], &[0], &[0], &[true], TrafficClass::DeviceIds).is_err()
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "same seed, same schedule");
+        assert_ne!(run(7), run(8), "different seed, different schedule");
+    }
+}

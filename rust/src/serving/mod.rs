@@ -69,6 +69,47 @@
 //! RNG-stream seed ([`Request::seed`]) so stochastic sampling stays
 //! reproducible even though retirement — and therefore the order sample
 //! calls interleave across requests — is data-dependent.
+//!
+//! # Failure semantics ([`FaultPolicy`])
+//!
+//! Engine calls can fail transiently (a flaky device, an injected chaos
+//! fault) or permanently (a bad slot, a wedged artifact). The scheduler
+//! owns recovery so one fault never aborts the whole batch:
+//!
+//! * **Prefill fault → requeue with backoff.** A failed
+//!   [`SlotEngine::prefill_slot`] releases whatever KV rows the admission
+//!   may have claimed (best-effort; the hybrid engine claims rows only
+//!   after its artifact call succeeds) and puts the request back in the
+//!   queue, not admissible again for [`FaultPolicy::backoff_steps`]
+//!   ticks. After [`FaultPolicy::max_retries`] faulted admissions the
+//!   request retires with [`FinishReason::Failed`] — reported to the
+//!   caller, never silently dropped.
+//! * **Decode fault → bounded retry, then retire the tick's sequences.**
+//!   A failed [`SlotEngine::decode_slots`] tick is retried with identical
+//!   inputs up to [`FaultPolicy::max_retries`] times; if every attempt
+//!   fails, all live sequences retire with [`FinishReason::Failed`] and
+//!   the scheduler keeps serving the queue.
+//! * **Repeatedly-failing slots quarantine.** A slot whose prefills fault
+//!   [`FaultPolicy::quarantine_after`] consecutive times is removed from
+//!   the free list (counted in [`SchedStats::quarantined`]) so one bad
+//!   slot cannot eat every admission. Every slot quarantined with work
+//!   still queued is a loud error.
+//! * **Deadlines.** [`FaultPolicy::deadline_steps`] bounds a request's
+//!   decode-step residency; at the deadline it retires with
+//!   [`FinishReason::Deadline`] *before* sampling that tick, so a stuck
+//!   request frees its slot instead of holding KV forever.
+//!
+//! Retries must not perturb generation: each tick samples from the pending
+//! row of the last *successful* engine call, and per-request RNG streams
+//! advance only when a token is actually sampled. A transient fault
+//! injected before the engine touched per-slot state therefore recovers
+//! **bit-identically** — under transient-only chaos, greedy completions
+//! match the fault-free run exactly (pinned by the chaos goldens in
+//! `rust/tests/failure_injection.rs`). [`chaos::ChaosEngine`] injects
+//! deterministic faults and slow ticks for those tests and for the serve
+//! bench's chaos phase.
+
+pub mod chaos;
 
 use std::collections::VecDeque;
 
@@ -260,12 +301,54 @@ pub struct Request {
     pub seed: Option<u64>,
 }
 
+/// How the scheduler survives engine faults (see the module docs'
+/// "Failure semantics" section). The default policy retries transients,
+/// backs off requeued admissions by one tick, quarantines a slot after
+/// three consecutive prefill faults, and imposes no deadline.
+#[derive(Debug, Clone)]
+pub struct FaultPolicy {
+    /// Engine-call retries before giving up: a request whose admission
+    /// faults more than this many times retires as
+    /// [`FinishReason::Failed`]; a decode tick is re-attempted this many
+    /// times before the tick's sequences retire.
+    pub max_retries: u32,
+    /// Scheduler ticks a request requeued after a prefill fault must wait
+    /// before it is admissible again (floored at 1).
+    pub backoff_steps: u64,
+    /// Per-request residency cap in decode steps from admission; a
+    /// sequence still live after this many ticks retires with
+    /// [`FinishReason::Deadline`] before sampling. `0` disables.
+    pub deadline_steps: u64,
+    /// Consecutive prefill faults on one slot before it is quarantined
+    /// (removed from the free list). `0` disables quarantine.
+    pub quarantine_after: u32,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            max_retries: 2,
+            backoff_steps: 1,
+            deadline_steps: 0,
+            quarantine_after: 3,
+        }
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
     /// The model emitted EOS (included as the sequence's last token).
     Eos,
     /// The per-request or engine generation budget was exhausted.
     Length,
+    /// Engine faults exhausted [`FaultPolicy::max_retries`]; `retries` is
+    /// how many faulted attempts this request absorbed before retiring.
+    /// The sequence's tokens are whatever was generated before the fault
+    /// (prompt only, if admission never succeeded).
+    Failed { retries: u32 },
+    /// The request hit [`FaultPolicy::deadline_steps`] and was retired to
+    /// free its slot; tokens generated before the deadline are kept.
+    Deadline,
 }
 
 /// A finished sequence handed back by [`Scheduler::step`].
@@ -290,6 +373,18 @@ impl Completion {
     pub fn response(&self) -> &[i32] {
         &self.tokens[self.prompt_len..]
     }
+}
+
+/// A queue entry: the request plus its admission/backoff bookkeeping.
+struct Queued {
+    req: Request,
+    /// Step the request was first submitted (queue-delay accounting).
+    enqueued_step: u64,
+    /// Earliest step this entry may be admitted again (backoff after a
+    /// prefill fault; 0 = immediately).
+    not_before: u64,
+    /// Admission attempts that ended in a prefill fault.
+    attempts: u32,
 }
 
 /// A sequence occupying one batch slot.
@@ -347,6 +442,24 @@ pub struct SchedStats {
     /// window minus the true length, summed) — the padded-token overhead
     /// the serve bench reports for mixed-length traffic.
     pub pad_tokens: u64,
+    /// Failed `prefill_slot` calls observed (each requeues or retires its
+    /// request per the [`FaultPolicy`]).
+    pub prefill_faults: u64,
+    /// Failed fused-decode calls observed (including failed retries).
+    pub decode_faults: u64,
+    /// Decode re-attempts issued after a fault (a transient fault
+    /// recovered on the first retry contributes 1 here and 1 to
+    /// `decode_faults`).
+    pub decode_retries: u64,
+    /// Requests put back in the queue with backoff after a prefill fault.
+    pub requeues: u64,
+    /// Sequences retired with [`FinishReason::Failed`] after faults
+    /// exhausted the retry budget.
+    pub retired_failed: u64,
+    /// Sequences retired at the per-request deadline.
+    pub retired_deadline: u64,
+    /// Slots removed from the free list after repeated prefill faults.
+    pub quarantined: u64,
 }
 
 impl SchedStats {
@@ -400,8 +513,16 @@ impl CompletionSink for Vec<Completion> {
 pub struct Scheduler<E: SlotEngine> {
     pub engine: E,
     pub stats: SchedStats,
-    queue: VecDeque<(Request, u64)>,
+    /// Recovery knobs for engine faults (see module docs).
+    pub policy: FaultPolicy,
+    queue: VecDeque<Queued>,
     slots: Vec<Option<Seq>>,
+    /// Slots removed from the free list after repeated prefill faults; a
+    /// quarantined slot is always empty (quarantine happens at a failed
+    /// admission, when the slot holds no sequence).
+    quarantined: Vec<bool>,
+    /// Consecutive prefill faults per slot (reset on success).
+    slot_failures: Vec<u32>,
     step_idx: u64,
     /// Reused per-step decode inputs (the hot loop must not allocate).
     step_toks: Vec<i32>,
@@ -411,15 +532,24 @@ pub struct Scheduler<E: SlotEngine> {
 }
 
 impl<E: SlotEngine> Scheduler<E> {
-    /// Wrap an engine and enter serving mode (empty cache, all slots free).
-    pub fn new(mut engine: E) -> Result<Self> {
+    /// Wrap an engine and enter serving mode (empty cache, all slots free)
+    /// under the default [`FaultPolicy`].
+    pub fn new(engine: E) -> Result<Self> {
+        Scheduler::with_policy(engine, FaultPolicy::default())
+    }
+
+    /// [`Scheduler::new`] with an explicit fault policy.
+    pub fn with_policy(mut engine: E, policy: FaultPolicy) -> Result<Self> {
         engine.begin_serving()?;
         let n = engine.n_slots();
         Ok(Scheduler {
             engine,
             stats: SchedStats::default(),
+            policy,
             queue: VecDeque::new(),
             slots: (0..n).map(|_| None).collect(),
+            quarantined: vec![false; n],
+            slot_failures: vec![0; n],
             step_idx: 0,
             step_toks: vec![Vocab::PAD; n],
             step_pos: vec![0; n],
@@ -428,14 +558,24 @@ impl<E: SlotEngine> Scheduler<E> {
         })
     }
 
+    /// Tear the scheduler down and hand the engine back (the serve bench's
+    /// re-wrap path: run fault-free, then wrap the same engine in chaos).
+    pub fn into_engine(self) -> E {
+        self.engine
+    }
+
     /// Abandon all queued and in-flight sequences and re-enter serving
     /// mode with a fresh cache — the recovery path after a failed step
     /// left slot state suspect. The caller is responsible for replying to
-    /// the abandoned requests.
+    /// the abandoned requests. Quarantined slots stay quarantined: a fresh
+    /// cache does not absolve a slot that faulted repeatedly.
     pub fn reset(&mut self) -> Result<()> {
         self.queue.clear();
         for s in self.slots.iter_mut() {
             *s = None;
+        }
+        for f in self.slot_failures.iter_mut() {
+            *f = 0;
         }
         self.engine.begin_serving()
     }
@@ -463,7 +603,12 @@ impl<E: SlotEngine> Scheduler<E> {
             );
         }
         self.stats.submitted += 1;
-        self.queue.push_back((req, self.step_idx));
+        self.queue.push_back(Queued {
+            req,
+            enqueued_step: self.step_idx,
+            not_before: 0,
+            attempts: 0,
+        });
         self.stats.peak_queue_depth = self.stats.peak_queue_depth.max(self.queue.len());
         Ok(())
     }
@@ -471,6 +616,11 @@ impl<E: SlotEngine> Scheduler<E> {
     /// Requests waiting for a slot.
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Slots currently quarantined (removed from the free list).
+    pub fn n_quarantined(&self) -> usize {
+        self.quarantined.iter().filter(|q| **q).count()
     }
 
     /// Sequences currently occupying slots.
@@ -504,47 +654,140 @@ impl<E: SlotEngine> Scheduler<E> {
         let b = self.slots.len();
         let traffic = backend.traffic();
         self.stats.steps += 1;
+        let mut retired = 0usize;
 
-        // 1. Admission at the step boundary: every free slot takes the
-        // oldest queued request; its prefill runs while the other slots'
-        // device state stays live. The engine left-pads short prompts into
-        // the fixed window; the scheduler records the pad so the slot's
-        // decode positions (cache row = pad + token index) and valid-start
-        // stay honest, and counts valid vs padded prompt entries.
+        // 1. Admission at the step boundary: every free, non-quarantined
+        // slot takes the oldest admissible queued request; its prefill runs
+        // while the other slots' device state stays live. The engine
+        // left-pads short prompts into the fixed window; the scheduler
+        // records the pad so the slot's decode positions (cache row = pad +
+        // token index) and valid-start stay honest, and counts valid vs
+        // padded prompt entries. A faulted prefill requeues its request
+        // with backoff (or retires it as Failed past the retry budget) and
+        // leaves the slot empty this tick — see the module docs' failure
+        // semantics.
         let cap = self.engine.prompt_len();
+        if !self.queue.is_empty() && self.quarantined.iter().all(|q| *q) {
+            bail!(
+                "scheduler: all {b} slots quarantined after repeated prefill faults \
+                 ({} observed) with {} request(s) still queued — engine is unserviceable",
+                self.stats.prefill_faults,
+                self.queue.len()
+            );
+        }
         for slot in 0..b {
-            if self.slots[slot].is_some() {
+            if self.slots[slot].is_some() || self.quarantined[slot] {
                 continue;
             }
-            let Some((req, enqueued_step)) = self.queue.pop_front() else {
+            // Oldest queued entry past its backoff window, if any.
+            let Some(qidx) = self.queue.iter().position(|q| q.not_before <= self.step_idx)
+            else {
                 break;
             };
-            let pending = self.engine.prefill_slot(slot, &req.prompt, traffic)?;
-            self.stats.prefills += 1;
-            self.stats.admitted += 1;
-            let true_len = req.prompt.len();
-            self.stats.prompt_tokens += true_len as u64;
-            self.stats.pad_tokens += (cap - true_len) as u64;
-            let max_new = req.max_new.clamp(1, self.engine.max_new_tokens());
-            self.slots[slot] = Some(Seq {
-                id: req.id,
-                prompt_len: true_len,
-                pad: cap - true_len,
-                tokens: req.prompt,
-                generated: 0,
-                max_new,
-                pending,
-                rng: req.seed.map(Rng::new),
-                enqueued_step,
-                admitted_step: self.step_idx,
-            });
+            let Some(q) = self.queue.remove(qidx) else {
+                break;
+            };
+            match self.engine.prefill_slot(slot, &q.req.prompt, traffic) {
+                Ok(pending) => {
+                    self.slot_failures[slot] = 0;
+                    self.stats.prefills += 1;
+                    self.stats.admitted += 1;
+                    let true_len = q.req.prompt.len();
+                    self.stats.prompt_tokens += true_len as u64;
+                    self.stats.pad_tokens += (cap - true_len) as u64;
+                    let max_new = q.req.max_new.clamp(1, self.engine.max_new_tokens());
+                    self.slots[slot] = Some(Seq {
+                        id: q.req.id,
+                        prompt_len: true_len,
+                        pad: cap - true_len,
+                        tokens: q.req.prompt,
+                        generated: 0,
+                        max_new,
+                        pending,
+                        rng: q.req.seed.map(Rng::new),
+                        enqueued_step: q.enqueued_step,
+                        admitted_step: self.step_idx,
+                    });
+                }
+                Err(_) => {
+                    // The engine may have claimed KV rows before failing —
+                    // release is best-effort (nothing claimed is fine; the
+                    // hybrid engine claims only after its artifact call
+                    // succeeds).
+                    self.stats.prefill_faults += 1;
+                    let _ = self.engine.release_slot(slot);
+                    self.slot_failures[slot] += 1;
+                    if self.policy.quarantine_after > 0
+                        && self.slot_failures[slot] >= self.policy.quarantine_after
+                    {
+                        self.quarantined[slot] = true;
+                        self.stats.quarantined += 1;
+                    }
+                    let attempts = q.attempts + 1;
+                    if attempts > self.policy.max_retries {
+                        // Retry budget exhausted: report the failure as a
+                        // completion instead of dropping the request.
+                        self.stats.completed += 1;
+                        self.stats.retired_failed += 1;
+                        retired += 1;
+                        sink.complete(Completion {
+                            id: q.req.id,
+                            slot,
+                            prompt_len: q.req.prompt.len(),
+                            generated: 0,
+                            finish: FinishReason::Failed { retries: attempts },
+                            queued_steps: self.step_idx - q.enqueued_step,
+                            decode_steps: 0,
+                            tokens: q.req.prompt,
+                        });
+                    } else {
+                        self.stats.requeues += 1;
+                        self.queue.push_back(Queued {
+                            not_before: self.step_idx + self.policy.backoff_steps.max(1),
+                            attempts,
+                            ..q
+                        });
+                    }
+                    // Leave this slot empty this tick: a possibly-bad slot
+                    // must not chew through the queue in one admission pass.
+                }
+            }
         }
 
         // 2. Sample one token per live slot; retire finished sequences
-        // immediately so their slots are admissible next step.
-        let mut retired = 0usize;
+        // immediately so their slots are admissible next step. A sequence
+        // past its deadline retires BEFORE sampling — no token, no RNG
+        // draw — so deadline retirement never perturbs other streams.
         let mut sampled = 0u64;
         for slot in 0..b {
+            let expired = self.policy.deadline_steps > 0
+                && self.slots[slot]
+                    .as_ref()
+                    .is_some_and(|s| self.step_idx - s.admitted_step >= self.policy.deadline_steps);
+            if expired {
+                let Some(seq) = self.slots[slot].take() else {
+                    bail!(
+                        "scheduler invariant violated: slot {slot} vanished at deadline \
+                         retirement (step {})",
+                        self.step_idx
+                    );
+                };
+                self.engine.release_slot(slot)?;
+                self.stats.completed += 1;
+                self.stats.retired_deadline += 1;
+                retired += 1;
+                sink.complete(Completion {
+                    id: seq.id,
+                    slot,
+                    prompt_len: seq.prompt_len,
+                    generated: seq.generated,
+                    finish: FinishReason::Deadline,
+                    queued_steps: seq.admitted_step - seq.enqueued_step,
+                    decode_steps: self.step_idx - seq.admitted_step,
+                    tokens: seq.tokens,
+                });
+                continue;
+            }
             let Some(seq) = self.slots[slot].as_mut() else {
                 continue;
             };
@@ -564,12 +807,21 @@ impl<E: SlotEngine> Scheduler<E> {
                 None
             };
             if let Some(finish) = finish {
-                let seq = self.slots[slot].take().unwrap();
+                let Some(seq) = self.slots[slot].take() else {
+                    bail!(
+                        "scheduler invariant violated: slot {slot} empty at retirement \
+                         (step {})",
+                        self.step_idx
+                    );
+                };
                 self.engine.release_slot(slot)?;
                 self.stats.completed += 1;
                 match finish {
                     FinishReason::Eos => self.stats.retired_eos += 1,
                     FinishReason::Length => self.stats.retired_length += 1,
+                    // Failed/Deadline retirements never come through the
+                    // sampling path.
+                    FinishReason::Failed { .. } | FinishReason::Deadline => {}
                 }
                 retired += 1;
                 sink.complete(Completion {
@@ -596,7 +848,15 @@ impl<E: SlotEngine> Scheduler<E> {
         if active_n > 0 {
             for slot in 0..b {
                 if let Some(seq) = &self.slots[slot] {
-                    self.step_toks[slot] = *seq.tokens.last().unwrap();
+                    let Some(&last) = seq.tokens.last() else {
+                        bail!(
+                            "scheduler invariant violated: slot {slot} (request {}) holds \
+                             an empty token buffer at step {}",
+                            seq.id,
+                            self.step_idx
+                        );
+                    };
+                    self.step_toks[slot] = last;
                     self.step_pos[slot] = (seq.pad + seq.tokens.len() - 1) as i32;
                     self.step_starts[slot] = seq.pad as i32;
                     self.step_active[slot] = true;
@@ -607,21 +867,67 @@ impl<E: SlotEngine> Scheduler<E> {
                     self.step_active[slot] = false;
                 }
             }
-            let out = self.engine.decode_slots(
-                &self.step_toks,
-                &self.step_pos,
-                &self.step_starts,
-                &self.step_active,
-                traffic,
-            )?;
-            for slot in 0..b {
-                if let Some(seq) = self.slots[slot].as_mut() {
-                    seq.pending.copy_from(out.row(slot));
+            // Bounded retry with identical inputs: a transient fault that
+            // fired before the engine touched per-slot state recovers
+            // bit-identically, because this tick's sampling already read
+            // the pending rows of the last SUCCESSFUL call and no RNG
+            // stream advances for a failed attempt.
+            let mut attempt = 0u32;
+            let out = loop {
+                match self.engine.decode_slots(
+                    &self.step_toks,
+                    &self.step_pos,
+                    &self.step_starts,
+                    &self.step_active,
+                    traffic,
+                ) {
+                    Ok(out) => break Some(out),
+                    Err(_) => {
+                        self.stats.decode_faults += 1;
+                        if attempt >= self.policy.max_retries {
+                            break None;
+                        }
+                        attempt += 1;
+                        self.stats.decode_retries += 1;
+                    }
+                }
+            };
+            match out {
+                Some(out) => {
+                    for slot in 0..b {
+                        if let Some(seq) = self.slots[slot].as_mut() {
+                            seq.pending.copy_from(out.row(slot));
+                        }
+                    }
+                    self.stats.decode_calls += 1;
+                    self.stats.slot_steps_active += active_n as u64;
+                    self.stats.slot_steps_total += b as u64;
+                }
+                None => {
+                    // Retry budget exhausted: retire every live sequence
+                    // with the tokens it already has, so the queue (and the
+                    // serve loop) survive the broken tick.
+                    for slot in 0..b {
+                        let Some(seq) = self.slots[slot].take() else {
+                            continue;
+                        };
+                        let _ = self.engine.release_slot(slot);
+                        self.stats.completed += 1;
+                        self.stats.retired_failed += 1;
+                        retired += 1;
+                        sink.complete(Completion {
+                            id: seq.id,
+                            slot,
+                            prompt_len: seq.prompt_len,
+                            generated: seq.generated,
+                            finish: FinishReason::Failed { retries: attempt },
+                            queued_steps: seq.admitted_step - seq.enqueued_step,
+                            decode_steps: self.step_idx + 1 - seq.admitted_step,
+                            tokens: seq.tokens,
+                        });
+                    }
                 }
             }
-            self.stats.decode_calls += 1;
-            self.stats.slot_steps_active += active_n as u64;
-            self.stats.slot_steps_total += b as u64;
         }
 
         self.step_idx += 1;

@@ -142,6 +142,365 @@ fn simulator_returns_oom_not_nonsense() {
     assert!(out.is_none());
 }
 
+// ---------------------------------------------------------------------------
+// scheduler-level chaos: the serving recovery contract
+// ---------------------------------------------------------------------------
+
+mod chaos {
+    use std::collections::HashMap;
+
+    use anyhow::Result;
+    use dschat::data::synthetic::Vocab;
+    use dschat::rollout::RolloutEngine;
+    use dschat::sampling::{HostFullRow, PendingRow, SampleOut, SamplerConfig, TrafficClass};
+    use dschat::serving::chaos::{ChaosConfig, ChaosEngine};
+    use dschat::serving::{FaultPolicy, FinishReason, Request, Scheduler, SlotEngine};
+
+    const VOCAB: usize = 32;
+    const SP: usize = 4;
+    const SG: usize = 8;
+    const CONTENT: i32 = 9;
+
+    /// Scripted slot engine (the serving tests' convention): a prompt's
+    /// first token encodes how many content tokens it emits before EOS, so
+    /// a greedy sampler replays the plan deterministically — which is what
+    /// lets the chaos golden demand bit-identical recovery.
+    struct ScriptEngine {
+        n_slots: usize,
+        plans: Vec<Option<(Vec<i32>, usize)>>,
+        prefills: u64,
+    }
+
+    impl ScriptEngine {
+        fn new(n_slots: usize) -> Self {
+            ScriptEngine {
+                n_slots,
+                plans: (0..n_slots).map(|_| None).collect(),
+                prefills: 0,
+            }
+        }
+
+        fn logits_for(&self, tok: i32) -> Vec<f32> {
+            let mut row = vec![0.0f32; VOCAB];
+            row[tok as usize] = 1.0;
+            row
+        }
+    }
+
+    impl SlotEngine for ScriptEngine {
+        fn n_slots(&self) -> usize {
+            self.n_slots
+        }
+
+        fn prompt_len(&self) -> usize {
+            SP
+        }
+
+        fn max_new_tokens(&self) -> usize {
+            SG
+        }
+
+        fn prefill_slot(
+            &mut self,
+            slot: usize,
+            prompt: &[i32],
+            _traffic: TrafficClass,
+        ) -> Result<PendingRow> {
+            assert!(self.plans[slot].is_none(), "prefill into busy slot {slot}");
+            let n = prompt[0] as usize;
+            let plan: Vec<i32> = (0..SG + 2)
+                .map(|j| if j < n { CONTENT } else { Vocab::EOS })
+                .collect();
+            let row = PendingRow::Logits(self.logits_for(plan[0]));
+            self.plans[slot] = Some((plan, 1));
+            self.prefills += 1;
+            Ok(row)
+        }
+
+        fn decode_slots(
+            &mut self,
+            _toks: &[i32],
+            _pos: &[i32],
+            _starts: &[i32],
+            active: &[bool],
+            _traffic: TrafficClass,
+        ) -> Result<SampleOut> {
+            let mut data = vec![0.0f32; self.n_slots * VOCAB];
+            for slot in 0..self.n_slots {
+                if !active[slot] {
+                    continue;
+                }
+                let (plan, cur) = self.plans[slot].as_mut().expect("active free slot");
+                let row = self.logits_for(plan[*cur]);
+                *cur += 1;
+                data[slot * VOCAB..(slot + 1) * VOCAB].copy_from_slice(&row);
+            }
+            Ok(SampleOut::Logits { data, vocab: VOCAB })
+        }
+
+        fn release_slot(&mut self, slot: usize) -> Result<()> {
+            assert!(self.plans[slot].is_some(), "release of free slot {slot}");
+            self.plans[slot] = None;
+            Ok(())
+        }
+    }
+
+    fn greedy() -> HostFullRow {
+        HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0)
+    }
+
+    /// `prompt[0]` = content tokens the scripted engine emits before EOS.
+    fn req(id: u64, eos_after: i32, max_new: usize) -> Request {
+        let mut prompt = vec![CONTENT; SP];
+        prompt[0] = eos_after;
+        Request { id, prompt, max_new, seed: None }
+    }
+
+    #[test]
+    fn prefill_fault_requeues_with_backoff_and_completes() {
+        // One slot, every 2nd prefill faults: request B's admission fails
+        // once, waits out the backoff window, then succeeds — nothing is
+        // dropped and the fault is visible in the counters.
+        let cfg = ChaosConfig { fault_every_prefill: 2, ..Default::default() };
+        let policy = FaultPolicy {
+            max_retries: 2,
+            backoff_steps: 2,
+            deadline_steps: 0,
+            quarantine_after: 0,
+        };
+        let mut sched =
+            Scheduler::with_policy(ChaosEngine::new(ScriptEngine::new(1), cfg), policy).unwrap();
+        sched.submit(req(1, 1, SG)).unwrap();
+        sched.submit(req(2, 1, SG)).unwrap();
+        let all = sched.run_until_idle(&mut greedy()).unwrap();
+        assert_eq!(all.len(), 2);
+        assert!(all.iter().all(|c| c.finish == FinishReason::Eos), "{all:?}");
+        assert_eq!(all[0].id, 1);
+        assert_eq!(all[1].id, 2);
+        // The faulted admission cost B its backoff window in the queue.
+        assert!(all[1].queued_steps >= 3, "B queued {} steps", all[1].queued_steps);
+        assert_eq!(sched.stats.prefill_faults, 1);
+        assert_eq!(sched.stats.requeues, 1);
+        assert_eq!(sched.stats.retired_failed, 0);
+        assert_eq!(sched.engine.injected.prefill_faults, 1);
+        assert_eq!(sched.engine.injected.prefill_calls, 3, "2 admissions + 1 faulted attempt");
+    }
+
+    #[test]
+    fn transient_chaos_recovery_is_bit_identical() {
+        // The key golden: under transient-only faults (prefill and decode),
+        // every request's tokens and finish reason are IDENTICAL to the
+        // fault-free run — retries replay against pristine engine state —
+        // and the scheduler's fault counters match the injector's ground
+        // truth exactly.
+        let reqs = || {
+            vec![
+                req(0, 1, SG),
+                req(1, 100, SG), // length-capped straggler
+                req(2, 3, SG),
+                req(3, 2, SG),
+                req(4, 100, 4),
+                req(5, 1, SG),
+            ]
+        };
+        let run = |sched: &mut Scheduler<ChaosEngine<ScriptEngine>>| {
+            for r in reqs() {
+                sched.submit(r).unwrap();
+            }
+            let mut by_id: HashMap<u64, (Vec<i32>, FinishReason)> = HashMap::new();
+            for c in sched.run_until_idle(&mut greedy()).unwrap() {
+                by_id.insert(c.id, (c.tokens, c.finish));
+            }
+            by_id
+        };
+        let mut clean =
+            Scheduler::new(ChaosEngine::new(ScriptEngine::new(2), ChaosConfig::default()))
+                .unwrap();
+        let golden = run(&mut clean);
+        assert_eq!(clean.stats.prefill_faults, 0);
+        assert_eq!(clean.stats.decode_faults, 0);
+
+        let cfg = ChaosConfig {
+            fault_every_prefill: 3,
+            fault_every_decode: 3,
+            ..Default::default()
+        };
+        let policy = FaultPolicy {
+            max_retries: 10, // transients must never exhaust the budget here
+            backoff_steps: 1,
+            deadline_steps: 0,
+            quarantine_after: 0,
+        };
+        let mut chaotic =
+            Scheduler::with_policy(ChaosEngine::new(ScriptEngine::new(2), cfg), policy).unwrap();
+        let recovered = run(&mut chaotic);
+        assert_eq!(recovered, golden, "recovery must be bit-identical");
+        // The injector actually fired, and the scheduler saw every fault.
+        let injected = &chaotic.engine.injected;
+        assert!(injected.prefill_faults > 0 && injected.decode_faults > 0);
+        assert_eq!(chaotic.stats.prefill_faults, injected.prefill_faults);
+        assert_eq!(chaotic.stats.decode_faults, injected.decode_faults);
+        assert_eq!(chaotic.stats.decode_retries, injected.decode_faults);
+        assert_eq!(chaotic.stats.requeues, injected.prefill_faults);
+        assert_eq!(chaotic.stats.retired_failed, 0);
+        assert_eq!(chaotic.stats.completed, 6);
+    }
+
+    #[test]
+    fn deadline_retires_overdue_request_before_sampling() {
+        // A never-EOS sequence hits the 3-step residency cap and retires
+        // with its partial output; the freed slot then serves the next
+        // request normally.
+        let policy = FaultPolicy { deadline_steps: 3, ..Default::default() };
+        let mut sched = Scheduler::with_policy(ScriptEngine::new(1), policy).unwrap();
+        sched.submit(req(1, 100, SG)).unwrap(); // would run to SG
+        sched.submit(req(2, 1, SG)).unwrap();
+        let all = sched.run_until_idle(&mut greedy()).unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].id, 1);
+        assert_eq!(all[0].finish, FinishReason::Deadline);
+        assert_eq!(all[0].generated, 3, "3 tokens sampled before the deadline tick");
+        assert_eq!(all[0].response(), &[CONTENT; 3]);
+        assert_eq!(all[1].finish, FinishReason::Eos, "the slot recovered for request 2");
+        assert_eq!(sched.stats.retired_deadline, 1);
+        assert_eq!(sched.stats.retired_eos, 1);
+    }
+
+    #[test]
+    fn quarantine_routes_traffic_around_a_broken_slot() {
+        // Slot 0 faults every prefill: after 2 consecutive faults it is
+        // quarantined and ALL traffic completes through slot 1.
+        let cfg = ChaosConfig { broken_slots: vec![0], ..Default::default() };
+        let policy = FaultPolicy {
+            max_retries: 10,
+            backoff_steps: 1,
+            deadline_steps: 0,
+            quarantine_after: 2,
+        };
+        let mut sched =
+            Scheduler::with_policy(ChaosEngine::new(ScriptEngine::new(2), cfg), policy).unwrap();
+        for id in 0..3 {
+            sched.submit(req(id, 1, SG)).unwrap();
+        }
+        let all = sched.run_until_idle(&mut greedy()).unwrap();
+        assert_eq!(all.len(), 3);
+        for c in &all {
+            assert_eq!(c.finish, FinishReason::Eos, "req {}: {:?}", c.id, c.finish);
+            assert_eq!(c.slot, 1, "req {} must avoid the broken slot", c.id);
+        }
+        assert_eq!(sched.n_quarantined(), 1);
+        assert_eq!(sched.stats.quarantined, 1);
+        assert_eq!(sched.stats.prefill_faults, 2, "quarantine capped the fault count");
+        assert_eq!(sched.stats.retired_failed, 0, "nothing burned its retry budget");
+    }
+
+    #[test]
+    fn permanent_decode_failure_retires_failed_and_scheduler_survives() {
+        // Every decode call faults: the retry budget exhausts, every live
+        // sequence retires as Failed with the tokens it has — and the
+        // scheduler stays serviceable for later submissions instead of
+        // wedging.
+        let cfg = ChaosConfig { seed: 3, decode_fault_p: 1.0, ..Default::default() };
+        let policy = FaultPolicy {
+            max_retries: 2,
+            backoff_steps: 1,
+            deadline_steps: 0,
+            quarantine_after: 0,
+        };
+        let mut sched =
+            Scheduler::with_policy(ChaosEngine::new(ScriptEngine::new(2), cfg), policy).unwrap();
+        sched.submit(req(1, 100, 4)).unwrap();
+        sched.submit(req(2, 100, 4)).unwrap();
+        let all = sched.run_until_idle(&mut greedy()).unwrap();
+        assert_eq!(all.len(), 2);
+        for c in &all {
+            assert_eq!(c.finish, FinishReason::Failed { retries: 2 }, "req {}", c.id);
+            // The admission's pending row was sampled before the first
+            // decode, so each sequence keeps exactly one token.
+            assert_eq!(c.generated, 1);
+            assert_eq!(c.tokens.len(), SP + 1);
+        }
+        assert_eq!(sched.stats.retired_failed, 2);
+        assert_eq!(sched.stats.decode_faults, 3, "initial call + 2 retries");
+        assert_eq!(sched.stats.decode_retries, 2);
+        assert!(sched.is_idle());
+        // The scheduler is still usable: a later request gets the same
+        // honest Failed completion, not an error or a hang.
+        sched.submit(req(3, 100, 4)).unwrap();
+        let later = sched.run_until_idle(&mut greedy()).unwrap();
+        assert_eq!(later.len(), 1);
+        assert_eq!(later[0].finish, FinishReason::Failed { retries: 2 });
+        assert_eq!(sched.stats.retired_failed, 3);
+    }
+
+    #[test]
+    fn all_slots_quarantined_fails_loudly() {
+        // When every slot is quarantined and work is still queued, the
+        // scheduler must refuse to spin forever — a loud error naming the
+        // condition, not a silent stall.
+        let cfg = ChaosConfig { broken_slots: vec![0], ..Default::default() };
+        let policy = FaultPolicy {
+            max_retries: 10,
+            backoff_steps: 1,
+            deadline_steps: 0,
+            quarantine_after: 1,
+        };
+        let mut sched =
+            Scheduler::with_policy(ChaosEngine::new(ScriptEngine::new(1), cfg), policy).unwrap();
+        sched.submit(req(1, 1, SG)).unwrap();
+        // First step quarantines the only slot; the next one must bail.
+        sched.step(&mut greedy()).unwrap();
+        assert_eq!(sched.n_quarantined(), 1);
+        let err = sched.step(&mut greedy()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("quarantined"), "{msg}");
+        assert!(msg.contains("unserviceable"), "{msg}");
+    }
+
+    #[test]
+    fn mid_rollout_transient_faults_leave_experience_groups_intact() {
+        // RLHF experience generation rides the same scheduler: transient
+        // decode faults during a rollout must not tear a group — every
+        // group flushes full, in order, with tokens identical to the
+        // fault-free rollout (greedy over scripted rows).
+        let prompts: Vec<Vec<i32>> = [1, 100, 2, 1, 3, 1]
+            .iter()
+            .map(|&n| {
+                let mut p = vec![CONTENT; SP];
+                p[0] = n;
+                p
+            })
+            .collect();
+        let budgets = vec![SG; 6];
+        let run = |cfg: ChaosConfig| -> (Vec<(usize, Vec<(u64, Vec<i32>)>)>, u64) {
+            let mut engine = ChaosEngine::new(ScriptEngine::new(2), cfg);
+            let mut flushed: Vec<(usize, Vec<(u64, Vec<i32>)>)> = Vec::new();
+            let stats = RolloutEngine::new(0)
+                .run(&mut engine, &mut greedy(), &prompts, &budgets, 2, |_, g| {
+                    flushed.push((
+                        g.index,
+                        g.completions.iter().map(|c| (c.id, c.tokens.clone())).collect(),
+                    ));
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(stats.decode_faults, engine.injected.decode_faults);
+            (flushed, engine.injected.decode_faults)
+        };
+        let (golden, clean_faults) = run(ChaosConfig::default());
+        assert_eq!(clean_faults, 0);
+        let (chaotic, faults) =
+            run(ChaosConfig { fault_every_decode: 3, ..Default::default() });
+        assert!(faults > 0, "the injector must have fired");
+        assert_eq!(chaotic, golden, "groups and tokens identical under transient chaos");
+        // Static grouping held: group g carries ids [2g, 2g+1].
+        for (g, members) in &golden {
+            let ids: Vec<u64> = members.iter().map(|(id, _)| *id).collect();
+            assert_eq!(ids, vec![*g as u64 * 2, *g as u64 * 2 + 1]);
+        }
+    }
+}
+
 #[test]
 fn simulator_outputs_always_finite_when_present() {
     use dschat::baselines::all_systems;

@@ -409,6 +409,91 @@ fn stochastic_rollout_is_reproducible_across_runs() {
 }
 
 #[test]
+fn training_snapshot_restore_roundtrips_bitwise() {
+    // The anomaly guard's rollback primitive: snapshot → scramble →
+    // restore must put params AND optimizer state back bit for bit (a
+    // rolled-back iteration replays against exactly the pre-trip state).
+    let (mut he, mut blend) = setup(true);
+    let mut rng = Rng::new(51);
+    let b = he.manifest().batch;
+    // Move off init so the snapshot is non-trivial (params + Adam moments).
+    let batch = blend.sft_batch(&mut rng, b);
+    he.sft_step(&batch, 1e-3).unwrap();
+    let snap = he.snapshot_training_state().unwrap();
+    let actor0 = he.actor.to_host().unwrap();
+    let opt0 = he.actor_opt.to_host().unwrap();
+
+    let batch2 = blend.sft_batch(&mut rng, b);
+    he.sft_step(&batch2, 5e-2).unwrap();
+    assert_ne!(actor0, he.actor.to_host().unwrap(), "scramble must move the params");
+
+    he.restore_training_state(&snap).unwrap();
+    assert_eq!(actor0, he.actor.to_host().unwrap(), "actor params restored bitwise");
+    assert_eq!(opt0, he.actor_opt.to_host().unwrap(), "optimizer state restored bitwise");
+}
+
+#[test]
+fn anomaly_guard_rolls_back_injected_nan_and_stays_finite() {
+    // The training-layer chaos drill: a NaN actor loss injected at
+    // iteration 1 must trip the guard, roll the trainer back to the
+    // snapshot, and re-roll to a healthy iteration — every returned stats
+    // row is finite and the trip is visible on the counter.
+    let (mut he, mut blend) = setup(true);
+    let mut rng = Rng::new(3);
+    let recipe = TrainRecipe { sft_steps: 10, ..Default::default() };
+    pipeline::run_sft(&mut he, &mut blend, &recipe, &mut rng, None).unwrap();
+
+    let cfg = PpoConfig { ppo_epochs: 1, fault_iteration: Some(1), ..Default::default() };
+    let mut trainer = PpoTrainer::new(cfg, 9);
+    for iter in 0..3 {
+        let stats = trainer
+            .iteration_guarded(&mut he, &mut blend, &mut rng, 1e-4, 5e-4)
+            .unwrap();
+        assert!(stats.actor_loss.is_finite(), "iter {iter}: {}", stats.actor_loss);
+        assert!(stats.critic_loss.is_finite(), "iter {iter}: {}", stats.critic_loss);
+        assert!(stats.approx_kl.is_finite(), "iter {iter}");
+    }
+    assert_eq!(trainer.guard_trips, 1, "the injected NaN tripped the guard exactly once");
+}
+
+#[test]
+fn ppo_checkpoint_roundtrip_restores_run_state_and_params() {
+    // The durable-resume primitive: save_ppo_checkpoint carries all six
+    // stores + the run state; loading restores the params bitwise and
+    // hands back the exact counters.
+    let (mut he, mut blend) = setup(true);
+    let mut rng = Rng::new(61);
+    let b = he.manifest().batch;
+    let batch = blend.sft_batch(&mut rng, b);
+    he.sft_step(&batch, 1e-3).unwrap();
+    let actor0 = he.actor.to_host().unwrap();
+    let critic0 = he.critic.to_host().unwrap();
+
+    let (rng_state, rng_inc) = rng.state();
+    let state = pipeline::checkpoint::RunState {
+        iteration: 7,
+        rng_state,
+        rng_inc,
+        rollouts_done: 3,
+        ema_phase: 7,
+    };
+    let path = std::env::temp_dir().join("dschat_it_ckpt/ppo_ckpt.bin");
+    pipeline::save_ppo_checkpoint(&he, &state, &path).unwrap();
+
+    // Scramble, then resume-load into the same engine.
+    let batch2 = blend.sft_batch(&mut rng, b);
+    he.sft_step(&batch2, 5e-2).unwrap();
+    assert_ne!(actor0, he.actor.to_host().unwrap());
+    let loaded = pipeline::load_ppo_checkpoint(&mut he, &path).unwrap();
+    assert_eq!(loaded, state, "run state survives the tensor encoding");
+    assert_eq!(actor0, he.actor.to_host().unwrap(), "actor restored bitwise");
+    assert_eq!(critic0, he.critic.to_host().unwrap(), "critic restored bitwise");
+    // The restored RNG stream resumes mid-sequence.
+    let mut resumed = Rng::from_state(loaded.rng_state, loaded.rng_inc);
+    assert_eq!(rng.below(1 << 30), resumed.below(1 << 30));
+}
+
+#[test]
 fn checkpoint_roundtrip_preserves_actor() {
     let (mut he, mut blend) = setup(false);
     let mut rng = Rng::new(4);

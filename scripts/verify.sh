@@ -57,6 +57,28 @@ if [ -f artifacts/tiny/manifest.json ]; then
         echo "== verify: serve bench (smoke; includes the mixed-length phase when supported) =="
         cargo bench --bench serve_loop -- --smoke
         echo "verify: wrote BENCH_serve.json"
+        echo "== verify: serve bench under chaos (fault injection smoke) =="
+        # Re-runs the continuous phase with transient prefill/decode faults
+        # and slow ticks injected; the bench asserts goodput survives and
+        # reports the recovery counters in BENCH_serve.json's chaos phase.
+        cargo bench --bench serve_loop -- --smoke --chaos
+        echo "verify: wrote BENCH_serve.json (with chaos phase)"
+        echo "== verify: anomaly-guard rollback drill + resume =="
+        # A short PPO run with iteration 1's loss poisoned to NaN: the
+        # guard must trip, roll back, and finish; then --resume continues
+        # from the durable checkpoint the first run wrote.
+        rm -rf runs/verify_guard
+        cargo run --release -- train --run tiny \
+            --sft-steps 20 --rm-steps 20 --ppo-iters 3 \
+            --fault-iter 1 --ckpt-interval 1 --out runs/verify_guard
+        test -f runs/verify_guard/ppo_ckpt.bin \
+            || { echo "verify: rollback drill left no durable checkpoint" >&2; exit 1; }
+        # Resume against a longer horizon so the restored run actually
+        # trains more iterations (the checkpoint holds iteration 3 of 3;
+        # resuming at --ppo-iters 3 would be refused as already complete).
+        cargo run --release -- train --run tiny --ppo-iters 5 \
+            --resume --out runs/verify_guard
+        echo "verify: rollback drill + resume OK (runs/verify_guard)"
     else
         echo "verify: artifacts predate continuous batching — skipping rollout/serve smokes (re-run \`make artifacts\`)"
     fi
