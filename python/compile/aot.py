@@ -254,6 +254,59 @@ def build_entries(rc):
         kv_donate,
     )
 
+    # ---- serving: block-paged KV cache ------------------------------------
+    # The `_paged` entries replace the per-slot arena rows with a physical
+    # page pool [L, h, kv_pages * page_size, dh] indexed through per-slot
+    # block tables ([*, max_blocks] int32 page ids): retired pages return to
+    # the rust allocator's free list and pages holding a shared system-prompt
+    # prefix are mapped into several tables at once (refcounted,
+    # copy-on-write). Prompts are FRONT-ALIGNED here (no left-padding;
+    # `last` = true length - 1 picks the logits row), which the causal mask
+    # keeps bit-identical to the exact-length computation — and therefore to
+    # the arena path. The capability is recorded as `paged_kv` (+
+    # `page_size` / `kv_pages` geometry) in the manifest config.
+    PS = rc.page_size
+    MB = rc.kv_blocks_per_slot
+    # Bit-match precondition: the paged kernel rebuilds the contiguous
+    # kernel's block_k tiles from whole pages, so the page size must divide
+    # the effective tile min(DEFAULT_BLOCK_K, seq_len) (configs.py already
+    # guarantees PS | seq_len via kv_blocks_per_slot above).
+    from .kernels.decode import DEFAULT_BLOCK_K
+
+    assert min(DEFAULT_BLOCK_K, S) % PS == 0, (DEFAULT_BLOCK_K, S, PS)
+    kv_paged = _spec((a.n_layers, a.n_heads, rc.kv_pages * PS, a.d_head))
+    bt_one = _spec((1, MB), jnp.int32)
+    bt_all = _spec((B, MB), jnp.int32)
+
+    def gen_prefill_slot_paged(*args):
+        P = list(args[:na])
+        kc, vc, prompt, bt, last = args[na:]
+        return model.prefill_slot_paged(
+            a, model.unflatten_params(a, "lm", P), kc, vc, prompt, bt, last, PS
+        )
+
+    entries["prefill_slot_paged"] = (
+        gen_prefill_slot_paged,
+        _pspecs(a, "lm")
+        + [kv_paged, kv_paged, _spec((1, SP), jnp.int32), bt_one, _spec((1,), jnp.int32)],
+        ["logits", "k_cache", "v_cache"],
+    )
+
+    def gen_decode_slots_paged(*args):
+        P = list(args[:na])
+        kc, vc, token, pos, bt = args[na:]
+        return model.decode_slots_paged(
+            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, bt, PS
+        )
+
+    entries["decode_slots_paged"] = (
+        gen_decode_slots_paged,
+        _pspecs(a, "lm")
+        + [kv_paged, kv_paged, _spec((B,), jnp.int32), _spec((B,), jnp.int32), bt_all],
+        ["logits", "k_cache", "v_cache"],
+        kv_donate,
+    )
+
     # ---- device-side sampling: the `_sampled` artifact family ---------------
     # Same compute as the entries above plus the fused Pallas sampling tail
     # (kernels/sampling.py): outputs are (ids [B], topk_logits [B, K],
@@ -315,6 +368,35 @@ def build_entries(rc):
     entries["decode_slots_sampled"] = (
         gen_decode_slots_sampled,
         _pspecs(a, "lm") + [kv, kv, _spec((B,), jnp.int32), _spec((B,), jnp.int32), start_b],
+        sampled_outputs,
+        kv_donate,
+    )
+
+    def gen_prefill_slot_paged_sampled(*args):
+        P = list(args[:na])
+        kc, vc, prompt, bt, last = args[na:]
+        return model.prefill_slot_paged_sampled(
+            a, model.unflatten_params(a, "lm", P), kc, vc, prompt, bt, last, PS, K
+        )
+
+    entries["prefill_slot_paged_sampled"] = (
+        gen_prefill_slot_paged_sampled,
+        _pspecs(a, "lm")
+        + [kv_paged, kv_paged, _spec((1, SP), jnp.int32), bt_one, _spec((1,), jnp.int32)],
+        sampled_outputs,
+    )
+
+    def gen_decode_slots_paged_sampled(*args):
+        P = list(args[:na])
+        kc, vc, token, pos, bt = args[na:]
+        return model.decode_slots_paged_sampled(
+            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, bt, PS, K
+        )
+
+    entries["decode_slots_paged_sampled"] = (
+        gen_decode_slots_paged_sampled,
+        _pspecs(a, "lm")
+        + [kv_paged, kv_paged, _spec((B,), jnp.int32), _spec((B,), jnp.int32), bt_all],
         sampled_outputs,
         kv_donate,
     )
@@ -408,6 +490,12 @@ def build(run_name: str, out_dir: str, only=None):
     # runtime refuses to admit short prompts against artifact sets that
     # lack it (pre-padding builds parse with the flag absent -> false).
     cfg_dict["padded_prompts"] = True
+    # Capability flag: the `_paged` serving entries exist — the KV cache is
+    # addressable as a block-paged pool through per-slot block tables, with
+    # `page_size` / `kv_pages` (already in cfg_dict via to_dict) giving the
+    # pool geometry. Pre-paging builds parse with the flag absent -> false
+    # and the rust runtime refuses paged serving against them.
+    cfg_dict["paged_kv"] = True
     manifest = {
         "run": run_name,
         "config": cfg_dict,

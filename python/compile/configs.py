@@ -50,10 +50,33 @@ class RunConfig:
     # artifacts return [batch, sample_k] top-k logits+ids instead of the
     # full [batch, vocab] row. Must satisfy 0 < sample_k <= actor.vocab.
     sample_k: int = 32
+    # Tokens per KV-cache page of the block-paged serving path (the `_paged`
+    # artifacts). Must divide seq_len AND the decode kernel's effective tile
+    # `min(DEFAULT_BLOCK_K, seq_len)` — the paged kernel reassembles arena
+    # tiles from whole pages so its accumulation order (and therefore its
+    # bits) match the contiguous-cache kernel. Shared prefixes are reused at
+    # page granularity, so smaller pages share more but table/scatter
+    # overhead grows.
+    page_size: int = 8
 
     @property
     def seq_len(self) -> int:
         return self.prompt_len + self.gen_len
+
+    @property
+    def kv_blocks_per_slot(self) -> int:
+        """Logical pages spanning one slot's full [0, seq_len) window."""
+        assert self.seq_len % self.page_size == 0, (self.seq_len, self.page_size)
+        return self.seq_len // self.page_size
+
+    @property
+    def kv_pages(self) -> int:
+        """Physical pool size: every slot's full window plus one spare
+        slot's worth (so a retired request's shared prefix can stay
+        registered under full admission load) plus page 0, which is
+        reserved as the garbage page that dead slots' block tables point
+        at — its contents are written by inactive rows and never read."""
+        return (self.batch + 1) * self.kv_blocks_per_slot + 1
 
 
 _MODELS: Dict[str, ModelConfig] = {
@@ -91,6 +114,7 @@ def run_config_names():
 def to_dict(rc: RunConfig) -> dict:
     d = asdict(rc)
     d["seq_len"] = rc.seq_len
+    d["kv_pages"] = rc.kv_pages
     d["actor"]["d_head"] = rc.actor.d_head
     d["critic"]["d_head"] = rc.critic.d_head
     d["actor"]["n_params"] = rc.actor.n_params()

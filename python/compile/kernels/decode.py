@@ -129,6 +129,101 @@ def _decode_pbs_kernel(pos_ref, start_ref, q_ref, k_ref, v_ref, o_ref, *, block_
     o_ref[0] = (acc / l).astype(o_ref.dtype)
 
 
+def _decode_paged_kernel(
+    pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, page_size, smax, scale
+):
+    """`_decode_kernel` over a BLOCK-PAGED cache (per-slot block tables).
+
+    The grid row's K/V live scattered across a physical page pool; the
+    row's block table maps logical block kb -> physical page id. Each
+    `block_k` tile is reassembled from its `block_k / page_size` whole
+    pages (the config layer guarantees divisibility), so the online-softmax
+    update sequence — one max/exp/rescale per block_k tile over the logical
+    window [0, smax) — is IDENTICAL to the contiguous-cache kernel's, and
+    the output is bit-identical to `decode_attention_pb` over the gathered
+    logical cache. `smax` here is the LOGICAL window (max_blocks *
+    page_size), not the pool length.
+    """
+    pos = pos_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale  # (dh,)
+    d_head = q.shape[-1]
+    pages_per_block = block_k // page_size
+
+    n_blocks = jax.lax.div(pos + block_k, block_k)
+
+    def load_tile(ref, tb):
+        # Reassemble logical tile tb from its whole pages, in logical order.
+        parts = []
+        for r in range(pages_per_block):  # static unroll
+            page = pl.load(bt_ref, (0, tb * pages_per_block + r))
+            parts.append(pl.load(ref, (0, pl.dslice(page * page_size, page_size), slice(None))))
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+    def body(tb, carry):
+        m, l, acc = carry
+        k = load_tile(k_ref, tb)
+        v = load_tile(v_ref, tb)
+        s = k.astype(jnp.float32) @ q  # (block_k,)
+        idx = tb * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(idx <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max())
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum()
+        acc_new = acc * alpha + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d_head,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+def decode_attention_paged(q, k_pool, v_pool, pos, block_tables, page_size, block_k=DEFAULT_BLOCK_K):
+    """Block-paged per-row-position decode attention (paged serving path).
+
+    K/V live in a physical page pool shared by every slot; each slot's
+    block table maps its logical blocks onto pool pages (pages holding a
+    shared prompt prefix may appear in several tables). All heads of a
+    slot share the slot's table. The tile math matches the contiguous
+    kernel's exactly (see `_decode_paged_kernel`), so paged serving is
+    bit-identical to the arena path for the same logical cache contents.
+
+    q: [b*h, dh] (row = slot * h + head);
+    k_pool, v_pool: [h, n_pages * page_size, dh];
+    pos: [b*h] int32 (logical token index per row);
+    block_tables: [b, max_blocks] int32 -> [b*h, dh].
+    """
+    h, pool_len, dh = k_pool.shape
+    bh = q.shape[0]
+    b, max_blocks = block_tables.shape
+    assert bh == b * h, (bh, b, h)
+    assert pool_len % page_size == 0, (pool_len, page_size)
+    smax = max_blocks * page_size  # logical window
+    block_k = min(block_k, smax)
+    assert smax % block_k == 0, (smax, block_k)
+    assert block_k % page_size == 0, (block_k, page_size)
+    scale = 1.0 / (dh**0.5)
+    kernel = functools.partial(
+        _decode_paged_kernel, block_k=block_k, page_size=page_size, smax=smax, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, max_blocks), lambda i: (i // h, 0)),
+            pl.BlockSpec((1, dh), lambda i: (i, 0)),
+            pl.BlockSpec((1, pool_len, dh), lambda i: (i % h, 0, 0)),
+            pl.BlockSpec((1, pool_len, dh), lambda i: (i % h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, dh), q.dtype),
+        interpret=True,
+    )(pos, block_tables, q, k_pool, v_pool)
+
+
 def decode_attention_pbs(q, k, v, pos, start, block_k=DEFAULT_BLOCK_K):
     """Per-row-position decode attention over a LEFT-PADDED cache.
 

@@ -74,6 +74,45 @@ def decode_attention_pbs_ref(q, k, v, pos, start):
     return out.astype(q.dtype)
 
 
+def gather_paged_kv(pool, block_tables, page_size, n_heads):
+    """Assemble the logical per-slot cache from a block-paged pool.
+
+    pool: [h, n_pages * page_size, dh] (physical page p occupies rows
+    [p * page_size, (p+1) * page_size)); block_tables: [b, max_blocks]
+    int32 mapping each slot's logical block kb to its physical page id.
+    Returns the logically-contiguous [b*h, max_blocks * page_size, dh]
+    cache (row r = slot * h + head) — pure data movement, bit-exact.
+    """
+    b, mb = block_tables.shape
+    # [b, mb, page_size] physical row index of every logical position.
+    rows = block_tables[:, :, None] * page_size + jnp.arange(page_size)[None, None, :]
+    rows = rows.reshape(b, mb * page_size)
+    gathered = pool[:, rows]  # [h, b, smax, dh]
+    h, _, smax, dh = gathered.shape
+    assert h == n_heads, (h, n_heads)
+    return gathered.transpose(1, 0, 2, 3).reshape(b * h, smax, dh)
+
+
+def decode_attention_paged_ref(q, k_pool, v_pool, pos, block_tables, page_size):
+    """Block-paged decode attention (oracle): per-slot block tables map
+    logical positions onto a shared physical page pool.
+
+    The gather is pure data movement, so this is BIT-IDENTICAL to
+    `decode_attention_pb_ref` over the logically-contiguous cache — the
+    paged serving path's numerics equal the contiguous (arena) path's by
+    construction. Every head of a slot shares the slot's table.
+
+    q: [b*h, dh]; k_pool, v_pool: [h, n_pages * page_size, dh];
+    pos: [b*h] int32 (logical token index per row);
+    block_tables: [b, max_blocks] int32 -> [b*h, dh].
+    """
+    b = block_tables.shape[0]
+    h = q.shape[0] // b
+    k = gather_paged_kv(k_pool, block_tables, page_size, h)
+    v = gather_paged_kv(v_pool, block_tables, page_size, h)
+    return decode_attention_pb_ref(q, k, v, pos)
+
+
 def attention_padded_ref(q, k, v, start):
     """Causal attention over LEFT-PADDED rows (padded-prefill oracle).
 

@@ -22,7 +22,12 @@ from .kernels.attention import (
     flash_attention_fwd,
     flash_attention_padded_fwd,
 )
-from .kernels.decode import decode_attention, decode_attention_pb, decode_attention_pbs
+from .kernels.decode import (
+    decode_attention,
+    decode_attention_paged,
+    decode_attention_pb,
+    decode_attention_pbs,
+)
 from .kernels.layernorm import layernorm as layernorm_pallas
 from .kernels.sampling import argmax_rows, top_k_rows
 
@@ -462,6 +467,112 @@ def decode_slots(cfg: ModelConfig, params, k_cache, v_cache, token, pos, start=N
 
 
 # ---------------------------------------------------------------------------
+# Block-paged serving (the `_paged` artifact variants)
+#
+# The paged path replaces the per-slot arena rows with a physical page pool
+# [L, h, n_pages * page_size, dh] shared by every slot: each slot's block
+# table maps logical block kb onto a pool page, so retired pages return to a
+# free list and pages holding a shared system-prompt prefix can appear in
+# several tables at once (refcounted by the rust allocator). Unlike the
+# arena path, paged prompts are FRONT-ALIGNED (real token j sits at logical
+# position j, short prompts are right-padded and the garbage tail is masked
+# by `pos`), which keeps the math bit-identical to the exact-length
+# computation by the causal-mask argument — and therefore bit-identical to
+# the arena left-padded path, which PR 5 pinned to the same exact-length
+# reference.
+# ---------------------------------------------------------------------------
+
+
+def _paged_dest(block_table, pos, page_size):
+    """Physical pool row of logical position `pos` under `block_table`.
+
+    block_table: [max_blocks] int32; pos: scalar or [n] int32 -> same shape.
+    """
+    return block_table[pos // page_size] * page_size + pos % page_size
+
+
+def _paged_scatter(cache, layer, dest, vals):
+    """Scatter per-head rows into the pool: cache [L, h, pool, dh];
+    dest: [n] int32 pool rows; vals: [h, n, dh]."""
+    return cache.at[layer].set(cache[layer].at[:, dest, :].set(vals))
+
+
+def prefill_slot_paged(cfg: ModelConfig, params, k_cache, v_cache, prompt, block_table, last, page_size):
+    """Prefill ONE sequence into a block-paged cache through its block table.
+
+    Front-aligned: the prompt's true length-L tokens occupy logical
+    positions [0, L) (short prompts arrive right-padded to the fixed [1, sp]
+    shape); position embeddings are the plain `pos_embed[:sp]` gather and
+    attention is plain causal, so rows [0, L) are bit-identical to the
+    exact-length prefill — the garbage K/V the padding tail produces lands
+    at logical positions >= L of the slot's own pages, where `pos` masking
+    (and later decode overwrites) keep it unread. Every position's K/V is
+    scattered to `block_table[p // page_size] * page_size + p % page_size`;
+    pages holding a verified shared prefix are rewritten with bit-identical
+    values (same tokens at same logical positions), which is what makes
+    copy-on-write prefix sharing safe under a full-window prefill.
+
+    prompt: [1, sp] int32; block_table: [1, max_blocks] int32; `last`: [1]
+    int32 = L - 1, the true last token's row, whose logits are returned.
+    Returns (last-real-position logits [1, vocab], updated caches
+    [L, h, n_pages * page_size, dh]).
+    """
+    _, sp = prompt.shape
+    x = params["embed"][prompt] + params["pos_embed"][:sp][None]
+    dest = _paged_dest(block_table[0], jnp.arange(sp), page_size)  # [sp]
+    for i in range(cfg.n_layers):
+        xn = _ln(params, f"l{i}.ln1", x)
+        o, ks, vs = _attn_prefill(cfg, params, i, xn)
+        # ks/vs: [h, sp, dh] -> pool rows dest, all heads.
+        k_cache = _paged_scatter(k_cache, i, dest, ks)
+        v_cache = _paged_scatter(v_cache, i, dest, vs)
+        x = x + o
+        x = x + _mlp(cfg, params, i, _ln(params, f"l{i}.ln2", x))
+    x = _ln(params, "lnf", x)
+    logits = x[:, last[0]] @ params["embed"].T
+    return logits, k_cache, v_cache
+
+
+def decode_slots_paged(cfg: ModelConfig, params, k_cache, v_cache, token, pos, block_tables, page_size):
+    """One per-slot-position decode step over the block-paged cache.
+
+    Like `decode_slots` with start == 0 everywhere (paged slots are
+    front-aligned, so `pos` IS the logical sequence position), but K/V are
+    written and attended through each slot's block table. Inactive slots'
+    tables point every block at the reserved garbage page 0, so their PAD
+    writes land in (and their outputs read) storage no live slot maps.
+
+    token, pos: [b] int32; block_tables: [b, max_blocks] int32.
+    Returns (logits [b, vocab], updated caches).
+    """
+    b = token.shape[0]
+    h, dh, d = cfg.n_heads, cfg.d_head, cfg.d_model
+    x = params["embed"][token] + params["pos_embed"][pos]
+    pos_bh = jnp.repeat(pos, h)
+    dest = block_tables[jnp.arange(b), pos // page_size] * page_size + pos % page_size  # [b]
+    for i in range(cfg.n_layers):
+        p = f"l{i}."
+        xn = layernorm(x, params[p + "ln1_g"], params[p + "ln1_b"])
+        q = (xn @ params[p + "wq"]).reshape(b * h, dh)
+        k = (xn @ params[p + "wk"]).reshape(b, h, dh)
+        v = (xn @ params[p + "wv"]).reshape(b, h, dh)
+        k_cache = _paged_scatter(k_cache, i, dest, k.transpose(1, 0, 2))
+        v_cache = _paged_scatter(v_cache, i, dest, v.transpose(1, 0, 2))
+        o = decode_attention_paged(
+            q, k_cache[i], v_cache[i], pos_bh, block_tables, page_size
+        )  # [b*h, dh]
+        x = x + o.reshape(b, d) @ params[p + "wo"]
+        xn = layernorm(x, params[p + "ln2_g"], params[p + "ln2_b"])
+        x = (
+            x
+            + jax.nn.relu(xn @ params[p + "w1"] + params[p + "b1"]) @ params[p + "w2"]
+            + params[p + "b2"]
+        )
+    x = layernorm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["embed"].T, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
 # Device-side sampling tail (the `_sampled` artifact variants)
 #
 # The plain generation entry points end at the logits matmul and ship the
@@ -508,6 +619,28 @@ def prefill_slot_sampled(cfg, params, k_cache, v_cache, prompt, slot, k, start=N
 def decode_slots_sampled(cfg, params, k_cache, v_cache, token, pos, k, start=None):
     """`decode_slots` with the sampling tail (per-slot-position decode)."""
     logits, kc, vc = decode_slots(cfg, params, k_cache, v_cache, token, pos, start)
+    ids, tv, ti = sample_tail(logits, k)
+    return ids, tv, ti, kc, vc
+
+
+def prefill_slot_paged_sampled(
+    cfg, params, k_cache, v_cache, prompt, block_table, last, page_size, k
+):
+    """`prefill_slot_paged` with the sampling tail on the slot's logits."""
+    logits, kc, vc = prefill_slot_paged(
+        cfg, params, k_cache, v_cache, prompt, block_table, last, page_size
+    )
+    ids, tv, ti = sample_tail(logits, k)
+    return ids, tv, ti, kc, vc
+
+
+def decode_slots_paged_sampled(
+    cfg, params, k_cache, v_cache, token, pos, block_tables, page_size, k
+):
+    """`decode_slots_paged` with the sampling tail (paged per-slot decode)."""
+    logits, kc, vc = decode_slots_paged(
+        cfg, params, k_cache, v_cache, token, pos, block_tables, page_size
+    )
     ids, tv, ti = sample_tail(logits, k)
     return ids, tv, ti, kc, vc
 

@@ -43,10 +43,14 @@ def test_entry_names_complete(entries):
         "decode_step",
         "prefill_slot",
         "decode_slots",
+        "prefill_slot_paged",
+        "decode_slots_paged",
         "prefill_sampled",
         "decode_step_sampled",
         "prefill_slot_sampled",
         "decode_slots_sampled",
+        "prefill_slot_paged_sampled",
+        "decode_slots_paged_sampled",
         "ppo_actor_step",
         "ppo_critic_step",
         "ema_update",
@@ -62,8 +66,10 @@ def test_decode_entries_donate_kv(entries):
     donated = {
         "decode_step",
         "decode_slots",
+        "decode_slots_paged",
         "decode_step_sampled",
         "decode_slots_sampled",
+        "decode_slots_paged_sampled",
     }
     for name, entry in entries.items():
         donate = tuple(entry[3]) if len(entry) > 3 else ()
@@ -119,6 +125,11 @@ def test_manifest_contents(tmp_path, entries):
     # Variable-prompt-length capability: the rust runtime gates short-prompt
     # admission on this flag (absent in pre-padding artifact sets).
     assert man["config"]["padded_prompts"] is True
+    # Block-paged serving capability + pool geometry: the rust runtime
+    # gates paged serving (and shared-prefix reuse) on these.
+    assert man["config"]["paged_kv"] is True
+    assert man["config"]["page_size"] == RC.page_size
+    assert man["config"]["kv_pages"] == RC.kv_pages
     assert len(man["actor_params"]) == len(model.param_spec(RC.actor, "lm"))
     assert len(man["actor_opt"]) == 2 * len(man["actor_params"]) + 1
     art = man["artifacts"]["logprobs_forward"]

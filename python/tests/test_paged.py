@@ -1,0 +1,446 @@
+"""Block-paged KV cache: per-slot block tables over a shared page pool.
+
+These pin the invariants the rust page allocator (rust/src/hybrid/kv.rs) and
+the paged serving path rely on:
+
+  * scatter/gather round trip: K/V written through a block table and
+    gathered back via `gather_paged_kv` reproduce the contiguous cache
+    BIT-EXACTLY (pure data movement);
+  * `prefill_slot_paged` of a FRONT-ALIGNED (right-padded) short prompt
+    reproduces the exact-length prefill's last-real-position logits, with
+    the slot's pages holding exactly what the contiguous prefill wrote;
+  * a full greedy serving chain through the paged path is BIT-IDENTICAL to
+    the arena (left-padded) path for the same traffic — the golden the rust
+    integration test repeats against real artifacts;
+  * a staggered paged schedule (mid-flight admission of a short prompt,
+    inactive slots parked on the garbage page) matches the no-cache full
+    forward per sequence;
+  * two slots SHARING a prefix page produce completions bit-identical to
+    independent, unshared runs — the copy-on-write prefix-reuse safety
+    argument (prefill rewrites shared pages with bit-identical values;
+    decode writes land past the page-aligned shared region).
+
+The Pallas kernels are swapped for their pure-jnp oracles (kernels/ref.py)
+as in test_serving.py; the paged kernel itself is checked against the oracle
+AND bit-compared to the contiguous kernel in the parity section at the
+bottom, which skips itself when the installed jax cannot run pallas
+interpret mode.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import run_config
+from compile.kernels import ref
+from compile.kernels.decode import decode_attention_paged, decode_attention_pb
+
+RC = run_config("nano")
+PS = RC.page_size
+MB = RC.kv_blocks_per_slot
+TOL = dict(rtol=2e-4, atol=2e-4)
+PAD = 0  # mirrors the rust Vocab::PAD token
+
+
+@pytest.fixture(autouse=True)
+def ref_kernels(monkeypatch):
+    """Run the model on the pure-jnp kernel oracles (forward-only tests)."""
+    monkeypatch.setattr(model, "layernorm", ref.layernorm_ref)
+    monkeypatch.setattr(model, "flash_attention", ref.attention_ref)
+    monkeypatch.setattr(model, "flash_attention_fwd", ref.attention_ref)
+    monkeypatch.setattr(model, "flash_attention_padded_fwd", ref.attention_padded_ref)
+    monkeypatch.setattr(model, "decode_attention", ref.decode_attention_ref)
+    monkeypatch.setattr(model, "decode_attention_pb", ref.decode_attention_pb_ref)
+    monkeypatch.setattr(model, "decode_attention_pbs", ref.decode_attention_pbs_ref)
+    monkeypatch.setattr(model, "decode_attention_paged", ref.decode_attention_paged_ref)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(RC.actor, "lm", jnp.int32(0))
+
+
+def arena_zero_caches():
+    a = RC.actor
+    shape = (a.n_layers, RC.batch * a.n_heads, RC.seq_len, a.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def paged_zero_caches():
+    a = RC.actor
+    shape = (a.n_layers, a.n_heads, RC.kv_pages * PS, a.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def sample_prompts(seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (RC.batch, RC.prompt_len), 0, RC.actor.vocab
+    ).astype(jnp.int32)
+
+
+def right_pad(row, sp):
+    """row: [1, L] -> [1, sp] with PAD tokens on the right (front-aligned)."""
+    L = row.shape[1]
+    return jnp.concatenate([row, jnp.full((1, sp - L), PAD, jnp.int32)], axis=1)
+
+
+def scatter_pool(contig, bt, n_pages):
+    """Place a contiguous [b*h, smax, dh] cache into a [h, n_pages*PS, dh]
+    pool under block tables `bt` [b, MB] (distinct pages per slot)."""
+    b, mb = bt.shape
+    bh, smax, dh = contig.shape
+    h = bh // b
+    assert smax == mb * PS
+    pool = np.zeros((h, n_pages * PS, dh), np.float32)
+    c = np.asarray(contig).reshape(b, h, smax, dh)
+    for s in range(b):
+        for blk in range(mb):
+            page = int(bt[s, blk])
+            pool[:, page * PS : (page + 1) * PS] = c[s, :, blk * PS : (blk + 1) * PS]
+    return jnp.asarray(pool)
+
+
+# Slot -> pages mapping used throughout: a deliberate non-identity
+# permutation of the nano pool (7 pages; page 0 reserved as garbage).
+BT = np.array([[3, 5], [1, 6]], np.int32)
+
+
+def test_gather_scatter_round_trip_is_bit_exact():
+    a = RC.actor
+    key = jax.random.PRNGKey(0)
+    contig = jax.random.normal(
+        key, (RC.batch * a.n_heads, RC.seq_len, a.d_head), jnp.float32
+    )
+    pool = scatter_pool(contig, BT, RC.kv_pages)
+    back = ref.gather_paged_kv(pool, jnp.asarray(BT), PS, a.n_heads)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(contig))
+
+
+def test_paged_oracle_matches_contiguous_oracle_bitwise():
+    a = RC.actor
+    bh = RC.batch * a.n_heads
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (bh, a.d_head), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, RC.seq_len, a.d_head))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, RC.seq_len, a.d_head))
+    pos = jnp.array([5, 5, 12, 12], jnp.int32)  # per-head rows share slot pos
+    kp, vp = scatter_pool(k, BT, RC.kv_pages), scatter_pool(v, BT, RC.kv_pages)
+    out = ref.decode_attention_paged_ref(q, kp, vp, pos, jnp.asarray(BT), PS)
+    want = ref.decode_attention_pb_ref(q, k, v, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("L", [RC.prompt_len, RC.prompt_len - 3, 1])
+def test_paged_prefill_matches_exact_length(params, L):
+    """Front-aligned paged admission: the true-length-L prompt's logits (and
+    its pages' real entries) must equal the exact-length prefill BIT-EXACTLY
+    — the causal mask keeps rows [0, L) independent of the padding tail."""
+    a, sp = RC.actor, RC.prompt_len
+    exact = sample_prompts(40 + L)[:1, :L]
+    kc, vc = paged_zero_caches()
+    bt = jnp.asarray(BT[:1])
+
+    logits, kc2, vc2 = model.prefill_slot_paged(
+        a, params, kc, vc, right_pad(exact, sp), bt, jnp.array([L - 1], jnp.int32), PS
+    )
+    le, kce, vce = model.prefill(a, params, exact, RC.seq_len)
+    np.testing.assert_array_equal(np.asarray(logits[0]), np.asarray(le[0]))
+
+    # The slot's pages hold the contiguous prefill's K/V at logical [0, L).
+    gathered_k = ref.gather_paged_kv(kc2[0], bt, PS, a.n_heads)
+    gathered_v = ref.gather_paged_kv(vc2[0], bt, PS, a.n_heads)
+    np.testing.assert_array_equal(
+        np.asarray(gathered_k)[:, :L], np.asarray(kce)[0, : a.n_heads, :L]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(gathered_v)[:, :L], np.asarray(vce)[0, : a.n_heads, :L]
+    )
+
+
+def test_paged_chain_bit_matches_arena_chain(params):
+    """The golden: identical full-length greedy traffic through the paged
+    path and the arena path yields BIT-IDENTICAL logits at every step."""
+    a, sp = RC.actor, RC.prompt_len
+    prompts = sample_prompts(50)
+    bt = jnp.asarray(BT)
+
+    # Arena: admit both slots, then decode.
+    kca, vca = arena_zero_caches()
+    arena_logits = []
+    for slot in range(RC.batch):
+        l, kca, vca = model.prefill_slot(
+            a, params, kca, vca, prompts[slot : slot + 1], jnp.array([slot], jnp.int32)
+        )
+        arena_logits.append(l[0])
+
+    # Paged: same admissions through block tables.
+    kcp, vcp = paged_zero_caches()
+    paged_logits = []
+    for slot in range(RC.batch):
+        l, kcp, vcp = model.prefill_slot_paged(
+            a,
+            params,
+            kcp,
+            vcp,
+            prompts[slot : slot + 1],
+            bt[slot : slot + 1],
+            jnp.array([sp - 1], jnp.int32),
+            PS,
+        )
+        paged_logits.append(l[0])
+
+    for slot in range(RC.batch):
+        np.testing.assert_array_equal(
+            np.asarray(paged_logits[slot]), np.asarray(arena_logits[slot])
+        )
+
+    pos = [sp, sp]
+    for _ in range(RC.gen_len - 1):
+        toks = jnp.array(
+            [int(jnp.argmax(arena_logits[s])) for s in range(RC.batch)], jnp.int32
+        )
+        posv = jnp.array(pos, jnp.int32)
+        la, kca, vca = model.decode_slots(a, params, kca, vca, toks, posv)
+        lp, kcp, vcp = model.decode_slots_paged(a, params, kcp, vcp, toks, posv, bt, PS)
+        np.testing.assert_array_equal(np.asarray(lp), np.asarray(la))
+        arena_logits = [la[s] for s in range(RC.batch)]
+        pos = [p + 1 for p in pos]
+
+
+def test_staggered_paged_schedule_matches_full_forward(params):
+    """Admit slot 0 (full-length), decode alone with slot 1 parked on the
+    garbage page, admit a SHORT front-aligned prompt into slot 1 mid-flight,
+    decode both — every emitted logits row must equal the no-cache forward
+    on that sequence's true token prefix."""
+    a, sp = RC.actor, RC.prompt_len
+    L1 = sp - 3
+    prompts = sample_prompts(60)
+    kc, vc = paged_zero_caches()
+
+    def ref_logits(tokens):
+        seq = jnp.asarray(tokens, jnp.int32)[None, :]
+        return model.logits_fn(a, params, seq)[0, -1]
+
+    def check(row, tokens):
+        np.testing.assert_allclose(row, ref_logits(tokens), **TOL)
+
+    seqs = [list(np.asarray(prompts[0])), list(np.asarray(prompts[1][:L1]))]
+    pending = [None, None]
+    # Slot 1 not yet admitted: every block parked on the garbage page 0.
+    tables = np.array([[3, 5], [0, 0]], np.int32)
+
+    l0, kc, vc = model.prefill_slot_paged(
+        a,
+        params,
+        kc,
+        vc,
+        prompts[0:1],
+        jnp.asarray(tables[0:1]),
+        jnp.array([sp - 1], jnp.int32),
+        PS,
+    )
+    check(l0[0], seqs[0])
+    pending[0] = l0[0]
+
+    for tick in range(4):
+        if tick == 2:
+            tables[1] = [1, 6]
+            l1, kc, vc = model.prefill_slot_paged(
+                a,
+                params,
+                kc,
+                vc,
+                right_pad(prompts[1:2, :L1], sp),
+                jnp.asarray(tables[1:2]),
+                jnp.array([L1 - 1], jnp.int32),
+                PS,
+            )
+            check(l1[0], seqs[1])
+            pending[1] = l1[0]
+        toks, pos, active = [], [], []
+        for slot in range(2):
+            if pending[slot] is None:
+                toks.append(0)
+                pos.append(0)
+                active.append(False)
+            else:
+                t = int(jnp.argmax(pending[slot]))
+                seqs[slot].append(t)
+                toks.append(t)
+                # Front-aligned: position IS the true sequence depth.
+                pos.append(len(seqs[slot]) - 1)
+                active.append(True)
+        logits, kc, vc = model.decode_slots_paged(
+            a,
+            params,
+            kc,
+            vc,
+            jnp.array(toks, jnp.int32),
+            jnp.array(pos, jnp.int32),
+            jnp.asarray(tables),
+            PS,
+        )
+        for slot in range(2):
+            if active[slot]:
+                check(logits[slot], seqs[slot])
+                pending[slot] = logits[slot]
+
+    assert len(seqs[0]) == sp + 4
+    assert len(seqs[1]) == L1 + 2
+
+
+def test_shared_prefix_page_is_bit_identical_to_unshared(params):
+    """Two slots whose prompts are the same full-page prefix SHARE the
+    prefix's physical page; their completions (forced to diverge at the
+    first generated token) must be bit-identical to runs in private pools.
+    Safe because (a) the second prefill rewrites the shared page with
+    bit-identical values — same tokens at the same logical positions — and
+    (b) decode writes land at positions >= prompt_len, past the page-aligned
+    shared region, in each slot's private pages. (Inactive slots are parked
+    on the garbage page, the scheduler's discipline — a parked slot must
+    NEVER keep a real table, or its PAD write would corrupt live pages.)"""
+    a, sp = RC.actor, RC.prompt_len
+    assert sp == PS  # nano geometry: the whole prompt is one shareable page
+    prompt = sample_prompts(70)[:1]
+
+    def admit(kc, vc, table_row):
+        return model.prefill_slot_paged(
+            a, params, kc, vc, prompt, table_row, jnp.array([sp - 1], jnp.int32), PS
+        )
+
+    # Shared pool: slot 0 owns pages [3, 5]; slot 1 maps the SAME prefix
+    # page 3 plus its own page 6 for generated tokens.
+    shared_bt = jnp.asarray(np.array([[3, 5], [3, 6]], np.int32))
+    kc, vc = paged_zero_caches()
+    l0, kc, vc = admit(kc, vc, shared_bt[0:1])
+    l1, kc, vc = admit(kc, vc, shared_bt[1:2])
+    # The second admission rewrote the shared page bit-identically, so both
+    # slots see the same prefix logits.
+    np.testing.assert_array_equal(np.asarray(l1[0]), np.asarray(l0[0]))
+
+    ranked = np.argsort(-np.asarray(l0[0]))
+    firsts = [int(ranked[0]), int(ranked[1])]  # force divergent completions
+
+    # Concurrent greedy decode of both slots over the shared pool.
+    shared_out = [[np.asarray(l0[0])], [np.asarray(l1[0])]]
+    toks, pos = list(firsts), [sp, sp]
+    for _ in range(3):
+        l, kc, vc = model.decode_slots_paged(
+            a,
+            params,
+            kc,
+            vc,
+            jnp.array(toks, jnp.int32),
+            jnp.array(pos, jnp.int32),
+            shared_bt,
+            PS,
+        )
+        for s in range(2):
+            shared_out[s].append(np.asarray(l[s]))
+            toks[s] = int(jnp.argmax(l[s]))
+            pos[s] += 1
+
+    # Unshared reference: each sequence alone in a private pool, the other
+    # slot parked on the garbage page.
+    for slot in range(2):
+        solo_bt = jnp.asarray(np.array([[1, 2], [0, 0]], np.int32))
+        kcs, vcs = paged_zero_caches()
+        l, kcs, vcs = admit(kcs, vcs, solo_bt[0:1])
+        want = [np.asarray(l[0])]
+        tok, p = firsts[slot], sp
+        for _ in range(3):
+            l, kcs, vcs = model.decode_slots_paged(
+                a,
+                params,
+                kcs,
+                vcs,
+                jnp.array([tok, 0], jnp.int32),
+                jnp.array([p, 0], jnp.int32),
+                solo_bt,
+                PS,
+            )
+            want.append(np.asarray(l[0]))
+            tok, p = int(jnp.argmax(l[0])), p + 1
+        for step, (g, w) in enumerate(zip(shared_out[slot], want)):
+            np.testing.assert_array_equal(g, w, err_msg=f"slot {slot} step {step}")
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel parity (kernel vs jnp oracle, and paged vs contiguous kernel
+# bit-equality — the tile-reassembly claim). Skips itself when the installed
+# jax cannot execute pallas interpret mode, exactly as in test_serving.py.
+# ---------------------------------------------------------------------------
+
+
+def _pallas_interpret_works():
+    try:
+        from compile.kernels.attention import flash_attention_fwd
+
+        z = jnp.zeros((1, 8, 4), jnp.float32)
+        flash_attention_fwd(z, z, z)
+        return True
+    except Exception:
+        return False
+
+
+pallas_parity = pytest.mark.skipif(
+    not _pallas_interpret_works(),
+    reason="pallas interpret mode unavailable under the installed jax",
+)
+
+
+@pallas_parity
+@pytest.mark.parametrize("seed", [0, 1])
+def test_paged_kernel_bit_matches_contiguous_kernel(seed):
+    """`decode_attention_paged` reassembles the contiguous kernel's block_k
+    tiles from whole pages, so its accumulation order — and its BITS — equal
+    `decode_attention_pb` over the gathered logical cache."""
+    a = RC.actor
+    bh = RC.batch * a.n_heads
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (bh, a.d_head), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, RC.seq_len, a.d_head))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, RC.seq_len, a.d_head))
+    pos = jnp.array([3, 3, RC.seq_len - 1, RC.seq_len - 1], jnp.int32)
+    kp, vp = scatter_pool(k, BT, RC.kv_pages), scatter_pool(v, BT, RC.kv_pages)
+
+    out = decode_attention_paged(q, kp, vp, pos, jnp.asarray(BT), PS)
+    want_kernel = decode_attention_pb(q, k, v, pos)
+    want_oracle = ref.decode_attention_pb_ref(q, k, v, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want_kernel))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_oracle), **TOL)
+
+
+@pallas_parity
+def test_paged_kernel_small_page_reassembly():
+    """page_size < block_k forces multi-page tile reassembly (concatenate
+    path); shapes chosen so block_k = 16 spans 4 pages of 4."""
+    h, b, dh, ps, mb = 2, 3, 8, 4, 4
+    smax, n_pages = mb * ps, b * mb + 1
+    bh = b * h
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (bh, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, smax, dh), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, smax, dh), jnp.float32)
+    # Non-identity page assignment, one private page set per slot.
+    perm = np.random.RandomState(3).permutation(np.arange(1, n_pages))
+    bt = perm.reshape(b, mb).astype(np.int32)
+    pool_k = np.zeros((h, n_pages * ps, dh), np.float32)
+    pool_v = np.zeros((h, n_pages * ps, dh), np.float32)
+    ck = np.asarray(k).reshape(b, h, smax, dh)
+    cv = np.asarray(v).reshape(b, h, smax, dh)
+    for s in range(b):
+        for blk in range(mb):
+            page = int(bt[s, blk])
+            pool_k[:, page * ps : (page + 1) * ps] = ck[s, :, blk * ps : (blk + 1) * ps]
+            pool_v[:, page * ps : (page + 1) * ps] = cv[s, :, blk * ps : (blk + 1) * ps]
+    pos = jnp.array([2, 2, 9, 9, smax - 1, smax - 1], jnp.int32)
+
+    out = decode_attention_paged(
+        q, jnp.asarray(pool_k), jnp.asarray(pool_v), pos, jnp.asarray(bt), ps
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(decode_attention_pb(q, k, v, pos))
+    )

@@ -173,13 +173,17 @@ fn run_fixed_batch(
 
 /// Iteration-level continuous batching over the same trace: arrivals are
 /// submitted as they land, the scheduler admits/retires at decode-step
-/// boundaries, and per-request budgets are honored exactly.
+/// boundaries, and per-request budgets are honored exactly. `prefix_lens`
+/// is each request's declared shared-prefix length (all zeros outside the
+/// prefix-heavy phase).
+#[allow(clippy::too_many_arguments)]
 fn run_continuous(
     name: &'static str,
     sched: &mut Scheduler<HybridEngine>,
     prompts: &[Prompt],
     budgets: &[usize],
     arrivals: &[f64],
+    prefix_lens: &[usize],
     sampler: &mut dyn SamplingBackend,
 ) -> anyhow::Result<PhaseResult> {
     let n = prompts.len();
@@ -200,6 +204,7 @@ fn run_continuous(
                 prompt: prompts[next].tokens.clone(),
                 max_new: budgets[next],
                 seed: None,
+                prefix_len: prefix_lens[next],
             })?;
             next += 1;
         }
@@ -260,6 +265,7 @@ fn run_chaos(
                 prompt: prompts[next].tokens.clone(),
                 max_new: budgets[next],
                 seed: None,
+                prefix_len: 0,
             })?;
             next += 1;
         }
@@ -356,6 +362,9 @@ fn main() -> anyhow::Result<()> {
     let sample_k = he.manifest().sample_k;
     let vocab = he.manifest().actor.vocab;
     let padded_ready = he.manifest().padded_prompts;
+    let paged_ready = he.manifest().has_paged_serving();
+    let page_size = he.manifest().page_size;
+    let no_prefix = vec![0usize; n_req];
     let mut sched = Scheduler::new(he)?;
     let cont = run_continuous(
         "continuous_host",
@@ -363,6 +372,7 @@ fn main() -> anyhow::Result<()> {
         &prompts,
         &budgets,
         &arrivals,
+        &no_prefix,
         &mut HostFullRow::new(greedy(), 0),
     )?;
     cont.print();
@@ -381,6 +391,7 @@ fn main() -> anyhow::Result<()> {
             &prompts,
             &budgets,
             &arrivals,
+            &no_prefix,
             &mut backend,
         )?;
         r.print();
@@ -411,6 +422,7 @@ fn main() -> anyhow::Result<()> {
             &mixed,
             &budgets,
             &arrivals,
+            &no_prefix,
             &mut HostFullRow::new(greedy(), 0),
         )?;
         r.print();
@@ -424,6 +436,58 @@ fn main() -> anyhow::Result<()> {
         Some((r, pad_frac, min_len))
     } else {
         println!("(artifacts lack the `padded_prompts` capability — mixed-length phase skipped)");
+        None
+    };
+
+    // Prefix-heavy phase: the same arrival discipline through the
+    // BLOCK-PAGED serving cache, every request carrying the same
+    // page-aligned system prompt (+ a unique tail when the geometry leaves
+    // room). The first admission computes and registers the prefix; later
+    // admissions map its pages — computed tokens fall below admitted
+    // tokens and the registry hit rate lands in the JSON.
+    let cont_prefix = if paged_ready {
+        let share = (sp / page_size) * page_size;
+        let mut prng = Rng::new(4242);
+        let system: Vec<i32> = task.sample_prompt(&mut prng).tokens[..share.min(sp)].to_vec();
+        let prefixed: Vec<Prompt> = (0..n_req)
+            .map(|_| {
+                let mut p = task.sample_prompt(&mut prng);
+                p.tokens[..system.len()].copy_from_slice(&system);
+                p
+            })
+            .collect();
+        let prefix_lens = vec![share; n_req];
+        let mut phe = sched.into_engine();
+        phe.use_paged_serving(true)?;
+        let mut psched = Scheduler::new(phe)?;
+        let r = run_continuous(
+            "continuous_prefix",
+            &mut psched,
+            &prefixed,
+            &budgets,
+            &arrivals,
+            &prefix_lens,
+            &mut HostFullRow::new(greedy(), 0),
+        )?;
+        r.print();
+        let pst = psched.stats.clone();
+        println!(
+            "continuous_prefix: admitted {} tokens, computed {} ({} reused), \
+             registry hit rate {:.0}% ({} hits / {} misses)",
+            pst.admitted_tokens(),
+            pst.computed_tokens(),
+            pst.reused_tokens,
+            100.0 * pst.cache_hit_rate(),
+            pst.prefix_hits,
+            pst.prefix_misses,
+        );
+        // Hand the engine back on the arena layout for the chaos phase.
+        let mut bhe = psched.into_engine();
+        bhe.use_paged_serving(false)?;
+        sched = Scheduler::new(bhe)?;
+        Some((r, pst))
+    } else {
+        println!("(artifacts lack the `paged_kv` capability — prefix-heavy phase skipped)");
         None
     };
 
@@ -519,6 +583,22 @@ fn main() -> anyhow::Result<()> {
         ),
         None => String::new(),
     };
+    let prefix_json = match &cont_prefix {
+        Some((r, pst)) => format!(
+            ",\n  \"continuous_prefix\": {},\n  \"prefix_admitted_tokens\": {},\n  \
+             \"prefix_computed_tokens\": {},\n  \"prefix_reused_tokens\": {},\n  \
+             \"prefix_cache_hit_rate\": {:.4},\n  \"prefix_hits\": {},\n  \
+             \"prefix_misses\": {}",
+            phase_json(r),
+            pst.admitted_tokens(),
+            pst.computed_tokens(),
+            pst.reused_tokens,
+            pst.cache_hit_rate(),
+            pst.prefix_hits,
+            pst.prefix_misses,
+        ),
+        None => String::new(),
+    };
     let chaos_json = match &chaos {
         Some((r, cst, inj)) => format!(
             ",\n  \"chaos\": {},\n  \"chaos_injected_prefill_faults\": {},\n  \
@@ -543,7 +623,7 @@ fn main() -> anyhow::Result<()> {
          \"n_requests\": {n_req},\n  \"arrival_rate_per_s\": {rate:.3},\n  \
          \"fixed_batch_t_gen_secs\": {t_gen:.6},\n  \"sample_k\": {sample_k},\n  \
          \"fixed_batch\": {},\n  \"continuous\": {},\n  \
-         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}{}\n  ,\n  \
+         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}{}{}\n  ,\n  \
          \"speedup_tok_per_sec\": {:.3},\n  \"p95_latency_ratio\": {:.3}\n}}\n",
         phase_json(&fixed),
         phase_json(&cont),
@@ -551,6 +631,7 @@ fn main() -> anyhow::Result<()> {
         st.decode_calls,
         device_json,
         mixed_json,
+        prefix_json,
         chaos_json,
         cont.tok_per_sec() / fixed.tok_per_sec().max(1e-9),
         cont.pct(0.95) / fixed.pct(0.95).max(1e-9),

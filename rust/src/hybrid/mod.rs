@@ -55,6 +55,17 @@
 //! no mode, so the rollout may score flushed experience groups while other
 //! slots keep decoding — only train steps flip modes (and free the
 //! serving cache).
+//!
+//! Serving has two cache layouts. The default ARENA gives each slot a
+//! contiguous `[smax]` row group (the `prefill_slot`/`decode_slots`
+//! artifacts). Opting in via [`HybridEngine::use_paged_serving`] switches
+//! the session to the BLOCK-PAGED pool (the `*_paged` artifacts +
+//! `paged_kv` manifest capability): K/V live in fixed-size pages behind
+//! refcounted per-slot block tables (`kv::PageLedger`), prompts are
+//! front-aligned instead of left-padded, and admissions declaring a
+//! shared prefix ([`Admission::prefix_len`]) map the prefix's pages
+//! copy-on-write instead of recomputing them — identical traffic decodes
+//! bit-identically on either layout.
 
 pub mod kv;
 pub mod memory;
@@ -70,7 +81,8 @@ use xla::{Literal, PjRtBuffer};
 
 use crate::data::{PairBatch, TokenBatch};
 use crate::runtime::{Artifact, ArtifactSet, Engine, HostTensor, ParamStore};
-use crate::sampling::{SampleOut, SamplingBackend, TrafficClass};
+use crate::sampling::{PendingRow, SampleOut, SamplingBackend, TrafficClass};
+use crate::serving::{Admission, AdmitOutcome, DecodeBatch};
 
 /// Which configuration the actor model is currently in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -187,6 +199,10 @@ pub struct HybridEngine {
     pub critic_opt: ParamStore,
     mode: EngineMode,
     kv: Option<KvCache>,
+    /// Serve from the block-paged KV pool instead of the per-slot arena
+    /// (see [`HybridEngine::use_paged_serving`]). Takes effect at the next
+    /// [`HybridEngine::begin_serving`].
+    paged_serving: bool,
     /// Pre-staged `[1]` position buffers for decode steps `0..gen_len`,
     /// uploaded once and re-fed every generate call (they are tiny and the
     /// positions are fixed by the manifest, so they survive mode flips).
@@ -248,6 +264,7 @@ impl HybridEngine {
             critic_opt,
             mode: EngineMode::Train,
             kv: None,
+            paged_serving: false,
             pos_bufs: Vec::new(),
             stats: PhaseStats::default(),
             memory,
@@ -363,15 +380,14 @@ impl HybridEngine {
     // Inference mode: experience generation
     // ------------------------------------------------------------------
 
-    /// Install freshly produced cache buffers as the live KV cache, keeping
-    /// the memory tracker balanced on inference re-entry (a second prefill
+    /// Install a freshly built cache as the live KV cache, keeping the
+    /// memory tracker balanced on inference re-entry (a second prefill
     /// without an intervening train flip replaces the live cache, so the
     /// old allocation must be released first).
-    fn install_kv(&mut self, kc: PjRtBuffer, vc: PjRtBuffer, dims: Vec<usize>) {
+    fn install_kv(&mut self, kv: KvCache) {
         if let Some(old) = self.kv.take() {
             self.memory.free("kv_cache", old.bytes());
         }
-        let kv = KvCache::from_buffers(kc, vc, dims, self.arts.manifest.batch);
         self.memory.alloc("kv_cache", kv.bytes());
         self.kv = Some(kv);
     }
@@ -541,10 +557,11 @@ impl HybridEngine {
         let vc = out.pop().unwrap();
         let kc = out.pop().unwrap();
 
-        self.install_kv(kc, vc, kv_dims);
+        let batch = self.arts.manifest.batch;
+        self.install_kv(KvCache::arena(kc, vc, kv_dims, batch));
         let pads: Vec<usize> = starts.iter().map(|&s| s as usize).collect();
         let valids: Vec<usize> = pads.iter().map(|&p| sp - p).collect();
-        self.kv.as_mut().unwrap().claim_all(&valids, &pads);
+        self.kv.as_mut().unwrap().alloc_all(&valids, &pads)?;
         let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
         Ok(sample)
@@ -582,6 +599,9 @@ impl HybridEngine {
         // wrong rows and desync the occupancy ledger.
         let sp = m.prompt_len;
         let uniform_depth = self.kv.as_ref().and_then(|kv| {
+            if kv.layout() != kv::KvLayout::Arena {
+                return None; // a paged pool advances via decode_slots only
+            }
             let d0 = kv.depth_of(0)?;
             if kv.pad_of(0) != Some(0) {
                 return None; // left-padded rows need decode_slots' starts
@@ -756,7 +776,13 @@ impl HybridEngine {
             if step + 1 == sg || done.iter().all(|d| *d) {
                 break;
             }
-            out = self.decode_slots(&toks, &pos, &step_starts, &active, traffic)?;
+            out = self.decode_slots(&DecodeBatch {
+                toks: &toks,
+                pos: &pos,
+                starts: &step_starts,
+                active: &active,
+                traffic,
+            })?;
         }
 
         self.stats.gen_secs = secs0 + t0.elapsed().as_secs_f64();
@@ -767,14 +793,35 @@ impl HybridEngine {
     // Inference mode: serving (iteration-level continuous batching)
     // ------------------------------------------------------------------
 
+    /// Opt the NEXT serving session into (or out of) the block-paged KV
+    /// pool. Requires the artifact set's `paged_kv` capability (the
+    /// `*_paged` entries + pool geometry in the manifest); the default
+    /// arena layout needs no opt-in, so every pre-paging caller and golden
+    /// is unaffected.
+    pub fn use_paged_serving(&mut self, on: bool) -> Result<()> {
+        if on {
+            self.arts.manifest.require_paged_kv()?;
+        }
+        self.paged_serving = on;
+        Ok(())
+    }
+
+    /// Whether the live/next serving session uses the block-paged pool
+    /// (the [`crate::serving::SlotEngine::paged`] capability bit).
+    pub fn serving_is_paged(&self) -> bool {
+        self.paged_serving
+    }
+
     /// Enter serving mode: flip to inference and install a zeroed KV cache
     /// with every slot free. The continuous-batching scheduler
     /// (`crate::serving`) then admits requests one slot at a time via
     /// [`HybridEngine::prefill_slot`] and advances all live slots per
     /// iteration via [`HybridEngine::decode_slots`].
     ///
-    /// The zero upload happens once per serving session; after that the
-    /// caches live on device until the next train-mode flip.
+    /// The cache is the per-slot arena by default, or the block-paged pool
+    /// after [`HybridEngine::use_paged_serving`]. The zero upload happens
+    /// once per serving session; after that the caches live on device
+    /// until the next train-mode flip.
     pub fn begin_serving(&mut self) -> Result<()> {
         // Fail early (not at first admission) if the artifact set predates
         // the serving entry points.
@@ -782,44 +829,60 @@ impl HybridEngine {
             e.context("artifacts predate continuous batching — re-run `make artifacts`")
         })?;
         self.arts.get("decode_slots")?;
+        if self.paged_serving {
+            self.arts.manifest.require_paged_kv()?;
+            let m = &self.arts.manifest;
+            let dims = KvCache::dims_for_paged(m);
+            let (batch, smax, ps, np) = (m.batch, m.seq_len, m.page_size, m.kv_pages);
+            self.enter(EngineMode::Inference);
+            let numel: usize = dims.iter().product();
+            let zeros = vec![0.0f32; numel];
+            let kc = self.engine.upload_f32(&zeros, &dims)?;
+            let vc = self.engine.upload_f32(&zeros, &dims)?;
+            self.install_kv(KvCache::paged(kc, vc, dims, batch, smax, ps, np));
+            return Ok(());
+        }
         let dims = KvCache::dims_for(&self.arts.manifest);
+        let batch = self.arts.manifest.batch;
         self.enter(EngineMode::Inference);
         let numel: usize = dims.iter().product();
         let zeros = vec![0.0f32; numel];
         let kc = self.engine.upload_f32(&zeros, &dims)?;
         let vc = self.engine.upload_f32(&zeros, &dims)?;
-        self.install_kv(kc, vc, dims);
+        self.install_kv(KvCache::arena(kc, vc, dims, batch));
         Ok(())
     }
 
     /// Admit one request into one free batch slot: run its prompt through
-    /// the `prefill_slot` (or `prefill_slot_sampled`) artifact, which
-    /// writes the slot's K/V rows in place (all other slots' rows pass
-    /// through untouched, so concurrent sequences keep their state).
-    /// Returns the slot's single-row sampling view (logits row, id, or
-    /// top-k candidates per the traffic class).
+    /// the `prefill_slot` family of artifacts, which write the slot's K/V
+    /// storage in place (all other slots' storage passes through
+    /// untouched, so concurrent sequences keep their state). Returns the
+    /// slot's [`AdmitOutcome`]: a single-row pending view (logits row, id,
+    /// or top-k candidates per the traffic class) plus the cache-reuse
+    /// report.
     ///
-    /// The prompt may be ANY length `1..=prompt_len`: a short prompt is
-    /// LEFT-PADDED into the fixed artifact shape and admitted with
-    /// valid start `prompt_len - len`, which the artifact uses to mask the
-    /// padding out of attention and shift position embeddings — the slot's
-    /// computation is bit-identical to the unpadded exact-length prompt.
-    /// Short prompts require the `padded_prompts` artifact capability
-    /// (admission bails with the rebuild command otherwise).
-    pub fn prefill_slot(
-        &mut self,
-        slot: usize,
-        prompt: &[i32],
-        traffic: TrafficClass,
-    ) -> Result<SampleOut> {
+    /// The prompt may be ANY length `1..=prompt_len`. On the arena layout
+    /// a short prompt is LEFT-PADDED into the fixed artifact shape and
+    /// admitted with valid start `prompt_len - len` (requires the
+    /// `padded_prompts` capability; the slot's computation is
+    /// bit-identical to the unpadded exact-length prompt). On the paged
+    /// layout the prompt is FRONT-ALIGNED (right-padded; the causal mask
+    /// hides the tail), block pages are drawn from the ledger — with the
+    /// page-aligned part of [`Admission::prefix_len`] mapped from the
+    /// shared-prefix registry on a hit — and a faulted artifact call frees
+    /// the admission's pages before returning the error.
+    pub fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
         let m = &self.arts.manifest;
         let (b, sp) = (m.batch, m.prompt_len);
         let padded_artifacts = m.padded_prompts;
+        let paged = self.paged_serving;
+        let prompt = adm.prompt;
+        let traffic = adm.traffic;
         let l = prompt.len();
         if l == 0 || l > sp {
             bail!("prefill_slot prompt must be 1..={sp} tokens, got {l}");
         }
-        if l < sp {
+        if l < sp && !paged {
             m.require_padded_prompts()?;
         }
         if slot >= b {
@@ -830,6 +893,9 @@ impl HybridEngine {
         }
         if let Some(held) = self.kv.as_ref().unwrap().len_of(slot) {
             bail!("prefill_slot: slot {slot} still holds a {held}-token sequence");
+        }
+        if paged {
+            return self.prefill_slot_paged(slot, adm);
         }
         let pad = sp - l;
         let t0 = Instant::now();
@@ -858,33 +924,103 @@ impl HybridEngine {
         let kc = out.pop().unwrap();
         let kv = self.kv.as_mut().unwrap();
         kv.update(kc, vc);
-        kv.claim(slot, l, pad)?;
+        kv.alloc(slot, l, pad)?;
         let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
-        Ok(sample)
+        Ok(AdmitOutcome::cold(PendingRow::from_row(sample.row(0))))
+    }
+
+    /// Paged admission tail of [`HybridEngine::prefill_slot`]: draw the
+    /// slot's block table from the ledger (shared-prefix pages mapped on a
+    /// registry hit), run the front-aligned prompt through the
+    /// `prefill_slot_paged` artifact family, and register the prefix for
+    /// later admissions only AFTER the call succeeded. Unlike the arena
+    /// path — where KV rows are claimed only after the artifact call — the
+    /// pages are allocated up front (the artifact needs the block table),
+    /// so a faulted call must free them here before the error propagates.
+    fn prefill_slot_paged(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
+        let t0 = Instant::now();
+        let plan = self
+            .kv
+            .as_mut()
+            .unwrap()
+            .alloc_shared(slot, adm.prompt, adm.prefix_len)?;
+        match self.prefill_slot_paged_call(slot, adm) {
+            Ok(sample) => {
+                if !plan.prefix_hit {
+                    self.kv
+                        .as_mut()
+                        .unwrap()
+                        .register_prefix(slot, adm.prefix_len, adm.prompt)?;
+                }
+                self.stats.gen_secs += t0.elapsed().as_secs_f64();
+                Ok(AdmitOutcome {
+                    pending: PendingRow::from_row(sample.row(0)),
+                    reused_tokens: plan.reused_tokens,
+                    prefix_hit: plan.prefix_hit,
+                })
+            }
+            Err(e) => {
+                // The pages were drawn before the call (the artifact needs
+                // the block table): hand them back so a faulted admission
+                // leaks nothing.
+                let _ = self.kv.as_mut().unwrap().free(slot);
+                Err(e)
+            }
+        }
+    }
+
+    /// The fallible middle of [`HybridEngine::prefill_slot_paged`]: upload
+    /// the front-aligned prompt + block table, run the artifact, adopt the
+    /// returned cache pair, and fetch the slot's sampling row. Split out
+    /// so its caller can free the admission's pages on ANY error here.
+    fn prefill_slot_paged_call(&mut self, slot: usize, adm: &Admission) -> Result<SampleOut> {
+        let sp = self.arts.manifest.prompt_len;
+        let l = adm.prompt.len();
+        let (art, n_out) = self.gen_artifact("prefill_slot_paged", adm.traffic)?;
+        let name = art.name.clone();
+        // Front-aligned: real tokens first, PAD tail (causally inert).
+        let mut padded = vec![crate::data::synthetic::Vocab::PAD; sp];
+        padded[..l].copy_from_slice(adm.prompt);
+        let prompt_buf = self.engine.upload_i32(&padded, &[1, sp])?;
+        let kv = self.kv.as_ref().unwrap();
+        let table = kv.block_table(slot).expect("alloc_shared left no table");
+        let mb = table.len();
+        let bt: Vec<i32> = table.iter().map(|&p| p as i32).collect();
+        let bt_buf = self.engine.upload_i32(&bt, &[1, mb])?;
+        let last_buf = self.engine.upload_i32(&[l as i32 - 1], &[1])?;
+        let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
+        inputs.push(&kv.k);
+        inputs.push(&kv.v);
+        inputs.push(&prompt_buf);
+        inputs.push(&bt_buf);
+        inputs.push(&last_buf);
+        let mut out = art.call_to_buffers(&inputs, n_out)?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        self.kv.as_mut().unwrap().update(kc, vc);
+        self.fetch_sample(&name, adm.traffic, &out)
     }
 
     /// One continuous-batching decode step: advance every `active` slot by
-    /// one token at its OWN position (`pos[slot]` = cache row the fed token
-    /// is written at, which must equal the slot's depth `pad + valid`).
-    /// `starts[slot]` is the slot's valid start (the left-pad width its
-    /// prompt was admitted with; 0 for exact-length prompts and dead
-    /// rows) — the artifact masks cache entries before it out of attention
-    /// and embeds the token at logical position `pos - start`. Inactive
-    /// slots are fed PAD at position 0 — their rows are dead and the next
-    /// admission's prefill overwrites them. Returns the batch's sampling
-    /// view; only the active rows are meaningful.
-    pub fn decode_slots(
-        &mut self,
-        toks: &[i32],
-        pos: &[i32],
-        starts: &[i32],
-        active: &[bool],
-        traffic: TrafficClass,
-    ) -> Result<SampleOut> {
+    /// one token at its OWN position (`batch.pos[slot]` = logical cache
+    /// row the fed token is written at, which must equal the slot's depth
+    /// `pad + valid`). On the arena layout `batch.starts[slot]` is the
+    /// slot's valid start (left-pad width; the artifact masks cache
+    /// entries before it out of attention and embeds the token at logical
+    /// position `pos - start`); on the paged layout starts must be all
+    /// zero and the artifact takes each slot's block table instead —
+    /// INACTIVE slots get the all-zero garbage-page row, never their old
+    /// table, so a dead row's PAD write can only land in storage no live
+    /// slot maps. Inactive slots are fed PAD at position 0. Returns the
+    /// batch's sampling view; only the active rows are meaningful.
+    pub fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
         let m = &self.arts.manifest;
         let b = m.batch;
         let padded_artifacts = m.padded_prompts;
+        let paged = self.paged_serving;
+        let (toks, pos, starts, active) = (batch.toks, batch.pos, batch.starts, batch.active);
+        let traffic = batch.traffic;
         if toks.len() != b || pos.len() != b || starts.len() != b || active.len() != b {
             bail!(
                 "decode_slots wants [{b}] toks/pos/starts/active, got {}/{}/{}/{}",
@@ -894,30 +1030,54 @@ impl HybridEngine {
                 active.len()
             );
         }
-        if !padded_artifacts && starts.iter().any(|&s| s != 0) {
+        if paged {
+            if starts.iter().any(|&s| s != 0) {
+                bail!("decode_slots: paged serving is front-aligned — nonzero valid start");
+            }
+        } else if !padded_artifacts && starts.iter().any(|&s| s != 0) {
             m.require_padded_prompts()?;
         }
         if self.mode != EngineMode::Inference || self.kv.is_none() {
             bail!("decode_slots requires serving mode (call begin_serving first)");
         }
         let t0 = Instant::now();
-        let (art, n_out) = self.gen_artifact("decode_slots", traffic)?;
+        let base = if paged { "decode_slots_paged" } else { "decode_slots" };
+        let (art, n_out) = self.gen_artifact(base, traffic)?;
         let name = art.name.clone();
         let tok_buf = self.engine.upload_i32(toks, &[b])?;
         let pos_buf = self.engine.upload_i32(pos, &[b])?;
-        let start_buf = if padded_artifacts {
+        let kv = self.kv.as_ref().unwrap();
+        let extra_buf: Option<PjRtBuffer> = if paged {
+            // Flat [b, blocks_per_slot] block tables: live slots map their
+            // own pages; dead rows map the garbage page (page 0) so their
+            // PAD write cannot corrupt any live slot's storage.
+            let mb = kv.ledger.blocks_per_slot();
+            let mut bt = vec![0i32; b * mb];
+            for slot in 0..b {
+                if !active[slot] {
+                    continue;
+                }
+                let Some(row) = kv.block_table(slot) else {
+                    bail!("decode_slots: active slot {slot} has no block table");
+                };
+                for (j, &p) in row.iter().enumerate() {
+                    bt[slot * mb + j] = p as i32;
+                }
+            }
+            Some(self.engine.upload_i32(&bt, &[b, mb])?)
+        } else if padded_artifacts {
             Some(self.engine.upload_i32(starts, &[b])?)
         } else {
+            // Pre-capability arena artifacts take no starts input.
             None
         };
-        let kv = self.kv.as_ref().unwrap();
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.push(&kv.k);
         inputs.push(&kv.v);
         inputs.push(&tok_buf);
         inputs.push(&pos_buf);
-        if let Some(sb) = &start_buf {
-            inputs.push(sb);
+        if let Some(eb) = &extra_buf {
+            inputs.push(eb);
         }
         let mut out = art.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
@@ -926,19 +1086,22 @@ impl HybridEngine {
         // output handles (see the runtime contract note).
         let kv = self.kv.as_mut().unwrap();
         kv.update(kc, vc);
-        kv.advance_where(active, pos)?;
+        kv.advance(active, pos)?;
         let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
         Ok(sample)
     }
 
-    /// Retire a finished sequence: its K/V rows become dead and the slot is
-    /// immediately reusable by the next admission.
+    /// Retire a finished sequence: on the arena layout its K/V rows become
+    /// dead; on the paged layout its pages drop one reference each and
+    /// return to the free list unless a registered prefix (or another
+    /// slot sharing them) still holds them. The slot is immediately
+    /// reusable by the next admission.
     pub fn release_slot(&mut self, slot: usize) -> Result<()> {
         let Some(kv) = self.kv.as_mut() else {
             bail!("release_slot: no live KV cache");
         };
-        kv.release(slot)
+        kv.free(slot)
     }
 
     /// Free slots currently available for admission (serving mode).

@@ -134,6 +134,7 @@ impl RolloutEngine {
                 prompt: prompt.clone(),
                 max_new: budgets[id],
                 seed: Some(request_seed(self.seed, id as u64)),
+                prefix_len: 0,
             })?;
         }
         while !sched.is_idle() {
@@ -153,9 +154,8 @@ impl RolloutEngine {
 mod tests {
     use super::*;
     use crate::data::synthetic::Vocab;
-    use crate::sampling::{
-        HostFullRow, PendingRow, SampleOut, SamplerConfig, TrafficClass,
-    };
+    use crate::sampling::{HostFullRow, PendingRow, SampleOut, SamplerConfig};
+    use crate::serving::{Admission, AdmitOutcome, DecodeBatch};
     use anyhow::Result;
 
     const VOCAB: usize = 32;
@@ -216,34 +216,22 @@ mod tests {
             true // the scripted plans work at any prompt length
         }
 
-        fn prefill_slot(
-            &mut self,
-            slot: usize,
-            prompt: &[i32],
-            _traffic: TrafficClass,
-        ) -> Result<PendingRow> {
+        fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
             assert!(self.plans[slot].is_none(), "prefill into busy slot {slot}");
-            let n = prompt[0] as usize;
+            let n = adm.prompt[0] as usize;
             let plan: Vec<i32> = (0..SG + 2)
                 .map(|j| if j < n { CONTENT } else { Vocab::EOS })
                 .collect();
             let row = PendingRow::Logits(self.logits_for(plan[0]));
             self.plans[slot] = Some((plan, 1));
             self.prefills.push(slot);
-            Ok(row)
+            Ok(AdmitOutcome::cold(row))
         }
 
-        fn decode_slots(
-            &mut self,
-            _toks: &[i32],
-            _pos: &[i32],
-            _starts: &[i32],
-            active: &[bool],
-            _traffic: TrafficClass,
-        ) -> Result<SampleOut> {
+        fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
             let mut data = vec![0.0f32; self.n_slots * VOCAB];
             for slot in 0..self.n_slots {
-                if !active[slot] {
+                if !batch.active[slot] {
                     continue;
                 }
                 let (plan, cur) = self.plans[slot].as_mut().expect("active free slot");

@@ -61,6 +61,19 @@ pub struct Manifest {
     /// before the capability existed — those can only admit exact-length
     /// prompts.
     pub padded_prompts: bool,
+    /// True when the artifact set carries the block-paged serving entries
+    /// (`prefill_slot_paged` / `decode_slots_paged` families): the KV cache
+    /// is a physical page pool `[n_layers, n_heads, kv_pages * page_size,
+    /// d_head]` addressed through per-slot block tables, so retired pages
+    /// return to a free list and pages holding a shared prompt prefix are
+    /// mapped into several tables at once. False for artifact sets built
+    /// before the capability existed — those only support the arena cache.
+    pub paged_kv: bool,
+    /// Tokens per KV page of the paged serving path (0 when `paged_kv` is
+    /// false).
+    pub page_size: usize,
+    /// Physical pages in the paged pool (0 when `paged_kv` is false).
+    pub kv_pages: usize,
     pub actor: ModelConfig,
     pub critic: ModelConfig,
     pub actor_params: Vec<TensorSpec>,
@@ -166,6 +179,9 @@ impl Manifest {
                 .get("padded_prompts")
                 .and_then(|v| v.as_bool())
                 .unwrap_or(false),
+            paged_kv: cfg.get("paged_kv").and_then(|v| v.as_bool()).unwrap_or(false),
+            page_size: cfg.get("page_size").and_then(|v| v.as_usize()).unwrap_or(0),
+            kv_pages: cfg.get("kv_pages").and_then(|v| v.as_usize()).unwrap_or(0),
             actor: model_config(cfg.at("actor"))?,
             critic: model_config(cfg.at("critic"))?,
             actor_params: tensor_specs(j.at("actor_params"))?,
@@ -193,6 +209,31 @@ impl Manifest {
     /// serving artifact is added in ONE place).
     pub fn has_serving(&self) -> bool {
         self.artifacts.contains_key("prefill_slot") && self.artifacts.contains_key("decode_slots")
+    }
+
+    /// True when the artifact set carries the BLOCK-PAGED serving entry
+    /// points alongside the `paged_kv` capability flag — the gate for the
+    /// paged serving path, its goldens, and the prefix-reuse bench phase.
+    pub fn has_paged_serving(&self) -> bool {
+        self.paged_kv
+            && self.artifacts.contains_key("prefill_slot_paged")
+            && self.artifacts.contains_key("decode_slots_paged")
+    }
+
+    /// Bail with a rebuild hint unless the artifact set supports the
+    /// block-paged KV cache. Arena-era artifacts have no block-table
+    /// inputs, so paged serving (and shared-prefix reuse) cannot run
+    /// against them.
+    pub fn require_paged_kv(&self) -> Result<()> {
+        if !self.has_paged_serving() {
+            bail!(
+                "artifacts ({}) predate the block-paged KV cache: the manifest lacks the \
+                 `paged_kv` capability (or the `*_paged` serving entries), so paged serving \
+                 and shared-prefix reuse are unavailable — re-run `make artifacts`",
+                self.run,
+            );
+        }
+        Ok(())
     }
 
     /// Bail with a rebuild hint unless the artifact set can admit prompts
@@ -224,6 +265,27 @@ impl Manifest {
                 self.sample_k,
                 self.actor.vocab
             );
+        }
+        if self.paged_kv {
+            if self.page_size == 0 || self.seq_len % self.page_size != 0 {
+                bail!(
+                    "paged_kv: page_size {} must be nonzero and divide seq_len {}",
+                    self.page_size,
+                    self.seq_len
+                );
+            }
+            // Every slot's full window, plus one spare slot's worth for warm
+            // prefixes, plus the reserved garbage page 0 (configs.py).
+            let want = (self.batch + 1) * (self.seq_len / self.page_size) + 1;
+            if self.kv_pages < want {
+                bail!(
+                    "paged_kv: kv_pages {} cannot hold {} slots of {} blocks (+spare +garbage; \
+                     need >= {want})",
+                    self.kv_pages,
+                    self.batch,
+                    self.seq_len / self.page_size
+                );
+            }
         }
         let actor_numel: usize = self.actor_params.iter().map(|t| t.numel()).sum();
         if actor_numel as u64 != self.actor.n_params() {
@@ -288,6 +350,11 @@ mod tests {
         assert_eq!(m.sample_k, 0);
         assert!(a.donates.is_empty());
         assert!(!m.padded_prompts);
+        // Pre-paging manifests parse with the block-paged path unavailable.
+        assert!(!m.paged_kv);
+        assert_eq!(m.page_size, 0);
+        assert_eq!(m.kv_pages, 0);
+        assert!(!m.has_paged_serving());
         assert!(m.artifact("nope").is_err());
     }
 
@@ -310,6 +377,73 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert!(m.padded_prompts);
         m.require_padded_prompts().unwrap();
+    }
+
+    #[test]
+    fn paged_serving_needs_capability_flag_and_entries() {
+        // Arena-era manifests refuse paged serving with the rebuild
+        // command; the capability needs BOTH the flag and the `*_paged`
+        // entries (a flag without entries is a broken build).
+        let dir = std::env::temp_dir().join("dschat_manifest_paged_test");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let msg = format!("{:#}", m.require_paged_kv().unwrap_err());
+        assert!(msg.contains("make artifacts"), "{msg}");
+        assert!(msg.contains("paged_kv"), "{msg}");
+
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        // Flag + geometry, but no *_paged artifacts yet: still refused.
+        let flagged = text.replacen(
+            "\"batch\": 2,",
+            "\"batch\": 2, \"paged_kv\": true, \"page_size\": 4, \"kv_pages\": 7,",
+            1,
+        );
+        std::fs::write(dir.join("manifest.json"), &flagged).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.paged_kv);
+        assert_eq!((m.page_size, m.kv_pages), (4, 7));
+        assert!(!m.has_paged_serving());
+        assert!(m.require_paged_kv().is_err());
+
+        // Flag + entries: the paged path is available.
+        let with_entries = flagged.replacen(
+            "\"sft_step\": {",
+            r#""prefill_slot_paged": {"file": "p.hlo.txt", "inputs": [], "outputs": [], "hlo_bytes": 1},
+               "decode_slots_paged": {"file": "d.hlo.txt", "inputs": [], "outputs": [], "hlo_bytes": 1},
+               "sft_step": {"#,
+            1,
+        );
+        std::fs::write(dir.join("manifest.json"), &with_entries).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.has_paged_serving());
+        m.require_paged_kv().unwrap();
+    }
+
+    #[test]
+    fn paged_geometry_is_validated() {
+        // page_size must divide seq_len and kv_pages must cover every slot
+        // plus the spare and the garbage page.
+        let dir = std::env::temp_dir().join("dschat_manifest_paged_geom_test");
+        write_fake_manifest(&dir);
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        // seq_len 8, batch 2: page_size 4 -> 2 blocks/slot, need (2+1)*2+1 = 7.
+        let bad_div = text.replacen(
+            "\"batch\": 2,",
+            "\"batch\": 2, \"paged_kv\": true, \"page_size\": 3, \"kv_pages\": 7,",
+            1,
+        );
+        std::fs::write(dir.join("manifest.json"), &bad_div).unwrap();
+        let msg = format!("{:#}", Manifest::load(&dir).unwrap().validate().unwrap_err());
+        assert!(msg.contains("divide seq_len"), "{msg}");
+
+        let too_few = text.replacen(
+            "\"batch\": 2,",
+            "\"batch\": 2, \"paged_kv\": true, \"page_size\": 4, \"kv_pages\": 6,",
+            1,
+        );
+        std::fs::write(dir.join("manifest.json"), &too_few).unwrap();
+        let msg = format!("{:#}", Manifest::load(&dir).unwrap().validate().unwrap_err());
+        assert!(msg.contains("kv_pages"), "{msg}");
     }
 
     #[test]

@@ -27,8 +27,8 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::sampling::{PendingRow, SampleOut, TrafficClass};
-use crate::serving::SlotEngine;
+use crate::sampling::SampleOut;
+use crate::serving::{Admission, AdmitOutcome, DecodeBatch, SlotEngine};
 use crate::util::rng::Rng;
 
 /// Fault schedule for a [`ChaosEngine`]. Defaults inject nothing.
@@ -134,6 +134,10 @@ impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
         self.inner.supports_padded_prompts()
     }
 
+    fn paged(&self) -> bool {
+        self.inner.paged()
+    }
+
     fn begin_serving(&mut self) -> Result<()> {
         for l in self.live.iter_mut() {
             *l = false;
@@ -141,12 +145,7 @@ impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
         self.inner.begin_serving()
     }
 
-    fn prefill_slot(
-        &mut self,
-        slot: usize,
-        prompt: &[i32],
-        traffic: TrafficClass,
-    ) -> Result<PendingRow> {
+    fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
         self.injected.prefill_calls += 1;
         if self.cfg.broken_slots.contains(&slot) {
             self.injected.prefill_faults += 1;
@@ -158,19 +157,12 @@ impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
             self.injected.prefill_faults += 1;
             bail!("chaos: transient prefill fault (call {})", self.injected.prefill_calls);
         }
-        let out = self.inner.prefill_slot(slot, prompt, traffic)?;
+        let out = self.inner.prefill_slot(slot, adm)?;
         self.live[slot] = true;
         Ok(out)
     }
 
-    fn decode_slots(
-        &mut self,
-        toks: &[i32],
-        pos: &[i32],
-        starts: &[i32],
-        active: &[bool],
-        traffic: TrafficClass,
-    ) -> Result<SampleOut> {
+    fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
         self.injected.decode_calls += 1;
         if self.roll(self.cfg.slow_tick_p) {
             self.injected.slow_ticks += 1;
@@ -182,7 +174,7 @@ impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
             self.injected.decode_faults += 1;
             bail!("chaos: transient decode fault (call {})", self.injected.decode_calls);
         }
-        self.inner.decode_slots(toks, pos, starts, active, traffic)
+        self.inner.decode_slots(batch)
     }
 
     fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -206,6 +198,7 @@ impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sampling::{PendingRow, TrafficClass};
 
     /// Minimal inner engine: counts calls, never fails itself.
     struct Flat {
@@ -228,26 +221,14 @@ mod tests {
             8
         }
 
-        fn prefill_slot(
-            &mut self,
-            _slot: usize,
-            _prompt: &[i32],
-            _traffic: TrafficClass,
-        ) -> Result<PendingRow> {
+        fn prefill_slot(&mut self, _slot: usize, _adm: &Admission) -> Result<AdmitOutcome> {
             self.prefills += 1;
-            Ok(PendingRow::Id(1))
+            Ok(AdmitOutcome::cold(PendingRow::Id(1)))
         }
 
-        fn decode_slots(
-            &mut self,
-            toks: &[i32],
-            _pos: &[i32],
-            _starts: &[i32],
-            _active: &[bool],
-            _traffic: TrafficClass,
-        ) -> Result<SampleOut> {
+        fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
             self.decodes += 1;
-            Ok(SampleOut::Ids(vec![1; toks.len()]))
+            Ok(SampleOut::Ids(vec![1; batch.toks.len()]))
         }
 
         fn release_slot(&mut self, _slot: usize) -> Result<()> {
@@ -266,13 +247,16 @@ mod tests {
             flat(2),
             ChaosConfig { fault_every_decode: 3, ..Default::default() },
         );
-        let toks = [1, 1];
-        let pos = [0, 0];
-        let starts = [0, 0];
-        let active = [true, true];
+        let batch = DecodeBatch {
+            toks: &[1, 1],
+            pos: &[0, 0],
+            starts: &[0, 0],
+            active: &[true, true],
+            traffic: TrafficClass::DeviceIds,
+        };
         let mut faults = 0;
         for _ in 0..9 {
-            if e.decode_slots(&toks, &pos, &starts, &active, TrafficClass::DeviceIds).is_err() {
+            if e.decode_slots(&batch).is_err() {
                 faults += 1;
             }
         }
@@ -288,10 +272,12 @@ mod tests {
             flat(2),
             ChaosConfig { broken_slots: vec![0], ..Default::default() },
         );
+        let adm =
+            Admission { prompt: &[1; 4], prefix_len: 0, traffic: TrafficClass::DeviceIds };
         for _ in 0..3 {
-            assert!(e.prefill_slot(0, &[1; 4], TrafficClass::DeviceIds).is_err());
+            assert!(e.prefill_slot(0, &adm).is_err());
         }
-        assert!(e.prefill_slot(1, &[1; 4], TrafficClass::DeviceIds).is_ok());
+        assert!(e.prefill_slot(1, &adm).is_ok());
         assert_eq!(e.injected.prefill_faults, 3);
         assert_eq!(e.inner.prefills, 1, "broken-slot calls never reach inner");
         // Best-effort release of the never-admitted slot stays here.
@@ -309,11 +295,14 @@ mod tests {
                 flat(1),
                 ChaosConfig { seed, decode_fault_p: 0.3, ..Default::default() },
             );
-            (0..32)
-                .map(|_| {
-                    e.decode_slots(&[1], &[0], &[0], &[true], TrafficClass::DeviceIds).is_err()
-                })
-                .collect::<Vec<_>>()
+            let batch = DecodeBatch {
+                toks: &[1],
+                pos: &[0],
+                starts: &[0],
+                active: &[true],
+                traffic: TrafficClass::DeviceIds,
+            };
+            (0..32).map(|_| e.decode_slots(&batch).is_err()).collect::<Vec<_>>()
         };
         assert_eq!(run(7), run(7), "same seed, same schedule");
         assert_ne!(run(7), run(8), "different seed, different schedule");

@@ -39,26 +39,60 @@
 //! (and any `&mut E` borrows a scheduler for one phase — the rollout
 //! subsystem's shape).
 //!
-//! # Variable prompt lengths (the left-padding/masking contract)
+//! # Variable prompt lengths (the two alignment contracts)
 //!
 //! The AOT artifacts are fixed-shape, but admitted prompts are NOT: any
-//! request of true length `1..=prompt_len` is accepted. A short prompt is
-//! LEFT-PADDED into the fixed prompt window with `pad = prompt_len - len`
-//! dead entries at the front, and the per-row **valid start** (`= pad`) is
-//! threaded to the artifacts, which mask cache entries before it out of
-//! attention and shift position embeddings so real token `j` is embedded
-//! at logical position `j` — the padded computation is bit-identical to
-//! running the unpadded prompt at its exact length (pinned by the
-//! mixed-length goldens in `rust/tests/integration_serving.rs` and the
-//! pytest oracle suite). Left-alignment at the window's right edge means
-//! every slot's next cache write is at `prompt_len`, keeping per-slot
-//! positions simple: a slot's decode position is `pad + true_len`. All
-//! length accounting ([`SchedStats`], `KvCache` occupancy,
-//! [`Completion`]) counts VALID tokens only; the padded-entry overhead is
-//! tracked separately ([`SchedStats::pad_fraction`]) for the serve bench.
-//! Short prompts require the artifact set's `padded_prompts` capability
-//! ([`SlotEngine::supports_padded_prompts`]) — submission bails with the
-//! rebuild command against pre-capability artifacts.
+//! request of true length `1..=prompt_len` is accepted. How a short
+//! prompt rides the fixed shape depends on the engine's cache layout
+//! ([`SlotEngine::paged`]):
+//!
+//! * **Arena engines LEFT-PAD**: `pad = prompt_len - len` dead entries at
+//!   the front, and the per-row **valid start** (`= pad`) is threaded to
+//!   the artifacts, which mask cache entries before it out of attention
+//!   and shift position embeddings so real token `j` is embedded at
+//!   logical position `j` — the padded computation is bit-identical to
+//!   running the unpadded prompt at its exact length (pinned by the
+//!   mixed-length goldens in `rust/tests/integration_serving.rs` and the
+//!   pytest oracle suite). Left-alignment at the window's right edge means
+//!   every slot's next cache write is at `prompt_len`; a slot's decode
+//!   position is `pad + true_len`. Short prompts require the artifact
+//!   set's `padded_prompts` capability
+//!   ([`SlotEngine::supports_padded_prompts`]) — submission bails with
+//!   the rebuild command against pre-capability artifacts.
+//! * **Paged engines FRONT-ALIGN**: real token `j` sits at logical row
+//!   `j`, the window's TAIL is the dead region (the causal mask keeps
+//!   rows `0..len` blind to it), and `pad` is always 0 — so decode
+//!   positions are just `len(tokens) - 1` and every valid start is 0.
+//!   Front alignment is what makes a shared prompt PREFIX occupy the same
+//!   logical rows in every slot that shares it, which is what lets block
+//!   tables map one physical page into many slots (see below). The paged
+//!   artifacts bit-match the arena ones for identical traffic (pinned by
+//!   the paged goldens in `python/tests/test_paged.py` and
+//!   `rust/tests/integration_serving.rs`).
+//!
+//! In both contracts all length accounting ([`SchedStats`], `KvCache`
+//! occupancy, [`Completion`]) counts VALID tokens only; arena padding
+//! overhead is tracked separately ([`SchedStats::pad_fraction`]) for the
+//! serve bench.
+//!
+//! # Block-paged serving and shared-prefix reuse
+//!
+//! A paged engine keeps K/V in a pool of fixed-size pages behind
+//! refcounted per-slot block tables (`crate::hybrid::kv::PageLedger`).
+//! Admission goes through the [`Admission`] descriptor: a request may
+//! declare [`Request::prefix_len`] — the length of a prompt prefix shared
+//! with other requests (a common system prompt). The engine hashes the
+//! page-aligned prefix; on a registry hit the prefix's pages are MAPPED
+//! into the new slot's block table instead of being recomputed-from-cold,
+//! and the admission's [`AdmitOutcome::reused_tokens`] reports how many
+//! prompt tokens were served from cache. The scheduler folds those into
+//! [`SchedStats::reused_tokens`] / [`SchedStats::prefix_hits`] /
+//! [`SchedStats::cache_hit_rate`] — the serve bench's
+//! computed-vs-admitted saving. Sharing never changes bytes: a hit
+//! rewrites the shared pages with bit-identical values and decode writes
+//! land past the prompt region in private pages, so completions are
+//! bit-identical with sharing on or off (pinned by the prefix goldens).
+//! Arena engines ignore `prefix_len` and always report zero reuse.
 //!
 //! The scheduler serves two consumers: the serve loop (one request per
 //! client, completions returned per step) and RLHF experience generation
@@ -120,6 +154,61 @@ use crate::hybrid::HybridEngine;
 use crate::sampling::{PendingRow, SampleOut, SamplingBackend, TrafficClass};
 use crate::util::rng::Rng;
 
+/// Everything one admission needs, in one descriptor (the per-argument
+/// `prefill_slot(slot, prompt, traffic)` signature stopped scaling when
+/// shared-prefix admission arrived — adding fields here no longer breaks
+/// every engine impl).
+#[derive(Debug, Clone, Copy)]
+pub struct Admission<'a> {
+    /// The prompt's TRUE tokens (any length `1..=prompt_len`, no padding).
+    pub prompt: &'a [i32],
+    /// Length of the prompt prefix shared with other requests (see
+    /// [`Request::prefix_len`]); 0 = nothing shared. Arena engines ignore
+    /// it.
+    pub prefix_len: usize,
+    /// Which artifact family / pending-row shape the admission produces.
+    pub traffic: TrafficClass,
+}
+
+/// One fused decode step over every slot, as a typed batch (replaces the
+/// four parallel slices the old `decode_slots` took positionally — the
+/// call sites were unreadable and unextendable).
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeBatch<'a> {
+    /// Per slot: the newest sampled token (PAD for dead rows).
+    pub toks: &'a [i32],
+    /// Per slot: logical cache row the token writes at (`pad + len - 1`;
+    /// 0 for dead rows).
+    pub pos: &'a [i32],
+    /// Per slot: valid start = left-pad width (always 0 on paged engines
+    /// and dead rows).
+    pub starts: &'a [i32],
+    /// Per slot: whether the row carries a live sequence.
+    pub active: &'a [bool],
+    pub traffic: TrafficClass,
+}
+
+/// What an admission produced: the slot's first pending row plus the
+/// engine's cache-reuse report.
+#[derive(Debug, Clone)]
+pub struct AdmitOutcome {
+    /// Sampling view predicting the first generated token (logits, id, or
+    /// top-k candidates per the traffic class).
+    pub pending: PendingRow,
+    /// Prompt tokens served from a shared-prefix cache hit instead of
+    /// being computed from cold (0 on arena engines and registry misses).
+    pub reused_tokens: usize,
+    /// Whether a shared-prefix registry hit backed this admission.
+    pub prefix_hit: bool,
+}
+
+impl AdmitOutcome {
+    /// The no-reuse outcome every non-paged engine returns.
+    pub fn cold(pending: PendingRow) -> AdmitOutcome {
+        AdmitOutcome { pending, reused_tokens: 0, prefix_hit: false }
+    }
+}
+
 /// What the scheduler needs from a generation engine with per-slot state.
 /// (Row strides are carried by [`SampleOut`]/[`PendingRow`] themselves, so
 /// the engine no longer exposes a vocab size here.)
@@ -127,8 +216,9 @@ pub trait SlotEngine {
     /// Number of batch slots (the artifact batch size).
     fn n_slots(&self) -> usize;
     /// The fixed prompt window of the AOT shapes — the CAP on admitted
-    /// prompt lengths. Shorter prompts are left-padded up to it (see the
-    /// module docs' padding/masking contract).
+    /// prompt lengths. Shorter prompts are left-padded (arena) or
+    /// front-aligned (paged) up to it (see the module docs' alignment
+    /// contracts).
     fn prompt_len(&self) -> usize;
     /// Hard cap on generated tokens per sequence (KV-cache capacity).
     fn max_new_tokens(&self) -> usize;
@@ -142,31 +232,24 @@ pub trait SlotEngine {
     fn supports_padded_prompts(&self) -> bool {
         false
     }
+    /// Whether the engine serves from a block-paged cache (front-aligned
+    /// prompts, `pad == 0`, shared-prefix reuse; see the module docs).
+    /// Paged engines admit short prompts without the `padded_prompts`
+    /// capability — the causal mask, not a valid-start, hides the dead
+    /// tail.
+    fn paged(&self) -> bool {
+        false
+    }
     /// Enter serving mode (install an empty per-slot cache).
     fn begin_serving(&mut self) -> Result<()> {
         Ok(())
     }
-    /// Admit one prompt (any length `1..=prompt_len`) into a free slot;
-    /// returns its pending row (logits, id, or top-k candidates per the
-    /// traffic class).
-    fn prefill_slot(
-        &mut self,
-        slot: usize,
-        prompt: &[i32],
-        traffic: TrafficClass,
-    ) -> Result<PendingRow>;
-    /// Advance every `active` slot by one token at its own position;
-    /// `starts[slot]` is the slot's valid start (left-pad width; 0 for
-    /// exact-length prompts and dead rows). Returns the batch's sampling
-    /// view (only active rows meaningful).
-    fn decode_slots(
-        &mut self,
-        toks: &[i32],
-        pos: &[i32],
-        starts: &[i32],
-        active: &[bool],
-        traffic: TrafficClass,
-    ) -> Result<SampleOut>;
+    /// Admit one prompt into a free slot; returns the slot's pending row
+    /// plus the engine's cache-reuse report.
+    fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome>;
+    /// Advance every `active` slot by one token at its own position.
+    /// Returns the batch's sampling view (only active rows meaningful).
+    fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut>;
     /// Retire a finished sequence, freeing its slot for the next admission.
     fn release_slot(&mut self, slot: usize) -> Result<()>;
     /// Accounting hook: `n` tokens were sampled this step.
@@ -195,28 +278,20 @@ impl<E: SlotEngine> SlotEngine for &mut E {
         (**self).supports_padded_prompts()
     }
 
+    fn paged(&self) -> bool {
+        (**self).paged()
+    }
+
     fn begin_serving(&mut self) -> Result<()> {
         (**self).begin_serving()
     }
 
-    fn prefill_slot(
-        &mut self,
-        slot: usize,
-        prompt: &[i32],
-        traffic: TrafficClass,
-    ) -> Result<PendingRow> {
-        (**self).prefill_slot(slot, prompt, traffic)
+    fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
+        (**self).prefill_slot(slot, adm)
     }
 
-    fn decode_slots(
-        &mut self,
-        toks: &[i32],
-        pos: &[i32],
-        starts: &[i32],
-        active: &[bool],
-        traffic: TrafficClass,
-    ) -> Result<SampleOut> {
-        (**self).decode_slots(toks, pos, starts, active, traffic)
+    fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
+        (**self).decode_slots(batch)
     }
 
     fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -245,29 +320,20 @@ impl SlotEngine for HybridEngine {
         self.manifest().padded_prompts
     }
 
+    fn paged(&self) -> bool {
+        HybridEngine::serving_is_paged(self)
+    }
+
     fn begin_serving(&mut self) -> Result<()> {
         HybridEngine::begin_serving(self)
     }
 
-    fn prefill_slot(
-        &mut self,
-        slot: usize,
-        prompt: &[i32],
-        traffic: TrafficClass,
-    ) -> Result<PendingRow> {
-        let out = HybridEngine::prefill_slot(self, slot, prompt, traffic)?;
-        Ok(PendingRow::from_row(out.row(0)))
+    fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
+        HybridEngine::prefill_slot(self, slot, adm)
     }
 
-    fn decode_slots(
-        &mut self,
-        toks: &[i32],
-        pos: &[i32],
-        starts: &[i32],
-        active: &[bool],
-        traffic: TrafficClass,
-    ) -> Result<SampleOut> {
-        HybridEngine::decode_slots(self, toks, pos, starts, active, traffic)
+    fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
+        HybridEngine::decode_slots(self, batch)
     }
 
     fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -292,6 +358,14 @@ pub struct Request {
     /// Requested generation budget; capped at the engine's
     /// [`SlotEngine::max_new_tokens`].
     pub max_new: usize,
+    /// How many leading prompt tokens are a prefix SHARED with other
+    /// requests (a common system prompt); 0 = nothing shared. On a paged
+    /// engine the page-aligned part of this prefix is admitted through
+    /// the shared-prefix registry (copy-on-write page mapping — see the
+    /// module docs); arena engines ignore it. Must be `<= prompt.len()`.
+    /// Declaring a prefix never changes the completion's bytes, only how
+    /// much prompt computation a cache hit saves.
+    pub prefix_len: usize,
     /// Seed of this request's own RNG stream. `Some(s)` makes the
     /// scheduler finish every one of the request's tokens through
     /// [`SamplingBackend::sample_stream`] over `Rng::new(s)`, so the
@@ -460,6 +534,16 @@ pub struct SchedStats {
     pub retired_deadline: u64,
     /// Slots removed from the free list after repeated prefill faults.
     pub quarantined: u64,
+    /// Prompt tokens served from shared-prefix cache hits instead of
+    /// being computed cold (paged engines only; see
+    /// [`AdmitOutcome::reused_tokens`]).
+    pub reused_tokens: u64,
+    /// Paged admissions backed by a shared-prefix registry hit.
+    pub prefix_hits: u64,
+    /// Paged admissions that found no reusable prefix (cold prompts and
+    /// sub-page prefixes land here; arena admissions are counted in
+    /// neither bucket).
+    pub prefix_misses: u64,
 }
 
 impl SchedStats {
@@ -488,6 +572,31 @@ impl SchedStats {
             0.0
         } else {
             self.pad_tokens as f64 / total as f64
+        }
+    }
+
+    /// VALID prompt tokens admitted (alias of [`SchedStats::prompt_tokens`]
+    /// under the serve bench's admitted-vs-computed vocabulary).
+    pub fn admitted_tokens(&self) -> u64 {
+        self.prompt_tokens
+    }
+
+    /// Prompt tokens actually computed cold — admitted minus the tokens
+    /// shared-prefix hits served from cache. Equal to admitted on arena
+    /// engines and prefix-free traffic; strictly smaller under
+    /// prefix-heavy paged serving.
+    pub fn computed_tokens(&self) -> u64 {
+        self.prompt_tokens - self.reused_tokens
+    }
+
+    /// Fraction of paged admissions served by a shared-prefix hit (0 when
+    /// no paged admission happened).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
         }
     }
 }
@@ -594,12 +703,19 @@ impl<E: SlotEngine> Scheduler<E> {
                 req.id,
             );
         }
-        if len < cap && !self.engine.supports_padded_prompts() {
+        if len < cap && !self.engine.supports_padded_prompts() && !self.engine.paged() {
             bail!(
                 "request {}: prompt is {len} tokens but the engine's artifacts only admit \
                  exact-length [{cap}] prompts (no `padded_prompts` capability / valid-start \
                  masks) — re-run `make artifacts` to rebuild with variable-length support",
                 req.id,
+            );
+        }
+        if req.prefix_len > len {
+            bail!(
+                "request {}: declared shared prefix ({} tokens) exceeds the prompt ({len})",
+                req.id,
+                req.prefix_len,
             );
         }
         self.stats.submitted += 1;
@@ -658,15 +774,18 @@ impl<E: SlotEngine> Scheduler<E> {
 
         // 1. Admission at the step boundary: every free, non-quarantined
         // slot takes the oldest admissible queued request; its prefill runs
-        // while the other slots' device state stays live. The engine
-        // left-pads short prompts into the fixed window; the scheduler
-        // records the pad so the slot's decode positions (cache row = pad +
-        // token index) and valid-start stay honest, and counts valid vs
-        // padded prompt entries. A faulted prefill requeues its request
-        // with backoff (or retires it as Failed past the retry budget) and
-        // leaves the slot empty this tick — see the module docs' failure
-        // semantics.
+        // while the other slots' device state stays live. An arena engine
+        // left-pads short prompts into the fixed window (the scheduler
+        // records the pad so the slot's decode positions — cache row = pad
+        // + token index — and valid-start stay honest); a paged engine
+        // front-aligns them (pad 0) and may serve a declared shared prefix
+        // from its page registry, reported per-admission in the
+        // AdmitOutcome and folded into the reuse stats. A faulted prefill
+        // requeues its request with backoff (or retires it as Failed past
+        // the retry budget) and leaves the slot empty this tick — see the
+        // module docs' failure semantics.
         let cap = self.engine.prompt_len();
+        let paged = self.engine.paged();
         if !self.queue.is_empty() && self.quarantined.iter().all(|q| *q) {
             bail!(
                 "scheduler: all {b} slots quarantined after repeated prefill faults \
@@ -687,23 +806,39 @@ impl<E: SlotEngine> Scheduler<E> {
             let Some(q) = self.queue.remove(qidx) else {
                 break;
             };
-            match self.engine.prefill_slot(slot, &q.req.prompt, traffic) {
-                Ok(pending) => {
+            let adm = Admission {
+                prompt: &q.req.prompt,
+                prefix_len: q.req.prefix_len,
+                traffic,
+            };
+            match self.engine.prefill_slot(slot, &adm) {
+                Ok(outcome) => {
                     self.slot_failures[slot] = 0;
                     self.stats.prefills += 1;
                     self.stats.admitted += 1;
                     let true_len = q.req.prompt.len();
+                    // Paged prompts are front-aligned: no left-padding, so
+                    // the slot's cache row for token j is just j.
+                    let pad = if paged { 0 } else { cap - true_len };
                     self.stats.prompt_tokens += true_len as u64;
-                    self.stats.pad_tokens += (cap - true_len) as u64;
+                    self.stats.pad_tokens += pad as u64;
+                    self.stats.reused_tokens += outcome.reused_tokens as u64;
+                    if paged {
+                        if outcome.prefix_hit {
+                            self.stats.prefix_hits += 1;
+                        } else {
+                            self.stats.prefix_misses += 1;
+                        }
+                    }
                     let max_new = q.req.max_new.clamp(1, self.engine.max_new_tokens());
                     self.slots[slot] = Some(Seq {
                         id: q.req.id,
                         prompt_len: true_len,
-                        pad: cap - true_len,
+                        pad,
                         tokens: q.req.prompt,
                         generated: 0,
                         max_new,
-                        pending,
+                        pending: outcome.pending,
                         rng: q.req.seed.map(Rng::new),
                         enqueued_step: q.enqueued_step,
                         admitted_step: self.step_idx,
@@ -873,14 +1008,15 @@ impl<E: SlotEngine> Scheduler<E> {
             // the pending rows of the last SUCCESSFUL call and no RNG
             // stream advances for a failed attempt.
             let mut attempt = 0u32;
+            let batch = DecodeBatch {
+                toks: &self.step_toks,
+                pos: &self.step_pos,
+                starts: &self.step_starts,
+                active: &self.step_active,
+                traffic,
+            };
             let out = loop {
-                match self.engine.decode_slots(
-                    &self.step_toks,
-                    &self.step_pos,
-                    &self.step_starts,
-                    &self.step_active,
-                    traffic,
-                ) {
+                match self.engine.decode_slots(&batch) {
                     Ok(out) => break Some(out),
                     Err(_) => {
                         self.stats.decode_faults += 1;
@@ -970,9 +1106,16 @@ mod tests {
         n_slots: usize,
         /// Whether short prompts are admissible (artifact capability).
         padded: bool,
+        /// Paged mode: front-aligned prompts + a scripted prefix registry.
+        paged: bool,
         /// Per slot: (planned generated tokens, cursor of the next logits,
         /// admitted prompt's true length).
         plans: Vec<Option<(Vec<i32>, usize, usize)>>,
+        /// Scripted shared-prefix registry: token runs seen by earlier
+        /// admissions (paged mode only; whole declared prefixes, no page
+        /// alignment — alignment is the ledger's concern, exercised in
+        /// `hybrid::kv`).
+        prefixes: std::collections::HashSet<Vec<i32>>,
         prefill_log: Vec<usize>,
         /// True prompt length of every admission, in admission order.
         prefill_lens: Vec<usize>,
@@ -990,7 +1133,9 @@ mod tests {
             MockEngine {
                 n_slots,
                 padded: true,
+                paged: false,
                 plans: (0..n_slots).map(|_| None).collect(),
+                prefixes: std::collections::HashSet::new(),
                 prefill_log: Vec::new(),
                 prefill_lens: Vec::new(),
                 released: Vec::new(),
@@ -1003,6 +1148,13 @@ mod tests {
         /// A pre-capability engine: only exact-length prompts admissible.
         fn without_padded(mut self) -> Self {
             self.padded = false;
+            self
+        }
+
+        /// A block-paged engine: front-aligned prompts, prefix reuse.
+        fn paged_mode(mut self) -> Self {
+            self.paged = true;
+            self.padded = false; // paged serving needs no left-pad masks
             self
         }
 
@@ -1044,34 +1196,41 @@ mod tests {
             self.padded
         }
 
-        fn prefill_slot(
-            &mut self,
-            slot: usize,
-            prompt: &[i32],
-            traffic: TrafficClass,
-        ) -> Result<PendingRow> {
+        fn paged(&self) -> bool {
+            self.paged
+        }
+
+        fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
+            let prompt = adm.prompt;
             assert!(!prompt.is_empty() && prompt.len() <= SP, "{}", prompt.len());
-            assert!(self.padded || prompt.len() == SP, "short prompt without capability");
+            assert!(
+                self.padded || self.paged || prompt.len() == SP,
+                "short prompt without capability"
+            );
             assert!(self.plans[slot].is_none(), "prefill into busy slot {slot}");
+            let mut reused = 0usize;
+            if self.paged && adm.prefix_len > 0 {
+                let key = prompt[..adm.prefix_len].to_vec();
+                if self.prefixes.contains(&key) {
+                    reused = adm.prefix_len;
+                } else {
+                    self.prefixes.insert(key);
+                }
+            }
             let n = prompt[0] as usize;
             let plan: Vec<i32> = (0..SG + 2)
                 .map(|j| if j < n { CONTENT } else { Vocab::EOS })
                 .collect();
-            let row = self.row_for(plan[0], traffic);
+            let row = self.row_for(plan[0], adm.traffic);
             self.plans[slot] = Some((plan, 1, prompt.len()));
             self.prefill_log.push(slot);
             self.prefill_lens.push(prompt.len());
-            Ok(row)
+            Ok(AdmitOutcome { pending: row, reused_tokens: reused, prefix_hit: reused > 0 })
         }
 
-        fn decode_slots(
-            &mut self,
-            toks: &[i32],
-            pos: &[i32],
-            starts: &[i32],
-            active: &[bool],
-            traffic: TrafficClass,
-        ) -> Result<SampleOut> {
+        fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
+            let (toks, pos, starts, active) = (batch.toks, batch.pos, batch.starts, batch.active);
+            let traffic = batch.traffic;
             assert_eq!(toks.len(), self.n_slots);
             assert_eq!(pos.len(), self.n_slots);
             assert_eq!(starts.len(), self.n_slots);
@@ -1084,15 +1243,27 @@ mod tests {
                     continue;
                 }
                 let (plan, cur, true_len) = self.plans[slot].as_mut().expect("active free slot");
-                // The padding contract: the slot's valid start must be the
-                // left-pad width of its admitted prompt, and the fed
-                // position the pad-offset cache row of its newest token.
-                assert_eq!(starts[slot] as usize, SP - *true_len, "slot {slot} start");
-                assert_eq!(
-                    pos[slot] as usize,
-                    SP + *cur - 1,
-                    "slot {slot} fed off its depth"
-                );
+                if self.paged {
+                    // The front-alignment contract: no left-padding ever,
+                    // and the fed position is the sequence's true depth.
+                    assert_eq!(starts[slot], 0, "slot {slot} paged start");
+                    assert_eq!(
+                        pos[slot] as usize,
+                        *true_len + *cur - 1,
+                        "slot {slot} fed off its depth (paged)"
+                    );
+                } else {
+                    // The padding contract: the slot's valid start must be
+                    // the left-pad width of its admitted prompt, and the
+                    // fed position the pad-offset cache row of its newest
+                    // token.
+                    assert_eq!(starts[slot] as usize, SP - *true_len, "slot {slot} start");
+                    assert_eq!(
+                        pos[slot] as usize,
+                        SP + *cur - 1,
+                        "slot {slot} fed off its depth"
+                    );
+                }
                 next[slot] = plan[*cur];
                 *cur += 1;
             }
@@ -1141,7 +1312,7 @@ mod tests {
     fn req(id: u64, eos_after: i32, max_new: usize) -> Request {
         let mut prompt = vec![CONTENT; SP];
         prompt[0] = eos_after;
-        Request { id, prompt, max_new, seed: None }
+        Request { id, prompt, max_new, seed: None, prefix_len: 0 }
     }
 
     #[test]
@@ -1238,13 +1409,18 @@ mod tests {
     fn wrong_prompt_length_is_rejected_at_submit() {
         let mut sched = Scheduler::new(MockEngine::new(1)).unwrap();
         let err = sched
-            .submit(Request { id: 0, prompt: vec![1; SP + 1], max_new: 4, seed: None })
+            .submit(Request { id: 0, prompt: vec![1; SP + 1], max_new: 4, seed: None, prefix_len: 0 })
             .unwrap_err();
         assert!(format!("{err:#}").contains("prompt must be"));
         let err = sched
-            .submit(Request { id: 1, prompt: vec![], max_new: 4, seed: None })
+            .submit(Request { id: 1, prompt: vec![], max_new: 4, seed: None, prefix_len: 0 })
             .unwrap_err();
         assert!(format!("{err:#}").contains("prompt must be"));
+        // A declared shared prefix must fit inside the prompt.
+        let err = sched
+            .submit(Request { id: 2, prompt: vec![1; SP], max_new: 4, seed: None, prefix_len: SP + 1 })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("shared prefix"), "{err:#}");
         assert!(sched.is_idle());
     }
 
@@ -1252,7 +1428,7 @@ mod tests {
     fn req_len(id: u64, eos_after: i32, max_new: usize, len: usize) -> Request {
         let mut prompt = vec![CONTENT; len];
         prompt[0] = eos_after;
-        Request { id, prompt, max_new, seed: None }
+        Request { id, prompt, max_new, seed: None, prefix_len: 0 }
     }
 
     #[test]
@@ -1472,5 +1648,83 @@ mod tests {
             assert_eq!(d.tokens, h.tokens, "req {} (dominant candidate)", d.id);
         }
         assert!(eng.decode_traffic.iter().all(|t| *t == TrafficClass::DeviceTopK));
+    }
+
+    #[test]
+    fn paged_engine_front_aligns_and_admits_short_prompts() {
+        // A paged engine takes short prompts WITHOUT the padded_prompts
+        // capability (front alignment needs no valid-start masks), pad
+        // accounting stays zero, and every decode position is the true
+        // sequence depth (asserted inside the mock).
+        let mut sched = Scheduler::new(MockEngine::new(2).paged_mode()).unwrap();
+        assert!(!sched.engine.supports_padded_prompts());
+        sched.submit(req_len(0, 100, 3, 2)).unwrap(); // short, no capability
+        sched.submit(req_len(1, 100, 3, SP)).unwrap();
+        let mut done = sched.run_until_idle(&mut greedy()).unwrap();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].tokens.len(), 2 + 3);
+        assert_eq!(done[0].response(), &[CONTENT; 3]);
+        let st = &sched.stats;
+        assert_eq!(st.pad_tokens, 0, "front alignment never pads");
+        assert_eq!(st.pad_fraction(), 0.0);
+        assert!(sched.engine.decode_starts.iter().flatten().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn shared_prefix_reuse_lands_in_the_stats() {
+        // Three paged requests share a system prompt (declared via
+        // prefix_len); the first admission is the registry miss, the other
+        // two hit, and the stats report the admitted-vs-computed saving
+        // the serve bench emits. Completions are unaffected by sharing.
+        let mut sched = Scheduler::new(MockEngine::new(1).paged_mode()).unwrap();
+        let shared: Vec<i32> = vec![2, CONTENT, CONTENT]; // prompt[0]=2 -> C C EOS
+        for id in 0..3 {
+            let mut prompt = shared.clone();
+            prompt.push(10 + id as i32); // unique tail token
+            sched
+                .submit(Request {
+                    id,
+                    prompt,
+                    max_new: SG,
+                    seed: None,
+                    prefix_len: shared.len(),
+                })
+                .unwrap();
+        }
+        let done = sched.run_until_idle(&mut greedy()).unwrap();
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert_eq!(c.response(), &[CONTENT, CONTENT, Vocab::EOS], "req {}", c.id);
+        }
+        let st = &sched.stats;
+        assert_eq!(st.prefix_misses, 1, "first admission registers");
+        assert_eq!(st.prefix_hits, 2, "later admissions reuse");
+        assert_eq!(st.reused_tokens, 2 * shared.len() as u64);
+        assert_eq!(st.admitted_tokens(), 3 * (shared.len() + 1) as u64);
+        assert_eq!(
+            st.computed_tokens(),
+            st.admitted_tokens() - st.reused_tokens,
+            "computed = admitted - reused"
+        );
+        assert!(st.computed_tokens() < st.admitted_tokens());
+        let want = 2.0 / 3.0;
+        assert!((st.cache_hit_rate() - want).abs() < 1e-12, "{}", st.cache_hit_rate());
+    }
+
+    #[test]
+    fn arena_admissions_never_touch_prefix_stats() {
+        // prefix_len on an arena engine is inert: no hits, no misses, no
+        // reuse — and cache_hit_rate stays 0 rather than NaN.
+        let mut sched = Scheduler::new(MockEngine::new(1)).unwrap();
+        sched
+            .submit(Request { prefix_len: 2, ..req(0, 1, 4) })
+            .unwrap();
+        sched.run_until_idle(&mut greedy()).unwrap();
+        let st = &sched.stats;
+        assert_eq!(st.prefix_hits + st.prefix_misses, 0);
+        assert_eq!(st.reused_tokens, 0);
+        assert_eq!(st.cache_hit_rate(), 0.0);
+        assert_eq!(st.computed_tokens(), st.admitted_tokens());
     }
 }

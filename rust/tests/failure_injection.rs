@@ -152,9 +152,12 @@ mod chaos {
     use anyhow::Result;
     use dschat::data::synthetic::Vocab;
     use dschat::rollout::RolloutEngine;
-    use dschat::sampling::{HostFullRow, PendingRow, SampleOut, SamplerConfig, TrafficClass};
+    use dschat::sampling::{HostFullRow, PendingRow, SampleOut, SamplerConfig};
     use dschat::serving::chaos::{ChaosConfig, ChaosEngine};
-    use dschat::serving::{FaultPolicy, FinishReason, Request, Scheduler, SlotEngine};
+    use dschat::serving::{
+        Admission, AdmitOutcome, DecodeBatch, FaultPolicy, FinishReason, Request, Scheduler,
+        SlotEngine,
+    };
 
     const VOCAB: usize = 32;
     const SP: usize = 4;
@@ -200,34 +203,22 @@ mod chaos {
             SG
         }
 
-        fn prefill_slot(
-            &mut self,
-            slot: usize,
-            prompt: &[i32],
-            _traffic: TrafficClass,
-        ) -> Result<PendingRow> {
+        fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
             assert!(self.plans[slot].is_none(), "prefill into busy slot {slot}");
-            let n = prompt[0] as usize;
+            let n = adm.prompt[0] as usize;
             let plan: Vec<i32> = (0..SG + 2)
                 .map(|j| if j < n { CONTENT } else { Vocab::EOS })
                 .collect();
             let row = PendingRow::Logits(self.logits_for(plan[0]));
             self.plans[slot] = Some((plan, 1));
             self.prefills += 1;
-            Ok(row)
+            Ok(AdmitOutcome::cold(row))
         }
 
-        fn decode_slots(
-            &mut self,
-            _toks: &[i32],
-            _pos: &[i32],
-            _starts: &[i32],
-            active: &[bool],
-            _traffic: TrafficClass,
-        ) -> Result<SampleOut> {
+        fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
             let mut data = vec![0.0f32; self.n_slots * VOCAB];
             for slot in 0..self.n_slots {
-                if !active[slot] {
+                if !batch.active[slot] {
                     continue;
                 }
                 let (plan, cur) = self.plans[slot].as_mut().expect("active free slot");
@@ -253,7 +244,7 @@ mod chaos {
     fn req(id: u64, eos_after: i32, max_new: usize) -> Request {
         let mut prompt = vec![CONTENT; SP];
         prompt[0] = eos_after;
-        Request { id, prompt, max_new, seed: None }
+        Request { id, prompt, max_new, seed: None, prefix_len: 0 }
     }
 
     #[test]
@@ -497,6 +488,128 @@ mod chaos {
         for (g, members) in &golden {
             let ids: Vec<u64> = members.iter().map(|(id, _)| *id).collect();
             assert_eq!(ids, vec![*g as u64 * 2, *g as u64 * 2 + 1]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// paged KV ledger: refcount / free-list invariants under chaos-injected ops
+// ---------------------------------------------------------------------------
+
+mod paged_ledger_chaos {
+    use dschat::hybrid::kv::PageLedger;
+    use dschat::util::rng::Rng;
+
+    const SMAX: usize = 16;
+    const PS: usize = 4; // page size
+    const MB: usize = SMAX / PS; // blocks per slot
+    const SLOTS: usize = 3;
+    // 9 allocatable pages: two full windows fit, the third admission must
+    // evict or fail — both paths run under the fuzz.
+    const PAGES: usize = 2 * MB + 2;
+
+    /// A prompt built from one of a few shared prefixes plus a unique tail,
+    /// so admissions hit, miss, and collide in the registry.
+    fn prompt(rng: &mut Rng, uniq: i32) -> (Vec<i32>, usize) {
+        let family = rng.below(3) as i32;
+        let declared = [0, PS, 2 * PS][rng.below(3) as usize];
+        let mut p: Vec<i32> = (0..2 * PS as i32).map(|j| family * 100 + j).collect();
+        p.push(1000 + uniq);
+        (p, declared)
+    }
+
+    /// Seeded random walk over the allocator: admissions (cold and shared),
+    /// registrations, advances, and releases — including *injected bogus
+    /// releases* (double-free, out-of-range) and admissions driven into
+    /// pool exhaustion. After EVERY op, faulted or not, the full
+    /// refcount/free-list consistency check must pass: a rejected op may
+    /// not leak, double-map, or strand a page.
+    #[test]
+    fn random_walk_with_injected_release_faults_never_corrupts_the_ledger() {
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(0xfeed + seed);
+            let mut ledger = PageLedger::paged(SLOTS, SMAX, PS, PAGES);
+            let (mut admitted, mut rejected, mut bogus_releases) = (0u32, 0u32, 0u32);
+            for i in 0..400i32 {
+                match rng.below(10) {
+                    // Admission into a random slot (sometimes busy — must
+                    // error without touching the pool).
+                    0..=3 => {
+                        let slot = rng.below(SLOTS as u32) as usize;
+                        let (p, declared) = prompt(&mut rng, i);
+                        let busy = ledger.len_of(slot).is_some();
+                        match ledger.alloc_shared(slot, &p, declared) {
+                            Ok(plan) => {
+                                assert!(!busy, "admission into busy slot {slot} succeeded");
+                                admitted += 1;
+                                if plan.prefix_hit {
+                                    assert_eq!(plan.reused_tokens, declared.min(p.len()));
+                                }
+                                if rng.chance(0.8) {
+                                    ledger.register_prefix(slot, declared, &p).unwrap();
+                                }
+                            }
+                            Err(_) => rejected += 1,
+                        }
+                    }
+                    // Advance every live slot that still has headroom, at
+                    // its true depth (the lockstep contract).
+                    4..=5 => {
+                        let mut active = vec![false; SLOTS];
+                        let mut pos = vec![0i32; SLOTS];
+                        for s in 0..SLOTS {
+                            if let Some(d) = ledger.depth_of(s) {
+                                if d < SMAX && rng.chance(0.7) {
+                                    active[s] = true;
+                                    pos[s] = d as i32;
+                                }
+                            }
+                        }
+                        ledger.advance(&active, &pos).unwrap();
+                    }
+                    // Advance at a WRONG position: must be rejected.
+                    6 => {
+                        let slot = rng.below(SLOTS as u32) as usize;
+                        if let Some(d) = ledger.depth_of(slot) {
+                            let mut active = vec![false; SLOTS];
+                            let mut pos = vec![0i32; SLOTS];
+                            active[slot] = true;
+                            pos[slot] = d as i32 + 1;
+                            assert!(ledger.advance(&active, &pos).is_err());
+                        }
+                    }
+                    // Release a random slot — roughly half the draws hit a
+                    // slot that is already free (the chaos wrapper's
+                    // best-effort release after an injected admission
+                    // fault), which must error and change nothing.
+                    _ => {
+                        let slot = rng.below(SLOTS as u32) as usize;
+                        let busy = ledger.len_of(slot).is_some();
+                        let res = ledger.free(slot);
+                        if busy {
+                            res.unwrap();
+                        } else {
+                            assert!(res.is_err(), "double release of slot {slot} succeeded");
+                            bogus_releases += 1;
+                        }
+                    }
+                }
+                ledger
+                    .check_invariants()
+                    .unwrap_or_else(|e| panic!("seed {seed} op {i}: {e:#}"));
+            }
+            assert!(admitted > 20, "seed {seed}: only {admitted} admissions");
+            assert!(rejected > 0, "seed {seed}: exhaustion/busy paths never exercised");
+            assert!(bogus_releases > 0, "seed {seed}: no injected bogus release fired");
+            // Drain: free every slot; every page is then either free or
+            // held only by the registry — and the count closes exactly.
+            for s in 0..SLOTS {
+                if ledger.len_of(s).is_some() {
+                    ledger.free(s).unwrap();
+                }
+            }
+            ledger.check_invariants().unwrap();
+            assert_eq!(ledger.n_active(), 0);
         }
     }
 }

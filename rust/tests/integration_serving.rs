@@ -27,6 +27,12 @@ fn padded_artifacts() -> bool {
         .unwrap_or(false)
 }
 
+fn paged_artifacts() -> bool {
+    Manifest::load(DIR)
+        .map(|m| m.has_serving() && m.has_paged_serving())
+        .unwrap_or(false)
+}
+
 fn sampled_artifacts() -> bool {
     match Manifest::load(DIR) {
         Ok(m) => {
@@ -51,14 +57,17 @@ fn golden_sampler() -> HostFullRow {
     )
 }
 
-/// Build a scheduler, submit `b + 2` requests with a staggered pattern
-/// (two up front, the rest after one step), run to idle, and return the
-/// scheduler plus completions sorted by id and the prompts used.
-fn run_staggered_with(
+/// Build a scheduler (arena or block-paged serving cache), submit `b + 2`
+/// requests with a staggered pattern (two up front, the rest after one
+/// step), run to idle, and return the scheduler plus completions sorted by
+/// id and the prompts used.
+fn run_staggered_on(
     backend: &mut dyn SamplingBackend,
+    paged: bool,
 ) -> (Scheduler<HybridEngine>, Vec<Completion>, Vec<Vec<i32>>) {
     let engine = Rc::new(Engine::cpu().unwrap());
-    let he = HybridEngine::init(engine, DIR, 0, false).unwrap();
+    let mut he = HybridEngine::init(engine, DIR, 0, false).unwrap();
+    he.use_paged_serving(paged).unwrap();
     let m = he.manifest();
     let (b, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
     let task = TaskGen::new(m.actor.vocab, sp, sg);
@@ -70,18 +79,36 @@ fn run_staggered_with(
     let mut done = Vec::new();
     for (id, p) in prompts.iter().enumerate().take(2) {
         sched
-            .submit(Request { id: id as u64, prompt: p.clone(), max_new: sg, seed: None })
+            .submit(Request {
+                id: id as u64,
+                prompt: p.clone(),
+                max_new: sg,
+                seed: None,
+                prefix_len: 0,
+            })
             .unwrap();
     }
     done.extend(sched.step(backend).unwrap());
     for (id, p) in prompts.iter().enumerate().skip(2) {
         sched
-            .submit(Request { id: id as u64, prompt: p.clone(), max_new: sg, seed: None })
+            .submit(Request {
+                id: id as u64,
+                prompt: p.clone(),
+                max_new: sg,
+                seed: None,
+                prefix_len: 0,
+            })
             .unwrap();
     }
     done.extend(sched.run_until_idle(backend).unwrap());
     done.sort_by_key(|c| c.id);
     (sched, done, prompts)
+}
+
+fn run_staggered_with(
+    backend: &mut dyn SamplingBackend,
+) -> (Scheduler<HybridEngine>, Vec<Completion>, Vec<Vec<i32>>) {
+    run_staggered_on(backend, false)
 }
 
 fn run_staggered() -> (Scheduler<HybridEngine>, Vec<Completion>, Vec<Vec<i32>>) {
@@ -237,7 +264,9 @@ fn donated_decode_keeps_cache_accounting_and_reuse_honest() {
     let kv_live = sched.engine.memory.live_named("kv_cache");
     assert!(kv_live > 0);
     let p0 = task.sample_prompt(&mut rng).tokens;
-    sched.submit(Request { id: 0, prompt: p0, max_new: sg, seed: None }).unwrap();
+    sched
+        .submit(Request { id: 0, prompt: p0, max_new: sg, seed: None, prefix_len: 0 })
+        .unwrap();
     let done = sched.run_until_idle(&mut sampler).unwrap();
     assert_eq!(done.len(), 1);
     assert!(done[0].generated >= 1);
@@ -246,7 +275,9 @@ fn donated_decode_keeps_cache_accounting_and_reuse_honest() {
     assert_eq!(sched.engine.memory.live_named("kv_cache"), kv_live);
     assert_eq!(sched.engine.free_slots(), b);
     let p1 = task.sample_prompt(&mut rng).tokens;
-    sched.submit(Request { id: 1, prompt: p1, max_new: sg, seed: None }).unwrap();
+    sched
+        .submit(Request { id: 1, prompt: p1, max_new: sg, seed: None, prefix_len: 0 })
+        .unwrap();
     let done = sched.run_until_idle(&mut sampler).unwrap();
     assert_eq!(done.len(), 1, "slot reuse after donated decode steps");
     assert_eq!(done[0].slot, 0);
@@ -351,7 +382,13 @@ fn mixed_length_padded_slot_matches_exact_length_generate_greedy() {
     let mut sched = Scheduler::new(he).unwrap();
     for (id, p) in prompts.iter().enumerate() {
         sched
-            .submit(Request { id: id as u64, prompt: p.clone(), max_new: sg, seed: None })
+            .submit(Request {
+                id: id as u64,
+                prompt: p.clone(),
+                max_new: sg,
+                seed: None,
+                prefix_len: 0,
+            })
             .unwrap();
     }
     let mut done = sched.run_until_idle(&mut greedy()).unwrap();
@@ -417,10 +454,16 @@ fn mixed_length_padded_slot_matches_exact_length_seeded_stochastic() {
 
     let mut sched = Scheduler::new(he).unwrap();
     sched
-        .submit(Request { id: 0, prompt: short, max_new: sg, seed: Some(seed) })
+        .submit(Request { id: 0, prompt: short, max_new: sg, seed: Some(seed), prefix_len: 0 })
         .unwrap();
     sched
-        .submit(Request { id: 1, prompt: full, max_new: sg, seed: Some(seed ^ 0x5ee0) })
+        .submit(Request {
+            id: 1,
+            prompt: full,
+            max_new: sg,
+            seed: Some(seed ^ 0x5ee0),
+            prefix_len: 0,
+        })
         .unwrap();
     let mut done = sched.run_until_idle(&mut HostFullRow::new(cfg, 0)).unwrap();
     done.sort_by_key(|c| c.id);
@@ -429,4 +472,165 @@ fn mixed_length_padded_slot_matches_exact_length_seeded_stochastic() {
         done[0].tokens, want,
         "seeded short request must replay its exact-length stream bit for bit"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Block-paged goldens: serving through the paged KV pool (per-slot block
+// tables, `decode_slots_paged` gather attention) must be BIT-EXACT with the
+// arena path for identical traffic — the arena path is itself pinned
+// bit-exact to the exact-length forward above, so paged ≡ exact-length
+// transitively. Plus the shared-prefix contract: declared-prefix admissions
+// reuse registered pages without perturbing a single token.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn paged_serving_bit_matches_arena_for_identical_traffic() {
+    // Greedy AND seeded-stochastic staggered traces: same requests, same
+    // slots, same finish reasons, same tokens — the block-table gather may
+    // not change one bit relative to contiguous per-slot rows.
+    if !paged_artifacts() {
+        eprintln!("skipping: {DIR} artifacts lack paged_kv (run `make artifacts`)");
+        return;
+    }
+    let greedy = || HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+    let (_, arena, _) = run_staggered_on(&mut greedy(), false);
+    let (paged_sched, paged, _) = run_staggered_on(&mut greedy(), true);
+    assert_eq!(arena.len(), paged.len());
+    for (a, p) in arena.iter().zip(&paged) {
+        assert_eq!(a.id, p.id);
+        assert_eq!(a.tokens, p.tokens, "greedy req {}", a.id);
+        assert_eq!(a.finish, p.finish);
+        assert_eq!(a.slot, p.slot);
+    }
+    // No request declared a prefix: the reuse counters must stay silent
+    // and every admitted token was computed.
+    let st = &paged_sched.stats;
+    assert_eq!(st.prefix_hits + st.prefix_misses, 0);
+    assert_eq!(st.computed_tokens(), st.admitted_tokens());
+
+    let (_, arena_s, _) = run_staggered_on(&mut golden_sampler(), false);
+    let (_, paged_s, _) = run_staggered_on(&mut golden_sampler(), true);
+    for (a, p) in arena_s.iter().zip(&paged_s) {
+        assert_eq!(a.tokens, p.tokens, "stochastic req {}", a.id);
+        assert_eq!(a.finish, p.finish);
+    }
+}
+
+#[test]
+fn paged_front_alignment_matches_arena_left_padding_for_mixed_lengths() {
+    // Variable-length prompts: the arena admits them LEFT-padded, the
+    // paged pool FRONT-aligned — two different layouts whose completions
+    // must still agree bit for bit (both are pinned to the exact-length
+    // computation from their own side).
+    if !padded_artifacts() || !paged_artifacts() {
+        eprintln!("skipping: {DIR} artifacts lack padded_prompts+paged_kv");
+        return;
+    }
+    let engine = Rc::new(Engine::cpu().unwrap());
+    let he = HybridEngine::init(engine, DIR, 0, false).unwrap();
+    let m = he.manifest();
+    let (b, sp, sg) = (m.batch, m.prompt_len, m.gen_len);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut rng = Rng::new(99);
+    let lens: Vec<usize> = (0..b + 1)
+        .map(|i| if i == b { sp } else { (TaskGen::MIN_PROMPT_LEN + 2 * i).min(sp - 1) })
+        .collect();
+    let prompts: Vec<Vec<i32>> =
+        lens.iter().map(|&l| task.sample_prompt_len(&mut rng, l).tokens).collect();
+    let run = |he: HybridEngine| -> Vec<Completion> {
+        let mut sched = Scheduler::new(he).unwrap();
+        for (id, p) in prompts.iter().enumerate() {
+            sched
+                .submit(Request {
+                    id: id as u64,
+                    prompt: p.clone(),
+                    max_new: sg,
+                    seed: None,
+                    prefix_len: 0,
+                })
+                .unwrap();
+        }
+        let mut greedy =
+            HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+        let mut done = sched.run_until_idle(&mut greedy).unwrap();
+        done.sort_by_key(|c| c.id);
+        done
+    };
+    let arena = run(he);
+    let engine = Rc::new(Engine::cpu().unwrap());
+    let mut he = HybridEngine::init(engine, DIR, 0, false).unwrap();
+    he.use_paged_serving(true).unwrap();
+    let paged = run(he);
+    assert_eq!(arena.len(), paged.len());
+    for (a, p) in arena.iter().zip(&paged) {
+        assert_eq!(a.prompt_len, p.prompt_len);
+        assert_eq!(a.tokens, p.tokens, "req {} (len {})", a.id, a.prompt_len);
+        assert_eq!(a.finish, p.finish);
+    }
+}
+
+#[test]
+fn shared_prefix_reuse_is_bit_identical_and_counted() {
+    // The shared-prefix golden: requests declaring a common page-aligned
+    // system prompt map its registered pages instead of recomputing them —
+    // completions stay bit-identical to an independent (no-sharing) run,
+    // while the scheduler reports the reuse (computed < admitted, nonzero
+    // hit rate).
+    if !paged_artifacts() {
+        eprintln!("skipping: {DIR} artifacts lack paged_kv (run `make artifacts`)");
+        return;
+    }
+    let engine = Rc::new(Engine::cpu().unwrap());
+    let mut he = HybridEngine::init(engine, DIR, 0, false).unwrap();
+    he.use_paged_serving(true).unwrap();
+    let m = he.manifest();
+    let (sp, sg) = (m.prompt_len, m.gen_len);
+    let share = (sp / m.page_size) * m.page_size;
+    if share == 0 {
+        eprintln!("skipping: prompt_len {sp} < page_size {} shares nothing", m.page_size);
+        return;
+    }
+    assert!(m.batch >= 3, "test wants 3 concurrent slots, batch is {}", m.batch);
+    let task = TaskGen::new(m.actor.vocab, sp, sg);
+    let mut rng = Rng::new(123);
+    // One shared prompt for everyone (prompt_len == page_size in the tiny
+    // geometry, so the share-able region is the whole prompt).
+    let prompt = task.sample_prompt(&mut rng).tokens;
+    let greedy = || HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0);
+
+    // Independent reference: same prompt, no declared prefix.
+    let mut solo = Scheduler::new(he).unwrap();
+    solo.submit(Request { id: 0, prompt: prompt.clone(), max_new: sg, seed: None, prefix_len: 0 })
+        .unwrap();
+    let want = solo.run_until_idle(&mut greedy()).unwrap().remove(0).tokens;
+    assert_eq!(solo.stats.prefix_hits + solo.stats.prefix_misses, 0);
+
+    // Shared run: three admissions declaring the prefix, same step.
+    let engine = Rc::new(Engine::cpu().unwrap());
+    let mut he = HybridEngine::init(engine, DIR, 0, false).unwrap();
+    he.use_paged_serving(true).unwrap();
+    let mut sched = Scheduler::new(he).unwrap();
+    for id in 0..3u64 {
+        sched
+            .submit(Request {
+                id,
+                prompt: prompt.clone(),
+                max_new: sg,
+                seed: None,
+                prefix_len: share,
+            })
+            .unwrap();
+    }
+    let mut done = sched.run_until_idle(&mut greedy()).unwrap();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 3);
+    for c in &done {
+        assert_eq!(c.tokens, want, "req {}: sharing must not move a single token", c.id);
+    }
+    let st = &sched.stats;
+    assert_eq!(st.prefix_misses, 1, "first admission registers");
+    assert_eq!(st.prefix_hits, 2, "the other two map the registered pages");
+    assert_eq!(st.reused_tokens, 2 * share as u64);
+    assert!(st.computed_tokens() < st.admitted_tokens(), "{st:?}");
+    assert!((st.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
 }

@@ -48,6 +48,16 @@ if [ -f artifacts/tiny/manifest.json ]; then
         else
             echo "verify: artifacts predate variable-length prompts — mixed-length smokes skipped (re-run \`make artifacts\`)"
         fi
+        if grep -q '"paged_kv": true' artifacts/tiny/manifest.json; then
+            # serve_loop's prefix-heavy phase flips the engine to the
+            # block-paged cache, admits a shared system prompt, and reports
+            # admitted vs computed tokens + cache hit rate in
+            # BENCH_serve.json; the integration goldens (paged ≡ arena
+            # bit-match, shared-prefix reuse) ran under `cargo test` above.
+            echo "verify: paged_kv capability present — serve bench covers the block-paged prefix-reuse phase"
+        else
+            echo "verify: artifacts predate the block-paged KV cache — paged smokes skipped (re-run \`make artifacts\`)"
+        fi
         echo "== verify: serve demo (continuous batching smoke) =="
         cargo run --release --example serve -- --demo
         if grep -q '"decode_slots_sampled"' artifacts/tiny/manifest.json; then
