@@ -6,7 +6,8 @@
 //! ```text
 //! make artifacts && cargo run --release --example e2e_rlhf -- \
 //!     [--run small] [--sft-steps 800] [--rm-steps 400] [--ppo-iters 200] \
-//!     [--rollout fixed|continuous] [--rollout-batch N] [--min-prompt-len L]
+//!     [--rollout fixed|continuous] [--rollout-batch N] [--min-prompt-len L] \
+//!     [--decode-chunk N]
 //! ```
 //!
 //! `--rollout continuous` streams Step-3 experience generation through the
@@ -19,6 +20,13 @@
 //! variable-length admission; needs artifacts with the `padded_prompts`
 //! capability). `--rollout fixed` (default) keeps the lockstep
 //! `HybridEngine::generate` path with exactly `b` prompts.
+//!
+//! `--decode-chunk N` (default 1) fuses N decode steps per scheduler
+//! dispatch during the continuous rollout: sampling moves fully on-device
+//! (counter-RNG categorical draw) and each artifact call returns N tokens
+//! per live slot, cutting host round-trips per generated token by ~N×.
+//! Needs `--rollout continuous` and artifacts built with the `decode_chunkN`
+//! capability (re-run `make artifacts` on older artifact sets).
 //!
 //! Recorded in EXPERIMENTS.md (§Real end-to-end run).
 
@@ -102,13 +110,27 @@ fn main() -> anyhow::Result<()> {
             "--min-prompt-len {min_prompt_len} exceeds the artifact prompt window {sp}"
         );
     }
+    let decode_chunk = args.usize("decode-chunk", 1);
+    anyhow::ensure!(decode_chunk > 0, "--decode-chunk must be at least 1");
+    if decode_chunk > 1 {
+        anyhow::ensure!(
+            rollout_batch > 0,
+            "--decode-chunk needs --rollout continuous (the fixed path dispatches one \
+             decode step at a time by design)"
+        );
+    }
     if rollout_batch > 0 {
         println!(
-            "rollout: continuous ({} prompts/iter through the slot scheduler, {} PPO batches{})",
+            "rollout: continuous ({} prompts/iter through the slot scheduler, {} PPO batches{}{})",
             rollout_batch,
             rollout_batch / batch,
             if min_prompt_len > 0 {
                 format!(", prompt lengths {}..={sp}", min_prompt_len.max(TaskGen::MIN_PROMPT_LEN))
+            } else {
+                String::new()
+            },
+            if decode_chunk > 1 {
+                format!(", fused decode chunks of {decode_chunk} (device RNG)")
             } else {
                 String::new()
             }
@@ -131,6 +153,7 @@ fn main() -> anyhow::Result<()> {
             ppo_epochs: 1,
             rollout_batch,
             min_prompt_len,
+            decode_chunk,
             ..Default::default()
         },
         ..Default::default()

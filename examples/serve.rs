@@ -30,11 +30,16 @@
 //!
 //! # Sampling backend
 //!
-//! `--backend auto|device|host` picks the [`dschat::sampling`] backend:
-//! `device` runs the fused sampling tail inside the `_sampled` artifacts
-//! (per-tick fetch is the `[b]` token ids — O(b) instead of the
-//! `[b, vocab]` logits matrix), `host` is the full-row path, and `auto`
-//! (default) uses the device tail whenever the artifact set has it.
+//! `--backend auto|device|host|rng` picks the [`dschat::sampling`]
+//! backend: `device` runs the fused sampling tail inside the `_sampled`
+//! artifacts (per-tick fetch is the `[b]` token ids — O(b) instead of the
+//! `[b, vocab]` logits matrix), `rng` the `_rng` artifacts whose
+//! counter-based Threefry draw also runs ON device (O(b) ids even for
+//! stochastic sampling), `host` is the full-row path, and `auto` (default)
+//! uses the best tail the artifact set carries. `--decode-chunk N` fuses N
+//! decode steps into one `decode_chunk{N}` artifact dispatch (requires the
+//! `rng` backend and paged serving; admission/retirement boundaries move
+//! to every N steps, dispatches/token drop ~N×).
 //!
 //! Per-request latency, queue depth, live-slot count, slot utilization /
 //! bubble fraction (the scheduler's occupancy counters — the same
@@ -43,7 +48,7 @@
 //!
 //! ```text
 //! cargo run --release --example serve -- [--run tiny] [--ckpt runs/tiny/actor.bin] \
-//!     [--port 7878] [--backend auto|device|host] \
+//!     [--port 7878] [--backend auto|device|host|rng] [--decode-chunk N] \
 //!     [--demo]                      # --demo: run 6 in-process requests and exit
 //! ```
 
@@ -58,7 +63,7 @@ use dschat::data::synthetic::{Mode, Prompt, TaskGen, Vocab};
 use dschat::hybrid::HybridEngine;
 use dschat::pipeline;
 use dschat::runtime::Engine;
-use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
+use dschat::sampling::{DeviceCategorical, DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
 use dschat::serving::{FinishReason, Request, Scheduler};
 use dschat::util::argparse::Args;
 use dschat::util::fmt_bytes;
@@ -123,7 +128,7 @@ fn enqueue(
     };
     let id = *next_id;
     *next_id += 1;
-    let req = Request { id, prompt: prompt.tokens.clone(), max_new, seed: None };
+    let req = Request { id, prompt: prompt.tokens.clone(), max_new, seed: None, prefix_len: 0 };
     match sched.submit(req) {
         Ok(()) => {
             pending.insert(id, Pending { prompt, reply: rl.reply, arrived: Instant::now() });
@@ -152,27 +157,65 @@ fn main() -> anyhow::Result<()> {
     let device_ready = m.artifacts.contains_key("decode_slots_sampled")
         && m.artifacts.contains_key("prefill_slot_sampled")
         && m.sample_k > 0;
+    let rng_ready = m.has_device_rng() && m.sample_k > 0;
     let padded_prompts = m.padded_prompts;
     let greedy_cfg = SamplerConfig { greedy: true, ..Default::default() };
-    let use_device = match args.str("backend", "auto").as_str() {
-        "device" => true,
-        "host" => false,
-        "auto" => device_ready,
-        other => anyhow::bail!("unknown --backend {other:?} (auto|device|host)"),
+    // Fused N-token decode: one artifact dispatch advances every live slot
+    // by up to N tokens (needs the device-RNG backend + paged serving).
+    let chunk = args.usize("decode-chunk", 1);
+    enum Backend {
+        Host,
+        Device,
+        Rng,
+    }
+    let backend = match args.str("backend", "auto").as_str() {
+        "device" => Backend::Device,
+        "host" => Backend::Host,
+        "rng" => Backend::Rng,
+        "auto" => {
+            if chunk > 1 && rng_ready {
+                Backend::Rng
+            } else if device_ready {
+                Backend::Device
+            } else {
+                Backend::Host
+            }
+        }
+        other => anyhow::bail!("unknown --backend {other:?} (auto|device|host|rng)"),
     };
-    let mut sampler: Box<dyn SamplingBackend> = if use_device {
-        Box::new(DeviceTopK::for_manifest(greedy_cfg, 0, m)?)
-    } else {
-        Box::new(HostFullRow::new(greedy_cfg, 0))
+    if chunk > 1 && !matches!(backend, Backend::Rng) {
+        anyhow::bail!(
+            "--decode-chunk {chunk} needs the device-RNG backend (`--backend rng`, or \
+             `auto` with `_rng` artifacts present — re-run `make artifacts` if missing)"
+        );
+    }
+    let (mut sampler, backend_desc): (Box<dyn SamplingBackend>, &str) = match backend {
+        Backend::Rng => (
+            Box::new(DeviceCategorical::new(greedy_cfg, m.sample_k, m.actor.vocab)?),
+            "device-RNG (fused categorical draw; per-tick fetch [b] token ids)",
+        ),
+        Backend::Device => (
+            Box::new(DeviceTopK::for_manifest(greedy_cfg, 0, m)?),
+            "device (fused sampling tail; per-tick fetch [b] token ids)",
+        ),
+        Backend::Host => (
+            Box::new(HostFullRow::new(greedy_cfg, 0)),
+            "host (full logits rows; per-tick fetch [b, vocab] logits)",
+        ),
     };
-    eprintln!(
-        "sampling backend: {} (per-tick fetch {})",
-        if use_device { "device (fused sampling tail)" } else { "host (full logits rows)" },
-        if use_device { "[b] token ids" } else { "[b, vocab] logits" },
-    );
+    eprintln!("sampling backend: {backend_desc}");
+    if chunk > 1 {
+        // Chunked decode serves from the block-paged pool (the
+        // `decode_chunk{N}` artifacts take block tables).
+        he.use_paged_serving(true)?;
+        eprintln!("fused decode chunks: {chunk} tokens per dispatch (paged serving)");
+    }
 
     // From here on the scheduler owns the engine (per-slot serving mode).
     let mut sched = Scheduler::new(he)?;
+    if chunk > 1 {
+        sched.set_decode_chunk(chunk)?;
+    }
     let tok0 = sched.engine.stats.gen_tokens;
     let (up0, down0) = sched.engine.engine.bytes_moved();
 
@@ -202,6 +245,7 @@ fn main() -> anyhow::Result<()> {
                 prompt: prompt.tokens.clone(),
                 max_new: sg,
                 seed: None,
+                prefix_len: 0,
             })?;
             prompts.insert(i as u64, prompt);
         }

@@ -28,6 +28,11 @@ from jax._src.lib import xla_client as xc
 from . import adam, model
 from .configs import run_config, run_config_names, to_dict
 
+# Chunk sizes baked as `decode_chunk{N}` artifacts (N = 1 is the stepwise
+# `decode_slots*` path). The scan length is compile-time, so each N is its
+# own artifact; the rust scheduler picks one via `--decode-chunk N`.
+DECODE_CHUNK_SIZES = (2, 4, 8)
+
 
 def to_hlo_text(lowered) -> str:
     mlir_mod = lowered.compiler_ir("stablehlo")
@@ -401,6 +406,180 @@ def build_entries(rc):
         kv_donate,
     )
 
+    # ---- device RNG: the `_rng` artifact family -----------------------------
+    # Same compute as the `_sampled` entries plus the device-side categorical
+    # draw (kernels/sampling.py `sample_draw_rows`): a counter-based
+    # Threefry-2x32 hash of each row's (request seed, generation step) feeds
+    # temperature/top-k/top-p over the top-k candidates ON DEVICE, so
+    # stochastic decode fetches O(B) sampled ids instead of O(B·K) candidate
+    # rows. Outputs gain `sampled_ids` at index 3; the greedy ids and top-k
+    # pair remain so one artifact serves every backend. Per-request stream
+    # determinism: the draw is a pure function of (seed, step), independent
+    # of slot index, admission order, and chunking.
+    seeds_b = _spec((B, 2), jnp.int32)
+    steps_b = _spec((B,), jnp.int32)
+    seeds_1 = _spec((1, 2), jnp.int32)
+    steps_1 = _spec((1,), jnp.int32)
+    sparams = _spec((3,))
+    rng_outputs = ["ids", "topk_logits", "topk_ids", "sampled_ids", "k_cache", "v_cache"]
+
+    def gen_prefill_rng(*args):
+        P = list(args[:na])
+        prompt, start, seeds, steps, sp = args[na:]
+        return model.prefill_rng(
+            a, model.unflatten_params(a, "lm", P), prompt, S, K, seeds, steps, sp, start
+        )
+
+    entries["prefill_rng"] = (
+        gen_prefill_rng,
+        _pspecs(a, "lm") + [_spec((B, SP), jnp.int32), start_b, seeds_b, steps_b, sparams],
+        rng_outputs,
+    )
+
+    def gen_decode_step_rng(*args):
+        P = list(args[:na])
+        kc, vc, token, pos, seeds, steps, sp = args[na:]
+        return model.decode_step_rng(
+            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, K, seeds, steps, sp
+        )
+
+    entries["decode_step_rng"] = (
+        gen_decode_step_rng,
+        _pspecs(a, "lm")
+        + [kv, kv, _spec((B,), jnp.int32), _spec((1,), jnp.int32), seeds_b, steps_b, sparams],
+        rng_outputs,
+        kv_donate,
+    )
+
+    def gen_prefill_slot_rng(*args):
+        P = list(args[:na])
+        kc, vc, prompt, slot, start, seeds, steps, sp = args[na:]
+        return model.prefill_slot_rng(
+            a, model.unflatten_params(a, "lm", P), kc, vc, prompt, slot, K, seeds, steps, sp, start
+        )
+
+    entries["prefill_slot_rng"] = (
+        gen_prefill_slot_rng,
+        _pspecs(a, "lm")
+        + [
+            kv,
+            kv,
+            _spec((1, SP), jnp.int32),
+            _spec((1,), jnp.int32),
+            _spec((1,), jnp.int32),
+            seeds_1,
+            steps_1,
+            sparams,
+        ],
+        rng_outputs,
+    )
+
+    def gen_decode_slots_rng(*args):
+        P = list(args[:na])
+        kc, vc, token, pos, start, seeds, steps, sp = args[na:]
+        return model.decode_slots_rng(
+            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, K, seeds, steps, sp, start
+        )
+
+    entries["decode_slots_rng"] = (
+        gen_decode_slots_rng,
+        _pspecs(a, "lm")
+        + [kv, kv, _spec((B,), jnp.int32), _spec((B,), jnp.int32), start_b, seeds_b, steps_b, sparams],
+        rng_outputs,
+        kv_donate,
+    )
+
+    def gen_prefill_slot_paged_rng(*args):
+        P = list(args[:na])
+        kc, vc, prompt, bt, last, seeds, steps, sp = args[na:]
+        return model.prefill_slot_paged_rng(
+            a, model.unflatten_params(a, "lm", P), kc, vc, prompt, bt, last, PS, K, seeds, steps, sp
+        )
+
+    entries["prefill_slot_paged_rng"] = (
+        gen_prefill_slot_paged_rng,
+        _pspecs(a, "lm")
+        + [
+            kv_paged,
+            kv_paged,
+            _spec((1, SP), jnp.int32),
+            bt_one,
+            _spec((1,), jnp.int32),
+            seeds_1,
+            steps_1,
+            sparams,
+        ],
+        rng_outputs,
+    )
+
+    def gen_decode_slots_paged_rng(*args):
+        P = list(args[:na])
+        kc, vc, token, pos, bt, seeds, steps, sp = args[na:]
+        return model.decode_slots_paged_rng(
+            a, model.unflatten_params(a, "lm", P), kc, vc, token, pos, bt, PS, K, seeds, steps, sp
+        )
+
+    entries["decode_slots_paged_rng"] = (
+        gen_decode_slots_paged_rng,
+        _pspecs(a, "lm")
+        + [kv_paged, kv_paged, _spec((B,), jnp.int32), _spec((B,), jnp.int32), bt_all, seeds_b, steps_b, sparams],
+        rng_outputs,
+        kv_donate,
+    )
+
+    # ---- fused N-step decode: the `decode_chunk{N}` artifacts ---------------
+    # `jax.lax.scan` over decode_slots_paged + the device-RNG sampling tail:
+    # one dispatch advances every live slot by up to N tokens and returns the
+    # [N, B] emitted ids — dispatches/token drop ~N× on top of the _rng
+    # family's O(B) bytes/token. A per-row latch freezes rows that emit EOS
+    # or exhaust `quota` mid-chunk (idempotent re-writes of their last live
+    # K/V row, no further RNG consumption), so chunked greedy decode is
+    # bit-identical to N stepwise ticks including mid-chunk retirement.
+    chunk_outputs = ["chunk_ids", "k_cache", "v_cache"]
+    for N in DECODE_CHUNK_SIZES:
+
+        def gen_decode_chunk(*args, _n=N):
+            P = list(args[:na])
+            kc, vc, token, pos, bt, seeds, steps, quota, frozen, eos, sp = args[na:]
+            return model.decode_chunk_paged(
+                a,
+                model.unflatten_params(a, "lm", P),
+                kc,
+                vc,
+                token,
+                pos,
+                bt,
+                PS,
+                _n,
+                K,
+                seeds,
+                steps,
+                quota,
+                frozen,
+                eos,
+                sp,
+            )
+
+        entries[f"decode_chunk{N}"] = (
+            gen_decode_chunk,
+            _pspecs(a, "lm")
+            + [
+                kv_paged,
+                kv_paged,
+                _spec((B,), jnp.int32),
+                _spec((B,), jnp.int32),
+                bt_all,
+                seeds_b,
+                steps_b,
+                _spec((B,), jnp.int32),
+                _spec((B,), jnp.int32),
+                _spec((1,), jnp.int32),
+                sparams,
+            ],
+            chunk_outputs,
+            kv_donate,
+        )
+
     # ---- step 3: PPO updates ----------------------------------------------
     arr = _spec((B, S - 1))
 
@@ -496,6 +675,16 @@ def build(run_name: str, out_dir: str, only=None):
     # pool geometry. Pre-paging builds parse with the flag absent -> false
     # and the rust runtime refuses paged serving against them.
     cfg_dict["paged_kv"] = True
+    # Capability flag: the `_rng` entries exist — the categorical draw runs
+    # ON DEVICE from a counter-based Threefry hash of (request seed, step),
+    # so stochastic decode fetches O(B) sampled ids. The rust runtime
+    # refuses the DeviceCategorical backend against artifact sets that lack
+    # it (older builds parse with the flag absent -> false).
+    cfg_dict["device_rng"] = True
+    # Capability list: fused N-step decode artifacts (`decode_chunk{N}`,
+    # scan over decode_slots_paged + the device-RNG tail). The rust
+    # scheduler refuses `--decode-chunk N` for N not in this list.
+    cfg_dict["decode_chunk_sizes"] = list(DECODE_CHUNK_SIZES)
     manifest = {
         "run": run_name,
         "config": cfg_dict,

@@ -143,6 +143,94 @@ def argmax_ref(x):
     return jnp.argmax(x, axis=-1).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Counter-based device RNG (Threefry-2x32) + the categorical draw it feeds.
+#
+# The device sampling tail draws its own uniform from a keyed counter hash
+# instead of consuming a host RNG stream: the draw for generation step `s` of
+# a request is a pure function of (request_seed, s), so per-request stream
+# determinism survives admission reordering, slot reassignment, and N-step
+# fused dispatch — the same replayability contract rollout::request_seed
+# gives the host sampler, moved on device. The rust runtime mirrors the hash
+# bit-for-bit (rust/src/sampling/device.rs); both sides pin the Random123
+# known-answer vectors.
+# ---------------------------------------------------------------------------
+
+_THREEFRY_ROT = (13, 15, 26, 6, 17, 29, 16, 24)
+
+
+def _rotl32(x, r):
+    x = x.astype(jnp.uint32)
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32_ref(k0, k1, x0, x1):
+    """Threefry-2x32, 20 rounds (Random123). Inputs broadcastable int/uint32
+    arrays (int32 reinterpreted as uint32); returns (uint32, uint32)."""
+    k0, k1, x0, x1 = (jnp.asarray(v).astype(jnp.uint32) for v in (k0, k1, x0, x1))
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(0x1BD11BDA))
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for j in range(5):
+        for r in _THREEFRY_ROT[(j % 2) * 4 : (j % 2) * 4 + 4]:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, r) ^ x0
+        x0 = x0 + ks[(j + 1) % 3]
+        x1 = x1 + ks[(j + 2) % 3] + jnp.uint32(j + 1)
+    return x0, x1
+
+
+def counter_uniform_ref(seeds, steps):
+    """Keyed uniform in [0, 1): one draw per row, no carried state.
+
+    seeds: [b, 2] int32 — the request seed's (hi, lo) words (the rust side
+    splits its u64 `request_seed`); steps: [b] int32 — the row's generation
+    step counter. Returns [b] f32. The u32 -> f32 mapping is the host RNG's
+    `(u >> 8) * 2^-24` so both samplers draw from the same 24-bit grid.
+    """
+    x0, _ = threefry2x32_ref(seeds[..., 0], seeds[..., 1], steps, jnp.zeros_like(steps))
+    return (x0 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def draw_index_ref(vals, u, temp, top_k, top_p):
+    """Categorical draw over ONE row of descending top-k candidate logits.
+
+    vals: [k] f32 (sorted descending); u: scalar f32 in [0, 1); temp <= 0
+    selects argmax (index 0); top_k <= 0 disables the count cutoff; top_p
+    keeps the smallest prefix whose mass reaches top_p (the first candidate
+    is always kept). Returns the scalar int32 index into the candidate row.
+    Shared verbatim by the Pallas kernel and the vectorized oracle so the
+    two are bit-identical by construction.
+    """
+    k = vals.shape[0]
+    j = jnp.arange(k, dtype=jnp.float32)
+    kk = jnp.where(top_k > 0, top_k, jnp.float32(k))
+    scaled = jnp.where(j < kk, vals.astype(jnp.float32) / jnp.maximum(temp, 1e-6), NEG_INF)
+    scaled = scaled - scaled[0]  # stabilize: top candidate pins exp at 1
+    p = jnp.exp(scaled)
+    p = p / p.sum()
+    csum = jnp.cumsum(p)
+    w = jnp.where((csum - p) < top_p, p, 0.0)
+    cw = jnp.cumsum(w)
+    idx = jnp.argmax(cw > u * cw[-1]).astype(jnp.int32)
+    return jnp.where(temp > 0, idx, 0).astype(jnp.int32)
+
+
+def device_draw_ref(tv, ti, seeds, steps, sparams):
+    """Device-side categorical draw (sampling-tail oracle).
+
+    tv, ti: [b, k] top-k candidate logits/ids (descending); seeds: [b, 2]
+    int32; steps: [b] int32; sparams: [3] f32 = (temperature, top_k, top_p).
+    Returns [b] int32 sampled token ids; temperature <= 0 is greedy (ti[:, 0],
+    bit-equal to argmax by the shared first-index tie-break).
+    """
+    u = counter_uniform_ref(seeds, steps)
+    idx = jax.vmap(lambda v, uu: draw_index_ref(v, uu, sparams[0], sparams[1], sparams[2]))(
+        tv, u
+    )
+    return jnp.take_along_axis(ti, idx[:, None], axis=1)[:, 0].astype(jnp.int32)
+
+
 def top_k_ref(x, k):
     """Row-wise top-k candidates (sampling-tail oracle).
 

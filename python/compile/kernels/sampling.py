@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import NEG_INF
+from .ref import NEG_INF, draw_index_ref, threefry2x32_ref
 
 
 def _argmax_kernel(x_ref, o_ref):
@@ -96,3 +96,48 @@ def top_k_rows(x, k):
         ],
         interpret=True,
     )(x)
+
+
+def _draw_kernel(tv_ref, ti_ref, seeds_ref, steps_ref, sp_ref, o_ref):
+    vals = pl.load(tv_ref, (pl.dslice(0, 1), slice(None)))[0].astype(jnp.float32)
+    ids = pl.load(ti_ref, (pl.dslice(0, 1), slice(None)))[0]
+    seed = pl.load(seeds_ref, (pl.dslice(0, 1), slice(None)))[0]
+    step = pl.load(steps_ref, (pl.dslice(0, 1),))[0]
+    sp = pl.load(sp_ref, (pl.dslice(0, 3),))
+    x0, _ = threefry2x32_ref(seed[0], seed[1], step, jnp.int32(0))
+    u = (x0 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+    idx = draw_index_ref(vals, u, sp[0], sp[1], sp[2])
+    o_ref[...] = ids[idx].astype(jnp.int32)[None]
+
+
+def sample_draw_rows(tv, ti, seeds, steps, sparams):
+    """Device-side categorical draw over top-k candidate rows.
+
+    The per-row uniform comes from the counter-based Threefry-2x32 hash of
+    `(seeds[r], steps[r])` — a pure function of the request key and its
+    generation step, so the draw stream is reproducible regardless of which
+    slot the request occupies, when it was admitted, or whether the step ran
+    alone or inside a fused N-step chunk. The draw itself is
+    temperature -> top-k cutoff -> top-p prefix -> categorical over the
+    descending candidates; temperature <= 0 degrades to argmax (index 0).
+
+    tv, ti: [b, k] (descending, from `top_k_rows`); seeds: [b, 2] int32;
+    steps: [b] int32; sparams: [3] f32 (temperature, top_k, top_p).
+    Returns sampled token ids [b] int32.
+    """
+    b, k = tv.shape
+    assert ti.shape == (b, k) and seeds.shape == (b, 2) and steps.shape == (b,)
+    return pl.pallas_call(
+        _draw_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(tv, ti, seeds, steps, sparams)

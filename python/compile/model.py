@@ -29,7 +29,7 @@ from .kernels.decode import (
     decode_attention_pbs,
 )
 from .kernels.layernorm import layernorm as layernorm_pallas
-from .kernels.sampling import argmax_rows, top_k_rows
+from .kernels.sampling import argmax_rows, sample_draw_rows, top_k_rows
 
 # ---------------------------------------------------------------------------
 # LayerNorm: Pallas forward + analytic VJP (pallas_call has no autodiff rule).
@@ -643,6 +643,180 @@ def decode_slots_paged_sampled(
     )
     ids, tv, ti = sample_tail(logits, k)
     return ids, tv, ti, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Device RNG sampling tail (the `_rng` artifact variants) + fused N-step
+# decode (the `decode_chunk{N}` artifacts)
+#
+# The `_sampled` family still ships the O(b·k) top-k candidates so the host
+# can finish a stochastic draw with its own RNG. The `_rng` family finishes
+# the draw ON DEVICE from a counter-based Threefry hash of (request_seed,
+# step) — stochastic traffic drops to O(b) sampled ids — and the chunk
+# entries then amortize dispatch by scanning N decode steps inside one
+# artifact call, with a per-row freeze latch so rows that emit EOS (or
+# exhaust their budget) mid-chunk stop advancing: no garbage KV writes, no
+# RNG draws after retirement.
+# ---------------------------------------------------------------------------
+
+
+def sample_tail_rng(logits, k, seeds, steps, sparams):
+    """`sample_tail` plus the device-side categorical draw.
+
+    logits: [b, vocab]; seeds: [b, 2] i32; steps: [b] i32; sparams: [3] f32
+    (temperature, top_k, top_p; temperature <= 0 -> greedy). Returns
+    (ids [b], topk_logits [b, k], topk_ids [b, k], sampled_ids [b]).
+    """
+    ids = argmax_rows(logits)
+    tv, ti = top_k_rows(logits, k)
+    sampled = sample_draw_rows(tv, ti, seeds, steps, sparams)
+    return ids, tv, ti, sampled
+
+
+def prefill_rng(cfg, params, prompt, smax, k, seeds, steps, sparams, start=None):
+    """`prefill` with the device-RNG sampling tail."""
+    logits, kc, vc = prefill(cfg, params, prompt, smax, start)
+    ids, tv, ti, sampled = sample_tail_rng(logits, k, seeds, steps, sparams)
+    return ids, tv, ti, sampled, kc, vc
+
+
+def decode_step_rng(cfg, params, k_cache, v_cache, token, pos, k, seeds, steps, sparams):
+    """`decode_step` with the device-RNG sampling tail."""
+    logits, kc, vc = decode_step(cfg, params, k_cache, v_cache, token, pos)
+    ids, tv, ti, sampled = sample_tail_rng(logits, k, seeds, steps, sparams)
+    return ids, tv, ti, sampled, kc, vc
+
+
+def prefill_slot_rng(cfg, params, k_cache, v_cache, prompt, slot, k, seeds, steps, sparams, start=None):
+    """`prefill_slot` with the device-RNG sampling tail."""
+    logits, kc, vc = prefill_slot(cfg, params, k_cache, v_cache, prompt, slot, start)
+    ids, tv, ti, sampled = sample_tail_rng(logits, k, seeds, steps, sparams)
+    return ids, tv, ti, sampled, kc, vc
+
+
+def decode_slots_rng(cfg, params, k_cache, v_cache, token, pos, k, seeds, steps, sparams, start=None):
+    """`decode_slots` with the device-RNG sampling tail."""
+    logits, kc, vc = decode_slots(cfg, params, k_cache, v_cache, token, pos, start)
+    ids, tv, ti, sampled = sample_tail_rng(logits, k, seeds, steps, sparams)
+    return ids, tv, ti, sampled, kc, vc
+
+
+def prefill_slot_paged_rng(
+    cfg, params, k_cache, v_cache, prompt, block_table, last, page_size, k, seeds, steps, sparams
+):
+    """`prefill_slot_paged` with the device-RNG sampling tail."""
+    logits, kc, vc = prefill_slot_paged(
+        cfg, params, k_cache, v_cache, prompt, block_table, last, page_size
+    )
+    ids, tv, ti, sampled = sample_tail_rng(logits, k, seeds, steps, sparams)
+    return ids, tv, ti, sampled, kc, vc
+
+
+def decode_slots_paged_rng(
+    cfg, params, k_cache, v_cache, token, pos, block_tables, page_size, k, seeds, steps, sparams
+):
+    """`decode_slots_paged` with the device-RNG sampling tail."""
+    logits, kc, vc = decode_slots_paged(
+        cfg, params, k_cache, v_cache, token, pos, block_tables, page_size
+    )
+    ids, tv, ti, sampled = sample_tail_rng(logits, k, seeds, steps, sparams)
+    return ids, tv, ti, sampled, kc, vc
+
+
+def decode_chunk_loop(step_fn, draw_fn, caches, token, pos, steps, quota, frozen, n, eos_id):
+    """Fused N-step decode loop with a per-row EOS/budget freeze latch.
+
+    The scan's step-j semantics are EXACTLY one stepwise decode+sample tick:
+    run the model on each row's last accepted token, draw its next token,
+    append. Rows freeze when they draw `eos_id` or exhaust `quota`; frozen
+    rows re-feed their last live (token, pos) — per-row decode attention
+    makes the re-run write bit-identical K/V to the same destinations
+    (idempotent: the freshly drawn EOS/overflow token is never written, just
+    as the stepwise scheduler never decodes a retired row) — emit `eos_id`
+    as a don't-care filler, and do NOT advance their step counter, so the
+    request's RNG stream position equals the number of tokens it actually
+    accepted and a resumed/stepwise replay continues the identical stream.
+
+    step_fn(caches, token, pos) -> (logits [b, vocab], caches)
+    draw_fn(logits, steps)      -> next ids [b] i32
+    token, pos, steps, quota: [b] i32; frozen: [b] bool (True = dead slot).
+    Returns (ids [n, b] i32 — trailing entries of frozen rows are eos_id —
+    and the final caches).
+
+    The loop is UNROLLED (n is baked per artifact, one `decode_chunk{n}`
+    entry each) rather than a `lax.scan`: the image's jax cannot discharge
+    interpret-mode Pallas state through a scan body, and unrolling lowers to
+    the same single-dispatch artifact the scan would.
+    """
+    eos = jnp.int32(eos_id) if not hasattr(eos_id, "dtype") else eos_id
+    tok, p, st, q, fz = token, pos, steps, quota, frozen
+    emitted = []
+    for _ in range(n):
+        logits, caches = step_fn(caches, tok, p)
+        drawn = draw_fn(logits, st)
+        emit = jnp.where(fz, eos, drawn)
+        q2 = jnp.where(fz, q, q - 1)
+        fz2 = fz | (emit == eos) | (q2 <= 0)
+        tok = jnp.where(fz2, tok, emit)
+        p = jnp.where(fz2, p, p + 1)
+        st = jnp.where(fz, st, st + 1)
+        q, fz = q2, fz2
+        emitted.append(emit)
+    return jnp.stack(emitted), caches
+
+
+def decode_chunk_paged(
+    cfg,
+    params,
+    k_cache,
+    v_cache,
+    token,
+    pos,
+    block_tables,
+    page_size,
+    n,
+    k,
+    seeds,
+    steps,
+    quota,
+    frozen,
+    eos,
+    sparams,
+):
+    """N fused `decode_slots_paged` + device-RNG sampling steps in one call.
+
+    One dispatch advances every live slot by up to `n` tokens; the host sees
+    only the [n, b] emitted ids (O(b) bytes per token, 1/n dispatches per
+    token). `frozen`: [b] i32 (nonzero = dead slot — its PAD/garbage-page
+    tick repeats exactly as in stepwise decode); `quota`: [b] i32 remaining
+    generation budget; `eos`: [1] i32. Greedy (sparams[0] <= 0) emissions are
+    bit-identical to n stepwise `decode_slots_paged` + argmax ticks.
+    """
+
+    def step_fn(caches, tok, p):
+        kc, vc = caches
+        logits, kc, vc = decode_slots_paged(
+            cfg, params, kc, vc, tok, p, block_tables, page_size
+        )
+        return logits, (kc, vc)
+
+    def draw_fn(logits, st):
+        tv, ti = top_k_rows(logits, k)
+        return sample_draw_rows(tv, ti, seeds, st, sparams)
+
+    ids, (kc, vc) = decode_chunk_loop(
+        step_fn,
+        draw_fn,
+        (k_cache, v_cache),
+        token,
+        pos,
+        steps,
+        quota,
+        frozen != 0,
+        n,
+        eos[0],
+    )
+    return ids, kc, vc
 
 
 def ema_update(ema_flat, params_flat, decay):

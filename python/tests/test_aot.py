@@ -51,10 +51,17 @@ def test_entry_names_complete(entries):
         "decode_slots_sampled",
         "prefill_slot_paged_sampled",
         "decode_slots_paged_sampled",
+        "prefill_rng",
+        "decode_step_rng",
+        "prefill_slot_rng",
+        "decode_slots_rng",
+        "prefill_slot_paged_rng",
+        "decode_slots_paged_rng",
         "ppo_actor_step",
         "ppo_critic_step",
         "ema_update",
     }
+    expected |= {f"decode_chunk{n}" for n in aot.DECODE_CHUNK_SIZES}
     assert set(entries) == expected
 
 
@@ -70,7 +77,10 @@ def test_decode_entries_donate_kv(entries):
         "decode_step_sampled",
         "decode_slots_sampled",
         "decode_slots_paged_sampled",
-    }
+        "decode_step_rng",
+        "decode_slots_rng",
+        "decode_slots_paged_rng",
+    } | {f"decode_chunk{n}" for n in aot.DECODE_CHUNK_SIZES}
     for name, entry in entries.items():
         donate = tuple(entry[3]) if len(entry) > 3 else ()
         if name in donated:

@@ -1,0 +1,458 @@
+"""Fused device-side RNG sampling + N-step decode dispatch.
+
+These pin the invariants the rust `DeviceCategorical` backend and the
+chunked scheduler path rely on:
+
+  * the counter hash is Threefry-2x32 exactly (Random123 known-answer
+    vectors, cross-checked against jax's own implementation when
+    importable) — the rust mirror in rust/src/sampling/device.rs pins the
+    same vectors, which is what makes mock-engine unit tests and the real
+    device stream agree on keyed determinism;
+  * `sample_draw_rows` (the Pallas draw kernel) is bit-identical to the
+    pure-jnp oracle `device_draw_ref`, greedy (temperature <= 0) degrades
+    to the argmax candidate, and the draw is a pure function of
+    (seed, step) — invariant under row reordering, i.e. admission order
+    and slot assignment;
+  * `decode_chunk_loop`'s per-row latch: a fused N-step scan emits exactly
+    what N stepwise decode+sample ticks emit, rows freeze on EOS or budget
+    exhaustion (trailing emissions are EOS filler, step counters stop, the
+    frozen row's K/V writes are idempotent re-writes of its last live row);
+  * model-level: greedy `decode_chunk_paged` bit-matches stepwise
+    `decode_slots_paged` + argmax including a mid-chunk EOS retirement, and
+    the stochastic chunk replays the stepwise `_rng` stream exactly.
+
+As in test_paged.py the attention/LN Pallas kernels are swapped for their
+jnp oracles; the sampling kernels under test run for real.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import run_config
+from compile.kernels import ref
+from compile.kernels.sampling import sample_draw_rows, top_k_rows
+
+RC = run_config("nano")
+PS = RC.page_size
+MB = RC.kv_blocks_per_slot
+PAD = 0  # mirrors the rust Vocab::PAD token
+
+
+@pytest.fixture(autouse=True)
+def ref_kernels(monkeypatch):
+    """Run the transformer on the pure-jnp kernel oracles; the sampling
+    kernels stay real — they are what is under test."""
+    monkeypatch.setattr(model, "layernorm", ref.layernorm_ref)
+    monkeypatch.setattr(model, "flash_attention", ref.attention_ref)
+    monkeypatch.setattr(model, "flash_attention_fwd", ref.attention_ref)
+    monkeypatch.setattr(model, "flash_attention_padded_fwd", ref.attention_padded_ref)
+    monkeypatch.setattr(model, "decode_attention", ref.decode_attention_ref)
+    monkeypatch.setattr(model, "decode_attention_pb", ref.decode_attention_pb_ref)
+    monkeypatch.setattr(model, "decode_attention_pbs", ref.decode_attention_pbs_ref)
+    monkeypatch.setattr(model, "decode_attention_paged", ref.decode_attention_paged_ref)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(RC.actor, "lm", jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# counter RNG: Threefry-2x32
+# ---------------------------------------------------------------------------
+
+
+def test_threefry_known_answer_vectors():
+    """Random123 KAT vectors for threefry2x32, 20 rounds — also pinned by
+    the rust mirror (sampling::device tests)."""
+    x0, x1 = ref.threefry2x32_ref(0, 0, 0, 0)
+    assert (int(x0), int(x1)) == (0x6B200159, 0x99BA4EFE)
+    m = np.uint32(0xFFFFFFFF)
+    x0, x1 = ref.threefry2x32_ref(m, m, m, m)
+    assert (int(x0), int(x1)) == (0x1CB996FC, 0xBB002BE7)
+    x0, x1 = ref.threefry2x32_ref(
+        np.uint32(0x13198A2E), np.uint32(0x03707344), np.uint32(0x243F6A88), np.uint32(0x85A308D3)
+    )
+    assert (int(x0), int(x1)) == (0xC4923A9C, 0x483DF7A0)
+
+
+def test_threefry_matches_jax_internal():
+    try:
+        from jax._src.prng import threefry_2x32
+    except ImportError:
+        pytest.skip("jax internal threefry not importable")
+    key = jax.random.randint(jax.random.PRNGKey(3), (2,), 0, 2**31 - 1).astype(jnp.uint32)
+    ctr = jax.random.randint(jax.random.PRNGKey(4), (2,), 0, 2**31 - 1).astype(jnp.uint32)
+    ours = ref.threefry2x32_ref(key[0], key[1], ctr[0], ctr[1])
+    theirs = threefry_2x32(key, ctr)
+    assert int(ours[0]) == int(theirs[0]) and int(ours[1]) == int(theirs[1])
+
+
+def test_counter_uniform_pinned_and_ranged():
+    """Pinned (seed, step) -> uniform words shared with the rust mirror."""
+    cases = [((0, 0), 0, 0x6B200159), ((1, 2), 3, 0x8E9A2EAB), ((-1, -2), 7, 0x6D06F4B6)]
+    for (hi, lo), st, word in cases:
+        s = jnp.array([[hi, lo]], jnp.int32)
+        t = jnp.array([st], jnp.int32)
+        u = float(ref.counter_uniform_ref(s, t)[0])
+        assert u == (word >> 8) * 2.0**-24
+    seeds = jax.random.randint(jax.random.PRNGKey(0), (64, 2), -(2**31), 2**31 - 1, jnp.int32)
+    steps = jnp.arange(64, dtype=jnp.int32)
+    u = np.asarray(ref.counter_uniform_ref(seeds, steps))
+    assert (u >= 0).all() and (u < 1).all()
+    # stateless: same key/step -> same value on every call
+    np.testing.assert_array_equal(u, np.asarray(ref.counter_uniform_ref(seeds, steps)))
+
+
+# ---------------------------------------------------------------------------
+# draw kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+def candidates(seed, b, vocab, k):
+    tv, ti = ref.top_k_ref(3.0 * jax.random.normal(jax.random.PRNGKey(seed), (b, vocab)), k)
+    seeds = jax.random.randint(jax.random.PRNGKey(seed + 100), (b, 2), -(2**31), 2**31 - 1)
+    return tv, ti, seeds.astype(jnp.int32), jnp.arange(b, dtype=jnp.int32)
+
+
+@pytest.mark.parametrize(
+    "sp", [(1.0, 0.0, 1.0), (0.7, 4.0, 0.9), (0.0, 0.0, 1.0), (50.0, 0.0, 0.95), (1.3, 2.0, 0.5)]
+)
+@pytest.mark.parametrize("b,vocab,k", [(1, 16, 4), (5, 64, 8), (3, 256, 32)])
+def test_sample_draw_rows_matches_oracle(b, vocab, k, sp):
+    tv, ti, seeds, steps = candidates(b + vocab, b, vocab, k)
+    spa = jnp.array(sp, jnp.float32)
+    got = sample_draw_rows(tv, ti, seeds, steps, spa)
+    want = ref.device_draw_ref(tv, ti, seeds, steps, spa)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # every sampled id is one of the row's candidates
+    for r in range(b):
+        assert int(got[r]) in set(np.asarray(ti[r]).tolist())
+
+
+def test_greedy_draw_is_argmax():
+    tv, ti, seeds, steps = candidates(9, 6, 128, 8)
+    spa = jnp.array([0.0, 0.0, 1.0], jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(sample_draw_rows(tv, ti, seeds, steps, spa)), np.asarray(ti[:, 0])
+    )
+
+
+def test_draw_stream_is_reorder_invariant():
+    """The draw depends only on (seed, step) and the row's candidates — not
+    on the row index. This is the device half of the per-request stream
+    determinism golden: admission order / slot assignment cannot change a
+    request's tokens."""
+    tv, ti, seeds, steps = candidates(11, 6, 64, 8)
+    spa = jnp.array([0.9, 0.0, 1.0], jnp.float32)
+    base = np.asarray(sample_draw_rows(tv, ti, seeds, steps, spa))
+    perm = np.array([3, 0, 5, 1, 4, 2])
+    shuffled = np.asarray(
+        sample_draw_rows(tv[perm], ti[perm], seeds[perm], steps[perm], spa)
+    )
+    np.testing.assert_array_equal(shuffled, base[perm])
+
+
+def test_top_k_top_p_cutoffs_restrict_support():
+    tv, ti, seeds, _ = candidates(13, 4, 64, 8)
+    # steps sweep: many draws from one row's stream stay within the top-2
+    steps = jnp.arange(4, dtype=jnp.int32)
+    spa = jnp.array([5.0, 2.0, 1.0], jnp.float32)  # hot temp, top_k=2
+    for st in range(16):
+        got = sample_draw_rows(tv, ti, seeds, steps + st * 4, spa)
+        for r in range(4):
+            assert int(got[r]) in (int(ti[r, 0]), int(ti[r, 1]))
+    # top_p -> 0 keeps only the first candidate regardless of temperature
+    spa = jnp.array([5.0, 0.0, 1e-9], jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(sample_draw_rows(tv, ti, seeds, steps, spa)), np.asarray(ti[:, 0])
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode_chunk_loop latch semantics (toy step function)
+# ---------------------------------------------------------------------------
+
+
+def toy_step(caches, tok, p):
+    """Toy 'model': caches is a [b, smax] write log; logits one-hot at
+    (tok * 3 + 1) % VOCAB so the greedy next token is a deterministic
+    function of the current one."""
+    VOCAB = 32
+    b = tok.shape[0]
+    caches = caches.at[jnp.arange(b), p].set(tok)
+    nxt = (tok * 3 + 1) % VOCAB
+    logits = jax.nn.one_hot(nxt, VOCAB, dtype=jnp.float32)
+    return logits, caches
+
+
+def toy_draw(logits, st):
+    return jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def run_toy_chunk(token, quota, frozen, n, eos, steps=None):
+    b = token.shape[0]
+    caches = jnp.full((b, 16), -1, jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    st = jnp.zeros((b,), jnp.int32) if steps is None else steps
+    return model.decode_chunk_loop(
+        toy_step, toy_draw, caches, token, pos, st, quota, frozen, n, eos
+    )
+
+
+def test_chunk_loop_matches_step_loop_no_freezing():
+    b, n = 3, 6
+    token = jnp.array([1, 2, 5], jnp.int32)
+    ids, caches = run_toy_chunk(token, jnp.full((b,), 100, jnp.int32), jnp.zeros((b,), bool), n, -1)
+    # manual stepwise replay
+    tok = token
+    cj = jnp.full((b, 16), -1, jnp.int32)
+    p = jnp.zeros((b,), jnp.int32)
+    want = []
+    for _ in range(n):
+        logits, cj = toy_step(cj, tok, p)
+        tok = toy_draw(logits, None)
+        want.append(np.asarray(tok))
+        p = p + 1
+    np.testing.assert_array_equal(np.asarray(ids), np.stack(want))
+    np.testing.assert_array_equal(np.asarray(caches), np.asarray(cj))
+
+
+def test_chunk_loop_eos_latch_freezes_row():
+    """Row 0's toy chain is 1 -> 4 -> 13 -> 8 -> 25...; with eos=13 it must
+    emit [4, 13, eos-filler...], stop writing past its last live position,
+    and stop advancing its step counter. Row 1 (no EOS in range) runs all n."""
+    n, eos = 5, 13
+    token = jnp.array([1, 2], jnp.int32)
+    steps0 = jnp.array([10, 20], jnp.int32)
+    ids, caches = run_toy_chunk(
+        token, jnp.full((2,), 100, jnp.int32), jnp.zeros((2,), bool), n, eos, steps0
+    )
+    ids = np.asarray(ids)
+    np.testing.assert_array_equal(ids[:, 0], [4, 13, eos, eos, eos])
+    assert (ids[:, 1] != eos).all()
+    caches = np.asarray(caches)
+    # row 0 accepted token 4 (wrote 1@0, 4@1); the EOS itself is never
+    # written and the frozen iterations only re-write 4@1 idempotently.
+    np.testing.assert_array_equal(caches[0, :3], [1, 4, -1])
+    np.testing.assert_array_equal(caches[1, :n], [2, 7, 22, 3, 10])
+
+
+def test_chunk_loop_quota_freeze():
+    """quota=2: the row emits exactly 2 tokens then EOS filler, matching the
+    stepwise Length retirement (the budget-exhausting token is kept)."""
+    ids, caches = run_toy_chunk(
+        jnp.array([1, 1], jnp.int32),
+        jnp.array([2, 100], jnp.int32),
+        jnp.zeros((2,), bool),
+        4,
+        -7,
+    )
+    ids = np.asarray(ids)
+    np.testing.assert_array_equal(ids[:, 0], [4, 13, -7, -7])
+    np.testing.assert_array_equal(ids[:, 1], [4, 13, 8, 25])
+    # the frozen row never wrote its overflow token
+    np.testing.assert_array_equal(np.asarray(caches)[0, :3], [1, 4, -1])
+
+
+def test_chunk_loop_dead_rows_emit_filler_and_consume_nothing():
+    token = jnp.array([1, 2], jnp.int32)
+    ids, _ = run_toy_chunk(
+        token, jnp.array([0, 100], jnp.int32), jnp.array([True, False]), 3, -9
+    )
+    ids = np.asarray(ids)
+    np.testing.assert_array_equal(ids[:, 0], [-9, -9, -9])
+    assert (ids[:, 1] != -9).all()
+
+
+# ---------------------------------------------------------------------------
+# model-level: chunked vs stepwise paged decode
+# ---------------------------------------------------------------------------
+
+BT = np.array([[3, 5], [1, 6]], np.int32)
+
+
+def paged_zero_caches():
+    a = RC.actor
+    shape = (a.n_layers, a.n_heads, RC.kv_pages * PS, a.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def prefill_slots(params):
+    a, sp = RC.actor, RC.prompt_len
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(5), (RC.batch, sp), 1, a.vocab
+    ).astype(jnp.int32)
+    kc, vc = paged_zero_caches()
+    toks = []
+    for s in range(RC.batch):
+        logits, kc, vc = model.prefill_slot_paged(
+            a, params, kc, vc, prompts[s : s + 1], jnp.asarray(BT[s : s + 1]),
+            jnp.array([sp - 1], jnp.int32), PS,
+        )
+        toks.append(int(jnp.argmax(logits[0])))
+    tok = jnp.array(toks, jnp.int32)
+    pos = jnp.full((RC.batch,), sp, jnp.int32)
+    return kc, vc, tok, pos
+
+
+GREEDY = jnp.array([0.0, 0.0, 1.0], jnp.float32)
+
+
+def test_chunked_greedy_matches_stepwise(params):
+    """decode_chunk4 == four decode_slots_paged + argmax ticks, bit-exact
+    (ids and caches)."""
+    a, n = RC.actor, 4
+    kc, vc, tok, pos = prefill_slots(params)
+    seeds = jnp.zeros((RC.batch, 2), jnp.int32)
+    steps = jnp.zeros((RC.batch,), jnp.int32)
+    ids, kc_c, vc_c = model.decode_chunk_paged(
+        a, params, kc, vc, tok, pos, jnp.asarray(BT), PS, n, RC.sample_k,
+        seeds, steps, jnp.full((RC.batch,), 100, jnp.int32),
+        jnp.zeros((RC.batch,), jnp.int32), jnp.array([-1], jnp.int32), GREEDY,
+    )
+    kc_s, vc_s, t, p = kc, vc, tok, pos
+    want = []
+    for _ in range(n):
+        logits, kc_s, vc_s = model.decode_slots_paged(
+            a, params, kc_s, vc_s, t, p, jnp.asarray(BT), PS
+        )
+        t = jnp.argmax(logits, -1).astype(jnp.int32)
+        want.append(np.asarray(t))
+        p = p + 1
+    np.testing.assert_array_equal(np.asarray(ids), np.stack(want))
+    np.testing.assert_array_equal(np.asarray(kc_c), np.asarray(kc_s))
+    np.testing.assert_array_equal(np.asarray(vc_c), np.asarray(vc_s))
+
+
+def test_chunked_greedy_mid_chunk_eos_matches_retirement(params):
+    """Pick eos = row 0's second greedy emission: the chunk must emit
+    [t1, eos, filler, filler] for row 0, keep row 1 bit-identical to the
+    no-EOS run, and leave every non-garbage page bit-identical to a stepwise
+    schedule that retires row 0 (parking it as a dead slot on garbage page
+    0) after the EOS — the idempotent-rewrite claim, verified on real
+    paged K/V."""
+    a, n = RC.actor, 4
+    kc, vc, tok, pos = prefill_slots(params)
+    seeds = jnp.zeros((RC.batch, 2), jnp.int32)
+    steps = jnp.zeros((RC.batch,), jnp.int32)
+    # discover row 0's greedy chain
+    probe, _, _ = model.decode_chunk_paged(
+        a, params, kc, vc, tok, pos, jnp.asarray(BT), PS, n, RC.sample_k,
+        seeds, steps, jnp.full((RC.batch,), 100, jnp.int32),
+        jnp.zeros((RC.batch,), jnp.int32), jnp.array([-1], jnp.int32), GREEDY,
+    )
+    probe = np.asarray(probe)
+    eos = int(probe[1, 0])
+    if int(probe[0, 1]) == eos or int(probe[1, 1]) == eos:
+        pytest.skip("toy chains collide on the chosen eos id")
+    ids, kc_c, vc_c = model.decode_chunk_paged(
+        a, params, kc, vc, tok, pos, jnp.asarray(BT), PS, n, RC.sample_k,
+        seeds, steps, jnp.full((RC.batch,), 100, jnp.int32),
+        jnp.zeros((RC.batch,), jnp.int32), jnp.array([eos], jnp.int32), GREEDY,
+    )
+    ids = np.asarray(ids)
+    np.testing.assert_array_equal(ids[:, 0], [probe[0, 0], eos, eos, eos])
+    np.testing.assert_array_equal(ids[:, 1], probe[:, 1])
+    # stepwise schedule with real retirement: after row 0 emits eos it
+    # becomes a dead slot (PAD token, pos 0, garbage page 0) as the rust
+    # scheduler parks it.
+    kc_s, vc_s = kc, vc
+    t, p = tok, pos
+    bt = np.array(BT)
+    t_np, p_np = np.asarray(t).copy(), np.asarray(p).copy()
+    retired = False
+    for j in range(n):
+        logits, kc_s, vc_s = model.decode_slots_paged(
+            a, params, kc_s, vc_s, jnp.asarray(t_np), jnp.asarray(p_np), jnp.asarray(bt), PS
+        )
+        nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        if not retired:
+            if int(nxt[0]) == eos:
+                retired = True
+                bt[0] = 0
+                t_np[0], p_np[0] = PAD, 0
+            else:
+                t_np[0], p_np[0] = int(nxt[0]), p_np[0] + 1
+        row1_live = j + 1 < n
+        if row1_live:
+            t_np[1], p_np[1] = int(nxt[1]), p_np[1] + 1
+    # every page except the reserved garbage page is bit-identical
+    kc_c, vc_c, kc_s, vc_s = (np.asarray(x) for x in (kc_c, vc_c, kc_s, vc_s))
+    np.testing.assert_array_equal(kc_c[:, :, PS:], kc_s[:, :, PS:])
+    np.testing.assert_array_equal(vc_c[:, :, PS:], vc_s[:, :, PS:])
+
+
+def test_chunked_stochastic_replays_stepwise_rng_stream(params):
+    """The fused chunk consumes the SAME (seed, step)-keyed draws as n
+    stepwise `decode_slots_paged_rng` calls — fusing dispatch cannot move a
+    request's stream position."""
+    a, n = RC.actor, 4
+    kc, vc, tok, pos = prefill_slots(params)
+    seeds = jnp.array([[11, 22], [-33, 44]], jnp.int32)
+    steps0 = jnp.array([1, 5], jnp.int32)
+    sp = jnp.array([0.9, 0.0, 1.0], jnp.float32)
+    ids, kc_c, vc_c = model.decode_chunk_paged(
+        a, params, kc, vc, tok, pos, jnp.asarray(BT), PS, n, RC.sample_k,
+        seeds, steps0, jnp.full((RC.batch,), 100, jnp.int32),
+        jnp.zeros((RC.batch,), jnp.int32), jnp.array([-1], jnp.int32), sp,
+    )
+    kc_s, vc_s, t, p, st = kc, vc, tok, pos, steps0
+    want = []
+    for _ in range(n):
+        _, _, _, sampled, kc_s, vc_s = model.decode_slots_paged_rng(
+            a, params, kc_s, vc_s, t, p, jnp.asarray(BT), PS, RC.sample_k, seeds, st, sp
+        )
+        t = sampled
+        want.append(np.asarray(sampled))
+        p = p + 1
+        st = st + 1
+    np.testing.assert_array_equal(np.asarray(ids), np.stack(want))
+    np.testing.assert_array_equal(np.asarray(kc_c), np.asarray(kc_s))
+    np.testing.assert_array_equal(np.asarray(vc_c), np.asarray(vc_s))
+
+
+# ---------------------------------------------------------------------------
+# AOT contract
+# ---------------------------------------------------------------------------
+
+
+def test_rng_entries_trace_with_expected_shapes():
+    entries = aot.build_entries(RC)
+    B, K = RC.batch, RC.sample_k
+    for name, nb in [
+        ("prefill_rng", B),
+        ("decode_step_rng", B),
+        ("prefill_slot_rng", 1),
+        ("decode_slots_rng", B),
+        ("prefill_slot_paged_rng", 1),
+        ("decode_slots_paged_rng", B),
+    ]:
+        entry = entries[name]
+        fn, specs, outputs = entry[0], entry[1], entry[2]
+        assert outputs == ["ids", "topk_logits", "topk_ids", "sampled_ids", "k_cache", "v_cache"]
+        out = jax.eval_shape(fn, *specs)
+        assert out[0].shape == (nb,) and out[0].dtype == jnp.int32, name
+        assert out[1].shape == (nb, K) and out[2].shape == (nb, K), name
+        assert out[3].shape == (nb,) and out[3].dtype == jnp.int32, name
+
+
+def test_decode_chunk_entries_trace_with_expected_shapes():
+    entries = aot.build_entries(RC)
+    B = RC.batch
+    kv_shape = (RC.actor.n_layers, RC.actor.n_heads, RC.kv_pages * PS, RC.actor.d_head)
+    for n in aot.DECODE_CHUNK_SIZES:
+        entry = entries[f"decode_chunk{n}"]
+        fn, specs, outputs, donate = entry
+        assert outputs == ["chunk_ids", "k_cache", "v_cache"]
+        assert donate == (len(_actor_pspecs()), len(_actor_pspecs()) + 1)
+        out = jax.eval_shape(fn, *specs)
+        assert out[0].shape == (n, B) and out[0].dtype == jnp.int32
+        assert out[1].shape == kv_shape and out[2].shape == kv_shape
+
+
+def _actor_pspecs():
+    return model.param_spec(RC.actor, "lm")

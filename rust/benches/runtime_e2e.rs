@@ -18,11 +18,12 @@ use std::time::Duration;
 use dschat::data::synthetic::TaskGen;
 use dschat::data::{Blend, DataSplit};
 use dschat::examples_support::{
-    mixed_prompts, naive_generate, rollout_continuous, rollout_fixed_baseline,
+    mixed_prompts, naive_generate, rollout_continuous, rollout_continuous_chunked,
+    rollout_fixed_baseline,
 };
 use dschat::hybrid::{HybridEngine, KvCache};
 use dschat::runtime::Engine;
-use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
+use dschat::sampling::{DeviceCategorical, DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
 use dschat::util::bench::Bench;
 use dschat::util::rng::Rng;
 use dschat::util::{fmt_bytes, fmt_duration};
@@ -243,7 +244,8 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(he.generate(&flat, backend.as_mut())?);
         }
         let secs = t0.elapsed().as_secs_f64();
-        let tokens = (he.stats.gen_tokens - tok0).max(1);
+        let tokens = he.stats.gen_tokens - tok0;
+        assert!(tokens > 0, "decode_loop backend {name} generated zero tokens — dead bench phase");
         let (up, down) = he.engine.bytes_moved();
         let run = BackendRun {
             name,
@@ -267,6 +269,112 @@ fn main() -> anyhow::Result<()> {
         );
         runs.push(run);
     }
+    // ------------------------------------------------------------------
+    // decode_chunk sweep: fused N-step decode through the continuous
+    // scheduler with the device counter-RNG categorical backend — each
+    // artifact dispatch samples N tokens per live slot on-device, so
+    // decode dispatches and host bytes per token must drop ~N×. Gated
+    // on the artifact capabilities so older artifact dirs still run the
+    // rest of the bench.
+    // ------------------------------------------------------------------
+    struct ChunkRun {
+        n: usize,
+        tokens: u64,
+        secs: f64,
+        down: u64,
+        up: u64,
+        dispatches: u64,
+        waste: u64,
+    }
+    let mut chunk_runs: Vec<ChunkRun> = Vec::new();
+    if he.manifest().has_device_rng() && he.manifest().has_paged_serving() {
+        let sizes: Vec<usize> = [1usize, 2, 4, 8]
+            .into_iter()
+            .filter(|&n| he.manifest().has_decode_chunk(n))
+            .collect();
+        let n_chunk = if smoke { 2 * bsz } else { 4 * bsz };
+        let mut cr = Rng::new(31);
+        let chunk_prompts: Vec<Vec<i32>> =
+            (0..n_chunk).map(|_| task.sample_prompt(&mut cr).tokens).collect();
+        let chunk_budgets = vec![sg; n_chunk];
+        he.use_paged_serving(true)?;
+        println!("\n-- decode_chunk sweep (device RNG categorical, paged serving, N in {sizes:?}) --");
+        for &n in &sizes {
+            let stochastic = SamplerConfig { temperature: 0.9, top_p: 0.95, ..Default::default() };
+            let mut backend = DeviceCategorical::new(stochastic, sample_k, vocab)?;
+            // Warm the serving/chunk executables before timing.
+            rollout_continuous_chunked(
+                &mut he,
+                &chunk_prompts[..bsz],
+                &chunk_budgets[..bsz],
+                7,
+                &mut backend,
+                n,
+            )?;
+            he.engine.reset_stats();
+            let r = rollout_continuous_chunked(
+                &mut he,
+                &chunk_prompts,
+                &chunk_budgets,
+                7,
+                &mut backend,
+                n,
+            )?;
+            assert!(r.useful_tokens > 0, "decode_chunk{n} bench phase generated zero tokens — dead bench phase");
+            let (up, down) = he.engine.bytes_moved();
+            let sch = r.sched.as_ref().expect("continuous phase carries scheduler stats");
+            let dispatches = sch.decode_calls + sch.prefills;
+            println!(
+                "chunk{:<2} {:>10.1} tokens/s  |  {:.4} dispatches/token  |  host bytes/token: {} down, {} up  |  {} waste tok",
+                n,
+                r.tok_per_sec(),
+                dispatches as f64 / r.useful_tokens as f64,
+                fmt_bytes(down as f64 / r.useful_tokens as f64),
+                fmt_bytes(up as f64 / r.useful_tokens as f64),
+                sch.chunk_waste_tokens,
+            );
+            chunk_runs.push(ChunkRun {
+                n,
+                tokens: r.useful_tokens,
+                secs: r.secs,
+                down,
+                up,
+                dispatches,
+                waste: sch.chunk_waste_tokens,
+            });
+        }
+        he.use_paged_serving(false)?;
+    } else {
+        println!("\n(artifacts lack the `device_rng` capability — decode_chunk sweep skipped; re-run `make artifacts`)");
+    }
+    let chunk_json = {
+        let mut s = String::new();
+        for (i, r) in chunk_runs.iter().enumerate() {
+            s.push_str(&format!(
+                "{}    \"chunk{}\": {{\n      \"tokens\": {},\n      \"secs\": {:.6},\n      \
+                 \"tok_per_sec\": {:.3},\n      \"host_bytes_fetched\": {},\n      \
+                 \"host_bytes_uploaded\": {},\n      \
+                 \"host_bytes_fetched_per_token\": {:.1},\n      \
+                 \"host_bytes_uploaded_per_token\": {:.1},\n      \
+                 \"decode_dispatches\": {},\n      \"dispatches_per_token\": {:.4},\n      \
+                 \"chunk_waste_tokens\": {}\n    }}",
+                if i > 0 { ",\n" } else { "" },
+                r.n,
+                r.tokens,
+                r.secs,
+                r.tokens as f64 / r.secs.max(1e-9),
+                r.down,
+                r.up,
+                r.down as f64 / r.tokens.max(1) as f64,
+                r.up as f64 / r.tokens.max(1) as f64,
+                r.dispatches,
+                r.dispatches as f64 / r.tokens.max(1) as f64,
+                r.waste,
+            ));
+        }
+        s
+    };
+
     let logits_row_bytes = bsz * vocab * 4;
     let ids_bytes = bsz * 4;
     let topk_bytes = 2 * bsz * sample_k * 4;
@@ -301,7 +409,8 @@ fn main() -> anyhow::Result<()> {
          \"kv_cache_bytes\": {kv_bytes},\n  \"fallback_untuples\": {},\n  \
          \"ppo_epoch_uploads\": {{\n    \"epochs\": {epochs},\n    \
          \"legacy_bytes\": {legacy_up},\n    \"staged_bytes\": {staged_up}\n  }},\n  \
-         \"backends\": {{\n{backends_json}\n  }}\n}}\n",
+         \"backends\": {{\n{backends_json}\n  }},\n  \
+         \"chunk_sweep\": {{\n{chunk_json}\n  }}\n}}\n",
         host.tokens,
         host.secs,
         host.tok_per_sec(),
@@ -348,6 +457,7 @@ fn main() -> anyhow::Result<()> {
     let mut sampler = HostFullRow::new(greedy(), 0);
     he.generate(&roll_prompts[..bsz].concat(), &mut sampler)?; // warmup
     let fixed = rollout_fixed_baseline(&mut he, &roll_prompts, &budgets, &mut sampler)?;
+    assert!(fixed.useful_tokens > 0, "fixed-batch rollout bench generated zero tokens — dead bench phase");
     println!(
         "fixed_batch              {:>10.1} tokens/s  |  slot bubble {:.1}%  ({} useful tok, {:.3}s)",
         fixed.tok_per_sec(),
@@ -359,6 +469,7 @@ fn main() -> anyhow::Result<()> {
     let mut sampler = HostFullRow::new(greedy(), 0);
     rollout_continuous(&mut he, &roll_prompts[..bsz], &budgets[..bsz], 0, &mut sampler)?; // warmup
     let cont = rollout_continuous(&mut he, &roll_prompts, &budgets, 0, &mut sampler)?;
+    assert!(cont.useful_tokens > 0, "continuous rollout bench generated zero tokens — dead bench phase");
     let sch = cont.sched.as_ref().expect("continuous phase carries scheduler stats");
     println!(
         "continuous_scheduler     {:>10.1} tokens/s  |  slot bubble {:.1}%  ({} useful tok, {:.3}s, {} decode calls, {} prefills)",

@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 use dschat::data::synthetic::{Prompt, TaskGen, Vocab};
 use dschat::hybrid::HybridEngine;
 use dschat::runtime::Engine;
-use dschat::sampling::{DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
+use dschat::sampling::{DeviceCategorical, DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
 use dschat::serving::chaos::{ChaosConfig, ChaosEngine, ChaosStats};
 use dschat::serving::{FaultPolicy, Request, SchedStats, Scheduler};
 use dschat::util::rng::Rng;
@@ -491,6 +491,52 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
+    // Fused-chunk phase: the same trace through paged serving with the
+    // device counter-RNG categorical backend and N decode steps fused per
+    // scheduler dispatch (the largest `decode_chunk{N}` the artifacts
+    // carry). Each dispatch samples N tokens per live slot on-device, so
+    // decode dispatches per token drop ~N× vs every other phase here.
+    let chunk_n = {
+        let m = sched.engine.manifest();
+        if m.has_device_rng() {
+            [8usize, 4, 2].into_iter().find(|&n| m.has_decode_chunk(n))
+        } else {
+            None
+        }
+    };
+    let cont_chunked = if let Some(ncc) = chunk_n {
+        let mut phe = sched.into_engine();
+        phe.use_paged_serving(true)?;
+        let mut csched = Scheduler::new(phe)?;
+        csched.set_decode_chunk(ncc)?;
+        let mut backend = DeviceCategorical::new(greedy(), sample_k, vocab)?;
+        let r = run_continuous(
+            "continuous_chunked",
+            &mut csched,
+            &prompts,
+            &budgets,
+            &arrivals,
+            &no_prefix,
+            &mut backend,
+        )?;
+        r.print();
+        assert!(r.tokens > 0, "continuous_chunked phase generated zero tokens — dead bench phase");
+        let cst = csched.stats.clone();
+        println!(
+            "continuous_chunked: N={ncc}, {} decode dispatches vs {} at stepwise host, \
+             chunk waste {} tokens",
+            cst.decode_calls, st_host.decode_calls, cst.chunk_waste_tokens,
+        );
+        // Hand the engine back on the arena layout for the chaos phase.
+        let mut bhe = csched.into_engine();
+        bhe.use_paged_serving(false)?;
+        sched = Scheduler::new(bhe)?;
+        Some((r, cst, ncc))
+    } else {
+        println!("(artifacts lack the `device_rng`/`decode_chunkN` capabilities — fused-chunk phase skipped)");
+        None
+    };
+
     // Chaos phase (`--chaos`): the same trace through a fault-injecting
     // wrapper — ~5% transient prefill/decode faults + 5% slow ticks.
     // Goodput, retry/requeue counts, and the p95 latency the recovery
@@ -599,6 +645,18 @@ fn main() -> anyhow::Result<()> {
         ),
         None => String::new(),
     };
+    let chunked_json = match &cont_chunked {
+        Some((r, cst, ncc)) => format!(
+            ",\n  \"continuous_chunked\": {},\n  \"chunk_n\": {ncc},\n  \
+             \"chunk_decode_dispatches\": {},\n  \"chunk_dispatches_per_token\": {:.4},\n  \
+             \"chunk_waste_tokens\": {}",
+            phase_json(r),
+            cst.decode_calls,
+            cst.decode_calls as f64 / r.tokens.max(1) as f64,
+            cst.chunk_waste_tokens,
+        ),
+        None => String::new(),
+    };
     let chaos_json = match &chaos {
         Some((r, cst, inj)) => format!(
             ",\n  \"chaos\": {},\n  \"chaos_injected_prefill_faults\": {},\n  \
@@ -623,7 +681,7 @@ fn main() -> anyhow::Result<()> {
          \"n_requests\": {n_req},\n  \"arrival_rate_per_s\": {rate:.3},\n  \
          \"fixed_batch_t_gen_secs\": {t_gen:.6},\n  \"sample_k\": {sample_k},\n  \
          \"fixed_batch\": {},\n  \"continuous\": {},\n  \
-         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}{}{}\n  ,\n  \
+         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}{}{}{}\n  ,\n  \
          \"speedup_tok_per_sec\": {:.3},\n  \"p95_latency_ratio\": {:.3}\n}}\n",
         phase_json(&fixed),
         phase_json(&cont),
@@ -632,6 +690,7 @@ fn main() -> anyhow::Result<()> {
         device_json,
         mixed_json,
         prefix_json,
+        chunked_json,
         chaos_json,
         cont.tok_per_sec() / fixed.tok_per_sec().max(1e-9),
         cont.pct(0.95) / fixed.pct(0.95).max(1e-9),

@@ -50,6 +50,14 @@ pub struct PpoConfig {
     /// Requires artifacts with the `padded_prompts` capability; only
     /// meaningful with `rollout_batch > 0`.
     pub min_prompt_len: usize,
+    /// Fused decode steps per scheduler tick during continuous rollouts:
+    /// `1` (default) dispatches one artifact call per generated token
+    /// (legacy stepwise path, bit-compatible with every prior run); `N > 1`
+    /// drives the `decode_chunk{N}` artifact, sampling N tokens per live
+    /// slot on-device per dispatch. Requires `rollout_batch > 0`, a
+    /// device-RNG sampling backend ([`crate::sampling::DeviceCategorical`])
+    /// and artifacts built with the matching `decode_chunk{N}` capability.
+    pub decode_chunk: usize,
     /// Anomaly-guard threshold on an iteration's |approx_kl| (ChatGLM-RLHF
     /// style training stabilization: a KL blowup means the policy jumped
     /// off the trust region and the iteration should be rolled back).
@@ -89,6 +97,7 @@ impl Default for PpoConfig {
             top_p: 1.0,
             rollout_batch: 0,
             min_prompt_len: 0,
+            decode_chunk: 1,
             max_approx_kl: 25.0,
             max_clipfrac: 0.999,
             max_guard_trips: 3,

@@ -308,7 +308,8 @@ impl PpoTrainer {
         // rollout, so reusing one base would replay the previous round's
         // draws verbatim (correlated experience under slowly-moving
         // params).
-        let engine = RolloutEngine::new(round_seed(self.rollout_seed, self.rollouts_done));
+        let engine = RolloutEngine::new(round_seed(self.rollout_seed, self.rollouts_done))
+            .with_decode_chunk(self.cfg.decode_chunk.max(1));
         self.rollouts_done += 1;
         let stats = engine.run(
             &mut *he,

@@ -220,14 +220,35 @@ pub fn rollout_continuous(
     seed: u64,
     backend: &mut dyn SamplingBackend,
 ) -> Result<RolloutPhase> {
+    rollout_continuous_chunked(he, prompts, budgets, seed, backend, 1)
+}
+
+/// Continuous rollout with `chunk` decode steps fused per scheduler
+/// dispatch (`chunk == 1` is the stepwise path; `chunk > 1` needs a
+/// device-RNG backend, paged serving, and the `decode_chunk{N}` artifact
+/// capability — the rollout bails up front otherwise).
+pub fn rollout_continuous_chunked(
+    he: &mut HybridEngine,
+    prompts: &[Vec<i32>],
+    budgets: &[usize],
+    seed: u64,
+    backend: &mut dyn SamplingBackend,
+    chunk: usize,
+) -> Result<RolloutPhase> {
     let b = he.manifest().batch;
     let t0 = Instant::now();
     let mut useful = 0u64;
-    let stats =
-        RolloutEngine::new(seed).run(&mut *he, backend, prompts, budgets, b, |_, g| {
+    let stats = RolloutEngine::new(seed).with_decode_chunk(chunk).run(
+        &mut *he,
+        backend,
+        prompts,
+        budgets,
+        b,
+        |_, g| {
             useful += g.completions.iter().map(|c| c.generated as u64).sum::<u64>();
             Ok(())
-        })?;
+        },
+    )?;
     Ok(RolloutPhase {
         useful_tokens: useful,
         secs: t0.elapsed().as_secs_f64(),

@@ -431,6 +431,38 @@ impl PageLedger {
         Ok(())
     }
 
+    /// Record `n` tokens appended to ONE slot by a fused decode chunk:
+    /// the first was written at `fed_pos` (which must equal the slot's
+    /// depth, exactly as in [`PageLedger::advance`]) and the rest at the
+    /// following rows. Equivalent to `n` single-token advances — the
+    /// chunk artifact writes every accepted token's K/V row in its
+    /// unrolled loop, so the ledger catches up in one call.
+    pub fn advance_chunk(&mut self, slot: usize, fed_pos: i32, n: usize) -> Result<()> {
+        if slot >= self.slots.len() {
+            bail!("kv advance_chunk: slot {slot} out of range ({} slots)", self.slots.len());
+        }
+        let Some(occ) = self.slots[slot].as_mut() else {
+            bail!("kv advance_chunk: slot {slot} is free");
+        };
+        if fed_pos as usize != occ.depth() {
+            bail!(
+                "kv advance_chunk: slot {slot} fed at pos {fed_pos} but its depth is {} \
+                 ({} valid + {} pad)",
+                occ.depth(),
+                occ.valid,
+                occ.pad
+            );
+        }
+        if occ.depth() + n > self.smax {
+            bail!(
+                "kv advance_chunk: slot {slot} advancing {n} tokens overflows smax {}",
+                self.smax
+            );
+        }
+        occ.valid += n;
+        Ok(())
+    }
+
     /// Record one decoded token appended to every slot (batch generate).
     pub fn advance_all(&mut self) {
         for s in self.slots.iter_mut().flatten() {
@@ -641,6 +673,10 @@ impl KvCache {
         self.ledger.advance(active, fed_pos)
     }
 
+    pub fn advance_chunk(&mut self, slot: usize, fed_pos: i32, n: usize) -> Result<()> {
+        self.ledger.advance_chunk(slot, fed_pos, n)
+    }
+
     pub fn advance_all(&mut self) {
         self.ledger.advance_all()
     }
@@ -684,6 +720,28 @@ mod tests {
         l.free(0).unwrap();
         assert!(l.free(0).is_err(), "double free");
         assert_eq!(l.n_active(), 0);
+    }
+
+    #[test]
+    fn chunk_advance_equals_repeated_single_advances() {
+        let mut chunked = ledger();
+        let mut stepped = ledger();
+        for l in [&mut chunked, &mut stepped] {
+            l.alloc_shared(0, &[1, 2, 3], 0).unwrap();
+        }
+        chunked.advance_chunk(0, 3, 4).unwrap();
+        for d in 0..4 {
+            stepped.advance(&[true, false], &[3 + d, 0]).unwrap();
+        }
+        assert_eq!(chunked.depth_of(0), stepped.depth_of(0));
+        assert_eq!(chunked.depth_of(0), Some(7));
+        // Same failure contracts as the stepwise path: stale fed position,
+        // smax overflow, free slot.
+        assert!(chunked.advance_chunk(0, 3, 1).is_err(), "stale pos");
+        assert!(chunked.advance_chunk(0, 7, SMAX).is_err(), "overflow");
+        assert!(chunked.advance_chunk(1, 0, 1).is_err(), "free slot");
+        chunked.advance_chunk(0, 7, SMAX - 7).unwrap();
+        assert_eq!(chunked.depth_of(0), Some(SMAX));
     }
 
     #[test]

@@ -26,6 +26,14 @@
 //!   top-p / the categorical draw over the k candidates with its seeded
 //!   RNG, so generation stays deterministic and EOS/length retirement
 //!   stays host-side.
+//! * [`TrafficClass::DeviceCategorical`] (`DeviceCategorical`): `b` ids +
+//!   per-row `(seed, step)` counters up, `b` sampled ids down — the
+//!   stochastic draw itself runs on device from a counter-based Threefry
+//!   stream, so stochastic decode matches greedy's O(b) traffic and each
+//!   request's stream is a pure function of its seed and draw index
+//!   (serving-path only: the scheduler carries the per-request seeds, and
+//!   with the `decode_chunk{N}` artifacts it fuses N such steps into one
+//!   dispatch — see [`HybridEngine::decode_slots_chunk`]).
 //!
 //! Train steps keep the updated parameters and optimizer state on device
 //! and fetch scalars only; experience scoring uploads the `[b, seq_len]`
@@ -82,7 +90,7 @@ use xla::{Literal, PjRtBuffer};
 use crate::data::{PairBatch, TokenBatch};
 use crate::runtime::{Artifact, ArtifactSet, Engine, HostTensor, ParamStore};
 use crate::sampling::{PendingRow, SampleOut, SamplingBackend, TrafficClass};
-use crate::serving::{Admission, AdmitOutcome, DecodeBatch};
+use crate::serving::{Admission, AdmitOutcome, ChunkBatch, DecodeBatch};
 
 /// Which configuration the actor model is currently in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -412,6 +420,12 @@ impl HybridEngine {
     fn gen_artifact(&self, base: &str, traffic: TrafficClass) -> Result<(&Artifact, usize)> {
         match traffic {
             TrafficClass::FullRow => Ok((self.arts.get(base)?, 3)),
+            TrafficClass::DeviceCategorical => {
+                // The `_rng` family: `_sampled` compute + the on-device
+                // categorical draw; outputs gain `sampled_ids` at index 3.
+                self.arts.manifest.require_device_rng()?;
+                Ok((self.arts.get(&format!("{base}_rng"))?, 6))
+            }
             _ => {
                 let name = format!("{base}_sampled");
                 let art = self.arts.get(&name).map_err(|e| {
@@ -446,6 +460,12 @@ impl HybridEngine {
             TrafficClass::DeviceIds => match self.engine.fetch(key, &bufs[0])? {
                 HostTensor::I32(ids, _) => Ok(SampleOut::Ids(ids)),
                 other => bail!("{key}: ids fetch returned f32 {:?}", other.shape()),
+            },
+            // The device already drew the token (`sampled_ids`, output 3):
+            // per-step host traffic is `b` ints regardless of k or vocab.
+            TrafficClass::DeviceCategorical => match self.engine.fetch(key, &bufs[3])? {
+                HostTensor::I32(ids, _) => Ok(SampleOut::Ids(ids)),
+                other => bail!("{key}: sampled-ids fetch returned f32 {:?}", other.shape()),
             },
             TrafficClass::DeviceTopK => {
                 let k = self.arts.manifest.sample_k;
@@ -529,6 +549,13 @@ impl HybridEngine {
         starts: Vec<i32>,
         traffic: TrafficClass,
     ) -> Result<SampleOut> {
+        if traffic == TrafficClass::DeviceCategorical {
+            bail!(
+                "batch generation does not drive the device-RNG backend — serve \
+                 DeviceCategorical through the scheduler (prefill_slot/decode_slots), \
+                 which carries the per-request seed and step inputs"
+            );
+        }
         let m = &self.arts.manifest;
         let (b, sp) = (m.batch, m.prompt_len);
         let padded_artifacts = m.padded_prompts;
@@ -579,6 +606,13 @@ impl HybridEngine {
         step: usize,
         traffic: TrafficClass,
     ) -> Result<SampleOut> {
+        if traffic == TrafficClass::DeviceCategorical {
+            bail!(
+                "batch generation does not drive the device-RNG backend — serve \
+                 DeviceCategorical through the scheduler (prefill_slot/decode_slots), \
+                 which carries the per-request seed and step inputs"
+            );
+        }
         let m = &self.arts.manifest;
         let (b, sg) = (m.batch, m.gen_len);
         if toks.len() != b {
@@ -782,6 +816,7 @@ impl HybridEngine {
                 starts: &step_starts,
                 active: &active,
                 traffic,
+                rng: None,
             })?;
         }
 
@@ -905,8 +940,23 @@ impl HybridEngine {
         padded[pad..].copy_from_slice(prompt);
         let prompt_buf = self.engine.upload_i32(&padded, &[1, sp])?;
         let slot_buf = self.engine.upload_i32(&[slot as i32], &[1])?;
-        let start_buf = if padded_artifacts {
+        // The `_rng` entries always take the start input; older plain /
+        // `_sampled` entries only with the `padded_prompts` capability.
+        let device_rng = traffic == TrafficClass::DeviceCategorical;
+        let start_buf = if padded_artifacts || device_rng {
             Some(self.engine.upload_i32(&[pad as i32], &[1])?)
+        } else {
+            None
+        };
+        let rng_bufs = if device_rng {
+            let Some(rng) = adm.rng else {
+                bail!("prefill_slot: device-RNG admission carries no seed/params inputs");
+            };
+            Some((
+                self.engine.upload_i32(&rng.seed, &[1, 2])?,
+                self.engine.upload_i32(&[0], &[1])?, // prefill performs draw #0
+                self.engine.upload_f32(&rng.sparams, &[3])?,
+            ))
         } else {
             None
         };
@@ -918,6 +968,11 @@ impl HybridEngine {
         inputs.push(&slot_buf);
         if let Some(sb) = &start_buf {
             inputs.push(sb);
+        }
+        if let Some((seeds, steps, sp_buf)) = &rng_bufs {
+            inputs.push(seeds);
+            inputs.push(steps);
+            inputs.push(sp_buf);
         }
         let mut out = art.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
@@ -989,12 +1044,29 @@ impl HybridEngine {
         let bt: Vec<i32> = table.iter().map(|&p| p as i32).collect();
         let bt_buf = self.engine.upload_i32(&bt, &[1, mb])?;
         let last_buf = self.engine.upload_i32(&[l as i32 - 1], &[1])?;
+        let rng_bufs = if adm.traffic == TrafficClass::DeviceCategorical {
+            let Some(rng) = adm.rng else {
+                bail!("prefill_slot_paged: device-RNG admission carries no seed/params inputs");
+            };
+            Some((
+                self.engine.upload_i32(&rng.seed, &[1, 2])?,
+                self.engine.upload_i32(&[0], &[1])?, // prefill performs draw #0
+                self.engine.upload_f32(&rng.sparams, &[3])?,
+            ))
+        } else {
+            None
+        };
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.push(&kv.k);
         inputs.push(&kv.v);
         inputs.push(&prompt_buf);
         inputs.push(&bt_buf);
         inputs.push(&last_buf);
+        if let Some((seeds, steps, sp_buf)) = &rng_bufs {
+            inputs.push(seeds);
+            inputs.push(steps);
+            inputs.push(sp_buf);
+        }
         let mut out = art.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
         let kc = out.pop().unwrap();
@@ -1071,6 +1143,25 @@ impl HybridEngine {
             // Pre-capability arena artifacts take no starts input.
             None
         };
+        let rng_bufs = if traffic == TrafficClass::DeviceCategorical {
+            let Some(rng) = batch.rng else {
+                bail!("decode_slots: device-RNG batch carries no seed/step inputs");
+            };
+            if rng.seeds.len() != 2 * b || rng.steps.len() != b {
+                bail!(
+                    "decode_slots rng wants [{b}, 2] seeds + [{b}] steps, got {}/{}",
+                    rng.seeds.len(),
+                    rng.steps.len()
+                );
+            }
+            Some((
+                self.engine.upload_i32(rng.seeds, &[b, 2])?,
+                self.engine.upload_i32(rng.steps, &[b])?,
+                self.engine.upload_f32(&rng.sparams, &[3])?,
+            ))
+        } else {
+            None
+        };
         let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
         inputs.push(&kv.k);
         inputs.push(&kv.v);
@@ -1078,6 +1169,11 @@ impl HybridEngine {
         inputs.push(&pos_buf);
         if let Some(eb) = &extra_buf {
             inputs.push(eb);
+        }
+        if let Some((seeds, steps, sp_buf)) = &rng_bufs {
+            inputs.push(seeds);
+            inputs.push(steps);
+            inputs.push(sp_buf);
         }
         let mut out = art.call_to_buffers(&inputs, n_out)?;
         let vc = out.pop().unwrap();
@@ -1090,6 +1186,133 @@ impl HybridEngine {
         let sample = self.fetch_sample(&name, traffic, &out)?;
         self.stats.gen_secs += t0.elapsed().as_secs_f64();
         Ok(sample)
+    }
+
+    /// One fused N-token decode chunk over the block-paged pool: a single
+    /// `decode_chunk{N}` artifact call advances every `active` slot by up
+    /// to `N` tokens (scan over the paged per-slot decode + device-RNG
+    /// sampling tail) and returns the `[N, b]` emitted ids row-major. A
+    /// per-row latch inside the artifact freezes rows that emit EOS or
+    /// exhaust their `quota` mid-chunk — frozen steps re-write the row's
+    /// last K/V entry idempotently and consume no RNG draws, so the KV
+    /// ledger advances by exactly [`crate::serving::chunk_consumed`] and a
+    /// retired row's stream is unperturbed. Paged serving only; `n == 1`
+    /// callers use the stepwise [`HybridEngine::decode_slots`].
+    pub fn decode_slots_chunk(&mut self, batch: &ChunkBatch) -> Result<Vec<i32>> {
+        let m = &self.arts.manifest;
+        let b = m.batch;
+        let n = batch.n;
+        if n < 2 {
+            bail!("decode_slots_chunk wants n >= 2 — n == 1 is the stepwise decode_slots path");
+        }
+        m.require_device_rng()?;
+        m.require_decode_chunk(n)?;
+        if !self.paged_serving {
+            bail!(
+                "fused decode chunks serve from the block-paged KV pool only — \
+                 enable use_paged_serving(true) before decoding chunks"
+            );
+        }
+        let (toks, pos, active, quota) = (batch.toks, batch.pos, batch.active, batch.quota);
+        if toks.len() != b || pos.len() != b || active.len() != b || quota.len() != b {
+            bail!(
+                "decode_slots_chunk wants [{b}] toks/pos/active/quota, got {}/{}/{}/{}",
+                toks.len(),
+                pos.len(),
+                active.len(),
+                quota.len()
+            );
+        }
+        let rng = &batch.rng;
+        if rng.seeds.len() != 2 * b || rng.steps.len() != b {
+            bail!(
+                "decode_slots_chunk rng wants [{b}, 2] seeds + [{b}] steps, got {}/{}",
+                rng.seeds.len(),
+                rng.steps.len()
+            );
+        }
+        if self.mode != EngineMode::Inference || self.kv.is_none() {
+            bail!("decode_slots_chunk requires serving mode (call begin_serving first)");
+        }
+        let t0 = Instant::now();
+        let art = self.arts.get(&format!("decode_chunk{n}"))?;
+        let name = art.name.clone();
+        let tok_buf = self.engine.upload_i32(toks, &[b])?;
+        let pos_buf = self.engine.upload_i32(pos, &[b])?;
+        let kv = self.kv.as_ref().unwrap();
+        // Flat [b, blocks_per_slot] block tables, dead rows on the garbage
+        // page — same contract as the stepwise paged decode. Live slots
+        // hold their FULL page allotment from admission time (alloc_shared
+        // draws every page up front), so a chunk never needs a mid-flight
+        // page grab.
+        let mb = kv.ledger.blocks_per_slot();
+        let mut bt = vec![0i32; b * mb];
+        for slot in 0..b {
+            if !active[slot] {
+                continue;
+            }
+            let Some(row) = kv.block_table(slot) else {
+                bail!("decode_slots_chunk: active slot {slot} has no block table");
+            };
+            for (j, &p) in row.iter().enumerate() {
+                bt[slot * mb + j] = p as i32;
+            }
+        }
+        let bt_buf = self.engine.upload_i32(&bt, &[b, mb])?;
+        let seeds_buf = self.engine.upload_i32(rng.seeds, &[b, 2])?;
+        let steps_buf = self.engine.upload_i32(rng.steps, &[b])?;
+        let quota_buf = self.engine.upload_i32(quota, &[b])?;
+        // Dead rows enter the chunk pre-frozen: no draws, garbage-page
+        // writes only.
+        let frozen: Vec<i32> = active.iter().map(|&a| i32::from(!a)).collect();
+        let frozen_buf = self.engine.upload_i32(&frozen, &[b])?;
+        let eos_buf = self
+            .engine
+            .upload_i32(&[crate::data::synthetic::Vocab::EOS], &[1])?;
+        let sparams_buf = self.engine.upload_f32(&rng.sparams, &[3])?;
+        let mut inputs: Vec<&PjRtBuffer> = self.actor.buffers.iter().collect();
+        inputs.push(&kv.k);
+        inputs.push(&kv.v);
+        inputs.push(&tok_buf);
+        inputs.push(&pos_buf);
+        inputs.push(&bt_buf);
+        inputs.push(&seeds_buf);
+        inputs.push(&steps_buf);
+        inputs.push(&quota_buf);
+        inputs.push(&frozen_buf);
+        inputs.push(&eos_buf);
+        inputs.push(&sparams_buf);
+        let mut out = art.call_to_buffers(&inputs, 3)?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let kv = self.kv.as_mut().unwrap();
+        kv.update(kc, vc);
+        let ids = match self.engine.fetch(&name, &out[0])? {
+            HostTensor::I32(ids, _) => ids,
+            other => bail!("{name}: chunk-ids fetch returned f32 {:?}", other.shape()),
+        };
+        if ids.len() != n * b {
+            bail!("{name}: chunk ids must be [{n}, {b}], got {} elements", ids.len());
+        }
+        // Ledger advance mirrors the scheduler's token walk exactly: each
+        // live slot's depth grows by the tokens it actually consumed (the
+        // latch makes post-boundary K/V writes idempotent re-writes).
+        let kv = self.kv.as_mut().unwrap();
+        for slot in 0..b {
+            if !active[slot] {
+                continue;
+            }
+            let consumed = crate::serving::chunk_consumed(
+                &ids,
+                b,
+                slot,
+                n,
+                quota[slot].max(0) as usize,
+            );
+            kv.advance_chunk(slot, pos[slot], consumed)?;
+        }
+        self.stats.gen_secs += t0.elapsed().as_secs_f64();
+        Ok(ids)
     }
 
     /// Retire a finished sequence: on the arena layout its K/V rows become

@@ -166,7 +166,39 @@ pub fn run_ppo_from(
     resume: Option<&RunState>,
 ) -> Result<(StepReport, Vec<IterStats>)> {
     let t0 = std::time::Instant::now();
-    let mut trainer = PpoTrainer::new(recipe.ppo.clone(), recipe.seed ^ 0x9907);
+    let mut trainer = if recipe.ppo.decode_chunk > 1 {
+        // Fused N-token decode: the rollout scheduler drives the
+        // `decode_chunk{N}` artifact, which samples on-device from its own
+        // counter-RNG stream — so the trainer must carry the device
+        // categorical backend (a host backend would need to see every
+        // token before the next step) and the KV cache must serve paged
+        // (chunked decode advances whole block runs).
+        ensure!(
+            recipe.ppo.rollout_batch > 0,
+            "decode_chunk {} needs the continuous-batching rollout (set rollout_batch \
+             to a positive multiple of the artifact batch) — the fixed-batch generate \
+             path dispatches one step at a time by design",
+            recipe.ppo.decode_chunk
+        );
+        let (k, vocab) = {
+            let m = he.manifest();
+            (m.sample_k, m.actor.vocab)
+        };
+        let sampler = crate::sampling::DeviceCategorical::new(
+            crate::sampling::SamplerConfig {
+                temperature: recipe.ppo.temperature,
+                top_k: recipe.ppo.top_k,
+                top_p: recipe.ppo.top_p,
+                ..Default::default()
+            },
+            k,
+            vocab,
+        )?;
+        he.use_paged_serving(true)?;
+        PpoTrainer::with_backend(recipe.ppo.clone(), Box::new(sampler), recipe.seed ^ 0x9907)
+    } else {
+        PpoTrainer::new(recipe.ppo.clone(), recipe.seed ^ 0x9907)
+    };
     let start = match resume {
         Some(rs) => {
             *rng = Rng::from_state(rs.rng_state, rs.rng_inc);

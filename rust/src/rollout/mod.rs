@@ -87,11 +87,27 @@ pub fn round_seed(seed: u64, round: u64) -> u64 {
 pub struct RolloutEngine {
     /// Base seed of the per-request stream derivation.
     pub seed: u64,
+    /// Fused decode steps per scheduler tick (`1` = stepwise; `N > 1`
+    /// dispatches the `decode_chunk{N}` artifacts — needs the device-RNG
+    /// backend and a paged engine, checked when the rollout starts).
+    pub decode_chunk: usize,
 }
 
 impl RolloutEngine {
     pub fn new(seed: u64) -> Self {
-        RolloutEngine { seed }
+        RolloutEngine { seed, decode_chunk: 1 }
+    }
+
+    /// Flush experience in fused N-token decode chunks: every scheduler
+    /// tick advances all live slots by up to `n` tokens in one artifact
+    /// dispatch, so generation — the paper's dominant Step-3 cost — pays
+    /// ~1/n the dispatch overhead. Retirement (and therefore group
+    /// flushing) moves to every-n-step boundaries; completions and their
+    /// token streams are unchanged because the per-request device-RNG
+    /// streams are chunking-independent.
+    pub fn with_decode_chunk(mut self, n: usize) -> Self {
+        self.decode_chunk = n;
+        self
     }
 
     /// Generate `prompts.len()` sequences (per-request budgets in
@@ -125,6 +141,9 @@ impl RolloutEngine {
             bail!("rollout wants {n} budgets, got {}", budgets.len());
         }
         let mut sched = Scheduler::new(engine)?;
+        if self.decode_chunk != 1 {
+            sched.set_decode_chunk(self.decode_chunk)?;
+        }
         let mut buf = ExperienceBuffer::new(n, group);
         // Oversubscribe up front: the queue is the scheduler's to drain —
         // every EOS retirement admits the next prompt at a step boundary.
@@ -424,6 +443,24 @@ mod tests {
         assert_eq!(solo[0], crowd[0], "request 0's stream is its own");
         let other_base = run(1, 8);
         assert_ne!(solo[0], other_base[0], "base seed steers every stream");
+    }
+
+    #[test]
+    fn chunked_rollout_checks_capability_up_front() {
+        // The arena mock has no decode_chunk artifacts: a chunked rollout
+        // must refuse at startup (before any admission), not melt down
+        // tick by tick — and chunk 1 stays the unchanged stepwise path.
+        let prompts = vec![prompt(1), prompt(2)];
+        let err = RolloutEngine::new(0)
+            .with_decode_chunk(4)
+            .run(MockEngine::new(2), &mut greedy(), &prompts, &[SG; 2], 2, |_, _| Ok(()))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("decode_chunk"), "{err:#}");
+        let stats = RolloutEngine::new(0)
+            .with_decode_chunk(1)
+            .run(MockEngine::new(2), &mut greedy(), &prompts, &[SG; 2], 2, |_, _| Ok(()))
+            .unwrap();
+        assert_eq!(stats.completed, 2);
     }
 
     #[test]

@@ -74,6 +74,18 @@ pub struct Manifest {
     pub page_size: usize,
     /// Physical pages in the paged pool (0 when `paged_kv` is false).
     pub kv_pages: usize,
+    /// True when the artifact set carries the `_rng` generation entries:
+    /// the categorical draw runs ON DEVICE from a counter-based
+    /// Threefry-2x32 stream keyed by `(request_seed, step)`, so stochastic
+    /// decode returns `[batch]` sampled ids (O(b) bytes/step) instead of
+    /// the `[batch, sample_k]` candidate rows the host-draw path fetches.
+    /// False for artifact sets built before the capability existed.
+    pub device_rng: bool,
+    /// Fused decode chunk sizes carried by the artifact set: for each `N`
+    /// here a `decode_chunk{N}` entry runs N decode+sample steps in ONE
+    /// dispatch (per-row EOS/quota latch freezing retired rows mid-chunk).
+    /// Empty for artifact sets built before the capability existed.
+    pub decode_chunk_sizes: Vec<usize>,
     pub actor: ModelConfig,
     pub critic: ModelConfig,
     pub actor_params: Vec<TensorSpec>,
@@ -182,6 +194,12 @@ impl Manifest {
             paged_kv: cfg.get("paged_kv").and_then(|v| v.as_bool()).unwrap_or(false),
             page_size: cfg.get("page_size").and_then(|v| v.as_usize()).unwrap_or(0),
             kv_pages: cfg.get("kv_pages").and_then(|v| v.as_usize()).unwrap_or(0),
+            device_rng: cfg.get("device_rng").and_then(|v| v.as_bool()).unwrap_or(false),
+            decode_chunk_sizes: cfg
+                .get("decode_chunk_sizes")
+                .and_then(|v| v.as_arr())
+                .map(|arr| arr.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
             actor: model_config(cfg.at("actor"))?,
             critic: model_config(cfg.at("critic"))?,
             actor_params: tensor_specs(j.at("actor_params"))?,
@@ -231,6 +249,57 @@ impl Manifest {
                  `paged_kv` capability (or the `*_paged` serving entries), so paged serving \
                  and shared-prefix reuse are unavailable — re-run `make artifacts`",
                 self.run,
+            );
+        }
+        Ok(())
+    }
+
+    /// True when the artifact set carries the device-RNG sampling entries
+    /// alongside the `device_rng` capability flag — the gate for the
+    /// `DeviceCategorical` backend (paged serving is the only consumer, so
+    /// only the paged `_rng` entries are required).
+    pub fn has_device_rng(&self) -> bool {
+        self.device_rng
+            && self.artifacts.contains_key("prefill_slot_paged_rng")
+            && self.artifacts.contains_key("decode_slots_paged_rng")
+    }
+
+    /// True when the artifact set carries the fused N-step decode entry for
+    /// chunk size `n` (N=1 is the legacy stepwise path and always available
+    /// wherever paged serving is).
+    pub fn has_decode_chunk(&self, n: usize) -> bool {
+        n == 1
+            || (self.decode_chunk_sizes.contains(&n)
+                && self.artifacts.contains_key(&format!("decode_chunk{n}")))
+    }
+
+    /// Bail with a rebuild hint unless the artifact set supports the
+    /// device-side categorical draw. Host-draw artifacts have no
+    /// seed/step/sparams inputs on the generation entries, so the
+    /// DeviceCategorical backend cannot run against them.
+    pub fn require_device_rng(&self) -> Result<()> {
+        if !self.has_device_rng() {
+            bail!(
+                "artifacts ({}) predate device-side RNG sampling: the manifest lacks the \
+                 `device_rng` capability (or the `*_rng` generation entries), so the \
+                 DeviceCategorical backend is unavailable — re-run `make artifacts`",
+                self.run,
+            );
+        }
+        Ok(())
+    }
+
+    /// Bail with a rebuild hint unless the artifact set carries the fused
+    /// `decode_chunk{n}` entry. Pre-capability artifacts can only decode one
+    /// token per dispatch.
+    pub fn require_decode_chunk(&self, n: usize) -> Result<()> {
+        if !self.has_decode_chunk(n) {
+            bail!(
+                "artifacts ({}) lack the fused decode_chunk{n} entry: the manifest's \
+                 `decode_chunk_sizes` is {:?}, so --decode-chunk {n} cannot run — \
+                 re-run `make artifacts`",
+                self.run,
+                self.decode_chunk_sizes,
             );
         }
         Ok(())
@@ -444,6 +513,82 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), &too_few).unwrap();
         let msg = format!("{:#}", Manifest::load(&dir).unwrap().validate().unwrap_err());
         assert!(msg.contains("kv_pages"), "{msg}");
+    }
+
+    #[test]
+    fn device_rng_needs_capability_flag_and_entries() {
+        // Host-draw-era manifests refuse the DeviceCategorical backend with
+        // the rebuild command; the capability needs BOTH the flag and the
+        // paged `_rng` entries (a flag without entries is a broken build).
+        let dir = std::env::temp_dir().join("dschat_manifest_rng_test");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.device_rng);
+        assert!(m.decode_chunk_sizes.is_empty());
+        let msg = format!("{:#}", m.require_device_rng().unwrap_err());
+        assert!(msg.contains("make artifacts"), "{msg}");
+        assert!(msg.contains("device_rng"), "{msg}");
+
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let flagged = text.replacen("\"batch\": 2,", "\"batch\": 2, \"device_rng\": true,", 1);
+        std::fs::write(dir.join("manifest.json"), &flagged).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.device_rng);
+        assert!(!m.has_device_rng());
+        assert!(m.require_device_rng().is_err());
+
+        let with_entries = flagged.replacen(
+            "\"sft_step\": {",
+            r#""prefill_slot_paged_rng": {"file": "p.hlo.txt", "inputs": [], "outputs": [], "hlo_bytes": 1},
+               "decode_slots_paged_rng": {"file": "d.hlo.txt", "inputs": [], "outputs": [], "hlo_bytes": 1},
+               "sft_step": {"#,
+            1,
+        );
+        std::fs::write(dir.join("manifest.json"), &with_entries).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.has_device_rng());
+        m.require_device_rng().unwrap();
+    }
+
+    #[test]
+    fn decode_chunks_need_size_list_and_entry() {
+        // N=1 is the legacy stepwise path: always available. Fused sizes
+        // need the size in `decode_chunk_sizes` AND the matching entry; the
+        // refusal names the rebuild command and the requested size.
+        let dir = std::env::temp_dir().join("dschat_manifest_chunk_test");
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.has_decode_chunk(1));
+        m.require_decode_chunk(1).unwrap();
+        assert!(!m.has_decode_chunk(4));
+        let msg = format!("{:#}", m.require_decode_chunk(4).unwrap_err());
+        assert!(msg.contains("make artifacts"), "{msg}");
+        assert!(msg.contains("decode_chunk4"), "{msg}");
+
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let flagged = text.replacen(
+            "\"batch\": 2,",
+            "\"batch\": 2, \"decode_chunk_sizes\": [2, 4, 8],",
+            1,
+        );
+        std::fs::write(dir.join("manifest.json"), &flagged).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.decode_chunk_sizes, vec![2, 4, 8]);
+        // Listed but the entry is missing: still refused (broken build).
+        assert!(!m.has_decode_chunk(4));
+
+        let with_entry = flagged.replacen(
+            "\"sft_step\": {",
+            r#""decode_chunk4": {"file": "c4.hlo.txt", "inputs": [], "outputs": [], "hlo_bytes": 1},
+               "sft_step": {"#,
+            1,
+        );
+        std::fs::write(dir.join("manifest.json"), &with_entry).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.has_decode_chunk(4));
+        m.require_decode_chunk(4).unwrap();
+        // Sizes not in the manifest stay unavailable.
+        assert!(!m.has_decode_chunk(8));
     }
 
     #[test]

@@ -45,6 +45,22 @@
 //!   appends the start buffers only when the capability is present, so
 //!   pre-capability artifact sets keep their original input lists (and
 //!   can only admit exact-length prompts).
+//! * With the `device_rng` capability, the serving generation entries gain
+//!   a `_rng` variant (`prefill_slot_rng`, `decode_slots_rng`, and their
+//!   `_paged` twins): the categorical draw itself runs on device from a
+//!   counter-based Threefry stream, keyed per row by `(seed, step)` —
+//!   three extra trailing inputs (`[b,2]` seed words, `[b]` draw indices,
+//!   `[3]` temperature/top-k/top-p) and a `[b]` sampled-ids output, so
+//!   stochastic decode fetches O(b) ids per step instead of O(b·k)
+//!   candidates, and a request's token stream is a pure function of its
+//!   seed and draw index — independent of batch composition, slot
+//!   placement, and chunking.
+//! * With the `decode_chunk_sizes` capability, the paged serving path
+//!   additionally carries fused `decode_chunk{N}` entries: one call runs N
+//!   device-RNG decode steps (per-row EOS latch freezes finished rows
+//!   mid-chunk; a `[b]` quota input caps each row's budget) and returns a
+//!   `[N·b]` token block, so decode dispatches and host bytes per token
+//!   both drop ~N×. Like the stepwise entries, K/V inputs are donated.
 //! * [`ExecStats`] tracks seconds and bytes moved in each direction per
 //!   artifact; `cargo bench --bench runtime_e2e` prints the ledger and the
 //!   decode bench emits it as `BENCH_decode.json`.

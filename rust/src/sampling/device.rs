@@ -1,15 +1,67 @@
-//! Device top-k sampling: the heavy half of the sampling tail (row argmax
-//! and top-k selection over the vocabulary) runs inside the `_sampled` AOT
+//! Device-side sampling backends.
+//!
+//! [`DeviceTopK`]: the heavy half of the sampling tail (row argmax and
+//! top-k selection over the vocabulary) runs inside the `_sampled` AOT
 //! artifacts; the host finishes temperature, top-p, and the categorical
 //! draw over the k fetched candidates with the seeded [`Rng`], so
 //! generation stays bit-deterministic and EOS/length retirement stays
 //! host-side. Per-step fetch: `[b]` ids (greedy) or `[b, k]` logits+ids
 //! (stochastic) instead of the `[b, vocab]` row.
+//!
+//! [`DeviceCategorical`]: the ENTIRE draw runs inside the `_rng` AOT
+//! artifacts. The device derives each row's uniform from a counter-based
+//! Threefry-2x32 hash of `(request_seed, step)` — [`threefry2x32`] here is
+//! the bit-exact host mirror, pinned against the Random123 known-answer
+//! vectors so Rust tests and mock engines can predict device draws — and
+//! finishes temperature → top-k → top-p → categorical over the device
+//! top-k candidates. The host fetches `[b]` sampled ids (O(b) bytes/step,
+//! same as greedy) and `sample` is pass-through. Per-request streams are
+//! pure functions of `(seed, step)`, so reproducibility survives admission
+//! reordering and fused N-step decode chunks with no host RNG bookkeeping.
 
 use anyhow::{bail, Result};
 
 use super::{check_nonempty, RowRef, SamplerConfig, SamplingBackend, TrafficClass};
 use crate::util::rng::Rng;
+
+/// Threefry-2x32 rotation schedule (Random123): groups alternate between
+/// the first and last four constants.
+const THREEFRY_ROT: [u32; 8] = [13, 15, 26, 6, 17, 29, 16, 24];
+
+/// Bit-exact host mirror of the device counter RNG (20-round
+/// Threefry-2x32, the same block cipher jax's PRNG is built on). The
+/// `_rng` artifacts hash `(k0, k1) = request seed words` with the counter
+/// `(x0, x1) = (step, 0)`; this function lets host tests and the serving
+/// MockEngine reproduce device draws bit-for-bit.
+pub fn threefry2x32(k0: u32, k1: u32, x0: u32, x1: u32) -> (u32, u32) {
+    let ks = [k0, k1, k0 ^ k1 ^ 0x1BD1_1BDA];
+    let mut x0 = x0.wrapping_add(ks[0]);
+    let mut x1 = x1.wrapping_add(ks[1]);
+    for j in 0..5u32 {
+        for r in 0..4 {
+            x0 = x0.wrapping_add(x1);
+            x1 = x1.rotate_left(THREEFRY_ROT[(j as usize % 2) * 4 + r]);
+            x1 ^= x0;
+        }
+        x0 = x0.wrapping_add(ks[(j as usize + 1) % 3]);
+        x1 = x1.wrapping_add(ks[(j as usize + 2) % 3]).wrapping_add(j + 1);
+    }
+    (x0, x1)
+}
+
+/// Split a 64-bit request seed into the `[hi, lo]` int32 key words the
+/// `_rng` artifacts take as their per-row `seeds` input.
+pub fn seed_words(seed: u64) -> [i32; 2] {
+    [(seed >> 32) as u32 as i32, seed as u32 as i32]
+}
+
+/// The uniform in [0, 1) the device draws for `(key, step)` — 24-bit
+/// mantissa grid, the same `(x >> 8) * 2^-24` mapping as [`Rng::f32`].
+pub fn counter_uniform(seed: u64, step: u32) -> f32 {
+    let [k0, k1] = seed_words(seed);
+    let (x0, _) = threefry2x32(k0 as u32, k1 as u32, step, 0);
+    (x0 >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+}
 
 /// Device top-k backend. Truncation contract: for stochastic configs the
 /// artifact's k candidates ARE the support — with `top_k == 0` (host
@@ -148,6 +200,127 @@ impl SamplingBackend for DeviceTopK {
             }
             other @ RowRef::Logits(_) => Err(super::wrong_row("DeviceTopK", &other)),
         }
+    }
+}
+
+/// Host mirror of the device draw over ONE candidate row (ref.py's
+/// `draw_index_ref` semantics): temperature <= 0 selects index 0 (argmax);
+/// `top_k <= 0` disables the count cutoff; top-p keeps the smallest prefix
+/// whose mass reaches `top_p` (the first candidate is always kept); the
+/// categorical inverts the kept-mass CDF at `u * total`. Returns the index
+/// into the candidate row. Used by tests and the serving MockEngine to
+/// predict device draws.
+pub fn draw_index(vals: &[f32], u: f32, temp: f32, top_k: f32, top_p: f32) -> usize {
+    if temp <= 0.0 {
+        return 0;
+    }
+    let k = vals.len();
+    let kk = if top_k > 0.0 { top_k } else { k as f32 };
+    let t = temp.max(1e-6);
+    let scaled: Vec<f32> = vals
+        .iter()
+        .enumerate()
+        .map(|(j, v)| if (j as f32) < kk { v / t } else { f32::NEG_INFINITY })
+        .collect();
+    let s0 = scaled[0];
+    let e: Vec<f32> = scaled.iter().map(|x| (x - s0).exp()).collect();
+    let z: f32 = e.iter().sum();
+    // Kept mass: candidate j survives top-p iff the mass STRICTLY BEFORE it
+    // is < top_p (so the first candidate always survives).
+    let mut cum = 0.0f32;
+    let mut cw = Vec::with_capacity(k);
+    let mut total = 0.0f32;
+    for x in &e {
+        let p = x / z;
+        if cum < top_p {
+            total += p;
+        }
+        cum += p;
+        cw.push(total);
+    }
+    let thr = u * total;
+    cw.iter().position(|c| *c > thr).unwrap_or(0)
+}
+
+/// Host mirror of one full device draw: `(seed, step)`-keyed uniform, then
+/// [`draw_index`] over the candidate row. `sp = [temperature, top_k,
+/// top_p]` exactly as uploaded to the `_rng` artifacts.
+pub fn device_draw(vals: &[f32], ids: &[i32], seed: u64, step: u32, sp: [f32; 3]) -> i32 {
+    let u = counter_uniform(seed, step);
+    ids[draw_index(vals, u, sp[0], sp[1], sp[2])]
+}
+
+/// Fully device-resident sampling: the `_rng` artifacts draw the token on
+/// device from the `(request_seed, step)` counter stream, so the host sees
+/// only `[b]` sampled ids and [`SamplingBackend::sample`] is pass-through.
+/// Same truncation contract as [`DeviceTopK`] (the k candidates ARE the
+/// support; `top_k > k` and any repetition penalty are construction
+/// errors). Holds no RNG: randomness is keyed per request by the engine's
+/// seeds/steps upload, which is what makes each request's stream
+/// independent of batch composition and chunking.
+pub struct DeviceCategorical {
+    pub cfg: SamplerConfig,
+    /// Candidate count baked into the `_rng` artifacts (`manifest.sample_k`).
+    pub k: usize,
+}
+
+impl DeviceCategorical {
+    pub fn new(cfg: SamplerConfig, k: usize, vocab: usize) -> Result<Self> {
+        if k == 0 {
+            bail!(
+                "device sampling unavailable: the artifact set has no sampling tail \
+                 (manifest sample_k = 0) — re-run `make artifacts`"
+            );
+        }
+        if cfg.repetition_penalty != 1.0 {
+            bail!(
+                "DeviceCategorical never applies a repetition penalty (requested {}): \
+                 with k={k} of {vocab} candidates the penalty could promote tokens \
+                 from outside the candidate set, and the device draw implements no \
+                 penalty path — use the HostFullRow backend for penalized sampling",
+                cfg.repetition_penalty
+            );
+        }
+        if !cfg.greedy && cfg.top_k > k {
+            bail!(
+                "DeviceCategorical: config asks for top_k {} but the artifacts return \
+                 only {k} candidates (manifest sample_k) — lower top_k, or rebuild \
+                 artifacts with a larger sample_k",
+                cfg.top_k
+            );
+        }
+        Ok(DeviceCategorical { cfg, k })
+    }
+
+    /// Validate against a manifest: needs the `device_rng` capability and a
+    /// sampling tail.
+    pub fn for_manifest(cfg: SamplerConfig, m: &crate::runtime::Manifest) -> Result<Self> {
+        m.require_device_rng()?;
+        Self::new(cfg, m.sample_k, m.actor.vocab)
+    }
+}
+
+impl SamplingBackend for DeviceCategorical {
+    fn traffic(&self) -> TrafficClass {
+        TrafficClass::DeviceCategorical
+    }
+
+    fn sample(&mut self, row: RowRef<'_>, _history: &[i32]) -> Result<i32> {
+        match row {
+            // The device already drew the token; the id IS the token.
+            RowRef::Id(t) => Ok(t),
+            other => Err(super::wrong_row("DeviceCategorical", &other)),
+        }
+    }
+
+    fn device_params(&self) -> Option<[f32; 3]> {
+        // Greedy rides the same artifacts with temperature 0 (the device
+        // draw degrades to argmax, bit-equal by the shared tie-break).
+        Some(if self.cfg.greedy {
+            [0.0, self.k as f32, 1.0]
+        } else {
+            [self.cfg.temperature, self.cfg.top_k as f32, self.cfg.top_p]
+        })
     }
 }
 
@@ -302,5 +475,102 @@ mod tests {
         let mut b = DeviceTopK::new(SamplerConfig::default(), 0, 4, 256).unwrap();
         assert!(b.sample(RowRef::TopK { vals: &[], ids: &[] }, &[]).is_err());
         assert!(b.sample(RowRef::TopK { vals: &[1.0], ids: &[1, 2] }, &[]).is_err());
+    }
+
+    #[test]
+    fn threefry_known_answer_vectors() {
+        // Random123's published Threefry-2x32x20 KATs — the same vectors
+        // python/tests/test_fused_decode.py pins the device kernel against,
+        // so host mirror and device stream agree bit-for-bit by transitivity.
+        assert_eq!(threefry2x32(0, 0, 0, 0), (0x6B20_0159, 0x99BA_4EFE));
+        assert_eq!(
+            threefry2x32(0xFFFF_FFFF, 0xFFFF_FFFF, 0xFFFF_FFFF, 0xFFFF_FFFF),
+            (0x1CB9_96FC, 0xBB00_2BE7)
+        );
+        assert_eq!(
+            threefry2x32(0x1319_8A2E, 0x0370_7344, 0x243F_6A88, 0x85A3_08D3),
+            (0xC492_3A9C, 0x483D_F7A0)
+        );
+    }
+
+    #[test]
+    fn counter_uniform_matches_pinned_device_words() {
+        // Cross-language pinned x0 words (same table in test_fused_decode.py):
+        // u = (x0 >> 8) * 2^-24 on the same grid as Rng::f32.
+        let grid = |x0: u32| (x0 >> 8) as f32 * (1.0 / (1u32 << 24) as f32);
+        assert_eq!(counter_uniform(0, 0), grid(0x6B20_0159));
+        let seed_12 = (1u64 << 32) | 2;
+        assert_eq!(counter_uniform(seed_12, 3), grid(0x8E9A_2EAB));
+        let seed_neg = 0xFFFF_FFFF_FFFF_FFFEu64; // key words (-1, -2)
+        assert_eq!(counter_uniform(seed_neg, 7), grid(0x6D06_F4B6));
+        let seed_big = (0x0123_4567u64 << 32) | 0x0089_ABCD;
+        assert_eq!(counter_uniform(seed_big, 41), grid(0x388D_5AF7));
+        assert_eq!(seed_words(seed_big), [0x0123_4567, 0x0089_ABCD]);
+        assert_eq!(seed_words(seed_neg), [-1, -2]);
+    }
+
+    #[test]
+    fn counter_stream_is_a_pure_function_of_key_and_step() {
+        // Distinct steps and distinct seeds decorrelate; same (seed, step)
+        // always reproduces — the property that makes device streams immune
+        // to admission reordering and chunking.
+        let a: Vec<f32> = (0..16).map(|s| counter_uniform(99, s)).collect();
+        let b: Vec<f32> = (0..16).map(|s| counter_uniform(99, s)).collect();
+        assert_eq!(a, b);
+        let c: Vec<f32> = (0..16).map(|s| counter_uniform(100, s)).collect();
+        assert_ne!(a, c);
+        for u in a.iter().chain(&c) {
+            assert!((0.0..1.0).contains(u), "{u}");
+        }
+    }
+
+    #[test]
+    fn draw_index_mirrors_device_semantics() {
+        let vals = [3.0, 2.0, 1.0, 0.0];
+        // temp <= 0: argmax (index 0) regardless of u.
+        assert_eq!(draw_index(&vals, 0.999, 0.0, 0.0, 1.0), 0);
+        // u = 0 lands in the first candidate's mass.
+        assert_eq!(draw_index(&vals, 0.0, 1.0, 0.0, 1.0), 0);
+        // u -> 1 lands in the last kept candidate.
+        assert_eq!(draw_index(&vals, 0.999_999, 1.0, 0.0, 1.0), 3);
+        // top_k = 2 masks candidates 2/3 even at u -> 1.
+        assert_eq!(draw_index(&vals, 0.999_999, 1.0, 2.0, 1.0), 1);
+        // top_p small enough keeps only the first (~0.64 mass at temp 1).
+        assert_eq!(draw_index(&vals, 0.999_999, 1.0, 0.0, 0.5), 0);
+    }
+
+    #[test]
+    fn device_categorical_is_pass_through_ids() {
+        let mut b = DeviceCategorical::new(SamplerConfig::default(), 8, 256).unwrap();
+        assert_eq!(b.traffic(), TrafficClass::DeviceCategorical);
+        assert_eq!(b.sample(RowRef::Id(42), &[]).unwrap(), 42);
+        // Any other row kind means the engine ran the wrong artifact family.
+        let err = b.sample(RowRef::Logits(&[1.0, 2.0]), &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("wrong artifact"));
+        let err = b.sample(RowRef::TopK { vals: &[1.0], ids: &[1] }, &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("wrong artifact"));
+    }
+
+    #[test]
+    fn device_categorical_params_and_validation() {
+        let cfg = SamplerConfig { temperature: 0.7, top_k: 5, top_p: 0.9, ..Default::default() };
+        let b = DeviceCategorical::new(cfg, 8, 256).unwrap();
+        assert_eq!(b.device_params(), Some([0.7, 5.0, 0.9]));
+        // Greedy maps to temperature 0 on the same artifacts.
+        let g = DeviceCategorical::new(greedy_cfg(), 8, 256).unwrap();
+        assert_eq!(g.device_params(), Some([0.0, 8.0, 1.0]));
+        // Same construction guards as DeviceTopK.
+        let pen = SamplerConfig { repetition_penalty: 1.2, ..Default::default() };
+        let msg = format!("{:#}", DeviceCategorical::new(pen, 8, 256).unwrap_err());
+        assert!(msg.contains("HostFullRow"), "{msg}");
+        let wide = SamplerConfig { top_k: 50, ..Default::default() };
+        let msg = format!("{:#}", DeviceCategorical::new(wide, 8, 256).unwrap_err());
+        assert!(msg.contains("sample_k"), "{msg}");
+        let msg = format!("{:#}", DeviceCategorical::new(SamplerConfig::default(), 0, 256)
+            .unwrap_err());
+        assert!(msg.contains("make artifacts"), "{msg}");
+        // Other backends advertise no device params: the engine must refuse
+        // to run the _rng family for them.
+        assert_eq!(DeviceTopK::new(greedy_cfg(), 0, 8, 256).unwrap().device_params(), None);
     }
 }

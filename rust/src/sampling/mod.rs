@@ -9,6 +9,7 @@
 //! | [`HostFullRow`]             | `decode_*`      | `[b, vocab]` logits   |
 //! | [`DeviceTopK`] (greedy)     | `decode_*_sampled` | `[b]` token ids    |
 //! | [`DeviceTopK`] (stochastic) | `decode_*_sampled` | `[b, k]` logits+ids|
+//! | [`DeviceCategorical`]       | `decode_*_rng`  | `[b]` token ids       |
 //!
 //! [`HostFullRow`] wraps the original [`Sampler`]: the artifact returns raw
 //! logits and everything after that — temperature, repetition penalty,
@@ -27,6 +28,18 @@
 //! is bit-identical to [`HostFullRow`] argmax (both tie-break toward the
 //! lower token id; pinned by the integration goldens).
 //!
+//! [`DeviceCategorical`] finishes the ENTIRE draw on device: the `_rng`
+//! artifacts carry a counter-based Threefry-2x32 generator keyed by
+//! `(request_seed, step)` plus the temperature / top-k / top-p filter
+//! ([`SamplingBackend::device_params`]), so stochastic decode fetches `[b]`
+//! sampled ids — the same O(b) bytes/step as greedy — and the host-side
+//! `sample` is pass-through. Because the stream is a pure function of the
+//! request key and its own step counter (not of a shared mutable host RNG),
+//! per-request determinism survives continuous-batching admission reorder
+//! AND fused N-step chunking for free. The draw support is the device
+//! top-`k` candidates, the same truncation contract as [`DeviceTopK`];
+//! repetition penalties stay [`HostFullRow`]-only.
+//!
 //! The engine consumes backends through [`SamplingBackend::traffic`] (which
 //! artifact family to execute and which outputs to fetch) and hands results
 //! back as a [`SampleOut`]; [`SamplingBackend::sample`] finishes one row.
@@ -34,7 +47,7 @@
 pub mod device;
 pub mod host;
 
-pub use device::DeviceTopK;
+pub use device::{seed_words, threefry2x32, DeviceCategorical, DeviceTopK};
 pub use host::{HostFullRow, Sampler};
 
 use anyhow::{bail, Result};
@@ -71,6 +84,9 @@ pub enum TrafficClass {
     DeviceIds,
     /// `_sampled` artifacts; fetch the `[b, k]` candidate logits + ids.
     DeviceTopK,
+    /// `_rng` artifacts (device counter-RNG categorical draw); fetch the
+    /// `[b]` device-sampled ids only.
+    DeviceCategorical,
 }
 
 /// What one generation step handed back to the host — the engine fetches
@@ -204,6 +220,14 @@ pub trait SamplingBackend {
     ) -> Result<i32> {
         let _ = rng;
         self.sample(row, history)
+    }
+
+    /// `[temperature, top_k, top_p]` to upload as the `_rng` artifacts'
+    /// `sparams` input. `Some` only for backends whose draw runs on device
+    /// ([`TrafficClass::DeviceCategorical`]); the engine refuses to run the
+    /// `_rng` family for a backend that returns `None`.
+    fn device_params(&self) -> Option<[f32; 3]> {
+        None
     }
 }
 

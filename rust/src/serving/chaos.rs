@@ -28,7 +28,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::sampling::SampleOut;
-use crate::serving::{Admission, AdmitOutcome, DecodeBatch, SlotEngine};
+use crate::serving::{Admission, AdmitOutcome, ChunkBatch, DecodeBatch, SlotEngine};
 use crate::util::rng::Rng;
 
 /// Fault schedule for a [`ChaosEngine`]. Defaults inject nothing.
@@ -177,6 +177,27 @@ impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
         self.inner.decode_slots(batch)
     }
 
+    fn check_decode_chunk(&self, n: usize) -> Result<()> {
+        self.inner.check_decode_chunk(n)
+    }
+
+    fn decode_slots_chunk(&mut self, batch: &ChunkBatch) -> Result<Vec<i32>> {
+        // Same injection schedule as the stepwise path: a fused chunk is
+        // one decode dispatch, so it rolls one fault and one slow tick.
+        self.injected.decode_calls += 1;
+        if self.roll(self.cfg.slow_tick_p) {
+            self.injected.slow_ticks += 1;
+            std::thread::sleep(self.cfg.slow_tick);
+        }
+        let scheduled = self.cfg.fault_every_decode > 0
+            && self.injected.decode_calls % self.cfg.fault_every_decode == 0;
+        if scheduled || self.roll(self.cfg.decode_fault_p) {
+            self.injected.decode_faults += 1;
+            bail!("chaos: transient decode fault (call {})", self.injected.decode_calls);
+        }
+        self.inner.decode_slots_chunk(batch)
+    }
+
     fn release_slot(&mut self, slot: usize) -> Result<()> {
         if !self.live[slot] {
             // The scheduler's best-effort release after an injected
@@ -253,6 +274,7 @@ mod tests {
             starts: &[0, 0],
             active: &[true, true],
             traffic: TrafficClass::DeviceIds,
+            rng: None,
         };
         let mut faults = 0;
         for _ in 0..9 {
@@ -272,8 +294,12 @@ mod tests {
             flat(2),
             ChaosConfig { broken_slots: vec![0], ..Default::default() },
         );
-        let adm =
-            Admission { prompt: &[1; 4], prefix_len: 0, traffic: TrafficClass::DeviceIds };
+        let adm = Admission {
+            prompt: &[1; 4],
+            prefix_len: 0,
+            traffic: TrafficClass::DeviceIds,
+            rng: None,
+        };
         for _ in 0..3 {
             assert!(e.prefill_slot(0, &adm).is_err());
         }
@@ -301,6 +327,7 @@ mod tests {
                 starts: &[0],
                 active: &[true],
                 traffic: TrafficClass::DeviceIds,
+                rng: None,
             };
             (0..32).map(|_| e.decode_slots(&batch).is_err()).collect::<Vec<_>>()
         };

@@ -29,10 +29,45 @@
 //! * `DeviceTopK` stochastic → `decode_slots_sampled`, `[b, k]` candidate
 //!   logits+ids down — O(b·k); the host finishes temperature/top-p and
 //!   the categorical draw with its seeded RNG.
+//! * `DeviceCategorical` → `decode_slots_rng`, `[b]` token ids down even
+//!   for STOCHASTIC sampling — the temperature/top-k/top-p categorical
+//!   draw runs on device from a counter-based Threefry stream keyed by
+//!   each request's `(seed, step)` (`crate::sampling::device`), so host
+//!   bytes drop from O(b·k) to O(b) and every request's tokens stay a
+//!   pure function of its own seed no matter the admission order, slot
+//!   placement, or chunking. The scheduler threads each slot's seed words
+//!   and step counter to the engine through [`AdmissionRng`] /
+//!   [`DecodeRng`]; a request without an explicit [`Request::seed`] gets
+//!   a deterministic per-id default.
 //!
 //! In every class the sampled token ids land on the host each tick, so
 //! EOS/length retirement stays a host decision — sample on device, retire
-//! on host. The engine contract is the [`SlotEngine`] trait so the
+//! on host.
+//!
+//! # Fused N-token decode chunks
+//!
+//! [`Scheduler::set_decode_chunk`] raises the decode dispatch granularity
+//! from one token to `N`: each tick issues ONE `decode_chunk{N}` artifact
+//! call ([`SlotEngine::decode_slots_chunk`]) that advances every live
+//! slot by up to `N` tokens and returns the `[N, b]` emitted ids, so
+//! dispatches/token drop ~N× on top of the device-RNG family's O(b)
+//! bytes/token. Admission, deadline checks, and retirement generalize to
+//! every-`N`-steps boundaries (`step_idx` advances by `N` per tick, so
+//! [`FaultPolicy::deadline_steps`] keeps its step units at chunk
+//! granularity). On device a per-row latch freezes any row that emits EOS
+//! or exhausts its budget mid-chunk — a frozen row re-writes its last
+//! live K/V row bit-identically and consumes no further RNG draws — so
+//! chunked decode is bit-identical to `N` stepwise ticks including
+//! mid-chunk retirement (pinned by the chunk equivalence tests here and
+//! the artifact goldens). The chunk slots a frozen row burns are counted
+//! in [`SchedStats::chunk_waste_tokens`] and fold into
+//! [`SchedStats::bubble_fraction`]. Chunked serving requires the
+//! device-RNG backend (the device must draw tokens the host has not seen
+//! yet — a host backend cannot interleave its draws into a fused chunk)
+//! and, on the hybrid engine, the paged pool; `N = 1` is the legacy
+//! stepwise path, bit-compatible with every pre-chunk golden.
+//!
+//! The engine contract is the [`SlotEngine`] trait so the
 //! scheduling policy is unit-testable without artifacts; [`HybridEngine`]
 //! implements it over the `prefill_slot` / `decode_slots` (and
 //! `*_sampled`) AOT artifacts and the per-slot `KvCache` occupancy ledger
@@ -151,7 +186,7 @@ use anyhow::{bail, Result};
 
 use crate::data::synthetic::Vocab;
 use crate::hybrid::HybridEngine;
-use crate::sampling::{PendingRow, SampleOut, SamplingBackend, TrafficClass};
+use crate::sampling::{seed_words, PendingRow, RowRef, SampleOut, SamplingBackend, TrafficClass};
 use crate::util::rng::Rng;
 
 /// Everything one admission needs, in one descriptor (the per-argument
@@ -168,6 +203,36 @@ pub struct Admission<'a> {
     pub prefix_len: usize,
     /// Which artifact family / pending-row shape the admission produces.
     pub traffic: TrafficClass,
+    /// Device-RNG inputs of the admission draw (`Some` iff `traffic` is
+    /// [`TrafficClass::DeviceCategorical`] — the `_rng` artifacts draw the
+    /// request's FIRST token on device, always at step 0 of its stream).
+    pub rng: Option<AdmissionRng>,
+}
+
+/// Device-RNG inputs of one admission (the `prefill_*_rng` artifacts).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionRng {
+    /// The request's Threefry key words `[hi, lo]`
+    /// ([`crate::sampling::seed_words`] of its u64 seed).
+    pub seed: [i32; 2],
+    /// `[temperature, top_k, top_p]` — the backend's
+    /// [`SamplingBackend::device_params`].
+    pub sparams: [f32; 3],
+}
+
+/// Device-RNG inputs of one fused decode call (the `decode_*_rng` and
+/// `decode_chunk{N}` artifacts): per-slot Threefry keys and draw-step
+/// counters, plus the sampling params shared by the whole batch.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeRng<'a> {
+    /// Per-slot Threefry key words, flat `[b, 2]` (zeros for dead rows).
+    pub seeds: &'a [i32],
+    /// Per-slot step counter of the NEXT draw = tokens the request has
+    /// accepted so far (the device advances it per accepted token inside
+    /// a chunk, so streams survive chunking unchanged).
+    pub steps: &'a [i32],
+    /// `[temperature, top_k, top_p]`.
+    pub sparams: [f32; 3],
 }
 
 /// One fused decode step over every slot, as a typed batch (replaces the
@@ -186,6 +251,50 @@ pub struct DecodeBatch<'a> {
     /// Per slot: whether the row carries a live sequence.
     pub active: &'a [bool],
     pub traffic: TrafficClass,
+    /// Device-RNG inputs (`Some` iff `traffic` is
+    /// [`TrafficClass::DeviceCategorical`]).
+    pub rng: Option<DecodeRng<'a>>,
+}
+
+/// One fused `N`-token decode over every slot (the `decode_chunk{N}`
+/// artifact family; device-RNG only, so [`ChunkBatch::rng`] is not
+/// optional). Compared to [`DecodeBatch`] it adds the per-slot generation
+/// budget the device's freeze latch honors.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkBatch<'a> {
+    /// Per slot: the newest accepted token (PAD for dead rows) — the
+    /// chunk's first K/V write, exactly like the stepwise fed token.
+    pub toks: &'a [i32],
+    /// Per slot: logical cache row `toks` writes at (`len - 1` on the
+    /// paged layout; 0 for dead rows).
+    pub pos: &'a [i32],
+    /// Per slot: whether the row carries a live sequence (dead rows enter
+    /// the chunk frozen: no draws, garbage-page writes only).
+    pub active: &'a [bool],
+    /// Fused steps per dispatch (the artifact's `N`; `>= 2`).
+    pub n: usize,
+    /// Per slot: remaining generation budget (`max_new - generated`); the
+    /// device freezes a row that exhausts it mid-chunk.
+    pub quota: &'a [i32],
+    pub rng: DecodeRng<'a>,
+}
+
+/// How many of one slot's `n` chunk-emitted tokens are real: everything
+/// up to and including the first EOS, capped by the slot's remaining
+/// `quota`. The device's freeze latch stops at the same boundary, so the
+/// scheduler's token walk and the engine's KV-ledger advance — both
+/// computed with this function over the same `[n, b]` row-major ids —
+/// agree by construction. Tokens past the boundary are frozen filler and
+/// must never be read.
+pub fn chunk_consumed(ids: &[i32], b: usize, slot: usize, n: usize, quota: usize) -> usize {
+    let mut consumed = 0;
+    for j in 0..n {
+        consumed += 1;
+        if ids[j * b + slot] == Vocab::EOS || consumed >= quota {
+            break;
+        }
+    }
+    consumed
 }
 
 /// What an admission produced: the slot's first pending row plus the
@@ -250,6 +359,28 @@ pub trait SlotEngine {
     /// Advance every `active` slot by one token at its own position.
     /// Returns the batch's sampling view (only active rows meaningful).
     fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut>;
+    /// Whether this engine can execute fused `n`-token decode chunks
+    /// (`n == 1` is always fine — it is the stepwise path). The scheduler
+    /// checks at [`Scheduler::set_decode_chunk`] time so a missing
+    /// capability fails loudly up front, with the engine's own
+    /// actionable error, instead of failing every tick. The default
+    /// FAILS CLOSED for `n > 1`.
+    fn check_decode_chunk(&self, n: usize) -> Result<()> {
+        if n <= 1 {
+            Ok(())
+        } else {
+            bail!("engine does not support fused decode chunks (no decode_chunk artifacts)")
+        }
+    }
+    /// Advance every `active` slot by up to `batch.n` tokens in ONE fused
+    /// call (the `decode_chunk{N}` artifact family). Returns the emitted
+    /// ids, row-major `[n, b]`; a slot's tokens past its freeze boundary
+    /// ([`chunk_consumed`]) are filler the caller must not read. Engines
+    /// without the capability keep the default, which fails closed.
+    fn decode_slots_chunk(&mut self, batch: &ChunkBatch) -> Result<Vec<i32>> {
+        let _ = batch;
+        bail!("engine does not support fused decode chunks (no decode_chunk artifacts)")
+    }
     /// Retire a finished sequence, freeing its slot for the next admission.
     fn release_slot(&mut self, slot: usize) -> Result<()>;
     /// Accounting hook: `n` tokens were sampled this step.
@@ -294,6 +425,14 @@ impl<E: SlotEngine> SlotEngine for &mut E {
         (**self).decode_slots(batch)
     }
 
+    fn check_decode_chunk(&self, n: usize) -> Result<()> {
+        (**self).check_decode_chunk(n)
+    }
+
+    fn decode_slots_chunk(&mut self, batch: &ChunkBatch) -> Result<Vec<i32>> {
+        (**self).decode_slots_chunk(batch)
+    }
+
     fn release_slot(&mut self, slot: usize) -> Result<()> {
         (**self).release_slot(slot)
     }
@@ -336,6 +475,24 @@ impl SlotEngine for HybridEngine {
         HybridEngine::decode_slots(self, batch)
     }
 
+    fn check_decode_chunk(&self, n: usize) -> Result<()> {
+        if n <= 1 {
+            return Ok(());
+        }
+        if !self.serving_is_paged() {
+            bail!(
+                "fused decode chunks serve from the block-paged KV pool only — \
+                 enable use_paged_serving(true) before set_decode_chunk({n})"
+            );
+        }
+        self.manifest().require_device_rng()?;
+        self.manifest().require_decode_chunk(n)
+    }
+
+    fn decode_slots_chunk(&mut self, batch: &ChunkBatch) -> Result<Vec<i32>> {
+        HybridEngine::decode_slots_chunk(self, batch)
+    }
+
     fn release_slot(&mut self, slot: usize) -> Result<()> {
         HybridEngine::release_slot(self, slot)
     }
@@ -371,7 +528,12 @@ pub struct Request {
     /// [`SamplingBackend::sample_stream`] over `Rng::new(s)`, so the
     /// sampled sequence is a pure function of `(prompt, s)` no matter what
     /// else shares the batch — the rollout reproducibility contract.
-    /// `None` (the serve loop) uses the backend's global stream.
+    /// `None` (the serve loop) uses the backend's global stream. Under a
+    /// [`TrafficClass::DeviceCategorical`] backend the seed keys the
+    /// request's DEVICE Threefry stream instead (same purity contract,
+    /// stronger: the counter-based draw is also independent of slot
+    /// placement and chunking); `None` falls back to a deterministic
+    /// per-id key.
     pub seed: Option<u64>,
 }
 
@@ -479,8 +641,13 @@ struct Seq {
     /// admission prefill or the last fused decode).
     pending: PendingRow,
     /// Per-request RNG stream (see [`Request::seed`]); `None` falls back
-    /// to the backend's global stream.
+    /// to the backend's global stream. Always `None` under a
+    /// device-categorical backend — the host draws nothing there.
     rng: Option<Rng>,
+    /// Key of the request's device Threefry stream (device-categorical
+    /// backends only; 0 otherwise). Draw `j` of the request is
+    /// `threefry(seed_words(device_seed), j)` wherever it executes.
+    device_seed: u64,
     enqueued_step: u64,
     admitted_step: u64,
 }
@@ -544,6 +711,13 @@ pub struct SchedStats {
     /// sub-page prefixes land here; arena admissions are counted in
     /// neither bucket).
     pub prefix_misses: u64,
+    /// Chunk slots burned by rows that froze mid-chunk (EOS or budget
+    /// latch): for every live-at-dispatch slot of a fused `N`-token
+    /// decode, the `N - consumed` trailing slots the device spent
+    /// re-writing the frozen row. The chunk-granularity component of
+    /// [`SchedStats::bubble_fraction`]; always 0 under stepwise (`N = 1`)
+    /// serving.
+    pub chunk_waste_tokens: u64,
 }
 
 impl SchedStats {
@@ -554,7 +728,11 @@ impl SchedStats {
 
     /// Fraction of decode-call slot capacity burned on dead rows — the
     /// slot-bubble metric the rollout bench tracks against the fixed-batch
-    /// baseline (0 until the first decode call).
+    /// baseline (0 until the first decode call). Chunk-aware: under fused
+    /// `N`-token decode the total counts every chunk slot
+    /// (`decode_calls · n_slots · N`) while active counts only CONSUMED
+    /// tokens, so both dead rows and mid-chunk freezes
+    /// ([`SchedStats::chunk_waste_tokens`]) register as bubble.
     pub fn bubble_fraction(&self) -> f64 {
         if self.slot_steps_total == 0 {
             0.0
@@ -633,11 +811,19 @@ pub struct Scheduler<E: SlotEngine> {
     /// Consecutive prefill faults per slot (reset on success).
     slot_failures: Vec<u32>,
     step_idx: u64,
+    /// Fused decode steps per tick (see [`Scheduler::set_decode_chunk`]);
+    /// 1 = stepwise legacy path.
+    chunk: usize,
     /// Reused per-step decode inputs (the hot loop must not allocate).
     step_toks: Vec<i32>,
     step_pos: Vec<i32>,
     step_starts: Vec<i32>,
     step_active: Vec<bool>,
+    /// Device-RNG per-step inputs: flat `[b, 2]` Threefry key words,
+    /// `[b]` draw-step counters, `[b]` remaining budgets (chunk latch).
+    step_seeds: Vec<i32>,
+    step_steps: Vec<i32>,
+    step_quota: Vec<i32>,
 }
 
 impl<E: SlotEngine> Scheduler<E> {
@@ -660,11 +846,35 @@ impl<E: SlotEngine> Scheduler<E> {
             quarantined: vec![false; n],
             slot_failures: vec![0; n],
             step_idx: 0,
+            chunk: 1,
             step_toks: vec![Vocab::PAD; n],
             step_pos: vec![0; n],
             step_starts: vec![0; n],
             step_active: vec![false; n],
+            step_seeds: vec![0; 2 * n],
+            step_steps: vec![0; n],
+            step_quota: vec![0; n],
         })
+    }
+
+    /// Fuse `n` decode steps into one engine dispatch per tick (see the
+    /// module docs' chunk section). Fails loudly — with the engine's own
+    /// actionable error — when the engine lacks the `decode_chunk{n}`
+    /// capability; `n = 1` restores the stepwise legacy path and is always
+    /// accepted. Chunked ticks additionally require a
+    /// [`TrafficClass::DeviceCategorical`] backend, checked per step.
+    pub fn set_decode_chunk(&mut self, n: usize) -> Result<()> {
+        if n == 0 {
+            bail!("decode chunk must be >= 1");
+        }
+        self.engine.check_decode_chunk(n)?;
+        self.chunk = n;
+        Ok(())
+    }
+
+    /// Fused decode steps per tick (1 = stepwise).
+    pub fn decode_chunk(&self) -> usize {
+        self.chunk
     }
 
     /// Tear the scheduler down and hand the engine back (the serve bench's
@@ -769,6 +979,23 @@ impl<E: SlotEngine> Scheduler<E> {
     ) -> Result<usize> {
         let b = self.slots.len();
         let traffic = backend.traffic();
+        let device = traffic == TrafficClass::DeviceCategorical;
+        let dev_params = match (device, backend.device_params()) {
+            (true, Some(p)) => Some(p),
+            (true, None) => bail!(
+                "sampling backend claims DeviceCategorical traffic but provides no \
+                 device params (temperature/top_k/top_p)"
+            ),
+            (false, _) => None,
+        };
+        if self.chunk > 1 && !device {
+            bail!(
+                "decode chunk {} needs a device-RNG sampling backend (DeviceCategorical) — \
+                 a host backend must see every token before the next step and cannot \
+                 interleave its draws into a fused chunk",
+                self.chunk
+            );
+        }
         self.stats.steps += 1;
         let mut retired = 0usize;
 
@@ -806,10 +1033,20 @@ impl<E: SlotEngine> Scheduler<E> {
             let Some(q) = self.queue.remove(qidx) else {
                 break;
             };
+            // A device-categorical request without an explicit seed still
+            // needs a key for its device stream: derive one from the id so
+            // the stream stays a pure per-request function.
+            let dseed = device.then(|| {
+                q.req.seed.unwrap_or_else(|| crate::rollout::request_seed(0, q.req.id))
+            });
             let adm = Admission {
                 prompt: &q.req.prompt,
                 prefix_len: q.req.prefix_len,
                 traffic,
+                rng: dseed.map(|s| AdmissionRng {
+                    seed: seed_words(s),
+                    sparams: dev_params.unwrap_or_default(),
+                }),
             };
             match self.engine.prefill_slot(slot, &adm) {
                 Ok(outcome) => {
@@ -839,7 +1076,10 @@ impl<E: SlotEngine> Scheduler<E> {
                         generated: 0,
                         max_new,
                         pending: outcome.pending,
-                        rng: q.req.seed.map(Rng::new),
+                        // Device-categorical draws run on device keyed by
+                        // `device_seed`; the host stream stays unused.
+                        rng: if device { None } else { q.req.seed.map(Rng::new) },
+                        device_seed: dseed.unwrap_or(0),
                         enqueued_step: q.enqueued_step,
                         admitted_step: self.step_idx,
                     });
@@ -995,79 +1235,181 @@ impl<E: SlotEngine> Scheduler<E> {
                     self.step_pos[slot] = (seq.pad + seq.tokens.len() - 1) as i32;
                     self.step_starts[slot] = seq.pad as i32;
                     self.step_active[slot] = true;
+                    let w = seed_words(seq.device_seed);
+                    self.step_seeds[2 * slot] = w[0];
+                    self.step_seeds[2 * slot + 1] = w[1];
+                    self.step_steps[slot] = seq.generated as i32;
+                    self.step_quota[slot] = (seq.max_new - seq.generated) as i32;
                 } else {
                     self.step_toks[slot] = Vocab::PAD;
                     self.step_pos[slot] = 0;
                     self.step_starts[slot] = 0;
                     self.step_active[slot] = false;
+                    self.step_seeds[2 * slot] = 0;
+                    self.step_seeds[2 * slot + 1] = 0;
+                    self.step_steps[slot] = 0;
+                    self.step_quota[slot] = 0;
                 }
             }
-            // Bounded retry with identical inputs: a transient fault that
-            // fired before the engine touched per-slot state recovers
-            // bit-identically, because this tick's sampling already read
-            // the pending rows of the last SUCCESSFUL call and no RNG
-            // stream advances for a failed attempt.
-            let mut attempt = 0u32;
-            let batch = DecodeBatch {
-                toks: &self.step_toks,
-                pos: &self.step_pos,
-                starts: &self.step_starts,
-                active: &self.step_active,
-                traffic,
-            };
-            let out = loop {
-                match self.engine.decode_slots(&batch) {
-                    Ok(out) => break Some(out),
-                    Err(_) => {
-                        self.stats.decode_faults += 1;
-                        if attempt >= self.policy.max_retries {
-                            break None;
+            if self.chunk > 1 {
+                retired += self.chunk_decode(dev_params.unwrap_or_default(), sink)?;
+            } else {
+                // Bounded retry with identical inputs: a transient fault that
+                // fired before the engine touched per-slot state recovers
+                // bit-identically, because this tick's sampling already read
+                // the pending rows of the last SUCCESSFUL call and no RNG
+                // stream advances for a failed attempt.
+                let mut attempt = 0u32;
+                let batch = DecodeBatch {
+                    toks: &self.step_toks,
+                    pos: &self.step_pos,
+                    starts: &self.step_starts,
+                    active: &self.step_active,
+                    traffic,
+                    rng: device.then(|| DecodeRng {
+                        seeds: &self.step_seeds,
+                        steps: &self.step_steps,
+                        sparams: dev_params.unwrap_or_default(),
+                    }),
+                };
+                let out = loop {
+                    match self.engine.decode_slots(&batch) {
+                        Ok(out) => break Some(out),
+                        Err(_) => {
+                            self.stats.decode_faults += 1;
+                            if attempt >= self.policy.max_retries {
+                                break None;
+                            }
+                            attempt += 1;
+                            self.stats.decode_retries += 1;
                         }
-                        attempt += 1;
-                        self.stats.decode_retries += 1;
                     }
-                }
-            };
-            match out {
-                Some(out) => {
-                    for slot in 0..b {
-                        if let Some(seq) = self.slots[slot].as_mut() {
-                            seq.pending.copy_from(out.row(slot));
+                };
+                match out {
+                    Some(out) => {
+                        for slot in 0..b {
+                            if let Some(seq) = self.slots[slot].as_mut() {
+                                seq.pending.copy_from(out.row(slot));
+                            }
                         }
+                        self.stats.decode_calls += 1;
+                        self.stats.slot_steps_active += active_n as u64;
+                        self.stats.slot_steps_total += b as u64;
                     }
-                    self.stats.decode_calls += 1;
-                    self.stats.slot_steps_active += active_n as u64;
-                    self.stats.slot_steps_total += b as u64;
-                }
-                None => {
-                    // Retry budget exhausted: retire every live sequence
-                    // with the tokens it already has, so the queue (and the
-                    // serve loop) survive the broken tick.
-                    for slot in 0..b {
-                        let Some(seq) = self.slots[slot].take() else {
-                            continue;
-                        };
-                        let _ = self.engine.release_slot(slot);
-                        self.stats.completed += 1;
-                        self.stats.retired_failed += 1;
-                        retired += 1;
-                        sink.complete(Completion {
-                            id: seq.id,
-                            slot,
-                            prompt_len: seq.prompt_len,
-                            generated: seq.generated,
-                            finish: FinishReason::Failed { retries: attempt },
-                            queued_steps: seq.admitted_step - seq.enqueued_step,
-                            decode_steps: self.step_idx + 1 - seq.admitted_step,
-                            tokens: seq.tokens,
-                        });
-                    }
+                    None => retired += self.retire_all_failed(attempt, sink),
                 }
             }
         }
 
-        self.step_idx += 1;
+        self.step_idx += self.chunk as u64;
         Ok(retired)
+    }
+
+    /// Retry budget exhausted: retire every live sequence with the tokens
+    /// it already has, so the queue (and the serve loop) survive the
+    /// broken tick.
+    fn retire_all_failed(&mut self, attempt: u32, sink: &mut dyn CompletionSink) -> usize {
+        let mut retired = 0usize;
+        for slot in 0..self.slots.len() {
+            let Some(seq) = self.slots[slot].take() else {
+                continue;
+            };
+            let _ = self.engine.release_slot(slot);
+            self.stats.completed += 1;
+            self.stats.retired_failed += 1;
+            retired += 1;
+            sink.complete(Completion {
+                id: seq.id,
+                slot,
+                prompt_len: seq.prompt_len,
+                generated: seq.generated,
+                finish: FinishReason::Failed { retries: attempt },
+                queued_steps: seq.admitted_step - seq.enqueued_step,
+                decode_steps: self.step_idx + 1 - seq.admitted_step,
+                tokens: seq.tokens,
+            });
+        }
+        retired
+    }
+
+    /// One fused N-token decode call over every live slot. The engine
+    /// latches each row at its first EOS (and after its budget runs dry),
+    /// so the scheduler walks each row's prefix up to the first terminal
+    /// token: everything before it lands in `tokens` immediately, the
+    /// terminal token itself becomes the pending row, and the NEXT tick's
+    /// unchanged sample/retire phase pushes it and retires on EOS/Length —
+    /// exactly the retirement cadence of stepwise decode, observed every
+    /// N steps instead of every step.
+    fn chunk_decode(
+        &mut self,
+        sparams: [f32; 3],
+        sink: &mut dyn CompletionSink,
+    ) -> Result<usize> {
+        let b = self.slots.len();
+        let n = self.chunk;
+        let batch = ChunkBatch {
+            toks: &self.step_toks,
+            pos: &self.step_pos,
+            active: &self.step_active,
+            n,
+            quota: &self.step_quota,
+            rng: DecodeRng {
+                seeds: &self.step_seeds,
+                steps: &self.step_steps,
+                sparams,
+            },
+        };
+        // Same bounded-retry contract as stepwise: device RNG draws are a
+        // pure function of (seed, step, slot), so a retried chunk replays
+        // bit-identically.
+        let mut attempt = 0u32;
+        let out = loop {
+            match self.engine.decode_slots_chunk(&batch) {
+                Ok(ids) => break Some(ids),
+                Err(_) => {
+                    self.stats.decode_faults += 1;
+                    if attempt >= self.policy.max_retries {
+                        break None;
+                    }
+                    attempt += 1;
+                    self.stats.decode_retries += 1;
+                }
+            }
+        };
+        match out {
+            Some(ids) => {
+                if ids.len() != n * b {
+                    bail!(
+                        "decode_slots_chunk returned {} ids, wanted [{n}, {b}]",
+                        ids.len()
+                    );
+                }
+                let (mut consumed_total, mut pushed, mut waste) = (0u64, 0u64, 0u64);
+                for slot in 0..b {
+                    let Some(seq) = self.slots[slot].as_mut() else {
+                        continue;
+                    };
+                    let quota = self.step_quota[slot].max(0) as usize;
+                    let consumed = chunk_consumed(&ids, b, slot, n, quota);
+                    for j in 0..consumed - 1 {
+                        seq.tokens.push(ids[j * b + slot]);
+                        seq.generated += 1;
+                        pushed += 1;
+                    }
+                    seq.pending.copy_from(RowRef::Id(ids[(consumed - 1) * b + slot]));
+                    consumed_total += consumed as u64;
+                    waste += (n - consumed) as u64;
+                }
+                self.stats.decode_calls += 1;
+                self.stats.slot_steps_active += consumed_total;
+                self.stats.slot_steps_total += (n * b) as u64;
+                self.stats.chunk_waste_tokens += waste;
+                self.stats.tokens_sampled += pushed;
+                self.engine.note_generated(pushed);
+                Ok(0)
+            }
+            None => Ok(self.retire_all_failed(attempt, sink)),
+        }
     }
 
     /// Drive the loop until queue and slots drain; returns all completions
@@ -1126,6 +1468,11 @@ mod tests {
         decode_starts: Vec<Vec<i32>>,
         /// Traffic class of every decode call (artifact-family assertions).
         decode_traffic: Vec<TrafficClass>,
+        /// Derive content tokens from the batch's device-RNG inputs instead
+        /// of the scripted constant — a pure function of (seed, draw index),
+        /// like the real `decode_*_rng` artifacts — so stream-determinism
+        /// across admission orderings and chunk sizes is observable.
+        device_rng: bool,
     }
 
     impl MockEngine {
@@ -1142,6 +1489,7 @@ mod tests {
                 decode_active: Vec::new(),
                 decode_starts: Vec::new(),
                 decode_traffic: Vec::new(),
+                device_rng: false,
             }
         }
 
@@ -1156,6 +1504,20 @@ mod tests {
             self.paged = true;
             self.padded = false; // paged serving needs no left-pad masks
             self
+        }
+
+        /// Content tokens become counter-RNG draws (see `device_rng`).
+        fn device_rng_mode(mut self) -> Self {
+            self.device_rng = true;
+            self
+        }
+
+        /// The mock's device draw: Threefry-keyed by the slot's seed words
+        /// and the draw index, mapped into content-token space (never EOS,
+        /// never PAD) — slot-placement-independent like the real kernel.
+        fn rng_token(k0: i32, k1: i32, step: u32) -> i32 {
+            let (x0, _) = crate::sampling::threefry2x32(k0 as u32, k1 as u32, step, 0);
+            10 + ((x0 >> 8) % 16) as i32
         }
 
         fn logits_for(&self, tok: i32) -> Vec<f32> {
@@ -1175,6 +1537,8 @@ mod tests {
                     let other = (tok + 1) % VOCAB as i32;
                     PendingRow::TopK { vals: vec![10.0, -10.0], ids: vec![tok, other] }
                 }
+                // The device drew the token itself; only the id crosses.
+                TrafficClass::DeviceCategorical => PendingRow::Id(tok),
             }
         }
     }
@@ -1221,7 +1585,15 @@ mod tests {
             let plan: Vec<i32> = (0..SG + 2)
                 .map(|j| if j < n { CONTENT } else { Vocab::EOS })
                 .collect();
-            let row = self.row_for(plan[0], adm.traffic);
+            let mut first = plan[0];
+            if adm.traffic == TrafficClass::DeviceCategorical {
+                let rng = adm.rng.expect("device admission without rng inputs");
+                // Prefill performs draw #0 of the request's stream.
+                if self.device_rng && first != Vocab::EOS {
+                    first = Self::rng_token(rng.seed[0], rng.seed[1], 0);
+                }
+            }
+            let row = self.row_for(first, adm.traffic);
             self.plans[slot] = Some((plan, 1, prompt.len()));
             self.prefill_log.push(slot);
             self.prefill_lens.push(prompt.len());
@@ -1264,8 +1636,23 @@ mod tests {
                         "slot {slot} fed off its depth"
                     );
                 }
-                next[slot] = plan[*cur];
+                let step = *cur;
+                next[slot] = plan[step];
                 *cur += 1;
+                if traffic == TrafficClass::DeviceCategorical {
+                    let rng = batch.rng.expect("device decode without rng inputs");
+                    // The scheduler's stream bookkeeping: this call performs
+                    // draw #cur of the slot's request, no matter the batch
+                    // composition around it.
+                    assert_eq!(rng.steps[slot] as usize, step, "slot {slot} draw index");
+                    if self.device_rng && next[slot] != Vocab::EOS {
+                        next[slot] = Self::rng_token(
+                            rng.seeds[2 * slot],
+                            rng.seeds[2 * slot + 1],
+                            step as u32,
+                        );
+                    }
+                }
             }
             Ok(match traffic {
                 TrafficClass::FullRow => {
@@ -1278,7 +1665,9 @@ mod tests {
                     }
                     SampleOut::Logits { data, vocab: VOCAB }
                 }
-                TrafficClass::DeviceIds => SampleOut::Ids(next),
+                TrafficClass::DeviceIds | TrafficClass::DeviceCategorical => {
+                    SampleOut::Ids(next)
+                }
                 TrafficClass::DeviceTopK => {
                     let mut vals = Vec::with_capacity(self.n_slots * 2);
                     let mut ids = Vec::with_capacity(self.n_slots * 2);
@@ -1289,6 +1678,63 @@ mod tests {
                     SampleOut::TopK { vals, ids, k: 2 }
                 }
             })
+        }
+
+        fn check_decode_chunk(&self, n: usize) -> Result<()> {
+            if n <= 1 || self.paged {
+                Ok(())
+            } else {
+                bail!("mock engine: fused decode chunks serve from paged mode only")
+            }
+        }
+
+        fn decode_slots_chunk(&mut self, batch: &ChunkBatch) -> Result<Vec<i32>> {
+            assert!(self.paged, "chunk decode on a non-paged mock");
+            assert!(batch.n >= 2, "n == 1 is the stepwise path");
+            let (b, n) = (self.n_slots, batch.n);
+            assert_eq!(batch.toks.len(), b);
+            self.decode_active.push(batch.active.to_vec());
+            self.decode_traffic.push(TrafficClass::DeviceCategorical);
+            // Frozen rows emit EOS filler, like the real kernel's latch.
+            let mut ids = vec![Vocab::EOS; n * b];
+            for slot in 0..b {
+                if !batch.active[slot] {
+                    continue;
+                }
+                let (plan, cur, true_len) =
+                    self.plans[slot].as_mut().expect("active free slot");
+                assert_eq!(
+                    batch.pos[slot] as usize,
+                    *true_len + *cur - 1,
+                    "slot {slot} fed off its depth (chunk)"
+                );
+                let rng = &batch.rng;
+                assert_eq!(
+                    rng.steps[slot] as usize,
+                    *cur,
+                    "slot {slot} chunk base draw index"
+                );
+                let mut quota = batch.quota[slot];
+                assert!(quota >= 1, "live slot {slot} entered a chunk with no budget");
+                for j in 0..n {
+                    let step = *cur;
+                    let mut tok = plan[step];
+                    if self.device_rng && tok != Vocab::EOS {
+                        tok = Self::rng_token(
+                            rng.seeds[2 * slot],
+                            rng.seeds[2 * slot + 1],
+                            step as u32,
+                        );
+                    }
+                    ids[j * b + slot] = tok;
+                    *cur += 1;
+                    quota -= 1;
+                    if tok == Vocab::EOS || quota <= 0 {
+                        break; // latched: the rest of the row stays filler
+                    }
+                }
+            }
+            Ok(ids)
         }
 
         fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -1306,6 +1752,21 @@ mod tests {
     fn device_greedy() -> DeviceTopK {
         DeviceTopK::new(SamplerConfig { greedy: true, ..Default::default() }, 0, 2, VOCAB)
             .unwrap()
+    }
+
+    /// Device-RNG backend, greedy flavor (temperature-0 device draw).
+    fn device_cat() -> crate::sampling::DeviceCategorical {
+        crate::sampling::DeviceCategorical::new(
+            SamplerConfig { greedy: true, ..Default::default() },
+            2,
+            VOCAB,
+        )
+        .unwrap()
+    }
+
+    /// Device-RNG backend, stochastic flavor.
+    fn device_cat_stochastic() -> crate::sampling::DeviceCategorical {
+        crate::sampling::DeviceCategorical::new(SamplerConfig::default(), 2, VOCAB).unwrap()
     }
 
     /// `prompt[0]` = content tokens the scripted engine emits before EOS.
@@ -1726,5 +2187,155 @@ mod tests {
         assert_eq!(st.reused_tokens, 0);
         assert_eq!(st.cache_hit_rate(), 0.0);
         assert_eq!(st.computed_tokens(), st.admitted_tokens());
+    }
+
+    #[test]
+    fn chunked_greedy_matches_stepwise_including_midchunk_eos() {
+        // The fused-chunk contract: N=4 chunked decode must reproduce the
+        // stepwise token streams bit-for-bit — including a sequence whose
+        // EOS lands mid-chunk and one that exhausts its budget mid-chunk —
+        // while dispatching strictly fewer decode calls.
+        let run = |chunk: usize| {
+            let mut sched = Scheduler::new(MockEngine::new(2).paged_mode()).unwrap();
+            if chunk > 1 {
+                sched.set_decode_chunk(chunk).unwrap();
+            }
+            let mut sampler = device_cat();
+            sched.submit(req(1, 3, SG)).unwrap(); // EOS at draw 3 (mid-chunk)
+            sched.submit(req(2, 5, SG)).unwrap(); // EOS at draw 5
+            sched.submit(req(3, 100, 6)).unwrap(); // never EOS, budget-capped
+            let mut all = sched.run_until_idle(&mut sampler).unwrap();
+            all.sort_by_key(|c| c.id);
+            (all, sched.stats.decode_calls)
+        };
+        let (stepwise, calls1) = run(1);
+        let (chunked, calls4) = run(4);
+        assert_eq!(stepwise.len(), 3);
+        for (a, b) in stepwise.iter().zip(&chunked) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {} token stream", a.id);
+            assert_eq!(a.finish, b.finish, "request {} finish reason", a.id);
+            assert_eq!(a.generated, b.generated);
+        }
+        assert!(
+            calls4 < calls1,
+            "chunked decode must dispatch fewer calls ({calls4} vs {calls1})"
+        );
+    }
+
+    /// A request's prompt plus an explicit device-RNG seed; never-EOS so
+    /// the whole generated stream is RNG-derived.
+    fn seeded_req(id: u64, seed: u64, max_new: usize) -> Request {
+        let mut prompt = vec![CONTENT; SP];
+        prompt[0] = 100;
+        Request { id, prompt, max_new, seed: Some(seed), prefix_len: 0 }
+    }
+
+    #[test]
+    fn device_stream_survives_reordering_and_chunking() {
+        // The per-request stream is keyed by (seed, draw index) alone:
+        // resubmitting in a different order, onto a different slot count,
+        // with a different chunk size, must reproduce every request's
+        // tokens exactly.
+        let run = |order: &[u64], chunk: usize, n_slots: usize| {
+            let mut sched =
+                Scheduler::new(MockEngine::new(n_slots).paged_mode().device_rng_mode())
+                    .unwrap();
+            if chunk > 1 {
+                sched.set_decode_chunk(chunk).unwrap();
+            }
+            let mut sampler = device_cat_stochastic();
+            for &id in order {
+                sched.submit(seeded_req(id, 0xC0FFEE ^ id, 5)).unwrap();
+            }
+            let mut all = sched.run_until_idle(&mut sampler).unwrap();
+            all.sort_by_key(|c| c.id);
+            all.into_iter().map(|c| (c.id, c.tokens)).collect::<Vec<_>>()
+        };
+        let a = run(&[1, 2, 3], 1, 2);
+        let b = run(&[3, 1, 2], 4, 2);
+        let c = run(&[2, 3, 1], 2, 3);
+        assert_eq!(a, b, "chunk 4 / reordered must match stepwise");
+        assert_eq!(a, c, "chunk 2 / three slots must match stepwise");
+        assert_ne!(a[0].1, a[1].1, "distinct seeds give distinct streams");
+    }
+
+    #[test]
+    fn chunk_with_host_backend_bails() {
+        let mut sched = Scheduler::new(MockEngine::new(2).paged_mode()).unwrap();
+        sched.set_decode_chunk(2).unwrap();
+        sched.submit(req(1, 2, SG)).unwrap();
+        let err = format!("{:#}", sched.step(&mut greedy()).unwrap_err());
+        assert!(err.contains("device-RNG"), "{err}");
+    }
+
+    #[test]
+    fn set_decode_chunk_checks_capability_up_front() {
+        // A non-paged engine has no chunk artifacts: the failure surfaces
+        // at configuration time with the engine's own error, not as
+        // per-tick Failed retirements.
+        let mut sched = Scheduler::new(MockEngine::new(2)).unwrap();
+        let err = format!("{:#}", sched.set_decode_chunk(4).unwrap_err());
+        assert!(err.contains("paged"), "{err}");
+        assert_eq!(sched.decode_chunk(), 1, "failed set leaves chunk untouched");
+        sched.set_decode_chunk(1).unwrap(); // N=1 is always the stepwise path
+        // And the trait default fails closed for engines that never opted in.
+        struct NoChunk;
+        impl SlotEngine for NoChunk {
+            fn n_slots(&self) -> usize {
+                1
+            }
+            fn prompt_len(&self) -> usize {
+                SP
+            }
+            fn max_new_tokens(&self) -> usize {
+                SG
+            }
+            fn prefill_slot(&mut self, _: usize, _: &Admission) -> Result<AdmitOutcome> {
+                bail!("unused")
+            }
+            fn decode_slots(&mut self, _: &DecodeBatch) -> Result<SampleOut> {
+                bail!("unused")
+            }
+            fn release_slot(&mut self, _: usize) -> Result<()> {
+                Ok(())
+            }
+        }
+        let mut e = NoChunk;
+        e.check_decode_chunk(1).unwrap();
+        let err = format!("{:#}", e.check_decode_chunk(2).unwrap_err());
+        assert!(err.contains("decode_chunk"), "{err}");
+        let batch = ChunkBatch {
+            toks: &[0],
+            pos: &[0],
+            active: &[false],
+            n: 2,
+            quota: &[0],
+            rng: DecodeRng { seeds: &[0, 0], steps: &[0], sparams: [0.0; 3] },
+        };
+        assert!(e.decode_slots_chunk(&batch).is_err());
+    }
+
+    #[test]
+    fn chunk_waste_and_bubble_accounting() {
+        // One live slot of two, chunk 4: the request retires after 2 of
+        // its 4 fused steps (EOS latch), so the call's 8 slot-steps split
+        // into 2 active, 2 latch-wasted (live row), and 4 dead-row bubble.
+        let mut sched = Scheduler::new(MockEngine::new(2).paged_mode()).unwrap();
+        sched.set_decode_chunk(4).unwrap();
+        let mut sampler = device_cat();
+        sched.submit(req(1, 2, SG)).unwrap(); // C C EOS
+        let done = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].response(), &[CONTENT, CONTENT, Vocab::EOS]);
+        assert_eq!(done[0].finish, FinishReason::Eos);
+        let st = &sched.stats;
+        assert_eq!(st.decode_calls, 1, "one fused call covers the whole tail");
+        assert_eq!(st.slot_steps_total, 8, "4 fused steps x 2 slots");
+        assert_eq!(st.slot_steps_active, 2, "draws 1-2 of the live row");
+        assert_eq!(st.chunk_waste_tokens, 2, "latched live-row steps only");
+        let util = st.utilization();
+        let bubble = st.bubble_fraction();
+        assert!((util + bubble - 1.0).abs() < 1e-12, "{util} + {bubble}");
     }
 }

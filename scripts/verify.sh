@@ -29,11 +29,21 @@ cargo test -q
 if [ -f artifacts/tiny/manifest.json ]; then
     echo "== verify: decode + rollout bench (smoke; per-backend host bytes/token) =="
     cargo bench --bench runtime_e2e -- --smoke
+    test -s BENCH_decode.json \
+        || { echo "verify: runtime_e2e bench did not write BENCH_decode.json" >&2; exit 1; }
     echo "verify: wrote BENCH_decode.json"
     if grep -q '"decode_step_sampled"' artifacts/tiny/manifest.json; then
         echo "verify: device-sampling artifacts present — decode bench covered host + device backends"
     else
         echo "verify: artifacts predate device-side sampling — decode bench covered host backend only (re-run \`make artifacts\`)"
+    fi
+    if grep -q '"device_rng": true' artifacts/tiny/manifest.json; then
+        # The decode bench's chunk sweep (device counter-RNG categorical,
+        # N in whatever decode_chunk_sizes the manifest carries) ran above
+        # and landed in BENCH_decode.json's "chunk_sweep" section.
+        echo "verify: device_rng capability present — decode bench swept fused decode chunks"
+    else
+        echo "verify: artifacts predate device-side RNG sampling — chunk sweep skipped (re-run \`make artifacts\`)"
     fi
     if grep -q '"prefill_slot"' artifacts/tiny/manifest.json; then
         # runtime_e2e's rollout phase (continuous vs fixed experience
@@ -64,8 +74,17 @@ if [ -f artifacts/tiny/manifest.json ]; then
             echo "== verify: serve demo (device sampling tail) =="
             cargo run --release --example serve -- --demo --backend device
         fi
-        echo "== verify: serve bench (smoke; includes the mixed-length phase when supported) =="
+        if grep -q '"device_rng": true' artifacts/tiny/manifest.json \
+            && grep -q '"decode_chunk4"' artifacts/tiny/manifest.json; then
+            echo "== verify: serve demo (fused 4-token decode, device RNG) =="
+            cargo run --release --example serve -- --demo --decode-chunk 4
+        else
+            echo "verify: artifacts lack decode_chunk entries — fused-chunk serve demo skipped (re-run \`make artifacts\`)"
+        fi
+        echo "== verify: serve bench (smoke; includes the mixed-length + fused-chunk phases when supported) =="
         cargo bench --bench serve_loop -- --smoke
+        test -s BENCH_serve.json \
+            || { echo "verify: serve_loop bench did not write BENCH_serve.json" >&2; exit 1; }
         echo "verify: wrote BENCH_serve.json"
         echo "== verify: serve bench under chaos (fault injection smoke) =="
         # Re-runs the continuous phase with transient prefill/decode faults
