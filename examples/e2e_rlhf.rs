@@ -7,7 +7,7 @@
 //! make artifacts && cargo run --release --example e2e_rlhf -- \
 //!     [--run small] [--sft-steps 800] [--rm-steps 400] [--ppo-iters 200] \
 //!     [--rollout fixed|continuous] [--rollout-batch N] [--min-prompt-len L] \
-//!     [--decode-chunk N]
+//!     [--decode-chunk N] [--trace-out trace.json]
 //! ```
 //!
 //! `--rollout continuous` streams Step-3 experience generation through the
@@ -54,6 +54,13 @@ fn main() -> anyhow::Result<()> {
     println!("== e2e RLHF ({run}) ==");
     let engine = Rc::new(Engine::cpu()?);
     let mut he = HybridEngine::init(engine, &dir, args.usize("seed", 0) as i32, true)?;
+    // Pipeline-phase tracing: rollout / score / train-step / checkpoint /
+    // guard-rollback spans on their own Perfetto tracks, plus per-slot
+    // request lifecycles when the continuous rollout runs.
+    let trace_out = args.get("trace-out").map(|s| s.to_string());
+    if trace_out.is_some() {
+        he.set_telemetry(dschat::telemetry::Telemetry::enabled_default());
+    }
     let (vocab, sp, sg, batch, seq_len, actor_name, critic_name, actor_np, critic_np) = {
         let m = he.manifest();
         (m.actor.vocab, m.prompt_len, m.gen_len, m.batch, m.seq_len,
@@ -240,5 +247,13 @@ fn main() -> anyhow::Result<()> {
     pipeline::save_actor(&he, &ckpt)?;
     println!("saved EMA actor to {}", ckpt.display());
     println!("curves: {}/sft.csv rm.csv ppo.csv", out.display());
+    if let Some(path) = &trace_out {
+        std::fs::write(path, he.telemetry.chrome_trace_json())?;
+        println!(
+            "wrote Chrome trace ({} events, {} dropped) to {path}",
+            he.telemetry.event_count(),
+            he.telemetry.dropped()
+        );
+    }
     Ok(())
 }

@@ -12,7 +12,9 @@
 //! artifacts carry the `padded_prompts` capability (clamped to the
 //! structural floor and the artifact window). One in-flight request per
 //! connection; malformed lines get a parse error reply and cost no model
-//! time.
+//! time. The line `stats` replies with the unified one-line JSON metrics
+//! snapshot (runtime byte ledger + scheduler counters + KV occupancy +
+//! TTFT/inter-token/queue-wait histograms) instead of a generation.
 //!
 //! # Scheduling
 //!
@@ -49,6 +51,7 @@
 //! ```text
 //! cargo run --release --example serve -- [--run tiny] [--ckpt runs/tiny/actor.bin] \
 //!     [--port 7878] [--backend auto|device|host|rng] [--decode-chunk N] \
+//!     [--trace-out trace.json]      # Chrome trace-event JSON, written at exit \
 //!     [--demo]                      # --demo: run 6 in-process requests and exit
 //! ```
 
@@ -65,6 +68,7 @@ use dschat::pipeline;
 use dschat::runtime::Engine;
 use dschat::sampling::{DeviceCategorical, DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
 use dschat::serving::{FinishReason, Request, Scheduler};
+use dschat::telemetry::{metrics_snapshot_json, Telemetry};
 use dschat::util::argparse::Args;
 use dschat::util::fmt_bytes;
 
@@ -110,6 +114,34 @@ fn parse_request(task: &TaskGen, line: &str) -> Option<Prompt> {
     Some(Prompt { mode, a, b, tokens })
 }
 
+/// One-line unified metrics snapshot (the `stats` protocol command):
+/// runtime byte ledger + scheduler counters + KV occupancy + latency
+/// histograms, flattened for the newline-delimited protocol.
+fn stats_line(sched: &Scheduler<HybridEngine>) -> String {
+    let exec = sched.engine.engine.stats();
+    let kv = sched.engine.kv_occupancy();
+    metrics_snapshot_json(&exec, Some(&sched.stats), &[], kv.as_ref(), sched.telemetry())
+        .replace('\n', " ")
+}
+
+/// Loud one-time warning when the runtime fell off the zero-copy
+/// fused-tuple output path (previously visible only by reading
+/// `ExecStats::fallback_untuples`).
+fn warn_fallbacks(sched: &Scheduler<HybridEngine>, warned: &mut bool) {
+    if *warned {
+        return;
+    }
+    let n = sched.engine.engine.fallback_untuples();
+    if n > 0 {
+        *warned = true;
+        eprintln!(
+            "[serve] WARNING: {n} fused-tuple fallback(s) — artifact outputs are being \
+             copied through host literals instead of donated device tuples; throughput \
+             is degraded (stale artifacts? re-run `make artifacts`)"
+        );
+    }
+}
+
 /// Parse one queued line and hand it to the scheduler (or reply with a
 /// parse error immediately, costing no model time).
 fn enqueue(
@@ -120,6 +152,10 @@ fn enqueue(
     next_id: &mut u64,
     max_new: usize,
 ) {
+    if rl.text.trim().eq_ignore_ascii_case("stats") {
+        let _ = rl.reply.send(stats_line(sched));
+        return;
+    }
     let Some(prompt) = parse_request(task, &rl.text) else {
         let _ = rl
             .reply
@@ -211,6 +247,14 @@ fn main() -> anyhow::Result<()> {
         eprintln!("fused decode chunks: {chunk} tokens per dispatch (paged serving)");
     }
 
+    // Request-lifecycle tracing: enable telemetry on the engine BEFORE the
+    // scheduler is built so it adopts the handle; the Chrome trace-event
+    // JSON (Perfetto / chrome://tracing) is written at exit.
+    let trace_out = args.get("trace-out").map(|s| s.to_string());
+    if trace_out.is_some() {
+        he.set_telemetry(Telemetry::enabled_default());
+    }
+
     // From here on the scheduler owns the engine (per-slot serving mode).
     let mut sched = Scheduler::new(he)?;
     if chunk > 1 {
@@ -284,6 +328,11 @@ fn main() -> anyhow::Result<()> {
             fmt_bytes((down - down0) as f64 / toks as f64),
             fmt_bytes((up - up0) as f64 / toks as f64),
         );
+        warn_fallbacks(&sched, &mut false);
+        if let Some(path) = &trace_out {
+            std::fs::write(path, sched.telemetry().chrome_trace_json())?;
+            eprintln!("[demo] wrote Chrome trace ({} events) to {path}", sched.telemetry().event_count());
+        }
         return Ok(());
     }
 
@@ -331,6 +380,7 @@ fn main() -> anyhow::Result<()> {
     // drain whatever is queued and run one scheduler step per iteration.
     let mut pending: HashMap<u64, Pending> = HashMap::new();
     let mut next_id = 0u64;
+    let mut warned_fallback = false;
     loop {
         if sched.is_idle() {
             match rx.recv() {
@@ -361,6 +411,7 @@ fn main() -> anyhow::Result<()> {
         if done.is_empty() {
             continue;
         }
+        warn_fallbacks(&sched, &mut warned_fallback);
         let toks = (sched.engine.stats.gen_tokens - tok0).max(1);
         let (up, down) = sched.engine.engine.bytes_moved();
         for c in &done {
@@ -406,6 +457,10 @@ fn main() -> anyhow::Result<()> {
                 fmt_bytes((up - up0) as f64 / toks as f64),
             );
         }
+    }
+    if let Some(path) = &trace_out {
+        std::fs::write(path, sched.telemetry().chrome_trace_json())?;
+        eprintln!("[serve] wrote Chrome trace ({} events) to {path}", sched.telemetry().event_count());
     }
     Ok(())
 }

@@ -399,7 +399,8 @@ fn main() -> anyhow::Result<()> {
         ));
     }
     let json = format!(
-        "{{\n  \"bench\": \"decode_loop\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
+        "{{\n  \"bench\": \"decode_loop\",\n  \"schema_version\": 1,\n  \
+         \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
          \"iters\": {iters},\n  \"tokens\": {},\n  \"secs\": {:.6},\n  \
          \"tok_per_sec\": {:.3},\n  \"host_bytes_fetched\": {},\n  \
          \"host_bytes_uploaded\": {},\n  \"host_bytes_fetched_per_token\": {:.1},\n  \
@@ -518,7 +519,8 @@ fn main() -> anyhow::Result<()> {
     };
 
     let rollout_json = format!(
-        "{{\n  \"bench\": \"rollout\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
+        "{{\n  \"bench\": \"rollout\",\n  \"schema_version\": 1,\n  \
+         \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
          \"n_prompts\": {n_roll},\n  \"group\": {bsz},\n  \"gen_len\": {sg},\n  \
          \"fixed\": {{\n    \"tok_per_sec\": {:.3},\n    \"useful_tokens\": {},\n    \
          \"secs\": {:.6},\n    \"slot_bubble_fraction\": {:.4}\n  }},\n  \

@@ -37,7 +37,45 @@ use dschat::runtime::Engine;
 use dschat::sampling::{DeviceCategorical, DeviceTopK, HostFullRow, SamplerConfig, SamplingBackend};
 use dschat::serving::chaos::{ChaosConfig, ChaosEngine, ChaosStats};
 use dschat::serving::{FaultPolicy, Request, SchedStats, Scheduler};
+use dschat::telemetry::{Hist, Telemetry};
 use dschat::util::rng::Rng;
+
+/// `BENCH_serve.json` format version — bump when fields change shape, so
+/// downstream trajectory tooling can detect the break.
+const SCHEMA_VERSION: u32 = 1;
+
+/// Latency-histogram blocks for one phase, from that phase's private
+/// telemetry handle (each phase installs a fresh one, so the percentiles
+/// are per-phase, not cumulative).
+fn hist_json(tel: &Telemetry) -> String {
+    format!(
+        ",\n    \"ttft_ms\": {},\n    \"inter_token_ms\": {},\n    \"queue_wait_ms\": {}",
+        tel.hist(Hist::Ttft).json_ms_block(),
+        tel.hist(Hist::InterToken).json_ms_block(),
+        tel.hist(Hist::QueueWait).json_ms_block(),
+    )
+}
+
+/// The disabled-telemetry hot path must stay free: record N events against
+/// a disabled handle and assert the per-call cost is branch-cheap. This is
+/// the overhead contract the serving phases rely on when tracing is off.
+fn assert_disabled_overhead() -> f64 {
+    let tel = Telemetry::disabled();
+    let n = 10_000_000u64;
+    let t0 = Instant::now();
+    for i in 0..n {
+        tel.instant(1, "noop", std::hint::black_box(i), 0);
+    }
+    let ns = t0.elapsed().as_secs_f64() * 1e9 / n as f64;
+    assert_eq!(tel.event_count(), 0, "disabled handle recorded events");
+    assert!(
+        ns < 50.0,
+        "disabled-telemetry event cost {ns:.1}ns/call exceeds the 50ns overhead bound \
+         — the disabled path must stay a branch on an Option"
+    );
+    println!("telemetry overhead: disabled path {ns:.2}ns/event (bound 50ns) ✓");
+    ns
+}
 
 struct PhaseResult {
     name: &'static str,
@@ -301,6 +339,7 @@ fn main() -> anyhow::Result<()> {
         .find(|a| !a.starts_with("--"))
         .unwrap_or_else(|| "artifacts/tiny".into());
     println!("== serve_loop ({dir}{}) ==", if smoke { ", smoke" } else { "" });
+    let overhead_ns = assert_disabled_overhead();
     let engine = Rc::new(Engine::cpu()?);
     let mut he = HybridEngine::init(engine, &dir, 0, false)?;
     let m = he.manifest();
@@ -341,6 +380,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     let greedy = || SamplerConfig { greedy: true, ..Default::default() };
+    // Each phase gets a FRESH telemetry handle so its TTFT / inter-token /
+    // queue-wait percentiles describe that phase alone (installed after
+    // calibration so the warmup generations don't pollute the fixed phase).
+    he.set_telemetry(Telemetry::enabled_default());
+    let fixed_tel = he.telemetry.clone();
     let fixed = run_fixed_batch(
         &mut he,
         &prompts,
@@ -366,6 +410,8 @@ fn main() -> anyhow::Result<()> {
     let page_size = he.manifest().page_size;
     let no_prefix = vec![0usize; n_req];
     let mut sched = Scheduler::new(he)?;
+    sched.set_telemetry(Telemetry::enabled_default());
+    let host_tel = sched.telemetry().clone();
     let cont = run_continuous(
         "continuous_host",
         &mut sched,
@@ -385,6 +431,8 @@ fn main() -> anyhow::Result<()> {
     // sequences, O(b) ids fetched per tick instead of [b, vocab] logits.
     let cont_device = if sampled_ready {
         let mut backend = DeviceTopK::new(greedy(), 0, sample_k, vocab)?;
+        sched.set_telemetry(Telemetry::enabled_default());
+        let tel = sched.telemetry().clone();
         let r = run_continuous(
             "continuous_device",
             &mut sched,
@@ -395,7 +443,7 @@ fn main() -> anyhow::Result<()> {
             &mut backend,
         )?;
         r.print();
-        Some(r)
+        Some((r, tel))
     } else {
         println!("(artifacts lack the `_sampled` family — device-backend phase skipped)");
         None
@@ -416,6 +464,8 @@ fn main() -> anyhow::Result<()> {
             })
             .collect();
         let pads0 = (sched.stats.prompt_tokens, sched.stats.pad_tokens);
+        sched.set_telemetry(Telemetry::enabled_default());
+        let tel = sched.telemetry().clone();
         let r = run_continuous(
             "continuous_mixed",
             &mut sched,
@@ -433,7 +483,7 @@ fn main() -> anyhow::Result<()> {
             "continuous_mixed: prompt lengths {min_len}..={sp}, padded-token overhead {:.1}%",
             100.0 * pad_frac
         );
-        Some((r, pad_frac, min_len))
+        Some((r, pad_frac, min_len, tel))
     } else {
         println!("(artifacts lack the `padded_prompts` capability — mixed-length phase skipped)");
         None
@@ -460,6 +510,8 @@ fn main() -> anyhow::Result<()> {
         let mut phe = sched.into_engine();
         phe.use_paged_serving(true)?;
         let mut psched = Scheduler::new(phe)?;
+        psched.set_telemetry(Telemetry::enabled_default());
+        let tel = psched.telemetry().clone();
         let r = run_continuous(
             "continuous_prefix",
             &mut psched,
@@ -485,7 +537,7 @@ fn main() -> anyhow::Result<()> {
         let mut bhe = psched.into_engine();
         bhe.use_paged_serving(false)?;
         sched = Scheduler::new(bhe)?;
-        Some((r, pst))
+        Some((r, pst, tel))
     } else {
         println!("(artifacts lack the `paged_kv` capability — prefix-heavy phase skipped)");
         None
@@ -509,6 +561,8 @@ fn main() -> anyhow::Result<()> {
         phe.use_paged_serving(true)?;
         let mut csched = Scheduler::new(phe)?;
         csched.set_decode_chunk(ncc)?;
+        csched.set_telemetry(Telemetry::enabled_default());
+        let tel = csched.telemetry().clone();
         let mut backend = DeviceCategorical::new(greedy(), sample_k, vocab)?;
         let r = run_continuous(
             "continuous_chunked",
@@ -531,7 +585,7 @@ fn main() -> anyhow::Result<()> {
         let mut bhe = csched.into_engine();
         bhe.use_paged_serving(false)?;
         sched = Scheduler::new(bhe)?;
-        Some((r, cst, ncc))
+        Some((r, cst, ncc, tel))
     } else {
         println!("(artifacts lack the `device_rng`/`decode_chunkN` capabilities — fused-chunk phase skipped)");
         None
@@ -541,7 +595,7 @@ fn main() -> anyhow::Result<()> {
     // wrapper — ~5% transient prefill/decode faults + 5% slow ticks.
     // Goodput, retry/requeue counts, and the p95 latency the recovery
     // machinery adds over the fault-free continuous_host phase.
-    let chaos: Option<(PhaseResult, SchedStats, ChaosStats)> = if with_chaos {
+    let chaos: Option<(PhaseResult, SchedStats, ChaosStats, Telemetry)> = if with_chaos {
         let he = sched.into_engine();
         let ccfg = ChaosConfig {
             seed: 1234,
@@ -558,6 +612,8 @@ fn main() -> anyhow::Result<()> {
             quarantine_after: 0,
         };
         let mut csched = Scheduler::with_policy(ChaosEngine::new(he, ccfg), policy)?;
+        csched.set_telemetry(Telemetry::enabled_default());
+        let tel = csched.telemetry().clone();
         let r = run_chaos(
             &mut csched,
             &prompts,
@@ -582,7 +638,11 @@ fn main() -> anyhow::Result<()> {
             (r.pct(0.95) - cont.pct(0.95)) * 1e3,
             r.tokens == cont.tokens,
         );
-        Some((r, cst, inj))
+        // The chaos timeline (retry/requeue/fault instants on the queue and
+        // slot tracks) is the recovery machinery's inspectable artifact.
+        std::fs::write("BENCH_chaos_trace.json", tel.chrome_trace_json())?;
+        println!("wrote BENCH_chaos_trace.json ({} events)", tel.event_count());
+        Some((r, cst, inj, tel))
     } else {
         None
     };
@@ -601,12 +661,12 @@ fn main() -> anyhow::Result<()> {
         cont.pct(0.95) / fixed.pct(0.95).max(1e-9),
     );
 
-    let phase_json = |r: &PhaseResult| -> String {
+    let phase_json = |r: &PhaseResult, tel: &Telemetry| -> String {
         format!(
             "{{\n    \"tok_per_sec\": {:.3},\n    \"mean_ms\": {:.1},\n    \
              \"p50_ms\": {:.1},\n    \"p95_ms\": {:.1},\n    \"makespan_secs\": {:.3},\n    \
              \"tokens\": {},\n    \"host_bytes_fetched_per_token\": {:.1},\n    \
-             \"host_bytes_uploaded_per_token\": {:.1}\n  }}",
+             \"host_bytes_uploaded_per_token\": {:.1}{}\n  }}",
             r.tok_per_sec(),
             r.mean() * 1e3,
             r.pct(0.5) * 1e3,
@@ -615,27 +675,28 @@ fn main() -> anyhow::Result<()> {
             r.tokens,
             r.down_per_tok(),
             r.up_per_tok(),
+            hist_json(tel),
         )
     };
     let device_json = match &cont_device {
-        Some(r) => format!(",\n  \"continuous_device\": {}", phase_json(r)),
+        Some((r, tel)) => format!(",\n  \"continuous_device\": {}", phase_json(r, tel)),
         None => String::new(),
     };
     let mixed_json = match &cont_mixed {
-        Some((r, pad_frac, min_len)) => format!(
+        Some((r, pad_frac, min_len, tel)) => format!(
             ",\n  \"continuous_mixed\": {},\n  \"mixed_pad_overhead_fraction\": {pad_frac:.4},\n  \
              \"mixed_min_prompt_len\": {min_len}",
-            phase_json(r)
+            phase_json(r, tel)
         ),
         None => String::new(),
     };
     let prefix_json = match &cont_prefix {
-        Some((r, pst)) => format!(
+        Some((r, pst, tel)) => format!(
             ",\n  \"continuous_prefix\": {},\n  \"prefix_admitted_tokens\": {},\n  \
              \"prefix_computed_tokens\": {},\n  \"prefix_reused_tokens\": {},\n  \
              \"prefix_cache_hit_rate\": {:.4},\n  \"prefix_hits\": {},\n  \
              \"prefix_misses\": {}",
-            phase_json(r),
+            phase_json(r, tel),
             pst.admitted_tokens(),
             pst.computed_tokens(),
             pst.reused_tokens,
@@ -646,11 +707,11 @@ fn main() -> anyhow::Result<()> {
         None => String::new(),
     };
     let chunked_json = match &cont_chunked {
-        Some((r, cst, ncc)) => format!(
+        Some((r, cst, ncc, tel)) => format!(
             ",\n  \"continuous_chunked\": {},\n  \"chunk_n\": {ncc},\n  \
              \"chunk_decode_dispatches\": {},\n  \"chunk_dispatches_per_token\": {:.4},\n  \
              \"chunk_waste_tokens\": {}",
-            phase_json(r),
+            phase_json(r, tel),
             cst.decode_calls,
             cst.decode_calls as f64 / r.tokens.max(1) as f64,
             cst.chunk_waste_tokens,
@@ -658,13 +719,13 @@ fn main() -> anyhow::Result<()> {
         None => String::new(),
     };
     let chaos_json = match &chaos {
-        Some((r, cst, inj)) => format!(
+        Some((r, cst, inj, tel)) => format!(
             ",\n  \"chaos\": {},\n  \"chaos_injected_prefill_faults\": {},\n  \
              \"chaos_injected_decode_faults\": {},\n  \"chaos_injected_slow_ticks\": {},\n  \
              \"chaos_decode_retries\": {},\n  \"chaos_requeues\": {},\n  \
              \"chaos_failed_requests\": {},\n  \"chaos_added_p95_ms\": {:.1},\n  \
              \"chaos_tokens_match_fault_free\": {}",
-            phase_json(r),
+            phase_json(r, tel),
             inj.prefill_faults,
             inj.decode_faults,
             inj.slow_ticks,
@@ -677,14 +738,16 @@ fn main() -> anyhow::Result<()> {
         None => String::new(),
     };
     let json = format!(
-        "{{\n  \"bench\": \"serve_loop\",\n  \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
+        "{{\n  \"bench\": \"serve_loop\",\n  \"schema_version\": {SCHEMA_VERSION},\n  \
+         \"run\": \"{run_name}\",\n  \"smoke\": {smoke},\n  \
          \"n_requests\": {n_req},\n  \"arrival_rate_per_s\": {rate:.3},\n  \
          \"fixed_batch_t_gen_secs\": {t_gen:.6},\n  \"sample_k\": {sample_k},\n  \
+         \"telemetry_overhead_ns_per_event_disabled\": {overhead_ns:.2},\n  \
          \"fixed_batch\": {},\n  \"continuous\": {},\n  \
          \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}{}{}{}\n  ,\n  \
          \"speedup_tok_per_sec\": {:.3},\n  \"p95_latency_ratio\": {:.3}\n}}\n",
-        phase_json(&fixed),
-        phase_json(&cont),
+        phase_json(&fixed, &fixed_tel),
+        phase_json(&cont, &host_tel),
         st.utilization(),
         st.decode_calls,
         device_json,

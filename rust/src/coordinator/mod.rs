@@ -349,6 +349,14 @@ impl PpoTrainer {
         actor_lr: f32,
         critic_lr: f32,
     ) -> Result<IterStats> {
+        let tel = he.telemetry.clone();
+        let step_id = self.iters_done as u64;
+        tel.begin(
+            crate::telemetry::TID_TRAIN,
+            "train_step",
+            step_id,
+            self.cfg.ppo_epochs as i64,
+        );
         let mut stats = IterStats {
             rm_score: mean(&exp.rm_scores),
             true_reward: mean(&exp.true_rewards),
@@ -393,6 +401,12 @@ impl PpoTrainer {
                 he.ema_update(decay.powi(k as i32))?;
             }
         }
+        tel.end(
+            crate::telemetry::TID_TRAIN,
+            "train_step",
+            step_id,
+            (stats.actor_loss * 1e6) as i64,
+        );
         Ok(stats)
     }
 
@@ -510,7 +524,20 @@ impl PpoTrainer {
                         self.cfg.max_guard_trips,
                         self.guarded_iters
                     );
+                    let tel = he.telemetry.clone();
+                    tel.begin(
+                        crate::telemetry::TID_GUARD,
+                        "guard_rollback",
+                        self.guarded_iters as u64,
+                        self.consecutive_trips as i64,
+                    );
                     he.restore_training_state(&snap)?;
+                    tel.end(
+                        crate::telemetry::TID_GUARD,
+                        "guard_rollback",
+                        self.guarded_iters as u64,
+                        self.consecutive_trips as i64,
+                    );
                     // EMA phase rewinds with the params; the rollout round
                     // does NOT — the retry draws fresh experience under a
                     // perturbed round seed instead of replaying the draws

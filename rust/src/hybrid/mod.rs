@@ -91,6 +91,8 @@ use crate::data::{PairBatch, TokenBatch};
 use crate::runtime::{Artifact, ArtifactSet, Engine, HostTensor, ParamStore};
 use crate::sampling::{PendingRow, SampleOut, SamplingBackend, TrafficClass};
 use crate::serving::{Admission, AdmitOutcome, ChunkBatch, DecodeBatch};
+use crate::telemetry::{Hist, Telemetry};
+use kv::KvLayout;
 
 /// Which configuration the actor model is currently in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -217,6 +219,10 @@ pub struct HybridEngine {
     pos_bufs: Vec<PjRtBuffer>,
     pub stats: PhaseStats,
     pub memory: MemoryTracker,
+    /// Telemetry handle shared with every scheduler/trainer built on this
+    /// engine (disabled by default: zero hot-path cost until a frontend
+    /// calls [`HybridEngine::set_telemetry`]).
+    pub telemetry: Telemetry,
 }
 
 impl HybridEngine {
@@ -276,6 +282,40 @@ impl HybridEngine {
             pos_bufs: Vec::new(),
             stats: PhaseStats::default(),
             memory,
+            telemetry: Telemetry::disabled(),
+        })
+    }
+
+    /// Install an (enabled) telemetry handle; schedulers and trainers built
+    /// on this engine afterwards adopt it automatically.
+    pub fn set_telemetry(&mut self, tel: Telemetry) {
+        self.telemetry = tel;
+    }
+
+    /// Point-in-time KV occupancy for the metrics snapshot: slot/token
+    /// counts for both layouts, page/prefix counts when serving paged.
+    pub fn kv_occupancy(&self) -> Option<crate::telemetry::KvOccupancy> {
+        let kv = self.kv.as_ref()?;
+        let ledger = &kv.ledger;
+        let (paged, page_size, n_pages, free_pages, registered_prefixes) = match ledger.layout() {
+            KvLayout::Paged { page_size, n_pages } => (
+                true,
+                page_size,
+                n_pages,
+                ledger.free_pages(),
+                ledger.n_prefixes(),
+            ),
+            KvLayout::Arena => (false, 0, 0, 0, 0),
+        };
+        Some(crate::telemetry::KvOccupancy {
+            paged,
+            n_slots: ledger.n_slots(),
+            active_slots: ledger.n_active(),
+            valid_tokens: ledger.valid_tokens(),
+            page_size,
+            n_pages,
+            free_pages,
+            registered_prefixes,
         })
     }
 
@@ -382,6 +422,15 @@ impl HybridEngine {
         self.mode = mode;
         self.stats.mode_flips += 1;
         self.stats.flip_secs += t0.elapsed().as_secs_f64();
+        self.telemetry.instant(
+            crate::telemetry::TID_ENGINE,
+            match mode {
+                EngineMode::Train => "mode_flip_train",
+                EngineMode::Inference => "mode_flip_inference",
+            },
+            self.stats.mode_flips,
+            (t0.elapsed().as_secs_f64() * 1e6) as i64,
+        );
     }
 
     // ------------------------------------------------------------------
@@ -708,6 +757,11 @@ impl HybridEngine {
         // PRs while standalone (serving) calls still self-account.
         let t0 = Instant::now();
         let secs0 = self.stats.gen_secs;
+        // Batch-level latency histograms: the generate call is the submit
+        // anchor (no queue in the fixed-batch path), so TTFT = prefill +
+        // first sample pass and inter-token = per-step wall time.
+        let t_gen_us = self.telemetry.now_us();
+        let mut t_last_us = t_gen_us;
         let mut out = self.prefill(prompts, traffic)?;
 
         let mut seqs = vec![0i32; b * s];
@@ -737,6 +791,16 @@ impl HybridEngine {
                 }
             }
             self.stats.gen_tokens += active;
+            if self.telemetry.is_enabled() && active > 0 {
+                let now = self.telemetry.now_us();
+                if step == 0 {
+                    self.telemetry.record(Hist::Ttft, now.saturating_sub(t_gen_us));
+                } else {
+                    self.telemetry
+                        .record(Hist::InterToken, now.saturating_sub(t_last_us));
+                }
+                t_last_us = now;
+            }
             if step + 1 == sg || done.iter().all(|d| *d) {
                 break;
             }

@@ -22,6 +22,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod serving;
 pub mod sim;
+pub mod telemetry;
 pub mod tp;
 pub mod util;
 pub mod zero;

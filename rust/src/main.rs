@@ -73,7 +73,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                  \x20             --ckpt-interval N   durable PPO checkpoint every N iters (0 off)\n\
                  \x20             --resume            continue PPO from <out>/ppo_ckpt.bin\n\
                  \x20             --fault-iter N      chaos drill: poison iteration N's loss\n\
-                 \x20                                 with NaN to exercise the rollback path"
+                 \x20                                 with NaN to exercise the rollback path\n\
+                 \x20             --trace-out F       Chrome trace-event JSON (Perfetto) at exit\n\
+                 \x20             --metrics-out F     unified JSON metrics snapshot at exit"
             );
             Ok(())
         }
@@ -138,8 +140,19 @@ fn train(args: &Args) -> Result<()> {
     );
     let mut blend = make_blend(he.manifest());
 
+    // Pipeline-phase tracing (rollout / score / train step / checkpoint /
+    // guard rollback spans) + the unified metrics snapshot: enabled
+    // whenever either output flag is given.
+    let trace_out = args.get("trace-out").map(|s| s.to_string());
+    let metrics_out = args.get("metrics-out").map(|s| s.to_string());
+    if trace_out.is_some() || metrics_out.is_some() {
+        he.set_telemetry(dschat::telemetry::Telemetry::enabled_default());
+    }
+
     if args.bool("resume", false) {
-        return resume_ppo(&mut he, &mut blend, &recipe, &out, with_ema);
+        let r = resume_ppo(&mut he, &mut blend, &recipe, &out, with_ema);
+        write_telemetry_outputs(&he, &[], trace_out.as_deref(), metrics_out.as_deref())?;
+        return r;
     }
 
     let report = pipeline::run_all(&mut he, &mut blend, &recipe, Some(&out))?;
@@ -167,6 +180,19 @@ fn train(args: &Args) -> Result<()> {
         dschat::util::fmt_bytes(down as f64),
         fallbacks,
     );
+    if fallbacks > 0 {
+        eprintln!(
+            "[train] WARNING: {fallbacks} fused-tuple fallback(s) — artifact outputs \
+             were copied through host literals instead of donated device tuples; \
+             throughput is degraded (stale artifacts? re-run `make artifacts`)"
+        );
+    }
+    write_telemetry_outputs(
+        &he,
+        &report.ppo_history,
+        trace_out.as_deref(),
+        metrics_out.as_deref(),
+    )?;
     if args.bool("ema", true) {
         he.promote_ema()?;
         println!("   promoted EMA checkpoint as the serving actor");
@@ -175,6 +201,34 @@ fn train(args: &Args) -> Result<()> {
     pipeline::save_actor(&he, &ckpt)?;
     println!("   saved actor to {}", ckpt.display());
     println!("   curves: {}/sft.csv rm.csv ppo.csv", out.display());
+    Ok(())
+}
+
+/// Write the training run's telemetry artifacts: the Chrome trace-event
+/// JSON (`--trace-out`, Perfetto-loadable pipeline-phase timeline) and the
+/// unified metrics snapshot (`--metrics-out`, runtime + training + KV +
+/// histograms in one document).
+fn write_telemetry_outputs(
+    he: &HybridEngine,
+    history: &[dschat::coordinator::IterStats],
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
+) -> Result<()> {
+    if let Some(path) = trace_out {
+        std::fs::write(path, he.telemetry.chrome_trace_json())?;
+        println!("   wrote Chrome trace ({} events) to {path}", he.telemetry.event_count());
+    }
+    if let Some(path) = metrics_out {
+        let snapshot = dschat::telemetry::metrics_snapshot_json(
+            &he.engine.stats(),
+            None,
+            history,
+            he.kv_occupancy().as_ref(),
+            &he.telemetry,
+        );
+        std::fs::write(path, snapshot)?;
+        println!("   wrote metrics snapshot to {path}");
+    }
     Ok(())
 }
 

@@ -1,19 +1,23 @@
 //! Timing and throughput instrumentation for the real runs (the measured
 //! side of EXPERIMENTS.md) plus the paper's TFLOPs bookkeeping.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::config::ModelConfig;
 
-/// Accumulating named timer (scopes keyed by label).
+/// Accumulating named timer (scopes keyed by label). Accumulation sits
+/// behind a `RefCell` so scopes borrow shared and NEST: an outer
+/// "iteration" scope stays live while inner "gen"/"train" scopes open and
+/// close inside it, each folding into its own label on drop.
 #[derive(Debug, Default)]
 pub struct Timers {
-    acc: BTreeMap<String, (f64, u64)>,
+    acc: RefCell<BTreeMap<String, (f64, u64)>>,
 }
 
 pub struct Scope<'a> {
-    timers: &'a mut Timers,
+    timers: &'a Timers,
     label: String,
     start: Instant,
 }
@@ -23,27 +27,28 @@ impl Timers {
         Self::default()
     }
 
-    pub fn scope(&mut self, label: &str) -> Scope<'_> {
+    pub fn scope(&self, label: &str) -> Scope<'_> {
         Scope { label: label.to_string(), start: Instant::now(), timers: self }
     }
 
-    pub fn add(&mut self, label: &str, secs: f64) {
-        let e = self.acc.entry(label.to_string()).or_insert((0.0, 0));
+    pub fn add(&self, label: &str, secs: f64) {
+        let mut acc = self.acc.borrow_mut();
+        let e = acc.entry(label.to_string()).or_insert((0.0, 0));
         e.0 += secs;
         e.1 += 1;
     }
 
     pub fn total(&self, label: &str) -> f64 {
-        self.acc.get(label).map(|e| e.0).unwrap_or(0.0)
+        self.acc.borrow().get(label).map(|e| e.0).unwrap_or(0.0)
     }
 
     pub fn count(&self, label: &str) -> u64 {
-        self.acc.get(label).map(|e| e.1).unwrap_or(0)
+        self.acc.borrow().get(label).map(|e| e.1).unwrap_or(0)
     }
 
     pub fn report(&self) -> String {
         let mut s = String::new();
-        for (k, (secs, n)) in &self.acc {
+        for (k, (secs, n)) in self.acc.borrow().iter() {
             s.push_str(&format!(
                 "{k:<28} total {:>10}  calls {n:>7}  mean {:>10}\n",
                 crate::util::fmt_duration(*secs),
@@ -91,7 +96,7 @@ mod tests {
 
     #[test]
     fn timer_accumulates() {
-        let mut t = Timers::new();
+        let t = Timers::new();
         {
             let _s = t.scope("x");
             std::thread::sleep(std::time::Duration::from_millis(5));
@@ -102,6 +107,50 @@ mod tests {
         assert_eq!(t.count("x"), 2);
         assert!(t.total("x") >= 0.005);
         assert!(t.report().contains("x"));
+    }
+
+    #[test]
+    fn scopes_nest_and_the_outer_covers_the_inner() {
+        let t = Timers::new();
+        {
+            let _iter = t.scope("iter");
+            {
+                let _gen = t.scope("gen");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            {
+                let _train = t.scope("train");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        for label in ["iter", "gen", "train"] {
+            assert_eq!(t.count(label), 1, "{label}");
+        }
+        // The outer scope was live for both inner ones, so its total
+        // bounds their sum from above.
+        assert!(
+            t.total("iter") >= t.total("gen") + t.total("train"),
+            "iter {} < gen {} + train {}",
+            t.total("iter"),
+            t.total("gen"),
+            t.total("train")
+        );
+    }
+
+    #[test]
+    fn add_accumulates_exactly_and_missing_labels_are_zero() {
+        let t = Timers::new();
+        t.add("a", 1.5);
+        t.add("a", 2.5);
+        t.add("b", 0.25);
+        assert_eq!(t.total("a"), 4.0);
+        assert_eq!(t.count("a"), 2);
+        assert_eq!(t.total("b"), 0.25);
+        assert_eq!(t.count("b"), 1);
+        assert_eq!(t.total("never"), 0.0);
+        assert_eq!(t.count("never"), 0);
+        let rep = t.report();
+        assert!(rep.contains('a') && rep.contains('b'), "{rep}");
     }
 
     #[test]

@@ -253,7 +253,20 @@ pub fn run_ppo_from(
                     rollouts_done,
                     ema_phase: iters_done as u64,
                 };
+                let tel = he.telemetry.clone();
+                tel.begin(
+                    crate::telemetry::TID_CHECKPOINT,
+                    "checkpoint",
+                    done as u64,
+                    iters_done as i64,
+                );
                 save_ppo_checkpoint(he, &rs, path)?;
+                tel.end(
+                    crate::telemetry::TID_CHECKPOINT,
+                    "checkpoint",
+                    done as u64,
+                    iters_done as i64,
+                );
             }
         }
     }

@@ -62,6 +62,7 @@ use anyhow::{bail, Result};
 
 use crate::sampling::SamplingBackend;
 use crate::serving::{Request, SchedStats, Scheduler, SlotEngine};
+use crate::telemetry;
 
 /// Derive one request's RNG-stream seed from the rollout base seed and the
 /// request id (splitmix-style odd-multiplier scramble so consecutive ids
@@ -144,6 +145,11 @@ impl RolloutEngine {
         if self.decode_chunk != 1 {
             sched.set_decode_chunk(self.decode_chunk)?;
         }
+        // The scheduler adopted the engine's telemetry handle; the rollout
+        // phase span (and the score spans around group flushes) land on
+        // the pipeline tracks of the same timeline.
+        let tel = sched.telemetry().clone();
+        tel.begin(telemetry::TID_ROLLOUT, "rollout", self.seed, n as i64);
         let mut buf = ExperienceBuffer::new(n, group);
         // Oversubscribe up front: the queue is the scheduler's to drain —
         // every EOS retirement admits the next prompt at a step boundary.
@@ -161,9 +167,14 @@ impl RolloutEngine {
             // Flush every group that closed this step before decoding on —
             // scoring overlaps the remaining sequences' generation.
             while let Some(g) = buf.pop_ready() {
-                on_group(&mut sched.engine, g)?;
+                let gi = g.index as u64;
+                tel.begin(telemetry::TID_SCORE, "score", gi, g.completions.len() as i64);
+                let r = on_group(&mut sched.engine, g);
+                tel.end(telemetry::TID_SCORE, "score", gi, if r.is_ok() { 1 } else { 0 });
+                r?;
             }
         }
+        tel.end(telemetry::TID_ROLLOUT, "rollout", self.seed, sched.stats.completed as i64);
         debug_assert!(buf.is_drained(), "scheduler idle with unflushed groups");
         Ok(sched.stats.clone())
     }

@@ -187,6 +187,7 @@ use anyhow::{bail, Result};
 use crate::data::synthetic::Vocab;
 use crate::hybrid::HybridEngine;
 use crate::sampling::{seed_words, PendingRow, RowRef, SampleOut, SamplingBackend, TrafficClass};
+use crate::telemetry::{self, Hist, Telemetry};
 use crate::util::rng::Rng;
 
 /// Everything one admission needs, in one descriptor (the per-argument
@@ -385,6 +386,14 @@ pub trait SlotEngine {
     fn release_slot(&mut self, slot: usize) -> Result<()>;
     /// Accounting hook: `n` tokens were sampled this step.
     fn note_generated(&mut self, _n: u64) {}
+    /// The telemetry handle the engine records into — the scheduler
+    /// adopts it at construction so request-lifecycle spans and the
+    /// engine's own events land in one shared timeline. The default is
+    /// the disabled (free) handle; [`Scheduler::set_telemetry`] can
+    /// override per scheduler.
+    fn telemetry(&self) -> Telemetry {
+        Telemetry::disabled()
+    }
 }
 
 /// A mutable borrow of a slot engine is itself a slot engine — this is what
@@ -439,6 +448,10 @@ impl<E: SlotEngine> SlotEngine for &mut E {
 
     fn note_generated(&mut self, n: u64) {
         (**self).note_generated(n)
+    }
+
+    fn telemetry(&self) -> Telemetry {
+        (**self).telemetry()
     }
 }
 
@@ -499,6 +512,10 @@ impl SlotEngine for HybridEngine {
 
     fn note_generated(&mut self, n: u64) {
         self.stats.gen_tokens += n;
+    }
+
+    fn telemetry(&self) -> Telemetry {
+        self.telemetry.clone()
     }
 }
 
@@ -621,6 +638,9 @@ struct Queued {
     not_before: u64,
     /// Admission attempts that ended in a prefill fault.
     attempts: u32,
+    /// Telemetry submit timestamp (us; 0 when telemetry is disabled) —
+    /// the queue-wait and TTFT histograms both anchor here.
+    t_submit_us: u64,
 }
 
 /// A sequence occupying one batch slot.
@@ -650,6 +670,11 @@ struct Seq {
     device_seed: u64,
     enqueued_step: u64,
     admitted_step: u64,
+    /// Telemetry timestamps (us; 0 when telemetry is disabled): the
+    /// request's submit time and the arrival time of its latest token
+    /// (TTFT / inter-token histogram anchors).
+    t_submit_us: u64,
+    t_last_tok_us: u64,
 }
 
 /// Counters for the serve log, the `serve_loop` bench, and the rollout
@@ -824,6 +849,9 @@ pub struct Scheduler<E: SlotEngine> {
     step_seeds: Vec<i32>,
     step_steps: Vec<i32>,
     step_quota: Vec<i32>,
+    /// Request-lifecycle event recorder (adopted from the engine at
+    /// construction; disabled = free). See [`crate::telemetry`].
+    tel: Telemetry,
 }
 
 impl<E: SlotEngine> Scheduler<E> {
@@ -837,6 +865,7 @@ impl<E: SlotEngine> Scheduler<E> {
     pub fn with_policy(mut engine: E, policy: FaultPolicy) -> Result<Self> {
         engine.begin_serving()?;
         let n = engine.n_slots();
+        let tel = engine.telemetry();
         Ok(Scheduler {
             engine,
             stats: SchedStats::default(),
@@ -854,7 +883,19 @@ impl<E: SlotEngine> Scheduler<E> {
             step_seeds: vec![0; 2 * n],
             step_steps: vec![0; n],
             step_quota: vec![0; n],
+            tel,
         })
+    }
+
+    /// Replace the telemetry recorder (the benches attach a fresh enabled
+    /// handle per phase; tests attach one to a mock engine's scheduler).
+    pub fn set_telemetry(&mut self, tel: Telemetry) {
+        self.tel = tel;
+    }
+
+    /// The scheduler's telemetry recorder (shared handle).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
     }
 
     /// Fuse `n` decode steps into one engine dispatch per tick (see the
@@ -929,11 +970,18 @@ impl<E: SlotEngine> Scheduler<E> {
             );
         }
         self.stats.submitted += 1;
+        let t_submit_us = if self.tel.is_enabled() {
+            self.tel.begin(telemetry::TID_QUEUE, "queued", req.id, len as i64);
+            self.tel.now_us()
+        } else {
+            0
+        };
         self.queue.push_back(Queued {
             req,
             enqueued_step: self.step_idx,
             not_before: 0,
             attempts: 0,
+            t_submit_us,
         });
         self.stats.peak_queue_depth = self.stats.peak_queue_depth.max(self.queue.len());
         Ok(())
@@ -1048,8 +1096,33 @@ impl<E: SlotEngine> Scheduler<E> {
                     sparams: dev_params.unwrap_or_default(),
                 }),
             };
+            // The queued span closes at the admission attempt either way:
+            // a successful prefill hands the request to a slot track, a
+            // faulted one re-opens the span on requeue (or ends the
+            // request as aborted past the retry budget).
+            let t_admit_us = self.tel.now_us();
+            if self.tel.is_enabled() {
+                self.tel
+                    .end(telemetry::TID_QUEUE, "queued", q.req.id, q.attempts as i64);
+                self.tel
+                    .record(Hist::QueueWait, t_admit_us.saturating_sub(q.t_submit_us));
+                self.tel.begin(
+                    telemetry::slot_tid(slot),
+                    "request",
+                    q.req.id,
+                    q.req.prompt.len() as i64,
+                );
+                self.tel
+                    .begin(telemetry::slot_tid(slot), "prefill", q.req.id, 0);
+            }
             match self.engine.prefill_slot(slot, &adm) {
                 Ok(outcome) => {
+                    self.tel.end(
+                        telemetry::slot_tid(slot),
+                        "prefill",
+                        q.req.id,
+                        outcome.reused_tokens as i64,
+                    );
                     self.slot_failures[slot] = 0;
                     self.stats.prefills += 1;
                     self.stats.admitted += 1;
@@ -1082,9 +1155,21 @@ impl<E: SlotEngine> Scheduler<E> {
                         device_seed: dseed.unwrap_or(0),
                         enqueued_step: q.enqueued_step,
                         admitted_step: self.step_idx,
+                        t_submit_us: q.t_submit_us,
+                        t_last_tok_us: t_admit_us,
                     });
                 }
                 Err(_) => {
+                    if self.tel.is_enabled() {
+                        self.tel
+                            .end(telemetry::slot_tid(slot), "prefill", q.req.id, -1);
+                        self.tel.instant(
+                            telemetry::slot_tid(slot),
+                            "prefill_fault",
+                            q.req.id,
+                            (q.attempts + 1) as i64,
+                        );
+                    }
                     // The engine may have claimed KV rows before failing —
                     // release is best-effort (nothing claimed is fine; the
                     // hybrid engine claims only after its artifact call
@@ -1097,6 +1182,12 @@ impl<E: SlotEngine> Scheduler<E> {
                     {
                         self.quarantined[slot] = true;
                         self.stats.quarantined += 1;
+                        self.tel.instant(
+                            telemetry::slot_tid(slot),
+                            "quarantine",
+                            q.req.id,
+                            self.slot_failures[slot] as i64,
+                        );
                     }
                     let attempts = q.attempts + 1;
                     if attempts > self.policy.max_retries {
@@ -1105,6 +1196,12 @@ impl<E: SlotEngine> Scheduler<E> {
                         self.stats.completed += 1;
                         self.stats.retired_failed += 1;
                         retired += 1;
+                        self.tel.end(
+                            telemetry::slot_tid(slot),
+                            "request",
+                            q.req.id,
+                            telemetry::FINISH_FAILED,
+                        );
                         sink.complete(Completion {
                             id: q.req.id,
                             slot,
@@ -1117,6 +1214,30 @@ impl<E: SlotEngine> Scheduler<E> {
                         });
                     } else {
                         self.stats.requeues += 1;
+                        if self.tel.is_enabled() {
+                            // The aborted request span closes; the queued
+                            // span re-opens so the next admission attempt
+                            // pairs its own B/E (queue-wait still anchors
+                            // at the original submit time).
+                            self.tel.end(
+                                telemetry::slot_tid(slot),
+                                "request",
+                                q.req.id,
+                                telemetry::FINISH_ABORTED,
+                            );
+                            self.tel.instant(
+                                telemetry::TID_QUEUE,
+                                "requeue",
+                                q.req.id,
+                                attempts as i64,
+                            );
+                            self.tel.begin(
+                                telemetry::TID_QUEUE,
+                                "queued",
+                                q.req.id,
+                                attempts as i64,
+                            );
+                        }
                         self.queue.push_back(Queued {
                             not_before: self.step_idx + self.policy.backoff_steps.max(1),
                             attempts,
@@ -1151,6 +1272,12 @@ impl<E: SlotEngine> Scheduler<E> {
                 self.stats.completed += 1;
                 self.stats.retired_deadline += 1;
                 retired += 1;
+                self.tel.end(
+                    telemetry::slot_tid(slot),
+                    "request",
+                    seq.id,
+                    telemetry::FINISH_DEADLINE,
+                );
                 sink.complete(Completion {
                     id: seq.id,
                     slot,
@@ -1174,6 +1301,19 @@ impl<E: SlotEngine> Scheduler<E> {
             seq.tokens.push(t);
             seq.generated += 1;
             sampled += 1;
+            if self.tel.is_enabled() {
+                let now = self.tel.now_us();
+                if seq.generated == 1 {
+                    self.tel
+                        .instant(telemetry::slot_tid(slot), "first_token", seq.id, t as i64);
+                    self.tel
+                        .record(Hist::Ttft, now.saturating_sub(seq.t_submit_us));
+                } else {
+                    self.tel
+                        .record(Hist::InterToken, now.saturating_sub(seq.t_last_tok_us));
+                }
+                seq.t_last_tok_us = now;
+            }
             let finish = if t == Vocab::EOS {
                 Some(FinishReason::Eos)
             } else if seq.generated >= seq.max_new {
@@ -1199,6 +1339,17 @@ impl<E: SlotEngine> Scheduler<E> {
                     FinishReason::Failed { .. } | FinishReason::Deadline => {}
                 }
                 retired += 1;
+                self.tel.end(
+                    telemetry::slot_tid(slot),
+                    "request",
+                    seq.id,
+                    match finish {
+                        FinishReason::Eos => telemetry::FINISH_EOS,
+                        FinishReason::Length => telemetry::FINISH_LENGTH,
+                        FinishReason::Failed { .. } => telemetry::FINISH_FAILED,
+                        FinishReason::Deadline => telemetry::FINISH_DEADLINE,
+                    },
+                );
                 sink.complete(Completion {
                     id: seq.id,
                     slot,
@@ -1272,11 +1423,19 @@ impl<E: SlotEngine> Scheduler<E> {
                         sparams: dev_params.unwrap_or_default(),
                     }),
                 };
+                self.tel
+                    .begin(telemetry::TID_ENGINE, "decode", self.step_idx, active_n as i64);
                 let out = loop {
                     match self.engine.decode_slots(&batch) {
                         Ok(out) => break Some(out),
                         Err(_) => {
                             self.stats.decode_faults += 1;
+                            self.tel.instant(
+                                telemetry::TID_ENGINE,
+                                "decode_retry",
+                                self.step_idx,
+                                (attempt + 1) as i64,
+                            );
                             if attempt >= self.policy.max_retries {
                                 break None;
                             }
@@ -1285,6 +1444,12 @@ impl<E: SlotEngine> Scheduler<E> {
                         }
                     }
                 };
+                self.tel.end(
+                    telemetry::TID_ENGINE,
+                    "decode",
+                    self.step_idx,
+                    if out.is_some() { 1 } else { 0 },
+                );
                 match out {
                     Some(out) => {
                         for slot in 0..b {
@@ -1318,6 +1483,12 @@ impl<E: SlotEngine> Scheduler<E> {
             self.stats.completed += 1;
             self.stats.retired_failed += 1;
             retired += 1;
+            self.tel.end(
+                telemetry::slot_tid(slot),
+                "request",
+                seq.id,
+                telemetry::FINISH_FAILED,
+            );
             sink.complete(Completion {
                 id: seq.id,
                 slot,
@@ -1363,11 +1534,20 @@ impl<E: SlotEngine> Scheduler<E> {
         // pure function of (seed, step, slot), so a retried chunk replays
         // bit-identically.
         let mut attempt = 0u32;
+        let active_n = self.step_active.iter().filter(|a| **a).count();
+        self.tel
+            .begin(telemetry::TID_ENGINE, "decode", self.step_idx, active_n as i64);
         let out = loop {
             match self.engine.decode_slots_chunk(&batch) {
                 Ok(ids) => break Some(ids),
                 Err(_) => {
                     self.stats.decode_faults += 1;
+                    self.tel.instant(
+                        telemetry::TID_ENGINE,
+                        "decode_retry",
+                        self.step_idx,
+                        (attempt + 1) as i64,
+                    );
                     if attempt >= self.policy.max_retries {
                         break None;
                     }
@@ -1376,6 +1556,12 @@ impl<E: SlotEngine> Scheduler<E> {
                 }
             }
         };
+        self.tel.end(
+            telemetry::TID_ENGINE,
+            "decode",
+            self.step_idx,
+            if out.is_some() { 1 } else { 0 },
+        );
         match out {
             Some(ids) => {
                 if ids.len() != n * b {
@@ -1391,10 +1577,34 @@ impl<E: SlotEngine> Scheduler<E> {
                     };
                     let quota = self.step_quota[slot].max(0) as usize;
                     let consumed = chunk_consumed(&ids, b, slot, n, quota);
+                    let was_generated = seq.generated;
                     for j in 0..consumed - 1 {
                         seq.tokens.push(ids[j * b + slot]);
                         seq.generated += 1;
                         pushed += 1;
+                    }
+                    let pushed_here = consumed - 1;
+                    if self.tel.is_enabled() && pushed_here > 0 {
+                        // The chunk lands its tokens in one batch: observed
+                        // inter-token latency is the amortized chunk wall
+                        // time, recorded once per token it covers.
+                        let now = self.tel.now_us();
+                        let dt = now.saturating_sub(seq.t_last_tok_us) / pushed_here as u64;
+                        for k in 0..pushed_here {
+                            if was_generated == 0 && k == 0 {
+                                self.tel.instant(
+                                    telemetry::slot_tid(slot),
+                                    "first_token",
+                                    seq.id,
+                                    seq.tokens[seq.prompt_len] as i64,
+                                );
+                                self.tel
+                                    .record(Hist::Ttft, now.saturating_sub(seq.t_submit_us));
+                            } else {
+                                self.tel.record(Hist::InterToken, dt);
+                            }
+                        }
+                        seq.t_last_tok_us = now;
                     }
                     seq.pending.copy_from(RowRef::Id(ids[(consumed - 1) * b + slot]));
                     consumed_total += consumed as u64;
@@ -2337,5 +2547,170 @@ mod tests {
         let util = st.utilization();
         let bubble = st.bubble_fraction();
         assert!((util + bubble - 1.0).abs() < 1e-12, "{util} + {bubble}");
+    }
+
+    /// Recorded events carrying one request's correlation id (decode
+    /// dispatch spans reuse step indices as ids, so per-request checks
+    /// below always filter by name too).
+    fn events_for(tel: &Telemetry, id: u64) -> Vec<telemetry::Event> {
+        tel.events().into_iter().filter(|e| e.id == id).collect()
+    }
+
+    #[test]
+    fn telemetry_event_ordering_under_chunked_decode() {
+        // The request-lifecycle event stream must stay coherent under
+        // fused decode: per-track timestamps monotone, every Begin/End
+        // paired, exactly one first_token per request — including the one
+        // whose EOS lands mid-chunk — and the queued → admitted → prefill
+        // → first-token → retired chain ordered with the right finish
+        // code on the request span's End.
+        let mut sched = Scheduler::new(MockEngine::new(2).paged_mode()).unwrap();
+        sched.set_decode_chunk(4).unwrap();
+        sched.set_telemetry(Telemetry::enabled(4096));
+        let mut sampler = device_cat();
+        sched.submit(req(1, 3, SG)).unwrap(); // EOS at draw 3 (mid-chunk)
+        sched.submit(req(2, 5, SG)).unwrap(); // EOS at draw 5
+        sched.submit(req(3, 100, 6)).unwrap(); // never EOS, budget-capped
+        let done = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(done.len(), 3);
+        let evs = sched.telemetry().events();
+        assert_eq!(sched.telemetry().dropped(), 0, "test buffer must not wrap");
+
+        // Timestamps never go backwards within a track.
+        let mut last: std::collections::HashMap<u32, u64> = Default::default();
+        for e in &evs {
+            let prev = last.entry(e.tid).or_insert(0);
+            assert!(e.ts_us >= *prev, "track {} time went backwards at {:?}", e.tid, e);
+            *prev = e.ts_us;
+        }
+        // Begin/End pairing balances on every (track, name, id) key.
+        let mut open: std::collections::HashMap<(u32, &str, u64), i64> = Default::default();
+        for e in &evs {
+            match e.ph {
+                telemetry::Ph::Begin => {
+                    *open.entry((e.tid, e.name, e.id)).or_insert(0) += 1;
+                }
+                telemetry::Ph::End => {
+                    let d = open.entry((e.tid, e.name, e.id)).or_insert(0);
+                    *d -= 1;
+                    assert!(*d >= 0, "End without Begin: {e:?}");
+                }
+                _ => {}
+            }
+        }
+        assert!(open.values().all(|&v| v == 0), "unclosed spans: {open:?}");
+
+        for (id, want_finish) in [
+            (1u64, telemetry::FINISH_EOS),
+            (2, telemetry::FINISH_EOS),
+            (3, telemetry::FINISH_LENGTH),
+        ] {
+            let evr = events_for(sched.telemetry(), id);
+            let firsts: Vec<_> = evr.iter().filter(|e| e.name == "first_token").collect();
+            assert_eq!(firsts.len(), 1, "request {id}: exactly one first_token");
+            let find = |name: &str, ph: telemetry::Ph| {
+                evr.iter()
+                    .find(|e| e.name == name && e.ph == ph)
+                    .unwrap_or_else(|| panic!("request {id}: missing {name} {ph:?}"))
+            };
+            let q_end = find("queued", telemetry::Ph::End);
+            let r_begin = find("request", telemetry::Ph::Begin);
+            let r_end = find("request", telemetry::Ph::End);
+            let p_end = find("prefill", telemetry::Ph::End);
+            assert!(r_begin.tid >= telemetry::TID_SLOT0, "request span lives on a slot track");
+            assert_eq!(r_end.arg, want_finish, "request {id} finish code");
+            assert!(q_end.ts_us <= r_begin.ts_us, "admission after queue close");
+            assert!(r_begin.ts_us <= p_end.ts_us, "prefill inside the request span");
+            assert!(p_end.ts_us <= firsts[0].ts_us, "first token after prefill");
+            assert!(firsts[0].ts_us <= r_end.ts_us, "retirement after first token");
+        }
+        // Every generated token hit exactly one latency histogram: the
+        // first of each request lands in TTFT, the rest in inter-token
+        // (fused chunks record the amortized gap per covered token).
+        let tel = sched.telemetry();
+        assert_eq!(tel.hist(Hist::Ttft).count(), 3);
+        assert_eq!(tel.hist(Hist::QueueWait).count(), 3);
+        let gen_total: u64 = done.iter().map(|c| c.generated as u64).sum();
+        assert_eq!(tel.hist(Hist::InterToken).count() + 3, gen_total);
+    }
+
+    /// A mock whose first `faults` prefill calls error before touching
+    /// the inner engine — the transient-fault shape `ChaosEngine`
+    /// injects. The scheduler's best-effort release after a faulted
+    /// prefill lands on a still-free slot, so it is absorbed here.
+    struct FaultFirstPrefills {
+        inner: MockEngine,
+        faults: usize,
+    }
+
+    impl SlotEngine for FaultFirstPrefills {
+        fn n_slots(&self) -> usize {
+            self.inner.n_slots()
+        }
+        fn prompt_len(&self) -> usize {
+            self.inner.prompt_len()
+        }
+        fn max_new_tokens(&self) -> usize {
+            self.inner.max_new_tokens()
+        }
+        fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
+            if self.faults > 0 {
+                self.faults -= 1;
+                bail!("transient prefill fault");
+            }
+            self.inner.prefill_slot(slot, adm)
+        }
+        fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
+            self.inner.decode_slots(batch)
+        }
+        fn release_slot(&mut self, slot: usize) -> Result<()> {
+            if self.inner.plans[slot].is_some() {
+                self.inner.release_slot(slot)
+            } else {
+                Ok(())
+            }
+        }
+    }
+
+    #[test]
+    fn telemetry_requeue_reopens_the_queued_span() {
+        // A transient prefill fault must leave a legible trace: the
+        // aborted request span closes with FINISH_ABORTED, requeue and
+        // prefill_fault instants fire, and a fresh queued span covers the
+        // backoff window — then the retry admits and the request
+        // completes with a normal EOS chain.
+        let engine = FaultFirstPrefills { inner: MockEngine::new(1), faults: 1 };
+        let policy = FaultPolicy {
+            max_retries: 3,
+            backoff_steps: 1,
+            deadline_steps: 0,
+            quarantine_after: 0,
+        };
+        let mut sched = Scheduler::with_policy(engine, policy).unwrap();
+        sched.set_telemetry(Telemetry::enabled(1024));
+        sched.submit(req(9, 2, SG)).unwrap();
+        let done = sched.run_until_idle(&mut greedy()).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Eos);
+        assert_eq!(sched.stats.requeues, 1);
+
+        let evs = events_for(sched.telemetry(), 9);
+        let count = |name: &str, ph: telemetry::Ph| {
+            evs.iter().filter(|e| e.name == name && e.ph == ph).count()
+        };
+        assert_eq!(count("queued", telemetry::Ph::Begin), 2, "requeue re-opens the queued span");
+        assert_eq!(count("queued", telemetry::Ph::End), 2);
+        assert_eq!(count("requeue", telemetry::Ph::Instant), 1);
+        assert_eq!(count("prefill_fault", telemetry::Ph::Instant), 1);
+        assert_eq!(count("first_token", telemetry::Ph::Instant), 1);
+        let ends: Vec<i64> = evs
+            .iter()
+            .filter(|e| e.name == "request" && e.ph == telemetry::Ph::End)
+            .map(|e| e.arg)
+            .collect();
+        assert_eq!(ends, vec![telemetry::FINISH_ABORTED, telemetry::FINISH_EOS]);
+        // Queue-wait records per admission attempt, both anchored at the
+        // original submit time.
+        assert_eq!(sched.telemetry().hist(Hist::QueueWait).count(), 2);
     }
 }

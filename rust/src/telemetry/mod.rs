@@ -1,0 +1,907 @@
+//! Unified telemetry: bounded event tracing + log-bucketed latency
+//! histograms for every subsystem (serving scheduler, hybrid engine,
+//! rollout, PPO pipeline).
+//!
+//! # Event model
+//!
+//! A [`Telemetry`] handle is a cheaply-cloneable reference to one shared
+//! recorder (all clones append to the same buffer — the scheduler, the
+//! engine, and the PPO trainer each hold a clone). Events are typed and
+//! fixed-size ([`Event`]): span begin/end pairs, instants, and counter
+//! samples, each stamped with a monotonic microsecond timestamp and a
+//! *track* id ([`Event::tid`]) that groups them into timelines — one track
+//! per batch slot ([`slot_tid`]), one for the request queue
+//! ([`TID_QUEUE`]), one for fused engine dispatches ([`TID_ENGINE`]), and
+//! one per RLHF pipeline phase ([`TID_ROLLOUT`] / [`TID_SCORE`] /
+//! [`TID_TRAIN`] / [`TID_CHECKPOINT`] / [`TID_GUARD`]).
+//!
+//! The canonical request lifecycle, as recorded by the serving scheduler:
+//!
+//! ```text
+//! queue track:  B queued ............ E queued            (per attempt)
+//! slot track:   B request [B prefill E prefill] i first_token ... E request
+//!                                                  (E arg = finish code)
+//! engine track: B decode E decode                      (one per dispatch)
+//! ```
+//!
+//! Fault handling adds instants: `requeue` (queue track, arg = attempts),
+//! `prefill_fault` / `quarantine` (slot track), `decode_retry` (engine
+//! track), and a `request` span that ends with arg `-1` marks an admission
+//! attempt aborted by a prefill fault (the request goes back to the
+//! queue and opens a fresh span pair on its next attempt).
+//!
+//! # Overhead contract
+//!
+//! A disabled handle ([`Telemetry::disabled`], the default everywhere) is
+//! a `None`: every record call is a branch on an `Option` and returns —
+//! **no allocation, no clock read, no locking on the hot path**. An
+//! enabled handle pre-allocates its entire event buffer up front
+//! ([`Telemetry::enabled`]); recording writes into that fixed-capacity
+//! buffer and, once full, *counts drops* ([`Telemetry::dropped`]) instead
+//! of growing. Histograms are fixed arrays of `u64` buckets
+//! ([`LogHistogram`]) — recording a sample is a shift and an add, and
+//! percentiles come from O(buckets) memory, never from stored samples.
+//! The serve bench asserts the disabled-path bound every run.
+//!
+//! # Trace export
+//!
+//! [`Telemetry::chrome_trace_json`] renders the buffer in Chrome
+//! trace-event JSON (the array form), loadable in Perfetto or
+//! `chrome://tracing`: `B`/`E` duration events, `i` instants, `C`
+//! counters, with thread-name metadata so tracks render as "slot 3",
+//! "queue", "rollout", etc. [`metrics_snapshot_json`] is the companion
+//! one-shot document: it merges the runtime's per-artifact
+//! [`ExecStats`](crate::runtime::ExecStats), the scheduler's
+//! [`SchedStats`](crate::serving::SchedStats), per-iteration PPO
+//! [`IterStats`](crate::coordinator::IterStats) aggregates, KV page
+//! occupancy ([`KvOccupancy`]), and the three latency histograms into one
+//! JSON object (the serve protocol's `stats` command and `dschat train
+//! --metrics-out` both emit it).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Track for queue-residency spans (`queued`).
+pub const TID_QUEUE: u32 = 1;
+/// Track for fused engine dispatches (`decode` spans, `decode_retry`).
+pub const TID_ENGINE: u32 = 2;
+/// RLHF pipeline-phase tracks (one per phase, so the phases render as
+/// parallel timelines and the rollout/score overlap is visible).
+pub const TID_ROLLOUT: u32 = 11;
+pub const TID_SCORE: u32 = 12;
+pub const TID_TRAIN: u32 = 13;
+pub const TID_CHECKPOINT: u32 = 14;
+pub const TID_GUARD: u32 = 15;
+/// Per-slot request tracks start here: slot `s` records on `100 + s`.
+pub const TID_SLOT0: u32 = 100;
+
+/// The track id of batch slot `slot`.
+pub fn slot_tid(slot: usize) -> u32 {
+    TID_SLOT0 + slot as u32
+}
+
+/// Finish-reason codes carried in the `request` span's end arg (the
+/// scheduler writes them; the exporter decodes them back to strings).
+pub const FINISH_EOS: i64 = 0;
+pub const FINISH_LENGTH: i64 = 1;
+pub const FINISH_FAILED: i64 = 2;
+pub const FINISH_DEADLINE: i64 = 3;
+/// End-arg of a `request` span aborted by a prefill fault (the request
+/// was NOT retired — it went back to the queue).
+pub const FINISH_ABORTED: i64 = -1;
+
+/// Event phase, mirroring the Chrome trace-event `ph` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ph {
+    Begin,
+    End,
+    Instant,
+    Counter,
+}
+
+/// One fixed-size telemetry event. `name` is `&'static str` by design:
+/// recording never allocates or copies strings.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Microseconds since the handle was created (monotonic).
+    pub ts_us: u64,
+    /// Track (rendered as a Chrome trace thread) — see the `TID_*`
+    /// constants and [`slot_tid`].
+    pub tid: u32,
+    pub ph: Ph,
+    pub name: &'static str,
+    /// Correlation id (request id, PPO iteration, ...); 0 when unused.
+    pub id: u64,
+    /// One generic payload (token count, finish code, counter value...).
+    pub arg: i64,
+}
+
+/// The histograms every [`Telemetry`] handle carries. Values are recorded
+/// in MICROSECONDS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Hist {
+    /// Submit → first generated token, per request.
+    Ttft = 0,
+    /// Gap between consecutive generated tokens of one request (fused
+    /// N-token chunks record the per-token amortized gap N times — tokens
+    /// genuinely arrive in bursts there, and the amortized view is the
+    /// one the tok/s contract speaks to).
+    InterToken = 1,
+    /// Submit → admission (slot acquired), per admission.
+    QueueWait = 2,
+}
+const N_HISTS: usize = 3;
+
+// ---------------------------------------------------------------------
+// Log-bucketed histogram
+// ---------------------------------------------------------------------
+
+/// Sub-buckets per octave: 2^4 = 16 gives <= 6.25% relative bucket width.
+const SUB_BITS: u32 = 4;
+const SUBS: usize = 1 << SUB_BITS;
+/// Octaves above the exact range; the top bucket starts at `31 << 39` us
+/// (~200 days) — everything larger saturates into it.
+const OCTAVES: usize = 40;
+/// 16 exact buckets (values 0..16) + 40 octaves x 16 sub-buckets.
+pub const N_BUCKETS: usize = SUBS + OCTAVES * SUBS;
+
+/// HDR-style log-bucketed histogram: exact unit buckets for values below
+/// 16, then 16 sub-buckets per power of two (<= 6.25% relative error),
+/// saturating at the top bucket. Fixed memory, O(buckets) percentiles.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: vec![0; N_BUCKETS], total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+/// Bucket index of value `v` (saturates at the last bucket).
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBS as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize;
+    let octave = msb - SUB_BITS as usize;
+    let offset = ((v >> (msb - SUB_BITS as usize)) as usize) & (SUBS - 1);
+    (SUBS + (octave - 1) * SUBS + offset).min(N_BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `idx`.
+pub fn bucket_lo(idx: usize) -> u64 {
+    if idx < SUBS {
+        return idx as u64;
+    }
+    let octave = (idx - SUBS) / SUBS;
+    let offset = (idx - SUBS) % SUBS;
+    ((SUBS + offset) as u64) << octave
+}
+
+/// Width of bucket `idx` (its exclusive upper bound is `lo + width`).
+pub fn bucket_width(idx: usize) -> u64 {
+    if idx < SUBS {
+        1
+    } else {
+        1u64 << ((idx - SUBS) / SUBS)
+    }
+}
+
+impl LogHistogram {
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Samples that landed in the saturating top bucket.
+    pub fn saturated(&self) -> u64 {
+        self.counts[N_BUCKETS - 1]
+    }
+
+    /// The `p`-th percentile (0 < p <= 100), linearly interpolated inside
+    /// the containing bucket: the k-th of n samples in a bucket `[lo, lo+w)`
+    /// reads as `lo + w * k / n`. Exact-range buckets (width 1) therefore
+    /// resolve to within one microsecond; log buckets to within 6.25%.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0).clamp(0.0, 1.0) * self.total as f64;
+        let mut cum = 0u64;
+        let mut last_nonzero = 0usize;
+        for idx in 0..N_BUCKETS {
+            let k = self.counts[idx];
+            if k == 0 {
+                continue;
+            }
+            last_nonzero = idx;
+            if (cum + k) as f64 >= target {
+                let f = ((target - cum as f64) / k as f64).clamp(0.0, 1.0);
+                return bucket_lo(idx) as f64 + f * bucket_width(idx) as f64;
+            }
+            cum += k;
+        }
+        bucket_lo(last_nonzero) as f64 + bucket_width(last_nonzero) as f64
+    }
+
+    /// `{"p50_ms": ..}`-style JSON block (values converted us -> ms) for
+    /// the bench emitters; `null` when no sample was recorded so a missing
+    /// phase reads as absent, not as 0ms latency.
+    pub fn json_ms_block(&self) -> String {
+        if self.total == 0 {
+            return "null".into();
+        }
+        format!(
+            "{{\"count\": {}, \"mean_ms\": {:.3}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+             \"p99_ms\": {:.3}, \"max_ms\": {:.3}}}",
+            self.total,
+            self.mean() / 1e3,
+            self.percentile(50.0) / 1e3,
+            self.percentile(95.0) / 1e3,
+            self.percentile(99.0) / 1e3,
+            self.max as f64 / 1e3,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Telemetry handle
+// ---------------------------------------------------------------------
+
+struct Inner {
+    t0: Instant,
+    cap: usize,
+    buf: Vec<Event>,
+    dropped: u64,
+    hists: [LogHistogram; N_HISTS],
+}
+
+/// Shared telemetry recorder — see the module docs for the event model
+/// and the overhead contract. Clone freely: all clones record into the
+/// same buffer. The default handle is disabled and free.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Rc<RefCell<Inner>>>,
+}
+
+impl Telemetry {
+    /// The no-op handle: every record call is a branch-and-return.
+    pub fn disabled() -> Telemetry {
+        Telemetry { inner: None }
+    }
+
+    /// An enabled handle with a fixed event capacity (pre-allocated here,
+    /// never grown; overflow counts into [`Telemetry::dropped`]).
+    pub fn enabled(capacity: usize) -> Telemetry {
+        let cap = capacity.max(1);
+        Telemetry {
+            inner: Some(Rc::new(RefCell::new(Inner {
+                t0: Instant::now(),
+                cap,
+                buf: Vec::with_capacity(cap),
+                dropped: 0,
+                hists: Default::default(),
+            }))),
+        }
+    }
+
+    /// An enabled handle with the default 64Ki-event buffer (~2.5 MiB).
+    pub fn enabled_default() -> Telemetry {
+        Telemetry::enabled(1 << 16)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Microseconds since this handle was created (0 when disabled).
+    pub fn now_us(&self) -> u64 {
+        match &self.inner {
+            Some(i) => i.borrow().t0.elapsed().as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    fn push(&self, tid: u32, ph: Ph, name: &'static str, id: u64, arg: i64) {
+        let Some(inner) = &self.inner else {
+            return;
+        };
+        let mut inner = inner.borrow_mut();
+        let ts_us = inner.t0.elapsed().as_micros() as u64;
+        if inner.buf.len() < inner.cap {
+            inner.buf.push(Event { ts_us, tid, ph, name, id, arg });
+        } else {
+            inner.dropped += 1;
+        }
+    }
+
+    /// Open a span on `tid`. Every begin must be matched by an
+    /// [`Telemetry::end`] with the same `tid`/`name` (spans on one track
+    /// nest by stack order, the Chrome trace rule).
+    pub fn begin(&self, tid: u32, name: &'static str, id: u64, arg: i64) {
+        self.push(tid, Ph::Begin, name, id, arg);
+    }
+
+    pub fn end(&self, tid: u32, name: &'static str, id: u64, arg: i64) {
+        self.push(tid, Ph::End, name, id, arg);
+    }
+
+    pub fn instant(&self, tid: u32, name: &'static str, id: u64, arg: i64) {
+        self.push(tid, Ph::Instant, name, id, arg);
+    }
+
+    /// Record a counter sample (rendered as a counter track).
+    pub fn counter(&self, name: &'static str, value: i64) {
+        self.push(TID_ENGINE, Ph::Counter, name, 0, value);
+    }
+
+    /// Record a latency sample (microseconds) into one of the histograms.
+    pub fn record(&self, which: Hist, v_us: u64) {
+        if let Some(inner) = &self.inner {
+            inner.borrow_mut().hists[which as usize].record(v_us);
+        }
+    }
+
+    /// Events recorded so far (0 when disabled).
+    pub fn event_count(&self) -> usize {
+        self.inner.as_ref().map_or(0, |i| i.borrow().buf.len())
+    }
+
+    /// Events lost to the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.borrow().dropped)
+    }
+
+    /// Snapshot of the event buffer (cheap copies of fixed-size events).
+    pub fn events(&self) -> Vec<Event> {
+        self.inner.as_ref().map_or_else(Vec::new, |i| i.borrow().buf.clone())
+    }
+
+    /// Snapshot of one histogram (disabled handles return an empty one).
+    pub fn hist(&self, which: Hist) -> LogHistogram {
+        self.inner
+            .as_ref()
+            .map_or_else(LogHistogram::default, |i| i.borrow().hists[which as usize].clone())
+    }
+
+    /// Render the buffer as Chrome trace-event JSON (array form) —
+    /// loadable in Perfetto / `chrome://tracing`. One metadata
+    /// `thread_name` record per track; `request` span ends decode their
+    /// finish code into `args.finish`.
+    pub fn chrome_trace_json(&self) -> String {
+        let events = self.events();
+        let mut out = String::with_capacity(events.len() * 96 + 1024);
+        out.push_str("[\n");
+        // Track-name metadata first, one per distinct tid.
+        let mut tids: Vec<u32> = events.iter().map(|e| e.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        let mut first = true;
+        for tid in tids {
+            let name = track_name(tid);
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"ph\": \"M\", \"pid\": 1, \"tid\": {tid}, \"name\": \"thread_name\", \
+                 \"args\": {{\"name\": \"{name}\"}}}}"
+            ));
+        }
+        for e in &events {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            let ph = match e.ph {
+                Ph::Begin => "B",
+                Ph::End => "E",
+                Ph::Instant => "i",
+                Ph::Counter => "C",
+            };
+            out.push_str(&format!(
+                "{{\"ph\": \"{ph}\", \"pid\": 1, \"tid\": {}, \"ts\": {}, \"name\": \"{}\"",
+                e.tid, e.ts_us, e.name
+            ));
+            if e.ph == Ph::Instant {
+                out.push_str(", \"s\": \"t\"");
+            }
+            match e.ph {
+                Ph::Counter => out.push_str(&format!(", \"args\": {{\"value\": {}}}}}", e.arg)),
+                Ph::End if e.name == "request" => out.push_str(&format!(
+                    ", \"args\": {{\"id\": {}, \"v\": {}, \"finish\": \"{}\"}}}}",
+                    e.id,
+                    e.arg,
+                    finish_name(e.arg)
+                )),
+                _ => out.push_str(&format!(", \"args\": {{\"id\": {}, \"v\": {}}}}}", e.id, e.arg)),
+            }
+        }
+        out.push_str("\n]\n");
+        out
+    }
+}
+
+/// Human name of a track id (trace rendering).
+pub fn track_name(tid: u32) -> String {
+    match tid {
+        TID_QUEUE => "queue".into(),
+        TID_ENGINE => "engine".into(),
+        TID_ROLLOUT => "rollout".into(),
+        TID_SCORE => "score".into(),
+        TID_TRAIN => "train".into(),
+        TID_CHECKPOINT => "checkpoint".into(),
+        TID_GUARD => "guard".into(),
+        t if t >= TID_SLOT0 => format!("slot {}", t - TID_SLOT0),
+        t => format!("track {t}"),
+    }
+}
+
+/// Decode a `request` end arg back to its finish reason.
+pub fn finish_name(code: i64) -> &'static str {
+    match code {
+        FINISH_EOS => "eos",
+        FINISH_LENGTH => "length",
+        FINISH_FAILED => "failed",
+        FINISH_DEADLINE => "deadline",
+        FINISH_ABORTED => "aborted",
+        _ => "unknown",
+    }
+}
+
+// ---------------------------------------------------------------------
+// Unified metrics snapshot
+// ---------------------------------------------------------------------
+
+/// KV pool occupancy at snapshot time (see
+/// `HybridEngine::kv_occupancy`). Arena layouts report slot occupancy
+/// with `n_pages = 0`.
+#[derive(Debug, Clone, Default)]
+pub struct KvOccupancy {
+    pub paged: bool,
+    pub n_slots: usize,
+    pub active_slots: usize,
+    /// Valid (non-pad) cached tokens across all live slots.
+    pub valid_tokens: usize,
+    pub page_size: usize,
+    pub n_pages: usize,
+    pub free_pages: usize,
+    /// Shared prefixes registered for reuse (paged only).
+    pub registered_prefixes: usize,
+}
+
+impl KvOccupancy {
+    fn json(&self) -> String {
+        format!(
+            "{{\n    \"paged\": {},\n    \"n_slots\": {},\n    \"active_slots\": {},\n    \
+             \"valid_tokens\": {},\n    \"page_size\": {},\n    \"n_pages\": {},\n    \
+             \"free_pages\": {},\n    \"used_pages\": {},\n    \
+             \"registered_prefixes\": {}\n  }}",
+            self.paged,
+            self.n_slots,
+            self.active_slots,
+            self.valid_tokens,
+            self.page_size,
+            self.n_pages,
+            self.free_pages,
+            self.n_pages.saturating_sub(self.free_pages),
+            self.registered_prefixes,
+        )
+    }
+}
+
+/// Schema version stamped into every snapshot/bench document this repo
+/// emits; bump when a field changes meaning so downstream trajectory
+/// tooling can detect the break.
+pub const SNAPSHOT_SCHEMA_VERSION: u32 = 1;
+
+/// One JSON document merging every measurement surface: per-artifact
+/// runtime [`ExecStats`](crate::runtime::ExecStats), scheduler
+/// [`SchedStats`](crate::serving::SchedStats), PPO
+/// [`IterStats`](crate::coordinator::IterStats) aggregates, KV occupancy,
+/// and the telemetry histograms/drop counters. Any section may be absent
+/// (`None` / empty) — the serve loop has no PPO iterations, a training
+/// run may have no scheduler.
+pub fn metrics_snapshot_json(
+    exec: &BTreeMap<String, crate::runtime::ExecStats>,
+    sched: Option<&crate::serving::SchedStats>,
+    iters: &[crate::coordinator::IterStats],
+    kv: Option<&KvOccupancy>,
+    tel: &Telemetry,
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema_version\": {SNAPSHOT_SCHEMA_VERSION},\n"));
+
+    // Runtime: per-artifact call/byte accounting + totals.
+    let (mut calls, mut up, mut down, mut fallbacks) = (0u64, 0u64, 0u64, 0u64);
+    s.push_str("  \"runtime\": {\n    \"artifacts\": {");
+    let mut first = true;
+    for (name, st) in exec {
+        calls += st.calls;
+        up += st.bytes_uploaded;
+        down += st.bytes_fetched;
+        fallbacks += st.fallback_untuples;
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        s.push_str(&format!(
+            "\n      \"{name}\": {{\"calls\": {}, \"exec_secs\": {:.6}, \
+             \"bytes_fetched\": {}, \"bytes_uploaded\": {}, \"fallback_untuples\": {}}}",
+            st.calls, st.exec_secs, st.bytes_fetched, st.bytes_uploaded, st.fallback_untuples
+        ));
+    }
+    s.push_str(&format!(
+        "\n    }},\n    \"total_calls\": {calls},\n    \"total_bytes_uploaded\": {up},\n    \
+         \"total_bytes_fetched\": {down},\n    \"fallback_untuples\": {fallbacks}\n  }},\n"
+    ));
+
+    // Serving: scheduler counters + derived rates.
+    match sched {
+        Some(st) => s.push_str(&format!(
+            "  \"serving\": {{\n    \"submitted\": {},\n    \"admitted\": {},\n    \
+             \"completed\": {},\n    \"steps\": {},\n    \"decode_calls\": {},\n    \
+             \"prefills\": {},\n    \"tokens_sampled\": {},\n    \"retired_eos\": {},\n    \
+             \"retired_length\": {},\n    \"retired_failed\": {},\n    \
+             \"retired_deadline\": {},\n    \"requeues\": {},\n    \"prefill_faults\": {},\n    \
+             \"decode_faults\": {},\n    \"decode_retries\": {},\n    \"quarantined\": {},\n    \
+             \"peak_queue_depth\": {},\n    \"utilization\": {:.4},\n    \
+             \"bubble_fraction\": {:.4},\n    \"pad_fraction\": {:.4},\n    \
+             \"admitted_tokens\": {},\n    \"computed_tokens\": {},\n    \
+             \"reused_tokens\": {},\n    \"cache_hit_rate\": {:.4},\n    \
+             \"chunk_waste_tokens\": {}\n  }},\n",
+            st.submitted,
+            st.admitted,
+            st.completed,
+            st.steps,
+            st.decode_calls,
+            st.prefills,
+            st.tokens_sampled,
+            st.retired_eos,
+            st.retired_length,
+            st.retired_failed,
+            st.retired_deadline,
+            st.requeues,
+            st.prefill_faults,
+            st.decode_faults,
+            st.decode_retries,
+            st.quarantined,
+            st.peak_queue_depth,
+            st.utilization(),
+            st.bubble_fraction(),
+            st.pad_fraction(),
+            st.admitted_tokens(),
+            st.computed_tokens(),
+            st.reused_tokens,
+            st.cache_hit_rate(),
+            st.chunk_waste_tokens,
+        )),
+        None => s.push_str("  \"serving\": null,\n"),
+    }
+
+    // Training: aggregate over the recorded PPO iterations.
+    if iters.is_empty() {
+        s.push_str("  \"training\": null,\n");
+    } else {
+        let n = iters.len() as f64;
+        let mean = |f: fn(&crate::coordinator::IterStats) -> f64| -> f64 {
+            iters.iter().map(f).sum::<f64>() / n
+        };
+        let gen_secs: f64 = iters.iter().map(|i| i.gen_secs).sum();
+        let train_secs: f64 = iters.iter().map(|i| i.train_secs).sum();
+        let gen_tokens: u64 = iters.iter().map(|i| i.gen_tokens).sum();
+        s.push_str(&format!(
+            "  \"training\": {{\n    \"iterations\": {},\n    \"gen_secs\": {:.4},\n    \
+             \"train_secs\": {:.4},\n    \"gen_tokens\": {},\n    \
+             \"mean_true_reward\": {:.4},\n    \"mean_rm_score\": {:.4},\n    \
+             \"mean_kl_to_ref\": {:.4},\n    \"mean_actor_loss\": {:.4},\n    \
+             \"mean_critic_loss\": {:.4},\n    \"mean_clipfrac\": {:.4},\n    \
+             \"mean_rollout_bubble\": {:.4}\n  }},\n",
+            iters.len(),
+            gen_secs,
+            train_secs,
+            gen_tokens,
+            mean(|i| i.true_reward),
+            mean(|i| i.rm_score),
+            mean(|i| i.kl_to_ref),
+            mean(|i| i.actor_loss),
+            mean(|i| i.critic_loss),
+            mean(|i| i.clipfrac),
+            mean(|i| i.rollout_bubble),
+        ));
+    }
+
+    // KV occupancy.
+    match kv {
+        Some(occ) => s.push_str(&format!("  \"kv\": {},\n", occ.json())),
+        None => s.push_str("  \"kv\": null,\n"),
+    }
+
+    // Telemetry: histograms + recorder health.
+    s.push_str(&format!(
+        "  \"telemetry\": {{\n    \"enabled\": {},\n    \"events\": {},\n    \
+         \"dropped_events\": {},\n    \"ttft_ms\": {},\n    \"inter_token_ms\": {},\n    \
+         \"queue_wait_ms\": {}\n  }}\n}}\n",
+        tel.is_enabled(),
+        tel.event_count(),
+        tel.dropped(),
+        tel.hist(Hist::Ttft).json_ms_block(),
+        tel.hist(Hist::InterToken).json_ms_block(),
+        tel.hist(Hist::QueueWait).json_ms_block(),
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    // -- histogram: bucket boundaries ---------------------------------
+
+    #[test]
+    fn bucket_boundaries_are_exact_then_log() {
+        // Values below 16 get exact unit buckets.
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize, "exact bucket for {v}");
+            assert_eq!(bucket_lo(v as usize), v);
+            assert_eq!(bucket_width(v as usize), 1);
+        }
+        // Octave starts: every power of two above 16 opens a bucket whose
+        // lower bound is the value itself and whose width doubles.
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_lo(16), 16);
+        assert_eq!(bucket_width(16), 1);
+        assert_eq!(bucket_index(31), 31, "last sub-bucket of the first octave");
+        assert_eq!(bucket_index(32), 32);
+        assert_eq!(bucket_lo(32), 32);
+        assert_eq!(bucket_width(32), 2);
+        assert_eq!(bucket_index(33), 32, "32 and 33 share a width-2 bucket");
+        assert_eq!(bucket_index(34), 33);
+        // Monotone and contiguous: every bucket's end is the next's start.
+        for idx in 0..N_BUCKETS - 1 {
+            assert_eq!(
+                bucket_lo(idx) + bucket_width(idx),
+                bucket_lo(idx + 1),
+                "bucket {idx} not contiguous"
+            );
+        }
+        // Every value lands in the bucket whose range contains it.
+        for v in [0u64, 1, 15, 16, 100, 1000, 4096, 123_456, 7_654_321] {
+            let idx = bucket_index(v);
+            assert!(bucket_lo(idx) <= v, "lo({idx}) <= {v}");
+            assert!(v < bucket_lo(idx) + bucket_width(idx), "{v} < hi({idx})");
+        }
+    }
+
+    #[test]
+    fn histogram_percentile_interpolates() {
+        // 100 exact-bucket samples 0..100? No — exact buckets stop at 16.
+        // Use 0..10 so every sample has its own unit bucket: percentiles
+        // interpolate linearly within and across them.
+        let mut h = LogHistogram::default();
+        for v in 0..10u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        // p50 of 10 samples: target rank 5.0 falls at the end of bucket 4
+        // (cum 4 + 1 >= 5, f = 1) -> 5.0 exactly.
+        assert!((h.percentile(50.0) - 5.0).abs() < 1e-9, "{}", h.percentile(50.0));
+        // p10 -> bucket 0 full -> 1.0; p100 -> end of bucket 9 -> 10.0.
+        assert!((h.percentile(10.0) - 1.0).abs() < 1e-9);
+        assert!((h.percentile(100.0) - 10.0).abs() < 1e-9);
+        // Mid-bucket interpolation: two samples in one wide bucket.
+        let mut h2 = LogHistogram::default();
+        h2.record(40); // bucket [40, 42)
+        h2.record(40);
+        let p50 = h2.percentile(50.0);
+        let (lo, w) = (bucket_lo(bucket_index(40)) as f64, bucket_width(bucket_index(40)) as f64);
+        assert!((p50 - (lo + 0.5 * w)).abs() < 1e-9, "half the bucket: {p50}");
+        // Relative error contract: p99 of identical samples stays within
+        // one sub-bucket (6.25%) of the value.
+        let mut h3 = LogHistogram::default();
+        for _ in 0..1000 {
+            h3.record(100_000);
+        }
+        let p99 = h3.percentile(99.0);
+        assert!((p99 - 100_000.0).abs() / 100_000.0 < 0.0625, "{p99}");
+    }
+
+    #[test]
+    fn histogram_saturates_at_max_bucket() {
+        let mut h = LogHistogram::default();
+        h.record(u64::MAX);
+        h.record(u64::MAX / 2);
+        assert_eq!(h.saturated(), 2, "both land in the top bucket");
+        assert_eq!(h.count(), 2);
+        // Percentiles stay finite and at least the top bucket's bound.
+        let top_lo = bucket_lo(N_BUCKETS - 1) as f64;
+        assert!(h.percentile(50.0) >= top_lo);
+        assert!(h.percentile(99.0).is_finite());
+        // max() tracks the raw value even past saturation.
+        assert_eq!(h.max(), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_mean_min_max_and_empty() {
+        let mut h = LogHistogram::default();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.json_ms_block(), "null");
+        h.record(10);
+        h.record(14);
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 14);
+        assert!((h.mean() - 12.0).abs() < 1e-9);
+        let block = Json::parse(&h.json_ms_block()).unwrap();
+        assert_eq!(block.get("count").and_then(Json::as_usize), Some(2usize));
+    }
+
+    // -- ring buffer ---------------------------------------------------
+
+    #[test]
+    fn ring_buffer_counts_drops_instead_of_growing() {
+        let tel = Telemetry::enabled(4);
+        for i in 0..10u64 {
+            tel.instant(TID_ENGINE, "tick", i, 0);
+        }
+        assert_eq!(tel.event_count(), 4, "capacity bound holds");
+        assert_eq!(tel.dropped(), 6, "overflow counted, not stored");
+        // The retained events are the earliest four.
+        let ids: Vec<u64> = tel.events().iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let tel = Telemetry::disabled();
+        tel.begin(TID_QUEUE, "queued", 1, 0);
+        tel.record(Hist::Ttft, 123);
+        assert!(!tel.is_enabled());
+        assert_eq!(tel.event_count(), 0);
+        assert_eq!(tel.dropped(), 0);
+        assert_eq!(tel.hist(Hist::Ttft).count(), 0);
+        assert_eq!(tel.now_us(), 0);
+    }
+
+    #[test]
+    fn clones_share_one_recorder() {
+        let tel = Telemetry::enabled(16);
+        let clone = tel.clone();
+        tel.instant(TID_QUEUE, "a", 1, 0);
+        clone.instant(TID_ENGINE, "b", 2, 0);
+        assert_eq!(tel.event_count(), 2);
+        assert_eq!(clone.event_count(), 2);
+        clone.record(Hist::QueueWait, 7);
+        assert_eq!(tel.hist(Hist::QueueWait).count(), 1);
+    }
+
+    // -- chrome trace export ------------------------------------------
+
+    #[test]
+    fn chrome_trace_parses_and_pairs_spans() {
+        let tel = Telemetry::enabled(64);
+        tel.begin(TID_QUEUE, "queued", 7, 0);
+        tel.end(TID_QUEUE, "queued", 7, 0);
+        tel.begin(slot_tid(0), "request", 7, 4);
+        tel.instant(slot_tid(0), "first_token", 7, 0);
+        tel.end(slot_tid(0), "request", 7, FINISH_EOS);
+        tel.counter("queue_depth", 3);
+        let json = tel.chrome_trace_json();
+        let doc = Json::parse(&json).expect("trace must be valid JSON");
+        let arr = doc.as_arr().expect("trace is an array");
+        // Metadata rows name every track used.
+        let names: Vec<&str> = arr
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+            .collect();
+        assert!(names.contains(&"queue") && names.contains(&"slot 0"), "{names:?}");
+        // Every B has a matching E on the same track/name.
+        let count = |ph: &str, name: &str| {
+            arr.iter()
+                .filter(|e| {
+                    e.get("ph").and_then(Json::as_str) == Some(ph)
+                        && e.get("name").and_then(Json::as_str) == Some(name)
+                })
+                .count()
+        };
+        assert_eq!(count("B", "queued"), count("E", "queued"));
+        assert_eq!(count("B", "request"), count("E", "request"));
+        assert_eq!(count("i", "first_token"), 1);
+        // The request end decodes its finish code.
+        let fin = arr
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("E")
+                    && e.get("name").and_then(Json::as_str) == Some("request")
+            })
+            .and_then(|e| e.get("args"))
+            .and_then(|a| a.get("finish"))
+            .and_then(Json::as_str);
+        assert_eq!(fin, Some("eos"));
+        // Timestamps are monotone non-decreasing in buffer order.
+        let ts: Vec<u64> =
+            arr.iter().filter_map(|e| e.get("ts").and_then(Json::as_usize)).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+    }
+
+    // -- snapshot ------------------------------------------------------
+
+    #[test]
+    fn metrics_snapshot_merges_all_sections() {
+        let mut exec = BTreeMap::new();
+        exec.insert(
+            "decode_slots".to_string(),
+            crate::runtime::ExecStats {
+                calls: 10,
+                bytes_fetched: 640,
+                bytes_uploaded: 320,
+                ..Default::default()
+            },
+        );
+        let sched = crate::serving::SchedStats { submitted: 6, completed: 6, ..Default::default() };
+        let occ = KvOccupancy {
+            paged: true,
+            n_slots: 4,
+            active_slots: 2,
+            n_pages: 64,
+            free_pages: 40,
+            page_size: 4,
+            ..Default::default()
+        };
+        let tel = Telemetry::enabled(8);
+        tel.record(Hist::Ttft, 1500);
+        let json = metrics_snapshot_json(&exec, Some(&sched), &[], Some(&occ), &tel);
+        let doc = Json::parse(&json).expect("snapshot must parse");
+        assert_eq!(doc.get("schema_version").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            doc.get("runtime").and_then(|r| r.get("total_calls")).and_then(Json::as_usize),
+            Some(10)
+        );
+        assert_eq!(
+            doc.get("serving").and_then(|s| s.get("submitted")).and_then(Json::as_usize),
+            Some(6)
+        );
+        assert!(matches!(doc.at("training"), Json::Null), "no iterations -> null");
+        assert_eq!(doc.get("kv").and_then(|k| k.get("used_pages")).and_then(Json::as_usize), Some(24));
+        let ttft = doc.get("telemetry").and_then(|t| t.get("ttft_ms")).unwrap();
+        assert_eq!(ttft.get("count").and_then(Json::as_usize), Some(1));
+    }
+}

@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace written by `--trace-out` (serve / e2e_rlhf /
+`dschat train`): the file must parse as trace-event JSON (array form) and
+every request admitted to a slot must show a COMPLETE lifecycle span — a
+`request` Begin paired with a `request` End carrying a decoded finish
+code. Used by scripts/verify.sh and the CI telemetry job.
+
+Usage: check_trace.py TRACE.json [--min-requests N]
+"""
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    if len(sys.argv) < 2:
+        fail("usage: check_trace.py TRACE.json [--min-requests N]")
+    path = sys.argv[1]
+    min_requests = 1
+    if "--min-requests" in sys.argv:
+        min_requests = int(sys.argv[sys.argv.index("--min-requests") + 1])
+
+    with open(path) as f:
+        events = json.load(f)
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: expected a non-empty trace-event array")
+
+    open_spans = {}
+    finishes = {}
+    complete = 0
+    for e in events:
+        ph = e.get("ph")
+        if ph not in ("B", "E") or e.get("name") != "request":
+            continue
+        key = (e.get("tid"), e.get("args", {}).get("id"))
+        if ph == "B":
+            open_spans[key] = e
+        else:
+            begin = open_spans.pop(key, None)
+            if begin is None:
+                fail(f"{path}: request End without a Begin: {e}")
+            if e["ts"] < begin["ts"]:
+                fail(f"{path}: request span ends before it begins: {e}")
+            fin = e.get("args", {}).get("finish")
+            if fin not in ("eos", "length", "failed", "deadline", "aborted"):
+                fail(f"{path}: request End without a finish code: {e}")
+            finishes[fin] = finishes.get(fin, 0) + 1
+            complete += 1
+
+    if open_spans:
+        fail(
+            f"{path}: {len(open_spans)} request span(s) never closed: "
+            f"{sorted(open_spans)}"
+        )
+    if complete < min_requests:
+        fail(f"{path}: {complete} complete request span(s), wanted >= {min_requests}")
+    print(
+        f"check_trace: OK: {path}: {len(events)} events, "
+        f"{complete} complete request span(s) {finishes}"
+    )
+
+
+if __name__ == "__main__":
+    main()

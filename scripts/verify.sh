@@ -68,8 +68,17 @@ if [ -f artifacts/tiny/manifest.json ]; then
         else
             echo "verify: artifacts predate the block-paged KV cache — paged smokes skipped (re-run \`make artifacts\`)"
         fi
-        echo "== verify: serve demo (continuous batching smoke) =="
-        cargo run --release --example serve -- --demo
+        echo "== verify: serve demo (continuous batching smoke + telemetry trace) =="
+        rm -f trace_serve.json
+        cargo run --release --example serve -- --demo --trace-out trace_serve.json
+        test -s trace_serve.json \
+            || { echo "verify: serve demo did not write trace_serve.json (--trace-out)" >&2; exit 1; }
+        if command -v python3 >/dev/null 2>&1; then
+            # Parses as trace-event JSON with >= 1 complete request span
+            # (queued -> retired with a finish code) per admitted request.
+            python3 scripts/check_trace.py trace_serve.json
+        fi
+        echo "verify: wrote trace_serve.json (Chrome trace — load in Perfetto)"
         if grep -q '"decode_slots_sampled"' artifacts/tiny/manifest.json; then
             echo "== verify: serve demo (device sampling tail) =="
             cargo run --release --example serve -- --demo --backend device
