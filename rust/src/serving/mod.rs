@@ -1587,9 +1587,18 @@ impl<E: SlotEngine> Scheduler<E> {
                     if self.tel.is_enabled() && pushed_here > 0 {
                         // The chunk lands its tokens in one batch: observed
                         // inter-token latency is the amortized chunk wall
-                        // time, recorded once per token it covers.
+                        // time, recorded once per token it covers. When the
+                        // chunk contains the request's first token, that
+                        // token's gap is TTFT (recorded below, not an
+                        // InterToken sample), so the wall time amortizes
+                        // over the remaining pushed_here - 1 samples.
                         let now = self.tel.now_us();
-                        let dt = now.saturating_sub(seq.t_last_tok_us) / pushed_here as u64;
+                        let n_inter = pushed_here - usize::from(was_generated == 0);
+                        let dt = if n_inter > 0 {
+                            now.saturating_sub(seq.t_last_tok_us) / n_inter as u64
+                        } else {
+                            0
+                        };
                         for k in 0..pushed_here {
                             if was_generated == 0 && k == 0 {
                                 self.tel.instant(

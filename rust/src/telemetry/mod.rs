@@ -38,7 +38,12 @@
 //! enabled handle pre-allocates its entire event buffer up front
 //! ([`Telemetry::enabled`]); recording writes into that fixed-capacity
 //! buffer and, once full, *counts drops* ([`Telemetry::dropped`]) instead
-//! of growing. Histograms are fixed arrays of `u64` buckets
+//! of growing. Overflow drops the NEWEST events — the buffer keeps the
+//! earliest-recorded prefix of the timeline (a coherent span prefix,
+//! never an End without its Begin), and the exporter stamps the drop
+//! count into the trace (`telemetry_dropped`) so downstream tooling can
+//! tell a truncated trace from a complete one instead of misreading the
+//! missing tail as unclosed spans. Histograms are fixed arrays of `u64` buckets
 //! ([`LogHistogram`]) — recording a sample is a shift and an add, and
 //! percentiles come from O(buckets) memory, never from stored samples.
 //! The serve bench asserts the disabled-path bound every run.
@@ -125,9 +130,11 @@ pub enum Hist {
     /// Submit → first generated token, per request.
     Ttft = 0,
     /// Gap between consecutive generated tokens of one request (fused
-    /// N-token chunks record the per-token amortized gap N times — tokens
-    /// genuinely arrive in bursts there, and the amortized view is the
-    /// one the tok/s contract speaks to).
+    /// N-token chunks record the per-token amortized gap once per token
+    /// they cover — tokens genuinely arrive in bursts there, and the
+    /// amortized view is the one the tok/s contract speaks to; a chunk
+    /// carrying the request's FIRST token records that token as TTFT and
+    /// amortizes the chunk wall time over the remaining tokens).
     InterToken = 1,
     /// Submit → admission (slot acquired), per admission.
     QueueWait = 2,
@@ -171,9 +178,11 @@ pub fn bucket_index(v: u64) -> usize {
         return v as usize;
     }
     let msb = 63 - v.leading_zeros() as usize;
+    // First log octave (values 16..32, msb == 4) is octave 0, starting
+    // right after the SUBS exact unit buckets.
     let octave = msb - SUB_BITS as usize;
     let offset = ((v >> (msb - SUB_BITS as usize)) as usize) & (SUBS - 1);
-    (SUBS + (octave - 1) * SUBS + offset).min(N_BUCKETS - 1)
+    (SUBS + octave * SUBS + offset).min(N_BUCKETS - 1)
 }
 
 /// Inclusive lower bound of bucket `idx`.
@@ -402,9 +411,13 @@ impl Telemetry {
     /// Render the buffer as Chrome trace-event JSON (array form) —
     /// loadable in Perfetto / `chrome://tracing`. One metadata
     /// `thread_name` record per track; `request` span ends decode their
-    /// finish code into `args.finish`.
+    /// finish code into `args.finish`. If the buffer overflowed (the
+    /// timeline tail was dropped), a final `telemetry_dropped` instant
+    /// carries the drop count so consumers (scripts/check_trace.py) can
+    /// distinguish a truncated trace from unclosed spans.
     pub fn chrome_trace_json(&self) -> String {
         let events = self.events();
+        let dropped = self.dropped();
         let mut out = String::with_capacity(events.len() * 96 + 1024);
         out.push_str("[\n");
         // Track-name metadata first, one per distinct tid.
@@ -451,6 +464,17 @@ impl Telemetry {
                 )),
                 _ => out.push_str(&format!(", \"args\": {{\"id\": {}, \"v\": {}}}}}", e.id, e.arg)),
             }
+        }
+        if dropped > 0 {
+            let last_ts = events.last().map_or(0, |e| e.ts_us);
+            if !first {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "{{\"ph\": \"i\", \"pid\": 1, \"tid\": {TID_ENGINE}, \"ts\": {last_ts}, \
+                 \"name\": \"telemetry_dropped\", \"s\": \"g\", \
+                 \"args\": {{\"value\": {dropped}}}}}"
+            ));
         }
         out.push_str("\n]\n");
         out
@@ -702,8 +726,19 @@ mod tests {
                 "bucket {idx} not contiguous"
             );
         }
-        // Every value lands in the bucket whose range contains it.
-        for v in [0u64, 1, 15, 16, 100, 1000, 4096, 123_456, 7_654_321] {
+        // Every value lands in the bucket whose range contains it, and the
+        // index is monotone in the value — exhaustive over the first
+        // octaves (this is exactly the sweep that catches an off-by-one
+        // octave shift), then spot checks further up.
+        let mut prev = 0usize;
+        for v in 0..(1u64 << 16) {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "index not monotone at {v}");
+            prev = idx;
+            assert!(bucket_lo(idx) <= v, "lo({idx}) <= {v}");
+            assert!(v < bucket_lo(idx) + bucket_width(idx), "{v} < hi({idx})");
+        }
+        for v in [123_456u64, 7_654_321, 1 << 30, (31u64 << 39) - 1] {
             let idx = bucket_index(v);
             assert!(bucket_lo(idx) <= v, "lo({idx}) <= {v}");
             assert!(v < bucket_lo(idx) + bucket_width(idx), "{v} < hi({idx})");
@@ -773,19 +808,43 @@ mod tests {
         assert_eq!(block.get("count").and_then(Json::as_usize), Some(2usize));
     }
 
-    // -- ring buffer ---------------------------------------------------
+    // -- bounded event buffer ------------------------------------------
 
     #[test]
-    fn ring_buffer_counts_drops_instead_of_growing() {
+    fn event_buffer_counts_drops_instead_of_growing() {
         let tel = Telemetry::enabled(4);
         for i in 0..10u64 {
             tel.instant(TID_ENGINE, "tick", i, 0);
         }
         assert_eq!(tel.event_count(), 4, "capacity bound holds");
         assert_eq!(tel.dropped(), 6, "overflow counted, not stored");
-        // The retained events are the earliest four.
+        // Overflow drops the NEWEST events: the retained prefix is the
+        // earliest four, so span Begins never outlive their Ends silently.
         let ids: Vec<u64> = tel.events().iter().map(|e| e.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn truncated_trace_carries_the_drop_count() {
+        let tel = Telemetry::enabled(2);
+        tel.begin(slot_tid(0), "request", 1, 0);
+        tel.instant(slot_tid(0), "first_token", 1, 0);
+        tel.end(slot_tid(0), "request", 1, FINISH_EOS); // dropped
+        assert_eq!(tel.dropped(), 1);
+        let doc = Json::parse(&tel.chrome_trace_json()).expect("truncated trace still parses");
+        let arr = doc.as_arr().unwrap();
+        let marker = arr
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("telemetry_dropped"))
+            .expect("overflowed trace must stamp telemetry_dropped");
+        assert_eq!(
+            marker.get("args").and_then(|a| a.get("value")).and_then(Json::as_usize),
+            Some(1)
+        );
+        // A trace that did NOT overflow carries no marker.
+        let ok = Telemetry::enabled(8);
+        ok.instant(TID_ENGINE, "tick", 0, 0);
+        assert!(!ok.chrome_trace_json().contains("telemetry_dropped"));
     }
 
     #[test]

@@ -5,6 +5,12 @@ every request admitted to a slot must show a COMPLETE lifecycle span — a
 `request` Begin paired with a `request` End carrying a decoded finish
 code. Used by scripts/verify.sh and the CI telemetry job.
 
+The recorder's event buffer is bounded: on overflow it keeps the earliest
+events and stamps the drop count into the trace as a `telemetry_dropped`
+instant. Such a trace is TRUNCATED — the missing tail makes unclosed
+spans expected, so that check downgrades to a warning (the parse,
+ordering, and finish-code checks still apply to what was kept).
+
 Usage: check_trace.py TRACE.json [--min-requests N]
 """
 import json
@@ -29,6 +35,12 @@ def main():
     if not isinstance(events, list) or not events:
         fail(f"{path}: expected a non-empty trace-event array")
 
+    dropped = sum(
+        e.get("args", {}).get("value", 0)
+        for e in events
+        if e.get("name") == "telemetry_dropped"
+    )
+
     open_spans = {}
     finishes = {}
     complete = 0
@@ -52,15 +64,27 @@ def main():
             complete += 1
 
     if open_spans:
-        fail(
-            f"{path}: {len(open_spans)} request span(s) never closed: "
-            f"{sorted(open_spans)}"
-        )
+        if dropped > 0:
+            # Truncated trace: the recorder dropped the timeline tail, so
+            # the missing End events are expected, not a scheduler bug.
+            print(
+                f"check_trace: WARN: {path}: {len(open_spans)} request span(s) "
+                f"unclosed, but the trace is truncated ({dropped} event(s) "
+                f"dropped at capacity) — raise the event buffer capacity for "
+                f"a complete timeline",
+                file=sys.stderr,
+            )
+        else:
+            fail(
+                f"{path}: {len(open_spans)} request span(s) never closed: "
+                f"{sorted(open_spans)}"
+            )
     if complete < min_requests:
         fail(f"{path}: {complete} complete request span(s), wanted >= {min_requests}")
+    truncated = f", TRUNCATED ({dropped} dropped)" if dropped > 0 else ""
     print(
         f"check_trace: OK: {path}: {len(events)} events, "
-        f"{complete} complete request span(s) {finishes}"
+        f"{complete} complete request span(s) {finishes}{truncated}"
     )
 
 
