@@ -675,6 +675,15 @@ def build(run_name: str, out_dir: str, only=None):
     # pool geometry. Pre-paging builds parse with the flag absent -> false
     # and the rust runtime refuses paged serving against them.
     cfg_dict["paged_kv"] = True
+    # Capability flag: the paged entries honor the LAZY block-table
+    # contract — every gathered/scattered row is masked by the live length
+    # (`idx <= pos` / the causal mask), so table entries past
+    # `ceil((pos+1)/page_size)` blocks are never read and may point at
+    # garbage page 0. The rust allocator relies on this to grow tables
+    # on demand (one page per boundary crossing) and to run the pool
+    # OVERSUBSCRIBED (`limit_kv_pages`); it refuses oversubscription
+    # against artifact sets that predate the stamp.
+    cfg_dict["lazy_kv"] = True
     # Capability flag: the `_rng` entries exist — the categorical draw runs
     # ON DEVICE from a counter-based Threefry hash of (request seed, step),
     # so stochastic decode fetches O(B) sampled ids. The rust runtime

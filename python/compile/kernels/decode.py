@@ -190,6 +190,17 @@ def decode_attention_paged(q, k_pool, v_pool, pos, block_tables, page_size, bloc
     kernel's exactly (see `_decode_paged_kernel`), so paged serving is
     bit-identical to the arena path for the same logical cache contents.
 
+    LAZY-TABLE CONTRACT (`lazy_kv` manifest capability): only the first
+    `ceil((pos+1) / page_size)` entries of a row's block table need to
+    name real pages. The kernel walks `ceil((pos+1) / block_k)` tiles and
+    masks every score at `idx > pos` to -inf, so a dead entry's K feeds a
+    zeroed softmax weight and its V is multiplied by 0 — dead tail entries
+    may therefore alias any valid pool page (the allocator points them at
+    garbage page 0, which is kept finite and never handed out). This is
+    what lets the rust `PageLedger` grow tables one page per boundary
+    crossing and run the pool oversubscribed instead of reserving
+    `max_blocks` pages up front.
+
     q: [b*h, dh] (row = slot * h + head);
     k_pool, v_pool: [h, n_pages * page_size, dh];
     pos: [b*h] int32 (logical token index per row);

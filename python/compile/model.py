@@ -480,6 +480,15 @@ def decode_slots(cfg: ModelConfig, params, k_cache, v_cache, token, pos, start=N
 # computation by the causal-mask argument — and therefore bit-identical to
 # the arena left-padded path, which PR 5 pinned to the same exact-length
 # reference.
+#
+# LAZY TABLES (`lazy_kv` capability): every entry here is shaped for the
+# FULL [b, max_blocks] table, but only entries covering the live length
+# (`ceil((pos+1) / page_size)` blocks) must name real pages. Reads mask
+# `idx > pos` (see `decode_attention_paged`) and writes only target the
+# page covering the written position, so dead tail entries may alias the
+# reserved garbage page 0. The rust allocator exploits this to map pages
+# on demand as decode crosses page boundaries instead of reserving
+# `max_blocks` pages per slot at admission.
 # ---------------------------------------------------------------------------
 
 
@@ -510,7 +519,12 @@ def prefill_slot_paged(cfg: ModelConfig, params, k_cache, v_cache, prompt, block
     scattered to `block_table[p // page_size] * page_size + p % page_size`;
     pages holding a verified shared prefix are rewritten with bit-identical
     values (same tokens at same logical positions), which is what makes
-    copy-on-write prefix sharing safe under a full-window prefill.
+    copy-on-write prefix sharing safe under a full-window prefill. Under
+    the lazy contract the allocator maps only `ceil(L / page_size)` pages
+    at admission and points the table tail at garbage page 0, so the
+    padding tail's K/V writes land in page 0 — storage no live slot
+    attends (and whose values stay finite, keeping the masked-read
+    argument in `decode_attention_paged` sound).
 
     prompt: [1, sp] int32; block_table: [1, max_blocks] int32; `last`: [1]
     int32 = L - 1, the true last token's row, whose logits are returned.
@@ -541,6 +555,10 @@ def decode_slots_paged(cfg: ModelConfig, params, k_cache, v_cache, token, pos, b
     written and attended through each slot's block table. Inactive slots'
     tables point every block at the reserved garbage page 0, so their PAD
     writes land in (and their outputs read) storage no live slot maps.
+    Live slots need only the blocks covering `pos` mapped: the write
+    targets the single page holding `pos` (which `reserve_rows` maps
+    before dispatch) and reads mask `idx > pos`, so the table tail past
+    the live length may also alias page 0 (the lazy contract).
 
     token, pos: [b] int32; block_tables: [b, max_blocks] int32.
     Returns (logits [b, vocab], updated caches).

@@ -140,6 +140,10 @@ def test_manifest_contents(tmp_path, entries):
     assert man["config"]["paged_kv"] is True
     assert man["config"]["page_size"] == RC.page_size
     assert man["config"]["kv_pages"] == RC.kv_pages
+    # Lazy block-table capability: the rust runtime gates on-demand page
+    # growth and pool oversubscription on this (absent in artifact sets
+    # whose paged entries read unmasked table tails).
+    assert man["config"]["lazy_kv"] is True
     assert len(man["actor_params"]) == len(model.param_spec(RC.actor, "lm"))
     assert len(man["actor_opt"]) == 2 * len(man["actor_params"]) + 1
     art = man["artifacts"]["logprobs_forward"]

@@ -1,0 +1,321 @@
+"""Lazy block tables: dead tail entries alias garbage page 0, bit-safely.
+
+These pin the `lazy_kv` artifact capability the rust oversubscribed allocator
+(rust/src/hybrid/kv.rs) relies on: a slot's block table is always shaped for
+the full `max_blocks` window, but only the first `ceil((pos+1) / page_size)`
+entries need to name real pages — the rest may point at the reserved garbage
+page 0 (or any valid pool page holding finite junk), because
+
+  * reads mask every score at `idx > pos` to NEG_INF, so a dead entry's K
+    feeds a zero softmax weight and its V is multiplied by exactly 0;
+  * writes only target the single page holding the written position, which
+    the rust `reserve_rows` maps before dispatching the decode step;
+  * a right-padded short prompt's padding-tail K/V writes land in page 0
+    itself — storage no live slot attends.
+
+Each test runs the SAME traffic twice — once with fully-mapped tables, once
+with tables grown one page per boundary crossing (the rust allocator's
+discipline) — and requires BIT-IDENTICAL outputs at every step. Page 0 is
+poisoned with large finite garbage first, so a table tail that were actually
+read (rather than masked) would corrupt the bits and fail loudly.
+
+The Pallas kernel itself is checked in the parity section at the bottom,
+which skips itself when the installed jax cannot run pallas interpret mode
+(same discipline as test_paged.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import run_config
+from compile.kernels import ref
+from compile.kernels.decode import decode_attention_paged, decode_attention_pb
+
+RC = run_config("nano")
+PAD = 0  # mirrors the rust Vocab::PAD token
+
+# Small-page geometry: nano's seq_len = 16 split into 4-token pages so a
+# full-window sequence spans 4 blocks — decode crosses page boundaries at
+# pos 8 and 12, and the prompt (sp = 8) covers exactly 2 of the 4 blocks.
+PS4 = 4
+MB4 = RC.seq_len // PS4
+N_PAGES = RC.batch * MB4 + 1  # page 0 reserved as garbage
+POISON = 1.0e4  # finite, loud; inf/nan would break the 0-weight argument
+
+# Fully-mapped tables: a deliberate non-identity page assignment.
+FULL_BT = np.array([[3, 1, 4, 2], [7, 5, 8, 6]], np.int32)
+
+
+@pytest.fixture(autouse=True)
+def ref_kernels(monkeypatch):
+    """Run the model on the pure-jnp kernel oracles (forward-only tests)."""
+    monkeypatch.setattr(model, "layernorm", ref.layernorm_ref)
+    monkeypatch.setattr(model, "flash_attention", ref.attention_ref)
+    monkeypatch.setattr(model, "flash_attention_fwd", ref.attention_ref)
+    monkeypatch.setattr(model, "flash_attention_padded_fwd", ref.attention_padded_ref)
+    monkeypatch.setattr(model, "decode_attention", ref.decode_attention_ref)
+    monkeypatch.setattr(model, "decode_attention_pb", ref.decode_attention_pb_ref)
+    monkeypatch.setattr(model, "decode_attention_pbs", ref.decode_attention_pbs_ref)
+    monkeypatch.setattr(model, "decode_attention_paged", ref.decode_attention_paged_ref)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(RC.actor, "lm", jnp.int32(0))
+
+
+def poisoned_caches():
+    """Zero page pools with garbage page 0 poisoned (finite, large)."""
+    a = RC.actor
+    shape = (a.n_layers, a.n_heads, N_PAGES * PS4, a.d_head)
+    kc = np.zeros(shape, np.float32)
+    kc[:, :, :PS4, :] = POISON
+    return jnp.asarray(kc), jnp.asarray(kc.copy())
+
+
+def live_blocks(pos):
+    """Blocks a row at logical position `pos` has really written: the rust
+    allocator maps exactly these and parks the tail on page 0."""
+    return (pos + PS4) // PS4  # == ceil((pos + 1) / PS4)
+
+
+def lazy_row(full_row, pos):
+    n = live_blocks(pos)
+    out = np.zeros_like(full_row)
+    out[:n] = full_row[:n]
+    return out
+
+
+def sample_prompts(seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (RC.batch, RC.prompt_len), 0, RC.actor.vocab
+    ).astype(jnp.int32)
+
+
+def right_pad(row, sp):
+    L = row.shape[1]
+    return jnp.concatenate([row, jnp.full((1, sp - L), PAD, jnp.int32)], axis=1)
+
+
+def scatter_pool(contig, bt, poison_page0=True):
+    """Contiguous [b*h, smax, dh] -> poisoned [h, N_PAGES*PS4, dh] pool."""
+    b, mb = bt.shape
+    bh, smax, dh = contig.shape
+    h = bh // b
+    assert smax == mb * PS4
+    pool = np.zeros((h, N_PAGES * PS4, dh), np.float32)
+    if poison_page0:
+        pool[:, :PS4] = POISON
+    c = np.asarray(contig).reshape(b, h, smax, dh)
+    for s in range(b):
+        for blk in range(mb):
+            page = int(bt[s, blk])
+            pool[:, page * PS4 : (page + 1) * PS4] = c[s, :, blk * PS4 : (blk + 1) * PS4]
+    return jnp.asarray(pool)
+
+
+# ---------------------------------------------------------------------------
+# Oracle-level: at EVERY position, a table whose dead tail points at the
+# poisoned garbage page is bit-identical to the fully-mapped table.
+# ---------------------------------------------------------------------------
+
+
+def test_dead_tail_table_matches_full_table_at_every_pos():
+    a = RC.actor
+    bh = RC.batch * a.n_heads
+    smax = MB4 * PS4
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (bh, a.d_head), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, smax, a.d_head))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, smax, a.d_head))
+    kp, vp = scatter_pool(k, FULL_BT), scatter_pool(v, FULL_BT)
+
+    for p in range(smax):
+        pos = jnp.full((bh,), p, jnp.int32)
+        lazy_bt = np.stack([lazy_row(FULL_BT[s], p) for s in range(RC.batch)])
+        out_lazy = ref.decode_attention_paged_ref(q, kp, vp, pos, jnp.asarray(lazy_bt), PS4)
+        out_full = ref.decode_attention_paged_ref(q, kp, vp, pos, jnp.asarray(FULL_BT), PS4)
+        np.testing.assert_array_equal(
+            np.asarray(out_lazy), np.asarray(out_full), err_msg=f"pos {p}"
+        )
+        # And both equal the contiguous oracle — the tail truly never leaks.
+        want = ref.decode_attention_pb_ref(q, k, v, pos)
+        np.testing.assert_array_equal(np.asarray(out_full), np.asarray(want))
+
+
+def test_mixed_depth_rows_grow_independently():
+    """Rows at different depths carry different live-block counts in ONE
+    batched call — the per-row mask keeps each row's dead tail inert."""
+    a = RC.actor
+    bh = RC.batch * a.n_heads
+    smax = MB4 * PS4
+    key = jax.random.PRNGKey(12)
+    q = jax.random.normal(key, (bh, a.d_head), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, smax, a.d_head))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, smax, a.d_head))
+    kp, vp = scatter_pool(k, FULL_BT), scatter_pool(v, FULL_BT)
+
+    slot_pos = [2, smax - 3]  # 1 live block vs 4 live blocks
+    pos = jnp.asarray(np.repeat(slot_pos, a.n_heads).astype(np.int32))
+    lazy_bt = np.stack([lazy_row(FULL_BT[s], slot_pos[s]) for s in range(RC.batch)])
+    out_lazy = ref.decode_attention_paged_ref(q, kp, vp, pos, jnp.asarray(lazy_bt), PS4)
+    out_full = ref.decode_attention_paged_ref(q, kp, vp, pos, jnp.asarray(FULL_BT), PS4)
+    np.testing.assert_array_equal(np.asarray(out_lazy), np.asarray(out_full))
+
+
+# ---------------------------------------------------------------------------
+# Model-level: the full admit -> greedy-decode chain with tables grown one
+# page per boundary crossing is bit-identical to fully-mapped tables.
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_growth_chain_bit_matches_full_tables(params):
+    """Both slots admitted full-length, then greedily decoded to the window
+    edge. The lazy run starts with only the prompt's 2 blocks mapped and
+    maps block `pos // PS4` right before the step that writes into it —
+    exactly the rust `reserve_rows`-before-dispatch discipline. Every
+    logits row must match the fully-mapped run BIT-EXACTLY."""
+    a, sp = RC.actor, RC.prompt_len
+    prompts = sample_prompts(21)
+    full_bt = jnp.asarray(FULL_BT)
+    lazy_bt = np.stack([lazy_row(FULL_BT[s], sp - 1) for s in range(RC.batch)])
+    assert live_blocks(sp - 1) == 2  # prompt covers half the window
+
+    kcf, vcf = poisoned_caches()
+    kcl, vcl = poisoned_caches()
+    full_logits, lazy_logits = [], []
+    for slot in range(RC.batch):
+        lf, kcf, vcf = model.prefill_slot_paged(
+            a, params, kcf, vcf, prompts[slot : slot + 1],
+            full_bt[slot : slot + 1], jnp.array([sp - 1], jnp.int32), PS4,
+        )
+        ll, kcl, vcl = model.prefill_slot_paged(
+            a, params, kcl, vcl, prompts[slot : slot + 1],
+            jnp.asarray(lazy_bt[slot : slot + 1]), jnp.array([sp - 1], jnp.int32), PS4,
+        )
+        np.testing.assert_array_equal(np.asarray(ll[0]), np.asarray(lf[0]))
+        full_logits.append(lf[0])
+        lazy_logits.append(ll[0])
+
+    pos = [sp, sp]
+    for step in range(RC.gen_len - 1):
+        toks = jnp.array(
+            [int(jnp.argmax(full_logits[s])) for s in range(RC.batch)], jnp.int32
+        )
+        posv = jnp.array(pos, jnp.int32)
+        # Grow: map the block the coming write needs (rust reserve_rows).
+        for s in range(RC.batch):
+            blk = pos[s] // PS4
+            if lazy_bt[s, blk] == 0:
+                lazy_bt[s, blk] = FULL_BT[s, blk]
+        lf, kcf, vcf = model.decode_slots_paged(
+            a, params, kcf, vcf, toks, posv, full_bt, PS4
+        )
+        ll, kcl, vcl = model.decode_slots_paged(
+            a, params, kcl, vcl, toks, posv, jnp.asarray(lazy_bt), PS4
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ll), np.asarray(lf), err_msg=f"step {step}"
+        )
+        full_logits = [lf[s] for s in range(RC.batch)]
+        pos = [p + 1 for p in pos]
+
+    assert all(int(b) != 0 for b in lazy_bt.flatten())  # grew to full window
+
+
+def test_lazy_short_prompt_admission_pads_into_page_zero(params):
+    """A right-padded short prompt (L = 3 < one page) admitted with ONLY
+    `ceil(L / PS4) = 1` block mapped: the padding tail's K/V writes land in
+    garbage page 0, and decode grows the table through fresh pages whose
+    pristine contents differ from the full-table run's padding garbage —
+    both differences sit strictly above `pos`, so every emitted logits row
+    still matches the fully-mapped run BIT-EXACTLY."""
+    a, sp, L = RC.actor, RC.prompt_len, 3
+    assert live_blocks(L - 1) == 1
+    prompt = right_pad(sample_prompts(22)[:1, :L], sp)
+    full_row = FULL_BT[0].copy()
+    lazy = lazy_row(full_row, L - 1)
+
+    kcf, vcf = poisoned_caches()
+    kcl, vcl = poisoned_caches()
+    last = jnp.array([L - 1], jnp.int32)
+    lf, kcf, vcf = model.prefill_slot_paged(
+        a, params, kcf, vcf, prompt, jnp.asarray(full_row[None]), last, PS4
+    )
+    ll, kcl, vcl = model.prefill_slot_paged(
+        a, params, kcl, vcl, prompt, jnp.asarray(lazy[None]), last, PS4
+    )
+    np.testing.assert_array_equal(np.asarray(ll[0]), np.asarray(lf[0]))
+
+    parked = jnp.zeros((MB4,), jnp.int32)  # slot 1 inactive on page 0
+    pos = L
+    want, got = lf, ll
+    for step in range(RC.gen_len):
+        tok = int(jnp.argmax(want[0]))
+        blk = pos // PS4
+        if lazy[blk] == 0:
+            lazy[blk] = full_row[blk]
+        toks = jnp.array([tok, PAD], jnp.int32)
+        posv = jnp.array([pos, 0], jnp.int32)
+        want, kcf, vcf = model.decode_slots_paged(
+            a, params, kcf, vcf, toks, posv,
+            jnp.stack([jnp.asarray(full_row), parked]), PS4,
+        )
+        got, kcl, vcl = model.decode_slots_paged(
+            a, params, kcl, vcl, toks, posv,
+            jnp.stack([jnp.asarray(lazy), parked]), PS4,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got[0]), np.asarray(want[0]), err_msg=f"step {step}"
+        )
+        pos += 1
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel parity: the kernel's `idx <= pos` mask (not the oracle's)
+# is what the deployed artifact runs — same dead-tail guarantee, same bits.
+# Skips itself when the installed jax cannot execute pallas interpret mode.
+# ---------------------------------------------------------------------------
+
+
+def _pallas_interpret_works():
+    try:
+        from compile.kernels.attention import flash_attention_fwd
+
+        z = jnp.zeros((1, 8, 4), jnp.float32)
+        flash_attention_fwd(z, z, z)
+        return True
+    except Exception:
+        return False
+
+
+pallas_parity = pytest.mark.skipif(
+    not _pallas_interpret_works(),
+    reason="pallas interpret mode unavailable under the installed jax",
+)
+
+
+@pallas_parity
+@pytest.mark.parametrize("slot_pos", [[2, 13], [5, 9], [0, 15]])
+def test_paged_kernel_dead_tail_bit_matches_full_table(slot_pos):
+    """`decode_attention_paged` with poisoned-page-0 tails == fully-mapped
+    tables == the contiguous kernel, bit for bit, at mixed row depths."""
+    a = RC.actor
+    bh = RC.batch * a.n_heads
+    smax = MB4 * PS4
+    key = jax.random.PRNGKey(31)
+    q = jax.random.normal(key, (bh, a.d_head), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, smax, a.d_head))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, smax, a.d_head))
+    kp, vp = scatter_pool(k, FULL_BT), scatter_pool(v, FULL_BT)
+    pos = jnp.asarray(np.repeat(slot_pos, a.n_heads).astype(np.int32))
+    lazy_bt = np.stack([lazy_row(FULL_BT[s], slot_pos[s]) for s in range(RC.batch)])
+
+    out_lazy = decode_attention_paged(q, kp, vp, pos, jnp.asarray(lazy_bt), PS4)
+    out_full = decode_attention_paged(q, kp, vp, pos, jnp.asarray(FULL_BT), PS4)
+    want = decode_attention_pb(q, k, v, pos)
+    np.testing.assert_array_equal(np.asarray(out_lazy), np.asarray(out_full))
+    np.testing.assert_array_equal(np.asarray(out_lazy), np.asarray(want))

@@ -21,7 +21,13 @@
 //! `continuous_mixed` phase replaying the trace with heterogeneous TRUE
 //! prompt lengths through the left-padded admission path, reporting the
 //! padded-token overhead fraction alongside tok/s and latency;
-//! `scripts/verify.sh` runs the `--smoke` mode. With `--chaos`, a final
+//! `scripts/verify.sh` runs the `--smoke` mode. When the artifacts carry
+//! the `lazy_kv` capability, a `continuous_oversub` phase replays the
+//! prefix-heavy traffic with the page pool capped to ~2/3 of the full
+//! per-slot reservation (`limit_kv_pages`) and reports peak occupancy,
+//! the LRU prefix-eviction steal rate, and the preemption/requeue
+//! counters — asserting the capped run's greedy completions carry
+//! exactly the uncapped run's tokens. With `--chaos`, a final
 //! phase replays the trace through a fault-injecting engine wrapper (~5%
 //! transient faults + slow ticks) and reports goodput under faults, the
 //! scheduler's retry/requeue counters, and the p95 latency the recovery
@@ -42,7 +48,8 @@ use dschat::util::rng::Rng;
 
 /// `BENCH_serve.json` format version — bump when fields change shape, so
 /// downstream trajectory tooling can detect the break.
-const SCHEMA_VERSION: u32 = 1;
+/// v2: `continuous_oversub` phase + `oversub_*` pool-pressure fields.
+const SCHEMA_VERSION: u32 = 2;
 
 /// Latency-histogram blocks for one phase, from that phase's private
 /// telemetry handle (each phase installs a fresh one, so the percentiles
@@ -591,6 +598,93 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
+    // Oversubscribed phase: the prefix-heavy traffic again, but with the
+    // page allocator capped to ~2/3 of the full per-slot reservation
+    // (`limit_kv_pages`, gated on the `lazy_kv` artifact capability).
+    // Admissions draw only prompt pages, decode grows tables on demand,
+    // registered prefixes are LRU-evicted under pressure, and mid-decode
+    // exhaustion preempts + requeues — so the phase reports pool
+    // occupancy, the steal rate, and the preemption counters, and its
+    // greedy completions must still carry exactly the tokens the uncapped
+    // prefix phase produced.
+    let lazy_ready = paged_ready && sched.engine.manifest().has_lazy_kv();
+    let cont_oversub = if lazy_ready {
+        // Regenerate the prefix phase's traffic bit-identically (same RNG
+        // seed, same construction) so token counts are comparable.
+        let share = (sp / page_size) * page_size;
+        let mut prng = Rng::new(4242);
+        let system: Vec<i32> = task.sample_prompt(&mut prng).tokens[..share.min(sp)].to_vec();
+        let prefixed: Vec<Prompt> = (0..n_req)
+            .map(|_| {
+                let mut p = task.sample_prompt(&mut prng);
+                p.tokens[..system.len()].copy_from_slice(&system);
+                p
+            })
+            .collect();
+        let prefix_lens = vec![share; n_req];
+        let blocks = s / page_size;
+        let full = b * blocks;
+        let cap = (full * 2 / 3).max(blocks);
+        let mut phe = sched.into_engine();
+        phe.use_paged_serving(true)?;
+        // Preemption is a scheduling event here, not a failure: a large
+        // retry budget guarantees every preempted request requeues until
+        // it completes (greedy replay is deterministic, so the tokens
+        // still match the uncapped run).
+        let policy = FaultPolicy {
+            max_retries: 100,
+            backoff_steps: 1,
+            deadline_steps: 0,
+            quarantine_after: 0,
+        };
+        let mut osched = Scheduler::with_policy(phe, policy)?;
+        osched.engine.limit_kv_pages(cap)?;
+        osched.set_telemetry(Telemetry::enabled_default());
+        let tel = osched.telemetry().clone();
+        let r = run_continuous(
+            "continuous_oversub",
+            &mut osched,
+            &prefixed,
+            &budgets,
+            &arrivals,
+            &prefix_lens,
+            &mut HostFullRow::new(greedy(), 0),
+        )?;
+        r.print();
+        let ost = osched.stats.clone();
+        let occ = osched.engine.kv_occupancy().unwrap_or_default();
+        let peak_occupancy = occ.peak_used_pages as f64 / cap.max(1) as f64;
+        let steal_rate = occ.pages_stolen as f64 / ost.prefills.max(1) as f64;
+        println!(
+            "continuous_oversub: pool {cap}/{full} pages ({:.0}%), peak occupancy {:.0}%, \
+             {} preemptions ({} requeued, {} retired preempted), {} admission deferrals, \
+             {} prefix evictions stealing {} pages ({:.3} pages/admission)",
+            100.0 * cap as f64 / full as f64,
+            100.0 * peak_occupancy,
+            ost.preemptions,
+            ost.requeues,
+            ost.retired_preempted,
+            ost.admission_deferrals,
+            occ.prefix_evictions,
+            occ.pages_stolen,
+            steal_rate,
+        );
+        if let Some((pr, ..)) = &cont_prefix {
+            assert_eq!(
+                r.tokens, pr.tokens,
+                "oversubscribed greedy completions diverged from the uncapped prefix phase"
+            );
+        }
+        // Hand the engine back on the arena layout for the chaos phase.
+        let mut bhe = osched.into_engine();
+        bhe.use_paged_serving(false)?;
+        sched = Scheduler::new(bhe)?;
+        Some((r, ost, occ, cap, full, tel))
+    } else {
+        println!("(artifacts lack the `lazy_kv` capability — oversubscribed phase skipped)");
+        None
+    };
+
     // Chaos phase (`--chaos`): the same trace through a fault-injecting
     // wrapper — ~5% transient prefill/decode faults + 5% slow ticks.
     // Goodput, retry/requeue counts, and the p95 latency the recovery
@@ -718,6 +812,29 @@ fn main() -> anyhow::Result<()> {
         ),
         None => String::new(),
     };
+    let oversub_json = match &cont_oversub {
+        Some((r, ost, occ, cap, full, tel)) => format!(
+            ",\n  \"continuous_oversub\": {},\n  \"oversub_pool_pages\": {cap},\n  \
+             \"oversub_full_reservation_pages\": {full},\n  \
+             \"oversub_pool_fraction\": {:.4},\n  \"oversub_peak_used_pages\": {},\n  \
+             \"oversub_peak_occupancy\": {:.4},\n  \"oversub_preemptions\": {},\n  \
+             \"oversub_requeues\": {},\n  \"oversub_retired_preempted\": {},\n  \
+             \"oversub_admission_deferrals\": {},\n  \"oversub_prefix_evictions\": {},\n  \
+             \"oversub_pages_stolen\": {},\n  \"oversub_steal_rate_per_admission\": {:.4}",
+            phase_json(r, tel),
+            *cap as f64 / (*full).max(1) as f64,
+            occ.peak_used_pages,
+            occ.peak_used_pages as f64 / (*cap).max(1) as f64,
+            ost.preemptions,
+            ost.requeues,
+            ost.retired_preempted,
+            ost.admission_deferrals,
+            occ.prefix_evictions,
+            occ.pages_stolen,
+            occ.pages_stolen as f64 / ost.prefills.max(1) as f64,
+        ),
+        None => String::new(),
+    };
     let chaos_json = match &chaos {
         Some((r, cst, inj, tel)) => format!(
             ",\n  \"chaos\": {},\n  \"chaos_injected_prefill_faults\": {},\n  \
@@ -744,7 +861,7 @@ fn main() -> anyhow::Result<()> {
          \"fixed_batch_t_gen_secs\": {t_gen:.6},\n  \"sample_k\": {sample_k},\n  \
          \"telemetry_overhead_ns_per_event_disabled\": {overhead_ns:.2},\n  \
          \"fixed_batch\": {},\n  \"continuous\": {},\n  \
-         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}{}{}{}\n  ,\n  \
+         \"slot_utilization\": {:.4},\n  \"decode_calls\": {}{}{}{}{}{}{}\n  ,\n  \
          \"speedup_tok_per_sec\": {:.3},\n  \"p95_latency_ratio\": {:.3}\n}}\n",
         phase_json(&fixed, &fixed_tel),
         phase_json(&cont, &host_tel),
@@ -754,6 +871,7 @@ fn main() -> anyhow::Result<()> {
         mixed_json,
         prefix_json,
         chunked_json,
+        oversub_json,
         chaos_json,
         cont.tok_per_sec() / fixed.tok_per_sec().max(1e-9),
         cont.pct(0.95) / fixed.pct(0.95).max(1e-9),

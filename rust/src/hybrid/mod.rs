@@ -74,6 +74,21 @@
 //! shared prefix ([`Admission::prefix_len`]) map the prefix's pages
 //! copy-on-write instead of recomputing them — identical traffic decodes
 //! bit-identically on either layout.
+//!
+//! When the artifacts additionally carry the `lazy_kv` capability, the
+//! pool is a true oversubscribed allocator: admissions draw only the
+//! pages covering the prompt, decode maps one page per boundary crossing
+//! ([`HybridEngine::kv_reserve_rows`], which the scheduler runs before
+//! every dispatch), dead block-table tails point at garbage page 0 (safe
+//! because every artifact read is masked by the live length — see
+//! `python/compile/kernels/decode.py`), and
+//! [`HybridEngine::limit_kv_pages`] may cap the allocator below
+//! `n_slots * blocks_per_slot`. Under pressure the ledger LRU-evicts
+//! registered prefixes whose pages only the registry still references;
+//! when even that cannot cover a reservation, the scheduler preempts the
+//! slot ([`FinishReason::Preempted`](crate::serving::FinishReason) after
+//! the retry budget) and requeues it — greedy replay is deterministic,
+//! so completions still match an uncapped run bit for bit.
 
 pub mod kv;
 pub mod memory;
@@ -316,6 +331,11 @@ impl HybridEngine {
             n_pages,
             free_pages,
             registered_prefixes,
+            usable_pages: if paged { ledger.usable_pages() } else { 0 },
+            peak_used_pages: if paged { ledger.peak_used_pages() } else { 0 },
+            prefix_evictions: ledger.evictions(),
+            pages_stolen: ledger.pages_stolen(),
+            hash_collisions: ledger.collisions(),
         })
     }
 
@@ -911,6 +931,41 @@ impl HybridEngine {
         self.paged_serving
     }
 
+    /// Run the live paged pool OVERSUBSCRIBED: cap the allocator at `n`
+    /// pages (below `n_slots * blocks_per_slot`) while the device buffers
+    /// keep their full physical extent. Requires the `lazy_kv` artifact
+    /// capability — oversubscription only works when admissions draw
+    /// prompt pages lazily and decode grows tables on demand — and an
+    /// idle pool (call right after [`HybridEngine::begin_serving`]).
+    pub fn limit_kv_pages(&mut self, n: usize) -> Result<()> {
+        self.arts.manifest.require_lazy_kv()?;
+        let Some(kv) = self.kv.as_mut() else {
+            bail!("limit_kv_pages: no live KV cache (call begin_serving first)");
+        };
+        kv.ledger.limit_pages(n)
+    }
+
+    /// Whether a paged admission of `prompt` (with `prefix_len` declared
+    /// shared) can draw its pages right now — free list plus evictable
+    /// prefixes. The scheduler defers admissions this rejects instead of
+    /// spending a prefill fault on them. Arena serving always admits.
+    pub fn kv_can_admit(&self, prompt: &[i32], prefix_len: usize) -> bool {
+        match &self.kv {
+            Some(kv) => kv.can_admit(prompt, prefix_len),
+            None => true,
+        }
+    }
+
+    /// Grow `slot`'s block table to cover its next `n` decode writes
+    /// (see [`kv::PageLedger::reserve_rows`]). `Ok(false)` = pool
+    /// exhausted even after LRU eviction: preempt the slot.
+    pub fn kv_reserve_rows(&mut self, slot: usize, n: usize) -> Result<bool> {
+        let Some(kv) = self.kv.as_mut() else {
+            bail!("kv_reserve_rows: no live KV cache");
+        };
+        kv.reserve_rows(slot, n)
+    }
+
     /// Enter serving mode: flip to inference and install a zeroed KV cache
     /// with every slot free. The continuous-batching scheduler
     /// (`crate::serving`) then admits requests one slot at a time via
@@ -1104,8 +1159,15 @@ impl HybridEngine {
         let prompt_buf = self.engine.upload_i32(&padded, &[1, sp])?;
         let kv = self.kv.as_ref().unwrap();
         let table = kv.block_table(slot).expect("alloc_shared left no table");
-        let mb = table.len();
-        let bt: Vec<i32> = table.iter().map(|&p| p as i32).collect();
+        // The artifact compiles against the full [1, blocks_per_slot]
+        // table; a lazy table (prompt pages only) is zero-padded, so the
+        // PAD tail's scatter rows land on garbage page 0 — the same
+        // storage dead decode rows write, masked out of every read.
+        let mb = kv.ledger.blocks_per_slot();
+        let mut bt = vec![0i32; mb];
+        for (j, &p) in table.iter().enumerate() {
+            bt[j] = p as i32;
+        }
         let bt_buf = self.engine.upload_i32(&bt, &[1, mb])?;
         let last_buf = self.engine.upload_i32(&[l as i32 - 1], &[1])?;
         let rng_bufs = if adm.traffic == TrafficClass::DeviceCategorical {
@@ -1177,6 +1239,26 @@ impl HybridEngine {
             bail!("decode_slots requires serving mode (call begin_serving first)");
         }
         let t0 = Instant::now();
+        if paged {
+            // Lazy growth: the artifact writes the fed token's K/V row
+            // through the table as uploaded, so every active slot's table
+            // must cover its write row BEFORE dispatch. The scheduler
+            // reserves (and preempts on exhaustion) via reserve_decode;
+            // for direct callers this draw is the growth path, and an
+            // exhausted pool is a hard error here — there is no requeue
+            // below the scheduler.
+            let kv = self.kv.as_mut().unwrap();
+            for slot in 0..b {
+                if active[slot] && !kv.reserve_rows(slot, 1)? {
+                    bail!(
+                        "decode_slots: KV pool exhausted growing slot {slot} \
+                         ({} free of {} usable pages) — preempt or retire a slot first",
+                        kv.ledger.free_pages(),
+                        kv.ledger.usable_pages()
+                    );
+                }
+            }
+        }
         let base = if paged { "decode_slots_paged" } else { "decode_slots" };
         let (art, n_out) = self.gen_artifact(base, traffic)?;
         let name = art.name.clone();
@@ -1299,16 +1381,41 @@ impl HybridEngine {
             bail!("decode_slots_chunk requires serving mode (call begin_serving first)");
         }
         let t0 = Instant::now();
+        // Lazy growth: a chunk can write up to min(n, quota) fresh K/V
+        // rows per live slot (the EOS/quota latch turns the rest into
+        // idempotent re-writes of the last accepted row), and the artifact
+        // scatters through the table as uploaded — so the worst case must
+        // be reserved BEFORE dispatch. The scheduler preempts on
+        // exhaustion via reserve_decode; for direct callers an exhausted
+        // pool is a hard error here.
+        {
+            let kv = self.kv.as_mut().unwrap();
+            for slot in 0..b {
+                if !active[slot] {
+                    continue;
+                }
+                let worst = n.min(quota[slot].max(0) as usize).max(1);
+                if !kv.reserve_rows(slot, worst)? {
+                    bail!(
+                        "decode_slots_chunk: KV pool exhausted growing slot {slot} by \
+                         {worst} rows ({} free of {} usable pages) — preempt or retire \
+                         a slot first",
+                        kv.ledger.free_pages(),
+                        kv.ledger.usable_pages()
+                    );
+                }
+            }
+        }
         let art = self.arts.get(&format!("decode_chunk{n}"))?;
         let name = art.name.clone();
         let tok_buf = self.engine.upload_i32(toks, &[b])?;
         let pos_buf = self.engine.upload_i32(pos, &[b])?;
         let kv = self.kv.as_ref().unwrap();
         // Flat [b, blocks_per_slot] block tables, dead rows on the garbage
-        // page — same contract as the stepwise paged decode. Live slots
-        // hold their FULL page allotment from admission time (alloc_shared
-        // draws every page up front), so a chunk never needs a mid-flight
-        // page grab.
+        // page — same contract as the stepwise paged decode. A lazy table
+        // is zero-padded to the full width: blocks past a slot's
+        // reservation alias garbage page 0, which the kernels' live-length
+        // mask (`idx <= pos`) keeps out of every read.
         let mb = kv.ledger.blocks_per_slot();
         let mut bt = vec![0i32; b * mb];
         for slot in 0..b {

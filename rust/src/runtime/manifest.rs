@@ -69,6 +69,16 @@ pub struct Manifest {
     /// mapped into several tables at once. False for artifact sets built
     /// before the capability existed — those only support the arena cache.
     pub paged_kv: bool,
+    /// True when the paged artifacts were compiled against the LAZY
+    /// block-table contract: every paged kernel masks gathered rows by the
+    /// live length (`idx <= pos`), so a table whose tail still points at
+    /// garbage page 0 reads bit-identically to a fully-populated one. The
+    /// runtime may then draw pages on demand (prompt coverage at admission,
+    /// one page per boundary crossing during decode) and oversubscribe the
+    /// pool via `limit_kv_pages`. False for artifact sets built before the
+    /// capability was stamped — their kernels carry the same mask, but the
+    /// contract was never parity-tested, so oversubscription stays gated.
+    pub lazy_kv: bool,
     /// Tokens per KV page of the paged serving path (0 when `paged_kv` is
     /// false).
     pub page_size: usize,
@@ -192,6 +202,7 @@ impl Manifest {
                 .and_then(|v| v.as_bool())
                 .unwrap_or(false),
             paged_kv: cfg.get("paged_kv").and_then(|v| v.as_bool()).unwrap_or(false),
+            lazy_kv: cfg.get("lazy_kv").and_then(|v| v.as_bool()).unwrap_or(false),
             page_size: cfg.get("page_size").and_then(|v| v.as_usize()).unwrap_or(0),
             kv_pages: cfg.get("kv_pages").and_then(|v| v.as_usize()).unwrap_or(0),
             device_rng: cfg.get("device_rng").and_then(|v| v.as_bool()).unwrap_or(false),
@@ -248,6 +259,30 @@ impl Manifest {
                 "artifacts ({}) predate the block-paged KV cache: the manifest lacks the \
                  `paged_kv` capability (or the `*_paged` serving entries), so paged serving \
                  and shared-prefix reuse are unavailable — re-run `make artifacts`",
+                self.run,
+            );
+        }
+        Ok(())
+    }
+
+    /// True when the paged artifacts are stamped with the lazy block-table
+    /// contract (`lazy_kv` capability on top of paged serving) — the gate
+    /// for on-demand page growth and pool oversubscription.
+    pub fn has_lazy_kv(&self) -> bool {
+        self.lazy_kv && self.has_paged_serving()
+    }
+
+    /// Bail with a rebuild hint unless the artifact set is stamped with the
+    /// lazy block-table contract. Pre-lazy paged artifacts carry the same
+    /// live-length mask but were never parity-tested against garbage-tail
+    /// tables, so oversubscription (`limit_kv_pages`) stays gated on the
+    /// stamp.
+    pub fn require_lazy_kv(&self) -> Result<()> {
+        if !self.has_lazy_kv() {
+            bail!(
+                "artifacts ({}) predate the lazy KV block-table contract: the manifest lacks \
+                 the `lazy_kv` capability, so on-demand page growth and pool oversubscription \
+                 are unavailable — re-run `make artifacts`",
                 self.run,
             );
         }

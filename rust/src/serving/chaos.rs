@@ -198,6 +198,18 @@ impl<E: SlotEngine> SlotEngine for ChaosEngine<E> {
         self.inner.decode_slots_chunk(batch)
     }
 
+    fn can_admit(&self, prompt: &[i32], prefix_len: usize) -> bool {
+        self.inner.can_admit(prompt, prefix_len)
+    }
+
+    fn reserve_decode(&mut self, slot: usize, n: usize) -> Result<bool> {
+        // Pass-through, not an injection channel: preemption is the
+        // LEDGER's capacity signal, not a fault — chaos perturbs the
+        // engine calls around it and the requeue path gets exercised by
+        // whatever pressure the inner pool is really under.
+        self.inner.reserve_decode(slot, n)
+    }
+
     fn release_slot(&mut self, slot: usize) -> Result<()> {
         if !self.live[slot] {
             // The scheduler's best-effort release after an injected

@@ -286,8 +286,15 @@ pub struct ChunkBatch<'a> {
 /// scheduler's token walk and the engine's KV-ledger advance — both
 /// computed with this function over the same `[n, b]` row-major ids —
 /// agree by construction. Tokens past the boundary are frozen filler and
-/// must never be read.
+/// must never be read. A `quota` of 0 consumes NOTHING: the row had no
+/// budget to emit even one token, so every id in it is filler (the
+/// scheduler never dispatches a live row in that state — live slots
+/// always hold `quota >= 1` — but a zero-quota row must not read frozen
+/// filler as if it were real).
 pub fn chunk_consumed(ids: &[i32], b: usize, slot: usize, n: usize, quota: usize) -> usize {
+    if quota == 0 {
+        return 0;
+    }
     let mut consumed = 0;
     for j in 0..n {
         consumed += 1;
@@ -382,6 +389,28 @@ pub trait SlotEngine {
         let _ = batch;
         bail!("engine does not support fused decode chunks (no decode_chunk artifacts)")
     }
+    /// Whether the engine's KV pool can cover admitting `prompt` right now
+    /// (free pages plus prefixes evictable under LRU; a declared shared
+    /// prefix that hits the registry reduces the draw). Engines without an
+    /// oversubscribable pool always admit. The scheduler DEFERS an
+    /// admission this predicate refuses while live sequences still hold
+    /// pages — retiring them frees capacity — and admits anyway on an
+    /// otherwise-empty engine so an undersized pool fails loudly instead
+    /// of deadlocking the queue.
+    fn can_admit(&self, prompt: &[i32], prefix_len: usize) -> bool {
+        let _ = (prompt, prefix_len);
+        true
+    }
+    /// Reserve KV coverage for `n` more decode rows on `slot` BEFORE the
+    /// decode dispatch writes them (lazy paged pools draw pages on demand;
+    /// the write-before-advance contract needs the pages mapped up front).
+    /// `Ok(false)` means the pool is exhausted and the slot must be
+    /// PREEMPTED — requeued for recompute — rather than dispatched.
+    /// Engines without lazy page growth always succeed.
+    fn reserve_decode(&mut self, slot: usize, n: usize) -> Result<bool> {
+        let _ = (slot, n);
+        Ok(true)
+    }
     /// Retire a finished sequence, freeing its slot for the next admission.
     fn release_slot(&mut self, slot: usize) -> Result<()>;
     /// Accounting hook: `n` tokens were sampled this step.
@@ -440,6 +469,14 @@ impl<E: SlotEngine> SlotEngine for &mut E {
 
     fn decode_slots_chunk(&mut self, batch: &ChunkBatch) -> Result<Vec<i32>> {
         (**self).decode_slots_chunk(batch)
+    }
+
+    fn can_admit(&self, prompt: &[i32], prefix_len: usize) -> bool {
+        (**self).can_admit(prompt, prefix_len)
+    }
+
+    fn reserve_decode(&mut self, slot: usize, n: usize) -> Result<bool> {
+        (**self).reserve_decode(slot, n)
     }
 
     fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -504,6 +541,14 @@ impl SlotEngine for HybridEngine {
 
     fn decode_slots_chunk(&mut self, batch: &ChunkBatch) -> Result<Vec<i32>> {
         HybridEngine::decode_slots_chunk(self, batch)
+    }
+
+    fn can_admit(&self, prompt: &[i32], prefix_len: usize) -> bool {
+        HybridEngine::kv_can_admit(self, prompt, prefix_len)
+    }
+
+    fn reserve_decode(&mut self, slot: usize, n: usize) -> Result<bool> {
+        HybridEngine::kv_reserve_rows(self, slot, n)
     }
 
     fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -602,6 +647,12 @@ pub enum FinishReason {
     /// The request hit [`FaultPolicy::deadline_steps`] and was retired to
     /// free its slot; tokens generated before the deadline are kept.
     Deadline,
+    /// Mid-decode KV-pool exhaustion preempted the sequence more than
+    /// [`FaultPolicy::max_retries`] times; `preemptions` is how many times
+    /// it lost its pages. Tokens generated before the final preemption are
+    /// kept (each earlier preemption requeued the request for a
+    /// from-scratch recompute instead).
+    Preempted { preemptions: u32 },
 }
 
 /// A finished sequence handed back by [`Scheduler::step`].
@@ -657,6 +708,15 @@ struct Seq {
     pad: usize,
     generated: usize,
     max_new: usize,
+    /// The request's declared shared-prefix length (kept so a PREEMPTED
+    /// sequence can be requeued as the request it came from).
+    prefix_len: usize,
+    /// The request's explicit seed (requeue bookkeeping, like
+    /// `prefix_len`); the live stream state is `rng`/`device_seed`.
+    seed: Option<u64>,
+    /// Faulted admissions + preemptions this request has absorbed (the
+    /// shared [`FaultPolicy::max_retries`] budget).
+    attempts: u32,
     /// Pending sampling view predicting the next token (from the
     /// admission prefill or the last fused decode).
     pending: PendingRow,
@@ -724,6 +784,17 @@ pub struct SchedStats {
     pub retired_failed: u64,
     /// Sequences retired at the per-request deadline.
     pub retired_deadline: u64,
+    /// Mid-decode preemptions: a live slot could not draw its next KV
+    /// page and was requeued for recompute (or retired past the retry
+    /// budget). Counts every preemption, not every preempted request.
+    pub preemptions: u64,
+    /// Sequences retired as [`FinishReason::Preempted`] after preemptions
+    /// exhausted the shared retry budget.
+    pub retired_preempted: u64,
+    /// Admissions deferred at the step boundary because the KV pool could
+    /// not cover the prompt (the request stayed queued; retried once live
+    /// sequences release pages).
+    pub admission_deferrals: u64,
     /// Slots removed from the free list after repeated prefill faults.
     pub quarantined: u64,
     /// Prompt tokens served from shared-prefix cache hits instead of
@@ -1078,6 +1149,22 @@ impl<E: SlotEngine> Scheduler<E> {
             else {
                 break;
             };
+            // KV-capacity gate (lazy paged pools only): a prompt the pool
+            // cannot cover would fault the prefill and burn a retry, so
+            // defer it — leave the entry queued, in order, and stop the
+            // admission pass (younger requests must not jump a deferred
+            // head-of-line). Only defer while live sequences hold pages to
+            // free; on an otherwise-empty engine admit anyway, so an
+            // undersized pool fails loudly instead of deadlocking.
+            {
+                let cand = &self.queue[qidx];
+                if !self.engine.can_admit(&cand.req.prompt, cand.req.prefix_len)
+                    && self.slots.iter().any(|s| s.is_some())
+                {
+                    self.stats.admission_deferrals += 1;
+                    break;
+                }
+            }
             let Some(q) = self.queue.remove(qidx) else {
                 break;
             };
@@ -1148,6 +1235,9 @@ impl<E: SlotEngine> Scheduler<E> {
                         tokens: q.req.prompt,
                         generated: 0,
                         max_new,
+                        prefix_len: q.req.prefix_len,
+                        seed: q.req.seed,
+                        attempts: q.attempts,
                         pending: outcome.pending,
                         // Device-categorical draws run on device keyed by
                         // `device_seed`; the host stream stays unused.
@@ -1334,9 +1424,11 @@ impl<E: SlotEngine> Scheduler<E> {
                 match finish {
                     FinishReason::Eos => self.stats.retired_eos += 1,
                     FinishReason::Length => self.stats.retired_length += 1,
-                    // Failed/Deadline retirements never come through the
-                    // sampling path.
-                    FinishReason::Failed { .. } | FinishReason::Deadline => {}
+                    // Failed/Deadline/Preempted retirements never come
+                    // through the sampling path.
+                    FinishReason::Failed { .. }
+                    | FinishReason::Deadline
+                    | FinishReason::Preempted { .. } => {}
                 }
                 retired += 1;
                 self.tel.end(
@@ -1348,6 +1440,7 @@ impl<E: SlotEngine> Scheduler<E> {
                         FinishReason::Length => telemetry::FINISH_LENGTH,
                         FinishReason::Failed { .. } => telemetry::FINISH_FAILED,
                         FinishReason::Deadline => telemetry::FINISH_DEADLINE,
+                        FinishReason::Preempted { .. } => telemetry::FINISH_PREEMPTED,
                     },
                 );
                 sink.complete(Completion {
@@ -1365,7 +1458,29 @@ impl<E: SlotEngine> Scheduler<E> {
         self.stats.tokens_sampled += sampled;
         self.engine.note_generated(sampled);
 
-        // 3. One fused decode over every still-live slot, each at its own
+        // 3a. KV reservation: every live slot must cover its upcoming
+        // decode rows BEFORE the dispatch writes them (the lazy paged
+        // pool's write-before-advance contract). A slot the pool cannot
+        // grow — even after LRU eviction — is PREEMPTED: its pages return
+        // to the pool and the request requeues for a from-scratch
+        // recompute through the same backoff path a prefill fault takes
+        // (deterministic per-request streams make the replay
+        // bit-identical). Reservation runs in slot index order, so the
+        // victim set is deterministic. Engines without lazy growth keep
+        // the default always-true reserve and never preempt.
+        for slot in 0..b {
+            let need = match &self.slots[slot] {
+                // Chunked ticks write up to min(N, quota) rows; stepwise
+                // writes exactly 1. Live slots always hold quota >= 1.
+                Some(seq) => self.chunk.min(seq.max_new - seq.generated).max(1),
+                None => continue,
+            };
+            if !self.engine.reserve_decode(slot, need)? {
+                retired += self.preempt_slot(slot, sink)?;
+            }
+        }
+
+        // 3b. One fused decode over every still-live slot, each at its own
         // position: the fed token's cache row is `pad + index`, and the
         // slot's valid start (= pad) rides along so the artifact masks the
         // left-padding out of attention. Free slots ride along as dead
@@ -1468,6 +1583,77 @@ impl<E: SlotEngine> Scheduler<E> {
 
         self.step_idx += self.chunk as u64;
         Ok(retired)
+    }
+
+    /// KV-pool exhaustion took `slot`'s next page: release the sequence's
+    /// pages and requeue the request it came from for a from-scratch
+    /// recompute (generated tokens are DISCARDED — per-request streams
+    /// replay them bit-identically on readmission), mirroring the
+    /// prefill-fault requeue: the aborted request span closes, a
+    /// `preempt` instant marks the cause, and the queued span re-opens
+    /// with backoff. Past the shared [`FaultPolicy::max_retries`] budget
+    /// the request retires as [`FinishReason::Preempted`] with whatever
+    /// it generated before losing its pages. Returns how many retired
+    /// (0 or 1).
+    fn preempt_slot(&mut self, slot: usize, sink: &mut dyn CompletionSink) -> Result<usize> {
+        let Some(seq) = self.slots[slot].take() else {
+            bail!(
+                "scheduler invariant violated: slot {slot} vanished at preemption (step {})",
+                self.step_idx
+            );
+        };
+        self.engine.release_slot(slot)?;
+        self.stats.preemptions += 1;
+        let attempts = seq.attempts + 1;
+        if attempts > self.policy.max_retries {
+            self.stats.completed += 1;
+            self.stats.retired_preempted += 1;
+            self.tel.end(
+                telemetry::slot_tid(slot),
+                "request",
+                seq.id,
+                telemetry::FINISH_PREEMPTED,
+            );
+            sink.complete(Completion {
+                id: seq.id,
+                slot,
+                prompt_len: seq.prompt_len,
+                generated: seq.generated,
+                finish: FinishReason::Preempted { preemptions: attempts },
+                queued_steps: seq.admitted_step - seq.enqueued_step,
+                decode_steps: self.step_idx + 1 - seq.admitted_step,
+                tokens: seq.tokens,
+            });
+            return Ok(1);
+        }
+        self.stats.requeues += 1;
+        if self.tel.is_enabled() {
+            self.tel.end(
+                telemetry::slot_tid(slot),
+                "request",
+                seq.id,
+                telemetry::FINISH_ABORTED,
+            );
+            self.tel
+                .instant(telemetry::TID_QUEUE, "preempt", seq.id, attempts as i64);
+            self.tel
+                .begin(telemetry::TID_QUEUE, "queued", seq.id, attempts as i64);
+        }
+        self.queue.push_back(Queued {
+            req: Request {
+                id: seq.id,
+                prompt: seq.tokens[..seq.prompt_len].to_vec(),
+                max_new: seq.max_new,
+                prefix_len: seq.prefix_len,
+                seed: seq.seed,
+            },
+            enqueued_step: seq.enqueued_step,
+            not_before: self.step_idx + self.policy.backoff_steps.max(1),
+            attempts,
+            t_submit_us: seq.t_submit_us,
+        });
+        self.stats.peak_queue_depth = self.stats.peak_queue_depth.max(self.queue.len());
+        Ok(0)
     }
 
     /// Retry budget exhausted: retire every live sequence with the tokens
@@ -1577,6 +1763,18 @@ impl<E: SlotEngine> Scheduler<E> {
                     };
                     let quota = self.step_quota[slot].max(0) as usize;
                     let consumed = chunk_consumed(&ids, b, slot, n, quota);
+                    if consumed == 0 {
+                        // Live slots always enter a chunk with quota >= 1
+                        // (generated < max_new, or phase 2 retired them) —
+                        // a zero-consumption row here means the walk was
+                        // about to read frozen filler as real tokens.
+                        bail!(
+                            "scheduler invariant violated: live slot {slot} (request {}) \
+                             entered a chunk with zero quota at step {}",
+                            seq.id,
+                            self.step_idx
+                        );
+                    }
                     let was_generated = seq.generated;
                     for j in 0..consumed - 1 {
                         seq.tokens.push(ids[j * b + slot]);
@@ -1692,6 +1890,12 @@ mod tests {
         /// like the real `decode_*_rng` artifacts — so stream-determinism
         /// across admission orderings and chunk sizes is observable.
         device_rng: bool,
+        /// Per slot: upcoming `reserve_decode` calls to refuse (scripted
+        /// KV-pool exhaustion; the preemption-path tests' pressure knob).
+        reserve_denials: Vec<u32>,
+        /// `can_admit` refuses while this many slots are live (scripted
+        /// pool-capacity gate; `None` = always admissible).
+        admit_cap: Option<usize>,
     }
 
     impl MockEngine {
@@ -1709,7 +1913,23 @@ mod tests {
                 decode_starts: Vec::new(),
                 decode_traffic: Vec::new(),
                 device_rng: false,
+                reserve_denials: vec![0; n_slots],
+                admit_cap: None,
             }
+        }
+
+        /// Refuse the next `k` `reserve_decode` calls on `slot` (scripted
+        /// pool exhaustion — each refusal preempts the slot's sequence).
+        fn deny_reserves(mut self, slot: usize, k: u32) -> Self {
+            self.reserve_denials[slot] = k;
+            self
+        }
+
+        /// Refuse admissions while `cap` slots are live (scripted
+        /// KV-capacity gate for the deferral tests).
+        fn admit_cap(mut self, cap: usize) -> Self {
+            self.admit_cap = Some(cap);
+            self
         }
 
         /// A pre-capability engine: only exact-length prompts admissible.
@@ -1954,6 +2174,23 @@ mod tests {
                 }
             }
             Ok(ids)
+        }
+
+        fn can_admit(&self, _prompt: &[i32], _prefix_len: usize) -> bool {
+            match self.admit_cap {
+                Some(cap) => self.plans.iter().filter(|p| p.is_some()).count() < cap,
+                None => true,
+            }
+        }
+
+        fn reserve_decode(&mut self, slot: usize, n: usize) -> Result<bool> {
+            assert!(self.plans[slot].is_some(), "reserve on free slot {slot}");
+            assert!(n >= 1, "reserve_decode of zero rows on slot {slot}");
+            if self.reserve_denials[slot] > 0 {
+                self.reserve_denials[slot] -= 1;
+                return Ok(false);
+            }
+            Ok(true)
         }
 
         fn release_slot(&mut self, slot: usize) -> Result<()> {
@@ -2721,5 +2958,164 @@ mod tests {
         // Queue-wait records per admission attempt, both anchored at the
         // original submit time.
         assert_eq!(sched.telemetry().hist(Hist::QueueWait).count(), 2);
+    }
+
+    #[test]
+    fn zero_quota_chunk_rows_consume_nothing() {
+        // Regression (chunk walk, zero-quota row): the old walk returned 1
+        // for quota == 0, consuming one frozen filler token and feeding it
+        // into `Seq::pending`.
+        // [n=4, b=2] row-major ids: slot 0 is frozen EOS filler, slot 1
+        // emits content then EOS at step 2.
+        let ids = vec![
+            Vocab::EOS, CONTENT, // step 0
+            Vocab::EOS, CONTENT, // step 1
+            Vocab::EOS, Vocab::EOS, // step 2
+            Vocab::EOS, CONTENT, // step 3 (filler past slot 1's latch)
+        ];
+        assert_eq!(chunk_consumed(&ids, 2, 0, 4, 0), 0, "zero quota consumes nothing");
+        assert_eq!(chunk_consumed(&ids, 2, 1, 4, 0), 0);
+        // quota >= 1 semantics unchanged: EOS-immediately consumes 1, the
+        // EOS-terminated row consumes through its EOS, quota caps the walk.
+        assert_eq!(chunk_consumed(&ids, 2, 0, 4, 3), 1);
+        assert_eq!(chunk_consumed(&ids, 2, 1, 4, 8), 3);
+        assert_eq!(chunk_consumed(&ids, 2, 1, 4, 2), 2);
+        assert_eq!(chunk_consumed(&ids, 2, 1, 4, 1), 1);
+    }
+
+    #[test]
+    fn preempted_slot_requeues_and_replays_to_completion() {
+        // Mid-decode pool exhaustion: slot 0's first reservation is
+        // refused, so its request must release its pages, requeue with
+        // backoff, re-admit, and replay FROM SCRATCH to the same bytes —
+        // while the co-scheduled request never notices.
+        let eng = MockEngine::new(2).paged_mode().deny_reserves(0, 1);
+        let mut sched = Scheduler::new(eng).unwrap();
+        sched.set_telemetry(Telemetry::enabled(1024));
+        let mut sampler = greedy();
+        sched.submit(req(1, 3, SG)).unwrap();
+        sched.submit(req(2, 2, SG)).unwrap();
+        let all = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(all.len(), 2);
+        let c1 = all.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(c1.finish, FinishReason::Eos);
+        assert_eq!(c1.response(), &[CONTENT, CONTENT, CONTENT, Vocab::EOS]);
+        let c2 = all.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(c2.finish, FinishReason::Eos);
+        assert_eq!(c2.response(), &[CONTENT, CONTENT, Vocab::EOS]);
+        assert_eq!(sched.stats.preemptions, 1);
+        assert_eq!(sched.stats.requeues, 1);
+        assert_eq!(sched.stats.retired_preempted, 0);
+        assert_eq!(sched.stats.prefills, 3, "the preempted request prefilled twice");
+        // The trace mirrors the prefill-fault shape: aborted span, a
+        // `preempt` instant (not `prefill_fault`), re-opened queued span,
+        // then the replay's normal EOS chain.
+        let evs = events_for(sched.telemetry(), 1);
+        let count = |name: &str, ph: telemetry::Ph| {
+            evs.iter().filter(|e| e.name == name && e.ph == ph).count()
+        };
+        assert_eq!(count("preempt", telemetry::Ph::Instant), 1);
+        assert_eq!(count("prefill_fault", telemetry::Ph::Instant), 0);
+        assert_eq!(count("queued", telemetry::Ph::Begin), 2);
+        let ends: Vec<i64> = evs
+            .iter()
+            .filter(|e| e.name == "request" && e.ph == telemetry::Ph::End)
+            .map(|e| e.arg)
+            .collect();
+        assert_eq!(ends, vec![telemetry::FINISH_ABORTED, telemetry::FINISH_EOS]);
+    }
+
+    #[test]
+    fn preemption_past_retry_budget_retires_preempted() {
+        // A slot that can NEVER draw its next page burns the shared retry
+        // budget (max_retries = 2 ⇒ 3 preemptions) and retires as
+        // Preempted with the tokens it had, instead of looping forever or
+        // aborting the batch.
+        let eng = MockEngine::new(1).paged_mode().deny_reserves(0, u32::MAX);
+        let mut sched = Scheduler::new(eng).unwrap();
+        let mut sampler = greedy();
+        sched.submit(req(7, SG as i32 + 2, SG)).unwrap(); // never EOS
+        let all = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].finish, FinishReason::Preempted { preemptions: 3 });
+        // Each attempt sampled exactly one token (the prefill's pending
+        // row) before losing its pages at the reservation gate.
+        assert_eq!(all[0].generated, 1);
+        assert_eq!(sched.stats.preemptions, 3);
+        assert_eq!(sched.stats.requeues, 2);
+        assert_eq!(sched.stats.retired_preempted, 1);
+        assert_eq!(sched.stats.completed, 1);
+        assert_eq!(sched.stats.retired_failed, 0, "preemption is not a fault");
+    }
+
+    #[test]
+    fn kv_pressure_defers_admissions_until_slots_free() {
+        // can_admit refuses while a slot is live: the second request waits
+        // IN the queue (no prefill fault, no requeue) and admits only
+        // after the first retires and frees its pages.
+        let eng = MockEngine::new(2).paged_mode().admit_cap(1);
+        let mut sched = Scheduler::new(eng).unwrap();
+        let mut sampler = greedy();
+        sched.submit(req(1, 2, SG)).unwrap();
+        sched.submit(req(2, 2, SG)).unwrap();
+        let all = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(all.len(), 2);
+        assert!(all.iter().all(|c| c.finish == FinishReason::Eos), "{all:?}");
+        assert!(sched.stats.admission_deferrals > 0);
+        assert_eq!(sched.stats.prefill_faults, 0, "deferral must not burn retries");
+        assert_eq!(sched.stats.requeues, 0);
+        assert!(
+            sched
+                .engine
+                .decode_active
+                .iter()
+                .all(|m| m.iter().filter(|a| **a).count() <= 1),
+            "the capacity gate admitted a second live sequence"
+        );
+
+        // An undersized pool on an EMPTY engine admits anyway — the
+        // prefill fails loudly (or, here, succeeds) instead of the queue
+        // deadlocking behind a capacity that will never appear.
+        let eng = MockEngine::new(1).paged_mode().admit_cap(0);
+        let mut sched = Scheduler::new(eng).unwrap();
+        sched.submit(req(3, 1, SG)).unwrap();
+        let all = sched.run_until_idle(&mut sampler).unwrap();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].finish, FinishReason::Eos);
+    }
+
+    #[test]
+    fn chunked_preemption_replays_bit_identically() {
+        // The acceptance bit-match, chunk flavor: a preempted request's
+        // final bytes equal its never-preempted run, because the device
+        // stream is a pure function of (request seed, draw index) and the
+        // requeue recomputes from scratch.
+        let run = |deny: u32| -> Vec<Completion> {
+            let eng = MockEngine::new(2)
+                .paged_mode()
+                .device_rng_mode()
+                .deny_reserves(0, deny);
+            let mut sched = Scheduler::new(eng).unwrap();
+            sched.set_decode_chunk(4).unwrap();
+            let mut sampler = device_cat_stochastic();
+            sched.submit(req(1, SG as i32 + 2, 6)).unwrap();
+            sched.submit(req(2, SG as i32 + 2, 6)).unwrap();
+            let mut all = sched.run_until_idle(&mut sampler).unwrap();
+            all.sort_by_key(|c| c.id);
+            all
+        };
+        let clean = run(0);
+        let preempted = run(1);
+        assert_eq!(clean.len(), 2);
+        assert_eq!(preempted.len(), 2);
+        for (a, b) in clean.iter().zip(&preempted) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "request {} bytes diverged across preemption",
+                a.id
+            );
+            assert_eq!(a.finish, b.finish);
+        }
     }
 }

@@ -93,8 +93,11 @@ pub const FINISH_EOS: i64 = 0;
 pub const FINISH_LENGTH: i64 = 1;
 pub const FINISH_FAILED: i64 = 2;
 pub const FINISH_DEADLINE: i64 = 3;
-/// End-arg of a `request` span aborted by a prefill fault (the request
-/// was NOT retired — it went back to the queue).
+/// The request was preempted mid-decode (KV pool exhausted) and burned
+/// through its retry budget without completing.
+pub const FINISH_PREEMPTED: i64 = 4;
+/// End-arg of a `request` span aborted by a prefill fault or a mid-decode
+/// preemption (the request was NOT retired — it went back to the queue).
 pub const FINISH_ABORTED: i64 = -1;
 
 /// Event phase, mirroring the Chrome trace-event `ph` field.
@@ -503,6 +506,7 @@ pub fn finish_name(code: i64) -> &'static str {
         FINISH_LENGTH => "length",
         FINISH_FAILED => "failed",
         FINISH_DEADLINE => "deadline",
+        FINISH_PREEMPTED => "preempted",
         FINISH_ABORTED => "aborted",
         _ => "unknown",
     }
@@ -527,24 +531,47 @@ pub struct KvOccupancy {
     pub free_pages: usize,
     /// Shared prefixes registered for reuse (paged only).
     pub registered_prefixes: usize,
+    /// Highest allocatable page index (`limit_pages` cap); 0 for arena
+    /// layouts, `n_pages - 1` for an uncapped paged pool.
+    pub usable_pages: usize,
+    /// High-water mark of simultaneously drawn pages (paged only).
+    pub peak_used_pages: usize,
+    /// Registered prefixes evicted under pool pressure (LRU order).
+    pub prefix_evictions: u64,
+    /// Pages reclaimed by those evictions.
+    pub pages_stolen: u64,
+    /// Prefix registrations refused because a different token sequence
+    /// already occupied the hash bucket.
+    pub hash_collisions: u64,
 }
 
 impl KvOccupancy {
     fn json(&self) -> String {
+        // `used_pages` is drawn-now: allocatable extent minus the free list.
+        // Legacy snapshots (no `limit_pages` support) report usable_pages 0,
+        // where the full-extent derivation is the honest figure.
+        let extent = if self.usable_pages > 0 { self.usable_pages } else { self.n_pages };
         format!(
             "{{\n    \"paged\": {},\n    \"n_slots\": {},\n    \"active_slots\": {},\n    \
              \"valid_tokens\": {},\n    \"page_size\": {},\n    \"n_pages\": {},\n    \
-             \"free_pages\": {},\n    \"used_pages\": {},\n    \
-             \"registered_prefixes\": {}\n  }}",
+             \"usable_pages\": {},\n    \"free_pages\": {},\n    \"used_pages\": {},\n    \
+             \"peak_used_pages\": {},\n    \"registered_prefixes\": {},\n    \
+             \"prefix_evictions\": {},\n    \"pages_stolen\": {},\n    \
+             \"hash_collisions\": {}\n  }}",
             self.paged,
             self.n_slots,
             self.active_slots,
             self.valid_tokens,
             self.page_size,
             self.n_pages,
+            self.usable_pages,
             self.free_pages,
-            self.n_pages.saturating_sub(self.free_pages),
+            extent.saturating_sub(self.free_pages),
+            self.peak_used_pages,
             self.registered_prefixes,
+            self.prefix_evictions,
+            self.pages_stolen,
+            self.hash_collisions,
         )
     }
 }
@@ -603,8 +630,11 @@ pub fn metrics_snapshot_json(
              \"completed\": {},\n    \"steps\": {},\n    \"decode_calls\": {},\n    \
              \"prefills\": {},\n    \"tokens_sampled\": {},\n    \"retired_eos\": {},\n    \
              \"retired_length\": {},\n    \"retired_failed\": {},\n    \
-             \"retired_deadline\": {},\n    \"requeues\": {},\n    \"prefill_faults\": {},\n    \
-             \"decode_faults\": {},\n    \"decode_retries\": {},\n    \"quarantined\": {},\n    \
+             \"retired_deadline\": {},\n    \"retired_preempted\": {},\n    \
+             \"requeues\": {},\n    \"prefill_faults\": {},\n    \
+             \"decode_faults\": {},\n    \"decode_retries\": {},\n    \
+             \"preemptions\": {},\n    \"admission_deferrals\": {},\n    \
+             \"quarantined\": {},\n    \
              \"peak_queue_depth\": {},\n    \"utilization\": {:.4},\n    \
              \"bubble_fraction\": {:.4},\n    \"pad_fraction\": {:.4},\n    \
              \"admitted_tokens\": {},\n    \"computed_tokens\": {},\n    \
@@ -621,10 +651,13 @@ pub fn metrics_snapshot_json(
             st.retired_length,
             st.retired_failed,
             st.retired_deadline,
+            st.retired_preempted,
             st.requeues,
             st.prefill_faults,
             st.decode_faults,
             st.decode_retries,
+            st.preemptions,
+            st.admission_deferrals,
             st.quarantined,
             st.peak_queue_depth,
             st.utilization(),
@@ -959,7 +992,15 @@ mod tests {
             Some(6)
         );
         assert!(matches!(doc.at("training"), Json::Null), "no iterations -> null");
+        assert_eq!(
+            doc.get("serving").and_then(|s| s.get("preemptions")).and_then(Json::as_usize),
+            Some(0)
+        );
         assert_eq!(doc.get("kv").and_then(|k| k.get("used_pages")).and_then(Json::as_usize), Some(24));
+        assert_eq!(
+            doc.get("kv").and_then(|k| k.get("prefix_evictions")).and_then(Json::as_usize),
+            Some(0)
+        );
         let ttft = doc.get("telemetry").and_then(|t| t.get("ttft_ms")).unwrap();
         assert_eq!(ttft.get("count").and_then(Json::as_usize), Some(1));
     }

@@ -504,8 +504,10 @@ mod paged_ledger_chaos {
     const PS: usize = 4; // page size
     const MB: usize = SMAX / PS; // blocks per slot
     const SLOTS: usize = 3;
-    // 9 allocatable pages: two full windows fit, the third admission must
-    // evict or fail — both paths run under the fuzz.
+    // 9 allocatable pages: the three 3-page prompts fill the pool exactly,
+    // so lazy growth past a page boundary at full occupancy preempts, and
+    // orphaned prefixes make LRU eviction the only way back in — all three
+    // pressure paths run under the fuzz.
     const PAGES: usize = 2 * MB + 2;
 
     /// A prompt built from one of a few shared prefixes plus a unique tail,
@@ -518,99 +520,383 @@ mod paged_ledger_chaos {
         (p, declared)
     }
 
+    /// Counters and terminal allocator state from one seeded walk. Two
+    /// walks with the same seed must produce IDENTICAL fingerprints: the
+    /// LRU clock, eviction order, and preemption points are all
+    /// deterministic (no hash-map iteration order anywhere in the ledger).
+    #[derive(Debug, Default, PartialEq, Eq)]
+    struct WalkStats {
+        admitted: u32,
+        rejected: u32,
+        bogus_releases: u32,
+        preemptions: u32,
+        advanced_tokens: u64,
+        evictions: u64,
+        pages_stolen: u64,
+        collisions: u64,
+        free_pages: usize,
+        prefixes: usize,
+    }
+
     /// Seeded random walk over the allocator: admissions (cold and shared),
-    /// registrations, advances, and releases — including *injected bogus
-    /// releases* (double-free, out-of-range) and admissions driven into
-    /// pool exhaustion. After EVERY op, faulted or not, the full
-    /// refcount/free-list consistency check must pass: a rejected op may
-    /// not leak, double-map, or strand a page.
-    #[test]
-    fn random_walk_with_injected_release_faults_never_corrupts_the_ledger() {
-        for seed in 0..4u64 {
-            let mut rng = Rng::new(0xfeed + seed);
-            let mut ledger = PageLedger::paged(SLOTS, SMAX, PS, PAGES);
-            let (mut admitted, mut rejected, mut bogus_releases) = (0u32, 0u32, 0u32);
-            for i in 0..400i32 {
-                match rng.below(10) {
-                    // Admission into a random slot (sometimes busy — must
-                    // error without touching the pool).
-                    0..=3 => {
-                        let slot = rng.below(SLOTS as u32) as usize;
-                        let (p, declared) = prompt(&mut rng, i);
-                        let busy = ledger.len_of(slot).is_some();
-                        match ledger.alloc_shared(slot, &p, declared) {
-                            Ok(plan) => {
-                                assert!(!busy, "admission into busy slot {slot} succeeded");
-                                admitted += 1;
-                                if plan.prefix_hit {
-                                    assert_eq!(plan.reused_tokens, declared.min(p.len()));
-                                }
-                                if rng.chance(0.8) {
-                                    ledger.register_prefix(slot, declared, &p).unwrap();
-                                }
+    /// registrations, lazy-growth advances (stepwise and chunked, each
+    /// reserving its rows FIRST — boundary crossings draw pages on demand),
+    /// and releases — including *injected bogus releases* (double-free) and
+    /// wrong-position advances. Pool exhaustion mid-walk takes the real
+    /// recovery paths: LRU eviction while the registry holds entries, then
+    /// preemption (free + count) when `reserve_rows` reports the pool dry.
+    /// After EVERY op, faulted or not, the full refcount/free-list
+    /// consistency check must pass: a rejected op may not leak, double-map,
+    /// or strand a page.
+    fn walk(seed: u64) -> WalkStats {
+        let mut rng = Rng::new(0xfeed + seed);
+        let mut ledger = PageLedger::paged(SLOTS, SMAX, PS, PAGES);
+        let mut st = WalkStats::default();
+        for i in 0..400i32 {
+            match rng.below(10) {
+                // Admission into a random slot (sometimes busy, sometimes
+                // into a dry pool — must error without touching the pool).
+                0..=3 => {
+                    let slot = rng.below(SLOTS as u32) as usize;
+                    let (p, declared) = prompt(&mut rng, i);
+                    let busy = ledger.len_of(slot).is_some();
+                    match ledger.alloc_shared(slot, &p, declared) {
+                        Ok(plan) => {
+                            assert!(!busy, "admission into busy slot {slot} succeeded");
+                            st.admitted += 1;
+                            if plan.prefix_hit {
+                                assert_eq!(plan.reused_tokens, declared.min(p.len()));
                             }
-                            Err(_) => rejected += 1,
+                            if rng.chance(0.8) {
+                                ledger.register_prefix(slot, declared, &p).unwrap();
+                            }
+                        }
+                        Err(_) => st.rejected += 1,
+                    }
+                }
+                // Stepwise advance over the live slots, each reserving its
+                // written row FIRST (the lazy-growth contract: a boundary
+                // crossing draws a page). An exhausted reservation preempts
+                // the slot — free + count — exactly as the scheduler's
+                // `reserve_decode` -> `preempt_slot` path retires it.
+                4 => {
+                    let mut active = vec![false; SLOTS];
+                    let mut pos = vec![0i32; SLOTS];
+                    for s in 0..SLOTS {
+                        let Some(d) = ledger.depth_of(s) else { continue };
+                        if d < SMAX && rng.chance(0.7) {
+                            if ledger.reserve_rows(s, 1).unwrap() {
+                                active[s] = true;
+                                pos[s] = d as i32;
+                            } else {
+                                ledger.free(s).unwrap();
+                                st.preemptions += 1;
+                            }
                         }
                     }
-                    // Advance every live slot that still has headroom, at
-                    // its true depth (the lockstep contract).
-                    4..=5 => {
+                    ledger.advance(&active, &pos).unwrap();
+                    st.advanced_tokens += active.iter().filter(|&&a| a).count() as u64;
+                }
+                // Fused chunk advance on one slot: reserve all n rows up
+                // front (possibly crossing several page boundaries at
+                // once), then catch the ledger up in one call.
+                5 => {
+                    let slot = rng.below(SLOTS as u32) as usize;
+                    if let Some(d) = ledger.depth_of(slot) {
+                        if d < SMAX {
+                            let n = (1 + rng.below(PS as u32 + 1) as usize).min(SMAX - d);
+                            if ledger.reserve_rows(slot, n).unwrap() {
+                                ledger.advance_chunk(slot, d as i32, n).unwrap();
+                                st.advanced_tokens += n as u64;
+                            } else {
+                                ledger.free(slot).unwrap();
+                                st.preemptions += 1;
+                            }
+                        }
+                    }
+                }
+                // Advance at a WRONG position: must be rejected.
+                6 => {
+                    let slot = rng.below(SLOTS as u32) as usize;
+                    if let Some(d) = ledger.depth_of(slot) {
                         let mut active = vec![false; SLOTS];
                         let mut pos = vec![0i32; SLOTS];
-                        for s in 0..SLOTS {
-                            if let Some(d) = ledger.depth_of(s) {
-                                if d < SMAX && rng.chance(0.7) {
-                                    active[s] = true;
-                                    pos[s] = d as i32;
-                                }
-                            }
-                        }
-                        ledger.advance(&active, &pos).unwrap();
-                    }
-                    // Advance at a WRONG position: must be rejected.
-                    6 => {
-                        let slot = rng.below(SLOTS as u32) as usize;
-                        if let Some(d) = ledger.depth_of(slot) {
-                            let mut active = vec![false; SLOTS];
-                            let mut pos = vec![0i32; SLOTS];
-                            active[slot] = true;
-                            pos[slot] = d as i32 + 1;
-                            assert!(ledger.advance(&active, &pos).is_err());
-                        }
-                    }
-                    // Release a random slot — roughly half the draws hit a
-                    // slot that is already free (the chaos wrapper's
-                    // best-effort release after an injected admission
-                    // fault), which must error and change nothing.
-                    _ => {
-                        let slot = rng.below(SLOTS as u32) as usize;
-                        let busy = ledger.len_of(slot).is_some();
-                        let res = ledger.free(slot);
-                        if busy {
-                            res.unwrap();
-                        } else {
-                            assert!(res.is_err(), "double release of slot {slot} succeeded");
-                            bogus_releases += 1;
-                        }
+                        active[slot] = true;
+                        pos[slot] = d as i32 + 1;
+                        assert!(ledger.advance(&active, &pos).is_err());
                     }
                 }
-                ledger
-                    .check_invariants()
-                    .unwrap_or_else(|e| panic!("seed {seed} op {i}: {e:#}"));
-            }
-            assert!(admitted > 20, "seed {seed}: only {admitted} admissions");
-            assert!(rejected > 0, "seed {seed}: exhaustion/busy paths never exercised");
-            assert!(bogus_releases > 0, "seed {seed}: no injected bogus release fired");
-            // Drain: free every slot; every page is then either free or
-            // held only by the registry — and the count closes exactly.
-            for s in 0..SLOTS {
-                if ledger.len_of(s).is_some() {
-                    ledger.free(s).unwrap();
+                // Release a random slot — roughly half the draws hit a
+                // slot that is already free (the chaos wrapper's
+                // best-effort release after an injected admission
+                // fault), which must error and change nothing.
+                _ => {
+                    let slot = rng.below(SLOTS as u32) as usize;
+                    let busy = ledger.len_of(slot).is_some();
+                    let res = ledger.free(slot);
+                    if busy {
+                        res.unwrap();
+                    } else {
+                        assert!(res.is_err(), "double release of slot {slot} succeeded");
+                        st.bogus_releases += 1;
+                    }
                 }
             }
-            ledger.check_invariants().unwrap();
-            assert_eq!(ledger.n_active(), 0);
+            ledger
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed} op {i}: {e:#}"));
         }
+        // Drain: free every slot; every page is then either free or held
+        // only by the registry — and the count closes exactly.
+        for s in 0..SLOTS {
+            if ledger.len_of(s).is_some() {
+                ledger.free(s).unwrap();
+            }
+        }
+        ledger
+            .check_invariants()
+            .unwrap_or_else(|e| panic!("seed {seed} drain: {e:#}"));
+        assert_eq!(ledger.n_active(), 0);
+        st.evictions = ledger.evictions();
+        st.pages_stolen = ledger.pages_stolen();
+        st.collisions = ledger.collisions();
+        st.free_pages = ledger.free_pages();
+        st.prefixes = ledger.n_prefixes();
+        st
+    }
+
+    #[test]
+    fn random_walk_with_injected_release_faults_never_corrupts_the_ledger() {
+        let (mut evictions, mut preemptions) = (0u64, 0u32);
+        for seed in 0..6u64 {
+            let st = walk(seed);
+            assert!(st.admitted > 20, "seed {seed}: only {} admissions", st.admitted);
+            assert!(st.rejected > 0, "seed {seed}: exhaustion/busy paths never exercised");
+            assert!(st.bogus_releases > 0, "seed {seed}: no injected bogus release fired");
+            evictions += st.evictions;
+            preemptions += st.preemptions;
+        }
+        // Across the seeds the walk must have driven the allocator through
+        // both pressure paths: LRU steals of orphaned prefixes, and
+        // mid-decode preemption on a pool too dry even for eviction.
+        assert!(evictions > 0, "no walk ever evicted a prefix under pressure");
+        assert!(preemptions > 0, "no walk ever preempted on an exhausted pool");
+    }
+
+    /// LRU order, eviction victims, steal counts, and preemption points are
+    /// pure functions of the op sequence — replaying a walk must land on an
+    /// identical fingerprint, counters and terminal state alike.
+    #[test]
+    fn same_seed_walks_are_bit_identical() {
+        for seed in [0u64, 4] {
+            assert_eq!(walk(seed), walk(seed), "seed {seed} diverged between runs");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// oversubscription golden: lazy growth must beat full-window reservation
+// ---------------------------------------------------------------------------
+
+mod oversubscription {
+    use anyhow::Result;
+    use dschat::data::synthetic::Vocab;
+    use dschat::hybrid::kv::PageLedger;
+    use dschat::sampling::{HostFullRow, PendingRow, SampleOut, SamplerConfig};
+    use dschat::serving::{
+        Admission, AdmitOutcome, DecodeBatch, FaultPolicy, FinishReason, Request, Scheduler,
+        SlotEngine,
+    };
+
+    const VOCAB: usize = 32;
+    const SMAX: usize = 16;
+    const PS: usize = 4;
+    const MB: usize = SMAX / PS; // 4 blocks per full window
+    const SLOTS: usize = 4;
+    const SP: usize = 4; // prompt window: exactly one page
+    const SG: usize = SMAX - SP; // full-window generation budget
+    const CONTENT: i32 = 9;
+
+    /// The chaos ScriptEngine with a REAL `PageLedger` bolted on: logits
+    /// stay scripted (`prompt[0]` = content tokens before EOS, so greedy
+    /// replays are bit-identical), while every admission, decode write,
+    /// and release flows through the allocator exactly as the hybrid
+    /// engine's do — prefill is `alloc_shared` + `register_prefix`, decode
+    /// is `reserve_rows` (via `reserve_decode`) then `advance`, release is
+    /// `free`. That makes the scheduler's preemption/deferral behavior
+    /// testable against real page accounting without artifacts.
+    struct PagedScriptEngine {
+        ledger: PageLedger,
+        plans: Vec<Option<(Vec<i32>, usize)>>,
+        /// High-water mark of concurrently live slots.
+        peak_live: usize,
+    }
+
+    impl PagedScriptEngine {
+        /// Physical pool of `SLOTS * MB` pages capped to `pool_pages`
+        /// allocatable ones — below `SLOTS * MB` the engine runs
+        /// OVERSUBSCRIBED: block tables stay valid device indices, but
+        /// admissions and lazy growth compete for fewer pages than the
+        /// full per-slot windows would reserve.
+        fn new(pool_pages: usize) -> Self {
+            let mut ledger = PageLedger::paged(SLOTS, SMAX, PS, SLOTS * MB + 1);
+            ledger.limit_pages(pool_pages).unwrap();
+            PagedScriptEngine {
+                ledger,
+                plans: (0..SLOTS).map(|_| None).collect(),
+                peak_live: 0,
+            }
+        }
+
+        fn logits_for(&self, tok: i32) -> Vec<f32> {
+            let mut row = vec![0.0f32; VOCAB];
+            row[tok as usize] = 1.0;
+            row
+        }
+    }
+
+    impl SlotEngine for PagedScriptEngine {
+        fn n_slots(&self) -> usize {
+            SLOTS
+        }
+
+        fn prompt_len(&self) -> usize {
+            SP
+        }
+
+        fn max_new_tokens(&self) -> usize {
+            SG
+        }
+
+        fn paged(&self) -> bool {
+            true
+        }
+
+        fn prefill_slot(&mut self, slot: usize, adm: &Admission) -> Result<AdmitOutcome> {
+            assert!(self.plans[slot].is_none(), "prefill into busy slot {slot}");
+            let plan = self.ledger.alloc_shared(slot, adm.prompt, adm.prefix_len)?;
+            self.ledger.register_prefix(slot, adm.prefix_len, adm.prompt)?;
+            self.ledger.check_invariants()?;
+            let n = adm.prompt[0] as usize;
+            let script: Vec<i32> = (0..SG + 2)
+                .map(|j| if j < n { CONTENT } else { Vocab::EOS })
+                .collect();
+            let pending = PendingRow::Logits(self.logits_for(script[0]));
+            self.plans[slot] = Some((script, 1));
+            self.peak_live = self.peak_live.max(self.ledger.n_active());
+            Ok(AdmitOutcome {
+                pending,
+                reused_tokens: plan.reused_tokens,
+                prefix_hit: plan.prefix_hit,
+            })
+        }
+
+        fn decode_slots(&mut self, batch: &DecodeBatch) -> Result<SampleOut> {
+            let mut data = vec![0.0f32; SLOTS * VOCAB];
+            for slot in 0..SLOTS {
+                if !batch.active[slot] {
+                    continue;
+                }
+                let (script, cur) = self.plans[slot].as_mut().expect("active free slot");
+                let row = self.logits_for(script[*cur]);
+                *cur += 1;
+                data[slot * VOCAB..(slot + 1) * VOCAB].copy_from_slice(&row);
+            }
+            // Write-before-advance: every active row's K/V write landed
+            // through a table `reserve_decode` grew before this dispatch —
+            // `advance` rejects the step if the scheduler ever skipped it.
+            self.ledger.advance(batch.active, batch.pos)?;
+            self.ledger.check_invariants()?;
+            Ok(SampleOut::Logits { data, vocab: VOCAB })
+        }
+
+        fn can_admit(&self, prompt: &[i32], prefix_len: usize) -> bool {
+            self.ledger.can_admit(prompt, prefix_len)
+        }
+
+        fn reserve_decode(&mut self, slot: usize, n: usize) -> Result<bool> {
+            self.ledger.reserve_rows(slot, n)
+        }
+
+        fn release_slot(&mut self, slot: usize) -> Result<()> {
+            assert!(self.plans[slot].is_some(), "release of free slot {slot}");
+            self.plans[slot] = None;
+            self.ledger.free(slot)
+        }
+    }
+
+    fn greedy() -> HostFullRow {
+        HostFullRow::new(SamplerConfig { greedy: true, ..Default::default() }, 0)
+    }
+
+    fn req(id: u64, eos_after: i32) -> Request {
+        let mut prompt = vec![CONTENT; SP];
+        prompt[0] = eos_after;
+        Request { id, prompt, max_new: SG, seed: None, prefix_len: 0 }
+    }
+
+    /// Four full-window runners (their lazy growth saturates the pool)
+    /// plus two short finishers, on a pool of `pool_pages`. Returns the
+    /// completions sorted by id, plus the scheduler for its counters.
+    #[allow(clippy::type_complexity)]
+    fn run(
+        pool_pages: usize,
+    ) -> (Vec<(u64, Vec<i32>, FinishReason)>, Scheduler<PagedScriptEngine>) {
+        let policy = FaultPolicy {
+            max_retries: 100, // preemption must never exhaust the budget here
+            backoff_steps: 1,
+            deadline_steps: 0,
+            quarantine_after: 0,
+        };
+        let mut sched =
+            Scheduler::with_policy(PagedScriptEngine::new(pool_pages), policy).unwrap();
+        for (id, eos_after) in [(1, 100), (2, 100), (3, 100), (4, 100), (5, 3), (6, 5)] {
+            sched.submit(req(id, eos_after)).unwrap();
+        }
+        let mut all = sched.run_until_idle(&mut greedy()).unwrap();
+        all.sort_by_key(|c| c.id);
+        let outs = all.iter().map(|c| (c.id, c.tokens.clone(), c.finish)).collect();
+        (outs, sched)
+    }
+
+    #[test]
+    fn oversubscribed_pool_overlaps_more_work_and_replays_bit_identically() {
+        // Control: the full SLOTS * MB pages — every window fits, nothing
+        // can preempt.
+        let (golden, control) = run(SLOTS * MB);
+        assert_eq!(control.stats.preemptions, 0);
+        assert_eq!(control.engine.peak_live, SLOTS, "control must fill every slot");
+        assert!(golden
+            .iter()
+            .all(|(_, _, f)| matches!(f, FinishReason::Eos | FinishReason::Length)));
+
+        // Oversubscribed: 10 of 16 pages (62.5%). Full-window reservation
+        // could only run floor(10 / MB) = 2 slots concurrently; lazy
+        // growth must overlap more — and pay for it with mid-decode
+        // preemptions that requeue and recompute from scratch.
+        let capped_pool = 10;
+        let (outs, capped) = run(capped_pool);
+        assert!(
+            capped.engine.peak_live > capped_pool / MB,
+            "lazy growth overlapped only {} slots — no better than full-window \
+             reservation's {}",
+            capped.engine.peak_live,
+            capped_pool / MB
+        );
+        assert!(capped.stats.preemptions > 0, "oversubscription never preempted");
+        assert_eq!(
+            capped.stats.requeues, capped.stats.preemptions,
+            "every preemption requeued (none hit the retry budget)"
+        );
+        assert_eq!(capped.stats.retired_preempted, 0);
+        assert!(
+            capped.stats.admission_deferrals > 0,
+            "a saturated pool must defer admissions, not burn prefill faults"
+        );
+        assert_eq!(capped.stats.prefill_faults, 0, "deferral, not faulting");
+        // The golden: every request — preempted or not — completes with
+        // tokens and finish reason BIT-IDENTICAL to the uncapped run.
+        assert_eq!(outs, golden);
     }
 }
 

@@ -68,6 +68,15 @@ if [ -f artifacts/tiny/manifest.json ]; then
         else
             echo "verify: artifacts predate the block-paged KV cache — paged smokes skipped (re-run \`make artifacts\`)"
         fi
+        if grep -q '"lazy_kv": true' artifacts/tiny/manifest.json; then
+            # serve_loop's oversubscribed phase caps the page pool below
+            # the full per-slot reservation via limit_kv_pages; lazy page
+            # growth + LRU prefix eviction + preempt/requeue keep the
+            # greedy completions bit-identical to the uncapped run.
+            echo "verify: lazy_kv capability present — serve bench covers the oversubscribed-pool phase"
+        else
+            echo "verify: artifacts predate lazy KV block tables — oversubscription smoke skipped (re-run \`make artifacts\`)"
+        fi
         echo "== verify: serve demo (continuous batching smoke + telemetry trace) =="
         rm -f trace_serve.json
         cargo run --release --example serve -- --demo --trace-out trace_serve.json
@@ -95,6 +104,17 @@ if [ -f artifacts/tiny/manifest.json ]; then
         test -s BENCH_serve.json \
             || { echo "verify: serve_loop bench did not write BENCH_serve.json" >&2; exit 1; }
         echo "verify: wrote BENCH_serve.json"
+        if grep -q '"lazy_kv": true' artifacts/tiny/manifest.json; then
+            # The oversubscribed phase must have run and reported its
+            # pool-pressure fields (the bench itself asserts the capped
+            # run's tokens match the uncapped prefix phase).
+            for field in continuous_oversub oversub_pool_pages oversub_peak_occupancy \
+                oversub_preemptions oversub_pages_stolen oversub_steal_rate_per_admission; do
+                grep -q "\"$field\"" BENCH_serve.json \
+                    || { echo "verify: BENCH_serve.json lacks \"$field\" despite lazy_kv artifacts" >&2; exit 1; }
+            done
+            echo "verify: BENCH_serve.json carries the oversubscribed-phase occupancy/steal/preemption fields"
+        fi
         echo "== verify: serve bench under chaos (fault injection smoke) =="
         # Re-runs the continuous phase with transient prefill/decode faults
         # and slow ticks injected; the bench asserts goodput survives and
